@@ -1,0 +1,68 @@
+//! Quickstart: load the artifacts, ask one question, compare dense vs
+//! sparse answers.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example quickstart
+//! ```
+
+use anyhow::Result;
+use nmsparse::coordinator::methods::MethodConfig;
+use nmsparse::coordinator::Coordinator;
+use nmsparse::sparsity::Pattern;
+use nmsparse::synthlang::vocab::Vocab;
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let artifacts = std::env::var("NMSPARSE_ARTIFACTS").unwrap_or("artifacts".into());
+    let coord = Coordinator::open(Path::new(&artifacts))?;
+    let vocab = Vocab::synthlang();
+
+    // Pull a real question out of the generated world: ask about entity 0.
+    let world_json = std::fs::read_to_string(format!("{artifacts}/data/world.json"))?;
+    let world = nmsparse::util::json::parse(&world_json).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let e0 = &world.req("entities")?.as_arr().unwrap()[0];
+    let name = e0.req("name")?.as_str().unwrap();
+    let location = e0.req("location")?.as_str().unwrap();
+
+    let question = format!("does the {name} live in the {location} ?");
+    println!("Q: {question}   (ground truth: yes)\n");
+
+    let configs = [
+        MethodConfig::dense(),
+        MethodConfig::act(Pattern::NM { n: 2, m: 4 }),
+        MethodConfig::by_name("S-PTS", Pattern::NM { n: 8, m: 16 })?,
+    ];
+    println!("{:<24} {:>12} {:>12} verdict", "config", "logp(yes)", "logp(no)");
+    for cfg in &configs {
+        let ctx = vocab.encode(&question)?;
+        let rows: Vec<(Vec<u32>, (usize, usize))> = ["yes", "no"]
+            .iter()
+            .map(|ans| {
+                let mut row = ctx.clone();
+                let start = row.len();
+                row.extend(vocab.encode(ans).unwrap());
+                (row, (start, start + 1))
+            })
+            .collect();
+        let scores = coord.score_rows(cfg, &rows)?;
+        let verdict = if scores[0] > scores[1] { "yes ✓" } else { "no ✗" };
+        println!(
+            "{:<24} {:>12.4} {:>12.4} {}",
+            format!("{}/{}", cfg.variant_key, cfg.id),
+            scores[0],
+            scores[1],
+            verdict
+        );
+    }
+
+    // And one generation.
+    let prompt = format!("where does the {name} live ? in");
+    let out = coord.generate(
+        &MethodConfig::dense(),
+        &[vocab.encode(&prompt)?],
+        6,
+        &[vocab.id(".")?],
+    )?;
+    println!("\ngenerate> {prompt} {}", vocab.decode(&out[0]));
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! Serving demo: spawn the `nmsparse serve` coordinator as a child process,
+//! drive it as a client over the TCP JSON protocol, and report per-request
+//! latencies — the miniature of a production deployment of the sparse
+//! model.
+//!
+//! ```bash
+//! make build && cargo run --release --offline --example serving_demo
+//! ```
+
+use anyhow::{Context, Result};
+use nmsparse::util::json;
+use nmsparse::util::stats::TimingStats;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+const ADDR: &str = "127.0.0.1:7451";
+
+fn wait_for_server(child: &mut Child) -> Result<TcpStream> {
+    for _ in 0..300 {
+        if let Some(status) = child.try_wait()? {
+            anyhow::bail!("server exited early: {status}");
+        }
+        match TcpStream::connect(ADDR) {
+            Ok(s) => return Ok(s),
+            Err(_) => std::thread::sleep(Duration::from_millis(200)),
+        }
+    }
+    anyhow::bail!("server did not come up on {ADDR}")
+}
+
+fn roundtrip(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+    req: &str,
+) -> Result<(json::Json, Duration)> {
+    let t0 = Instant::now();
+    writer.write_all(req.as_bytes())?;
+    writer.write_all(b"\n")?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let dt = t0.elapsed();
+    let j = json::parse(line.trim()).map_err(|e| anyhow::anyhow!("{e}"))?;
+    anyhow::ensure!(
+        j.get("ok").and_then(|o| o.as_bool()).unwrap_or(false),
+        "server error: {line}"
+    );
+    Ok((j, dt))
+}
+
+fn main() -> Result<()> {
+    let bin = std::env::var("NMSPARSE_BIN").unwrap_or("target/release/nmsparse".into());
+    println!("spawning {bin} serve on {ADDR} (8:16 / S-PTS)...");
+    let mut child = Command::new(&bin)
+        .args(["serve", "--addr", ADDR, "--pattern", "8:16", "--method", "S-PTS"])
+        .stdout(Stdio::inherit())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .context("spawning server (run `make build` first)")?;
+
+    let result = (|| -> Result<()> {
+        let stream = wait_for_server(&mut child)?;
+        stream.set_nodelay(true).ok();
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+
+        // Ping.
+        let (pong, dt) = roundtrip(&mut reader, &mut writer, r#"{"op":"ping"}"#)?;
+        println!(
+            "ping: variant={} method={} ({:.1}ms)",
+            pong.get("variant").and_then(|v| v.as_str()).unwrap_or("?"),
+            pong.get("method").and_then(|v| v.as_str()).unwrap_or("?"),
+            dt.as_secs_f64() * 1e3
+        );
+
+        // Scoring traffic (uses world facts via the boolq surface form).
+        let world_text = std::fs::read_to_string("artifacts/data/world.json")?;
+        let world = json::parse(&world_text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let entities = world.req("entities")?.as_arr().unwrap();
+        let mut score_lat = Vec::new();
+        let mut correct = 0usize;
+        let n = entities.len().min(24);
+        for e in &entities[..n] {
+            let name = e.req("name")?.as_str().unwrap();
+            let loc = e.req("location")?.as_str().unwrap();
+            let q = format!("does the {name} live in the {loc} ?");
+            let req_yes = format!(r#"{{"op":"score","text":"{q}","choice":"yes"}}"#);
+            let req_no = format!(r#"{{"op":"score","text":"{q}","choice":"no"}}"#);
+            let (ry, d1) = roundtrip(&mut reader, &mut writer, &req_yes)?;
+            let (rn, d2) = roundtrip(&mut reader, &mut writer, &req_no)?;
+            score_lat.push(d1);
+            score_lat.push(d2);
+            let sy = ry.get("score").and_then(|s| s.as_f64()).unwrap_or(f64::MIN);
+            let sn = rn.get("score").and_then(|s| s.as_f64()).unwrap_or(f64::MAX);
+            correct += (sy > sn) as usize;
+        }
+        println!(
+            "scored {n} yes/no facts: {}/{n} correct under 8:16 S-PTS",
+            correct
+        );
+        println!("score latency: {}", TimingStats::from_durations(&score_lat).summary());
+
+        // Generation traffic.
+        let mut gen_lat = Vec::new();
+        for e in &entities[..4.min(entities.len())] {
+            let name = e.req("name")?.as_str().unwrap();
+            let req = format!(
+                r#"{{"op":"generate","text":"where does the {name} live ? in","max_new":6}}"#
+            );
+            let (r, dt) = roundtrip(&mut reader, &mut writer, &req)?;
+            gen_lat.push(dt);
+            println!(
+                "generate[{name}]: '{}' ({:.0}ms)",
+                r.get("text").and_then(|t| t.as_str()).unwrap_or("?"),
+                dt.as_secs_f64() * 1e3
+            );
+        }
+        println!("generate latency: {}", TimingStats::from_durations(&gen_lat).summary());
+        Ok(())
+    })();
+
+    child.kill().ok();
+    child.wait().ok();
+    result?;
+    println!("serving demo OK");
+    Ok(())
+}

@@ -1,0 +1,276 @@
+"""AOT pipeline: train → calibrate → lower every HLO variant.
+
+Run once at build time (`make artifacts`); the rust coordinator then serves
+everything from `artifacts/` with no python on the request path.
+
+Interchange format is HLO *text* (not serialized HloModuleProto): jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Outputs under --out (default ../artifacts):
+  ckpt.bin/.json           trained checkpoint (flat-f32 store)
+  methodparams.bin/.json   calibration products (S-PTS/L-PTS/LS/Amber/SVD)
+  model_<key>.hlo.txt      one HLO per sparsity-pattern variant
+  io_manifest.json         per-variant ordered input lists + config + train log
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import tensorstore
+from .calibrate import calibrate_all
+from .kernels.ref import SparsitySpec
+from .model import (
+    SITES,
+    MethodInputs,
+    ModelConfig,
+    forward,
+    num_params,
+    param_names,
+    param_shape,
+)
+from .train import eval_ppl, load_token_stream, train
+
+# The pattern grid every table draws from.
+STANDARD_VARIANTS = ["dense", "2:4", "4:8", "8:16", "16:32", "u20", "u50", "u70", "u90"]
+RSPARSE_VARIANTS: List[Tuple[str, int]] = [
+    ("2:4", 64),
+    ("2:4", 128),
+    ("8:16", 64),
+    ("8:16", 128),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """Lower jax's stablehlo to XLA HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def method_input_names(cfg: ModelConfig, rsparse: bool, rank: int) -> List[Tuple[str, tuple]]:
+    """Ordered (name, shape) list of the method inputs for one variant."""
+    entries: List[Tuple[str, tuple]] = []
+    for l in range(cfg.n_layers):
+        for s in SITES:
+            d = cfg.site_in_dim(s)
+            o = cfg.site_out_dim(s)
+            if rsparse:
+                entries.append((f"m.u.l{l}.{s}", (o, rank)))
+                entries.append((f"m.v.l{l}.{s}", (rank, d)))
+                entries.append((f"m.enable.l{l}.{s}", ()))
+            else:
+                entries.append((f"m.eta.l{l}.{s}", (d,)))
+                entries.append((f"m.cscale.l{l}.{s}", (d,)))
+                entries.append((f"m.lsw.l{l}.{s}", (d,)))
+                entries.append((f"m.enable.l{l}.{s}", ()))
+    if not rsparse:
+        entries.append(("m.flag.shift_mode", ()))
+        entries.append(("m.flag.use_clact", ()))
+        entries.append(("m.flag.use_var", ()))
+    return entries
+
+
+def build_variant_fn(cfg: ModelConfig, spec: SparsitySpec, rsparse: bool, rank: int):
+    """A positional-args function `(tokens, lens, *arrays) -> (tgt_lp,
+    last_logits)` plus its full ordered input manifest."""
+    wnames = param_names(cfg)  # already sorted
+    # The dense variant ignores method inputs entirely; jax DCEs unused
+    # parameters at lowering, so they must not be declared at all.
+    is_dense = spec.kind == "dense" and not rsparse
+    mentries = [] if is_dense else method_input_names(cfg, rsparse, rank)
+
+    def fn(tokens, lens, *arrays):
+        params = dict(zip(wnames, arrays[: len(wnames)]))
+        if is_dense:
+            return forward(cfg, params, tokens, lens, spec)
+        marrays = arrays[len(wnames) :]
+        mi = MethodInputs()
+        idx = 0
+        for l in range(cfg.n_layers):
+            for s in SITES:
+                if rsparse:
+                    mi.u[(l, s)] = marrays[idx]
+                    mi.v[(l, s)] = marrays[idx + 1]
+                    mi.enable[(l, s)] = marrays[idx + 2]
+                    idx += 3
+                else:
+                    mi.eta[(l, s)] = marrays[idx]
+                    mi.cscale[(l, s)] = marrays[idx + 1]
+                    mi.lsw[(l, s)] = marrays[idx + 2]
+                    mi.enable[(l, s)] = marrays[idx + 3]
+                    idx += 4
+        if not rsparse:
+            mi.shift_mode = marrays[idx]
+            mi.use_clact = marrays[idx + 1]
+            mi.use_var = marrays[idx + 2]
+        return forward(cfg, params, tokens, lens, spec, mi, rsparse=rsparse)
+
+    inputs = [("tokens", (cfg.eval_batch, cfg.eval_seq), "i32"),
+              ("lens", (cfg.eval_batch,), "i32")]
+    inputs += [(f"w.{n}", param_shape(cfg, n), "f32") for n in wnames]
+    inputs += [(n, shape, "f32") for n, shape in mentries]
+    return fn, inputs
+
+
+def lower_variant(cfg: ModelConfig, key: str, rsparse_rank: int | None) -> Tuple[str, list]:
+    """Lower one variant to HLO text; returns (hlo_text, input manifest)."""
+    spec = SparsitySpec.parse(key)
+    rsparse = rsparse_rank is not None
+    fn, inputs = build_variant_fn(cfg, spec, rsparse, rsparse_rank or 0)
+    specs = [
+        jax.ShapeDtypeStruct(shape, jnp.int32 if dt == "i32" else jnp.float32)
+        for _, shape, dt in inputs
+    ]
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered), [
+        {"name": n, "shape": list(shape), "dtype": dt} for n, shape, dt in inputs
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--data", default="../artifacts/data", help="datagen output dir")
+    ap.add_argument("--out", default="../artifacts", help="artifact output dir")
+    ap.add_argument("--steps", type=int, default=400, help="training steps")
+    ap.add_argument("--lpts-steps", type=int, default=120)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--force", action="store_true", help="retrain + relower everything")
+    ap.add_argument("--only", default="", help="comma list of variant keys to lower")
+    args = ap.parse_args()
+
+    data, out = args.data, args.out
+    os.makedirs(out, exist_ok=True)
+    if not os.path.exists(os.path.join(data, "vocab.json")):
+        sys.exit(
+            f"error: {data}/vocab.json not found — run `cargo run --release "
+            "-- datagen` (or `make artifacts`, which orders this correctly)"
+        )
+    with open(os.path.join(data, "vocab.json")) as f:
+        vocab_info = json.load(f)
+    cfg = ModelConfig(vocab=int(vocab_info["padded_size"]))
+    print(f"[aot] model: {num_params(cfg):,} params, vocab {cfg.vocab}", flush=True)
+
+    manifest: Dict = {
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "ffn": cfg.ffn,
+            "eval_batch": cfg.eval_batch,
+            "eval_seq": cfg.eval_seq,
+            "num_params": num_params(cfg),
+            "sites": list(SITES),
+        },
+        "variants": {},
+    }
+
+    # ---- train (or reuse) ----
+    ckpt_stem = os.path.join(out, "ckpt")
+    if os.path.exists(ckpt_stem + ".bin") and not args.force:
+        print("[aot] reusing existing checkpoint", flush=True)
+        params = {k: jnp.asarray(v) for k, v in tensorstore.load(ckpt_stem).items()}
+        train_info = json.load(open(os.path.join(out, "train_log.json")))
+    else:
+        stream = load_token_stream(os.path.join(data, "corpus_train.tokens"))
+        t0 = time.time()
+        params, history = train(cfg, stream, steps=args.steps, seed=args.seed)
+        valid = load_token_stream(os.path.join(data, "corpus_valid.tokens"))
+        ppl = eval_ppl(cfg, params, valid)
+        train_info = {
+            "steps": args.steps,
+            "final_loss": history[-1][1],
+            "valid_ppl": ppl,
+            "history": history,
+            "train_seconds": round(time.time() - t0, 1),
+        }
+        print(f"[aot] trained: loss {history[-1][1]:.4f}, valid ppl {ppl:.3f}", flush=True)
+        tensorstore.save(ckpt_stem, {k: np.asarray(v) for k, v in params.items()})
+        json.dump(train_info, open(os.path.join(out, "train_log.json"), "w"), indent=1)
+    manifest["train"] = {k: train_info[k] for k in ("steps", "final_loss", "valid_ppl")}
+
+    # ---- calibrate (or reuse) ----
+    mp_stem = os.path.join(out, "methodparams")
+    if os.path.exists(mp_stem + ".bin") and not args.force:
+        print("[aot] reusing existing methodparams", flush=True)
+    else:
+        calib = load_token_stream(os.path.join(data, "corpus_calib.tokens"))
+        mp = calibrate_all(
+            cfg, params, calib, lpts_steps=args.lpts_steps, seed=args.seed,
+            batch=cfg.eval_batch, seq=cfg.eval_seq,
+        )
+        tensorstore.save(mp_stem, mp)
+        print(f"[aot] methodparams: {len(mp)} tensors", flush=True)
+
+    # ---- lower variants ----
+    only = set(k for k in args.only.split(",") if k)
+    jobs: List[Tuple[str, str, int | None]] = []
+    for key in STANDARD_VARIANTS:
+        jobs.append((SparsitySpec.parse(key).key, key, None))
+    for key, rank in RSPARSE_VARIANTS:
+        jobs.append((f"rsparse{rank}_{SparsitySpec.parse(key).key}", key, rank))
+
+    for file_key, pattern_key, rank in jobs:
+        if only and file_key not in only:
+            continue
+        path = os.path.join(out, f"model_{file_key}.hlo.txt")
+        if os.path.exists(path) and not args.force:
+            # Still need the manifest entry: re-derive the input list cheaply.
+            _, inputs = build_variant_fn(
+                ModelConfig(vocab=cfg.vocab), SparsitySpec.parse(pattern_key),
+                rank is not None, rank or 0,
+            )
+            manifest["variants"][file_key] = {
+                "file": os.path.basename(path),
+                "pattern": pattern_key,
+                "rank": rank,
+                "inputs": [
+                    {"name": n, "shape": list(s), "dtype": d} for n, s, d in inputs
+                ],
+            }
+            print(f"[aot] kept existing {path}", flush=True)
+            continue
+        t0 = time.time()
+        hlo, inputs = lower_variant(cfg, pattern_key, rank)
+        with open(path, "w") as f:
+            f.write(hlo)
+        manifest["variants"][file_key] = {
+            "file": os.path.basename(path),
+            "pattern": pattern_key,
+            "rank": rank,
+            "inputs": inputs,
+        }
+        print(
+            f"[aot] lowered {file_key:16s} -> {os.path.basename(path)} "
+            f"({len(hlo)/1e6:.1f} MB, {time.time()-t0:.1f}s)",
+            flush=True,
+        )
+
+    with open(os.path.join(out, "io_manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote io_manifest.json with {len(manifest['variants'])} variants")
+
+    # Golden vectors pinning the selection/transform semantics for rust.
+    from .golden import write_golden
+
+    write_golden(os.path.join(out, "golden.json"))
+    print("[aot] wrote golden.json")
+
+
+if __name__ == "__main__":
+    main()

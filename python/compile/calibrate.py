@@ -1,0 +1,205 @@
+"""Calibration: the method parameters that need data or weights.
+
+Produces everything Table 1's "calibration required" column lists, using the
+calibration split (WikiText-2's role):
+
+  * S-PTS   — per-channel activation means per site (collected, fixed).
+  * Amber   — channel norms of outlier-clipped standardized weights
+              (weights-only, no data).
+  * L-PTS   — per-channel shifts *learned* per site by minimizing local
+              output reconstruction under the target pattern.
+  * LS      — learnable diagonal scale (Table 5), learned jointly with
+              L-PTS shifts.
+  * R-Sparse — rank-r truncated-SVD factors of each weight matrix.
+
+All results are saved as one flat-f32 store (`methodparams.*`) keyed by
+`<kind>.<pattern>.l<layer>.<site>` where applicable.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.ref import SparsitySpec, sparse_linear_ref
+from .model import SITES, MethodInputs, ModelConfig, forward
+
+
+def capture_activations(
+    cfg: ModelConfig,
+    params,
+    tokens: np.ndarray,
+    lens: np.ndarray,
+) -> Dict[Tuple[int, str], np.ndarray]:
+    """Run the dense model over calibration batches, recording each linear
+    site's 2-D input activations (valid rows only)."""
+    captures: Dict[Tuple[int, str], list] = {}
+    b, t = tokens.shape[1], tokens.shape[2]
+    for bi in range(tokens.shape[0]):
+        cap: Dict[Tuple[int, str], jnp.ndarray] = {}
+        forward(
+            cfg,
+            params,
+            jnp.asarray(tokens[bi]),
+            jnp.asarray(lens[bi]),
+            SparsitySpec("dense"),
+            capture=cap,
+        )
+        valid = (np.arange(t)[None, :] < lens[bi][:, None]).reshape(b * t)
+        for key, arr in cap.items():
+            captures.setdefault(key, []).append(np.asarray(arr)[valid])
+    return {k: np.concatenate(v, axis=0) for k, v in captures.items()}
+
+
+def spts_etas(acts: Dict[Tuple[int, str], np.ndarray]) -> Dict[str, np.ndarray]:
+    """S-PTS: per-channel mean of each site's calibration activations."""
+    return {
+        f"spts_eta.l{l}.{s}": acts[(l, s)].mean(axis=0).astype(np.float32)
+        for (l, s) in acts
+    }
+
+
+def amber_cscales(cfg: ModelConfig, params) -> Dict[str, np.ndarray]:
+    """Amber-Pruner channel norms from weights (port of
+    rust `sparsity::criteria::amber_channel_norms`)."""
+    out = {}
+    for l in range(cfg.n_layers):
+        for s in SITES:
+            w = np.asarray(params[f"layers.{l}.{s}.w"])
+            flat = np.sort(w, axis=None)
+            lo = flat[int(len(flat) * 0.005)]
+            hi = flat[min(int(len(flat) * 0.995), len(flat) - 1)]
+            clipped = np.clip(w, lo, hi)
+            z = (clipped - clipped.mean()) / max(clipped.std(), 1e-8)
+            out[f"amber_cscale.l{l}.{s}"] = np.sqrt(
+                (z**2).sum(axis=0)
+            ).astype(np.float32)
+    return out
+
+
+def learn_pts(
+    cfg: ModelConfig,
+    params,
+    acts: Dict[Tuple[int, str], np.ndarray],
+    spec: SparsitySpec,
+    *,
+    learn_scale: bool,
+    steps: int = 120,
+    lr: float = 0.05,
+    sample_rows: int = 512,
+    seed: int = 0,
+) -> Dict[str, np.ndarray]:
+    """L-PTS (and optionally LS): per-site gradient descent on the local
+    reconstruction loss || sparse_linear(x; eta, ls) - x @ W^T ||^2.
+
+    The keep-mask is piecewise-constant in eta so gradients flow through
+    the value path only — the same trick QAT uses for quantizer params.
+    """
+    rng = np.random.default_rng(seed)
+    out: Dict[str, np.ndarray] = {}
+    pat = spec.key
+
+    for (l, s), x_all in acts.items():
+        w = params[f"layers.{l}.{s}.w"]
+        rows = min(sample_rows, x_all.shape[0])
+        idx = rng.choice(x_all.shape[0], size=rows, replace=False)
+        x = jnp.asarray(x_all[idx])
+        y_ref = x @ w.T
+
+        def loss_fn(eta, ls):
+            y = sparse_linear_ref(
+                x,
+                w,
+                spec,
+                eta=eta,
+                lsw=ls if learn_scale else jnp.ones_like(ls),
+                shift_mode=2.0,
+            )
+            return jnp.mean((y - y_ref) ** 2)
+
+        grad_fn = jax.jit(jax.value_and_grad(loss_fn, argnums=(0, 1)))
+        eta = jnp.asarray(x_all.mean(axis=0))  # warm-start at S-PTS
+        ls = jnp.ones((x.shape[1],), jnp.float32)
+        # Plain SGD with decay — robust for this convex-ish local problem.
+        for step in range(steps):
+            _, (ge, gl) = grad_fn(eta, ls)
+            cur_lr = lr * (0.5 ** (step // 40))
+            eta = eta - cur_lr * ge
+            if learn_scale:
+                ls = ls - cur_lr * gl
+        out[f"lpts_eta.{pat}.l{l}.{s}"] = np.asarray(eta, dtype=np.float32)
+        if learn_scale:
+            out[f"ls_scale.{pat}.l{l}.{s}"] = np.asarray(ls, dtype=np.float32)
+    return out
+
+
+def rsparse_factors(cfg: ModelConfig, params, ranks=(64, 128)) -> Dict[str, np.ndarray]:
+    """Rank-r truncated SVD of each site weight: W ~= U V with
+    U=[out,r], V=[r,in]."""
+    out = {}
+    for l in range(cfg.n_layers):
+        for s in SITES:
+            w = np.asarray(params[f"layers.{l}.{s}.w"])
+            uu, ss, vv = np.linalg.svd(w, full_matrices=False)
+            for r in ranks:
+                rr = min(r, len(ss))
+                u = (uu[:, :rr] * ss[:rr]).astype(np.float32)
+                v = vv[:rr].astype(np.float32)
+                if rr < r:  # pad so every site has uniform [out,r]/[r,in]
+                    u = np.pad(u, ((0, 0), (0, r - rr)))
+                    v = np.pad(v, ((0, r - rr), (0, 0)))
+                out[f"rsparse{r}_u.l{l}.{s}"] = u
+                out[f"rsparse{r}_v.l{l}.{s}"] = v
+    return out
+
+
+def calibrate_all(
+    cfg: ModelConfig,
+    params,
+    calib_tokens: np.ndarray,
+    *,
+    batches: int = 4,
+    batch: int = 16,
+    seq: int = 64,
+    lpts_steps: int = 120,
+    seed: int = 0,
+) -> Dict[str, np.ndarray]:
+    """Run the full calibration pipeline; returns the methodparams dict."""
+    # Chop the calibration stream into [batches, batch, seq] full windows.
+    need = batches * batch * seq
+    assert len(calib_tokens) >= need, "calibration split too small"
+    toks = calib_tokens[:need].reshape(batches, batch, seq).astype(np.int32)
+    lens = np.full((batches, batch), seq, np.int32)
+
+    print("[calibrate] capturing activations...", flush=True)
+    acts = capture_activations(cfg, params, toks, lens)
+
+    out: Dict[str, np.ndarray] = {}
+    out.update(spts_etas(acts))
+    out.update(amber_cscales(cfg, params))
+    for pat in ("2:4", "8:16"):
+        print(f"[calibrate] learning L-PTS for {pat}...", flush=True)
+        out.update(
+            learn_pts(
+                cfg, params, acts, SparsitySpec.parse(pat),
+                learn_scale=False, steps=lpts_steps, seed=seed,
+            )
+        )
+        print(f"[calibrate] learning LS+L-PTS for {pat}...", flush=True)
+        ls = learn_pts(
+            cfg, params, acts, SparsitySpec.parse(pat),
+            learn_scale=True, steps=lpts_steps, seed=seed + 1,
+        )
+        # learn_pts with scale emits both eta and scale under lpts/ls keys;
+        # rename the eta to the ls_eta family to keep both variants.
+        for k, v in ls.items():
+            if k.startswith("lpts_eta."):
+                out[k.replace("lpts_eta.", "ls_eta.")] = v
+            else:
+                out[k] = v
+    print("[calibrate] computing R-Sparse SVD factors...", flush=True)
+    out.update(rsparse_factors(cfg, params))
+    return out

@@ -1,0 +1,74 @@
+"""Golden-vector export: pins the kernel/oracle semantics for the rust side.
+
+Writes `artifacts/golden.json` with deterministic inputs and the oracle's
+outputs for the selection/transform primitives; `rust/tests/golden.rs`
+replays them through `rust/src/sparsity/` so all three implementations
+(Pallas kernel, jnp oracle, rust reference) share one pinned behaviour.
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from .kernels.ref import SparsitySpec, nm_mask, sparse_linear_ref
+
+import jax.numpy as jnp
+
+
+def make_golden(seed: int = 20250710) -> dict:
+    rng = np.random.default_rng(seed)
+    cases = []
+
+    # nm_mask cases (with exact zeros and ties mixed in).
+    for n, m, rows in [(2, 4, 3), (4, 8, 2), (8, 16, 2), (16, 32, 1)]:
+        x = rng.normal(size=(rows, 2 * m)).astype(np.float32)
+        x[x < -1.2] = 0.0
+        x[0, :2] = 0.5  # ties
+        mask = np.asarray(nm_mask(jnp.abs(jnp.asarray(x)), n, m))
+        cases.append(
+            {
+                "kind": "nm_mask",
+                "n": n,
+                "m": m,
+                "scores_abs": np.abs(x).flatten().tolist(),
+                "rows": rows,
+                "cols": 2 * m,
+                "mask": mask.flatten().astype(int).tolist(),
+            }
+        )
+
+    # Full mitigated prune pipeline (matches rust mitigated_nm_prune with
+    # identity weights: y = f(x)).
+    for shift_mode, use_var in [(0.0, 0.0), (1.0, 0.0), (1.0, 1.0), (0.0, 1.0)]:
+        l, h = 4, 16
+        x = (rng.normal(size=(l, h)) + 2.0).astype(np.float32)
+        w = np.eye(h, dtype=np.float32)
+        y = np.asarray(
+            sparse_linear_ref(
+                jnp.asarray(x),
+                jnp.asarray(w),
+                SparsitySpec.parse("2:4"),
+                shift_mode=shift_mode,
+                use_var=use_var,
+            )
+        )
+        cases.append(
+            {
+                "kind": "mitigated_prune_2_4",
+                "shift_mode": shift_mode,
+                "use_var": use_var,
+                "rows": l,
+                "cols": h,
+                "x": x.flatten().tolist(),
+                "y": y.flatten().tolist(),
+            }
+        )
+
+    return {"seed": seed, "cases": cases}
+
+
+def write_golden(path: str, seed: int = 20250710) -> None:
+    with open(path, "w") as f:
+        json.dump(make_golden(seed), f)

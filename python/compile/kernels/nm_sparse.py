@@ -1,0 +1,263 @@
+"""L1: the Pallas N:M activation-sparsification kernel.
+
+One fused kernel performs the whole pre-matmul pipeline on a tile of token
+rows held in VMEM — shift, score, exact-N:M (or per-row top-k) selection,
+learnable diagonal scale, shift compensation, per-token variance correction
+— followed by the ``x @ w.T`` matmul on the MXU. No gather/scatter: masks
+are applied multiplicatively, keeping the MXU-friendly dense layout; the
+compressed-metadata story lives in the rust `metadata`/`hwmodel` modules.
+
+TPU adaptation of the paper's (GPU-oriented) setting — see DESIGN.md
+§Hardware-Adaptation:
+  * selection is rank-by-pairwise-comparison: O(M^2) vectorized compares on
+    the VPU, no data-dependent control flow, no sort network;
+  * BlockSpec streams ``[TILE_R, H]`` activation tiles and the full
+    ``[OUT, H]`` weight tile HBM→VMEM; per-token statistics never leave
+    VMEM;
+  * ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute
+    Mosaic custom-calls, so the kernel lowers to plain HLO. Structure (tile
+    shapes, footprints) is what we optimize; wallclock on real TPUs is
+    estimated analytically in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EPS, SparsitySpec
+
+# Tile height (token rows per grid step).
+#
+# TPU-shaped tiling is 64 rows (64 x 1024 ch x 4 B = 256 KiB activation tile,
+# comfortably inside a 16 MiB VMEM budget next to the weight tile — see
+# hwmodel::KernelTileEstimate). For the CPU-interpret artifacts we default to
+# tile_r=None => one grid step covering all rows: interpret-mode pallas_call
+# lowers its grid to a serialized scan whose per-step slicing costs ~5x the
+# kernel body on CPU (EXPERIMENTS.md §Perf: 15.7ms -> 2.96ms per site call).
+# Real-TPU lowering would keep TPU_TILE_R.
+TPU_TILE_R = 64
+DEFAULT_TILE_R = None
+
+
+def _select_mask(score: jnp.ndarray, spec: SparsitySpec) -> jnp.ndarray:
+    """Keep-mask for a [tile_r, h] score tile. Same rank rule as ref.py."""
+    tile_r, h = score.shape
+    if spec.kind == "nm":
+        n, m = spec.n, spec.m
+        s = score.reshape(tile_r, h // m, m)
+        si = s[..., :, None]
+        sj = s[..., None, :]
+        gt = (sj > si).sum(axis=-1)
+        j_idx = jnp.arange(m)[None, :]
+        i_idx = jnp.arange(m)[:, None]
+        tie = ((sj == si) & (j_idx < i_idx)).sum(axis=-1)
+        mask = ((gt + tie) < n).astype(score.dtype)
+        return mask.reshape(tile_r, h)
+    # Unstructured per-row top-k: shared bisection threshold (see ref.py —
+    # same function, so kernel == oracle exactly; avoids XLA's slow CPU
+    # sort and maps to vectorized compares on the TPU VPU).
+    from .ref import topk_row_mask
+
+    return topk_row_mask(score, spec.keep_frac)
+
+
+def _sparse_linear_kernel(
+    x_ref,
+    w_ref,
+    eta_ref,
+    cscale_ref,
+    colnorm_ref,
+    lsw_ref,
+    flags_ref,
+    o_ref,
+    *,
+    spec: SparsitySpec,
+):
+    """Pallas kernel body for one [TILE_R, H] tile.
+
+    flags layout (f32[4]): [enable, shift_mode, use_clact, use_var].
+    """
+    x = x_ref[...]  # [tile_r, h]
+    w = w_ref[...]  # [out, h]
+    eta = eta_ref[...]  # [h]
+    cscale = cscale_ref[...]  # [h]
+    colnorm = colnorm_ref[...]  # [h]
+    lsw = lsw_ref[...]  # [h]
+    flags = flags_ref[...]  # [4]
+    enable, shift_mode, use_clact, use_var = flags[0], flags[1], flags[2], flags[3]
+
+    # --- shift ---
+    row_mean = x.mean(axis=-1, keepdims=True)
+    eta_eff = jnp.where(
+        shift_mode == 1.0,
+        jnp.broadcast_to(row_mean, x.shape),
+        jnp.where(shift_mode == 2.0, jnp.broadcast_to(eta, x.shape), 0.0),
+    )
+    xs = x - eta_eff
+
+    # --- score ---
+    scale_eff = jnp.where(use_clact == 1.0, colnorm, cscale)
+    score = jnp.abs(xs) * scale_eff
+
+    # --- select ---
+    mask = _select_mask(score, spec)
+
+    # --- apply + compensate + variance-correct ---
+    xp = xs * mask * lsw
+    xc = xp + eta_eff
+    var_x = x.var(axis=-1, keepdims=True)
+    var_c = xc.var(axis=-1, keepdims=True)
+    nu = jnp.sqrt(var_x / jnp.maximum(var_c, EPS))
+    nu = jnp.where(var_c <= EPS, 1.0, nu)
+    xf = jnp.where(use_var == 1.0, nu * xc, xc)
+    xout = jnp.where(enable >= 0.5, xf, x)
+
+    # --- matmul on the MXU ---
+    o_ref[...] = jnp.dot(xout, w.T, preferred_element_type=jnp.float32)
+
+
+def sparse_linear(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    spec: SparsitySpec,
+    *,
+    eta: Optional[jnp.ndarray] = None,
+    cscale: Optional[jnp.ndarray] = None,
+    colnorm: Optional[jnp.ndarray] = None,
+    lsw: Optional[jnp.ndarray] = None,
+    enable: jnp.ndarray | float = 1.0,
+    shift_mode: jnp.ndarray | float = 0.0,
+    use_clact: jnp.ndarray | float = 0.0,
+    use_var: jnp.ndarray | float = 0.0,
+    tile_r: int | None = DEFAULT_TILE_R,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Sparse linear ``y[r, out] = f(x)[r, h] @ w[out, h].T`` via Pallas.
+
+    Method parameters are runtime tensors so a single lowered HLO serves
+    every (criterion x transform) combination of its pattern; see DESIGN.md
+    "Artifact/variant scheme". ``tile_r=None`` = single-tile grid (the CPU
+    default, see above).
+    """
+    rows, h = x.shape
+    out = w.shape[0]
+    assert w.shape[1] == h, f"w {w.shape} incompatible with x {x.shape}"
+
+    if spec.kind == "dense":
+        return x @ w.T
+    if tile_r is None:
+        tile_r = rows
+
+    if eta is None:
+        eta = jnp.zeros((h,), x.dtype)
+    if cscale is None:
+        cscale = jnp.ones((h,), x.dtype)
+    if colnorm is None:
+        colnorm = jnp.ones((h,), x.dtype)
+    if lsw is None:
+        lsw = jnp.ones((h,), x.dtype)
+    flags = jnp.stack(
+        [
+            jnp.asarray(enable, x.dtype),
+            jnp.asarray(shift_mode, x.dtype),
+            jnp.asarray(use_clact, x.dtype),
+            jnp.asarray(use_var, x.dtype),
+        ]
+    )
+
+    tile_r = min(tile_r, rows)
+    # Pad rows to a tile multiple; padded rows are sliced off after.
+    pad = (-rows) % tile_r
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, h), x.dtype)], axis=0)
+    grid = (x.shape[0] // tile_r,)
+
+    kernel = functools.partial(_sparse_linear_kernel, spec=spec)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_r, h), lambda i: (i, 0)),
+            pl.BlockSpec((out, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_r, out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], out), x.dtype),
+        interpret=interpret,
+    )(x, w, eta, cscale, colnorm, lsw, flags)
+    return y[:rows]
+
+
+def rsparse_linear(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,
+    v: jnp.ndarray,
+    spec: SparsitySpec,
+    *,
+    enable: jnp.ndarray | float = 1.0,
+    tile_r: int | None = DEFAULT_TILE_R,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """R-Sparse fused kernel: ``sigma(x) @ w.T + (x - sigma(x)) @ (u v).T``.
+
+    The low-rank residual path contracts through rank r first, so the extra
+    FLOPs are ~r/out of the main matmul.
+    """
+    rows, h = x.shape
+    out = w.shape[0]
+    r = u.shape[1]
+    assert v.shape == (r, h), f"v {v.shape} != ({r}, {h})"
+    if spec.kind == "dense":
+        return x @ w.T
+    if tile_r is None:
+        tile_r = rows
+
+    enable_arr = jnp.reshape(jnp.asarray(enable, x.dtype), (1,))
+    tile_r = min(tile_r, rows)
+    pad = (-rows) % tile_r
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, h), x.dtype)], axis=0)
+    grid = (x.shape[0] // tile_r,)
+
+    def kernel(x_ref, w_ref, u_ref, v_ref, en_ref, o_ref):
+        xt = x_ref[...]
+        wt = w_ref[...]
+        ut = u_ref[...]
+        vt = v_ref[...]
+        en = en_ref[...][0]
+        mask = _select_mask(jnp.abs(xt), spec)
+        xp = xt * mask
+        resid = xt - xp
+        y = jnp.dot(xp, wt.T, preferred_element_type=jnp.float32) + jnp.dot(
+            jnp.dot(resid, vt.T, preferred_element_type=jnp.float32),
+            ut.T,
+            preferred_element_type=jnp.float32,
+        )
+        y_dense = jnp.dot(xt, wt.T, preferred_element_type=jnp.float32)
+        o_ref[...] = jnp.where(en >= 0.5, y, y_dense)
+
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_r, h), lambda i: (i, 0)),
+            pl.BlockSpec((out, h), lambda i: (0, 0)),
+            pl.BlockSpec((out, r), lambda i: (0, 0)),
+            pl.BlockSpec((r, h), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_r, out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], out), x.dtype),
+        interpret=interpret,
+    )(x, w, u, v, enable_arr)
+    return y[:rows]

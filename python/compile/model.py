@@ -1,0 +1,293 @@
+"""L2: the Llama-style transformer whose linear layers route through the
+Pallas sparse-linear kernel.
+
+Architecture (matching the seven sparsifiable linear sites the paper
+studies): RMSNorm → attention (q/k/v/out projections, RoPE, causal+padding
+mask) → RMSNorm → SwiGLU FFN (gate/up/down). Embedding and LM head stay
+dense, as in the paper (only linear-layer *inputs* are sparsified).
+
+`forward` returns exactly what the rust eval harness needs from one call:
+per-position next-token logprobs (for loglikelihood scoring and perplexity)
+and the logits at each sequence's last valid position (for greedy decode).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.nm_sparse import rsparse_linear, sparse_linear
+from .kernels.ref import SparsitySpec, clact_colnorm
+
+# The seven sparsifiable linear sites, in canonical order.
+SITES = ("q", "k", "v", "o", "gate", "up", "down")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Model hyperparameters. Defaults give a ~3.6M-param model that trains
+    to memorize the SynthLang world in a few hundred CPU steps."""
+
+    vocab: int = 160
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    ffn: int = 512
+    rope_base: float = 10000.0
+    # AOT-exported eval shapes.
+    eval_batch: int = 16
+    eval_seq: int = 64
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def site_in_dim(self, site: str) -> int:
+        """Input dimension of each linear site (what gets sparsified)."""
+        return self.ffn if site == "down" else self.d_model
+
+    def site_out_dim(self, site: str) -> int:
+        return self.ffn if site in ("gate", "up") else self.d_model
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    """Checkpoint tensor names, in the sorted order rust iterates them."""
+    names = ["embed.w", "final_norm.g", "lm_head.w"]
+    for l in range(cfg.n_layers):
+        for s in SITES:
+            names.append(f"layers.{l}.{s}.w")
+        names.append(f"layers.{l}.norm1.g")
+        names.append(f"layers.{l}.norm2.g")
+    return sorted(names)
+
+
+def param_shape(cfg: ModelConfig, name: str) -> Tuple[int, ...]:
+    if name == "embed.w" or name == "lm_head.w":
+        return (cfg.vocab, cfg.d_model)
+    if name.endswith("norm.g") or name.endswith("norm1.g") or name.endswith("norm2.g"):
+        return (cfg.d_model,)
+    # layers.{l}.{site}.w
+    site = name.split(".")[2]
+    return (cfg.site_out_dim(site), cfg.site_in_dim(site))
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Scaled-normal init."""
+    key = jax.random.PRNGKey(seed)
+    params: Dict[str, jnp.ndarray] = {}
+    for name in param_names(cfg):
+        key, sub = jax.random.split(key)
+        shape = param_shape(cfg, name)
+        if name.endswith(".g"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-1]
+            params[name] = (
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(fan_in)
+            )
+    return params
+
+
+def num_params(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(param_shape(cfg, n)))) for n in param_names(cfg))
+
+
+# ------------------------------------------------------------------
+# Method inputs: the runtime-selectable sparsification parameters.
+# ------------------------------------------------------------------
+
+
+@dataclass
+class MethodInputs:
+    """Per-site vectors + global flags steering one forward pass.
+
+    For standard variants: eta/cscale/lsw per (layer, site), enable per
+    (layer, site), flags (shift_mode, use_clact, use_var). For R-Sparse
+    variants: u/v factors per (layer, site) + enable.
+    """
+
+    eta: Dict[Tuple[int, str], jnp.ndarray] = field(default_factory=dict)
+    cscale: Dict[Tuple[int, str], jnp.ndarray] = field(default_factory=dict)
+    lsw: Dict[Tuple[int, str], jnp.ndarray] = field(default_factory=dict)
+    enable: Dict[Tuple[int, str], jnp.ndarray] = field(default_factory=dict)
+    u: Dict[Tuple[int, str], jnp.ndarray] = field(default_factory=dict)
+    v: Dict[Tuple[int, str], jnp.ndarray] = field(default_factory=dict)
+    shift_mode: jnp.ndarray | float = 0.0
+    use_clact: jnp.ndarray | float = 0.0
+    use_var: jnp.ndarray | float = 0.0
+
+    @staticmethod
+    def neutral(cfg: ModelConfig, rank: int = 0) -> "MethodInputs":
+        """ACT-magnitude pruning everywhere, no transforms (and rank-r
+        identity-ish factors when building an R-Sparse variant)."""
+        mi = MethodInputs()
+        for l in range(cfg.n_layers):
+            for s in SITES:
+                d = cfg.site_in_dim(s)
+                o = cfg.site_out_dim(s)
+                mi.eta[(l, s)] = jnp.zeros((d,), jnp.float32)
+                mi.cscale[(l, s)] = jnp.ones((d,), jnp.float32)
+                mi.lsw[(l, s)] = jnp.ones((d,), jnp.float32)
+                mi.enable[(l, s)] = jnp.ones((), jnp.float32)
+                if rank:
+                    mi.u[(l, s)] = jnp.zeros((o, rank), jnp.float32)
+                    mi.v[(l, s)] = jnp.zeros((rank, d), jnp.float32)
+        return mi
+
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6) * g
+
+
+def rope(x: jnp.ndarray, base: float) -> jnp.ndarray:
+    """Rotary position embedding over [B, T, H, Dh]."""
+    b, t, h, dh = x.shape
+    half = dh // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = jnp.arange(t, dtype=jnp.float32)[:, None] * freqs[None, :]  # [T, half]
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Dict[str, jnp.ndarray],
+    tokens: jnp.ndarray,  # [B, T] int32
+    lens: jnp.ndarray,  # [B] int32
+    spec: SparsitySpec,
+    method: Optional[MethodInputs] = None,
+    *,
+    rsparse: bool = False,
+    use_kernel: bool = True,
+    capture: Optional[Dict[Tuple[int, str], jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run the model.
+
+    Returns:
+      tgt_lp: [B, T] — tgt_lp[b, t] = log p(tokens[b, t+1] | tokens[b, :t+1])
+        for t < T-1; the final column is 0.
+      last_logits: [B, V] — logits at position lens[b]-1 (next-token
+        distribution for greedy decoding).
+
+    `use_kernel=False` routes sparsification through the pure-jnp oracle —
+    used by tests to validate the whole network against the kernel path.
+    `capture`, when a dict is supplied, records each site's 2-D input
+    activations (calibration).
+    """
+    if method is None:
+        method = MethodInputs.neutral(cfg)
+    b, t = tokens.shape
+    d = cfg.d_model
+    x = params["embed.w"][tokens]  # [B, T, D]
+    pos = jnp.arange(t)
+    valid = (pos[None, :] < lens[:, None]).astype(jnp.float32)  # [B, T]
+    valid_flat = valid.reshape(b * t)
+
+    def site_linear(h2d: jnp.ndarray, l: int, s: str) -> jnp.ndarray:
+        """Apply one (possibly sparsified) linear site on [B*T, din]."""
+        if capture is not None:
+            capture[(l, s)] = h2d
+        w = params[f"layers.{l}.{s}.w"]
+        if spec.kind == "dense":
+            return h2d @ w.T
+        if rsparse:
+            fn = rsparse_linear if use_kernel else _rsparse_ref
+            return fn(
+                h2d,
+                w,
+                method.u[(l, s)],
+                method.v[(l, s)],
+                spec,
+                enable=method.enable[(l, s)],
+            )
+        colnorm = clact_colnorm(h2d, valid_flat)
+        fn = sparse_linear if use_kernel else _sparse_ref
+        return fn(
+            h2d,
+            w,
+            spec,
+            eta=method.eta[(l, s)],
+            cscale=method.cscale[(l, s)],
+            colnorm=colnorm,
+            lsw=method.lsw[(l, s)],
+            enable=method.enable[(l, s)],
+            shift_mode=method.shift_mode,
+            use_clact=method.use_clact,
+            use_var=method.use_var,
+        )
+
+    # Attention masks: causal AND key-position-valid.
+    causal = pos[None, :] <= pos[:, None]  # [T, T] query x key
+    key_valid = pos[None, None, :] < lens[:, None, None]  # [B, 1, T]
+    attn_mask = causal[None, :, :] & key_valid  # [B, T, T]
+    neg = jnp.asarray(-1e9, jnp.float32)
+
+    for l in range(cfg.n_layers):
+        h = rmsnorm(x, params[f"layers.{l}.norm1.g"])
+        h2d = h.reshape(b * t, d)
+        q = site_linear(h2d, l, "q").reshape(b, t, cfg.n_heads, cfg.head_dim)
+        k = site_linear(h2d, l, "k").reshape(b, t, cfg.n_heads, cfg.head_dim)
+        v = site_linear(h2d, l, "v").reshape(b, t, cfg.n_heads, cfg.head_dim)
+        q = rope(q, cfg.rope_base)
+        k = rope(k, cfg.rope_base)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(
+            jnp.asarray(cfg.head_dim, jnp.float32)
+        )
+        scores = jnp.where(attn_mask[:, None, :, :], scores, neg)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, t, d)
+        o = site_linear(ctx.reshape(b * t, d), l, "o").reshape(b, t, d)
+        x = x + o
+
+        h2 = rmsnorm(x, params[f"layers.{l}.norm2.g"])
+        h2d2 = h2.reshape(b * t, d)
+        g = site_linear(h2d2, l, "gate").reshape(b, t, cfg.ffn)
+        u_ = site_linear(h2d2, l, "up").reshape(b, t, cfg.ffn)
+        f = jax.nn.silu(g) * u_
+        dn = site_linear(f.reshape(b * t, cfg.ffn), l, "down").reshape(b, t, d)
+        x = x + dn
+
+    x = rmsnorm(x, params["final_norm.g"])
+    logits = x @ params["lm_head.w"].T  # [B, T, V]
+    logprobs = jax.nn.log_softmax(logits, axis=-1)
+
+    # Next-token logprobs.
+    nxt = tokens[:, 1:]  # [B, T-1]
+    lp = jnp.take_along_axis(logprobs[:, :-1, :], nxt[..., None], axis=-1)[..., 0]
+    tgt_lp = jnp.concatenate([lp, jnp.zeros((b, 1), jnp.float32)], axis=1)
+
+    # Last valid position's logits.
+    last_idx = jnp.clip(lens - 1, 0, t - 1)
+    last_logits = jnp.take_along_axis(
+        logits, last_idx[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0, :]
+    return tgt_lp, last_logits
+
+
+# Oracle-path adapters (signature match with the kernel functions).
+def _sparse_ref(h2d, w, spec, **kw):
+    from .kernels.ref import sparse_linear_ref
+
+    return sparse_linear_ref(h2d, w, spec, **kw)
+
+
+def _rsparse_ref(h2d, w, u, v, spec, **kw):
+    from .kernels.ref import rsparse_linear_ref
+
+    return rsparse_linear_ref(h2d, w, u, v, spec, **kw)
+
+
+def lm_loss(
+    cfg: ModelConfig, params: Dict[str, jnp.ndarray], tokens: jnp.ndarray
+) -> jnp.ndarray:
+    """Dense next-token cross-entropy over a [B, T] batch (training path —
+    never exported; the request path is rust + the eval artifacts)."""
+    b, t = tokens.shape
+    lens = jnp.full((b,), t, jnp.int32)
+    tgt_lp, _ = forward(cfg, params, tokens, lens, SparsitySpec("dense"))
+    return -tgt_lp[:, : t - 1].mean()

@@ -1,0 +1,53 @@
+"""Python side of the flat-f32 checkpoint format shared with rust.
+
+Format (see `rust/src/util/tensor.rs`): `<stem>.bin` is a little-endian f32
+blob; `<stem>.json` is a manifest `{"tensors": [{name, shape, offset}...]}`.
+Rust loads checkpoints/method-params written here; tests in both languages
+pin the round-trip.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+import numpy as np
+
+
+def save(stem: str, tensors: Dict[str, np.ndarray]) -> None:
+    """Write `<stem>.bin` + `<stem>.json`. Keys are sorted for determinism
+    (matching rust's BTreeMap iteration order)."""
+    blob = bytearray()
+    entries = []
+    for name in sorted(tensors.keys()):
+        arr = np.asarray(tensors[name], dtype=np.float32)
+        # NB: record the shape before ascontiguousarray, which promotes
+        # 0-d scalars to 1-d.
+        shape = list(arr.shape)
+        entries.append({"name": name, "shape": shape, "offset": len(blob)})
+        blob.extend(np.ascontiguousarray(arr).tobytes())
+    os.makedirs(os.path.dirname(stem) or ".", exist_ok=True)
+    with open(stem + ".bin", "wb") as f:
+        f.write(bytes(blob))
+    with open(stem + ".json", "w") as f:
+        json.dump(
+            {"tensors": entries, "format": "nmsparse-flat-f32-le-v1"}, f, indent=1
+        )
+
+
+def load(stem: str) -> Dict[str, np.ndarray]:
+    """Read tensors back as float32 numpy arrays."""
+    with open(stem + ".json") as f:
+        manifest = json.load(f)
+    with open(stem + ".bin", "rb") as f:
+        blob = f.read()
+    out: Dict[str, np.ndarray] = {}
+    for e in manifest["tensors"]:
+        shape = tuple(e["shape"])
+        count = int(np.prod(shape)) if shape else 1
+        arr = np.frombuffer(
+            blob, dtype="<f4", count=count, offset=e["offset"]
+        ).reshape(shape)
+        out[e["name"]] = arr.copy()
+    return out

@@ -1,0 +1,100 @@
+"""Build-time training of the SynthLang checkpoint (never on request path).
+
+Trains the dense model with hand-rolled Adam (no optax in the offline
+image) on the token stream produced by `nmsparse datagen`, then saves the
+checkpoint in the shared flat-f32 format. A few hundred CPU steps suffice:
+the corpus is a closed world the 2.7M-param model memorizes.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .model import ModelConfig, init_params, lm_loss
+
+
+def load_token_stream(path: str) -> np.ndarray:
+    """Read a little-endian u32 token file written by `nmsparse datagen`."""
+    return np.fromfile(path, dtype="<u4").astype(np.int32)
+
+
+def batch_iter(stream: np.ndarray, batch: int, seq: int, seed: int):
+    """Yield random [batch, seq] windows forever."""
+    rng = np.random.default_rng(seed)
+    max_start = len(stream) - seq - 1
+    assert max_start > 0, "corpus too short for the training sequence length"
+    while True:
+        starts = rng.integers(0, max_start, size=batch)
+        yield np.stack([stream[s : s + seq] for s in starts])
+
+
+def adam_init(params: Dict[str, jnp.ndarray]):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    tf = t.astype(jnp.float32)
+    bc1 = 1 - b1**tf
+    bc2 = 1 - b2**tf
+    new_params = {
+        k: params[k] - lr * (m[k] / bc1) / (jnp.sqrt(v[k] / bc2) + eps) for k in params
+    }
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def train(
+    cfg: ModelConfig,
+    stream: np.ndarray,
+    *,
+    steps: int = 400,
+    batch: int = 32,
+    seq: int = 128,
+    lr: float = 1e-3,
+    seed: int = 0,
+    log_every: int = 50,
+) -> Tuple[Dict[str, jnp.ndarray], list]:
+    """Train and return (params, loss_history[(step, loss)])."""
+    params = init_params(cfg, seed)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, tokens):
+        loss, grads = jax.value_and_grad(lambda p: lm_loss(cfg, p, tokens))(params)
+        params, opt = adam_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    history = []
+    it = batch_iter(stream, batch, seq, seed)
+    t0 = time.time()
+    for step in range(1, steps + 1):
+        tokens = jnp.asarray(next(it))
+        params, opt, loss = step_fn(params, opt, tokens)
+        if step % log_every == 0 or step == 1 or step == steps:
+            loss_f = float(loss)
+            history.append((step, loss_f))
+            print(
+                f"[train] step {step:4d}/{steps} loss {loss_f:.4f} "
+                f"({time.time() - t0:.1f}s)",
+                flush=True,
+            )
+    return params, history
+
+
+def eval_ppl(cfg: ModelConfig, params, stream: np.ndarray, *, seq: int = 128, max_windows: int = 32) -> float:
+    """Held-out perplexity over contiguous windows (dense model)."""
+    n = min(max_windows, (len(stream) - 1) // seq)
+    losses = []
+    fn = jax.jit(lambda p, t: lm_loss(cfg, p, t))
+    for i in range(n):
+        window = stream[i * seq : i * seq + seq][None, :]
+        losses.append(float(fn(params, jnp.asarray(window, jnp.int32))))
+    return float(np.exp(np.mean(losses)))

@@ -1,0 +1,7 @@
+"""Make `pytest python/tests/` work from the repo root: the compile package
+lives under python/, which is the import root for the build pipeline."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,226 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, patterns, flags and tile sizes; assert_allclose
+against ref.py is THE correctness signal for the kernel (the rust side then
+pins the same semantics via golden vectors in rust/tests/).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.nm_sparse import rsparse_linear, sparse_linear
+from compile.kernels.ref import (
+    SparsitySpec,
+    clact_colnorm,
+    nm_mask,
+    rsparse_linear_ref,
+    sparse_linear_ref,
+    topk_row_mask,
+)
+
+RNG = np.random.default_rng(1234)
+
+
+def rand(shape, scale=1.0, offset=0.0):
+    return jnp.asarray(
+        (RNG.normal(size=shape) * scale + offset).astype(np.float32)
+    )
+
+
+# ---------------------------------------------------------------- nm_mask
+
+
+@given(
+    m=st.sampled_from([4, 8, 16, 32]),
+    blocks=st.integers(1, 6),
+    rows=st.integers(1, 5),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=60, deadline=None)
+def test_nm_mask_exactly_n_per_block(m, blocks, rows, seed):
+    n = 1 + seed % m
+    rng = np.random.default_rng(seed)
+    scores = jnp.asarray(rng.normal(size=(rows, blocks * m)).astype(np.float32))
+    mask = np.asarray(nm_mask(scores, n, m))
+    per_block = mask.reshape(rows, blocks, m).sum(axis=-1)
+    assert (per_block == n).all()
+
+
+def test_nm_mask_tie_break_low_index():
+    scores = jnp.asarray([[1.0, 1.0, 1.0, 1.0]])
+    mask = np.asarray(nm_mask(scores, 2, 4))
+    assert mask.tolist() == [[1.0, 1.0, 0.0, 0.0]]
+
+
+def test_nm_mask_keeps_largest():
+    scores = jnp.asarray([[0.1, 5.0, 3.0, 0.2, 9.0, 1.0, 2.0, 8.0]])
+    mask = np.asarray(nm_mask(scores, 2, 4))
+    assert mask.tolist() == [[0.0, 1.0, 1.0, 0.0, 1.0, 0.0, 0.0, 1.0]]
+
+
+@given(
+    h=st.sampled_from([16, 32, 64]),
+    keep_pct=st.sampled_from([10, 30, 50, 80]),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=40, deadline=None)
+def test_topk_row_mask_density(h, keep_pct, seed):
+    rng = np.random.default_rng(seed)
+    scores = jnp.asarray(np.abs(rng.normal(size=(3, h))).astype(np.float32))
+    mask = np.asarray(topk_row_mask(scores, keep_pct / 100.0))
+    k = round(h * keep_pct / 100.0)
+    # Ties may overkeep; with continuous scores this is exact.
+    assert (mask.sum(axis=-1) == k).all()
+
+
+# ------------------------------------------------------- kernel vs oracle
+
+
+@given(
+    spec_key=st.sampled_from(["2:4", "4:8", "8:16", "16:32", "u50", "u70", "u20"]),
+    rows=st.integers(1, 24),
+    h=st.sampled_from([32, 64]),
+    out=st.sampled_from([8, 48]),
+    tile_r=st.sampled_from([4, 8, 64]),
+    shift_mode=st.sampled_from([0.0, 1.0, 2.0]),
+    use_var=st.sampled_from([0.0, 1.0]),
+    use_clact=st.sampled_from([0.0, 1.0]),
+    offset=st.sampled_from([0.0, 3.0]),
+    seed=st.integers(0, 1_000),
+)
+@settings(max_examples=40, deadline=None)
+def test_kernel_matches_oracle(
+    spec_key, rows, h, out, tile_r, shift_mode, use_var, use_clact, offset, seed
+):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.normal(size=(rows, h)) + offset).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(out, h)).astype(np.float32))
+    eta = jnp.asarray((rng.normal(size=(h,)) * 0.2).astype(np.float32))
+    cscale = jnp.asarray(np.abs(rng.normal(size=(h,)) + 1.0).astype(np.float32))
+    lsw = jnp.asarray((1.0 + 0.1 * rng.normal(size=(h,))).astype(np.float32))
+    colnorm = clact_colnorm(x)
+    spec = SparsitySpec.parse(spec_key)
+    kw = dict(
+        eta=eta, cscale=cscale, lsw=lsw, colnorm=colnorm,
+        shift_mode=shift_mode, use_var=use_var, use_clact=use_clact,
+    )
+    a = sparse_linear_ref(x, w, spec, **kw)
+    b = sparse_linear(x, w, spec, tile_r=tile_r, **kw)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-4, atol=3e-4)
+
+
+def test_kernel_disable_bypasses():
+    x = rand((6, 32), offset=2.0)
+    w = rand((16, 32))
+    spec = SparsitySpec.parse("2:4")
+    y = sparse_linear(x, w, spec, enable=0.0, tile_r=4)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w.T), rtol=2e-4, atol=2e-4)
+
+
+def test_dense_spec_is_plain_matmul():
+    x = rand((5, 16))
+    w = rand((8, 16))
+    y = sparse_linear(x, w, SparsitySpec("dense"))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w.T), rtol=1e-5, atol=1e-5)
+
+
+def test_sparsity_actually_reduces_information():
+    # Pruned output must differ from dense for generic inputs.
+    x = rand((8, 64))
+    w = rand((32, 64))
+    dense = np.asarray(x @ w.T)
+    pruned = np.asarray(sparse_linear(x, w, SparsitySpec.parse("2:4")))
+    assert np.abs(dense - pruned).max() > 1e-3
+
+
+@given(
+    spec_key=st.sampled_from(["2:4", "8:16"]),
+    rank=st.sampled_from([4, 16]),
+    rows=st.integers(1, 12),
+    seed=st.integers(0, 1_000),
+)
+@settings(max_examples=20, deadline=None)
+def test_rsparse_kernel_matches_oracle(spec_key, rank, rows, seed):
+    rng = np.random.default_rng(seed)
+    h, out = 32, 24
+    x = jnp.asarray(rng.normal(size=(rows, h)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(out, h)).astype(np.float32))
+    u = jnp.asarray(rng.normal(size=(out, rank)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(rank, h)).astype(np.float32))
+    spec = SparsitySpec.parse(spec_key)
+    a = rsparse_linear_ref(x, w, u, v, spec)
+    b = rsparse_linear(x, w, u, v, spec, tile_r=4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-4, atol=3e-4)
+
+
+def test_rsparse_full_rank_recovers_dense():
+    # With U V == W, R-Sparse output equals the dense output exactly:
+    # sigma(X) W^T + (X - sigma(X)) W^T = X W^T.
+    rng = np.random.default_rng(7)
+    h, out = 16, 16
+    w_np = rng.normal(size=(out, h)).astype(np.float32)
+    uu, ss, vv = np.linalg.svd(w_np)
+    u = jnp.asarray((uu * ss).astype(np.float32))
+    v = jnp.asarray(vv.astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(8, h)).astype(np.float32))
+    w = jnp.asarray(w_np)
+    y = rsparse_linear(x, w, u, v, SparsitySpec.parse("2:4"))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w.T), rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------- transform semantics
+
+
+def test_dpts_improves_shifted_reconstruction():
+    # The paper's motivation: centering before pruning preserves shifted
+    # distributions (D-PTS beats plain ACT on mean-10 activations).
+    rng = np.random.default_rng(3)
+    x = jnp.asarray((rng.normal(size=(32, 64)) + 10.0).astype(np.float32))
+    w = jnp.eye(64, dtype=jnp.float32)
+    spec = SparsitySpec.parse("2:4")
+    dense = np.asarray(x @ w.T)
+    act = np.asarray(sparse_linear_ref(x, w, spec))
+    dpts = np.asarray(sparse_linear_ref(x, w, spec, shift_mode=1.0))
+    err_act = ((act - dense) ** 2).mean()
+    err_dpts = ((dpts - dense) ** 2).mean()
+    assert err_dpts < err_act * 0.5, (err_dpts, err_act)
+
+
+def test_var_restores_output_scale():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(16, 64)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(32, 64)).astype(np.float32))
+    spec = SparsitySpec.parse("2:4")
+    dense_norm = float(jnp.linalg.norm(x @ w.T))
+    plain = float(jnp.linalg.norm(sparse_linear_ref(x, w, spec)))
+    var = float(jnp.linalg.norm(sparse_linear_ref(x, w, spec, use_var=1.0)))
+    # VAR should bring the output norm closer to dense than plain pruning.
+    assert abs(var - dense_norm) < abs(plain - dense_norm)
+
+
+def test_clact_differs_from_act_selection():
+    # With skewed column energies CLACT must pick differently than ACT.
+    rng = np.random.default_rng(5)
+    x_np = rng.normal(size=(8, 16)).astype(np.float32)
+    x_np[:, 0] *= 10.0  # huge column energy on channel 0
+    x = jnp.asarray(x_np)
+    cn = clact_colnorm(x)
+    act_mask = np.asarray(nm_mask(jnp.abs(x), 2, 4))
+    clact_mask = np.asarray(nm_mask(jnp.abs(x) * cn, 2, 4))
+    assert (act_mask != clact_mask).any()
+
+
+def test_spec_parse_and_keys():
+    assert SparsitySpec.parse("dense").kind == "dense"
+    s = SparsitySpec.parse("8:16")
+    assert (s.n, s.m) == (8, 16)
+    assert s.key == "8_16"
+    u = SparsitySpec.parse("u70")
+    assert u.kind == "unstructured"
+    assert abs(u.keep_frac - 0.3) < 1e-9
+    assert u.key == "u70"
+    with pytest.raises(Exception):
+        SparsitySpec.parse("banana")

@@ -1,0 +1,183 @@
+"""L2 correctness: model shapes, masking, kernel-vs-oracle at model level,
+training step sanity and the tensorstore format."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import tensorstore
+from compile.kernels.ref import SparsitySpec
+from compile.model import (
+    SITES,
+    MethodInputs,
+    ModelConfig,
+    forward,
+    init_params,
+    lm_loss,
+    num_params,
+    param_names,
+    param_shape,
+)
+
+CFG = ModelConfig(vocab=160, d_model=64, n_layers=2, n_heads=2, ffn=128)
+PARAMS = init_params(CFG, seed=0)
+RNG = np.random.default_rng(0)
+
+
+def toks(b, t):
+    return jnp.asarray(RNG.integers(0, CFG.vocab, size=(b, t)), jnp.int32)
+
+
+def test_param_inventory():
+    names = param_names(CFG)
+    assert len(names) == 3 + CFG.n_layers * (len(SITES) + 2)
+    assert names == sorted(names)
+    total = num_params(CFG)
+    assert total == sum(int(np.prod(param_shape(CFG, n))) for n in names)
+    assert param_shape(CFG, "layers.0.down.w") == (CFG.d_model, CFG.ffn)
+    assert param_shape(CFG, "layers.1.gate.w") == (CFG.ffn, CFG.d_model)
+
+
+def test_forward_shapes():
+    tokens = toks(3, 12)
+    lens = jnp.asarray([12, 5, 1], jnp.int32)
+    lp, ll = forward(CFG, PARAMS, tokens, lens, SparsitySpec("dense"))
+    assert lp.shape == (3, 12)
+    assert ll.shape == (3, CFG.vocab)
+    assert np.asarray(lp)[:, -1].tolist() == [0.0, 0.0, 0.0]
+    # Logprobs are valid (<= 0) at scored positions.
+    assert (np.asarray(lp)[:, :-1] <= 1e-6).all()
+
+
+def test_padding_does_not_change_prefix_outputs():
+    # Changing tokens beyond `lens` must not change last_logits.
+    tokens = np.asarray(toks(2, 16))
+    lens = jnp.asarray([8, 8], jnp.int32)
+    t1 = jnp.asarray(tokens)
+    tokens2 = tokens.copy()
+    tokens2[:, 10:] = 7  # mutate padding region
+    t2 = jnp.asarray(tokens2)
+    _, ll1 = forward(CFG, PARAMS, t1, lens, SparsitySpec("dense"))
+    _, ll2 = forward(CFG, PARAMS, t2, lens, SparsitySpec("dense"))
+    np.testing.assert_allclose(np.asarray(ll1), np.asarray(ll2), rtol=1e-5, atol=1e-5)
+
+
+def test_causality():
+    # Changing a future token must not change past logprobs.
+    tokens = np.asarray(toks(1, 16))
+    lens = jnp.asarray([16], jnp.int32)
+    lp1, _ = forward(CFG, PARAMS, jnp.asarray(tokens), lens, SparsitySpec("dense"))
+    tokens2 = tokens.copy()
+    tokens2[0, 12] = (tokens2[0, 12] + 1) % CFG.vocab
+    lp2, _ = forward(CFG, PARAMS, jnp.asarray(tokens2), lens, SparsitySpec("dense"))
+    # Positions strictly before 11 predict tokens <= 11 from prefixes <= 11:
+    # unchanged. (tgt_lp[t] involves token t+1, so t <= 10 is unaffected.)
+    np.testing.assert_allclose(
+        np.asarray(lp1)[0, :11], np.asarray(lp2)[0, :11], rtol=1e-5, atol=1e-5
+    )
+    assert abs(float(lp1[0, 11] - lp2[0, 11])) > 0  # the changed prediction
+
+
+@pytest.mark.parametrize("spec_key", ["2:4", "8:16", "u50"])
+def test_model_kernel_matches_oracle(spec_key):
+    tokens = toks(2, 10)
+    lens = jnp.asarray([10, 6], jnp.int32)
+    spec = SparsitySpec.parse(spec_key)
+    mi = MethodInputs.neutral(CFG)
+    mi.shift_mode = 1.0
+    mi.use_var = 1.0
+    a = forward(CFG, PARAMS, tokens, lens, spec, mi, use_kernel=True)
+    b = forward(CFG, PARAMS, tokens, lens, spec, mi, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(a[0]), np.asarray(b[0]), rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(a[1]), np.asarray(b[1]), rtol=2e-3, atol=2e-3)
+
+
+def test_rsparse_model_path():
+    tokens = toks(2, 8)
+    lens = jnp.asarray([8, 8], jnp.int32)
+    spec = SparsitySpec.parse("8:16")
+    mi = MethodInputs.neutral(CFG, rank=8)
+    a = forward(CFG, PARAMS, tokens, lens, spec, mi, rsparse=True, use_kernel=True)
+    b = forward(CFG, PARAMS, tokens, lens, spec, mi, rsparse=True, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(a[0]), np.asarray(b[0]), rtol=2e-3, atol=2e-4)
+
+
+def test_disabled_sites_recover_dense():
+    # All sites disabled == dense forward.
+    tokens = toks(2, 8)
+    lens = jnp.asarray([8, 8], jnp.int32)
+    mi = MethodInputs.neutral(CFG)
+    for k in mi.enable:
+        mi.enable[k] = jnp.zeros((), jnp.float32)
+    a = forward(CFG, PARAMS, tokens, lens, SparsitySpec.parse("2:4"), mi)
+    d = forward(CFG, PARAMS, tokens, lens, SparsitySpec("dense"))
+    np.testing.assert_allclose(np.asarray(a[0]), np.asarray(d[0]), rtol=2e-4, atol=2e-4)
+
+
+def test_sparsity_degrades_loss():
+    # Aggressive sparsity must hurt the LM loss of a random model less
+    # than... actually for a RANDOM model effects are small; instead check
+    # the forward outputs differ and remain finite.
+    tokens = toks(2, 8)
+    lens = jnp.asarray([8, 8], jnp.int32)
+    d = forward(CFG, PARAMS, tokens, lens, SparsitySpec("dense"))
+    s = forward(CFG, PARAMS, tokens, lens, SparsitySpec.parse("2:4"))
+    assert np.isfinite(np.asarray(s[0])).all()
+    assert np.abs(np.asarray(d[1]) - np.asarray(s[1])).max() > 1e-4
+
+
+def test_lm_loss_near_uniform_at_init():
+    tokens = toks(4, 16)
+    loss = float(lm_loss(CFG, PARAMS, tokens))
+    assert abs(loss - np.log(CFG.vocab)) < 1.0
+
+
+def test_training_reduces_loss():
+    from compile.train import train
+
+    # A tiny repetitive stream should be learned very fast.
+    stream = np.tile(np.arange(12, dtype=np.int32), 600)
+    params, history = train(
+        ModelConfig(vocab=32, d_model=32, n_layers=1, n_heads=2, ffn=64),
+        stream,
+        steps=30,
+        batch=8,
+        seq=24,
+        log_every=29,
+    )
+    assert history[-1][1] < history[0][1] * 0.5, history
+
+
+def test_tensorstore_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        stem = os.path.join(d, "ckpt")
+        data = {
+            "a.w": RNG.normal(size=(4, 6)).astype(np.float32),
+            "b": np.asarray([1.5, -2.5], np.float32),
+            "s": np.float32(3.25),
+        }
+        tensorstore.save(stem, data)
+        back = tensorstore.load(stem)
+        assert set(back) == set(data)
+        np.testing.assert_array_equal(back["a.w"], data["a.w"])
+        np.testing.assert_array_equal(back["b"], data["b"])
+        assert back["s"].shape == ()
+        assert float(back["s"]) == 3.25
+
+
+def test_method_input_names_order_is_stable():
+    from compile.aot import method_input_names
+
+    a = method_input_names(CFG, False, 0)
+    b = method_input_names(CFG, False, 0)
+    assert a == b
+    assert a[0][0] == "m.eta.l0.q"
+    assert a[-1][0] == "m.flag.use_var"
+    r = method_input_names(CFG, True, 16)
+    assert r[0][0] == "m.u.l0.q"
+    assert r[0][1] == (CFG.d_model, 16)
+    assert all(not n.startswith("m.flag") for n, _ in r)

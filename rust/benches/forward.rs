@@ -1,0 +1,111 @@
+//! Forward-path benchmarks over the PJRT executables: dense vs every
+//! sparsity pattern, scoring throughput, decode-step latency, engine bind
+//! cost. These are the perf numbers behind EXPERIMENTS.md §Perf — the cost
+//! of *emulating* dynamic sparsity in HLO on CPU (the paper's Appendix-A
+//! hardware model covers what native support would recover).
+//!
+//! Requires `make artifacts`; skips gracefully if they are missing.
+
+use nmsparse::coordinator::methods::MethodConfig;
+use nmsparse::coordinator::Coordinator;
+use nmsparse::sparsity::Pattern;
+use nmsparse::util::bench::BenchSuite;
+use std::path::Path;
+
+fn main() {
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("io_manifest.json").exists() {
+        println!("forward: artifacts/ missing — run `make artifacts` first; skipping");
+        return;
+    }
+    let coord = Coordinator::open(artifacts).expect("open artifacts");
+    let dims = coord.pool.manifest.dims.clone();
+    let tokens_per_batch = (dims.batch * dims.seq) as f64;
+    let mut suite = BenchSuite::new("forward");
+    suite.target_time_s = 3.0;
+    suite.samples = 8;
+
+    // A deterministic token batch (valid ids, full lengths).
+    let tokens: Vec<i32> = (0..dims.batch * dims.seq)
+        .map(|i| (i % 97) as i32)
+        .collect();
+    let lens = vec![dims.seq as i32; dims.batch];
+
+    // ---- dense vs patterns: batched forward tokens/s ----
+    for key in ["dense", "2:4", "4:8", "8:16", "16:32", "u50"] {
+        let cfg = if key == "dense" {
+            MethodConfig::dense()
+        } else {
+            MethodConfig::act(Pattern::parse(key).unwrap())
+        };
+        let engine = coord.pool.engine(&cfg).expect("engine");
+        suite.bench_with_items(
+            &format!("forward/{key} batch (tokens)"),
+            Some(tokens_per_batch),
+            || {
+                std::hint::black_box(engine.run(&coord.pool.rt, &tokens, &lens).unwrap());
+            },
+        );
+    }
+
+    // ---- method-parameter cost: transforms on top of 8:16 ----
+    for name in ["S-PTS", "D-PTS", "VAR", "CLACT", "R-Sparse(64)"] {
+        let cfg = MethodConfig::by_name(name, Pattern::NM { n: 8, m: 16 }).unwrap();
+        let engine = coord.pool.engine(&cfg).expect("engine");
+        suite.bench_with_items(
+            &format!("forward/8:16+{name} (tokens)"),
+            Some(tokens_per_batch),
+            || {
+                std::hint::black_box(engine.run(&coord.pool.rt, &tokens, &lens).unwrap());
+            },
+        );
+    }
+
+    // ---- scoring path end-to-end (pack + run + reduce) ----
+    {
+        let cfg = MethodConfig::act(Pattern::NM { n: 8, m: 16 });
+        let rows: Vec<(Vec<u32>, (usize, usize))> = (0..dims.batch)
+            .map(|i| {
+                let row: Vec<u32> = (0..24).map(|t| ((i * 7 + t) % 97) as u32).collect();
+                (row, (20, 24))
+            })
+            .collect();
+        suite.bench_with_items(
+            "score_rows/8:16 one batch of rows (rows)",
+            Some(dims.batch as f64),
+            || {
+                std::hint::black_box(coord.score_rows(&cfg, &rows).unwrap());
+            },
+        );
+    }
+
+    // ---- decode step latency (single token across a full batch) ----
+    {
+        let cfg = MethodConfig::act(Pattern::NM { n: 8, m: 16 });
+        let prompts: Vec<Vec<u32>> = (0..dims.batch)
+            .map(|i| (0..10).map(|t| ((i + t) % 97) as u32).collect())
+            .collect();
+        suite.bench_with_items(
+            "generate/8:16 one step x batch (tokens)",
+            Some(dims.batch as f64),
+            || {
+                std::hint::black_box(coord.generate(&cfg, &prompts, 1, &[]).unwrap());
+            },
+        );
+    }
+
+    // ---- bind cost (weights upload + resolver) ----
+    {
+        let variant = coord.pool.variant("8_16").unwrap();
+        let cfg = MethodConfig::act(Pattern::NM { n: 8, m: 16 });
+        suite.bench(
+            "bind/8_16 resolve+upload all inputs",
+            || {
+                let resolver = cfg.resolver(&coord.pool.weights, &coord.pool.methodparams);
+                std::hint::black_box(variant.bind(&coord.pool.rt, &resolver).unwrap());
+            },
+        );
+    }
+
+    suite.finish();
+}

@@ -1,0 +1,82 @@
+//! Serving-layer benchmarks: batcher/scheduler/packing logic (pure rust)
+//! — the coordinator must stay negligible next to the PJRT executable.
+
+use nmsparse::coordinator::batcher::{pack_rows, BatchPolicy, Batcher};
+use nmsparse::coordinator::scheduler::{SchedPolicy, Scheduler, Work};
+use nmsparse::util::bench::BenchSuite;
+use nmsparse::util::prng::Rng;
+use std::time::Duration;
+
+fn main() {
+    let mut suite = BenchSuite::new("serving");
+    let mut rng = Rng::new(7);
+
+    // ---- dynamic batcher ----
+    {
+        let policy = BatchPolicy {
+            capacity: 16,
+            max_wait: Duration::from_millis(5),
+        };
+        suite.bench_with_items("batcher/push+drain 1024 items (items)", Some(1024.0), || {
+            let mut b = Batcher::new(policy);
+            for i in 0..1024usize {
+                b.push(i);
+            }
+            let mut total = 0;
+            while !b.is_empty() {
+                total += b.drain_batch().len();
+            }
+            std::hint::black_box(total);
+        });
+    }
+
+    // ---- row packing ----
+    {
+        let rows: Vec<Vec<u32>> = (0..256)
+            .map(|_| {
+                let len = rng.range(4, 60);
+                (0..len).map(|_| rng.below(150) as u32).collect()
+            })
+            .collect();
+        let tokens: f64 = rows.iter().map(|r| r.len() as f64).sum();
+        suite.bench_with_items("pack_rows/256 rows into 16x64 (tokens)", Some(tokens), || {
+            std::hint::black_box(pack_rows(&rows, 16, 64));
+        });
+    }
+
+    // ---- scheduler under mixed load ----
+    {
+        suite.bench_with_items(
+            "scheduler/mixed 64 scores + 16 gens to completion (reqs)",
+            Some(80.0),
+            || {
+                let mut s = Scheduler::new(16, SchedPolicy::default());
+                for i in 0..64u32 {
+                    s.submit_score(vec![i], (0, 1));
+                }
+                for i in 0..16u32 {
+                    s.submit_generate(vec![i], 8);
+                }
+                loop {
+                    match s.next_work() {
+                        Work::Idle => break,
+                        Work::Score(ids) => {
+                            for id in ids {
+                                s.complete_score(id);
+                            }
+                        }
+                        Work::Decode(ids) => {
+                            for id in ids {
+                                s.session_mut(id).unwrap().push_token(1, &[]);
+                            }
+                            s.reap_done();
+                        }
+                    }
+                }
+                std::hint::black_box(&s);
+            },
+        );
+    }
+
+    suite.finish();
+}

@@ -1,0 +1,159 @@
+//! Pure-rust substrate benchmarks: PRNG, JSON, tokenizer, N:M selection,
+//! metadata codecs, quantization — the L3-side hot paths that must never
+//! dominate the PJRT executable time.
+//!
+//! `cargo bench --offline -- substrate` (custom harness; criterion is not
+//! available in the offline image — see util::bench).
+
+use nmsparse::metadata::MaskCodec;
+use nmsparse::sparsity::{nm, unstructured, Pattern};
+use nmsparse::synthlang::vocab::Vocab;
+use nmsparse::util::bench::BenchSuite;
+use nmsparse::util::json;
+use nmsparse::util::prng::Rng;
+use nmsparse::util::tensor::Tensor;
+
+fn main() {
+    let mut suite = BenchSuite::new("substrate");
+    let mut rng = Rng::new(42);
+
+    // ---- PRNG ----
+    {
+        let mut r = Rng::new(1);
+        suite.bench_with_items("prng/next_u64 x1024", Some(1024.0), move || {
+            let mut acc = 0u64;
+            for _ in 0..1024 {
+                acc ^= r.next_u64();
+            }
+            std::hint::black_box(acc);
+        });
+    }
+
+    // ---- JSON ----
+    {
+        // A realistic task-file-shaped document.
+        let mut obj = json::Json::obj();
+        let mut examples = Vec::new();
+        for i in 0..64 {
+            let mut e = json::Json::obj();
+            e.insert("context", (0..24usize).map(|x| x + i).collect::<Vec<_>>().into());
+            e.insert("label", (i % 4).into());
+            e.insert("text", format!("example number {i} with some text").into());
+            examples.push(e);
+        }
+        obj.insert("examples", json::Json::Arr(examples));
+        let text = obj.dump();
+        let bytes = text.len() as f64;
+        suite.bench_with_items("json/parse task-file (bytes)", Some(bytes), || {
+            std::hint::black_box(json::parse(&text).unwrap());
+        });
+        let parsed = json::parse(&text).unwrap();
+        suite.bench_with_items("json/dump task-file (bytes)", Some(bytes), || {
+            std::hint::black_box(parsed.dump());
+        });
+    }
+
+    // ---- tokenizer ----
+    {
+        let vocab = Vocab::synthlang();
+        let sentence = "does the red fox live in the forest ? yes . the red fox eats berries .";
+        let words = sentence.split_whitespace().count() as f64;
+        suite.bench_with_items("tokenizer/encode (words)", Some(words), || {
+            std::hint::black_box(vocab.encode(sentence).unwrap());
+        });
+        let ids = vocab.encode(sentence).unwrap();
+        suite.bench_with_items("tokenizer/decode (tokens)", Some(ids.len() as f64), || {
+            std::hint::black_box(vocab.decode(&ids));
+        });
+    }
+
+    // ---- rust-native N:M selection (weight-pruning path) ----
+    for (n, m) in [(2usize, 4usize), (8, 16), (16, 32)] {
+        let h = 1024;
+        let xs: Vec<f32> = (0..h).map(|_| rng.normal() as f32).collect();
+        suite.bench_with_items(
+            &format!("sparsity/nm_mask {n}:{m} (elts)"),
+            Some(h as f64),
+            || {
+                std::hint::black_box(nm::nm_mask(&xs, n, m));
+            },
+        );
+    }
+    {
+        let h = 1024;
+        let xs: Vec<f32> = (0..h).map(|_| rng.normal() as f32).collect();
+        suite.bench_with_items("sparsity/topk u50 (elts)", Some(h as f64), || {
+            let mut v = xs.clone();
+            unstructured::prune_row_magnitude(&mut v, 0.5);
+            std::hint::black_box(v);
+        });
+    }
+    {
+        // Whole-tensor weight pruning, the WT-baseline bind-time cost.
+        let w = Tensor::from_vec(
+            &[512, 512],
+            (0..512 * 512).map(|_| rng.normal() as f32).collect(),
+        );
+        suite.bench_with_items(
+            "sparsity/prune_weight_tensor 512x512 8:16 (elts)",
+            Some((512 * 512) as f64),
+            || {
+                let mut t = w.clone();
+                nmsparse::sparsity::weightprune::prune_weight_tensor(
+                    &mut t,
+                    Pattern::NM { n: 8, m: 16 },
+                );
+                std::hint::black_box(t);
+            },
+        );
+    }
+
+    // ---- metadata codecs ----
+    for codec in [MaskCodec::Bitmap, MaskCodec::IndexList, MaskCodec::Combinadic] {
+        let (n, m) = (8usize, 16usize);
+        let masks: Vec<Vec<bool>> = (0..256)
+            .map(|_| {
+                let idx = rng.sample_indices(m, n);
+                let mut mk = vec![false; m];
+                for i in idx {
+                    mk[i] = true;
+                }
+                mk
+            })
+            .collect();
+        let elts = (256 * m) as f64;
+        suite.bench_with_items(
+            &format!("metadata/encode {codec:?} 8:16 (elts)"),
+            Some(elts),
+            || {
+                std::hint::black_box(codec.encode_blocks(&masks, n, m));
+            },
+        );
+        let (bytes, _) = codec.encode_blocks(&masks, n, m);
+        suite.bench_with_items(
+            &format!("metadata/decode {codec:?} 8:16 (elts)"),
+            Some(elts),
+            || {
+                std::hint::black_box(codec.decode_blocks(&bytes, 256, n, m).unwrap());
+            },
+        );
+    }
+
+    // ---- quantization ----
+    {
+        let w = Tensor::from_vec(
+            &[256, 512],
+            (0..256 * 512).map(|_| rng.normal() as f32 * 0.05).collect(),
+        );
+        suite.bench_with_items(
+            "quant/fake_quant_int8 256x512 (elts)",
+            Some((256 * 512) as f64),
+            || {
+                let mut t = w.clone();
+                std::hint::black_box(nmsparse::quant::fake_quant_int8(&mut t, 8));
+            },
+        );
+    }
+
+    suite.finish();
+}

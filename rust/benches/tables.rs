@@ -1,0 +1,42 @@
+//! Table-regeneration benchmarks: wall-clock for each paper table/figure
+//! harness at a small example budget. One bench per table satisfies
+//! "a bench per paper table AND figure"; the accuracy *content* of each
+//! table is produced by `nmsparse table <id>` (same code path).
+//!
+//! Requires `make artifacts`; skips gracefully if missing.
+
+use nmsparse::tables::{generate, TableCtx};
+use nmsparse::util::bench::BenchSuite;
+use std::path::Path;
+
+fn main() {
+    if !Path::new("artifacts/io_manifest.json").exists() {
+        println!("tables: artifacts/ missing — run `make artifacts` first; skipping");
+        return;
+    }
+    let mut suite = BenchSuite::new("tables");
+    suite.target_time_s = 1.0;
+    suite.samples = 2;
+
+    // Small budget so the full sweep stays minutes, not hours. Engines and
+    // eval results are cached inside the ctx after the first sample, so the
+    // numbers reflect the warm regeneration cost.
+    let mut ctx = TableCtx::open("artifacts", "artifacts/data", 16).expect("ctx");
+    ctx.ifeval_limit = 8;
+    ctx.max_new = 8;
+    ctx.windows = 4;
+
+    for id in [
+        "table6", "fig2", "fig1", "table2", "table4", "table8", "table11",
+        "table12", "table14", "table5", "table3",
+    ] {
+        suite.bench(&format!("table/{id} (warm, 16 ex)"), || {
+            std::hint::black_box(generate(&mut ctx, id).expect(id));
+        });
+    }
+    println!(
+        "total forwards issued during bench: {}",
+        ctx.coord.forwards.get()
+    );
+    suite.finish();
+}

@@ -1,0 +1,273 @@
+//! Dynamic batching: accumulate work items until the batch is full or the
+//! oldest item has waited too long — the standard latency/throughput knob
+//! of LLM serving, applied to our fixed-shape PJRT executables.
+//!
+//! [`Batcher`] is a pure policy structure (easy to property-test); the
+//! server and eval harness wire it to an [`crate::runtime::Engine`].
+//! [`pack_rows`] turns variable-length token rows into the engine's fixed
+//! `[batch, seq]` layout, padding the tail with dummy rows.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Flush policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Max items per batch (the artifact's static batch dimension).
+    pub capacity: usize,
+    /// Max time the oldest item may wait before a partial flush.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            capacity: 16,
+            max_wait: Duration::from_millis(20),
+        }
+    }
+}
+
+/// FIFO accumulator with deadline-based partial flushing.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    queue: VecDeque<(T, Instant)>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Batcher<T> {
+        Batcher {
+            policy,
+            queue: VecDeque::new(),
+        }
+    }
+
+    pub fn push(&mut self, item: T) {
+        self.push_at(item, Instant::now())
+    }
+
+    pub fn push_at(&mut self, item: T, now: Instant) {
+        self.queue.push_back((item, now));
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Should a batch be dispatched now?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.policy.capacity {
+            return true;
+        }
+        match self.queue.front() {
+            Some((_, t0)) => now.duration_since(*t0) >= self.policy.max_wait,
+            None => false,
+        }
+    }
+
+    /// When will the oldest item's deadline expire? (for timed waits)
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queue.front().map(|(_, t0)| *t0 + self.policy.max_wait)
+    }
+
+    /// Remove up to `capacity` items in FIFO order.
+    pub fn drain_batch(&mut self) -> Vec<T> {
+        let n = self.queue.len().min(self.policy.capacity);
+        self.queue.drain(..n).map(|(t, _)| t).collect()
+    }
+}
+
+/// One packed fixed-shape batch.
+#[derive(Clone, Debug)]
+pub struct PackedBatch {
+    /// `[batch * seq]` i32, padded with 0 (`<pad>`).
+    pub tokens: Vec<i32>,
+    /// `[batch]` valid lengths (dummy rows get 1).
+    pub lens: Vec<i32>,
+    /// How many leading rows are real.
+    pub rows: usize,
+}
+
+/// Pack variable-length rows into `[batch, seq]` batches. Rows longer than
+/// `seq` are left-truncated (keep the most recent context) — mirrors
+/// LM-eval's context cropping.
+pub fn pack_rows(rows: &[Vec<u32>], batch: usize, seq: usize) -> Vec<PackedBatch> {
+    let mut out = Vec::new();
+    for chunk in rows.chunks(batch.max(1)) {
+        let mut tokens = vec![0i32; batch * seq];
+        let mut lens = vec![1i32; batch];
+        for (r, row) in chunk.iter().enumerate() {
+            let cropped: &[u32] = if row.len() > seq {
+                &row[row.len() - seq..]
+            } else {
+                row
+            };
+            for (t, tok) in cropped.iter().enumerate() {
+                tokens[r * seq + t] = *tok as i32;
+            }
+            lens[r] = cropped.len().max(1) as i32;
+        }
+        out.push(PackedBatch {
+            tokens,
+            lens,
+            rows: chunk.len(),
+        });
+    }
+    out
+}
+
+/// How much of the packed compute is useful — diagnostics for the batching
+/// policy (padding waste).
+pub fn packing_efficiency(batches: &[PackedBatch], batch: usize) -> f64 {
+    if batches.is_empty() {
+        return 1.0;
+    }
+    let used: usize = batches.iter().map(|b| b.rows).sum();
+    used as f64 / (batches.len() * batch) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::miniprop::{forall_simple, Config};
+    use crate::util::prng::Rng;
+
+    fn policy(cap: usize, ms: u64) -> BatchPolicy {
+        BatchPolicy {
+            capacity: cap,
+            max_wait: Duration::from_millis(ms),
+        }
+    }
+
+    #[test]
+    fn flushes_when_full() {
+        let mut b = Batcher::new(policy(4, 1000));
+        let now = Instant::now();
+        for i in 0..3 {
+            b.push_at(i, now);
+        }
+        assert!(!b.ready(now));
+        b.push_at(3, now);
+        assert!(b.ready(now));
+        assert_eq!(b.drain_batch(), vec![0, 1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b = Batcher::new(policy(100, 10));
+        let t0 = Instant::now();
+        b.push_at(42, t0);
+        assert!(!b.ready(t0));
+        assert!(b.ready(t0 + Duration::from_millis(11)));
+        assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(10)));
+    }
+
+    #[test]
+    fn drain_respects_capacity_and_order() {
+        let mut b = Batcher::new(policy(3, 10));
+        let now = Instant::now();
+        for i in 0..8 {
+            b.push_at(i, now);
+        }
+        assert_eq!(b.drain_batch(), vec![0, 1, 2]);
+        assert_eq!(b.drain_batch(), vec![3, 4, 5]);
+        assert_eq!(b.drain_batch(), vec![6, 7]);
+    }
+
+    #[test]
+    fn prop_all_items_drain_in_fifo_order() {
+        let cfg = Config::default();
+        forall_simple(
+            &cfg,
+            |rng: &mut Rng| {
+                let cap = rng.range(1, 9);
+                let n = rng.range(0, 50);
+                (cap, (0..n).collect::<Vec<usize>>())
+            },
+            |(cap, items)| {
+                let mut b = Batcher::new(policy(*cap, 0));
+                let now = Instant::now();
+                for &i in items {
+                    b.push_at(i, now);
+                }
+                let mut got = Vec::new();
+                while !b.is_empty() {
+                    let batch = b.drain_batch();
+                    if batch.len() > *cap {
+                        return false;
+                    }
+                    got.extend(batch);
+                }
+                got == *items
+            },
+        );
+    }
+
+    #[test]
+    fn pack_rows_shapes_and_crop() {
+        let rows = vec![
+            vec![5u32, 6, 7],
+            vec![1; 20], // longer than seq: left-truncated
+            vec![9],
+        ];
+        let packed = pack_rows(&rows, 2, 8);
+        assert_eq!(packed.len(), 2);
+        assert_eq!(packed[0].rows, 2);
+        assert_eq!(packed[1].rows, 1);
+        assert_eq!(packed[0].tokens.len(), 16);
+        assert_eq!(packed[0].lens, vec![3, 8]);
+        assert_eq!(packed[1].lens, vec![1, 1]); // dummy row len 1
+        assert_eq!(&packed[0].tokens[0..3], &[5, 6, 7]);
+    }
+
+    #[test]
+    fn prop_packing_preserves_tokens() {
+        let cfg = Config::default();
+        forall_simple(
+            &cfg,
+            |rng: &mut Rng| {
+                let n = rng.range(1, 40);
+                let rows: Vec<Vec<u32>> = (0..n)
+                    .map(|_| {
+                        let len = rng.range(1, 12);
+                        (0..len).map(|_| rng.below(100) as u32).collect()
+                    })
+                    .collect();
+                rows
+            },
+            |rows| {
+                let (batch, seq) = (4usize, 16usize);
+                let packed = pack_rows(rows, batch, seq);
+                let mut idx = 0;
+                for pb in &packed {
+                    for r in 0..pb.rows {
+                        let len = pb.lens[r] as usize;
+                        let got: Vec<u32> = pb.tokens[r * seq..r * seq + len]
+                            .iter()
+                            .map(|t| *t as u32)
+                            .collect();
+                        if got != rows[idx] {
+                            return false;
+                        }
+                        idx += 1;
+                    }
+                }
+                idx == rows.len()
+            },
+        );
+    }
+
+    #[test]
+    fn efficiency_metric() {
+        let rows = vec![vec![1u32]; 6];
+        let packed = pack_rows(&rows, 4, 8);
+        // 6 rows over 2 batches of 4 = 0.75.
+        assert!((packing_efficiency(&packed, 4) - 0.75).abs() < 1e-12);
+    }
+}

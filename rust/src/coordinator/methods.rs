@@ -1,0 +1,438 @@
+//! Method configurations: the paper's (criterion × transform) grid mapped
+//! to runtime inputs of the AOT variants.
+//!
+//! A [`MethodConfig`] names a variant artifact (pattern), the flag settings,
+//! which calibration families feed the per-site vectors, which sites are
+//! exempt from sparsification, and an optional *weight transform* (WT
+//! pruning / int8 quantization run through the dense artifact). The
+//! [`MethodConfig::resolver`] closes over the checkpoint + methodparams
+//! stores and satisfies the runtime's input manifest.
+
+use crate::quant;
+use crate::runtime::InputSpec;
+use crate::sparsity::{weightprune, Pattern};
+use crate::util::tensor::{Tensor, TensorStore};
+use anyhow::{bail, Context, Result};
+
+/// Static transform applied to the checkpoint before binding.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WeightTransform {
+    None,
+    /// Magnitude weight pruning (the paper's WT rows).
+    Prune(Pattern),
+    /// Per-channel symmetric fake-quantization (Table 14 comparator).
+    Quant(u32),
+}
+
+/// A fully-specified evaluation configuration.
+#[derive(Clone, Debug)]
+pub struct MethodConfig {
+    /// Display name, e.g. "S-PTS", "CLACT+VAR".
+    pub id: String,
+    /// Artifact key, e.g. "dense", "8_16", "rsparse64_8_16".
+    pub variant_key: String,
+    pub shift_mode: f32,
+    pub use_clact: f32,
+    pub use_var: f32,
+    /// Method-param family for eta, e.g. "spts_eta" or "lpts_eta.8_16".
+    pub eta_family: Option<String>,
+    /// Family for the channel score scale, e.g. "amber_cscale".
+    pub cscale_family: Option<String>,
+    /// Family for the learnable diagonal scale, e.g. "ls_scale.8_16".
+    pub lsw_family: Option<String>,
+    /// Site names (q/k/v/o/gate/up/down) with sparsification disabled.
+    pub disabled_sites: Vec<String>,
+    /// R-Sparse rank when the variant is an rsparse artifact.
+    pub rank: Option<usize>,
+    pub weight_transform: WeightTransform,
+}
+
+impl MethodConfig {
+    /// Plain magnitude activation pruning for a pattern.
+    pub fn act(pattern: Pattern) -> MethodConfig {
+        MethodConfig {
+            id: "ACT".into(),
+            variant_key: pattern.artifact_key(),
+            shift_mode: 0.0,
+            use_clact: 0.0,
+            use_var: 0.0,
+            eta_family: None,
+            cscale_family: None,
+            lsw_family: None,
+            disabled_sites: vec![],
+            rank: None,
+            weight_transform: WeightTransform::None,
+        }
+    }
+
+    /// The dense (ORIG) baseline.
+    pub fn dense() -> MethodConfig {
+        let mut m = MethodConfig::act(Pattern::Dense);
+        m.id = "ORIG".into();
+        m
+    }
+
+    /// Weight pruning baseline: dense artifact + pruned checkpoint.
+    pub fn wt(pattern: Pattern) -> MethodConfig {
+        let mut m = MethodConfig::dense();
+        m.id = "WT".into();
+        m.weight_transform = WeightTransform::Prune(pattern);
+        m
+    }
+
+    /// Int8 quantization comparator (Table 14).
+    pub fn quant8() -> MethodConfig {
+        let mut m = MethodConfig::dense();
+        m.id = "INT8".into();
+        m.weight_transform = WeightTransform::Quant(8);
+        m
+    }
+
+    /// Look up a named method for a pattern. Names follow the paper's
+    /// abbreviations (case-insensitive): act, wt, clact, amber, d-pts,
+    /// s-pts, l-pts, var, ls+l-pts, r-sparse(64|128), combos with '+'.
+    pub fn by_name(name: &str, pattern: Pattern) -> Result<MethodConfig> {
+        let pat_key = pattern.artifact_key();
+        let canon = name.to_ascii_lowercase().replace(['_', ' '], "-");
+        let mut m = MethodConfig::act(pattern);
+        m.id = name.to_string();
+        match canon.as_str() {
+            "orig" | "dense" => return Ok(MethodConfig::dense()),
+            "act" => {}
+            "wt" => return Ok(MethodConfig::wt(pattern)),
+            "int8" | "quant8" => return Ok(MethodConfig::quant8()),
+            "clact" => m.use_clact = 1.0,
+            "amber" | "amber-pruner" => m.cscale_family = Some("amber_cscale".into()),
+            "d-pts" | "dpts" => m.shift_mode = 1.0,
+            "s-pts" | "spts" => {
+                m.shift_mode = 2.0;
+                m.eta_family = Some("spts_eta".into());
+            }
+            "l-pts" | "lpts" => {
+                m.shift_mode = 2.0;
+                m.eta_family = Some(format!("lpts_eta.{pat_key}"));
+            }
+            "var" => m.use_var = 1.0,
+            "ls+l-pts" | "ls-l-pts" => {
+                m.shift_mode = 2.0;
+                m.eta_family = Some(format!("ls_eta.{pat_key}"));
+                m.lsw_family = Some(format!("ls_scale.{pat_key}"));
+            }
+            "ls+l-pts+var" => {
+                m.shift_mode = 2.0;
+                m.eta_family = Some(format!("ls_eta.{pat_key}"));
+                m.lsw_family = Some(format!("ls_scale.{pat_key}"));
+                m.use_var = 1.0;
+            }
+            "l-pts+var" | "lpts+var" => {
+                m.shift_mode = 2.0;
+                m.eta_family = Some(format!("lpts_eta.{pat_key}"));
+                m.use_var = 1.0;
+            }
+            "clact+pts" | "clact+s-pts" => {
+                m.use_clact = 1.0;
+                m.shift_mode = 2.0;
+                m.eta_family = Some("spts_eta".into());
+            }
+            "clact+var" => {
+                m.use_clact = 1.0;
+                m.use_var = 1.0;
+            }
+            "amber+pts" | "amber-pruner+pts" => {
+                m.cscale_family = Some("amber_cscale".into());
+                m.shift_mode = 2.0;
+                m.eta_family = Some("spts_eta".into());
+            }
+            "amber+var" | "amber-pruner+var" => {
+                m.cscale_family = Some("amber_cscale".into());
+                m.use_var = 1.0;
+            }
+            "r-sparse(64)" | "rsparse64" | "r-sparse-64" => {
+                m.variant_key = format!("rsparse64_{pat_key}");
+                m.rank = Some(64);
+            }
+            "r-sparse(128)" | "rsparse128" | "r-sparse-128" => {
+                m.variant_key = format!("rsparse128_{pat_key}");
+                m.rank = Some(128);
+            }
+            other => bail!("unknown method '{other}'"),
+        }
+        Ok(m)
+    }
+
+    /// Disable sparsification on the given sites (e.g. Qwen-style q/k/v
+    /// exemption, or Table 5 layer subsets).
+    pub fn with_disabled_sites(mut self, sites: &[&str]) -> MethodConfig {
+        self.disabled_sites = sites.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    /// Cache key distinguishing bound engines.
+    pub fn engine_key(&self) -> String {
+        format!(
+            "{}|{}|{}|{}|{}|{:?}|{:?}|{:?}|{:?}|{:?}",
+            self.variant_key,
+            self.shift_mode,
+            self.use_clact,
+            self.use_var,
+            self.disabled_sites.join(","),
+            self.eta_family,
+            self.cscale_family,
+            self.lsw_family,
+            self.rank,
+            self.weight_transform,
+        )
+    }
+
+    /// Checkpoint after this config's weight transform.
+    pub fn transformed_weights(&self, weights: &TensorStore) -> Result<TensorStore> {
+        let mut w = weights.clone();
+        match &self.weight_transform {
+            WeightTransform::None => {}
+            WeightTransform::Prune(p) => {
+                weightprune::prune_weights(&mut w, *p)?;
+            }
+            WeightTransform::Quant(bits) => {
+                quant::quantize_store(&mut w, *bits)?;
+            }
+        }
+        Ok(w)
+    }
+
+    /// Resolve one manifest input name to its tensor value.
+    pub fn resolve(
+        &self,
+        spec: &InputSpec,
+        weights: &TensorStore,
+        methodparams: &TensorStore,
+    ) -> Result<Tensor> {
+        let name = spec.name.as_str();
+        if let Some(wname) = name.strip_prefix("w.") {
+            return weights.get(wname).cloned();
+        }
+        if let Some(rest) = name.strip_prefix("m.") {
+            // rest examples: "eta.l0.q", "enable.l3.down", "flag.use_var",
+            // "u.l1.gate" (rsparse).
+            let parts: Vec<&str> = rest.split('.').collect();
+            match parts.as_slice() {
+                ["flag", "shift_mode"] => return Ok(Tensor::scalar(self.shift_mode)),
+                ["flag", "use_clact"] => return Ok(Tensor::scalar(self.use_clact)),
+                ["flag", "use_var"] => return Ok(Tensor::scalar(self.use_var)),
+                ["enable", _l, site] => {
+                    let on = !self.disabled_sites.iter().any(|d| d == site);
+                    return Ok(Tensor::scalar(if on { 1.0 } else { 0.0 }));
+                }
+                ["eta", l, s] => {
+                    return family_or(
+                        &self.eta_family,
+                        methodparams,
+                        l,
+                        s,
+                        || Tensor::zeros(&spec.shape),
+                    );
+                }
+                ["cscale", l, s] => {
+                    return family_or(&self.cscale_family, methodparams, l, s, || {
+                        ones(&spec.shape)
+                    });
+                }
+                ["lsw", l, s] => {
+                    return family_or(&self.lsw_family, methodparams, l, s, || {
+                        ones(&spec.shape)
+                    });
+                }
+                ["u", l, s] => {
+                    let r = self.rank.context("rsparse input without rank")?;
+                    return methodparams
+                        .get(&format!("rsparse{r}_u.{l}.{s}"))
+                        .cloned();
+                }
+                ["v", l, s] => {
+                    let r = self.rank.context("rsparse input without rank")?;
+                    return methodparams
+                        .get(&format!("rsparse{r}_v.{l}.{s}"))
+                        .cloned();
+                }
+                _ => bail!("unrecognized method input '{name}'"),
+            }
+        }
+        bail!("unrecognized input '{name}'")
+    }
+
+    /// Build a boxed resolver closure for `Variant::bind`.
+    pub fn resolver<'a>(
+        &'a self,
+        weights: &'a TensorStore,
+        methodparams: &'a TensorStore,
+    ) -> impl Fn(&InputSpec) -> Result<Tensor> + 'a {
+        move |spec| self.resolve(spec, weights, methodparams)
+    }
+}
+
+fn ones(shape: &[usize]) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    t.data.iter_mut().for_each(|x| *x = 1.0);
+    t
+}
+
+fn family_or(
+    family: &Option<String>,
+    methodparams: &TensorStore,
+    l: &str,
+    s: &str,
+    default: impl FnOnce() -> Tensor,
+) -> Result<Tensor> {
+    match family {
+        None => Ok(default()),
+        Some(f) => methodparams
+            .get(&format!("{f}.{l}.{s}"))
+            .cloned()
+            .with_context(|| format!("method family '{f}' missing entry for {l}.{s}")),
+    }
+}
+
+/// The method names evaluated in Table 2 (per pattern).
+pub fn table2_methods() -> Vec<&'static str> {
+    vec![
+        "ACT", "CLACT", "Amber-Pruner", "VAR", "D-PTS", "S-PTS", "L-PTS",
+        "R-Sparse(64)", "R-Sparse(128)",
+    ]
+}
+
+/// The combination methods of Table 8.
+pub fn table8_methods() -> Vec<&'static str> {
+    vec![
+        "CLACT+PTS", "CLACT+VAR", "Amber-Pruner+PTS", "Amber-Pruner+VAR", "L-PTS+VAR",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p816() -> Pattern {
+        Pattern::NM { n: 8, m: 16 }
+    }
+
+    #[test]
+    fn catalog_parses_all_table_methods() {
+        for name in table2_methods().into_iter().chain(table8_methods()) {
+            let m = MethodConfig::by_name(name, p816()).unwrap();
+            assert_eq!(m.id, name);
+        }
+        assert!(MethodConfig::by_name("bogus", p816()).is_err());
+    }
+
+    #[test]
+    fn spts_sets_eta_family_and_mode() {
+        let m = MethodConfig::by_name("S-PTS", p816()).unwrap();
+        assert_eq!(m.shift_mode, 2.0);
+        assert_eq!(m.eta_family.as_deref(), Some("spts_eta"));
+        assert_eq!(m.variant_key, "8_16");
+    }
+
+    #[test]
+    fn lpts_family_is_pattern_specific() {
+        let m = MethodConfig::by_name("L-PTS", Pattern::NM { n: 2, m: 4 }).unwrap();
+        assert_eq!(m.eta_family.as_deref(), Some("lpts_eta.2_4"));
+    }
+
+    #[test]
+    fn rsparse_variant_key() {
+        let m = MethodConfig::by_name("R-Sparse(64)", p816()).unwrap();
+        assert_eq!(m.variant_key, "rsparse64_8_16");
+        assert_eq!(m.rank, Some(64));
+    }
+
+    #[test]
+    fn resolve_flags_and_enables() {
+        let m = MethodConfig::by_name("VAR", p816())
+            .unwrap()
+            .with_disabled_sites(&["q", "k", "v"]);
+        let w = TensorStore::new();
+        let mp = TensorStore::new();
+        let flag = InputSpec {
+            name: "m.flag.use_var".into(),
+            shape: vec![],
+            dtype: "f32".into(),
+        };
+        assert_eq!(m.resolve(&flag, &w, &mp).unwrap().data, vec![1.0]);
+        let en_q = InputSpec {
+            name: "m.enable.l2.q".into(),
+            shape: vec![],
+            dtype: "f32".into(),
+        };
+        assert_eq!(m.resolve(&en_q, &w, &mp).unwrap().data, vec![0.0]);
+        let en_gate = InputSpec {
+            name: "m.enable.l2.gate".into(),
+            shape: vec![],
+            dtype: "f32".into(),
+        };
+        assert_eq!(m.resolve(&en_gate, &w, &mp).unwrap().data, vec![1.0]);
+    }
+
+    #[test]
+    fn resolve_defaults_and_families() {
+        let mut mp = TensorStore::new();
+        mp.insert("spts_eta.l0.q", Tensor::from_vec(&[4], vec![1., 2., 3., 4.]));
+        let w = TensorStore::new();
+        let spec = InputSpec {
+            name: "m.eta.l0.q".into(),
+            shape: vec![4],
+            dtype: "f32".into(),
+        };
+        // ACT: zeros default.
+        let act = MethodConfig::by_name("ACT", p816()).unwrap();
+        assert_eq!(act.resolve(&spec, &w, &mp).unwrap().data, vec![0.0; 4]);
+        // S-PTS: from family.
+        let spts = MethodConfig::by_name("S-PTS", p816()).unwrap();
+        assert_eq!(
+            spts.resolve(&spec, &w, &mp).unwrap().data,
+            vec![1., 2., 3., 4.]
+        );
+        // Missing family entry is an error.
+        let spec_missing = InputSpec {
+            name: "m.eta.l1.q".into(),
+            shape: vec![4],
+            dtype: "f32".into(),
+        };
+        assert!(spts.resolve(&spec_missing, &w, &mp).is_err());
+        // cscale default is ones.
+        let cspec = InputSpec {
+            name: "m.cscale.l0.q".into(),
+            shape: vec![4],
+            dtype: "f32".into(),
+        };
+        assert_eq!(act.resolve(&cspec, &w, &mp).unwrap().data, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn weight_transforms_apply() {
+        let mut w = TensorStore::new();
+        w.insert(
+            "layers.0.q.w",
+            Tensor::from_vec(&[4, 8], (0..32).map(|i| i as f32 - 16.0).collect()),
+        );
+        let wt = MethodConfig::wt(Pattern::NM { n: 2, m: 4 });
+        let pruned = wt.transformed_weights(&w).unwrap();
+        assert!((pruned.get("layers.0.q.w").unwrap().zero_fraction() - 0.5).abs() < 0.1);
+        let q = MethodConfig::quant8();
+        let quanted = q.transformed_weights(&w).unwrap();
+        assert!(quanted.get("layers.0.q.w").unwrap().max_abs_diff(w.get("layers.0.q.w").unwrap()) > 0.0);
+        // None leaves weights untouched.
+        let act = MethodConfig::dense();
+        assert_eq!(
+            act.transformed_weights(&w).unwrap().get("layers.0.q.w").unwrap(),
+            w.get("layers.0.q.w").unwrap()
+        );
+    }
+
+    #[test]
+    fn engine_keys_distinguish_configs() {
+        let a = MethodConfig::by_name("ACT", p816()).unwrap();
+        let b = MethodConfig::by_name("VAR", p816()).unwrap();
+        let c = MethodConfig::by_name("ACT", Pattern::NM { n: 2, m: 4 }).unwrap();
+        assert_ne!(a.engine_key(), b.engine_key());
+        assert_ne!(a.engine_key(), c.engine_key());
+    }
+}

@@ -1,0 +1,207 @@
+//! L3 coordinator: the serving/evaluation brain on top of the PJRT runtime.
+//!
+//! - [`methods`]: the paper's (criterion × transform) grid as runtime
+//!   configurations;
+//! - [`pool`]: compiled-variant + bound-engine caches;
+//! - [`batcher`]: dynamic batching and fixed-shape packing;
+//! - [`scheduler`]: continuous batching of mixed score/generate traffic;
+//! - [`Coordinator`]: the high-level API the eval harness, tables, server
+//!   and examples use — score rows, measure perplexity, greedy-generate.
+
+pub mod batcher;
+pub mod methods;
+pub mod pool;
+pub mod scheduler;
+
+use crate::coordinator::batcher::pack_rows;
+use crate::coordinator::methods::MethodConfig;
+use crate::coordinator::pool::EnginePool;
+use anyhow::Result;
+use std::path::Path;
+
+
+/// High-level entry point owning the engine pool.
+pub struct Coordinator {
+    pub pool: EnginePool,
+    /// Running counts for throughput reporting.
+    pub forwards: std::cell::Cell<usize>,
+    pub rows_scored: std::cell::Cell<usize>,
+    pub tokens_generated: std::cell::Cell<usize>,
+}
+
+impl Coordinator {
+    /// Open the artifacts directory (`make artifacts` output).
+    pub fn open(artifacts_dir: &Path) -> Result<Coordinator> {
+        Ok(Coordinator {
+            pool: EnginePool::open(artifacts_dir)?,
+            forwards: std::cell::Cell::new(0),
+            rows_scored: std::cell::Cell::new(0),
+            tokens_generated: std::cell::Cell::new(0),
+        })
+    }
+
+    fn bump(cell: &std::cell::Cell<usize>, by: usize) {
+        cell.set(cell.get() + by);
+    }
+
+    /// Sum of continuation logprobs for each `(row, span)`:
+    /// `sum_{t in [start,end)} log p(row[t] | row[:t])`.
+    ///
+    /// Rows longer than the artifact's sequence length are left-cropped
+    /// (keeping the most recent context) with the span re-based.
+    pub fn score_rows(
+        &self,
+        cfg: &MethodConfig,
+        rows: &[(Vec<u32>, (usize, usize))],
+    ) -> Result<Vec<f64>> {
+        let engine = self.pool.engine(cfg)?;
+        let dims = engine.dims().clone();
+        let (batch, seq) = (dims.batch, dims.seq);
+
+        // Crop + re-base spans.
+        let mut cropped: Vec<Vec<u32>> = Vec::with_capacity(rows.len());
+        let mut spans: Vec<(usize, usize)> = Vec::with_capacity(rows.len());
+        for (row, (s, e)) in rows {
+            anyhow::ensure!(*s >= 1, "span must start at >= 1 (token 0 has no context)");
+            anyhow::ensure!(*e <= row.len() && s < e, "bad span ({s},{e}) for row len {}", row.len());
+            if row.len() > seq {
+                let cut = row.len() - seq;
+                anyhow::ensure!(
+                    *s > cut,
+                    "row of {} tokens cannot be scored: continuation span starts \
+                     inside the cropped prefix (seq={seq})",
+                    row.len()
+                );
+                cropped.push(row[cut..].to_vec());
+                spans.push((*s - cut, *e - cut));
+            } else {
+                cropped.push(row.clone());
+                spans.push((*s, *e));
+            }
+        }
+
+        let packed = pack_rows(&cropped, batch, seq);
+        let mut scores = Vec::with_capacity(rows.len());
+        let mut idx = 0;
+        for pb in &packed {
+            let out = engine.run(&self.pool.rt, &pb.tokens, &pb.lens)?;
+            Self::bump(&self.forwards, 1);
+            for r in 0..pb.rows {
+                let (s, e) = spans[idx];
+                // log p(row[t]) lives at tgt_lp[t-1].
+                let base = r * seq;
+                let mut total = 0.0f64;
+                for t in s..e {
+                    total += out.tgt_logprobs[base + t - 1] as f64;
+                }
+                scores.push(total);
+                idx += 1;
+            }
+        }
+        Self::bump(&self.rows_scored, rows.len());
+        Ok(scores)
+    }
+
+    /// Perplexity over a token stream, using non-overlapping windows of the
+    /// artifact's sequence length.
+    pub fn perplexity(
+        &self,
+        cfg: &MethodConfig,
+        stream: &[u32],
+        max_windows: usize,
+    ) -> Result<f64> {
+        let engine = self.pool.engine(cfg)?;
+        let dims = engine.dims().clone();
+        let (batch, seq) = (dims.batch, dims.seq);
+        let n_windows = ((stream.len() / seq).max(1)).min(max_windows);
+        let rows: Vec<Vec<u32>> = (0..n_windows)
+            .map(|i| stream[i * seq..(i + 1) * seq].to_vec())
+            .collect();
+        let packed = pack_rows(&rows, batch, seq);
+        let mut nll = 0.0f64;
+        let mut count = 0usize;
+        for pb in &packed {
+            let out = engine.run(&self.pool.rt, &pb.tokens, &pb.lens)?;
+            Self::bump(&self.forwards, 1);
+            for r in 0..pb.rows {
+                let len = pb.lens[r] as usize;
+                for t in 0..len.saturating_sub(1) {
+                    nll -= out.tgt_logprobs[r * seq + t] as f64;
+                    count += 1;
+                }
+            }
+        }
+        anyhow::ensure!(count > 0, "no tokens scored for perplexity");
+        Ok((nll / count as f64).exp())
+    }
+
+    /// Greedy generation: extend each prompt until a stop token or
+    /// `max_new` tokens. Prompts are processed in fixed-size groups; each
+    /// step runs one full-context forward (no KV cache — the model is small
+    /// and the artifact shape is static).
+    pub fn generate(
+        &self,
+        cfg: &MethodConfig,
+        prompts: &[Vec<u32>],
+        max_new: usize,
+        stop: &[u32],
+    ) -> Result<Vec<Vec<u32>>> {
+        let engine = self.pool.engine(cfg)?;
+        let dims = engine.dims().clone();
+        let (batch, seq, vocab) = (dims.batch, dims.seq, dims.vocab);
+        let mut outputs: Vec<Vec<u32>> = vec![Vec::new(); prompts.len()];
+
+        for group_start in (0..prompts.len()).step_by(batch) {
+            let group: Vec<usize> =
+                (group_start..(group_start + batch).min(prompts.len())).collect();
+            let mut rows: Vec<Vec<u32>> =
+                group.iter().map(|&i| prompts[i].clone()).collect();
+            let mut done: Vec<bool> = vec![false; group.len()];
+            for _ in 0..max_new {
+                if done.iter().all(|d| *d) {
+                    break;
+                }
+                let packed = pack_rows(&rows, batch, seq);
+                debug_assert_eq!(packed.len(), 1);
+                let pb = &packed[0];
+                let out = engine.run(&self.pool.rt, &pb.tokens, &pb.lens)?;
+                Self::bump(&self.forwards, 1);
+                for (r, gi) in group.iter().enumerate() {
+                    if done[r] {
+                        continue;
+                    }
+                    let logits = &out.last_logits[r * vocab..(r + 1) * vocab];
+                    let tok = argmax(logits) as u32;
+                    rows[r].push(tok);
+                    outputs[*gi].push(tok);
+                    Self::bump(&self.tokens_generated, 1);
+                    if stop.contains(&tok) || rows[r].len() >= seq {
+                        done[r] = true;
+                    }
+                }
+            }
+        }
+        Ok(outputs)
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, x) in xs.iter().enumerate() {
+        if *x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_first_on_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+}

@@ -1,0 +1,95 @@
+//! Engine pool: compiled-variant and bound-engine caches.
+//!
+//! Loading + PJRT-compiling an HLO variant takes seconds; binding uploads
+//! ~11 MB of weights. Both are cached so table harnesses that sweep dozens
+//! of (pattern × method) cells pay each cost once. Single-threaded by
+//! design: PJRT wrapper types hold raw pointers (not `Send`), and XLA
+//! already parallelizes execution internally.
+
+use crate::coordinator::methods::MethodConfig;
+use crate::runtime::{Engine, Manifest, Runtime, Variant};
+use crate::util::tensor::TensorStore;
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::sync::Arc;
+
+/// Owns the runtime, the artifact manifest, the checkpoint and the
+/// calibration products; hands out bound engines on demand.
+pub struct EnginePool {
+    pub rt: Runtime,
+    pub manifest: Manifest,
+    pub weights: TensorStore,
+    pub methodparams: TensorStore,
+    variants: RefCell<HashMap<String, Arc<Variant>>>,
+    engines: RefCell<HashMap<String, Rc<Engine>>>,
+    /// Compile + bind wall-times, for the perf report.
+    pub load_log: RefCell<Vec<(String, f64)>>,
+}
+
+impl EnginePool {
+    /// Open an artifacts directory produced by `make artifacts`.
+    pub fn open(artifacts_dir: &Path) -> Result<EnginePool> {
+        let rt = Runtime::cpu()?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        let weights = TensorStore::load(&artifacts_dir.join("ckpt"))
+            .context("loading checkpoint (ckpt.bin/.json)")?;
+        let methodparams = TensorStore::load(&artifacts_dir.join("methodparams"))
+            .context("loading methodparams")?;
+        Ok(EnginePool {
+            rt,
+            manifest,
+            weights,
+            methodparams,
+            variants: RefCell::new(HashMap::new()),
+            engines: RefCell::new(HashMap::new()),
+            load_log: RefCell::new(Vec::new()),
+        })
+    }
+
+    /// Get (compile-caching) a variant executable.
+    pub fn variant(&self, key: &str) -> Result<Arc<Variant>> {
+        if let Some(v) = self.variants.borrow().get(key) {
+            return Ok(Arc::clone(v));
+        }
+        let t0 = std::time::Instant::now();
+        let v = self.rt.load_variant(&self.manifest, key)?;
+        self.load_log
+            .borrow_mut()
+            .push((format!("compile:{key}"), t0.elapsed().as_secs_f64()));
+        self.variants
+            .borrow_mut()
+            .insert(key.to_string(), Arc::clone(&v));
+        Ok(v)
+    }
+
+    /// Get (bind-caching) an engine for a method configuration.
+    pub fn engine(&self, cfg: &MethodConfig) -> Result<Rc<Engine>> {
+        let ekey = cfg.engine_key();
+        if let Some(e) = self.engines.borrow().get(&ekey) {
+            return Ok(Rc::clone(e));
+        }
+        let variant = self.variant(&cfg.variant_key)?;
+        let t0 = std::time::Instant::now();
+        let weights = cfg.transformed_weights(&self.weights)?;
+        let resolver = cfg.resolver(&weights, &self.methodparams);
+        let engine = Rc::new(variant.bind(&self.rt, &resolver)?);
+        self.load_log
+            .borrow_mut()
+            .push((format!("bind:{}", cfg.id), t0.elapsed().as_secs_f64()));
+        self.engines.borrow_mut().insert(ekey, Rc::clone(&engine));
+        Ok(engine)
+    }
+
+    /// Number of distinct engines bound so far.
+    pub fn engines_bound(&self) -> usize {
+        self.engines.borrow().len()
+    }
+
+    /// Drop cached engines (frees device buffers) but keep compiled variants.
+    pub fn evict_engines(&self) {
+        self.engines.borrow_mut().clear();
+    }
+}

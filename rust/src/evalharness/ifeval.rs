@@ -1,0 +1,144 @@
+//! IFEval-analog scoring: greedy decode + verifiable-constraint checking.
+//!
+//! Prompt-level **strict** accuracy: the generated answer satisfies the
+//! constraint exactly as stated (exact repeat sequence / exact word count
+//! AND factually valid answer). Prompt-level **loose** accuracy: the
+//! constraint's countable property holds, ignoring content validity and
+//! extra scaffolding — mirroring IFEval's strict/loose split (Table 3's
+//! PS/PL columns).
+
+use crate::coordinator::methods::MethodConfig;
+use crate::coordinator::Coordinator;
+use crate::synthlang::tasks::{Constraint, IfevalSet};
+use crate::synthlang::vocab::{Vocab, EOS};
+use anyhow::Result;
+
+/// Result of an IFEval run under one configuration.
+#[derive(Clone, Debug)]
+pub struct IfevalResult {
+    pub method: String,
+    pub strict: f64,
+    pub loose: f64,
+    pub n: usize,
+}
+
+/// The answer = generated tokens up to (excluding) the first period/EOS.
+pub fn answer_tokens(generated: &[u32], period: u32) -> &[u32] {
+    let end = generated
+        .iter()
+        .position(|t| *t == period || *t == EOS)
+        .unwrap_or(generated.len());
+    &generated[..end]
+}
+
+/// Check one constraint; returns (strict, loose).
+pub fn check(constraint: &Constraint, answer: &[u32]) -> (bool, bool) {
+    match constraint {
+        Constraint::RepeatWord { word, count } => {
+            let occurrences = answer.iter().filter(|t| **t == *word).count();
+            let loose = occurrences == *count;
+            let strict = loose && answer.len() == *count;
+            (strict, loose)
+        }
+        Constraint::ExactWords { count, valid_answers } => {
+            let loose = answer.len() == *count;
+            let strict = loose && valid_answers.iter().any(|v| v.as_slice() == answer);
+            (strict, loose)
+        }
+    }
+}
+
+/// Run the IFEval analog: greedy-generate for each prompt, stop at the
+/// first period/EOS or `max_new` tokens, then check constraints.
+pub fn eval_ifeval(
+    coord: &Coordinator,
+    cfg: &MethodConfig,
+    set: &IfevalSet,
+    vocab: &Vocab,
+    limit: usize,
+    max_new: usize,
+) -> Result<IfevalResult> {
+    let period = vocab.id(".")?;
+    let examples = &set.examples[..set.examples.len().min(limit.max(1))];
+    let prompts: Vec<Vec<u32>> = examples.iter().map(|e| e.prompt.clone()).collect();
+    let outputs = coord.generate(cfg, &prompts, max_new, &[period, EOS])?;
+    let mut strict = 0usize;
+    let mut loose = 0usize;
+    for (ex, out) in examples.iter().zip(&outputs) {
+        let ans = answer_tokens(out, period);
+        let (s, l) = check(&ex.constraint, ans);
+        strict += s as usize;
+        loose += l as usize;
+    }
+    Ok(IfevalResult {
+        method: cfg.id.clone(),
+        strict: strict as f64 / examples.len() as f64,
+        loose: loose as f64 / examples.len() as f64,
+        n: examples.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn answer_stops_at_period() {
+        // period id fake = 9.
+        assert_eq!(answer_tokens(&[5, 5, 9, 7], 9), &[5, 5]);
+        assert_eq!(answer_tokens(&[5, 5], 9), &[5, 5]);
+        assert_eq!(answer_tokens(&[EOS, 5], 9), &[] as &[u32]);
+    }
+
+    #[test]
+    fn repeat_word_checks() {
+        let c = Constraint::RepeatWord { word: 7, count: 3 };
+        assert_eq!(check(&c, &[7, 7, 7]), (true, true));
+        assert_eq!(check(&c, &[7, 7, 7, 1]), (false, true)); // extra junk
+        assert_eq!(check(&c, &[7, 7]), (false, false));
+        assert_eq!(check(&c, &[7, 7, 7, 7]), (false, false)); // too many
+    }
+
+    #[test]
+    fn exact_words_checks() {
+        let c = Constraint::ExactWords {
+            count: 2,
+            valid_answers: vec![vec![4, 5], vec![6, 7]],
+        };
+        assert_eq!(check(&c, &[4, 5]), (true, true));
+        assert_eq!(check(&c, &[6, 7]), (true, true));
+        assert_eq!(check(&c, &[5, 4]), (false, true)); // right length, wrong fact
+        assert_eq!(check(&c, &[4]), (false, false));
+        assert_eq!(check(&c, &[4, 5, 6]), (false, false));
+    }
+
+    #[test]
+    fn strict_implies_loose() {
+        // Property: for any constraint/answer, strict => loose.
+        use crate::util::miniprop::{forall_simple, Config};
+        use crate::util::prng::Rng;
+        let cfg = Config::default();
+        forall_simple(
+            &cfg,
+            |rng: &mut Rng| {
+                let c = if rng.chance(0.5) {
+                    Constraint::RepeatWord {
+                        word: rng.below(10) as u32,
+                        count: rng.range(1, 5),
+                    }
+                } else {
+                    Constraint::ExactWords {
+                        count: rng.range(1, 4),
+                        valid_answers: vec![vec![1, 2, 3][..rng.range(1, 4)].to_vec()],
+                    }
+                };
+                let ans: Vec<u32> = (0..rng.range(0, 6)).map(|_| rng.below(10) as u32).collect();
+                (c, ans)
+            },
+            |(c, ans)| {
+                let (s, l) = check(c, ans);
+                !s || l
+            },
+        );
+    }
+}

@@ -1,0 +1,127 @@
+//! LM-Eval-Harness-style evaluation engine.
+//!
+//! Multiple-choice tasks are scored by continuation loglikelihood (argmax
+//! over summed choice-token logprobs, exactly LM-eval's `loglikelihood`
+//! protocol); the IFEval analog greedy-decodes and checks verifiable
+//! constraints at prompt level, reporting strict/loose accuracy like the
+//! original benchmark.
+
+pub mod ifeval;
+
+use crate::coordinator::methods::MethodConfig;
+use crate::coordinator::Coordinator;
+use crate::synthlang::tasks::TaskSet;
+use anyhow::Result;
+
+/// Result of evaluating one multiple-choice task under one configuration.
+#[derive(Clone, Debug)]
+pub struct TaskResult {
+    pub task: String,
+    pub method: String,
+    pub accuracy: f64,
+    pub n: usize,
+}
+
+/// Evaluate a task set (optionally limited to the first `limit` examples).
+pub fn eval_taskset(
+    coord: &Coordinator,
+    cfg: &MethodConfig,
+    task: &TaskSet,
+    limit: usize,
+) -> Result<TaskResult> {
+    let examples = &task.examples[..task.examples.len().min(limit.max(1))];
+    // One scoring row per (example, choice).
+    let mut rows: Vec<(Vec<u32>, (usize, usize))> = Vec::new();
+    for ex in examples {
+        for choice in &ex.choices {
+            let mut row = ex.context.clone();
+            let start = row.len();
+            row.extend(choice);
+            rows.push((row, (start, start + choice.len())));
+        }
+    }
+    let scores = coord.score_rows(cfg, &rows)?;
+    // Argmax per example.
+    let mut correct = 0usize;
+    let mut idx = 0;
+    for ex in examples {
+        let k = ex.choices.len();
+        let slice = &scores[idx..idx + k];
+        let mut best = 0;
+        for (i, s) in slice.iter().enumerate() {
+            if *s > slice[best] {
+                best = i;
+            }
+        }
+        if best == ex.label {
+            correct += 1;
+        }
+        idx += k;
+    }
+    Ok(TaskResult {
+        task: task.name.clone(),
+        method: cfg.id.clone(),
+        accuracy: correct as f64 / examples.len() as f64,
+        n: examples.len(),
+    })
+}
+
+/// Evaluate several tasks and return (per-task accuracies, mean accuracy).
+pub fn eval_suite(
+    coord: &Coordinator,
+    cfg: &MethodConfig,
+    tasks: &[TaskSet],
+    limit: usize,
+) -> Result<(Vec<TaskResult>, f64)> {
+    let mut results = Vec::with_capacity(tasks.len());
+    for t in tasks {
+        results.push(eval_taskset(coord, cfg, t, limit)?);
+    }
+    let mean = results.iter().map(|r| r.accuracy).sum::<f64>() / results.len().max(1) as f64;
+    Ok((results, mean))
+}
+
+/// The paper's headline number: average relative drop (%) of a method's
+/// per-task accuracies vs the dense baseline's (positive = worse).
+pub fn avg_relative_drop(baseline: &[TaskResult], method: &[TaskResult]) -> f64 {
+    assert_eq!(baseline.len(), method.len());
+    let drops: Vec<f64> = baseline
+        .iter()
+        .zip(method)
+        .map(|(b, m)| {
+            debug_assert_eq!(b.task, m.task);
+            crate::util::stats::relative_drop_pct(b.accuracy, m.accuracy)
+        })
+        .collect();
+    crate::util::stats::mean(&drops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr(task: &str, acc: f64) -> TaskResult {
+        TaskResult {
+            task: task.into(),
+            method: "m".into(),
+            accuracy: acc,
+            n: 10,
+        }
+    }
+
+    #[test]
+    fn drop_is_mean_of_per_task_drops() {
+        let base = vec![tr("a", 0.8), tr("b", 0.5)];
+        let meth = vec![tr("a", 0.72), tr("b", 0.55)];
+        // drops: 10% and -10% -> mean 0.
+        let d = avg_relative_drop(&base, &meth);
+        assert!(d.abs() < 1e-9, "{d}");
+    }
+
+    #[test]
+    fn drop_positive_for_degradation() {
+        let base = vec![tr("a", 0.8)];
+        let meth = vec![tr("a", 0.4)];
+        assert!((avg_relative_drop(&base, &meth) - 50.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,257 @@
+//! CLI launcher: subcommand dispatch for the `nmsparse` binary.
+
+use crate::coordinator::methods::MethodConfig;
+use crate::coordinator::Coordinator;
+use crate::evalharness::{self, ifeval::eval_ifeval};
+use crate::sparsity::Pattern;
+use crate::synthlang::{self, corpus::Corpus, tasks, vocab::Vocab, DatagenConfig};
+use crate::util::cli::{usage, Args, OptSpec};
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+mod serve;
+
+/// Common options shared by evaluation subcommands.
+fn common_specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "artifacts", takes_value: true, default: Some("artifacts"), help: "artifacts directory" },
+        OptSpec { name: "data", takes_value: true, default: Some("artifacts/data"), help: "data directory" },
+        OptSpec { name: "help", takes_value: false, default: None, help: "show help" },
+    ]
+}
+
+/// Entry point called by `main`.
+pub fn dispatch(raw: &[String]) -> Result<()> {
+    let Some(cmd) = raw.first().map(|s| s.as_str()) else {
+        print!("{}", top_usage());
+        return Ok(());
+    };
+    let rest: Vec<String> = raw[1..].to_vec();
+    match cmd {
+        "datagen" => cmd_datagen(rest),
+        "smoke" => cmd_smoke(rest),
+        "info" => cmd_info(rest),
+        "eval" => cmd_eval(rest),
+        "ppl" => cmd_ppl(rest),
+        "ifeval" => cmd_ifeval(rest),
+        "table" => crate::tables::cmd_table(rest),
+        "serve" => serve::cmd_serve(rest),
+        "--help" | "-h" | "help" => {
+            print!("{}", top_usage());
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}'\n{}", top_usage()),
+    }
+}
+
+fn top_usage() -> String {
+    "nmsparse — flexible N:M activation sparsity (paper reproduction)\n\n\
+     Usage: nmsparse <command> [options]\n\n\
+     Commands:\n\
+       datagen   generate SynthLang corpus + eval tasks under artifacts/data\n\
+       smoke     end-to-end PJRT + artifact load check\n\
+       info      print manifest / config / training summary\n\
+       eval      evaluate one (pattern, method) on multiple-choice tasks\n\
+       ppl       perplexity on the validation corpus\n\
+       ifeval    instruction-following strict/loose accuracy\n\
+       table     regenerate a paper table/figure (fig1 fig2 table2 table3\n\
+                 table4 table5 table6 table7 table8 table10 table11 table12 table14)\n\
+       serve     TCP scoring/generation server (see examples/client.rs)\n"
+        .to_string()
+}
+
+fn cmd_datagen(rest: Vec<String>) -> Result<()> {
+    let mut specs = common_specs();
+    specs.extend([
+        OptSpec { name: "seed", takes_value: true, default: Some("20250710"), help: "world seed" },
+        OptSpec { name: "entities", takes_value: true, default: Some("48"), help: "world entities" },
+        OptSpec { name: "train-tokens", takes_value: true, default: Some("300000"), help: "training tokens" },
+        OptSpec { name: "task-examples", takes_value: true, default: Some("200"), help: "examples per task" },
+        OptSpec { name: "out", takes_value: true, default: Some("artifacts/data"), help: "output dir" },
+    ]);
+    let a = Args::parse(rest, &specs)?;
+    if a.flag("help") {
+        print!("{}", usage("datagen", "Generate the SynthLang data directory.", &specs));
+        return Ok(());
+    }
+    let cfg = DatagenConfig {
+        seed: a.get_u64("seed")?,
+        entities: a.get_usize("entities")?,
+        train_tokens: a.get_usize("train-tokens")?,
+        task_examples: a.get_usize("task-examples")?,
+        ..Default::default()
+    };
+    let out = PathBuf::from(a.get("out"));
+    synthlang::generate_all(&cfg, &out)?;
+    println!(
+        "datagen: wrote corpus ({} train tokens), {} task suites + ifeval to {}",
+        cfg.train_tokens,
+        tasks::CORE_TASKS.len() + tasks::EXTENDED_TASKS.len(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn open_coordinator(a: &Args) -> Result<Coordinator> {
+    Coordinator::open(&PathBuf::from(a.get("artifacts")))
+}
+
+fn cmd_smoke(rest: Vec<String>) -> Result<()> {
+    let specs = common_specs();
+    let a = Args::parse(rest, &specs)?;
+    let coord = open_coordinator(&a)?;
+    println!(
+        "platform={} variants={} params={}",
+        coord.pool.rt.platform(),
+        coord.pool.manifest.variants.len(),
+        coord.pool.weights.num_params()
+    );
+    // Run one dense batch of zeros.
+    let cfg = MethodConfig::dense();
+    let engine = coord.pool.engine(&cfg)?;
+    let d = engine.dims().clone();
+    let tokens = vec![0i32; d.batch * d.seq];
+    let lens = vec![4i32; d.batch];
+    let out = engine.run(&coord.pool.rt, &tokens, &lens)?;
+    println!(
+        "smoke OK: forward ran, tgt_lp[0]={:.4}, |last_logits|={}",
+        out.tgt_logprobs[0],
+        out.last_logits.len()
+    );
+    Ok(())
+}
+
+fn cmd_info(rest: Vec<String>) -> Result<()> {
+    let specs = common_specs();
+    let a = Args::parse(rest, &specs)?;
+    let coord = open_coordinator(&a)?;
+    let m = &coord.pool.manifest;
+    println!("model: {} params, vocab {}, d_model {}, layers {}, heads {}, ffn {}",
+        m.dims.num_params, m.dims.vocab, m.dims.d_model, m.dims.n_layers, m.dims.n_heads, m.dims.ffn);
+    println!("eval shape: batch {} x seq {}", m.dims.batch, m.dims.seq);
+    println!("training: final loss {:.4}, valid ppl {:.3}", m.train_final_loss, m.train_valid_ppl);
+    println!("variants ({}):", m.variants.len());
+    for (k, v) in &m.variants {
+        println!("  {k:16} pattern={} inputs={} file={}", v.pattern, v.inputs.len(), v.file);
+    }
+    Ok(())
+}
+
+/// Load task sets by name from the data dir.
+pub fn load_tasks(data: &std::path::Path, names: &[&str]) -> Result<Vec<tasks::TaskSet>> {
+    names
+        .iter()
+        .map(|n| tasks::TaskSet::load(&data.join("tasks").join(format!("{n}.json"))))
+        .collect()
+}
+
+fn cmd_eval(rest: Vec<String>) -> Result<()> {
+    let mut specs = common_specs();
+    specs.extend([
+        OptSpec { name: "pattern", takes_value: true, default: Some("8:16"), help: "sparsity pattern (dense, 2:4, 8:16, u50, ...)" },
+        OptSpec { name: "method", takes_value: true, default: Some("ACT"), help: "method name (ACT, S-PTS, VAR, CLACT, ...)" },
+        OptSpec { name: "tasks", takes_value: true, default: Some("core"), help: "'core', 'extended', 'all' or comma list" },
+        OptSpec { name: "examples", takes_value: true, default: Some("100"), help: "examples per task" },
+        OptSpec { name: "skip-qkv", takes_value: false, default: None, help: "exempt q/k/v sites (Qwen-style, §3.8)" },
+    ]);
+    let a = Args::parse(rest, &specs)?;
+    if a.flag("help") {
+        print!("{}", usage("eval", "Evaluate one (pattern, method) cell.", &specs));
+        return Ok(());
+    }
+    let coord = open_coordinator(&a)?;
+    let data = PathBuf::from(a.get("data"));
+    let names = resolve_task_names(&a.get("tasks"));
+    let task_sets = load_tasks(&data, &names)?;
+    let pattern = Pattern::parse(&a.get("pattern"))?;
+    let mut cfg = MethodConfig::by_name(&a.get("method"), pattern)?;
+    if a.flag("skip-qkv") {
+        cfg = cfg.with_disabled_sites(&["q", "k", "v"]);
+    }
+    let limit = a.get_usize("examples")?;
+
+    let base = MethodConfig::dense();
+    let (base_res, base_mean) = evalharness::eval_suite(&coord, &base, &task_sets, limit)?;
+    let (res, mean) = evalharness::eval_suite(&coord, &cfg, &task_sets, limit)?;
+    println!("{:<18} {:>10} {:>10}", "task", "dense", &cfg.id);
+    for (b, r) in base_res.iter().zip(&res) {
+        println!("{:<18} {:>10.4} {:>10.4}", b.task, b.accuracy, r.accuracy);
+    }
+    println!(
+        "mean acc: dense {base_mean:.4} vs {} {mean:.4}  | avg drop {:.2}%",
+        cfg.id,
+        evalharness::avg_relative_drop(&base_res, &res)
+    );
+    Ok(())
+}
+
+/// Expand a --tasks argument into task names.
+pub fn resolve_task_names(arg: &str) -> Vec<&'static str> {
+    match arg {
+        "core" => tasks::CORE_TASKS.to_vec(),
+        "extended" => tasks::EXTENDED_TASKS.to_vec(),
+        "all" => tasks::CORE_TASKS
+            .iter()
+            .chain(tasks::EXTENDED_TASKS)
+            .copied()
+            .collect(),
+        list => {
+            // Leak is fine: CLI once per process.
+            list.split(',')
+                .map(|s| &*Box::leak(s.trim().to_string().into_boxed_str()))
+                .collect()
+        }
+    }
+}
+
+fn cmd_ppl(rest: Vec<String>) -> Result<()> {
+    let mut specs = common_specs();
+    specs.extend([
+        OptSpec { name: "pattern", takes_value: true, default: Some("8:16"), help: "sparsity pattern" },
+        OptSpec { name: "method", takes_value: true, default: Some("ACT"), help: "method name" },
+        OptSpec { name: "windows", takes_value: true, default: Some("32"), help: "max eval windows" },
+    ]);
+    let a = Args::parse(rest, &specs)?;
+    if a.flag("help") {
+        print!("{}", usage("ppl", "Validation-corpus perplexity.", &specs));
+        return Ok(());
+    }
+    let coord = open_coordinator(&a)?;
+    let data = PathBuf::from(a.get("data"));
+    let stream = Corpus::read_tokens(&data.join("corpus_valid.tokens"))?;
+    let pattern = Pattern::parse(&a.get("pattern"))?;
+    let cfg = MethodConfig::by_name(&a.get("method"), pattern)?;
+    let windows = a.get_usize("windows")?;
+    let dense = coord.perplexity(&MethodConfig::dense(), &stream, windows)?;
+    let p = coord.perplexity(&cfg, &stream, windows)?;
+    println!("ppl: dense {dense:.3} | {} {p:.3}", cfg.id);
+    Ok(())
+}
+
+fn cmd_ifeval(rest: Vec<String>) -> Result<()> {
+    let mut specs = common_specs();
+    specs.extend([
+        OptSpec { name: "pattern", takes_value: true, default: Some("8:16"), help: "sparsity pattern" },
+        OptSpec { name: "method", takes_value: true, default: Some("S-PTS"), help: "method name" },
+        OptSpec { name: "examples", takes_value: true, default: Some("64"), help: "prompt count" },
+        OptSpec { name: "max-new", takes_value: true, default: Some("12"), help: "max generated tokens" },
+    ]);
+    let a = Args::parse(rest, &specs)?;
+    if a.flag("help") {
+        print!("{}", usage("ifeval", "Instruction-following eval (strict/loose).", &specs));
+        return Ok(());
+    }
+    let coord = open_coordinator(&a)?;
+    let data = PathBuf::from(a.get("data"));
+    let set = tasks::IfevalSet::load(&data.join("tasks").join("synth_ifeval.json"))?;
+    let vocab = Vocab::synthlang();
+    let pattern = Pattern::parse(&a.get("pattern"))?;
+    let cfg = MethodConfig::by_name(&a.get("method"), pattern)?;
+    let limit = a.get_usize("examples")?;
+    let max_new = a.get_usize("max-new")?;
+    let base = eval_ifeval(&coord, &MethodConfig::dense(), &set, &vocab, limit, max_new)?;
+    let r = eval_ifeval(&coord, &cfg, &set, &vocab, limit, max_new)?;
+    println!("ifeval (PS/PL): dense {:.4}/{:.4} | {} {:.4}/{:.4}",
+        base.strict, base.loose, cfg.id, r.strict, r.loose);
+    Ok(())
+}

@@ -1,0 +1,281 @@
+//! `nmsparse serve` — a single-process scoring/generation server.
+//!
+//! Line-delimited JSON over TCP (no HTTP stack in the offline image — the
+//! protocol is deliberately minimal; see `examples/serving_client.rs`):
+//!
+//! ```text
+//! -> {"op":"ping"}
+//! <- {"ok":true,"variant":"8_16","method":"S-PTS"}
+//! -> {"op":"score","text":"does the red fox live in the den ?","choice":" yes"}
+//! <- {"ok":true,"score":-1.23}
+//! -> {"op":"generate","text":"repeat the word fox two times :","max_new":8}
+//! <- {"ok":true,"text":"fox fox ."}
+//! ```
+//!
+//! Architecture: IO threads own sockets and exchange requests/responses
+//! with the single engine thread (PJRT handles are not `Send`) over
+//! channels; the engine thread runs a continuous-batching loop using
+//! [`crate::coordinator::scheduler::Scheduler`] + the dynamic
+//! [`crate::coordinator::batcher::Batcher`] policy.
+
+use crate::coordinator::methods::MethodConfig;
+use crate::coordinator::scheduler::{SchedPolicy, Scheduler, Work};
+use crate::coordinator::Coordinator;
+use crate::sparsity::Pattern;
+use crate::synthlang::vocab::{Vocab, EOS};
+use crate::util::cli::{usage, Args, OptSpec};
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// A request forwarded from an IO thread to the engine loop.
+struct IoRequest {
+    line: String,
+    reply: mpsc::Sender<String>,
+}
+
+pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
+    let specs = vec![
+        OptSpec { name: "artifacts", takes_value: true, default: Some("artifacts"), help: "artifacts dir" },
+        OptSpec { name: "addr", takes_value: true, default: Some("127.0.0.1:7433"), help: "listen address" },
+        OptSpec { name: "pattern", takes_value: true, default: Some("8:16"), help: "sparsity pattern" },
+        OptSpec { name: "method", takes_value: true, default: Some("S-PTS"), help: "method name" },
+        OptSpec { name: "max-requests", takes_value: true, default: Some("0"), help: "exit after N requests (0 = run forever)" },
+        OptSpec { name: "help", takes_value: false, default: None, help: "show help" },
+    ];
+    let a = Args::parse(rest, &specs)?;
+    if a.flag("help") {
+        print!("{}", usage("serve", "Run the TCP scoring/generation server.", &specs));
+        return Ok(());
+    }
+    let coord = Coordinator::open(&PathBuf::from(a.get("artifacts")))?;
+    let pattern = Pattern::parse(&a.get("pattern"))?;
+    let cfg = MethodConfig::by_name(&a.get("method"), pattern)?;
+    let engine = coord.pool.engine(&cfg)?; // bind before accepting traffic
+    let dims = engine.dims().clone();
+    drop(engine);
+    let vocab = Vocab::synthlang();
+    let max_requests = a.get_usize("max-requests")?;
+
+    let listener = TcpListener::bind(a.get("addr")).context("binding server address")?;
+    listener.set_nonblocking(true)?;
+    println!(
+        "serving {} / {} on {} (batch {} x seq {})",
+        cfg.variant_key,
+        cfg.id,
+        a.get("addr"),
+        dims.batch,
+        dims.seq
+    );
+
+    let (req_tx, req_rx) = mpsc::channel::<IoRequest>();
+    let mut served = 0usize;
+    let mut scheduler = Scheduler::new(dims.batch, SchedPolicy::default());
+    // Pending replies: scheduler id -> (reply channel, kind-specific state).
+    let mut score_replies: HashMap<u64, mpsc::Sender<String>> = HashMap::new();
+    let mut gen_replies: HashMap<u64, mpsc::Sender<String>> = HashMap::new();
+    let period = vocab.id(".")?;
+
+    loop {
+        // Accept new connections; spawn an IO thread per client.
+        match listener.accept() {
+            Ok((stream, _)) => spawn_io_thread(stream, req_tx.clone()),
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+            Err(e) => return Err(e.into()),
+        }
+        // Ingest queued requests (non-blocking).
+        while let Ok(req) = req_rx.try_recv() {
+            match parse_request(&req.line, &vocab) {
+                Ok(ParsedRequest::Ping) => {
+                    let mut r = Json::obj();
+                    r.insert("ok", true.into());
+                    r.insert("variant", cfg.variant_key.as_str().into());
+                    r.insert("method", cfg.id.as_str().into());
+                    req.reply.send(r.dump()).ok();
+                    served += 1;
+                }
+                Ok(ParsedRequest::Score { tokens, span }) => {
+                    let id = scheduler.submit_score(tokens, span);
+                    score_replies.insert(id, req.reply);
+                }
+                Ok(ParsedRequest::Generate { tokens, max_new }) => {
+                    let id = scheduler.submit_generate(tokens, max_new);
+                    gen_replies.insert(id, req.reply);
+                }
+                Err(e) => {
+                    let mut r = Json::obj();
+                    r.insert("ok", false.into());
+                    r.insert("error", format!("{e:#}").into());
+                    req.reply.send(r.dump()).ok();
+                    served += 1;
+                }
+            }
+        }
+        // Dispatch one unit of work.
+        match scheduler.next_work() {
+            Work::Idle => {
+                if max_requests > 0 && served >= max_requests {
+                    println!("served {served} requests; exiting (--max-requests)");
+                    return Ok(());
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Work::Score(ids) => {
+                let rows: Vec<(Vec<u32>, (usize, usize))> = ids
+                    .iter()
+                    .map(|id| {
+                        let j = scheduler.score_job(*id).unwrap();
+                        (j.tokens.clone(), j.span)
+                    })
+                    .collect();
+                match coord.score_rows(&cfg, &rows) {
+                    Ok(scores) => {
+                        for (id, score) in ids.iter().zip(scores) {
+                            if let Some(tx) = score_replies.remove(id) {
+                                let mut r = Json::obj();
+                                r.insert("ok", true.into());
+                                r.insert("score", score.into());
+                                tx.send(r.dump()).ok();
+                                served += 1;
+                            }
+                            scheduler.complete_score(*id);
+                        }
+                    }
+                    Err(e) => {
+                        for id in ids {
+                            if let Some(tx) = score_replies.remove(&id) {
+                                let mut r = Json::obj();
+                                r.insert("ok", false.into());
+                                r.insert("error", format!("{e:#}").into());
+                                tx.send(r.dump()).ok();
+                                served += 1;
+                            }
+                            scheduler.complete_score(id);
+                        }
+                    }
+                }
+            }
+            Work::Decode(ids) => {
+                // One decode step for each active session.
+                let prompts: Vec<Vec<u32>> = ids
+                    .iter()
+                    .map(|id| scheduler.session(*id).unwrap().row())
+                    .collect();
+                match coord.generate(&cfg, &prompts, 1, &[period, EOS]) {
+                    Ok(outs) => {
+                        for (id, out) in ids.iter().zip(outs) {
+                            let sess = scheduler.session_mut(*id).unwrap();
+                            match out.first() {
+                                Some(tok) => sess.push_token(*tok, &[period, EOS]),
+                                None => sess.done = true, // context full
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        for id in &ids {
+                            scheduler.session_mut(*id).unwrap().done = true;
+                            if let Some(tx) = gen_replies.remove(id) {
+                                let mut r = Json::obj();
+                                r.insert("ok", false.into());
+                                r.insert("error", format!("{e:#}").into());
+                                tx.send(r.dump()).ok();
+                                served += 1;
+                            }
+                        }
+                    }
+                }
+                for sess in scheduler.reap_done() {
+                    if let Some(tx) = gen_replies.remove(&sess.id) {
+                        let mut r = Json::obj();
+                        r.insert("ok", true.into());
+                        r.insert(
+                            "tokens",
+                            Json::Arr(
+                                sess.generated
+                                    .iter()
+                                    .map(|t| Json::Num(*t as f64))
+                                    .collect(),
+                            ),
+                        );
+                        r.insert("text", vocab.decode(&sess.generated).into());
+                        tx.send(r.dump()).ok();
+                        served += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+enum ParsedRequest {
+    Ping,
+    Score { tokens: Vec<u32>, span: (usize, usize) },
+    Generate { tokens: Vec<u32>, max_new: usize },
+}
+
+fn parse_request(line: &str, vocab: &Vocab) -> Result<ParsedRequest> {
+    let j = json::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let op = j.req("op")?.as_str().context("op")?;
+    match op {
+        "ping" => Ok(ParsedRequest::Ping),
+        "score" => {
+            let ctx = vocab.encode(j.req("text")?.as_str().context("text")?)?;
+            let choice = vocab.encode(j.req("choice")?.as_str().context("choice")?)?;
+            anyhow::ensure!(!ctx.is_empty() && !choice.is_empty(), "empty text/choice");
+            let mut tokens = ctx.clone();
+            let start = tokens.len();
+            tokens.extend(&choice);
+            Ok(ParsedRequest::Score { span: (start, tokens.len()), tokens })
+        }
+        "generate" => {
+            let tokens = vocab.encode(j.req("text")?.as_str().context("text")?)?;
+            anyhow::ensure!(!tokens.is_empty(), "empty prompt");
+            let max_new = j
+                .get("max_new")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(12)
+                .clamp(1, 48);
+            Ok(ParsedRequest::Generate { tokens, max_new })
+        }
+        other => anyhow::bail!("unknown op '{other}'"),
+    }
+}
+
+fn spawn_io_thread(stream: TcpStream, req_tx: mpsc::Sender<IoRequest>) {
+    std::thread::spawn(move || {
+        stream.set_nonblocking(false).ok();
+        let mut writer = match stream.try_clone() {
+            Ok(w) => w,
+            Err(_) => return,
+        };
+        let reader = BufReader::new(stream);
+        for line in reader.lines() {
+            let Ok(line) = line else { break };
+            if line.trim().is_empty() {
+                continue;
+            }
+            let (tx, rx) = mpsc::channel();
+            if req_tx
+                .send(IoRequest { line, reply: tx })
+                .is_err()
+            {
+                break;
+            }
+            match rx.recv() {
+                Ok(resp) => {
+                    if writer.write_all(resp.as_bytes()).is_err()
+                        || writer.write_all(b"\n").is_err()
+                    {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+    });
+}

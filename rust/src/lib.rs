@@ -1,0 +1,31 @@
+//! # nmsparse — Flexible N:M Activation Sparsity
+//!
+//! A three-layer reproduction of *"Motivating Next-Gen Accelerators with
+//! Flexible N:M Activation Sparsity via Benchmarking Lightweight
+//! Post-Training Sparsification Approaches"* (Alanova et al., 2025):
+//!
+//! - **L1** (`python/compile/kernels/`): Pallas N:M sparsification kernel.
+//! - **L2** (`python/compile/model.py`): Llama-style JAX transformer whose
+//!   linear layers route through the kernel; AOT-lowered to HLO text.
+//! - **L3** (this crate): coordinator — PJRT runtime, request batching and
+//!   scheduling, the lm-eval-style harness, the SynthLang data substrate,
+//!   rust-native sparsity/quantization baselines, the hardware cost model,
+//!   and the paper-table reproduction harness.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod coordinator;
+pub mod evalharness;
+pub mod hwmodel;
+pub mod launcher;
+pub mod metadata;
+pub mod quant;
+pub mod runtime;
+pub mod sparsity;
+pub mod synthlang;
+pub mod tables;
+pub mod util;
+
+pub use util::prng::Rng;
+pub use util::tensor::{Tensor, TensorStore};

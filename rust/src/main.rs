@@ -1,0 +1,21 @@
+//! `nmsparse` — launcher for the N:M activation-sparsity reproduction.
+//!
+//! Subcommands:
+//!   datagen   generate the SynthLang data directory (runs before aot.py)
+//!   smoke     verify the PJRT client + artifacts load end to end
+//!   info      print manifest/config/training summary
+//!   eval      evaluate one (pattern, method) cell on chosen tasks
+//!   ppl       perplexity of a configuration on the validation corpus
+//!   ifeval    instruction-following (strict/loose) for a configuration
+//!   table     regenerate a paper table/figure (fig1, fig2, table2, ...)
+//!   serve     run the TCP scoring/generation server
+//!
+//! Run `nmsparse <cmd> --help` for options.
+
+use anyhow::Result;
+use nmsparse::launcher;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    launcher::dispatch(&args)
+}

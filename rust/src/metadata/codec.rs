@@ -1,0 +1,300 @@
+//! Concrete mask codecs: bitmap, index-list and combinadic rank coding.
+//!
+//! The combinadic (combinatorial number system) codec maps an N-of-M keep
+//! mask to its rank in the lexicographic enumeration of all C(M,N)
+//! combinations — the densest possible fixed-width block encoding, and the
+//! scheme Appendix A.3's "combinatorial encoder/decoder ... lightweight
+//! lookup tables" refers to. Round-trip correctness is property-tested.
+
+use super::binomial;
+use anyhow::{bail, Result};
+
+/// Encode a keep-mask (length M, exactly N ones) to its combinadic rank.
+pub fn encode_combinadic(mask: &[bool]) -> u128 {
+    let m = mask.len() as u64;
+    let n_total = mask.iter().filter(|b| **b).count() as u64;
+    let mut rank: u128 = 0;
+    let mut remaining = n_total;
+    for (pos, &keep) in mask.iter().enumerate() {
+        if remaining == 0 {
+            break;
+        }
+        let slots_after = m - pos as u64 - 1;
+        if keep {
+            remaining -= 1;
+        } else {
+            // All combinations that placed a one at this position (and the
+            // remaining-1 others among the later slots) come first.
+            rank += binomial(slots_after, remaining - 1);
+        }
+    }
+    rank
+}
+
+/// Decode a combinadic rank back to a keep-mask of `n` ones in `m` slots.
+pub fn decode_combinadic(mut rank: u128, n: usize, m: usize) -> Result<Vec<bool>> {
+    let total = binomial(m as u64, n as u64);
+    if rank >= total {
+        bail!("rank {rank} out of range for {n}:{m} (max {total})");
+    }
+    let mut mask = vec![false; m];
+    let mut remaining = n as u64;
+    for pos in 0..m {
+        if remaining == 0 {
+            break;
+        }
+        let slots_after = (m - pos - 1) as u64;
+        let with_here = binomial(slots_after, remaining - 1);
+        if rank < with_here {
+            mask[pos] = true;
+            remaining -= 1;
+        } else {
+            rank -= with_here;
+        }
+    }
+    if remaining != 0 {
+        bail!("decode ended with {remaining} bits unplaced");
+    }
+    Ok(mask)
+}
+
+/// A codec for streams of N:M block masks, tracking encoded size in bits.
+#[derive(Clone, Copy, Debug)]
+pub enum MaskCodec {
+    Bitmap,
+    IndexList,
+    Combinadic,
+}
+
+impl MaskCodec {
+    /// Encode a sequence of block masks (each length m) into a bit-packed
+    /// byte buffer. Returns (bytes, bits_used).
+    pub fn encode_blocks(&self, masks: &[Vec<bool>], n: usize, m: usize) -> (Vec<u8>, usize) {
+        let mut bits = BitWriter::new();
+        for mask in masks {
+            debug_assert_eq!(mask.len(), m);
+            match self {
+                MaskCodec::Bitmap => {
+                    for &b in mask {
+                        bits.push_bits(b as u128, 1);
+                    }
+                }
+                MaskCodec::IndexList => {
+                    let w = super::ceil_log2(m as u128) as usize;
+                    for (i, &b) in mask.iter().enumerate() {
+                        if b {
+                            bits.push_bits(i as u128, w);
+                        }
+                    }
+                }
+                MaskCodec::Combinadic => {
+                    let w = super::ceil_log2(binomial(m as u64, n as u64)) as usize;
+                    bits.push_bits(encode_combinadic(mask), w);
+                }
+            }
+        }
+        let used = bits.len_bits();
+        (bits.into_bytes(), used)
+    }
+
+    /// Decode `count` block masks back out of a bit-packed buffer.
+    pub fn decode_blocks(
+        &self,
+        bytes: &[u8],
+        count: usize,
+        n: usize,
+        m: usize,
+    ) -> Result<Vec<Vec<bool>>> {
+        let mut r = BitReader::new(bytes);
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            match self {
+                MaskCodec::Bitmap => {
+                    let mut mask = vec![false; m];
+                    for slot in mask.iter_mut() {
+                        *slot = r.read_bits(1)? == 1;
+                    }
+                    out.push(mask);
+                }
+                MaskCodec::IndexList => {
+                    let w = super::ceil_log2(m as u128) as usize;
+                    let mut mask = vec![false; m];
+                    for _ in 0..n {
+                        let idx = r.read_bits(w)? as usize;
+                        if idx >= m {
+                            bail!("index {idx} out of range");
+                        }
+                        mask[idx] = true;
+                    }
+                    out.push(mask);
+                }
+                MaskCodec::Combinadic => {
+                    let w = super::ceil_log2(binomial(m as u64, n as u64)) as usize;
+                    let rank = r.read_bits(w)?;
+                    out.push(decode_combinadic(rank, n, m)?);
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// LSB-first bit writer.
+struct BitWriter {
+    bytes: Vec<u8>,
+    bit: usize,
+}
+
+impl BitWriter {
+    fn new() -> Self {
+        BitWriter { bytes: Vec::new(), bit: 0 }
+    }
+
+    fn push_bits(&mut self, value: u128, width: usize) {
+        for i in 0..width {
+            let b = ((value >> i) & 1) as u8;
+            if self.bit % 8 == 0 {
+                self.bytes.push(0);
+            }
+            let last = self.bytes.len() - 1;
+            self.bytes[last] |= b << (self.bit % 8);
+            self.bit += 1;
+        }
+    }
+
+    fn len_bits(&self) -> usize {
+        self.bit
+    }
+
+    fn into_bytes(self) -> Vec<u8> {
+        self.bytes
+    }
+}
+
+/// LSB-first bit reader.
+struct BitReader<'a> {
+    bytes: &'a [u8],
+    bit: usize,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        BitReader { bytes, bit: 0 }
+    }
+
+    fn read_bits(&mut self, width: usize) -> Result<u128> {
+        let mut v: u128 = 0;
+        for i in 0..width {
+            let byte = self.bit / 8;
+            if byte >= self.bytes.len() {
+                bail!("bit buffer exhausted");
+            }
+            let b = (self.bytes[byte] >> (self.bit % 8)) & 1;
+            v |= (b as u128) << i;
+            self.bit += 1;
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::miniprop::{forall_simple, Config};
+    use crate::util::prng::Rng;
+
+    fn random_mask(rng: &mut Rng, n: usize, m: usize) -> Vec<bool> {
+        let idx = rng.sample_indices(m, n);
+        let mut mask = vec![false; m];
+        for i in idx {
+            mask[i] = true;
+        }
+        mask
+    }
+
+    #[test]
+    fn combinadic_enumerates_all_2_4() {
+        // All 6 masks of 2:4 map to distinct ranks in [0, 6).
+        let mut seen = std::collections::BTreeSet::new();
+        for a in 0..4 {
+            for b in (a + 1)..4 {
+                let mut mask = vec![false; 4];
+                mask[a] = true;
+                mask[b] = true;
+                let r = encode_combinadic(&mask);
+                assert!(r < 6);
+                seen.insert(r);
+                assert_eq!(decode_combinadic(r, 2, 4).unwrap(), mask);
+            }
+        }
+        assert_eq!(seen.len(), 6);
+    }
+
+    #[test]
+    fn combinadic_roundtrip_all_patterns() {
+        let cfg = Config { cases: 256, ..Config::default() };
+        forall_simple(
+            &cfg,
+            |rng: &mut Rng| {
+                let (n, m) = *rng.choose(&[(2usize, 4usize), (4, 8), (8, 16), (16, 32)]);
+                random_mask(rng, n, m)
+            },
+            |mask| {
+                let n = mask.iter().filter(|b| **b).count();
+                let r = encode_combinadic(mask);
+                decode_combinadic(r, n, mask.len()).unwrap() == *mask
+            },
+        );
+    }
+
+    #[test]
+    fn rank_out_of_range_rejected() {
+        assert!(decode_combinadic(6, 2, 4).is_err());
+        assert!(decode_combinadic(12_870, 8, 16).is_err());
+    }
+
+    #[test]
+    fn stream_roundtrip_every_codec() {
+        let mut rng = Rng::new(17);
+        for codec in [MaskCodec::Bitmap, MaskCodec::IndexList, MaskCodec::Combinadic] {
+            let (n, m) = (8, 16);
+            let masks: Vec<Vec<bool>> = (0..64).map(|_| random_mask(&mut rng, n, m)).collect();
+            let (bytes, bits) = codec.encode_blocks(&masks, n, m);
+            assert!(bits <= bytes.len() * 8);
+            let decoded = codec.decode_blocks(&bytes, masks.len(), n, m).unwrap();
+            assert_eq!(decoded, masks, "{codec:?}");
+        }
+    }
+
+    #[test]
+    fn encoded_sizes_match_theory() {
+        let mut rng = Rng::new(23);
+        let blocks = 100;
+        for (n, m, enc, per_block) in [
+            (2usize, 4usize, MaskCodec::Bitmap, 4usize),
+            (2, 4, MaskCodec::IndexList, 4),
+            (2, 4, MaskCodec::Combinadic, 3),
+            (8, 16, MaskCodec::Combinadic, 14),
+            (16, 32, MaskCodec::Combinadic, 30),
+        ] {
+            let masks: Vec<Vec<bool>> =
+                (0..blocks).map(|_| random_mask(&mut rng, n, m)).collect();
+            let (_, bits) = enc.encode_blocks(&masks, n, m);
+            assert_eq!(bits, blocks * per_block, "{enc:?} {n}:{m}");
+        }
+    }
+
+    #[test]
+    fn bitwriter_cross_byte_boundaries() {
+        let mut w = BitWriter::new();
+        w.push_bits(0b1_0110_1011, 9);
+        w.push_bits(0b111, 3);
+        let bits = w.len_bits();
+        let bytes = w.into_bytes();
+        assert_eq!(bits, 12);
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(9).unwrap(), 0b1_0110_1011);
+        assert_eq!(r.read_bits(3).unwrap(), 0b111);
+        assert!(r.read_bits(1).is_err() || bytes.len() * 8 >= 13);
+    }
+}

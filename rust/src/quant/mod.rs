@@ -1,0 +1,153 @@
+//! Int8 weight quantization baseline (Appendix E / Table 14 comparator).
+//!
+//! Per-output-channel symmetric int8 quantization with round-to-nearest.
+//! This is the retraining-free analog of the paper's 8-bit comparison row;
+//! it quantizes the checkpoint rust-side and runs through the dense HLO
+//! artifact (weights are dequantized to f32 on load — we measure the
+//! *accuracy* effect of quantization, as the paper does, not kernel speed).
+
+use crate::util::tensor::{Tensor, TensorStore};
+use anyhow::Result;
+
+/// Quantization statistics for reporting.
+#[derive(Clone, Debug, Default)]
+pub struct QuantStats {
+    pub tensors: usize,
+    pub params: usize,
+    pub max_abs_err: f64,
+    pub mean_abs_err: f64,
+    pub compressed_bytes: usize,
+    pub original_bytes: usize,
+}
+
+impl QuantStats {
+    pub fn compression_ratio(&self) -> f64 {
+        if self.compressed_bytes == 0 {
+            return 0.0;
+        }
+        self.original_bytes as f64 / self.compressed_bytes as f64
+    }
+}
+
+/// Quantize one `[out, in]` weight matrix to int8 per-output-channel and
+/// immediately dequantize (fake-quant). Returns (per-channel scales, max err).
+pub fn fake_quant_int8(w: &mut Tensor, bits: u32) -> (Vec<f32>, f64) {
+    assert!(w.rank() == 2, "fake_quant_int8 expects 2-D weights");
+    assert!((2..=8).contains(&bits));
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32; // e.g. 127 for int8
+    let rows = w.rows();
+    let mut scales = Vec::with_capacity(rows);
+    let mut max_err = 0.0f64;
+    for r in 0..rows {
+        let row = w.row_mut(r);
+        let amax = row.iter().fold(0.0f32, |a, x| a.max(x.abs()));
+        let scale = if amax == 0.0 { 1.0 } else { amax / qmax };
+        for v in row.iter_mut() {
+            let q = (*v / scale).round().clamp(-qmax - 1.0, qmax);
+            let deq = q * scale;
+            max_err = max_err.max((deq - *v).abs() as f64);
+            *v = deq;
+        }
+        scales.push(scale);
+    }
+    (scales, max_err)
+}
+
+/// Fake-quantize every prunable linear weight in the checkpoint.
+pub fn quantize_store(store: &mut TensorStore, bits: u32) -> Result<QuantStats> {
+    let names = crate::sparsity::weightprune::prunable_weight_names(store);
+    let mut stats = QuantStats::default();
+    let mut abs_err_sum = 0.0f64;
+    for name in &names {
+        let t = store.get_mut(name)?;
+        let before: Vec<f32> = t.data.clone();
+        let (scales, max_err) = fake_quant_int8(t, bits);
+        stats.tensors += 1;
+        stats.params += t.len();
+        stats.max_abs_err = stats.max_abs_err.max(max_err);
+        abs_err_sum += t
+            .data
+            .iter()
+            .zip(&before)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum::<f64>();
+        stats.original_bytes += t.len() * 4;
+        stats.compressed_bytes += t.len() * (bits as usize) / 8 + scales.len() * 4;
+    }
+    stats.mean_abs_err = if stats.params > 0 {
+        abs_err_sum / stats.params as f64
+    } else {
+        0.0
+    };
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rand_w(rng: &mut Rng, o: usize, i: usize) -> Tensor {
+        Tensor::from_vec(&[o, i], (0..o * i).map(|_| rng.normal() as f32 * 0.1).collect())
+    }
+
+    #[test]
+    fn int8_error_bounded_by_half_step() {
+        let mut rng = Rng::new(1);
+        let mut w = rand_w(&mut rng, 16, 64);
+        let orig = w.clone();
+        let (scales, max_err) = fake_quant_int8(&mut w, 8);
+        assert_eq!(scales.len(), 16);
+        for r in 0..16 {
+            let bound = scales[r] as f64 * 0.5 + 1e-7;
+            for (a, b) in w.row(r).iter().zip(orig.row(r)) {
+                assert!(((a - b).abs() as f64) <= bound);
+            }
+        }
+        assert!(max_err > 0.0);
+    }
+
+    #[test]
+    fn quant_idempotent() {
+        let mut rng = Rng::new(2);
+        let mut w = rand_w(&mut rng, 8, 32);
+        fake_quant_int8(&mut w, 8);
+        let once = w.clone();
+        fake_quant_int8(&mut w, 8);
+        assert!(w.max_abs_diff(&once) < 1e-6, "quantizing twice is stable");
+    }
+
+    #[test]
+    fn lower_bits_more_error() {
+        let mut rng = Rng::new(3);
+        let base = rand_w(&mut rng, 8, 128);
+        let mut w8 = base.clone();
+        let mut w4 = base.clone();
+        let (_, e8) = fake_quant_int8(&mut w8, 8);
+        let (_, e4) = fake_quant_int8(&mut w4, 4);
+        assert!(e4 > e8 * 4.0, "4-bit err {e4} vs 8-bit err {e8}");
+    }
+
+    #[test]
+    fn zero_row_safe() {
+        let mut w = Tensor::from_vec(&[1, 4], vec![0.0; 4]);
+        let (scales, err) = fake_quant_int8(&mut w, 8);
+        assert_eq!(scales, vec![1.0]);
+        assert_eq!(err, 0.0);
+        assert_eq!(w.data, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn store_quantization_stats() {
+        let mut rng = Rng::new(4);
+        let mut s = TensorStore::new();
+        s.insert("layers.0.q.w", rand_w(&mut rng, 16, 16));
+        s.insert("layers.0.gate.w", rand_w(&mut rng, 16, 16));
+        s.insert("embed.w", rand_w(&mut rng, 4, 4)); // untouched
+        let stats = quantize_store(&mut s, 8).unwrap();
+        assert_eq!(stats.tensors, 2);
+        assert_eq!(stats.params, 512);
+        assert!(stats.compression_ratio() > 3.0); // ~4x minus scale overhead
+        assert!(stats.mean_abs_err > 0.0);
+    }
+}

@@ -1,0 +1,372 @@
+//! PJRT runtime: load AOT artifacts and execute them from the rust hot path.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `compile` → `execute_b`. A [`Variant`] is one compiled sparsity-pattern
+//! executable; an [`Engine`] is a variant *bound* to concrete weights and
+//! method parameters (pre-uploaded device buffers, so the per-request cost
+//! is tokens/lens upload + execution + two small output transfers).
+//!
+//! Input binding is driven by `io_manifest.json` (written by `aot.py`): an
+//! ordered list of named inputs. Names are resolved by a caller-supplied
+//! [`InputResolver`] — `w.<tensor>` from the checkpoint store, `m.<...>`
+//! from the method configuration. This keeps the runtime generic over
+//! variants (standard vs R-Sparse) and methods.
+
+use crate::util::json::{self, Json};
+use crate::util::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// One named input of a variant executable.
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl InputSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Static model dimensions recorded by `aot.py`.
+#[derive(Clone, Debug)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub num_params: usize,
+    pub sites: Vec<String>,
+}
+
+/// Metadata for one lowered variant.
+#[derive(Clone, Debug)]
+pub struct VariantMeta {
+    pub key: String,
+    pub file: String,
+    pub pattern: String,
+    pub rank: Option<usize>,
+    pub inputs: Vec<InputSpec>,
+}
+
+/// Parsed `io_manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dims: ModelDims,
+    pub variants: BTreeMap<String, VariantMeta>,
+    pub train_final_loss: f64,
+    pub train_valid_ppl: f64,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `io_manifest.json` from the artifacts directory.
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("io_manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {} — run `make artifacts` first", path.display())
+        })?;
+        let j = json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let c = j.req("config")?;
+        let as_usize = |k: &str| -> Result<usize> {
+            c.req(k)?.as_usize().with_context(|| format!("config.{k}"))
+        };
+        let dims = ModelDims {
+            vocab: as_usize("vocab")?,
+            d_model: as_usize("d_model")?,
+            n_layers: as_usize("n_layers")?,
+            n_heads: as_usize("n_heads")?,
+            ffn: as_usize("ffn")?,
+            batch: as_usize("eval_batch")?,
+            seq: as_usize("eval_seq")?,
+            num_params: as_usize("num_params")?,
+            sites: c
+                .req("sites")?
+                .as_arr()
+                .context("config.sites")?
+                .iter()
+                .map(|s| s.as_str().unwrap_or("").to_string())
+                .collect(),
+        };
+        let mut variants = BTreeMap::new();
+        if let Some(Json::Obj(vs)) = j.get("variants") {
+            for (key, v) in vs {
+                let inputs = v
+                    .req("inputs")?
+                    .as_arr()
+                    .context("variant inputs")?
+                    .iter()
+                    .map(|i| -> Result<InputSpec> {
+                        Ok(InputSpec {
+                            name: i.req("name")?.as_str().context("input name")?.to_string(),
+                            shape: i
+                                .req("shape")?
+                                .as_arr()
+                                .context("input shape")?
+                                .iter()
+                                .map(|x| x.as_usize().unwrap_or(0))
+                                .collect(),
+                            dtype: i
+                                .req("dtype")?
+                                .as_str()
+                                .context("input dtype")?
+                                .to_string(),
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                variants.insert(
+                    key.clone(),
+                    VariantMeta {
+                        key: key.clone(),
+                        file: v.req("file")?.as_str().context("file")?.to_string(),
+                        pattern: v.req("pattern")?.as_str().context("pattern")?.to_string(),
+                        rank: v.get("rank").and_then(|r| r.as_usize()),
+                        inputs,
+                    },
+                );
+            }
+        }
+        let train = j.req("train")?;
+        Ok(Manifest {
+            dims,
+            variants,
+            train_final_loss: train
+                .get("final_loss")
+                .and_then(|x| x.as_f64())
+                .unwrap_or(f64::NAN),
+            train_valid_ppl: train
+                .get("valid_ppl")
+                .and_then(|x| x.as_f64())
+                .unwrap_or(f64::NAN),
+            dir: artifacts_dir.to_path_buf(),
+        })
+    }
+
+    pub fn variant(&self, key: &str) -> Result<&VariantMeta> {
+        self.variants.get(key).with_context(|| {
+            format!(
+                "variant '{key}' not in manifest (have: {})",
+                self.variants.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+}
+
+/// The PJRT client wrapper.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one variant's HLO text.
+    pub fn load_variant(&self, manifest: &Manifest, key: &str) -> Result<Arc<Variant>> {
+        let meta = manifest.variant(key)?.clone();
+        let path = manifest.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {key}: {e:?}"))?;
+        Ok(Arc::new(Variant {
+            exe,
+            meta,
+            dims: manifest.dims.clone(),
+        }))
+    }
+
+    /// Upload an f32 tensor to the device.
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        let shape: &[usize] = if t.shape.is_empty() { &[] } else { &t.shape };
+        self.client
+            .buffer_from_host_buffer(&t.data, shape, None)
+            .map_err(|e| anyhow::anyhow!("upload: {e:?}"))
+    }
+
+    /// Upload an i32 array to the device.
+    pub fn upload_i32(&self, data: &[i32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .map_err(|e| anyhow::anyhow!("upload i32: {e:?}"))
+    }
+}
+
+/// A compiled variant executable (unbound).
+pub struct Variant {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: VariantMeta,
+    pub dims: ModelDims,
+}
+
+/// Resolves a fixed (non-token) input name to its tensor value.
+pub type InputResolver<'a> = dyn Fn(&InputSpec) -> Result<Tensor> + 'a;
+
+impl Variant {
+    /// Bind weights + method parameters: resolve and upload every input
+    /// after `tokens`/`lens` once. The same variant can be bound many times
+    /// (e.g. dense weights vs pruned weights vs quantized weights).
+    pub fn bind(self: &Arc<Self>, rt: &Runtime, resolver: &InputResolver) -> Result<Engine> {
+        anyhow::ensure!(
+            self.meta.inputs.len() >= 2
+                && self.meta.inputs[0].name == "tokens"
+                && self.meta.inputs[1].name == "lens",
+            "variant {} manifest must start with tokens, lens",
+            self.meta.key
+        );
+        let mut fixed = Vec::with_capacity(self.meta.inputs.len() - 2);
+        for spec in &self.meta.inputs[2..] {
+            let t = resolver(spec).with_context(|| format!("resolving input '{}'", spec.name))?;
+            anyhow::ensure!(
+                t.shape == spec.shape,
+                "input '{}': resolver produced shape {:?}, manifest wants {:?}",
+                spec.name,
+                t.shape,
+                spec.shape
+            );
+            fixed.push(rt.upload(&t)?);
+        }
+        Ok(Engine {
+            variant: Arc::clone(self),
+            fixed,
+        })
+    }
+}
+
+/// Output of one forward execution.
+#[derive(Clone, Debug)]
+pub struct ForwardOut {
+    /// `[batch * seq]` — `tgt_lp[b*T + t]` = log p(token[t+1] | prefix) for
+    /// t < T-1 (last column is 0).
+    pub tgt_logprobs: Vec<f32>,
+    /// `[batch * vocab]` — next-token logits at each row's last valid
+    /// position.
+    pub last_logits: Vec<f32>,
+}
+
+/// A variant bound to weights + method params, ready to serve.
+pub struct Engine {
+    variant: Arc<Variant>,
+    fixed: Vec<xla::PjRtBuffer>,
+}
+
+impl Engine {
+    pub fn dims(&self) -> &ModelDims {
+        &self.variant.dims
+    }
+
+    pub fn key(&self) -> &str {
+        &self.variant.meta.key
+    }
+
+    /// Execute one batch. `tokens` is `[batch * seq]` row-major; `lens` is
+    /// `[batch]` valid lengths.
+    pub fn run(&self, rt: &Runtime, tokens: &[i32], lens: &[i32]) -> Result<ForwardOut> {
+        let d = self.dims().clone();
+        anyhow::ensure!(
+            tokens.len() == d.batch * d.seq && lens.len() == d.batch,
+            "bad batch shape: tokens {} (want {}), lens {} (want {})",
+            tokens.len(),
+            d.batch * d.seq,
+            lens.len(),
+            d.batch
+        );
+        let tok_buf = rt.upload_i32(tokens, &[d.batch, d.seq])?;
+        let len_buf = rt.upload_i32(lens, &[d.batch])?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(2 + self.fixed.len());
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        for b in &self.fixed {
+            args.push(b);
+        }
+        let result = self
+            .variant
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.key()))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        let (lp, ll) = lit
+            .to_tuple2()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        let tgt_logprobs = lp
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("tgt_lp: {e:?}"))?;
+        let last_logits = ll
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("last_logits: {e:?}"))?;
+        anyhow::ensure!(tgt_logprobs.len() == d.batch * d.seq, "tgt_lp size");
+        anyhow::ensure!(last_logits.len() == d.batch * d.vocab, "last_logits size");
+        Ok(ForwardOut {
+            tgt_logprobs,
+            last_logits,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full runtime round-trips are exercised by `rust/tests/` integration
+    // tests (they need artifacts); here we test manifest parsing only.
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join(format!("nmsparse-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = r#"{
+          "config": {"vocab": 160, "d_model": 64, "n_layers": 2, "n_heads": 2,
+                     "ffn": 128, "eval_batch": 4, "eval_seq": 16,
+                     "num_params": 1000, "sites": ["q","k"]},
+          "train": {"final_loss": 0.5, "valid_ppl": 1.7, "steps": 10},
+          "variants": {
+            "dense": {"file": "model_dense.hlo.txt", "pattern": "dense", "rank": null,
+              "inputs": [
+                {"name": "tokens", "shape": [4, 16], "dtype": "i32"},
+                {"name": "lens", "shape": [4], "dtype": "i32"},
+                {"name": "w.embed.w", "shape": [160, 64], "dtype": "f32"}
+              ]}
+          }
+        }"#;
+        std::fs::write(dir.join("io_manifest.json"), text).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.dims.vocab, 160);
+        assert_eq!(m.dims.batch, 4);
+        let v = m.variant("dense").unwrap();
+        assert_eq!(v.inputs.len(), 3);
+        assert_eq!(v.inputs[2].name, "w.embed.w");
+        assert_eq!(v.inputs[2].elements(), 160 * 64);
+        assert!(m.variant("nope").is_err());
+        assert!((m.train_valid_ppl - 1.7).abs() < 1e-9);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors() {
+        let m = Manifest::load(Path::new("/definitely/not/here"));
+        assert!(m.is_err());
+    }
+}

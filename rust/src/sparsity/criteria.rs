@@ -1,0 +1,204 @@
+//! Selection criteria (paper §2.2): how to score each activation element.
+//!
+//! Scores feed [`crate::sparsity::nm::nm_mask`] / unstructured top-k. These
+//! rust implementations mirror `python/compile/kernels/ref.py` exactly and
+//! are exercised against golden vectors exported by the python oracle.
+
+use crate::util::tensor::Tensor;
+use anyhow::{bail, Result};
+use std::fmt;
+
+/// Which activation-scoring criterion to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Criterion {
+    /// `S(x_ij) = |x_ij|` — plain magnitude (ACT).
+    Act,
+    /// Cosine-Loss ACTivation (CLACT, proposed in the paper):
+    /// `S(x_ij) = |x_ij| / ||x_i,:||_2 * ||x_:,j||_2` — row-normalized
+    /// magnitude re-weighted by column (channel) energy over the sequence.
+    Clact,
+    /// Amber-Pruner: `S(x_ij) = |x_ij| * L(ŵ_:,j)` where `L` is the
+    /// channel-wise l2 norm of outlier-clipped, standardized weights.
+    Amber,
+}
+
+impl Criterion {
+    pub fn parse(s: &str) -> Result<Criterion> {
+        match s.to_ascii_lowercase().as_str() {
+            "act" | "magnitude" => Ok(Criterion::Act),
+            "clact" => Ok(Criterion::Clact),
+            "amber" | "amber-pruner" => Ok(Criterion::Amber),
+            other => bail!("unknown criterion '{other}'"),
+        }
+    }
+}
+
+impl fmt::Display for Criterion {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Criterion::Act => write!(f, "act"),
+            Criterion::Clact => write!(f, "clact"),
+            Criterion::Amber => write!(f, "amber"),
+        }
+    }
+}
+
+/// Score a `[rows, h]` activation matrix with the ACT criterion.
+pub fn score_act(x: &Tensor) -> Tensor {
+    Tensor::from_vec(&x.shape, x.data.iter().map(|v| v.abs()).collect())
+}
+
+/// Score with CLACT (paper eq. 4). `x` is `[l, h]` — sequence by hidden.
+pub fn score_clact(x: &Tensor) -> Tensor {
+    let (l, h) = (x.rows(), x.cols());
+    // Column energies: sqrt(sum_p x_pj^2).
+    let mut col_energy = vec![0.0f64; h];
+    for i in 0..l {
+        for (j, v) in x.row(i).iter().enumerate() {
+            col_energy[j] += (*v as f64) * (*v as f64);
+        }
+    }
+    let col_energy: Vec<f32> = col_energy.iter().map(|e| (e.sqrt()) as f32).collect();
+    let mut out = Tensor::zeros(&x.shape);
+    for i in 0..l {
+        let row = x.row(i);
+        let row_norm = (row.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>()).sqrt() as f32;
+        let denom = if row_norm == 0.0 { 1.0 } else { row_norm };
+        for j in 0..h {
+            out.data[i * h + j] = row[j].abs() / denom * col_energy[j];
+        }
+    }
+    out
+}
+
+/// Compute the Amber-Pruner channel scale vector `L(ŵ_:,j)` from a weight
+/// matrix `w: [out, in]`: clip weights outside the [0.5, 99.5] percentiles,
+/// standardize, then take the l2 norm of each *input-channel* column.
+pub fn amber_channel_norms(w: &Tensor) -> Vec<f32> {
+    let (o, i) = (w.rows(), w.cols());
+    // Percentile clipping bounds over the whole matrix.
+    let mut sorted: Vec<f32> = w.data.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let lo = sorted[((sorted.len() as f64) * 0.005) as usize];
+    let hi = sorted[(((sorted.len() as f64) * 0.995) as usize).min(sorted.len() - 1)];
+    let clipped: Vec<f32> = w.data.iter().map(|v| v.clamp(lo, hi)).collect();
+    // Standardize.
+    let mean = clipped.iter().map(|v| *v as f64).sum::<f64>() / clipped.len() as f64;
+    let var = clipped
+        .iter()
+        .map(|v| (*v as f64 - mean).powi(2))
+        .sum::<f64>()
+        / clipped.len() as f64;
+    let std = var.sqrt().max(1e-8);
+    // Channel-wise l2 over output rows for each input column j.
+    let mut norms = vec![0.0f64; i];
+    for r in 0..o {
+        for j in 0..i {
+            let z = (clipped[r * i + j] as f64 - mean) / std;
+            norms[j] += z * z;
+        }
+    }
+    norms.iter().map(|n| n.sqrt() as f32).collect()
+}
+
+/// Score with Amber-Pruner given precomputed channel norms.
+pub fn score_amber(x: &Tensor, channel_norms: &[f32]) -> Tensor {
+    let (l, h) = (x.rows(), x.cols());
+    assert_eq!(channel_norms.len(), h);
+    let mut out = Tensor::zeros(&x.shape);
+    for i in 0..l {
+        for j in 0..h {
+            out.data[i * h + j] = x.data[i * h + j].abs() * channel_norms[j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rand_tensor(rng: &mut Rng, l: usize, h: usize) -> Tensor {
+        Tensor::from_vec(
+            &[l, h],
+            (0..l * h).map(|_| rng.normal() as f32).collect(),
+        )
+    }
+
+    #[test]
+    fn parse_criteria() {
+        assert_eq!(Criterion::parse("act").unwrap(), Criterion::Act);
+        assert_eq!(Criterion::parse("CLACT").unwrap(), Criterion::Clact);
+        assert_eq!(Criterion::parse("amber-pruner").unwrap(), Criterion::Amber);
+        assert!(Criterion::parse("wanda2").is_err());
+    }
+
+    #[test]
+    fn act_is_abs() {
+        let x = Tensor::from_vec(&[1, 3], vec![-1.0, 2.0, -3.0]);
+        assert_eq!(score_act(&x).data, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn clact_reduces_to_l1_like_for_single_row() {
+        // Paper: "for l=1 [CLACT] reduces to an l1-type criterion" — the
+        // ordering matches plain magnitude for a single token.
+        let x = Tensor::from_vec(&[1, 4], vec![0.5, -3.0, 1.0, 2.0]);
+        let s = score_clact(&x);
+        let order = |v: &[f32]| {
+            let mut idx: Vec<usize> = (0..v.len()).collect();
+            idx.sort_by(|&a, &b| v[b].partial_cmp(&v[a]).unwrap());
+            idx
+        };
+        assert_eq!(order(&s.data), order(&score_act(&x).data));
+    }
+
+    #[test]
+    fn clact_upweights_high_energy_columns() {
+        // Two tokens; column 0 has much higher energy across the sequence.
+        let x = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 10.0, 0.1]);
+        let s = score_clact(&x);
+        // For token 0 the equal-magnitude elements are separated by column
+        // energy: col 0 score > col 1 score.
+        assert!(s.data[0] > s.data[1]);
+    }
+
+    #[test]
+    fn clact_zero_row_safe() {
+        let x = Tensor::from_vec(&[2, 2], vec![0.0, 0.0, 1.0, 2.0]);
+        let s = score_clact(&x);
+        assert!(s.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn amber_norms_shape_and_positivity() {
+        let mut rng = Rng::new(5);
+        let w = rand_tensor(&mut rng, 32, 16);
+        let norms = amber_channel_norms(&w);
+        assert_eq!(norms.len(), 16);
+        assert!(norms.iter().all(|n| *n > 0.0));
+    }
+
+    #[test]
+    fn amber_outlier_insensitive() {
+        // A giant outlier in one weight should barely move the channel norms
+        // because of percentile clipping.
+        let mut rng = Rng::new(6);
+        let w = rand_tensor(&mut rng, 64, 8);
+        let base = amber_channel_norms(&w);
+        let mut w2 = w.clone();
+        w2.data[3] = 1e6;
+        let spiked = amber_channel_norms(&w2);
+        for (a, b) in base.iter().zip(&spiked) {
+            assert!((a - b).abs() / a.max(1e-6) < 0.25, "clipping bounded the outlier");
+        }
+    }
+
+    #[test]
+    fn amber_score_scales_by_channel() {
+        let x = Tensor::from_vec(&[1, 2], vec![1.0, 1.0]);
+        let s = score_amber(&x, &[2.0, 0.5]);
+        assert_eq!(s.data, vec![2.0, 0.5]);
+    }
+}

@@ -1,0 +1,173 @@
+//! Sparsification core: patterns, selection criteria, masks and transforms.
+//!
+//! This is the rust-native reference implementation of everything the paper's
+//! §2 defines. The Pallas kernel (L1) implements the same semantics for the
+//! accelerated path; `python/tests/` checks kernel-vs-oracle in python and
+//! `rust/tests/` checks this module against golden vectors exported from the
+//! oracle, so all three implementations are pinned to one behaviour:
+//!
+//! - **N:M selection** keeps the top-N elements by score in each
+//!   non-overlapping block of M along the last (hidden) dimension.
+//!   Ties break toward the *lower index* (stable rank), matching the kernel.
+//! - **Unstructured selection** keeps the top `keep_frac` fraction per row.
+//! - Scores come from a [`Criterion`]: ACT, CLACT, Amber-Pruner, or WT.
+//! - Error-mitigation [`transforms`] (D-PTS/S-PTS shift, VAR) wrap selection.
+
+pub mod criteria;
+pub mod nm;
+pub mod transforms;
+pub mod unstructured;
+pub mod weightprune;
+
+use anyhow::{bail, Result};
+use std::fmt;
+
+/// A sparsity pattern from the paper's evaluation grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Pattern {
+    /// No sparsification (the ORIG baseline).
+    Dense,
+    /// Semi-structured N:M — keep `n` of every `m` along the hidden dim.
+    NM { n: u32, m: u32 },
+    /// Unstructured — keep the top `keep_pct`% per token row.
+    Unstructured { keep_pct: u32 },
+}
+
+impl Pattern {
+    /// Parse `"dense" | "2:4" | "8:16" | "u50" | ...`.
+    pub fn parse(s: &str) -> Result<Pattern> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("dense") || s.eq_ignore_ascii_case("orig") {
+            return Ok(Pattern::Dense);
+        }
+        if let Some(p) = s.strip_prefix('u') {
+            let sparsity: u32 = p.parse()?;
+            if sparsity >= 100 {
+                bail!("unstructured sparsity {sparsity}% out of range");
+            }
+            return Ok(Pattern::Unstructured { keep_pct: 100 - sparsity });
+        }
+        if let Some((n, m)) = s.split_once(':') {
+            let n: u32 = n.parse()?;
+            let m: u32 = m.parse()?;
+            if n == 0 || m == 0 || n > m {
+                bail!("invalid N:M pattern {s}");
+            }
+            return Ok(Pattern::NM { n, m });
+        }
+        bail!("unrecognized sparsity pattern '{s}'")
+    }
+
+    /// Fraction of elements kept.
+    pub fn density(&self) -> f64 {
+        match self {
+            Pattern::Dense => 1.0,
+            Pattern::NM { n, m } => *n as f64 / *m as f64,
+            Pattern::Unstructured { keep_pct } => *keep_pct as f64 / 100.0,
+        }
+    }
+
+    /// Fraction of elements removed.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.density()
+    }
+
+    /// Number of valid layouts per block (`C(m, n)`), the paper's
+    /// flexibility measure (§1: 2:4 has 6, 8:16 has 12870).
+    pub fn layouts_per_block(&self) -> Option<u128> {
+        match self {
+            Pattern::NM { n, m } => Some(crate::metadata::binomial(*m as u64, *n as u64)),
+            _ => None,
+        }
+    }
+
+    /// Canonical artifact key: which HLO variant serves this pattern.
+    pub fn artifact_key(&self) -> String {
+        match self {
+            Pattern::Dense => "dense".to_string(),
+            Pattern::NM { n, m } => format!("{n}_{m}"),
+            Pattern::Unstructured { keep_pct } => format!("u{}", 100 - keep_pct),
+        }
+    }
+}
+
+impl fmt::Display for Pattern {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Pattern::Dense => write!(f, "dense"),
+            Pattern::NM { n, m } => write!(f, "{n}:{m}"),
+            Pattern::Unstructured { keep_pct } => write!(f, "u{}", 100 - keep_pct),
+        }
+    }
+}
+
+/// The paper's full evaluated pattern grid (Figure 2 / Table 7).
+pub fn paper_patterns() -> Vec<Pattern> {
+    vec![
+        Pattern::NM { n: 2, m: 4 },
+        Pattern::NM { n: 4, m: 8 },
+        Pattern::NM { n: 8, m: 16 },
+        Pattern::NM { n: 16, m: 32 },
+        Pattern::Unstructured { keep_pct: 50 },
+        Pattern::Unstructured { keep_pct: 30 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_patterns() {
+        assert_eq!(Pattern::parse("dense").unwrap(), Pattern::Dense);
+        assert_eq!(Pattern::parse("2:4").unwrap(), Pattern::NM { n: 2, m: 4 });
+        assert_eq!(
+            Pattern::parse("16:32").unwrap(),
+            Pattern::NM { n: 16, m: 32 }
+        );
+        assert_eq!(
+            Pattern::parse("u70").unwrap(),
+            Pattern::Unstructured { keep_pct: 30 }
+        );
+        assert!(Pattern::parse("5:4").is_err());
+        assert!(Pattern::parse("0:4").is_err());
+        assert!(Pattern::parse("u105").is_err());
+        assert!(Pattern::parse("nonsense").is_err());
+    }
+
+    #[test]
+    fn density_and_sparsity() {
+        assert_eq!(Pattern::NM { n: 2, m: 4 }.density(), 0.5);
+        assert_eq!(Pattern::Unstructured { keep_pct: 30 }.sparsity(), 0.7);
+        assert_eq!(Pattern::Dense.density(), 1.0);
+    }
+
+    #[test]
+    fn layout_counts_match_paper() {
+        // §1: "a 2:4 block has only C(4,2) = 6 valid configurations" and
+        // "8:16 provide ... C(16,8) = 12,870 possible layouts".
+        assert_eq!(Pattern::NM { n: 2, m: 4 }.layouts_per_block(), Some(6));
+        assert_eq!(
+            Pattern::NM { n: 8, m: 16 }.layouts_per_block(),
+            Some(12_870)
+        );
+        // "nearly 10x more than four concatenated 2:4 blocks (6^4 = 1296)".
+        assert!(12_870f64 / 1296.0 > 9.0);
+    }
+
+    #[test]
+    fn display_roundtrip() {
+        for p in paper_patterns() {
+            assert_eq!(Pattern::parse(&p.to_string()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn artifact_keys() {
+        assert_eq!(Pattern::NM { n: 8, m: 16 }.artifact_key(), "8_16");
+        assert_eq!(
+            Pattern::Unstructured { keep_pct: 50 }.artifact_key(),
+            "u50"
+        );
+    }
+}

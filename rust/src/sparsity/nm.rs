@@ -1,0 +1,188 @@
+//! Exact N:M semi-structured selection.
+//!
+//! Semantics (shared with the Pallas kernel — see
+//! `python/compile/kernels/nm_sparse.py::nm_mask_ref`):
+//! within each non-overlapping block of `m` consecutive elements along the
+//! last dimension, keep the `n` elements with the highest score; the rank of
+//! element `i` is `#{j : s_j > s_i} + #{j < i : s_j == s_i}` so ties resolve
+//! toward lower indices and exactly `n` elements survive per block.
+
+/// Compute the keep-mask for one row of scores. `scores.len()` must be a
+/// multiple of `m`.
+pub fn nm_mask(scores: &[f32], n: usize, m: usize) -> Vec<bool> {
+    assert!(n > 0 && n <= m, "invalid N:M {n}:{m}");
+    assert_eq!(
+        scores.len() % m,
+        0,
+        "row length {} not a multiple of M={m}",
+        scores.len()
+    );
+    let mut mask = vec![false; scores.len()];
+    for (b, block) in scores.chunks_exact(m).enumerate() {
+        let base = b * m;
+        for i in 0..m {
+            let si = block[i];
+            let mut rank = 0usize;
+            for (j, &sj) in block.iter().enumerate() {
+                if sj > si || (sj == si && j < i) {
+                    rank += 1;
+                }
+            }
+            if rank < n {
+                mask[base + i] = true;
+            }
+        }
+    }
+    mask
+}
+
+/// Apply an N:M mask in place: zero the dropped elements of `values` using
+/// scores (which may differ from values — e.g. CLACT or Amber scores).
+pub fn nm_prune_by(values: &mut [f32], scores: &[f32], n: usize, m: usize) {
+    assert_eq!(values.len(), scores.len());
+    let mask = nm_mask(scores, n, m);
+    for (v, keep) in values.iter_mut().zip(mask) {
+        if !keep {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Magnitude-based N:M pruning (the paper's ACT criterion): score = |x|.
+pub fn nm_prune_magnitude(values: &mut [f32], n: usize, m: usize) {
+    let scores: Vec<f32> = values.iter().map(|x| x.abs()).collect();
+    nm_prune_by(values, &scores, n, m);
+}
+
+/// Check that a row satisfies the N:M constraint (≤ n non-zeros per block;
+/// exactly n when the block had ≥ n non-zero scores).
+pub fn satisfies_nm(values: &[f32], n: usize, m: usize) -> bool {
+    values.len() % m == 0
+        && values
+            .chunks_exact(m)
+            .all(|b| b.iter().filter(|x| **x != 0.0).count() <= n)
+}
+
+/// Count of non-zeros per block, for diagnostics.
+pub fn block_occupancy(values: &[f32], m: usize) -> Vec<usize> {
+    values
+        .chunks_exact(m)
+        .map(|b| b.iter().filter(|x| **x != 0.0).count())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::miniprop::{forall_simple, gen_activations, Config};
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn keeps_top_n_simple() {
+        let s = [1.0, 4.0, 3.0, 2.0];
+        let mask = nm_mask(&s, 2, 4);
+        assert_eq!(mask, vec![false, true, true, false]);
+    }
+
+    #[test]
+    fn ties_break_low_index() {
+        let s = [5.0, 5.0, 5.0, 5.0];
+        let mask = nm_mask(&s, 2, 4);
+        assert_eq!(mask, vec![true, true, false, false]);
+    }
+
+    #[test]
+    fn multiple_blocks_independent() {
+        let s = [9.0, 0.0, 0.0, 1.0, /* block 2 */ 0.0, 1.0, 2.0, 3.0];
+        let mask = nm_mask(&s, 2, 4);
+        assert_eq!(
+            mask,
+            vec![true, false, false, true, false, false, true, true]
+        );
+    }
+
+    #[test]
+    fn exactly_n_kept_always() {
+        let cfg = Config::default();
+        forall_simple(
+            &cfg,
+            |rng: &mut Rng| {
+                let m = *rng.choose(&[4usize, 8, 16, 32]);
+                let n = rng.range(1, m + 1);
+                let blocks = rng.range(1, 8);
+                (gen_activations(rng, m * blocks), n, m)
+            },
+            |(xs, n, m)| {
+                let mask = nm_mask(xs, *n, *m);
+                mask.chunks_exact(*m)
+                    .all(|b| b.iter().filter(|k| **k).count() == *n)
+            },
+        );
+    }
+
+    #[test]
+    fn kept_scores_dominate_dropped() {
+        let cfg = Config::default();
+        forall_simple(
+            &cfg,
+            |rng: &mut Rng| {
+                let m = *rng.choose(&[4usize, 8, 16]);
+                let n = rng.range(1, m);
+                (gen_activations(rng, m * 4), n, m)
+            },
+            |(xs, n, m)| {
+                let mask = nm_mask(xs, *n, *m);
+                xs.chunks_exact(*m).zip(mask.chunks_exact(*m)).all(|(b, mk)| {
+                    let min_kept = b
+                        .iter()
+                        .zip(mk)
+                        .filter(|(_, k)| **k)
+                        .map(|(x, _)| *x)
+                        .fold(f32::INFINITY, f32::min);
+                    let max_dropped = b
+                        .iter()
+                        .zip(mk)
+                        .filter(|(_, k)| !**k)
+                        .map(|(x, _)| *x)
+                        .fold(f32::NEG_INFINITY, f32::max);
+                    max_dropped <= min_kept
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn n_equals_m_keeps_all() {
+        let s = [1.0f32, -2.0, 3.0, -4.0];
+        assert!(nm_mask(&s, 4, 4).iter().all(|k| *k));
+    }
+
+    #[test]
+    fn prune_magnitude_zeroes_small() {
+        let mut v = [0.1f32, -9.0, 0.2, 8.0];
+        nm_prune_magnitude(&mut v, 2, 4);
+        assert_eq!(v, [0.0, -9.0, 0.0, 8.0]);
+        assert!(satisfies_nm(&v, 2, 4));
+    }
+
+    #[test]
+    fn prune_by_external_scores() {
+        // Values pruned according to someone else's scores (CLACT/Amber).
+        let mut v = [10.0f32, 20.0, 30.0, 40.0];
+        let scores = [4.0f32, 3.0, 2.0, 1.0];
+        nm_prune_by(&mut v, &scores, 2, 4);
+        assert_eq!(v, [10.0, 20.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn occupancy_counts() {
+        let v = [1.0f32, 0.0, 0.0, 2.0, 0.0, 0.0, 0.0, 5.0];
+        assert_eq!(block_occupancy(&v, 4), vec![2, 1]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_length_panics() {
+        nm_mask(&[1.0, 2.0, 3.0], 2, 4);
+    }
+}

@@ -1,0 +1,281 @@
+//! Error-mitigation transformations (paper §2.3).
+//!
+//! Rust-native reference of the shift/variance corrections that wrap the
+//! selection step. The accelerated path implements the same math inside the
+//! Pallas kernel; these versions serve weight-side processing, analysis
+//! binaries and cross-checks.
+//!
+//! Compensated forms (for a `[l, h]` activation matrix `X`, mask `M`):
+//! - PTS (per-token shift):  `Y = ((X̂ ⊙ M) + η) Wᵀ` with `X̂ = X − η`;
+//!   D-PTS uses the dynamic per-token mean, S-PTS/L-PTS use a stored
+//!   per-channel vector.
+//! - VAR: `Y = ν (X ⊙ M) Wᵀ`, `ν = sqrt(Var[X] / Var[X ⊙ M])` per token.
+
+use crate::util::tensor::Tensor;
+
+/// Per-token (row) mean — the D-PTS η.
+pub fn row_means(x: &Tensor) -> Vec<f32> {
+    (0..x.rows())
+        .map(|i| {
+            let row = x.row(i);
+            (row.iter().map(|v| *v as f64).sum::<f64>() / row.len() as f64) as f32
+        })
+        .collect()
+}
+
+/// Per-channel (column) mean over the rows — the S-PTS η collected during
+/// calibration.
+pub fn col_means(x: &Tensor) -> Vec<f32> {
+    let (l, h) = (x.rows(), x.cols());
+    let mut sums = vec![0.0f64; h];
+    for i in 0..l {
+        for (j, v) in x.row(i).iter().enumerate() {
+            sums[j] += *v as f64;
+        }
+    }
+    sums.iter().map(|s| (*s / l as f64) as f32).collect()
+}
+
+/// Subtract a per-token scalar shift: `x̂_ij = x_ij − η_i`.
+pub fn shift_rows(x: &Tensor, eta: &[f32]) -> Tensor {
+    assert_eq!(eta.len(), x.rows());
+    let h = x.cols();
+    let mut out = x.clone();
+    for i in 0..x.rows() {
+        for v in out.row_mut(i) {
+            *v -= eta[i];
+        }
+        let _ = h;
+    }
+    out
+}
+
+/// Subtract a per-channel shift: `x̂_ij = x_ij − η_j`.
+pub fn shift_cols(x: &Tensor, eta: &[f32]) -> Tensor {
+    assert_eq!(eta.len(), x.cols());
+    let mut out = x.clone();
+    for i in 0..x.rows() {
+        for (v, e) in out.row_mut(i).iter_mut().zip(eta) {
+            *v -= *e;
+        }
+    }
+    out
+}
+
+/// Population variance of a row.
+fn row_var(row: &[f32]) -> f64 {
+    let n = row.len() as f64;
+    let mean = row.iter().map(|v| *v as f64).sum::<f64>() / n;
+    row.iter().map(|v| (*v as f64 - mean).powi(2)).sum::<f64>() / n
+}
+
+/// Per-token VAR correction factors `ν_i = sqrt(Var[x_i] / Var[x̃_i])`
+/// where `x̃` is the pruned row. Guards against a zero post-prune variance.
+pub fn var_correction(x: &Tensor, pruned: &Tensor) -> Vec<f32> {
+    assert_eq!(x.shape, pruned.shape);
+    (0..x.rows())
+        .map(|i| {
+            let v_orig = row_var(x.row(i));
+            let v_pruned = row_var(pruned.row(i));
+            if v_pruned <= 1e-12 {
+                1.0
+            } else {
+                (v_orig / v_pruned).sqrt() as f32
+            }
+        })
+        .collect()
+}
+
+/// Scale each row by a per-token factor.
+pub fn scale_rows(x: &mut Tensor, nu: &[f32]) {
+    assert_eq!(nu.len(), x.rows());
+    for i in 0..x.rows() {
+        let f = nu[i];
+        for v in x.row_mut(i) {
+            *v *= f;
+        }
+    }
+}
+
+/// Full reference pipeline for one activation matrix: optional shift →
+/// magnitude N:M prune → unshift → optional VAR. Mirrors the kernel's
+/// `sparse_linear` pre-matmul stage; used by analysis tools and tests.
+pub fn mitigated_nm_prune(
+    x: &Tensor,
+    n: usize,
+    m: usize,
+    shift: Shift,
+    use_var: bool,
+) -> Tensor {
+    let (shifted, restore): (Tensor, Option<ShiftKind>) = match &shift {
+        Shift::None => (x.clone(), None),
+        Shift::DynamicPerToken => {
+            let eta = row_means(x);
+            (shift_rows(x, &eta), Some(ShiftKind::Rows(eta)))
+        }
+        Shift::PerChannel(eta) => (shift_cols(x, eta), Some(ShiftKind::Cols(eta.clone()))),
+    };
+    let mut pruned = shifted.clone();
+    for i in 0..pruned.rows() {
+        crate::sparsity::nm::nm_prune_magnitude(pruned.row_mut(i), n, m);
+    }
+    // Compensate: add η back (paper: Y = ((X̂⊙M) + η) Wᵀ).
+    let mut restored = pruned.clone();
+    match restore {
+        None => {}
+        Some(ShiftKind::Rows(eta)) => {
+            for i in 0..restored.rows() {
+                for v in restored.row_mut(i) {
+                    *v += eta[i];
+                }
+            }
+        }
+        Some(ShiftKind::Cols(eta)) => {
+            for i in 0..restored.rows() {
+                for (v, e) in restored.row_mut(i).iter_mut().zip(&eta) {
+                    *v += *e;
+                }
+            }
+        }
+    }
+    if use_var {
+        // VAR is defined on the unshifted prune (paper applies it to X⊙M);
+        // when combined with shift we scale the restored matrix, matching
+        // the kernel's VAR+PTS composition order.
+        let nu = var_correction(x, &restored);
+        scale_rows(&mut restored, &nu);
+    }
+    restored
+}
+
+/// Shift mode for [`mitigated_nm_prune`].
+#[derive(Clone, Debug)]
+pub enum Shift {
+    None,
+    /// D-PTS: dynamic per-token mean.
+    DynamicPerToken,
+    /// S-PTS / L-PTS: a stored per-channel vector.
+    PerChannel(Vec<f32>),
+}
+
+enum ShiftKind {
+    Rows(Vec<f32>),
+    Cols(Vec<f32>),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rand_x(rng: &mut Rng, l: usize, h: usize, mean: f32) -> Tensor {
+        Tensor::from_vec(
+            &[l, h],
+            (0..l * h).map(|_| rng.normal() as f32 + mean).collect(),
+        )
+    }
+
+    #[test]
+    fn row_means_exact() {
+        let x = Tensor::from_vec(&[2, 2], vec![1.0, 3.0, -1.0, 1.0]);
+        assert_eq!(row_means(&x), vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn col_means_exact() {
+        let x = Tensor::from_vec(&[2, 2], vec![1.0, 3.0, 3.0, 5.0]);
+        assert_eq!(col_means(&x), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn shift_then_unshift_identity() {
+        let mut rng = Rng::new(2);
+        let x = rand_x(&mut rng, 4, 8, 1.5);
+        let eta = row_means(&x);
+        let shifted = shift_rows(&x, &eta);
+        let mut back = shifted.clone();
+        for i in 0..back.rows() {
+            for v in back.row_mut(i) {
+                *v += eta[i];
+            }
+        }
+        assert!(x.max_abs_diff(&back) < 1e-5);
+    }
+
+    #[test]
+    fn var_correction_restores_variance() {
+        let mut rng = Rng::new(3);
+        let x = rand_x(&mut rng, 8, 64, 0.0);
+        let mut pruned = x.clone();
+        for i in 0..pruned.rows() {
+            crate::sparsity::nm::nm_prune_magnitude(pruned.row_mut(i), 2, 4);
+        }
+        let nu = var_correction(&x, &pruned);
+        let mut corrected = pruned.clone();
+        scale_rows(&mut corrected, &nu);
+        for i in 0..x.rows() {
+            let v0 = row_var(x.row(i));
+            let v1 = row_var(corrected.row(i));
+            // Variance ratio restored within tolerance (mean also moves, so
+            // equality is approximate).
+            assert!((v1 / v0 - 1.0).abs() < 0.35, "row {i}: {v1} vs {v0}");
+        }
+    }
+
+    #[test]
+    fn var_correction_handles_all_pruned() {
+        let x = Tensor::from_vec(&[1, 4], vec![1.0, 1.0, 1.0, 1.0]);
+        let pruned = Tensor::from_vec(&[1, 4], vec![0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(var_correction(&x, &pruned), vec![1.0]);
+    }
+
+    #[test]
+    fn dpts_helps_shifted_distribution() {
+        // The motivating case: activations centred far from zero. Plain
+        // magnitude pruning keeps everything (all magnitudes similar), so
+        // the pruned output loses the small-signal structure; centering
+        // first prunes the *deviation* and reconstructs better.
+        let mut rng = Rng::new(7);
+        let l = 16;
+        let h = 64;
+        let x = rand_x(&mut rng, l, h, 10.0); // mean 10, sd 1
+        let plain = mitigated_nm_prune(&x, 2, 4, Shift::None, false);
+        let dpts = mitigated_nm_prune(&x, 2, 4, Shift::DynamicPerToken, false);
+        let err = |a: &Tensor| {
+            a.data
+                .iter()
+                .zip(&x.data)
+                .map(|(p, o)| ((p - o) as f64).powi(2))
+                .sum::<f64>()
+        };
+        assert!(
+            err(&dpts) < err(&plain) * 0.5,
+            "D-PTS reconstruction error should be much lower: {} vs {}",
+            err(&dpts),
+            err(&plain)
+        );
+    }
+
+    #[test]
+    fn spts_matches_dpts_when_stats_stationary() {
+        // When per-channel means equal the true shift, S-PTS ≈ D-PTS.
+        let mut rng = Rng::new(8);
+        let x = rand_x(&mut rng, 32, 32, 5.0);
+        let eta = col_means(&x);
+        let spts = mitigated_nm_prune(&x, 8, 16, Shift::PerChannel(eta), false);
+        let dpts = mitigated_nm_prune(&x, 8, 16, Shift::DynamicPerToken, false);
+        let d = spts.max_abs_diff(&dpts);
+        assert!(d < 2.0, "close but not identical: {d}");
+    }
+
+    #[test]
+    fn mitigated_output_not_nm_sparse_after_compensation() {
+        // After adding η back the output is dense again — the sparsity lives
+        // in (X̂ ⊙ M); this mirrors the compensated matmul formulation.
+        let mut rng = Rng::new(9);
+        let x = rand_x(&mut rng, 2, 16, 3.0);
+        let out = mitigated_nm_prune(&x, 2, 4, Shift::DynamicPerToken, false);
+        let zeros = out.data.iter().filter(|v| **v == 0.0).count();
+        assert!(zeros < out.len() / 2);
+    }
+}

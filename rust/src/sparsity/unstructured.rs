@@ -1,0 +1,146 @@
+//! Unstructured (top-k) selection.
+//!
+//! The paper's unstructured baseline applies magnitude thresholding at a
+//! target sparsity level; we implement the per-row exact top-k variant
+//! (used for activations, matching the kernel's per-token semantics) and a
+//! global-threshold variant over a whole tensor (used for weight pruning,
+//! matching how magnitude weight pruning is usually done).
+
+/// Keep-mask retaining the `keep` highest-scoring elements of the row.
+/// Ties break toward lower indices (same rank rule as N:M).
+pub fn topk_mask(scores: &[f32], keep: usize) -> Vec<bool> {
+    let keep = keep.min(scores.len());
+    if keep == scores.len() {
+        return vec![true; scores.len()];
+    }
+    // Sort indices by (score desc, index asc) and mark the first `keep`.
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut mask = vec![false; scores.len()];
+    for &i in idx.iter().take(keep) {
+        mask[i] = true;
+    }
+    mask
+}
+
+/// Prune a row in place, keeping the top `keep_frac` fraction by |x|.
+pub fn prune_row_magnitude(values: &mut [f32], keep_frac: f64) {
+    let keep = ((values.len() as f64) * keep_frac).round() as usize;
+    let scores: Vec<f32> = values.iter().map(|x| x.abs()).collect();
+    let mask = topk_mask(&scores, keep);
+    for (v, k) in values.iter_mut().zip(mask) {
+        if !k {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Global magnitude threshold that achieves `sparsity` over the whole slice
+/// (used for weight tensors). Returns the threshold used.
+pub fn prune_global_magnitude(values: &mut [f32], sparsity: f64) -> f32 {
+    assert!((0.0..1.0).contains(&sparsity));
+    if sparsity == 0.0 || values.is_empty() {
+        return 0.0;
+    }
+    let mut mags: Vec<f32> = values.iter().map(|x| x.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let cut = ((values.len() as f64) * sparsity) as usize;
+    let thresh = mags[cut.min(values.len() - 1)];
+    // Strict `<` keeps elements equal to the threshold: removal count is
+    // then <= target, erring toward keeping weight mass (matches jnp ref).
+    for v in values.iter_mut() {
+        if v.abs() < thresh {
+            *v = 0.0;
+        }
+    }
+    thresh
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::miniprop::{forall_simple, gen_activations, Config};
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn topk_keeps_largest() {
+        let s = [0.5f32, 3.0, 1.0, 2.0];
+        assert_eq!(topk_mask(&s, 2), vec![false, true, false, true]);
+    }
+
+    #[test]
+    fn topk_tie_low_index() {
+        let s = [1.0f32, 1.0, 1.0];
+        assert_eq!(topk_mask(&s, 2), vec![true, true, false]);
+    }
+
+    #[test]
+    fn topk_full_keep() {
+        let s = [1.0f32, 2.0];
+        assert_eq!(topk_mask(&s, 5), vec![true, true]);
+    }
+
+    #[test]
+    fn prune_row_density() {
+        let cfg = Config::default();
+        forall_simple(
+            &cfg,
+            |rng: &mut Rng| {
+                let len = rng.range(10, 200);
+                let keep = rng.range(1, 10) as f64 / 10.0;
+                (gen_activations(rng, len), keep)
+            },
+            |(xs, keep_frac)| {
+                let mut v = xs.clone();
+                prune_row_magnitude(&mut v, *keep_frac);
+                let nonzero = v.iter().filter(|x| **x != 0.0).count();
+                let target = ((xs.len() as f64) * keep_frac).round() as usize;
+                nonzero <= target // zeros in input may reduce the count
+            },
+        );
+    }
+
+    #[test]
+    fn global_threshold_sparsity() {
+        let mut v: Vec<f32> = (1..=100).map(|i| i as f32).collect();
+        let t = prune_global_magnitude(&mut v, 0.7);
+        let zeros = v.iter().filter(|x| **x == 0.0).count();
+        assert_eq!(zeros, 70);
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn global_zero_sparsity_noop() {
+        let mut v = vec![1.0f32, -2.0];
+        prune_global_magnitude(&mut v, 0.0);
+        assert_eq!(v, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn global_preserves_largest() {
+        let cfg = Config::default();
+        forall_simple(
+            &cfg,
+            |rng: &mut Rng| {
+                let len = rng.range(16, 256);
+                gen_activations(rng, len)
+            },
+            |xs| {
+                let mut v = xs.clone();
+                prune_global_magnitude(&mut v, 0.5);
+                // The max-|x| element always survives.
+                let (argmax, _) = xs
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+                    .unwrap();
+                xs[argmax] == 0.0 || v[argmax] != 0.0
+            },
+        );
+    }
+}

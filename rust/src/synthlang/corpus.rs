@@ -1,0 +1,235 @@
+//! Corpus generation: verbalizing the world into a training token stream.
+//!
+//! The corpus plays WikiText-2's role: it is the training distribution, the
+//! held-out perplexity set, and the calibration set for S-PTS/L-PTS and
+//! R-Sparse. Sentences come from a fixed template family that *includes the
+//! eval-task formats* (QA, true/false, instruction-following), so the dense
+//! model learns both the facts and the answer formats.
+
+use crate::synthlang::vocab::{Vocab, EOS};
+use crate::synthlang::world::{Entity, World};
+use crate::util::prng::Rng;
+use anyhow::Result;
+
+/// Number words used by instruction templates (count 2..=4).
+pub const COUNT_WORDS: [(usize, &str); 3] = [(2, "two"), (3, "three"), (4, "four")];
+
+/// Render one fact/QA/instruction sentence about `e`. The template mix is
+/// the training distribution; eval tasks reuse the same surface forms.
+pub fn render_sentence(world: &World, e: &Entity, rng: &mut Rng) -> String {
+    let name = e.name();
+    let loc = e.location_word();
+    let food = e.food_word();
+    let size = e.size_word();
+    match rng.below(14) {
+        0 => format!("the {name} lives in the {loc} ."),
+        1 => format!("the {name} eats {food} ."),
+        2 => format!("the {name} is {size} ."),
+        3 => format!("there is a {size} {name} in the {loc} ."),
+        4 => format!("does the {name} live in the {loc} ? yes ."),
+        5 => {
+            let wrong = world.wrong_location(e, rng);
+            format!(
+                "does the {name} live in the {} ? no .",
+                crate::synthlang::vocab::LOCATIONS[wrong]
+            )
+        }
+        6 => format!("where does the {name} live ? in the {loc} ."),
+        7 => format!("what does the {name} eat ? {food} ."),
+        8 => format!("is it true that the {name} eats {food} ? true ."),
+        9 => {
+            let wrong = world.wrong_food(e, rng);
+            format!(
+                "is it true that the {name} eats {} ? false .",
+                crate::synthlang::vocab::FOODS[wrong]
+            )
+        }
+        10 => {
+            // Two-entity reference resolution (winogrande-style).
+            let other = world.other_entity(e, rng);
+            format!(
+                "the {name} and the {} . who eats {food} ? the {name} .",
+                other.name()
+            )
+        }
+        11 => {
+            // Multi-sentence continuation (hellaswag-style narrative).
+            format!("the {name} is {size} . it lives in the {loc} . it eats {food} .")
+        }
+        12 => {
+            // Instruction: repeat-k (ifeval-style, verifiable).
+            let (count, count_word) = *rng.choose(&COUNT_WORDS);
+            let word = crate::synthlang::vocab::ANIMALS[e.animal];
+            let reps = vec![word; count].join(" ");
+            format!("repeat the word {word} {count_word} times : {reps} .")
+        }
+        _ => {
+            // Instruction: answer-with-N-words.
+            if rng.chance(0.5) {
+                format!("answer with one word . what does the {name} eat ? {food} .")
+            } else {
+                format!("answer with two words . who lives in the {loc} ? {name} .")
+            }
+        }
+    }
+}
+
+/// Build a token stream of approximately `target_tokens` tokens: documents
+/// of 3–8 sentences about random entities, separated by EOS.
+pub fn build_stream(
+    world: &World,
+    vocab: &Vocab,
+    rng: &mut Rng,
+    target_tokens: usize,
+) -> Result<Vec<u32>> {
+    let mut stream: Vec<u32> = Vec::with_capacity(target_tokens + 256);
+    while stream.len() < target_tokens {
+        let sentences = rng.range(3, 9);
+        for _ in 0..sentences {
+            let e = world.entity(rng.below(world.len()));
+            let text = render_sentence(world, e, rng);
+            stream.extend(vocab.encode(&text)?);
+        }
+        stream.push(EOS);
+    }
+    stream.truncate(target_tokens);
+    Ok(stream)
+}
+
+/// The three corpus splits written by `datagen`.
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub train: Vec<u32>,
+    pub valid: Vec<u32>,
+    pub calib: Vec<u32>,
+}
+
+impl Corpus {
+    /// Generate all splits with decorrelated streams over the same world.
+    pub fn generate(
+        world: &World,
+        vocab: &Vocab,
+        seed: u64,
+        train_tokens: usize,
+        valid_tokens: usize,
+        calib_tokens: usize,
+    ) -> Result<Corpus> {
+        let mut base = Rng::new(seed);
+        let mut r_train = base.fork("corpus-train");
+        let mut r_valid = base.fork("corpus-valid");
+        let mut r_calib = base.fork("corpus-calib");
+        Ok(Corpus {
+            train: build_stream(world, vocab, &mut r_train, train_tokens)?,
+            valid: build_stream(world, vocab, &mut r_valid, valid_tokens)?,
+            calib: build_stream(world, vocab, &mut r_calib, calib_tokens)?,
+        })
+    }
+
+    /// Write a split as little-endian u32 (the format `train.py` mmaps).
+    pub fn write_tokens(path: &std::path::Path, tokens: &[u32]) -> Result<()> {
+        let mut bytes = Vec::with_capacity(tokens.len() * 4);
+        for t in tokens {
+            bytes.extend_from_slice(&t.to_le_bytes());
+        }
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+
+    /// Read a split back (used by tests and the perplexity harness).
+    pub fn read_tokens(path: &std::path::Path) -> Result<Vec<u32>> {
+        let bytes = std::fs::read(path)?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "token file not u32-aligned");
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (World, Vocab) {
+        (World::generate(42, 40), Vocab::synthlang())
+    }
+
+    #[test]
+    fn sentences_tokenize_cleanly() {
+        let (world, vocab) = setup();
+        let mut rng = Rng::new(1);
+        for _ in 0..500 {
+            let e = world.entity(rng.below(world.len()));
+            let s = render_sentence(&world, e, &mut rng);
+            let ids = vocab.encode(&s).expect(&s);
+            assert!(!ids.is_empty());
+            assert_eq!(vocab.decode(&ids), s);
+        }
+    }
+
+    #[test]
+    fn stream_reaches_target_and_contains_eos() {
+        let (world, vocab) = setup();
+        let mut rng = Rng::new(2);
+        let stream = build_stream(&world, &vocab, &mut rng, 5000).unwrap();
+        assert_eq!(stream.len(), 5000);
+        assert!(stream.iter().any(|t| *t == EOS));
+        assert!(stream.iter().all(|t| (*t as usize) < vocab.len()));
+    }
+
+    #[test]
+    fn corpus_deterministic() {
+        let (world, vocab) = setup();
+        let a = Corpus::generate(&world, &vocab, 9, 2000, 500, 500).unwrap();
+        let b = Corpus::generate(&world, &vocab, 9, 2000, 500, 500).unwrap();
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.valid, b.valid);
+    }
+
+    #[test]
+    fn splits_differ() {
+        let (world, vocab) = setup();
+        let c = Corpus::generate(&world, &vocab, 9, 2000, 2000, 2000).unwrap();
+        assert_ne!(c.train, c.valid);
+        assert_ne!(c.valid, c.calib);
+    }
+
+    #[test]
+    fn token_file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("nmsparse-corpus-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.tokens");
+        let tokens: Vec<u32> = (0..1000).map(|i| i % 97).collect();
+        Corpus::write_tokens(&path, &tokens).unwrap();
+        assert_eq!(Corpus::read_tokens(&path).unwrap(), tokens);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn repeat_instruction_is_verifiable() {
+        // The repeat-k template must contain the word exactly k+1 times
+        // (once in the instruction + k in the answer).
+        let (world, vocab) = setup();
+        let mut rng = Rng::new(3);
+        let mut found = 0;
+        for _ in 0..2000 {
+            let e = world.entity(rng.below(world.len()));
+            let s = render_sentence(&world, e, &mut rng);
+            if s.starts_with("repeat the word") {
+                found += 1;
+                let word = s.split_whitespace().nth(3).unwrap();
+                let count_word = s.split_whitespace().nth(4).unwrap();
+                let expect = COUNT_WORDS
+                    .iter()
+                    .find(|(_, w)| *w == count_word)
+                    .unwrap()
+                    .0;
+                let occurrences =
+                    s.split_whitespace().filter(|w| *w == word).count();
+                assert_eq!(occurrences, expect + 1, "{s}");
+                let _ = vocab.encode(&s).unwrap();
+            }
+        }
+        assert!(found > 20);
+    }
+}

@@ -1,0 +1,153 @@
+//! SynthLang — the synthetic data substrate.
+//!
+//! Stands in for the gated real data (WikiText-2, BoolQ/ARC/PIQA/WinoGrande,
+//! HellaSwag/OpenBookQA/RTE/MMLU/Lambada, IFEval) per DESIGN.md §1. A seeded
+//! [`world::World`] defines facts; [`corpus`] verbalizes them into training/
+//! validation/calibration token streams; [`tasks`] derives the evaluation
+//! suites. `nmsparse datagen` writes everything under `artifacts/data/`.
+
+pub mod corpus;
+pub mod tasks;
+pub mod vocab;
+pub mod world;
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Generation knobs for `datagen`.
+#[derive(Clone, Debug)]
+pub struct DatagenConfig {
+    pub seed: u64,
+    pub entities: usize,
+    pub train_tokens: usize,
+    pub valid_tokens: usize,
+    pub calib_tokens: usize,
+    /// Examples per multiple-choice task.
+    pub task_examples: usize,
+    /// Examples in the IFEval analog.
+    pub ifeval_examples: usize,
+}
+
+impl Default for DatagenConfig {
+    fn default() -> Self {
+        DatagenConfig {
+            seed: 20250710,
+            entities: 48,
+            train_tokens: 300_000,
+            valid_tokens: 24_000,
+            calib_tokens: 24_000,
+            task_examples: 200,
+            ifeval_examples: 150,
+        }
+    }
+}
+
+/// Generate the complete data directory. Layout:
+/// ```text
+/// <out>/
+///   vocab.json            words + sizes
+///   world.json            entity table (debugging)
+///   corpus_train.tokens   u32-LE stream
+///   corpus_valid.tokens
+///   corpus_calib.tokens
+///   tasks/<name>.json     multiple-choice suites
+///   tasks/synth_ifeval.json
+/// ```
+pub fn generate_all(cfg: &DatagenConfig, out: &Path) -> Result<()> {
+    std::fs::create_dir_all(out.join("tasks"))?;
+    let vocab = vocab::Vocab::synthlang();
+    let world = world::World::generate(cfg.seed, cfg.entities);
+
+    // vocab.json
+    let mut vj = Json::obj();
+    vj.insert("size", vocab.len().into());
+    vj.insert("padded_size", vocab.padded_len().into());
+    vj.insert("words", vocab.words().to_vec().into());
+    std::fs::write(out.join("vocab.json"), vj.pretty())?;
+
+    // world.json (debug / provenance)
+    let mut entities = Vec::new();
+    for e in &world.entities {
+        let mut o = Json::obj();
+        o.insert("name", e.name().into());
+        o.insert("location", e.location_word().into());
+        o.insert("food", e.food_word().into());
+        o.insert("size", e.size_word().into());
+        entities.push(o);
+    }
+    let mut wj = Json::obj();
+    wj.insert("seed", (cfg.seed as usize).into());
+    wj.insert("entities", Json::Arr(entities));
+    std::fs::write(out.join("world.json"), wj.pretty())?;
+
+    // Corpus splits.
+    let corpus = corpus::Corpus::generate(
+        &world,
+        &vocab,
+        cfg.seed,
+        cfg.train_tokens,
+        cfg.valid_tokens,
+        cfg.calib_tokens,
+    )?;
+    corpus::Corpus::write_tokens(&out.join("corpus_train.tokens"), &corpus.train)?;
+    corpus::Corpus::write_tokens(&out.join("corpus_valid.tokens"), &corpus.valid)?;
+    corpus::Corpus::write_tokens(&out.join("corpus_calib.tokens"), &corpus.calib)?;
+
+    // Task suites.
+    for name in tasks::CORE_TASKS.iter().chain(tasks::EXTENDED_TASKS) {
+        let t = tasks::generate(name, &world, &vocab, cfg.task_examples, cfg.seed)?;
+        t.save(&out.join("tasks").join(format!("{name}.json")))?;
+    }
+    let ifeval = tasks::generate_ifeval(&world, &vocab, cfg.ifeval_examples, cfg.seed)?;
+    ifeval.save(&out.join("tasks").join("synth_ifeval.json"))?;
+
+    Ok(())
+}
+
+/// Load the vocab recorded by `datagen` (checks it matches the built-in).
+pub fn load_vocab(data_dir: &Path) -> Result<vocab::Vocab> {
+    let text = std::fs::read_to_string(data_dir.join("vocab.json"))
+        .with_context(|| format!("reading vocab from {}", data_dir.display()))?;
+    let j = crate::util::json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let v = vocab::Vocab::synthlang();
+    let recorded = j.req("size")?.as_usize().context("size")?;
+    anyhow::ensure!(
+        recorded == v.len(),
+        "vocab size mismatch: data dir has {recorded}, binary has {}; regenerate artifacts",
+        v.len()
+    );
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_all_writes_everything() {
+        let dir = std::env::temp_dir().join(format!("nmsparse-datagen-{}", std::process::id()));
+        let cfg = DatagenConfig {
+            train_tokens: 4000,
+            valid_tokens: 1000,
+            calib_tokens: 1000,
+            task_examples: 8,
+            ifeval_examples: 8,
+            ..Default::default()
+        };
+        generate_all(&cfg, &dir).unwrap();
+        assert!(dir.join("vocab.json").exists());
+        assert!(dir.join("world.json").exists());
+        assert!(dir.join("corpus_train.tokens").exists());
+        for name in tasks::CORE_TASKS.iter().chain(tasks::EXTENDED_TASKS) {
+            let t = tasks::TaskSet::load(&dir.join("tasks").join(format!("{name}.json"))).unwrap();
+            assert_eq!(t.examples.len(), 8);
+        }
+        let ife =
+            tasks::IfevalSet::load(&dir.join("tasks").join("synth_ifeval.json")).unwrap();
+        assert_eq!(ife.examples.len(), 8);
+        let v = load_vocab(&dir).unwrap();
+        assert!(v.len() > 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

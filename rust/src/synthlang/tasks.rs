@@ -1,0 +1,577 @@
+//! Evaluation task generators — the synthetic analogs of the paper's
+//! benchmark suite (§2.4: Core + Extended datasets, IFEval).
+//!
+//! Every multiple-choice task is a set of (context, choices, label) tuples
+//! scored by continuation loglikelihood, exactly like LM Eval Harness. The
+//! IFEval analog stores verifiable constraints checked on greedy decodes.
+//! All tasks are generated from the same [`World`] the corpus verbalized.
+
+use crate::synthlang::vocab::{Vocab, FOODS, LOCATIONS};
+use crate::synthlang::world::World;
+use crate::util::json::{self, Json};
+use crate::util::prng::Rng;
+use anyhow::{Context, Result};
+
+/// One multiple-choice example.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Example {
+    /// Context (prompt) token ids.
+    pub context: Vec<u32>,
+    /// Candidate continuations (token ids); the harness scores each.
+    pub choices: Vec<Vec<u32>>,
+    /// Index of the correct choice.
+    pub label: usize,
+    /// Human-readable rendering for debugging.
+    pub text: String,
+}
+
+/// A named set of examples.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskSet {
+    pub name: String,
+    pub examples: Vec<Example>,
+}
+
+/// Verifiable constraint for the IFEval analog.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Constraint {
+    /// Output must contain `word` exactly `count` times before the period.
+    RepeatWord { word: u32, count: usize },
+    /// Answer (tokens before the first period) must be exactly `count`
+    /// words; `valid_answers` lists the factually correct ones.
+    ExactWords { count: usize, valid_answers: Vec<Vec<u32>> },
+}
+
+/// One generative instruction-following example.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IfevalExample {
+    pub prompt: Vec<u32>,
+    pub constraint: Constraint,
+    pub text: String,
+}
+
+/// The IFEval-analog task set.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IfevalSet {
+    pub name: String,
+    pub examples: Vec<IfevalExample>,
+}
+
+/// Names of the core multiple-choice tasks (paper's screening suite).
+pub const CORE_TASKS: &[&str] = &["synth_boolq", "synth_arce", "synth_piqa", "synth_wino"];
+
+/// Names of the extended tasks.
+pub const EXTENDED_TASKS: &[&str] = &[
+    "synth_hellaswag",
+    "synth_openbookqa",
+    "synth_rte",
+    "synth_mmlu",
+    "synth_lambada",
+];
+
+/// Generate a task set by name.
+pub fn generate(
+    name: &str,
+    world: &World,
+    vocab: &Vocab,
+    n: usize,
+    seed: u64,
+) -> Result<TaskSet> {
+    let mut rng = Rng::new(seed).fork(name);
+    let mut examples = Vec::with_capacity(n);
+    for i in 0..n {
+        let e = world.entity(rng.below(world.len()));
+        let ex = match name {
+            "synth_boolq" => {
+                // "does the {name} live in the {loc} ?" -> yes/no
+                let positive = i % 2 == 0;
+                let loc = if positive {
+                    e.location
+                } else {
+                    world.wrong_location(e, &mut rng)
+                };
+                let ctx = format!("does the {} live in the {} ?", e.name(), LOCATIONS[loc]);
+                mc_example(vocab, &ctx, &["yes", "no"], if positive { 0 } else { 1 })?
+            }
+            "synth_arce" => {
+                // "where does the {name} live ? in the" -> 4 locations
+                let ctx = format!("where does the {} live ? in the", e.name());
+                let mut opts = world.distractor_locations(e, 3, &mut rng);
+                let label = rng.below(4);
+                opts.insert(label, e.location);
+                let words: Vec<&str> = opts.iter().map(|l| LOCATIONS[*l]).collect();
+                mc_example(vocab, &ctx, &words, label)?
+            }
+            "synth_piqa" => {
+                // Plausibility: "the {name}" -> "eats {food} ." vs corrupted
+                let ctx = format!("the {}", e.name());
+                let wrong = world.wrong_food(e, &mut rng);
+                let good = format!("eats {} .", e.food_word());
+                let bad = format!("eats {} .", FOODS[wrong]);
+                let label = rng.below(2);
+                let (a, b) = if label == 0 { (good, bad) } else { (bad, good) };
+                mc_example(vocab, &ctx, &[a.as_str(), b.as_str()], label)?
+            }
+            "synth_wino" => {
+                // Referent resolution between two entities.
+                let other = world.other_entity(e, &mut rng);
+                let ctx = format!(
+                    "the {} and the {} . who eats {} ? the",
+                    e.name(),
+                    other.name(),
+                    e.food_word()
+                );
+                let label = rng.below(2);
+                let (a, b) = if label == 0 {
+                    (e.name(), other.name())
+                } else {
+                    (other.name(), e.name())
+                };
+                mc_example(vocab, &ctx, &[a.as_str(), b.as_str()], label)?
+            }
+            "synth_hellaswag" => {
+                // Narrative continuation, 4-way over foods.
+                let ctx = format!(
+                    "the {} is {} . it lives in the {} . it eats",
+                    e.name(),
+                    e.size_word(),
+                    e.location_word()
+                );
+                let mut opts = world.distractor_foods(e, 3, &mut rng);
+                let label = rng.below(4);
+                opts.insert(label, e.food);
+                let words: Vec<&str> = opts.iter().map(|f| FOODS[*f]).collect();
+                mc_example(vocab, &ctx, &words, label)?
+            }
+            "synth_openbookqa" => {
+                let ctx = format!("what does the {} eat ?", e.name());
+                let mut opts = world.distractor_foods(e, 3, &mut rng);
+                let label = rng.below(4);
+                opts.insert(label, e.food);
+                let words: Vec<&str> = opts.iter().map(|f| FOODS[*f]).collect();
+                mc_example(vocab, &ctx, &words, label)?
+            }
+            "synth_rte" => {
+                let positive = i % 2 == 0;
+                let food = if positive {
+                    e.food
+                } else {
+                    world.wrong_food(e, &mut rng)
+                };
+                let ctx = format!(
+                    "is it true that the {} eats {} ?",
+                    e.name(),
+                    FOODS[food]
+                );
+                mc_example(vocab, &ctx, &["true", "false"], if positive { 0 } else { 1 })?
+            }
+            "synth_mmlu" => {
+                // Mixed-domain 4-way with a distinct "question:/answer:" form.
+                if rng.chance(0.5) {
+                    let ctx = format!(
+                        "question : where does the {} live ? answer : in the",
+                        e.name()
+                    );
+                    let mut opts = world.distractor_locations(e, 3, &mut rng);
+                    let label = rng.below(4);
+                    opts.insert(label, e.location);
+                    let words: Vec<&str> = opts.iter().map(|l| LOCATIONS[*l]).collect();
+                    mc_example(vocab, &ctx, &words, label)?
+                } else {
+                    let ctx = format!(
+                        "question : what does the {} eat ? answer :",
+                        e.name()
+                    );
+                    let mut opts = world.distractor_foods(e, 3, &mut rng);
+                    let label = rng.below(4);
+                    opts.insert(label, e.food);
+                    let words: Vec<&str> = opts.iter().map(|f| FOODS[*f]).collect();
+                    mc_example(vocab, &ctx, &words, label)?
+                }
+            }
+            "synth_lambada" => {
+                // Final-word prediction over a long discourse context.
+                let ctx = format!(
+                    "the {} lives in the {} . the {} is {} . so there is a {} {} in the",
+                    e.name(),
+                    e.location_word(),
+                    e.name(),
+                    e.size_word(),
+                    e.size_word(),
+                    crate::synthlang::vocab::ANIMALS[e.animal],
+                );
+                let mut opts = world.distractor_locations(e, 3, &mut rng);
+                let label = rng.below(4);
+                opts.insert(label, e.location);
+                let words: Vec<&str> = opts.iter().map(|l| LOCATIONS[*l]).collect();
+                mc_example(vocab, &ctx, &words, label)?
+            }
+            other => anyhow::bail!("unknown task '{other}'"),
+        };
+        examples.push(ex);
+    }
+    Ok(TaskSet {
+        name: name.to_string(),
+        examples,
+    })
+}
+
+fn mc_example(vocab: &Vocab, ctx: &str, choices: &[impl AsRef<str>], label: usize) -> Result<Example> {
+    let context = vocab.encode(ctx)?;
+    let mut enc = Vec::with_capacity(choices.len());
+    let mut txt = format!("{ctx} => [");
+    for (i, c) in choices.iter().enumerate() {
+        enc.push(vocab.encode(c.as_ref())?);
+        if i > 0 {
+            txt.push_str(" | ");
+        }
+        if i == label {
+            txt.push('*');
+        }
+        txt.push_str(c.as_ref());
+    }
+    txt.push(']');
+    Ok(Example {
+        context,
+        choices: enc,
+        label,
+        text: txt,
+    })
+}
+
+/// Generate the IFEval analog.
+pub fn generate_ifeval(world: &World, vocab: &Vocab, n: usize, seed: u64) -> Result<IfevalSet> {
+    let mut rng = Rng::new(seed).fork("synth_ifeval");
+    let mut examples = Vec::with_capacity(n);
+    for _ in 0..n {
+        let e = world.entity(rng.below(world.len()));
+        let ex = match rng.below(3) {
+            0 => {
+                let (count, count_word) = *rng.choose(&crate::synthlang::corpus::COUNT_WORDS);
+                let word = crate::synthlang::vocab::ANIMALS[e.animal];
+                let prompt = format!("repeat the word {word} {count_word} times :");
+                IfevalExample {
+                    prompt: vocab.encode(&prompt)?,
+                    constraint: Constraint::RepeatWord {
+                        word: vocab.id(word)?,
+                        count,
+                    },
+                    text: prompt,
+                }
+            }
+            1 => {
+                let prompt = format!("answer with one word . what does the {} eat ?", e.name());
+                IfevalExample {
+                    prompt: vocab.encode(&prompt)?,
+                    constraint: Constraint::ExactWords {
+                        count: 1,
+                        valid_answers: vec![vocab.encode(e.food_word())?],
+                    },
+                    text: prompt,
+                }
+            }
+            _ => {
+                let prompt = format!(
+                    "answer with two words . who lives in the {} ?",
+                    e.location_word()
+                );
+                // Every entity in that location is a factually valid answer.
+                let valid: Vec<Vec<u32>> = world
+                    .entities
+                    .iter()
+                    .filter(|x| x.location == e.location)
+                    .map(|x| vocab.encode(&x.name()))
+                    .collect::<Result<_>>()?;
+                IfevalExample {
+                    prompt: vocab.encode(&prompt)?,
+                    constraint: Constraint::ExactWords {
+                        count: 2,
+                        valid_answers: valid,
+                    },
+                    text: prompt,
+                }
+            }
+        };
+        examples.push(ex);
+    }
+    Ok(IfevalSet {
+        name: "synth_ifeval".to_string(),
+        examples,
+    })
+}
+
+// ---------------- JSON (de)serialization ----------------
+
+fn ids_to_json(ids: &[u32]) -> Json {
+    Json::Arr(ids.iter().map(|i| Json::Num(*i as f64)).collect())
+}
+
+fn ids_from_json(j: &Json) -> Result<Vec<u32>> {
+    Ok(j.as_arr()
+        .context("expected id array")?
+        .iter()
+        .map(|x| x.as_f64().unwrap_or(0.0) as u32)
+        .collect())
+}
+
+impl TaskSet {
+    pub fn to_json(&self) -> Json {
+        let mut t = Json::obj();
+        t.insert("name", self.name.as_str().into());
+        t.insert(
+            "examples",
+            Json::Arr(
+                self.examples
+                    .iter()
+                    .map(|e| {
+                        let mut o = Json::obj();
+                        o.insert("context", ids_to_json(&e.context));
+                        o.insert(
+                            "choices",
+                            Json::Arr(e.choices.iter().map(|c| ids_to_json(c)).collect()),
+                        );
+                        o.insert("label", e.label.into());
+                        o.insert("text", e.text.as_str().into());
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        t
+    }
+
+    pub fn from_json(j: &Json) -> Result<TaskSet> {
+        let name = j.req("name")?.as_str().context("name")?.to_string();
+        let mut examples = Vec::new();
+        for e in j.req("examples")?.as_arr().context("examples")? {
+            examples.push(Example {
+                context: ids_from_json(e.req("context")?)?,
+                choices: e
+                    .req("choices")?
+                    .as_arr()
+                    .context("choices")?
+                    .iter()
+                    .map(ids_from_json)
+                    .collect::<Result<_>>()?,
+                label: e.req("label")?.as_usize().context("label")?,
+                text: e
+                    .get("text")
+                    .and_then(|t| t.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+            });
+        }
+        Ok(TaskSet { name, examples })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().dump())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<TaskSet> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading task file {}", path.display()))?;
+        let j = json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        TaskSet::from_json(&j)
+    }
+}
+
+impl Constraint {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        match self {
+            Constraint::RepeatWord { word, count } => {
+                o.insert("type", "repeat_word".into());
+                o.insert("word", (*word as usize).into());
+                o.insert("count", (*count).into());
+            }
+            Constraint::ExactWords { count, valid_answers } => {
+                o.insert("type", "exact_words".into());
+                o.insert("count", (*count).into());
+                o.insert(
+                    "valid_answers",
+                    Json::Arr(valid_answers.iter().map(|a| ids_to_json(a)).collect()),
+                );
+            }
+        }
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Constraint> {
+        match j.req("type")?.as_str() {
+            Some("repeat_word") => Ok(Constraint::RepeatWord {
+                word: j.req("word")?.as_usize().context("word")? as u32,
+                count: j.req("count")?.as_usize().context("count")?,
+            }),
+            Some("exact_words") => Ok(Constraint::ExactWords {
+                count: j.req("count")?.as_usize().context("count")?,
+                valid_answers: j
+                    .req("valid_answers")?
+                    .as_arr()
+                    .context("valid_answers")?
+                    .iter()
+                    .map(ids_from_json)
+                    .collect::<Result<_>>()?,
+            }),
+            other => anyhow::bail!("unknown constraint type {other:?}"),
+        }
+    }
+}
+
+impl IfevalSet {
+    pub fn to_json(&self) -> Json {
+        let mut t = Json::obj();
+        t.insert("name", self.name.as_str().into());
+        t.insert(
+            "examples",
+            Json::Arr(
+                self.examples
+                    .iter()
+                    .map(|e| {
+                        let mut o = Json::obj();
+                        o.insert("prompt", ids_to_json(&e.prompt));
+                        o.insert("constraint", e.constraint.to_json());
+                        o.insert("text", e.text.as_str().into());
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        t
+    }
+
+    pub fn from_json(j: &Json) -> Result<IfevalSet> {
+        let name = j.req("name")?.as_str().context("name")?.to_string();
+        let mut examples = Vec::new();
+        for e in j.req("examples")?.as_arr().context("examples")? {
+            examples.push(IfevalExample {
+                prompt: ids_from_json(e.req("prompt")?)?,
+                constraint: Constraint::from_json(e.req("constraint")?)?,
+                text: e
+                    .get("text")
+                    .and_then(|t| t.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+            });
+        }
+        Ok(IfevalSet { name, examples })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().dump())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<IfevalSet> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading ifeval file {}", path.display()))?;
+        let j = json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        IfevalSet::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (World, Vocab) {
+        (World::generate(11, 40), Vocab::synthlang())
+    }
+
+    #[test]
+    fn all_tasks_generate() {
+        let (world, vocab) = setup();
+        for name in CORE_TASKS.iter().chain(EXTENDED_TASKS) {
+            let t = generate(name, &world, &vocab, 32, 5).unwrap();
+            assert_eq!(t.examples.len(), 32, "{name}");
+            for ex in &t.examples {
+                assert!(!ex.context.is_empty());
+                assert!(ex.choices.len() >= 2);
+                assert!(ex.label < ex.choices.len());
+                assert!(ex.choices.iter().all(|c| !c.is_empty()));
+            }
+        }
+    }
+
+    #[test]
+    fn generation_deterministic() {
+        let (world, vocab) = setup();
+        let a = generate("synth_boolq", &world, &vocab, 16, 7).unwrap();
+        let b = generate("synth_boolq", &world, &vocab, 16, 7).unwrap();
+        assert_eq!(a, b);
+        let c = generate("synth_boolq", &world, &vocab, 16, 8).unwrap();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn boolq_labels_balanced() {
+        let (world, vocab) = setup();
+        let t = generate("synth_boolq", &world, &vocab, 100, 3).unwrap();
+        let yes = t.examples.iter().filter(|e| e.label == 0).count();
+        assert_eq!(yes, 50);
+    }
+
+    #[test]
+    fn labels_not_positionally_biased() {
+        // 4-way tasks should place the answer at varied positions.
+        let (world, vocab) = setup();
+        let t = generate("synth_arce", &world, &vocab, 200, 3).unwrap();
+        let mut counts = [0usize; 4];
+        for e in &t.examples {
+            counts[e.label] += 1;
+        }
+        assert!(counts.iter().all(|c| *c > 20), "{counts:?}");
+    }
+
+    #[test]
+    fn choices_are_distinct() {
+        let (world, vocab) = setup();
+        for name in CORE_TASKS.iter().chain(EXTENDED_TASKS) {
+            let t = generate(name, &world, &vocab, 64, 9).unwrap();
+            for ex in &t.examples {
+                let mut c = ex.choices.clone();
+                c.sort();
+                c.dedup();
+                assert_eq!(c.len(), ex.choices.len(), "{name}: {}", ex.text);
+            }
+        }
+    }
+
+    #[test]
+    fn taskset_json_roundtrip() {
+        let (world, vocab) = setup();
+        let t = generate("synth_wino", &world, &vocab, 8, 2).unwrap();
+        let j = t.to_json();
+        let back = TaskSet::from_json(&json::parse(&j.dump()).unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn ifeval_generates_and_roundtrips() {
+        let (world, vocab) = setup();
+        let t = generate_ifeval(&world, &vocab, 48, 4).unwrap();
+        assert_eq!(t.examples.len(), 48);
+        for ex in &t.examples {
+            assert!(!ex.prompt.is_empty());
+            match &ex.constraint {
+                Constraint::RepeatWord { count, .. } => assert!((2..=4).contains(count)),
+                Constraint::ExactWords { count, valid_answers } => {
+                    assert!((1..=2).contains(count));
+                    assert!(!valid_answers.is_empty());
+                    for a in valid_answers {
+                        assert_eq!(a.len(), *count, "answer length matches constraint");
+                    }
+                }
+            }
+        }
+        let back = IfevalSet::from_json(&json::parse(&t.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn unknown_task_rejected() {
+        let (world, vocab) = setup();
+        assert!(generate("synth_nonsense", &world, &vocab, 1, 0).is_err());
+    }
+}

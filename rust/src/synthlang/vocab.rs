@@ -1,0 +1,184 @@
+//! SynthLang vocabulary and word-level tokenizer.
+//!
+//! The vocabulary is a *closed*, deterministic word list so the token↔id
+//! mapping is identical across runs and languages: rust builds it from the
+//! constant lists below; python never needs a tokenizer because the corpus
+//! is shipped to training as raw token ids (`*.tokens`, little-endian u32).
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Special token ids (fixed positions at the head of the vocab).
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const UNK: u32 = 3;
+
+/// Colors used in entity names.
+pub const COLORS: &[&str] = &[
+    "red", "blue", "green", "golden", "silver", "black", "white", "brown",
+];
+
+/// Animal nouns.
+pub const ANIMALS: &[&str] = &[
+    "fox", "owl", "bear", "wolf", "deer", "hare", "otter", "crow", "lynx", "mole", "swan",
+    "toad", "stork", "badger", "weasel", "heron",
+];
+
+/// Locations entities live in.
+pub const LOCATIONS: &[&str] = &[
+    "forest", "den", "river", "meadow", "cave", "marsh", "valley", "burrow", "cliff", "grove",
+];
+
+/// Foods entities eat.
+pub const FOODS: &[&str] = &[
+    "berries", "fish", "seeds", "roots", "insects", "honey", "leaves", "acorns", "grass",
+    "mushrooms",
+];
+
+/// Size adjectives.
+pub const SIZES: &[&str] = &["big", "small"];
+
+/// Function words, question scaffolding and instruction vocabulary.
+pub const FUNCTION_WORDS: &[&str] = &[
+    "the", "a", "is", "are", "was", "it", "that", "and", "or", "not", "does", "do", "what",
+    "where", "which", "who", "how", "lives", "live", "eats", "eat", "likes", "like", "in",
+    "yes", "no", "true", "false", "color", "size", "animal", "place", "food", "question",
+    "answer", "with", "exactly", "one", "two", "three", "four", "times", "word", "words",
+    "repeat", "say", "end", "statement", "story", "then", "so", "because", "there", "of",
+    "this", "same", "different", "but", "also", "only", "very", "every", "both",
+];
+
+/// Punctuation tokens (kept as standalone words).
+pub const PUNCT: &[&str] = &[".", "?", ":", ","];
+
+/// The deterministic vocabulary: id ↔ word.
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    words: Vec<String>,
+    index: HashMap<String, u32>,
+}
+
+impl Vocab {
+    /// Build the canonical SynthLang vocabulary. Order is fixed:
+    /// specials, punctuation, function words, colors, sizes, animals,
+    /// locations, foods.
+    pub fn synthlang() -> Vocab {
+        let mut words: Vec<String> =
+            vec!["<pad>".into(), "<bos>".into(), "<eos>".into(), "<unk>".into()];
+        for group in [FUNCTION_WORDS, PUNCT, COLORS, SIZES, ANIMALS, LOCATIONS, FOODS] {
+            for w in group {
+                words.push((*w).to_string());
+            }
+        }
+        let mut index = HashMap::new();
+        for (i, w) in words.iter().enumerate() {
+            let prev = index.insert(w.clone(), i as u32);
+            assert!(prev.is_none(), "duplicate vocab word '{w}'");
+        }
+        Vocab { words, index }
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// Vocab size rounded up for the model's embedding table (multiple of
+    /// 32 so N:M blocks tile the unembedding cleanly).
+    pub fn padded_len(&self) -> usize {
+        (self.len() + 31) / 32 * 32
+    }
+
+    /// Id for a word; errors on unknown (the corpus generator must never
+    /// produce out-of-vocab text).
+    pub fn id(&self, word: &str) -> Result<u32> {
+        match self.index.get(word) {
+            Some(id) => Ok(*id),
+            None => bail!("word '{word}' not in SynthLang vocab"),
+        }
+    }
+
+    /// Word for an id (`<unk>` for out-of-range).
+    pub fn word(&self, id: u32) -> &str {
+        self.words
+            .get(id as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("<unk>")
+    }
+
+    /// Tokenize a whitespace-separated SynthLang sentence.
+    pub fn encode(&self, text: &str) -> Result<Vec<u32>> {
+        text.split_whitespace().map(|w| self.id(w)).collect()
+    }
+
+    /// Render ids back to text.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .map(|id| self.word(*id))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// All words (for JSON export to `artifacts/data/vocab.json`).
+    pub fn words(&self) -> &[String] {
+        &self.words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_is_stable_and_small() {
+        let v = Vocab::synthlang();
+        let v2 = Vocab::synthlang();
+        assert_eq!(v.words(), v2.words());
+        assert!(v.len() < 256, "vocab size {}", v.len());
+        assert_eq!(v.padded_len() % 32, 0);
+        assert!(v.padded_len() >= v.len());
+    }
+
+    #[test]
+    fn specials_at_fixed_ids() {
+        let v = Vocab::synthlang();
+        assert_eq!(v.word(PAD), "<pad>");
+        assert_eq!(v.word(BOS), "<bos>");
+        assert_eq!(v.word(EOS), "<eos>");
+        assert_eq!(v.word(UNK), "<unk>");
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let v = Vocab::synthlang();
+        let text = "the red fox lives in the forest .";
+        let ids = v.encode(text).unwrap();
+        assert_eq!(v.decode(&ids), text);
+    }
+
+    #[test]
+    fn unknown_word_is_error() {
+        let v = Vocab::synthlang();
+        assert!(v.encode("the purple dinosaur").is_err());
+    }
+
+    #[test]
+    fn no_duplicate_words() {
+        let v = Vocab::synthlang();
+        let mut sorted = v.words().to_vec();
+        sorted.sort();
+        let before = sorted.len();
+        sorted.dedup();
+        assert_eq!(before, sorted.len());
+    }
+
+    #[test]
+    fn out_of_range_id_is_unk() {
+        let v = Vocab::synthlang();
+        assert_eq!(v.word(9999), "<unk>");
+    }
+}

@@ -1,0 +1,169 @@
+//! Published values from the paper, for side-by-side "paper" columns.
+//!
+//! These constants are the *shape reference*: our substrate is a 2.7M-param
+//! SynthLang model, so absolute values differ; orderings and rough ratios
+//! are what EXPERIMENTS.md compares.
+
+/// Figure 1 / Table 10 average drops (%) for Llama3.1-8B-Instruct rows
+/// (Table 10 reports per-model; we quote Llama2-7B-chat's, the most
+/// complete series).
+pub fn fig1_drop(sparsity_pct: u32, target: &str) -> String {
+    let v = match (sparsity_pct, target) {
+        (20, "act") => Some(-0.33),
+        (20, "wt") => Some(0.68),
+        (50, "act") => Some(2.32),
+        (50, "wt") => Some(11.10),
+        (70, "act") => Some(19.62),
+        (70, "wt") => Some(43.44),
+        (90, "act") => Some(43.39),
+        (90, "wt") => Some(43.39),
+        _ => None,
+    };
+    v.map(|x| format!("{x:.2}%")).unwrap_or_else(|| "-".into())
+}
+
+/// Figure 2 / Table 7 drops (Llama3.1-8B-Instruct, magnitude pruning).
+pub fn fig2_drop(pattern: &str) -> String {
+    match pattern {
+        "2:4" => "14.35%".into(),
+        "4:8" => "9.29%".into(),
+        "8:16" => "7.38%".into(),
+        "16:32" => "5.40%".into(),
+        "u50" => "4.30%".into(),
+        "u70" => "25.32%".into(),
+        _ => "-".into(),
+    }
+}
+
+/// Table 2 average drops (4-model averages).
+pub fn table2_drop(pattern: &str, method: &str) -> String {
+    let m = method.to_ascii_lowercase();
+    let v: Option<f64> = match pattern {
+        "u50" => match m.as_str() {
+            "act" => Some(3.82),
+            _ => None,
+        },
+        "2:4" => match m.as_str() {
+            "wt" => Some(24.49),
+            "act" => Some(9.67),
+            "clact" => Some(7.79),
+            "amber-pruner" => Some(7.85),
+            "var" => Some(6.09),
+            "d-pts" => Some(5.84),
+            "s-pts" => Some(4.29),
+            "l-pts" => Some(8.79),
+            "r-sparse(64)" => Some(7.70),
+            "r-sparse(128)" => Some(8.05),
+            _ => None,
+        },
+        "8:16" => match m.as_str() {
+            "wt" => Some(17.68),
+            "act" => Some(5.47),
+            "clact" => Some(2.29),
+            "amber-pruner" => Some(1.56),
+            "var" => Some(3.30),
+            "d-pts" => Some(2.07),
+            "s-pts" => Some(0.61),
+            "l-pts" => Some(5.32),
+            "r-sparse(64)" => Some(1.52),
+            "r-sparse(128)" => Some(2.63),
+            _ => None,
+        },
+        _ => None,
+    };
+    v.map(|x| format!("{x:.2}%")).unwrap_or_else(|| "-".into())
+}
+
+/// Table 3 PS/PL (Llama3.1-8B, 8:16 column).
+pub fn table3_ps_pl(method: &str) -> String {
+    match method {
+        "ORIG" => "0.4455/0.4861".into(),
+        "S-PTS" => "0.2995/0.3327".into(),
+        "D-PTS" => "0.2828/0.3198".into(),
+        "R-Sparse(64)" => "0.2089/0.2311".into(),
+        "VAR" => "0.3161/0.3586".into(),
+        _ => "-".into(),
+    }
+}
+
+/// Table 4 drops (Llama3.1-8B-Instruct, unstructured).
+pub fn table4_drop(sparsity_pct: u32, method: &str) -> String {
+    let v = match (sparsity_pct, method) {
+        (50, "ACT") => Some(4.450),
+        (50, "D-PTS") => Some(3.600),
+        (50, "VAR") => Some(3.470),
+        (50, "CLACT") => Some(3.890),
+        (50, "Amber-Pruner") => Some(4.450),
+        (70, "ACT") => Some(25.320),
+        (70, "D-PTS") => Some(25.680),
+        (70, "VAR") => Some(22.660),
+        (70, "CLACT") => Some(27.670),
+        (70, "Amber-Pruner") => Some(30.680),
+        _ => None,
+    };
+    v.map(|x| format!("{x:.2}%")).unwrap_or_else(|| "-".into())
+}
+
+/// Table 5 drops (Llama3.1-8B, 8:16 layer subsets).
+pub fn table5_drop(method: &str, layers: &str) -> String {
+    let v = match (method, layers) {
+        ("LS+L-PTS", "all") => Some(10.90),
+        ("LS+L-PTS", "key,out,gate,down") => Some(5.43),
+        ("LS+L-PTS", "key,value,gate,down") => Some(3.56),
+        ("LS+L-PTS+VAR", "all") => Some(10.60),
+        ("LS+L-PTS+VAR", "key,out,gate,down") => Some(4.64),
+        ("LS+L-PTS+VAR", "key,value,gate,down") => Some(3.36),
+        _ => None,
+    };
+    v.map(|x| format!("{x:.2}%")).unwrap_or_else(|| "-".into())
+}
+
+/// Table 8 average drops (combination methods at 8:16).
+pub fn table8_drop(method: &str) -> String {
+    let v = match method {
+        "CLACT+PTS" => Some(2.40),
+        "CLACT+VAR" => Some(2.82),
+        "Amber-Pruner+PTS" => Some(2.57),
+        "Amber-Pruner+VAR" => Some(2.34),
+        "L-PTS+VAR" => Some(5.07),
+        _ => None,
+    };
+    v.map(|x| format!("{x:.2}%")).unwrap_or_else(|| "-".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_orderings_hold_internally() {
+        // The references themselves encode the paper's headline claims:
+        // 16:32 ~2.7x better than 2:4 (abstract).
+        let d24: f64 = 14.35;
+        let d1632: f64 = 5.40;
+        assert!(d24 / d1632 > 2.5 && d24 / d1632 < 3.0);
+        // 8:16 about half the 2:4 drop ("twice the accuracy retention").
+        let d816: f64 = 7.38;
+        assert!(d24 / d816 > 1.8);
+        // ACT beats WT at matched pattern (Table 2).
+        assert!(24.49 > 9.67);
+        assert!(17.68 > 5.47);
+    }
+
+    #[test]
+    fn lookups_return_dash_for_unknown() {
+        assert_eq!(fig2_drop("3:7"), "-");
+        assert_eq!(table2_drop("8:16", "nope"), "-");
+        assert_eq!(table3_ps_pl("nope"), "-");
+    }
+
+    #[test]
+    fn known_lookups_format() {
+        assert_eq!(fig2_drop("8:16"), "7.38%");
+        assert_eq!(table2_drop("8:16", "S-PTS"), "0.61%");
+        assert_eq!(table8_drop("L-PTS+VAR"), "5.07%");
+        assert_eq!(table5_drop("LS+L-PTS", "all"), "10.90%");
+        assert_eq!(fig1_drop(50, "wt"), "11.10%");
+        assert_eq!(table4_drop(70, "VAR"), "22.66%");
+    }
+}

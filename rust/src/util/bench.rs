@@ -1,0 +1,223 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Used by every target in `rust/benches/` (registered with
+//! `harness = false`). Provides adaptive iteration-count calibration,
+//! warmup, robust statistics and throughput reporting, plus a `--filter`
+//! CLI like libtest's.
+
+use crate::util::stats::{fmt_duration_s, TimingStats};
+use std::time::Instant;
+
+/// A benchmark suite: named measurements printed in a fixed-width report.
+pub struct BenchSuite {
+    name: String,
+    filter: Option<String>,
+    results: Vec<BenchResult>,
+    /// Target measurement time per benchmark (seconds).
+    pub target_time_s: f64,
+    /// Measured-sample count.
+    pub samples: usize,
+}
+
+/// One benchmark's outcome.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub stats: TimingStats,
+    pub iters_per_sample: usize,
+    /// Optional items-per-iteration for throughput reporting.
+    pub throughput_items: Option<f64>,
+}
+
+impl BenchSuite {
+    /// Create a suite; reads `--filter <substr>` / `--quick` from argv and
+    /// ignores libtest flags cargo may pass (e.g. `--bench`).
+    pub fn new(name: &str) -> BenchSuite {
+        let argv: Vec<String> = std::env::args().collect();
+        let mut filter = None;
+        let mut target_time_s = 1.0;
+        let mut i = 1;
+        while i < argv.len() {
+            match argv[i].as_str() {
+                "--filter" if i + 1 < argv.len() => {
+                    filter = Some(argv[i + 1].clone());
+                    i += 1;
+                }
+                "--quick" => target_time_s = 0.2,
+                _ => {
+                    // Tolerate unknown flags (cargo bench passes --bench);
+                    // bare substrings act as a filter, like libtest.
+                    if !argv[i].starts_with('-') {
+                        filter = Some(argv[i].clone());
+                    }
+                }
+            }
+            i += 1;
+        }
+        println!("== bench suite: {name} ==");
+        BenchSuite {
+            name: name.to_string(),
+            filter,
+            results: Vec::new(),
+            target_time_s,
+            samples: 20,
+        }
+    }
+
+    fn skip(&self, bench_name: &str) -> bool {
+        match &self.filter {
+            Some(f) => !bench_name.contains(f.as_str()),
+            None => false,
+        }
+    }
+
+    /// Benchmark a closure. Iteration count per sample is auto-calibrated so
+    /// each sample takes ≥ ~1ms, then `samples` samples fill `target_time_s`.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) {
+        self.bench_with_items(name, None, f)
+    }
+
+    /// Benchmark with a throughput denominator (items processed per
+    /// iteration — tokens, bytes, requests...).
+    pub fn bench_with_items<F: FnMut()>(&mut self, name: &str, items: Option<f64>, mut f: F) {
+        if self.skip(name) {
+            return;
+        }
+        // Calibrate: how many iters take >= 1ms?
+        let mut iters = 1usize;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            if dt >= 1e-3 || iters >= (1 << 24) {
+                break;
+            }
+            iters *= 2;
+        }
+        // Decide sample iters so total ≈ target_time_s over self.samples.
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let per_iter = (t0.elapsed().as_secs_f64() / iters as f64).max(1e-12);
+        let sample_iters = (((self.target_time_s / self.samples as f64) / per_iter).ceil())
+            .clamp(1.0, 1e8) as usize;
+        // Warmup + measure.
+        for _ in 0..sample_iters.min(1000) {
+            f();
+        }
+        let mut durs = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..sample_iters {
+                f();
+            }
+            let total = t0.elapsed();
+            // f64 division: integer Duration division truncates sub-ns
+            // per-iter times to zero for very fast benchmarks.
+            durs.push(std::time::Duration::from_secs_f64(
+                total.as_secs_f64() / sample_iters as f64,
+            ));
+        }
+        let stats = TimingStats::from_durations(&durs);
+        let result = BenchResult {
+            name: name.to_string(),
+            stats,
+            iters_per_sample: sample_iters,
+            throughput_items: items,
+        };
+        println!("{}", format_result(&result));
+        self.results.push(result);
+    }
+
+    /// All results measured so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print the closing summary (called on drop as well).
+    pub fn finish(&self) {
+        println!(
+            "== {}: {} benchmarks done ==",
+            self.name,
+            self.results.len()
+        );
+    }
+}
+
+fn format_result(r: &BenchResult) -> String {
+    let mut line = format!(
+        "{:<44} {:>12}/iter  p50 {:>12}  p95 {:>12}",
+        r.name,
+        fmt_duration_s(r.stats.mean_s),
+        fmt_duration_s(r.stats.p50_s),
+        fmt_duration_s(r.stats.p95_s),
+    );
+    if let Some(items) = r.throughput_items {
+        let per_sec = items / r.stats.mean_s.max(1e-12);
+        line.push_str(&format!("  {:>14}", format_rate(per_sec)));
+    }
+    line
+}
+
+fn format_rate(per_sec: f64) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2} G/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2} M/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2} K/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.2} /s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut suite = BenchSuite {
+            name: "t".into(),
+            filter: None,
+            results: vec![],
+            target_time_s: 0.02,
+            samples: 3,
+        };
+        let mut acc = 0u64;
+        suite.bench_with_items("volatile-sum", Some(100.0), || {
+            // Real side effect so the optimizer cannot delete the loop.
+            acc = acc.wrapping_add(std::hint::black_box(17u64));
+            std::hint::black_box(&acc);
+        });
+        assert_eq!(suite.results().len(), 1);
+        assert!(suite.results()[0].stats.mean_s >= 0.0);
+        assert!(suite.results()[0].iters_per_sample >= 1);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut suite = BenchSuite {
+            name: "t".into(),
+            filter: Some("match-me".into()),
+            results: vec![],
+            target_time_s: 0.01,
+            samples: 2,
+        };
+        suite.bench("other", || {});
+        assert!(suite.results().is_empty());
+        suite.bench("match-me-exactly", || {});
+        assert_eq!(suite.results().len(), 1);
+    }
+
+    #[test]
+    fn rate_formatting() {
+        assert_eq!(format_rate(2.5e9), "2.50 G/s");
+        assert_eq!(format_rate(2.5e6), "2.50 M/s");
+        assert_eq!(format_rate(2.5e3), "2.50 K/s");
+        assert_eq!(format_rate(2.5), "2.50 /s");
+    }
+}

@@ -1,0 +1,217 @@
+//! Command-line argument parsing (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
+//! subcommands; generates usage text from declared options. Only what the
+//! `nmsparse` launcher and the examples need — deliberately small.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Declarative option spec used for help text and validation.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// Parsed arguments: positionals + key/value options + boolean flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    specs: Vec<OptSpec>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]) against
+    /// a set of declared option specs. Unknown `--options` are rejected so
+    /// typos fail loudly.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, specs: &[OptSpec]) -> Result<Args> {
+        let mut args = Args {
+            specs: specs.to_vec(),
+            ..Default::default()
+        };
+        let spec_for = |name: &str| specs.iter().find(|s| s.name == name);
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let Some(spec) = spec_for(&key) else {
+                    bail!("unknown option --{key} (see --help)");
+                };
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => match it.next() {
+                            Some(v) => v,
+                            None => bail!("option --{key} requires a value"),
+                        },
+                    };
+                    args.opts.insert(key, val);
+                } else {
+                    if inline_val.is_some() {
+                        bail!("flag --{key} does not take a value");
+                    }
+                    args.flags.push(key);
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// True if the boolean flag was passed.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// String option with declared/explicit default.
+    pub fn get(&self, name: &str) -> String {
+        if let Some(v) = self.opts.get(name) {
+            return v.clone();
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default)
+            .unwrap_or("")
+            .to_string()
+    }
+
+    /// Option present on the command line (not defaulted)?
+    pub fn given(&self, name: &str) -> bool {
+        self.opts.contains_key(name)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        let v = self.get(name);
+        v.parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("option --{name}: '{v}' is not an unsigned integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        let v = self.get(name);
+        v.parse::<u64>()
+            .map_err(|_| anyhow::anyhow!("option --{name}: '{v}' is not a u64"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        let v = self.get(name);
+        v.parse::<f64>()
+            .map_err(|_| anyhow::anyhow!("option --{name}: '{v}' is not a number"))
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        let v = self.get(name);
+        if v.is_empty() {
+            vec![]
+        } else {
+            v.split(',').map(|s| s.trim().to_string()).collect()
+        }
+    }
+}
+
+/// Render usage text for a subcommand.
+pub fn usage(cmd: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{about}\n\nUsage: nmsparse {cmd} [options]\n\nOptions:\n");
+    for spec in specs {
+        let left = if spec.takes_value {
+            format!("--{} <v>", spec.name)
+        } else {
+            format!("--{}", spec.name)
+        };
+        let default = spec
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("  {left:<24} {}{default}\n", spec.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "steps", takes_value: true, default: Some("100"), help: "steps" },
+            OptSpec { name: "out", takes_value: true, default: None, help: "output" },
+            OptSpec { name: "verbose", takes_value: false, default: None, help: "chatty" },
+        ]
+    }
+
+    fn parse(v: &[&str]) -> Result<Args> {
+        Args::parse(v.iter().map(|s| s.to_string()), &specs())
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = parse(&["run", "--steps", "5", "--verbose", "extra"]).unwrap();
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.get_usize("steps").unwrap(), 5);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&["--steps=7"]).unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), 7);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), 100);
+        assert_eq!(a.get("out"), "");
+        assert!(!a.given("steps"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse(&["--bogus"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse(&["--steps"]).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(parse(&["--verbose=1"]).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["--steps", "abc"]).unwrap();
+        assert!(a.get_usize("steps").is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let mut sp = specs();
+        sp.push(OptSpec { name: "methods", takes_value: true, default: Some(""), help: "m" });
+        let a = Args::parse(
+            ["--methods", "act, var ,spts"].iter().map(|s| s.to_string()),
+            &sp,
+        )
+        .unwrap();
+        assert_eq!(a.get_list("methods"), vec!["act", "var", "spts"]);
+    }
+
+    #[test]
+    fn usage_contains_options() {
+        let u = usage("demo", "Demo command", &specs());
+        assert!(u.contains("--steps"));
+        assert!(u.contains("[default: 100]"));
+    }
+}

@@ -1,0 +1,157 @@
+//! Property-based testing mini-framework.
+//!
+//! `proptest` is not available offline, so this module provides the shape of
+//! it that the invariant tests need: seeded generators, a `forall` runner
+//! that reports the failing case and its seed, and integer shrinking. Used
+//! by the sparsity, metadata, coordinator and synthlang test suites.
+
+use crate::util::prng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed can be pinned via NMSPARSE_PROP_SEED for reproducing failures.
+        let seed = std::env::var("NMSPARSE_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xA5A5_5A5A);
+        Config { cases: 128, seed }
+    }
+}
+
+/// Run `prop` against `cases` values drawn by `gen`. On failure, attempts a
+/// simple halving shrink via `shrink` (pass `|_| vec![]` to disable) and
+/// panics with the minimal failing input's Debug representation + seed.
+pub fn forall<T, G, P, S>(cfg: &Config, mut gen: G, prop: P, shrink: S)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> bool,
+    S: Fn(&T) -> Vec<T>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if prop(&input) {
+            continue;
+        }
+        // Shrink: breadth-first over candidate reductions.
+        let mut minimal = input.clone();
+        let mut frontier = shrink(&minimal);
+        let mut budget = 1000;
+        while let Some(cand) = frontier.pop() {
+            if budget == 0 {
+                break;
+            }
+            budget -= 1;
+            if !prop(&cand) {
+                minimal = cand.clone();
+                frontier = shrink(&minimal);
+            }
+        }
+        panic!(
+            "property failed at case {case} (seed {}):\n  original: {:?}\n  minimal:  {:?}",
+            cfg.seed, input, minimal
+        );
+    }
+}
+
+/// `forall` without shrinking — most of our invariants have small inputs
+/// already.
+pub fn forall_simple<T, G, P>(cfg: &Config, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> bool,
+{
+    forall(cfg, gen, prop, |_| vec![]);
+}
+
+/// Generate a vector of f32s with a mix of magnitudes, signs, zeros and
+/// ties — the adversarial distribution for selection/pruning code.
+pub fn gen_activations(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len)
+        .map(|_| {
+            match rng.below(10) {
+                0 => 0.0,                                  // exact zeros
+                1 => 1.0,                                  // ties
+                2 => -1.0,                                 // sign-symmetric ties
+                3 => (rng.normal() * 100.0) as f32,        // outliers
+                _ => rng.normal() as f32,                  // bulk
+            }
+        })
+        .collect()
+}
+
+/// Shrinker for `Vec<f32>`: halves the vector and zeroes elements.
+pub fn shrink_vec_f32(v: &Vec<f32>) -> Vec<Vec<f32>> {
+    let mut out = Vec::new();
+    if v.len() > 1 {
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[v.len() / 2..].to_vec());
+    }
+    for i in 0..v.len().min(8) {
+        if v[i] != 0.0 {
+            let mut w = v.clone();
+            w[i] = 0.0;
+            out.push(w);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let cfg = Config { cases: 64, seed: 1 };
+        forall_simple(
+            &cfg,
+            |rng| rng.below(1000),
+            |x| *x < 1000,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        let cfg = Config { cases: 64, seed: 2 };
+        forall_simple(&cfg, |rng| rng.below(100), |x| *x < 50);
+    }
+
+    #[test]
+    fn shrinking_reduces_input() {
+        let cfg = Config { cases: 32, seed: 3 };
+        let result = std::panic::catch_unwind(|| {
+            forall(
+                &cfg,
+                |rng| {
+                    let n = rng.range(4, 64);
+                    (0..n).map(|i| i as f32).collect::<Vec<f32>>()
+                },
+                |v| v.len() < 4, // always fails
+                shrink_vec_f32,
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("minimal"));
+    }
+
+    #[test]
+    fn gen_activations_has_structure() {
+        let mut rng = Rng::new(9);
+        let v = gen_activations(&mut rng, 10_000);
+        let zeros = v.iter().filter(|x| **x == 0.0).count();
+        let big = v.iter().filter(|x| x.abs() > 10.0).count();
+        assert!(zeros > 100, "zeros present");
+        assert!(big > 100, "outliers present");
+    }
+}

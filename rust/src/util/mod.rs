@@ -1,0 +1,14 @@
+//! Infrastructure substrates built from scratch for the offline environment:
+//! PRNG, JSON, tensors + checkpoint I/O, thread pool, CLI parsing, summary
+//! statistics, a property-testing mini-framework, a micro-bench harness and
+//! table rendering.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod miniprop;
+pub mod prng;
+pub mod stats;
+pub mod table_fmt;
+pub mod tensor;
+pub mod threadpool;

@@ -1,0 +1,181 @@
+//! Summary statistics + wall-clock measurement helpers.
+//!
+//! Shared by the eval harness (accuracy aggregation), the hardware model
+//! (distribution summaries) and the bench harness (robust timing stats).
+
+use std::time::{Duration, Instant};
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Linear-interpolated percentile, `p` in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let f = rank - lo as f64;
+        v[lo] * (1.0 - f) + v[hi] * f
+    }
+}
+
+/// Median (50th percentile).
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Relative drop in percent: how much worse `value` is than `baseline`.
+/// Matches the paper's "Avg drop (%)": positive = degradation, negative =
+/// improvement over the dense baseline.
+pub fn relative_drop_pct(baseline: f64, value: f64) -> f64 {
+    if baseline == 0.0 {
+        return 0.0;
+    }
+    (baseline - value) / baseline * 100.0
+}
+
+/// Aggregate timing statistics for a set of measured runs.
+#[derive(Clone, Debug)]
+pub struct TimingStats {
+    pub n: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub max_s: f64,
+}
+
+impl TimingStats {
+    pub fn from_durations(ds: &[Duration]) -> TimingStats {
+        let xs: Vec<f64> = ds.iter().map(|d| d.as_secs_f64()).collect();
+        TimingStats {
+            n: xs.len(),
+            mean_s: mean(&xs),
+            std_s: stddev(&xs),
+            min_s: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            p50_s: percentile(&xs, 50.0),
+            p95_s: percentile(&xs, 95.0),
+            max_s: xs.iter().cloned().fold(0.0, f64::max),
+        }
+    }
+
+    /// Human-readable one-liner, auto-scaled units.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={} p50={} p95={} min={} max={}",
+            self.n,
+            fmt_duration_s(self.mean_s),
+            fmt_duration_s(self.p50_s),
+            fmt_duration_s(self.p95_s),
+            fmt_duration_s(self.min_s),
+            fmt_duration_s(self.max_s),
+        )
+    }
+}
+
+/// Format seconds with an appropriate unit.
+pub fn fmt_duration_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Time a closure once.
+pub fn time_once<R, F: FnOnce() -> R>(f: F) -> (R, Duration) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed())
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured runs then `iters` measured runs.
+pub fn time_many<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> TimingStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut ds = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        ds.push(t0.elapsed());
+    }
+    TimingStats::from_durations(&ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [10.0, 20.0, 30.0, 40.0, 50.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 50.0);
+        assert_eq!(median(&xs), 30.0);
+        assert!((percentile(&xs, 25.0) - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drop_pct_signs() {
+        assert!((relative_drop_pct(0.8, 0.72) - 10.0).abs() < 1e-9);
+        assert!(relative_drop_pct(0.8, 0.88) < 0.0); // improvement
+        assert_eq!(relative_drop_pct(0.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn timing_runs() {
+        let stats = time_many(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(stats.n, 5);
+        assert!(stats.mean_s >= 0.0);
+        assert!(stats.min_s <= stats.max_s);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration_s(2.5), "2.500s");
+        assert!(fmt_duration_s(0.002).ends_with("ms"));
+        assert!(fmt_duration_s(2e-6).ends_with("us"));
+        assert!(fmt_duration_s(5e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,184 @@
+//! ASCII table rendering for the paper-table reproduction harness.
+//!
+//! Every `nmsparse table <id>` command prints its rows through this module
+//! so the output matches the paper's row/column structure and can also be
+//! dumped as JSON/markdown for EXPERIMENTS.md.
+
+use crate::util::json::Json;
+
+/// A simple table: header + rows of strings, plus a title and footnote.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub note: String,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            note: String::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+    }
+
+    /// Separator row rendered as a dashed line.
+    pub fn separator(&mut self) {
+        self.rows.push(vec!["--".to_string(); self.header.len()]);
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render as an aligned ASCII table.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("### {}\n", self.title));
+        }
+        let line = |cells: &[String], w: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<width$} |", c, width = w[i]));
+            }
+            s
+        };
+        let rule: String = {
+            let mut s = String::from("|");
+            for wi in &w {
+                s.push_str(&format!("{}|", "-".repeat(wi + 2)));
+            }
+            s
+        };
+        out.push_str(&line(&self.header, &w));
+        out.push('\n');
+        out.push_str(&rule);
+        out.push('\n');
+        for row in &self.rows {
+            if row.iter().all(|c| c == "--") {
+                out.push_str(&rule);
+            } else {
+                out.push_str(&line(row, &w));
+            }
+            out.push('\n');
+        }
+        if !self.note.is_empty() {
+            out.push_str(&format!("note: {}\n", self.note));
+        }
+        out
+    }
+
+    /// Machine-readable form for EXPERIMENTS.md tooling.
+    pub fn to_json(&self) -> Json {
+        let mut t = Json::obj();
+        t.insert("title", self.title.clone().into());
+        t.insert("header", self.header.clone().into());
+        t.insert(
+            "rows",
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(|c| c.as_str().into()).collect()))
+                    .collect(),
+            ),
+        );
+        if !self.note.is_empty() {
+            t.insert("note", self.note.clone().into());
+        }
+        t
+    }
+}
+
+/// Format a fraction as the paper does: `0.7268` style accuracy cell.
+pub fn acc(x: f64) -> String {
+    format!("{x:.4}")
+}
+
+/// Format a drop percentage as the paper does: `14.35%` / `-6.46%`.
+pub fn pct(x: f64) -> String {
+    format!("{x:.2}%")
+}
+
+/// Format perplexity; paper writes `OUT` for divergent (>1e3) values.
+pub fn ppl(x: f64) -> String {
+    if !x.is_finite() || x > 1e3 {
+        "OUT".to_string()
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Demo", &["Method", "Drop"]);
+        t.row(vec!["ACT".into(), pct(9.666)]);
+        t.row(vec!["S-PTS".into(), pct(-4.43)]);
+        let r = t.render();
+        assert!(r.contains("### Demo"));
+        assert!(r.contains("| ACT"));
+        assert!(r.contains("9.67%"));
+        assert!(r.contains("-4.43%"));
+        // All data lines have the same width.
+        let widths: Vec<usize> = r.lines().skip(1).map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_width_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn ppl_out_sentinel() {
+        assert_eq!(ppl(1e6), "OUT");
+        assert_eq!(ppl(f64::INFINITY), "OUT");
+        assert_eq!(ppl(8.31), "8.31");
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut t = Table::new("T", &["c1"]);
+        t.row(vec!["v".into()]);
+        let j = t.to_json();
+        assert_eq!(j.get("title").unwrap().as_str(), Some("T"));
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn separator_renders_rule() {
+        let mut t = Table::new("", &["a"]);
+        t.row(vec!["1".into()]);
+        t.separator();
+        t.row(vec!["2".into()]);
+        let rules = t.render().lines().filter(|l| l.starts_with("|-")).count();
+        assert_eq!(rules, 2);
+    }
+}

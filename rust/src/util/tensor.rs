@@ -1,0 +1,301 @@
+//! Dense f32 tensors + the on-disk weights format shared with `aot.py`.
+//!
+//! The python compile path serializes the trained checkpoint as a flat
+//! little-endian f32 blob (`weights.bin`) plus a JSON manifest describing
+//! name/shape/offset of each array. Rust loads those into `Tensor`s, mutates
+//! them (weight pruning, quantization baselines) and feeds them to PJRT as
+//! literals. Keeping the format trivial avoids any protobuf/npz dependency.
+
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn scalar(x: f32) -> Tensor {
+        Tensor {
+            shape: vec![],
+            data: vec![x],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Number of rows for a 2-D tensor.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.rank(), 2);
+        self.shape[0]
+    }
+
+    /// Number of columns for a 2-D tensor.
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.rank(), 2);
+        self.shape[1]
+    }
+
+    /// Borrow row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    /// Mutably borrow row `i` of a 2-D tensor.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Fraction of exactly-zero elements.
+    pub fn zero_fraction(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().filter(|x| **x == 0.0).count() as f64 / self.data.len() as f64
+    }
+
+    /// L2 norm of the whole tensor.
+    pub fn l2(&self) -> f64 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Mean absolute value.
+    pub fn mean_abs(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|x| x.abs() as f64).sum::<f64>() / self.data.len() as f64
+    }
+
+    /// Max |a - b| against another tensor of the same shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// A named collection of tensors — the checkpoint / method-parameter store.
+#[derive(Clone, Debug, Default)]
+pub struct TensorStore {
+    map: BTreeMap<String, Tensor>,
+}
+
+impl TensorStore {
+    pub fn new() -> TensorStore {
+        TensorStore::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.map.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map
+            .get(name)
+            .with_context(|| format!("tensor '{name}' not in store"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        self.map
+            .get_mut(name)
+            .with_context(|| format!("tensor '{name}' not in store (mut)"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Tensor)> {
+        self.map.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = (&str, &mut Tensor)> {
+        self.map.iter_mut().map(|(k, v)| (k.as_str(), v))
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.map.values().map(|t| t.len()).sum()
+    }
+
+    /// Load `<stem>.bin` + `<stem>.json` (manifest) written by `aot.py`
+    /// (or by [`TensorStore::save`]).
+    pub fn load(stem: &Path) -> Result<TensorStore> {
+        let manifest_path = stem.with_extension("json");
+        let bin_path = stem.with_extension("bin");
+        let manifest_text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = json::parse(&manifest_text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", manifest_path.display()))?;
+        let mut blob = Vec::new();
+        std::fs::File::open(&bin_path)
+            .with_context(|| format!("opening {}", bin_path.display()))?
+            .read_to_end(&mut blob)?;
+        let entries = manifest
+            .req("tensors")?
+            .as_arr()
+            .context("manifest 'tensors' not an array")?;
+        let mut store = TensorStore::new();
+        for e in entries {
+            let name = e.req("name")?.as_str().context("tensor name")?.to_string();
+            let shape: Vec<usize> = e
+                .req("shape")?
+                .as_arr()
+                .context("tensor shape")?
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect();
+            let offset = e.req("offset")?.as_usize().context("tensor offset")?;
+            let n: usize = shape.iter().product();
+            let bytes = &blob
+                .get(offset..offset + 4 * n)
+                .with_context(|| format!("blob too short for tensor '{name}'"))?;
+            let mut data = Vec::with_capacity(n);
+            for chunk in bytes.chunks_exact(4) {
+                data.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+            }
+            store.insert(&name, Tensor::from_vec(&shape, data));
+        }
+        if store.is_empty() {
+            bail!("manifest {} contained no tensors", manifest_path.display());
+        }
+        Ok(store)
+    }
+
+    /// Save as `<stem>.bin` + `<stem>.json` in the same format `aot.py` emits.
+    pub fn save(&self, stem: &Path) -> Result<()> {
+        let mut blob: Vec<u8> = Vec::new();
+        let mut entries = Vec::new();
+        for (name, t) in self.iter() {
+            let offset = blob.len();
+            for x in &t.data {
+                blob.extend_from_slice(&x.to_le_bytes());
+            }
+            let mut e = Json::obj();
+            e.insert("name", name.into());
+            e.insert("shape", t.shape.clone().into());
+            e.insert("offset", offset.into());
+            entries.push(e);
+        }
+        let mut manifest = Json::obj();
+        manifest.insert("tensors", Json::Arr(entries));
+        manifest.insert("format", "nmsparse-flat-f32-le-v1".into());
+        if let Some(parent) = stem.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::File::create(stem.with_extension("bin"))?.write_all(&blob)?;
+        std::fs::write(stem.with_extension("json"), manifest.pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1., 2., 3.]);
+    }
+
+    #[test]
+    fn zero_fraction() {
+        let t = Tensor::from_vec(&[4], vec![0., 1., 0., 2.]);
+        assert_eq!(t.zero_fraction(), 0.5);
+    }
+
+    #[test]
+    fn store_roundtrip_via_disk() {
+        let dir = std::env::temp_dir().join(format!("nmsparse-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let stem = dir.join("ckpt");
+        let mut s = TensorStore::new();
+        s.insert("a.w", Tensor::from_vec(&[2, 2], vec![1., -2., 3.5, 0.]));
+        s.insert("b", Tensor::from_vec(&[3], vec![9., 8., 7.]));
+        s.insert("scalar", Tensor::scalar(4.25));
+        s.save(&stem).unwrap();
+        let loaded = TensorStore::load(&stem).unwrap();
+        assert_eq!(loaded.len(), 3);
+        assert_eq!(loaded.get("a.w").unwrap(), s.get("a.w").unwrap());
+        assert_eq!(loaded.get("scalar").unwrap().data, vec![4.25]);
+        assert_eq!(loaded.num_params(), 8);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_tensor_is_error() {
+        let s = TensorStore::new();
+        assert!(s.get("nope").is_err());
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![1.5, 2.0]);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-9);
+    }
+}

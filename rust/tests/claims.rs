@@ -1,0 +1,189 @@
+//! Shape-claim regression over generated results: replays the paper's
+//! qualitative claims against the JSON tables `nmsparse table all` wrote to
+//! `results/`. Skips when results are absent; `make artifacts && nmsparse
+//! table all` refreshes them. This keeps EXPERIMENTS.md honest — if a code
+//! change silently breaks an ordering, this test catches it without
+//! rerunning the evals.
+
+use nmsparse::util::json::{self, Json};
+use std::path::Path;
+
+fn load(id: &str) -> Option<Json> {
+    let path = format!("results/{id}.json");
+    if !Path::new(&path).exists() {
+        eprintln!("{path} missing — run `nmsparse table all`; skipping");
+        return None;
+    }
+    Some(json::parse(&std::fs::read_to_string(path).unwrap()).unwrap())
+}
+
+/// Parse a "12.34%" cell.
+fn pct(cell: &str) -> f64 {
+    cell.trim_end_matches('%').parse().unwrap()
+}
+
+/// Find a row by predicate on its cells; return the cells.
+fn rows(t: &Json) -> Vec<Vec<String>> {
+    t.req("rows")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| {
+            r.as_arr()
+                .unwrap()
+                .iter()
+                .map(|c| c.as_str().unwrap_or("").to_string())
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn fig2_pattern_ordering_is_monotone() {
+    let Some(t) = load("fig2") else { return };
+    let rs = rows(&t);
+    let drop = |pat: &str| -> f64 {
+        pct(&rs.iter().find(|r| r[0] == pat).unwrap()[5])
+    };
+    // The paper's central figure: flexibility strictly helps.
+    assert!(drop("2:4") > drop("4:8"), "2:4 vs 4:8");
+    assert!(drop("4:8") > drop("8:16"), "4:8 vs 8:16");
+    assert!(drop("8:16") > drop("16:32"), "8:16 vs 16:32");
+    assert!(drop("16:32") >= drop("u50") - 1.0, "16:32 approaches u50");
+    assert!(drop("u70") > 15.0, "u70 collapses");
+    // Abstract's headline: large patterns retain multiple x the accuracy.
+    assert!(drop("2:4") / drop("16:32").max(0.1) > 2.0);
+}
+
+#[test]
+fn fig1_act_beats_wt_at_moderate_sparsity() {
+    let Some(t) = load("fig1") else { return };
+    let rs = rows(&t);
+    let drop = |sp: &str, target: &str| -> f64 {
+        pct(
+            &rs.iter()
+                .find(|r| r[0] == sp && r[1] == target)
+                .unwrap_or_else(|| panic!("{sp}/{target}"))[7],
+        )
+    };
+    assert!(drop("50%", "act") <= drop("50%", "wt") + 0.5);
+    assert!(drop("70%", "act") < drop("70%", "wt"));
+    // 90%: both near collapse (>40% drop).
+    assert!(drop("90%", "act") > 40.0 && drop("90%", "wt") > 40.0);
+}
+
+#[test]
+fn table2_every_method_improves_with_block_size() {
+    let Some(t) = load("table2") else { return };
+    let rs = rows(&t);
+    let drop = |pat: &str, m: &str| -> Option<f64> {
+        rs.iter()
+            .find(|r| r[1] == pat && r[2] == m && r[0] == "Act")
+            .map(|r| pct(&r[3]))
+    };
+    let mut better = 0;
+    let mut total = 0;
+    for m in [
+        "ACT", "CLACT", "Amber-Pruner", "VAR", "D-PTS", "S-PTS", "L-PTS",
+        "R-Sparse(64)", "R-Sparse(128)",
+    ] {
+        if let (Some(a), Some(b)) = (drop("2:4", m), drop("8:16", m)) {
+            total += 1;
+            if b <= a {
+                better += 1;
+            }
+        }
+    }
+    assert!(total >= 8, "expected the full method grid, got {total}");
+    assert!(
+        better == total,
+        "8:16 should beat 2:4 for every method ({better}/{total})"
+    );
+}
+
+#[test]
+fn table3_generative_degrades_more_than_qa() {
+    let (Some(t3), Some(t2)) = (load("table3"), load("table2")) else {
+        return;
+    };
+    let r3 = rows(&t3);
+    let orig_ps: f64 = r3
+        .iter()
+        .find(|r| r[0] == "ORIG")
+        .unwrap()[1]
+        .split('/')
+        .next()
+        .unwrap()
+        .parse()
+        .unwrap();
+    let spts_816: f64 = r3
+        .iter()
+        .find(|r| r[0] == "S-PTS")
+        .unwrap()[2]
+        .split('/')
+        .next()
+        .unwrap()
+        .parse()
+        .unwrap();
+    let ifeval_rel_drop = (orig_ps - spts_816) / orig_ps * 100.0;
+    let r2 = rows(&t2);
+    let qa_drop = pct(
+        &r2.iter()
+            .find(|r| r[1] == "8:16" && r[2] == "S-PTS")
+            .unwrap()[3],
+    );
+    assert!(
+        ifeval_rel_drop > qa_drop,
+        "IFEval relative drop ({ifeval_rel_drop:.1}%) should exceed QA drop ({qa_drop:.1}%)"
+    );
+}
+
+#[test]
+fn table8_no_combination_beats_best_single() {
+    let Some(t) = load("table8") else { return };
+    let rs = rows(&t);
+    let combos: Vec<f64> = rs
+        .iter()
+        .filter(|r| r[0].contains('+') && !r[0].starts_with("(single)"))
+        .map(|r| pct(&r[1]))
+        .collect();
+    let singles: Vec<f64> = rs
+        .iter()
+        .filter(|r| r[0].starts_with("(single)"))
+        .map(|r| pct(&r[1]))
+        .collect();
+    assert!(!combos.is_empty() && !singles.is_empty());
+    let best_single = singles.iter().cloned().fold(f64::INFINITY, f64::min);
+    let best_combo = combos.iter().cloned().fold(f64::INFINITY, f64::min);
+    // Paper §3.6 (with a small tolerance for eval noise).
+    assert!(
+        best_combo >= best_single - 1.0,
+        "combination {best_combo:.2}% should not decisively beat best single {best_single:.2}%"
+    );
+}
+
+#[test]
+fn table5_layer_subsets_reduce_drop() {
+    let Some(t) = load("table5") else { return };
+    let rs = rows(&t);
+    for method in ["LS+L-PTS", "LS+L-PTS+VAR"] {
+        let all = pct(&rs.iter().find(|r| r[0] == method && r[1] == "all").unwrap()[4]);
+        for subset in ["key,out,gate,down", "key,value,gate,down"] {
+            let sub = pct(&rs.iter().find(|r| r[0] == method && r[1] == subset).unwrap()[4]);
+            assert!(sub < all, "{method}/{subset}: {sub} !< {all}");
+        }
+    }
+}
+
+#[test]
+fn table14_quant_lossless_and_sparsity_close() {
+    let Some(t) = load("table14") else { return };
+    let rs = rows(&t);
+    let drop = |prefix: &str| -> f64 {
+        pct(&rs.iter().find(|r| r[0].starts_with(prefix)).unwrap()[5])
+    };
+    assert!(drop("int8").abs() < 2.0, "int8 should be ~lossless");
+    assert!(drop("50% unstruct + S-PTS") < 8.0);
+    assert!(drop("8:16 + D-PTS") < 8.0);
+}

@@ -1,0 +1,92 @@
+//! Cross-language semantic pinning: replay the python oracle's golden
+//! vectors (`artifacts/golden.json`, written by `aot.py`) through the
+//! rust-native sparsity implementation. Skips when artifacts are absent
+//! (pure-rust CI); `make test` always exercises it.
+
+use nmsparse::sparsity::nm::nm_mask;
+use nmsparse::sparsity::transforms::{mitigated_nm_prune, Shift};
+use nmsparse::util::json;
+use nmsparse::util::tensor::Tensor;
+use std::path::Path;
+
+fn load_golden() -> Option<json::Json> {
+    let path = Path::new("artifacts/golden.json");
+    if !path.exists() {
+        eprintln!("golden.json missing — run `make artifacts`; skipping");
+        return None;
+    }
+    Some(json::parse(&std::fs::read_to_string(path).unwrap()).unwrap())
+}
+
+fn floats(j: &json::Json) -> Vec<f32> {
+    j.as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as f32)
+        .collect()
+}
+
+#[test]
+fn golden_nm_masks_match_python_oracle() {
+    let Some(g) = load_golden() else { return };
+    let mut checked = 0;
+    for case in g.req("cases").unwrap().as_arr().unwrap() {
+        if case.req("kind").unwrap().as_str() != Some("nm_mask") {
+            continue;
+        }
+        let n = case.req("n").unwrap().as_usize().unwrap();
+        let m = case.req("m").unwrap().as_usize().unwrap();
+        let rows = case.req("rows").unwrap().as_usize().unwrap();
+        let cols = case.req("cols").unwrap().as_usize().unwrap();
+        let scores = floats(case.req("scores_abs").unwrap());
+        let expected: Vec<bool> = case
+            .req("mask")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() != 0.0)
+            .collect();
+        for r in 0..rows {
+            let row = &scores[r * cols..(r + 1) * cols];
+            let mask = nm_mask(row, n, m);
+            assert_eq!(
+                mask,
+                expected[r * cols..(r + 1) * cols].to_vec(),
+                "{n}:{m} row {r}"
+            );
+        }
+        checked += 1;
+    }
+    assert!(checked >= 4, "expected nm_mask cases in golden file");
+}
+
+#[test]
+fn golden_mitigated_prune_matches_python_oracle() {
+    let Some(g) = load_golden() else { return };
+    let mut checked = 0;
+    for case in g.req("cases").unwrap().as_arr().unwrap() {
+        if case.req("kind").unwrap().as_str() != Some("mitigated_prune_2_4") {
+            continue;
+        }
+        let rows = case.req("rows").unwrap().as_usize().unwrap();
+        let cols = case.req("cols").unwrap().as_usize().unwrap();
+        let shift_mode = case.req("shift_mode").unwrap().as_f64().unwrap();
+        let use_var = case.req("use_var").unwrap().as_f64().unwrap() == 1.0;
+        let x = Tensor::from_vec(&[rows, cols], floats(case.req("x").unwrap()));
+        let expected = Tensor::from_vec(&[rows, cols], floats(case.req("y").unwrap()));
+        let shift = if shift_mode == 1.0 {
+            Shift::DynamicPerToken
+        } else {
+            Shift::None
+        };
+        let y = mitigated_nm_prune(&x, 2, 4, shift, use_var);
+        let d = y.max_abs_diff(&expected);
+        assert!(
+            d < 2e-4,
+            "shift_mode={shift_mode} use_var={use_var}: max diff {d}"
+        );
+        checked += 1;
+    }
+    assert!(checked >= 4, "expected mitigated cases in golden file");
+}

@@ -1,0 +1,153 @@
+//! Integration tests over the full runtime: PJRT + artifacts + coordinator.
+//! All tests skip (with a note) when `make artifacts` has not run, so
+//! `cargo test` stays green on a fresh checkout; `make test` runs them for
+//! real. Single #[test] wrapper to share one PJRT client/process.
+
+use nmsparse::coordinator::methods::{MethodConfig, WeightTransform};
+use nmsparse::coordinator::Coordinator;
+use nmsparse::sparsity::Pattern;
+use nmsparse::synthlang::corpus::Corpus;
+use nmsparse::synthlang::tasks::TaskSet;
+use nmsparse::synthlang::vocab::Vocab;
+use std::path::Path;
+
+fn artifacts_ready() -> bool {
+    Path::new("artifacts/io_manifest.json").exists()
+}
+
+#[test]
+fn runtime_end_to_end() {
+    if !artifacts_ready() {
+        eprintln!("artifacts missing — run `make artifacts`; skipping integration tests");
+        return;
+    }
+    let coord = Coordinator::open(Path::new("artifacts")).expect("open");
+    let dims = coord.pool.manifest.dims.clone();
+
+    // --- 1. dense engine runs and produces sane logprobs ---
+    let dense = MethodConfig::dense();
+    let engine = coord.pool.engine(&dense).expect("dense engine");
+    let tokens: Vec<i32> = (0..dims.batch * dims.seq).map(|i| (i % 90) as i32).collect();
+    let lens = vec![dims.seq as i32; dims.batch];
+    let out = engine.run(&coord.pool.rt, &tokens, &lens).expect("run");
+    assert!(out.tgt_logprobs.iter().all(|x| x.is_finite() && *x <= 1e-4));
+    assert!(out.last_logits.iter().all(|x| x.is_finite()));
+
+    // --- 2. sparsification with every site disabled == dense ---
+    let p24 = Pattern::NM { n: 2, m: 4 };
+    let disabled = MethodConfig::act(p24)
+        .with_disabled_sites(&["q", "k", "v", "o", "gate", "up", "down"]);
+    let e_dis = coord.pool.engine(&disabled).expect("disabled engine");
+    let out_dis = e_dis.run(&coord.pool.rt, &tokens, &lens).expect("run");
+    let max_diff = out
+        .tgt_logprobs
+        .iter()
+        .zip(&out_dis.tgt_logprobs)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-3, "enable plumbing broken: {max_diff}");
+
+    // --- 3. sparsification actually changes outputs when enabled ---
+    let e_24 = coord.pool.engine(&MethodConfig::act(p24)).expect("2:4");
+    let out_24 = e_24.run(&coord.pool.rt, &tokens, &lens).expect("run");
+    let diff = out
+        .tgt_logprobs
+        .iter()
+        .zip(&out_24.tgt_logprobs)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(diff > 1e-4, "2:4 sparsification had no effect");
+
+    // --- 4. trained model: dense ppl sane and ordered vs sparse ---
+    let stream = Corpus::read_tokens(Path::new("artifacts/data/corpus_valid.tokens")).unwrap();
+    let ppl_dense = coord.perplexity(&dense, &stream, 8).unwrap();
+    let ppl_24 = coord.perplexity(&MethodConfig::act(p24), &stream, 8).unwrap();
+    assert!(ppl_dense > 1.0 && ppl_dense < 50.0, "dense ppl {ppl_dense}");
+    assert!(
+        ppl_24 > ppl_dense * 0.99,
+        "2:4 ppl {ppl_24} should not beat dense {ppl_dense}"
+    );
+
+    // --- 5. scoring determinism + batch-composition independence ---
+    let vocab = Vocab::synthlang();
+    let q = vocab.encode("does the red fox live in the forest ?").unwrap();
+    let yes = vocab.encode("yes").unwrap();
+    let mut row = q.clone();
+    let start = row.len();
+    row.extend(&yes);
+    let single = vec![(row.clone(), (start, start + 1))];
+    let s1 = coord.score_rows(&dense, &single).unwrap();
+    let s2 = coord.score_rows(&dense, &single).unwrap();
+    assert_eq!(s1, s2, "scoring must be deterministic");
+    // Same row inside a larger batch gets the same score.
+    let mut many = vec![(row.clone(), (start, start + 1))];
+    for i in 0..9u32 {
+        let filler = vocab.encode("the red fox eats berries .").unwrap();
+        let fl = filler.len();
+        let _ = i;
+        many.push((filler, (fl - 1, fl)));
+    }
+    let s3 = coord.score_rows(&dense, &many).unwrap();
+    assert!(
+        (s1[0] - s3[0]).abs() < 1e-4,
+        "batch composition changed a score: {} vs {}",
+        s1[0],
+        s3[0]
+    );
+
+    // --- 6. weight transforms flow through the dense artifact ---
+    let wt = MethodConfig::wt(Pattern::Unstructured { keep_pct: 50 });
+    assert_eq!(wt.weight_transform, WeightTransform::Prune(Pattern::Unstructured { keep_pct: 50 }));
+    let s_wt = coord.score_rows(&wt, &single).unwrap();
+    assert!((s_wt[0] - s1[0]).abs() > 1e-6, "WT pruning had no effect");
+
+    // --- 7. every manifest variant compiles, binds and runs ---
+    let keys: Vec<String> = coord.pool.manifest.variants.keys().cloned().collect();
+    for key in &keys {
+        let meta = coord.pool.manifest.variant(key).unwrap().clone();
+        let cfg = match meta.rank {
+            Some(r) => {
+                let mut c = MethodConfig::act(Pattern::parse(&meta.pattern).unwrap());
+                c.variant_key = key.clone();
+                c.rank = Some(r);
+                c.id = format!("smoke-{key}");
+                c
+            }
+            None => {
+                let mut c = MethodConfig::act(Pattern::parse(&meta.pattern).unwrap());
+                c.variant_key = key.clone();
+                c.id = format!("smoke-{key}");
+                c
+            }
+        };
+        let e = coord.pool.engine(&cfg).unwrap_or_else(|err| panic!("{key}: {err:#}"));
+        let o = e.run(&coord.pool.rt, &tokens, &lens).unwrap();
+        assert!(
+            o.tgt_logprobs.iter().all(|x| x.is_finite()),
+            "variant {key} produced non-finite logprobs"
+        );
+    }
+
+    // --- 8. generation is deterministic and stops on stop tokens ---
+    let prompt = vocab.encode("where does the red fox live ? in").unwrap();
+    let stop = vec![vocab.id(".").unwrap()];
+    let g1 = coord.generate(&dense, &[prompt.clone()], 8, &stop).unwrap();
+    let g2 = coord.generate(&dense, &[prompt.clone()], 8, &stop).unwrap();
+    assert_eq!(g1, g2, "greedy decode must be deterministic");
+    assert!(!g1[0].is_empty());
+
+    // --- 9. task evaluation above chance for the trained dense model ---
+    let boolq = TaskSet::load(Path::new("artifacts/data/tasks/synth_boolq.json")).unwrap();
+    let r = nmsparse::evalharness::eval_taskset(&coord, &dense, &boolq, 48).unwrap();
+    assert!(
+        r.accuracy > 0.55,
+        "trained dense model should beat chance on boolq: {}",
+        r.accuracy
+    );
+
+    println!(
+        "integration OK: {} variants exercised, dense ppl {ppl_dense:.2}, boolq {:.3}",
+        keys.len(),
+        r.accuracy
+    );
+}

@@ -1,0 +1,33 @@
+#!/usr/bin/env python3
+"""Render results/*.json (from `nmsparse table ...`) back to markdown for
+EXPERIMENTS.md. Usage: python tools/results_to_md.py [results_dir]"""
+
+import json
+import os
+import sys
+
+
+def render(path: str) -> str:
+    with open(path) as f:
+        t = json.load(f)
+    out = [f"### {t.get('title', os.path.basename(path))}", ""]
+    header = t["header"]
+    out.append("| " + " | ".join(header) + " |")
+    out.append("|" + "---|" * len(header))
+    for row in t["rows"]:
+        out.append("| " + " | ".join(row) + " |")
+    if t.get("note"):
+        out.append(f"\n_{t['note']}_")
+    return "\n".join(out)
+
+
+def main() -> None:
+    d = sys.argv[1] if len(sys.argv) > 1 else "results"
+    names = sorted(n for n in os.listdir(d) if n.endswith(".json"))
+    for n in names:
+        print(render(os.path.join(d, n)))
+        print()
+
+
+if __name__ == "__main__":
+    main()
