@@ -111,12 +111,9 @@ fn main() -> Result<()> {
 
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "\ne2e done in {dt:.1}s: {} forwards, {} rows scored, {} tokens generated \
-         ({:.1} forwards/s)",
-        ctx.coord.forwards.get(),
-        ctx.coord.rows_scored.get(),
-        ctx.coord.tokens_generated.get(),
-        ctx.coord.forwards.get() as f64 / dt
+        "\ne2e done in {dt:.1}s: {} ({:.1} forwards/s)",
+        ctx.coord.stats.summary(),
+        ctx.coord.stats.forwards() as f64 / dt
     );
     anyhow::ensure!(ok_all, "some paper-shape claims failed");
     println!("ALL CLAIM CHECKS PASSED");

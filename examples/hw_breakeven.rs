@@ -12,6 +12,8 @@
 use nmsparse::hwmodel::{assess, incremental_die_area_pct, EdpModel};
 use nmsparse::metadata::{bits_per_element, Encoding};
 use nmsparse::sparsity::Pattern;
+use nmsparse::tables::{load_measured_overhead, OVERHEAD_BENCH_FILE};
+use std::path::Path;
 
 fn main() {
     println!("== flexibility vs metadata (the §1 argument) ==");
@@ -64,6 +66,41 @@ fn main() {
         paper.breakeven_k(),
         EdpModel::CONSERVATIVE_K
     );
+
+    // Measured software baseline: `cargo bench -- tables` times the fused
+    // Sparsifier against end-to-end forward time per pattern and writes the
+    // overhead fractions; use them as alpha instead of the analytic 0.3.
+    match load_measured_overhead(Path::new(OVERHEAD_BENCH_FILE)) {
+        Some(measured) => {
+            println!("\n== measured software-overhead baseline ({OVERHEAD_BENCH_FILE}) ==");
+            println!(
+                "{:<10} {:>12} {:>12} {:>12}",
+                "pattern", "alpha (sw)", "EDP gain", "k required"
+            );
+            for (pat, frac) in &measured {
+                let r = match Pattern::parse(pat) {
+                    Ok(p) => 1.0 / p.density().max(1e-9),
+                    Err(_) => 2.0,
+                };
+                let m = EdpModel {
+                    bandwidth_reduction: r,
+                    utilization: 0.85,
+                    overhead: *frac,
+                };
+                println!(
+                    "{:<10} {:>12.4} {:>11.3}x {:>12.3}",
+                    pat,
+                    frac,
+                    m.edp_improvement(),
+                    m.breakeven_k()
+                );
+            }
+        }
+        None => println!(
+            "\n(no {OVERHEAD_BENCH_FILE} — run `cargo bench -- tables` with artifacts \
+             to add a measured software-overhead baseline)"
+        ),
+    }
 
     println!("\n== qualitative complexity (Table 6) ==");
     for p in [Pattern::NM { n: 2, m: 4 }, Pattern::NM { n: 8, m: 16 }] {

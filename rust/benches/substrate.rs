@@ -1,17 +1,21 @@
-//! Pure-rust substrate benchmarks: PRNG, JSON, tokenizer, N:M selection,
-//! metadata codecs, quantization — the L3-side hot paths that must never
-//! dominate the PJRT executable time.
+//! Pure-rust substrate benchmarks: PRNG, JSON, tokenizer, the fused
+//! sparsification pipeline vs the seed per-row loop, metadata codecs,
+//! quantization — the L3-side hot paths that must never dominate the PJRT
+//! executable time.
 //!
 //! `cargo bench --offline -- substrate` (custom harness; criterion is not
-//! available in the offline image — see util::bench).
+//! available in the offline image — see util::bench). Writes
+//! `BENCH_sparsity.json` with the per-pattern rows/sec of the seed loop,
+//! the fused per-row pass and the row-parallel batch driver.
 
 use nmsparse::metadata::MaskCodec;
-use nmsparse::sparsity::{nm, unstructured, Pattern};
+use nmsparse::sparsity::{pipeline, Pattern, Scratch, Sparsifier};
 use nmsparse::synthlang::vocab::Vocab;
 use nmsparse::util::bench::BenchSuite;
-use nmsparse::util::json;
+use nmsparse::util::json::{self, Json};
 use nmsparse::util::prng::Rng;
 use nmsparse::util::tensor::Tensor;
+use nmsparse::util::threadpool;
 
 fn main() {
     let mut suite = BenchSuite::new("substrate");
@@ -67,29 +71,68 @@ fn main() {
         });
     }
 
-    // ---- rust-native N:M selection (weight-pruning path) ----
-    for (n, m) in [(2usize, 4usize), (8, 16), (16, 32)] {
-        let h = 1024;
-        let xs: Vec<f32> = (0..h).map(|_| rng.normal() as f32).collect();
-        suite.bench_with_items(
-            &format!("sparsity/nm_mask {n}:{m} (elts)"),
-            Some(h as f64),
-            || {
-                std::hint::black_box(nm::nm_mask(&xs, n, m));
-            },
+    // ---- fused sparsification pipeline vs the seed per-row loop ----
+    // The tentpole comparison: the seed path (three allocating passes with
+    // an O(m²) rank loop per block, preserved as pipeline::reference_*)
+    // against the fused Sparsifier (single pass, O(m) nth-element select,
+    // reusable scratch) and its row-parallel batch driver.
+    let (rows, h) = (256usize, 1024usize);
+    let threads = threadpool::default_threads();
+    let sparsity_patterns = ["2:4", "8:16", "16:32", "u50"];
+    {
+        let x = Tensor::from_vec(
+            &[rows, h],
+            (0..rows * h).map(|_| rng.normal() as f32).collect(),
         );
+        for key in sparsity_patterns {
+            let pattern = Pattern::parse(key).unwrap();
+            let sp = Sparsifier::new(pattern);
+            {
+                let mut buf = x.data.clone();
+                suite.bench_with_items(
+                    &format!("sparsity/seed per-row {key} (rows)"),
+                    Some(rows as f64),
+                    || {
+                        buf.copy_from_slice(&x.data);
+                        for row in buf.chunks_exact_mut(h) {
+                            pipeline::reference_row_prune(row, pattern);
+                        }
+                        std::hint::black_box(&buf);
+                    },
+                );
+            }
+            {
+                let mut buf = x.data.clone();
+                let mut scratch = Scratch::new();
+                suite.bench_with_items(
+                    &format!("sparsity/fused per-row {key} (rows)"),
+                    Some(rows as f64),
+                    || {
+                        buf.copy_from_slice(&x.data);
+                        for row in buf.chunks_exact_mut(h) {
+                            sp.sparsify_row(row, &mut scratch);
+                        }
+                        std::hint::black_box(&buf);
+                    },
+                );
+            }
+            {
+                let mut t = x.clone();
+                suite.bench_with_items(
+                    &format!("sparsity/fused batch {key} (rows)"),
+                    Some(rows as f64),
+                    || {
+                        t.data.copy_from_slice(&x.data);
+                        sp.sparsify_batch(&mut t, threads);
+                        std::hint::black_box(&t);
+                    },
+                );
+            }
+        }
     }
     {
-        let h = 1024;
-        let xs: Vec<f32> = (0..h).map(|_| rng.normal() as f32).collect();
-        suite.bench_with_items("sparsity/topk u50 (elts)", Some(h as f64), || {
-            let mut v = xs.clone();
-            unstructured::prune_row_magnitude(&mut v, 0.5);
-            std::hint::black_box(v);
-        });
-    }
-    {
-        // Whole-tensor weight pruning, the WT-baseline bind-time cost.
+        // Whole-tensor weight pruning, the WT-baseline bind-time cost (now
+        // routed through the fused pipeline's batch driver).
         let w = Tensor::from_vec(
             &[512, 512],
             (0..512 * 512).map(|_| rng.normal() as f32).collect(),
@@ -153,6 +196,43 @@ fn main() {
                 std::hint::black_box(nmsparse::quant::fake_quant_int8(&mut t, 8));
             },
         );
+    }
+
+    // ---- machine-readable sparsity report (BENCH_sparsity.json) ----
+    // Per-pattern rows/sec for the seed loop vs the fused paths, plus the
+    // speedup ratios the acceptance gate checks (fused batch ≥ 3x seed at
+    // 8:16). Skipped when a --filter hid the sparsity benches.
+    {
+        let mut patterns = Json::obj();
+        let mut have_any = false;
+        for key in sparsity_patterns {
+            let seed = suite.rate_of(&format!("sparsity/seed per-row {key} (rows)"));
+            let fused_row = suite.rate_of(&format!("sparsity/fused per-row {key} (rows)"));
+            let fused_batch = suite.rate_of(&format!("sparsity/fused batch {key} (rows)"));
+            if let (Some(seed), Some(fused_row), Some(fused_batch)) =
+                (seed, fused_row, fused_batch)
+            {
+                have_any = true;
+                let mut p = Json::obj();
+                p.insert("seed_rows_per_sec", seed.into());
+                p.insert("fused_row_rows_per_sec", fused_row.into());
+                p.insert("fused_batch_rows_per_sec", fused_batch.into());
+                p.insert("fused_row_speedup_vs_seed", (fused_row / seed).into());
+                p.insert("fused_batch_speedup_vs_seed", (fused_batch / seed).into());
+                patterns.insert(key, p);
+            }
+        }
+        if have_any {
+            let mut j = suite.to_json();
+            j.insert("rows", rows.into());
+            j.insert("hidden", h.into());
+            j.insert("threads", threads.into());
+            j.insert("patterns", patterns);
+            match std::fs::write("BENCH_sparsity.json", j.pretty()) {
+                Ok(()) => println!("wrote BENCH_sparsity.json"),
+                Err(e) => eprintln!("could not write BENCH_sparsity.json: {e}"),
+            }
+        }
     }
 
     suite.finish();

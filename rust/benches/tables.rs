@@ -3,11 +3,25 @@
 //! "a bench per paper table AND figure"; the accuracy *content* of each
 //! table is produced by `nmsparse table <id>` (same code path).
 //!
+//! Also measures the fused pipeline's per-forward software sparsification
+//! cost as a fraction of end-to-end forward time per pattern, and writes
+//! it to `BENCH_sparsify_overhead.json` — the measured software baseline
+//! that `table6` and `examples/hw_breakeven.rs` cite for the EDP model's
+//! alpha (instead of only the paper's analytic 0.3).
+//!
 //! Requires `make artifacts`; skips gracefully if missing.
 
-use nmsparse::tables::{generate, TableCtx};
+use nmsparse::coordinator::methods::MethodConfig;
+use nmsparse::sparsity::{Pattern, Sparsifier};
+use nmsparse::synthlang::corpus::Corpus;
+use nmsparse::tables::{generate, TableCtx, OVERHEAD_BENCH_FILE};
 use nmsparse::util::bench::BenchSuite;
+use nmsparse::util::json::Json;
+use nmsparse::util::prng::Rng;
+use nmsparse::util::tensor::Tensor;
+use nmsparse::util::threadpool;
 use std::path::Path;
+use std::time::Instant;
 
 fn main() {
     if !Path::new("artifacts/io_manifest.json").exists() {
@@ -34,9 +48,103 @@ fn main() {
             std::hint::black_box(generate(&mut ctx, id).expect(id));
         });
     }
-    println!(
-        "total forwards issued during bench: {}",
-        ctx.coord.forwards.get()
-    );
+
+    sparsify_overhead_report(&ctx);
+
+    println!("total during bench: {}", ctx.coord.stats.summary());
     suite.finish();
+}
+
+/// Measure end-to-end forward time (dense engine, warm) and the fused
+/// pipeline's software sparsification cost per forward, per pattern.
+///
+/// One forward consumes `batch × seq` token rows; every sparsified site
+/// (`sites × layers`) would run the pipeline over a `[batch·seq, d_model]`
+/// activation matrix on a software-only deployment, so
+/// `overhead_frac = sites · t_sparsify(batch·seq × d_model) / t_forward`.
+fn sparsify_overhead_report(ctx: &TableCtx) {
+    let dims = ctx.coord.pool.manifest.dims.clone();
+    let act_rows = dims.batch * dims.seq;
+    let site_calls = dims.sites.len() * dims.n_layers;
+    let threads = threadpool::default_threads();
+
+    // Forward time: score a validation window on the (already warm) dense
+    // engine and average over a few repeats.
+    let dense = MethodConfig::dense();
+    let stream = match Corpus::read_tokens(Path::new("artifacts/data/corpus_valid.tokens")) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("sparsify-overhead: no validation corpus ({e}); skipping");
+            return;
+        }
+    };
+    let forwards_before = ctx.coord.stats.forwards();
+    let t0 = Instant::now();
+    for _ in 0..3 {
+        if let Err(e) = ctx.coord.perplexity(&dense, &stream, 2) {
+            println!("sparsify-overhead: forward failed ({e}); skipping");
+            return;
+        }
+    }
+    let n_forwards = ctx.coord.stats.forwards() - forwards_before;
+    if n_forwards == 0 {
+        println!("sparsify-overhead: no forwards issued; skipping");
+        return;
+    }
+    let forward_s = t0.elapsed().as_secs_f64() / n_forwards as f64;
+
+    let mut rng = Rng::new(0xBEEF);
+    let x = Tensor::from_vec(
+        &[act_rows, dims.d_model],
+        (0..act_rows * dims.d_model)
+            .map(|_| rng.normal() as f32)
+            .collect(),
+    );
+
+    println!(
+        "\n-- software sparsify overhead vs forward ({}x{} acts, {} site calls, {:.2}ms/forward) --",
+        act_rows,
+        dims.d_model,
+        site_calls,
+        forward_s * 1e3
+    );
+    let mut patterns = Json::obj();
+    for key in ["2:4", "8:16", "16:32", "u50"] {
+        let pattern = Pattern::parse(key).unwrap();
+        let sp = Sparsifier::new(pattern);
+        let mut buf = x.clone();
+        // Calibrate repeats so the measurement is not timer-noise bound.
+        let reps = 5usize;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            buf.data.copy_from_slice(&x.data);
+            sp.sparsify_batch(&mut buf, threads);
+        }
+        let per_matrix_s = t0.elapsed().as_secs_f64() / reps as f64;
+        let per_forward_s = per_matrix_s * site_calls as f64;
+        let frac = per_forward_s / forward_s;
+        println!(
+            "{:<8} {:>10.3}ms/site-matrix {:>10.3}ms/forward  overhead {:>7.4} of forward",
+            key,
+            per_matrix_s * 1e3,
+            per_forward_s * 1e3,
+            frac
+        );
+        let mut p = Json::obj();
+        p.insert("sparsify_s_per_site_matrix", per_matrix_s.into());
+        p.insert("sparsify_s_per_forward", per_forward_s.into());
+        p.insert("overhead_frac", frac.into());
+        patterns.insert(key, p);
+    }
+    let mut j = Json::obj();
+    j.insert("forward_s", forward_s.into());
+    j.insert("act_rows", act_rows.into());
+    j.insert("d_model", dims.d_model.into());
+    j.insert("site_calls", site_calls.into());
+    j.insert("threads", threads.into());
+    j.insert("patterns", patterns);
+    match std::fs::write(OVERHEAD_BENCH_FILE, j.pretty()) {
+        Ok(()) => println!("wrote {OVERHEAD_BENCH_FILE}"),
+        Err(e) => eprintln!("could not write {OVERHEAD_BENCH_FILE}: {e}"),
+    }
 }

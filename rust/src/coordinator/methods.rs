@@ -10,7 +10,9 @@
 
 use crate::quant;
 use crate::runtime::InputSpec;
-use crate::sparsity::{weightprune, Pattern};
+use crate::sparsity::criteria::Criterion;
+use crate::sparsity::transforms::Shift;
+use crate::sparsity::{weightprune, Pattern, Sparsifier};
 use crate::util::tensor::{Tensor, TensorStore};
 use anyhow::{bail, Context, Result};
 
@@ -167,6 +169,79 @@ impl MethodConfig {
         self
     }
 
+    /// Recover the sparsity pattern this cell's artifact serves from its
+    /// variant key (`"8_16"`, `"u50"`, `"dense"`, `"rsparse64_8_16"`).
+    pub fn pattern(&self) -> Result<Pattern> {
+        let key: &str = self
+            .variant_key
+            .strip_prefix("rsparse")
+            .and_then(|r| r.split_once('_').map(|(_rank, rest)| rest))
+            .unwrap_or(&self.variant_key);
+        Pattern::parse(&key.replace('_', ":"))
+            .with_context(|| format!("variant key '{}'", self.variant_key))
+    }
+
+    /// The rust-native fused pipeline equivalent of this cell's kernel
+    /// flags, built **once per (method × pattern) cell** and reused across
+    /// every row (the old path rebuilt per-row scoring closures).
+    ///
+    /// Per-*site* data lives in the methodparams store, so the caller
+    /// supplies it: `eta` for `shift_mode == 2` (S-PTS/L-PTS), `cscale` for
+    /// Amber (`cscale_family`) or CLACT (`use_clact` — pass this matrix's
+    /// `criteria::clact_col_energy`, it is data-dependent). Missing
+    /// required vectors are errors, never silent downgrades to ACT; cells
+    /// with an LS diagonal scale (`lsw_family`) are kernel-only and are
+    /// rejected here.
+    pub fn sparsifier(&self, eta: Option<&[f32]>, cscale: Option<&[f32]>) -> Result<Sparsifier> {
+        if self.lsw_family.is_some() {
+            bail!(
+                "method '{}' uses a learnable diagonal scale (lsw) — kernel-only, \
+                 not representable in the host-side Sparsifier",
+                self.id
+            );
+        }
+        let mut sp = Sparsifier::new(self.pattern()?).with_var(self.use_var != 0.0);
+        sp = match self.shift_mode as i64 {
+            0 => sp,
+            1 => sp.with_shift(Shift::DynamicPerToken),
+            2 => {
+                let e = eta.context(
+                    "shift_mode 2 (S-PTS/L-PTS) needs this site's eta vector from methodparams",
+                )?;
+                sp.with_shift(Shift::PerChannel(e.to_vec()))
+            }
+            other => bail!("unknown shift_mode {other}"),
+        };
+        match (self.use_clact != 0.0, self.cscale_family.is_some(), cscale) {
+            (true, _, Some(cs)) => {
+                sp = sp
+                    .with_channel_scale(cs.to_vec())
+                    .with_criterion(Criterion::Clact);
+            }
+            (true, _, None) => bail!(
+                "CLACT needs this activation matrix's column energies \
+                 (criteria::clact_col_energy) passed as cscale"
+            ),
+            (false, true, Some(cs)) => {
+                sp = sp
+                    .with_channel_scale(cs.to_vec())
+                    .with_criterion(Criterion::Amber);
+            }
+            (false, true, None) => bail!(
+                "method '{}' scores with Amber channel norms — pass this site's \
+                 cscale vector from methodparams",
+                self.id
+            ),
+            (false, false, Some(_)) => bail!(
+                "method '{}' defines no channel scale — refusing a cscale that \
+                 would silently change its scoring criterion",
+                self.id
+            ),
+            (false, false, None) => {}
+        }
+        Ok(sp)
+    }
+
     /// Cache key distinguishing bound engines.
     pub fn engine_key(&self) -> String {
         format!(
@@ -184,7 +259,9 @@ impl MethodConfig {
         )
     }
 
-    /// Checkpoint after this config's weight transform.
+    /// Checkpoint after this config's weight transform. Both transforms run
+    /// through the fused pipeline: WT pruning builds one `Sparsifier` for
+    /// the whole store, and quantization is a single fused sweep.
     pub fn transformed_weights(&self, weights: &TensorStore) -> Result<TensorStore> {
         let mut w = weights.clone();
         match &self.weight_transform {
@@ -193,7 +270,7 @@ impl MethodConfig {
                 weightprune::prune_weights(&mut w, *p)?;
             }
             WeightTransform::Quant(bits) => {
-                quant::quantize_store(&mut w, *bits)?;
+                quant::quantize_store_with(&mut w, *bits, None)?;
             }
         }
         Ok(w)
@@ -425,6 +502,78 @@ mod tests {
             act.transformed_weights(&w).unwrap().get("layers.0.q.w").unwrap(),
             w.get("layers.0.q.w").unwrap()
         );
+    }
+
+    #[test]
+    fn pattern_roundtrips_from_variant_key() {
+        assert_eq!(
+            MethodConfig::by_name("ACT", p816()).unwrap().pattern().unwrap(),
+            p816()
+        );
+        assert_eq!(
+            MethodConfig::dense().pattern().unwrap(),
+            Pattern::Dense
+        );
+        assert_eq!(
+            MethodConfig::act(Pattern::Unstructured { keep_pct: 50 })
+                .pattern()
+                .unwrap(),
+            Pattern::Unstructured { keep_pct: 50 }
+        );
+        assert_eq!(
+            MethodConfig::by_name("R-Sparse(64)", p816())
+                .unwrap()
+                .pattern()
+                .unwrap(),
+            p816()
+        );
+    }
+
+    #[test]
+    fn sparsifier_built_once_per_cell_reflects_flags() {
+        let dpts = MethodConfig::by_name("D-PTS", p816()).unwrap();
+        let sp = dpts.sparsifier(None, None).unwrap();
+        assert_eq!(sp.pattern(), p816());
+        assert!(matches!(sp.shift(), Shift::DynamicPerToken));
+        assert!(!sp.uses_var());
+
+        let var = MethodConfig::by_name("VAR", p816()).unwrap();
+        assert!(var.sparsifier(None, None).unwrap().uses_var());
+
+        // S-PTS needs the site's eta vector.
+        let spts = MethodConfig::by_name("S-PTS", p816()).unwrap();
+        assert!(spts.sparsifier(None, None).is_err());
+        let sp = spts.sparsifier(Some(&[0.5; 16]), None).unwrap();
+        assert!(matches!(sp.shift(), Shift::PerChannel(v) if v.len() == 16));
+
+        // CLACT / Amber require their channel scales — never a silent ACT.
+        let clact = MethodConfig::by_name("CLACT", p816()).unwrap();
+        assert!(clact.sparsifier(None, None).is_err());
+        let sp = clact.sparsifier(None, Some(&[1.0; 16])).unwrap();
+        assert_eq!(sp.criterion(), Criterion::Clact);
+        let amber = MethodConfig::by_name("Amber-Pruner", p816()).unwrap();
+        assert!(amber.sparsifier(None, None).is_err());
+        assert_eq!(
+            amber
+                .sparsifier(None, Some(&[1.0; 16]))
+                .unwrap()
+                .criterion(),
+            Criterion::Amber
+        );
+
+        // A cscale for a method that defines none is rejected, not applied.
+        assert!(dpts.sparsifier(None, Some(&[1.0; 16])).is_err());
+
+        // LS cells are kernel-only.
+        let ls = MethodConfig::by_name("LS+L-PTS", p816()).unwrap();
+        assert!(ls.sparsifier(Some(&[0.0; 16]), None).is_err());
+
+        // The built pipeline actually sparsifies at the cell's pattern.
+        let act = MethodConfig::by_name("ACT", p816()).unwrap();
+        let sp = act.sparsifier(None, None).unwrap();
+        let mut row: Vec<f32> = (1..=16).map(|i| i as f32).collect();
+        sp.sparsify_row(&mut row, &mut crate::sparsity::Scratch::new());
+        assert_eq!(row.iter().filter(|v| **v != 0.0).count(), 8);
     }
 
     #[test]

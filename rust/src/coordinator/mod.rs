@@ -18,15 +18,66 @@ use crate::coordinator::methods::MethodConfig;
 use crate::coordinator::pool::EnginePool;
 use anyhow::Result;
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
+/// Atomic run counters for throughput reporting. Shared references can bump
+/// these from parallel serving paths, and the counters themselves no longer
+/// block `Coordinator: Sync` the way the old `Cell<usize>` trio did (the
+/// engine pool's PJRT handles remain the only single-thread constraint).
+/// Loads/stores use `Ordering::Relaxed` — they are statistics, not
+/// synchronization.
+#[derive(Debug, Default)]
+pub struct CoordStats {
+    forwards: AtomicUsize,
+    rows_scored: AtomicUsize,
+    tokens_generated: AtomicUsize,
+}
+
+impl CoordStats {
+    pub fn new() -> CoordStats {
+        CoordStats::default()
+    }
+
+    pub fn add_forwards(&self, by: usize) {
+        self.forwards.fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn add_rows_scored(&self, by: usize) {
+        self.rows_scored.fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn add_tokens_generated(&self, by: usize) {
+        self.tokens_generated.fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn forwards(&self) -> usize {
+        self.forwards.load(Ordering::Relaxed)
+    }
+
+    pub fn rows_scored(&self) -> usize {
+        self.rows_scored.load(Ordering::Relaxed)
+    }
+
+    pub fn tokens_generated(&self) -> usize {
+        self.tokens_generated.load(Ordering::Relaxed)
+    }
+
+    /// One-line human summary for logs and bench footers.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} forwards, {} rows scored, {} tokens generated",
+            self.forwards(),
+            self.rows_scored(),
+            self.tokens_generated()
+        )
+    }
+}
 
 /// High-level entry point owning the engine pool.
 pub struct Coordinator {
     pub pool: EnginePool,
     /// Running counts for throughput reporting.
-    pub forwards: std::cell::Cell<usize>,
-    pub rows_scored: std::cell::Cell<usize>,
-    pub tokens_generated: std::cell::Cell<usize>,
+    pub stats: CoordStats,
 }
 
 impl Coordinator {
@@ -34,14 +85,8 @@ impl Coordinator {
     pub fn open(artifacts_dir: &Path) -> Result<Coordinator> {
         Ok(Coordinator {
             pool: EnginePool::open(artifacts_dir)?,
-            forwards: std::cell::Cell::new(0),
-            rows_scored: std::cell::Cell::new(0),
-            tokens_generated: std::cell::Cell::new(0),
+            stats: CoordStats::new(),
         })
-    }
-
-    fn bump(cell: &std::cell::Cell<usize>, by: usize) {
-        cell.set(cell.get() + by);
     }
 
     /// Sum of continuation logprobs for each `(row, span)`:
@@ -85,7 +130,7 @@ impl Coordinator {
         let mut idx = 0;
         for pb in &packed {
             let out = engine.run(&self.pool.rt, &pb.tokens, &pb.lens)?;
-            Self::bump(&self.forwards, 1);
+            self.stats.add_forwards(1);
             for r in 0..pb.rows {
                 let (s, e) = spans[idx];
                 // log p(row[t]) lives at tgt_lp[t-1].
@@ -98,7 +143,7 @@ impl Coordinator {
                 idx += 1;
             }
         }
-        Self::bump(&self.rows_scored, rows.len());
+        self.stats.add_rows_scored(rows.len());
         Ok(scores)
     }
 
@@ -113,7 +158,12 @@ impl Coordinator {
         let engine = self.pool.engine(cfg)?;
         let dims = engine.dims().clone();
         let (batch, seq) = (dims.batch, dims.seq);
-        let n_windows = ((stream.len() / seq).max(1)).min(max_windows);
+        let n_windows = (stream.len() / seq).min(max_windows.max(1));
+        anyhow::ensure!(
+            n_windows > 0,
+            "token stream too short for perplexity: {} tokens < one {seq}-token window",
+            stream.len()
+        );
         let rows: Vec<Vec<u32>> = (0..n_windows)
             .map(|i| stream[i * seq..(i + 1) * seq].to_vec())
             .collect();
@@ -122,7 +172,7 @@ impl Coordinator {
         let mut count = 0usize;
         for pb in &packed {
             let out = engine.run(&self.pool.rt, &pb.tokens, &pb.lens)?;
-            Self::bump(&self.forwards, 1);
+            self.stats.add_forwards(1);
             for r in 0..pb.rows {
                 let len = pb.lens[r] as usize;
                 for t in 0..len.saturating_sub(1) {
@@ -165,7 +215,7 @@ impl Coordinator {
                 debug_assert_eq!(packed.len(), 1);
                 let pb = &packed[0];
                 let out = engine.run(&self.pool.rt, &pb.tokens, &pb.lens)?;
-                Self::bump(&self.forwards, 1);
+                self.stats.add_forwards(1);
                 for (r, gi) in group.iter().enumerate() {
                     if done[r] {
                         continue;
@@ -174,7 +224,7 @@ impl Coordinator {
                     let tok = argmax(logits) as u32;
                     rows[r].push(tok);
                     outputs[*gi].push(tok);
-                    Self::bump(&self.tokens_generated, 1);
+                    self.stats.add_tokens_generated(1);
                     if stop.contains(&tok) || rows[r].len() >= seq {
                         done[r] = true;
                     }
@@ -203,5 +253,31 @@ mod tests {
     fn argmax_first_on_ties() {
         assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
         assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn coord_stats_count_across_threads() {
+        let stats = CoordStats::new();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for _ in 0..250 {
+                        stats.add_forwards(1);
+                        stats.add_rows_scored(2);
+                        stats.add_tokens_generated(3);
+                    }
+                });
+            }
+        });
+        assert_eq!(stats.forwards(), 1000);
+        assert_eq!(stats.rows_scored(), 2000);
+        assert_eq!(stats.tokens_generated(), 3000);
+        assert_eq!(
+            stats.summary(),
+            "1000 forwards, 2000 rows scored, 3000 tokens generated"
+        );
+        // The whole struct is shareable by reference across threads.
+        fn assert_sync<T: Sync>(_: &T) {}
+        assert_sync(&stats);
     }
 }

@@ -9,11 +9,14 @@
 //!   linear layers route through the kernel; AOT-lowered to HLO text.
 //! - **L3** (this crate): coordinator — PJRT runtime, request batching and
 //!   scheduling, the lm-eval-style harness, the SynthLang data substrate,
-//!   rust-native sparsity/quantization baselines, the hardware cost model,
-//!   and the paper-table reproduction harness.
+//!   the fused rust-native sparsification pipeline
+//!   ([`sparsity::pipeline::Sparsifier`]) and quantization baselines, the
+//!   hardware cost model, and the paper-table reproduction harness.
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `DESIGN.md` (repo root) for the three-layer architecture, the
+//! `Sparsifier` dataflow, the experiment index, and the tier-1 CI gate
+//! (`tools/ci.sh`). Measured results are dumped by `nmsparse table` under
+//! `results/` and rendered with `tools/results_to_md.py`.
 
 pub mod coordinator;
 pub mod evalharness;

@@ -6,6 +6,7 @@
 //! artifact (weights are dequantized to f32 on load — we measure the
 //! *accuracy* effect of quantization, as the paper does, not kernel speed).
 
+use crate::sparsity::pipeline::{Scratch, Sparsifier};
 use crate::util::tensor::{Tensor, TensorStore};
 use anyhow::Result;
 
@@ -29,6 +30,21 @@ impl QuantStats {
     }
 }
 
+/// Fake-quantize one row in place; returns (scale, max abs err over the row).
+#[inline]
+fn fake_quant_row(row: &mut [f32], qmax: f32) -> (f32, f64) {
+    let amax = row.iter().fold(0.0f32, |a, x| a.max(x.abs()));
+    let scale = if amax == 0.0 { 1.0 } else { amax / qmax };
+    let mut max_err = 0.0f64;
+    for v in row.iter_mut() {
+        let q = (*v / scale).round().clamp(-qmax - 1.0, qmax);
+        let deq = q * scale;
+        max_err = max_err.max((deq - *v).abs() as f64);
+        *v = deq;
+    }
+    (scale, max_err)
+}
+
 /// Quantize one `[out, in]` weight matrix to int8 per-output-channel and
 /// immediately dequantize (fake-quant). Returns (per-channel scales, max err).
 pub fn fake_quant_int8(w: &mut Tensor, bits: u32) -> (Vec<f32>, f64) {
@@ -39,15 +55,8 @@ pub fn fake_quant_int8(w: &mut Tensor, bits: u32) -> (Vec<f32>, f64) {
     let mut scales = Vec::with_capacity(rows);
     let mut max_err = 0.0f64;
     for r in 0..rows {
-        let row = w.row_mut(r);
-        let amax = row.iter().fold(0.0f32, |a, x| a.max(x.abs()));
-        let scale = if amax == 0.0 { 1.0 } else { amax / qmax };
-        for v in row.iter_mut() {
-            let q = (*v / scale).round().clamp(-qmax - 1.0, qmax);
-            let deq = q * scale;
-            max_err = max_err.max((deq - *v).abs() as f64);
-            *v = deq;
-        }
+        let (scale, err) = fake_quant_row(w.row_mut(r), qmax);
+        max_err = max_err.max(err);
         scales.push(scale);
     }
     (scales, max_err)
@@ -55,24 +64,60 @@ pub fn fake_quant_int8(w: &mut Tensor, bits: u32) -> (Vec<f32>, f64) {
 
 /// Fake-quantize every prunable linear weight in the checkpoint.
 pub fn quantize_store(store: &mut TensorStore, bits: u32) -> Result<QuantStats> {
+    quantize_store_with(store, bits, None)
+}
+
+/// Fused weight transform: optionally run the [`Sparsifier`] over every
+/// prunable row and fake-quantize it in the same sweep (the WT+quant combo
+/// baseline — prune and quantize touch each row once instead of two
+/// allocating store passes). `mean_abs_err`/`max_abs_err` measure the
+/// quantization step only, relative to the (possibly sparsified) row.
+///
+/// Like `weightprune`, N:M rows whose width is not a multiple of M keep a
+/// dense tail; unstructured sparsifiers here are *per-row* top-k (the
+/// weight-side global-threshold variant does not fuse — use
+/// `weightprune::prune_weights` followed by [`quantize_store`] for that).
+pub fn quantize_store_with(
+    store: &mut TensorStore,
+    bits: u32,
+    sparsifier: Option<&Sparsifier>,
+) -> Result<QuantStats> {
+    assert!((2..=8).contains(&bits));
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
     let names = crate::sparsity::weightprune::prunable_weight_names(store);
     let mut stats = QuantStats::default();
     let mut abs_err_sum = 0.0f64;
+    let mut scratch = Scratch::new();
+    let mut pre_quant: Vec<f32> = Vec::new();
     for name in &names {
         let t = store.get_mut(name)?;
-        let before: Vec<f32> = t.data.clone();
-        let (scales, max_err) = fake_quant_int8(t, bits);
+        let (rows, cols) = (t.rows(), t.cols());
+        // Dense-tail guard, mirroring weightprune::prune_tensor_rows.
+        let sparsify_cols = match sparsifier.map(|sp| sp.pattern()) {
+            Some(crate::sparsity::Pattern::NM { m, .. }) => cols - cols % m as usize,
+            _ => cols,
+        };
+        for r in 0..rows {
+            let row = t.row_mut(r);
+            if let Some(sp) = sparsifier {
+                if sparsify_cols > 0 {
+                    sp.sparsify_row(&mut row[..sparsify_cols], &mut scratch);
+                }
+            }
+            pre_quant.clear();
+            pre_quant.extend_from_slice(row);
+            let (_scale, err) = fake_quant_row(row, qmax);
+            stats.max_abs_err = stats.max_abs_err.max(err);
+            abs_err_sum += row
+                .iter()
+                .zip(&pre_quant)
+                .map(|(a, b)| (a - b).abs() as f64)
+                .sum::<f64>();
+        }
         stats.tensors += 1;
-        stats.params += t.len();
-        stats.max_abs_err = stats.max_abs_err.max(max_err);
-        abs_err_sum += t
-            .data
-            .iter()
-            .zip(&before)
-            .map(|(a, b)| (a - b).abs() as f64)
-            .sum::<f64>();
-        stats.original_bytes += t.len() * 4;
-        stats.compressed_bytes += t.len() * (bits as usize) / 8 + scales.len() * 4;
+        stats.params += rows * cols;
+        stats.original_bytes += rows * cols * 4;
+        stats.compressed_bytes += rows * cols * (bits as usize) / 8 + rows * 4;
     }
     stats.mean_abs_err = if stats.params > 0 {
         abs_err_sum / stats.params as f64
@@ -135,6 +180,40 @@ mod tests {
         assert_eq!(scales, vec![1.0]);
         assert_eq!(err, 0.0);
         assert_eq!(w.data, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn fused_sparse_quant_matches_sequential() {
+        use crate::sparsity::Pattern;
+        let mut rng = Rng::new(7);
+        let mut seq = TensorStore::new();
+        seq.insert("layers.0.q.w", rand_w(&mut rng, 8, 32));
+        seq.insert("layers.1.down.w", rand_w(&mut rng, 16, 16));
+        // Width not a multiple of M: the last 2 columns keep a dense tail.
+        seq.insert("layers.2.odd.w", rand_w(&mut rng, 4, 10));
+        let mut fused = seq.clone();
+        let pattern = Pattern::NM { n: 2, m: 4 };
+        // Sequential: two store passes.
+        crate::sparsity::weightprune::prune_weights(&mut seq, pattern).unwrap();
+        quantize_store(&mut seq, 8).unwrap();
+        // Fused: one pass per row.
+        let sp = Sparsifier::new(pattern);
+        let stats = quantize_store_with(&mut fused, 8, Some(&sp)).unwrap();
+        assert_eq!(stats.tensors, 3);
+        for name in ["layers.0.q.w", "layers.1.down.w", "layers.2.odd.w"] {
+            assert_eq!(fused.get(name).unwrap(), seq.get(name).unwrap(), "{name}");
+        }
+        // Block-aligned tensors stay N:M sparse after quantization (zeros
+        // quantize to zero).
+        for name in ["layers.0.q.w", "layers.1.down.w"] {
+            for r in 0..fused.get(name).unwrap().rows() {
+                assert!(crate::sparsity::nm::satisfies_nm(
+                    fused.get(name).unwrap().row(r),
+                    2,
+                    4
+                ));
+            }
+        }
     }
 
     #[test]

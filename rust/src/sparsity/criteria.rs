@@ -48,17 +48,25 @@ pub fn score_act(x: &Tensor) -> Tensor {
     Tensor::from_vec(&x.shape, x.data.iter().map(|v| v.abs()).collect())
 }
 
-/// Score with CLACT (paper eq. 4). `x` is `[l, h]` — sequence by hidden.
-pub fn score_clact(x: &Tensor) -> Tensor {
+/// CLACT column energies `‖x_:,j‖₂` over the sequence — the data-dependent
+/// per-channel scale the fused pipeline multiplies into `|x̂|`. (The per-row
+/// `1/‖x_i,:‖₂` factor of eq. 4 is a positive constant within each row, so
+/// it never changes which elements a block keeps; the pipeline omits it.)
+pub fn clact_col_energy(x: &Tensor) -> Vec<f32> {
     let (l, h) = (x.rows(), x.cols());
-    // Column energies: sqrt(sum_p x_pj^2).
     let mut col_energy = vec![0.0f64; h];
     for i in 0..l {
         for (j, v) in x.row(i).iter().enumerate() {
             col_energy[j] += (*v as f64) * (*v as f64);
         }
     }
-    let col_energy: Vec<f32> = col_energy.iter().map(|e| (e.sqrt()) as f32).collect();
+    col_energy.iter().map(|e| (e.sqrt()) as f32).collect()
+}
+
+/// Score with CLACT (paper eq. 4). `x` is `[l, h]` — sequence by hidden.
+pub fn score_clact(x: &Tensor) -> Tensor {
+    let (l, h) = (x.rows(), x.cols());
+    let col_energy = clact_col_energy(x);
     let mut out = Tensor::zeros(&x.shape);
     for i in 0..l {
         let row = x.row(i);
@@ -162,6 +170,12 @@ mod tests {
         // For token 0 the equal-magnitude elements are separated by column
         // energy: col 0 score > col 1 score.
         assert!(s.data[0] > s.data[1]);
+    }
+
+    #[test]
+    fn clact_col_energy_exact() {
+        let x = Tensor::from_vec(&[2, 2], vec![3.0, 0.0, 4.0, 2.0]);
+        assert_eq!(clact_col_energy(&x), vec![5.0, 2.0]);
     }
 
     #[test]

@@ -15,9 +15,12 @@
 
 pub mod criteria;
 pub mod nm;
+pub mod pipeline;
 pub mod transforms;
 pub mod unstructured;
 pub mod weightprune;
+
+pub use pipeline::{Scratch, Sparsifier};
 
 use anyhow::{bail, Result};
 use std::fmt;
@@ -34,28 +37,50 @@ pub enum Pattern {
 }
 
 impl Pattern {
-    /// Parse `"dense" | "2:4" | "8:16" | "u50" | ...`.
+    /// Parse `"dense" | "2:4" | "8:16" | "u50" | ...`. Whitespace around
+    /// the string and around the `:`/`u` separators is tolerated
+    /// (`"8 : 16"`, `"u 50"`); anything else is a descriptive error.
     pub fn parse(s: &str) -> Result<Pattern> {
         let s = s.trim();
+        if s.is_empty() {
+            bail!("empty sparsity pattern (expected 'dense', 'N:M' like '8:16', or 'uK' like 'u50')");
+        }
         if s.eq_ignore_ascii_case("dense") || s.eq_ignore_ascii_case("orig") {
             return Ok(Pattern::Dense);
         }
-        if let Some(p) = s.strip_prefix('u') {
-            let sparsity: u32 = p.parse()?;
+        if s.starts_with('u') || s.starts_with('U') {
+            let p = s[1..].trim();
+            if p.is_empty() {
+                bail!("unstructured pattern '{s}' is missing the sparsity percentage (expected e.g. 'u50')");
+            }
+            let sparsity: u32 = p.parse().map_err(|_| {
+                anyhow::anyhow!("unstructured pattern '{s}': '{p}' is not a percentage in 0..=99")
+            })?;
             if sparsity >= 100 {
-                bail!("unstructured sparsity {sparsity}% out of range");
+                bail!("unstructured sparsity {sparsity}% out of range (expected 0..=99)");
             }
             return Ok(Pattern::Unstructured { keep_pct: 100 - sparsity });
         }
         if let Some((n, m)) = s.split_once(':') {
-            let n: u32 = n.parse()?;
-            let m: u32 = m.parse()?;
-            if n == 0 || m == 0 || n > m {
-                bail!("invalid N:M pattern {s}");
+            let (n_s, m_s) = (n.trim(), m.trim());
+            if n_s.is_empty() || m_s.is_empty() {
+                bail!("N:M pattern '{s}' is missing {} of the ':'", if n_s.is_empty() { "N before" } else { "M after" });
+            }
+            let n: u32 = n_s.parse().map_err(|_| {
+                anyhow::anyhow!("N:M pattern '{s}': '{n_s}' is not a positive integer")
+            })?;
+            let m: u32 = m_s.parse().map_err(|_| {
+                anyhow::anyhow!("N:M pattern '{s}': '{m_s}' is not a positive integer")
+            })?;
+            if n == 0 || m == 0 {
+                bail!("N:M pattern '{s}': N and M must be positive");
+            }
+            if n > m {
+                bail!("N:M pattern '{s}': N ({n}) cannot exceed M ({m})");
             }
             return Ok(Pattern::NM { n, m });
         }
-        bail!("unrecognized sparsity pattern '{s}'")
+        bail!("unrecognized sparsity pattern '{s}' (expected 'dense', 'N:M' like '8:16', or 'uK' like 'u50')")
     }
 
     /// Fraction of elements kept.
@@ -133,6 +158,43 @@ mod tests {
         assert!(Pattern::parse("0:4").is_err());
         assert!(Pattern::parse("u105").is_err());
         assert!(Pattern::parse("nonsense").is_err());
+    }
+
+    #[test]
+    fn parse_tolerates_internal_whitespace() {
+        assert_eq!(Pattern::parse("8 : 16").unwrap(), Pattern::NM { n: 8, m: 16 });
+        assert_eq!(Pattern::parse("  2:4  ").unwrap(), Pattern::NM { n: 2, m: 4 });
+        assert_eq!(
+            Pattern::parse("u 50").unwrap(),
+            Pattern::Unstructured { keep_pct: 50 }
+        );
+        assert_eq!(
+            Pattern::parse("U70").unwrap(),
+            Pattern::Unstructured { keep_pct: 30 }
+        );
+    }
+
+    #[test]
+    fn parse_negative_cases_have_descriptive_errors() {
+        // Bare 'u' — previously a bare ParseIntError about an empty string.
+        let e = Pattern::parse("u").unwrap_err().to_string();
+        assert!(e.contains("missing the sparsity percentage"), "{e}");
+        let e = Pattern::parse("").unwrap_err().to_string();
+        assert!(e.contains("empty sparsity pattern"), "{e}");
+        let e = Pattern::parse(":4").unwrap_err().to_string();
+        assert!(e.contains("missing N before"), "{e}");
+        let e = Pattern::parse("2:").unwrap_err().to_string();
+        assert!(e.contains("missing M after"), "{e}");
+        let e = Pattern::parse("2:4:8").unwrap_err().to_string();
+        assert!(e.contains("not a positive integer"), "{e}");
+        let e = Pattern::parse("5:4").unwrap_err().to_string();
+        assert!(e.contains("cannot exceed"), "{e}");
+        let e = Pattern::parse("0:4").unwrap_err().to_string();
+        assert!(e.contains("must be positive"), "{e}");
+        let e = Pattern::parse("ufifty").unwrap_err().to_string();
+        assert!(e.contains("not a percentage"), "{e}");
+        assert!(Pattern::parse("-2:4").is_err());
+        assert!(Pattern::parse("u-5").is_err());
     }
 
     #[test]

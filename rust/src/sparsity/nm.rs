@@ -7,51 +7,40 @@
 //! element `i` is `#{j : s_j > s_i} + #{j < i : s_j == s_i}` so ties resolve
 //! toward lower indices and exactly `n` elements survive per block.
 
+use crate::sparsity::pipeline::{self, Scratch};
+
 /// Compute the keep-mask for one row of scores. `scores.len()` must be a
 /// multiple of `m`.
+///
+/// Thin shim over the fused pipeline's partial selection (bit-identical
+/// masks for NaN-free scores — the seed rank loop kept every NaN element,
+/// the fused path treats NaN as an index-tie — O(m) per block instead of
+/// the old O(m²) rank loop). Hot paths should hold a [`Scratch`] and call
+/// [`pipeline::nm_mask_into`] directly.
+#[deprecated(note = "use sparsity::pipeline::nm_mask_into with a reusable Scratch")]
 pub fn nm_mask(scores: &[f32], n: usize, m: usize) -> Vec<bool> {
-    assert!(n > 0 && n <= m, "invalid N:M {n}:{m}");
-    assert_eq!(
-        scores.len() % m,
-        0,
-        "row length {} not a multiple of M={m}",
-        scores.len()
-    );
     let mut mask = vec![false; scores.len()];
-    for (b, block) in scores.chunks_exact(m).enumerate() {
-        let base = b * m;
-        for i in 0..m {
-            let si = block[i];
-            let mut rank = 0usize;
-            for (j, &sj) in block.iter().enumerate() {
-                if sj > si || (sj == si && j < i) {
-                    rank += 1;
-                }
-            }
-            if rank < n {
-                mask[base + i] = true;
-            }
-        }
-    }
+    let mut scratch = Scratch::new();
+    pipeline::nm_mask_into(scores, n, m, &mut mask, &mut scratch);
     mask
 }
 
 /// Apply an N:M mask in place: zero the dropped elements of `values` using
 /// scores (which may differ from values — e.g. CLACT or Amber scores).
+#[deprecated(note = "use sparsity::pipeline::nm_prune_by_scores with a reusable Scratch")]
 pub fn nm_prune_by(values: &mut [f32], scores: &[f32], n: usize, m: usize) {
-    assert_eq!(values.len(), scores.len());
-    let mask = nm_mask(scores, n, m);
-    for (v, keep) in values.iter_mut().zip(mask) {
-        if !keep {
-            *v = 0.0;
-        }
-    }
+    let mut scratch = Scratch::new();
+    pipeline::nm_prune_by_scores(values, scores, n, m, &mut scratch);
 }
 
 /// Magnitude-based N:M pruning (the paper's ACT criterion): score = |x|.
+#[deprecated(note = "use sparsity::pipeline::Sparsifier::sparsify_row")]
 pub fn nm_prune_magnitude(values: &mut [f32], n: usize, m: usize) {
-    let scores: Vec<f32> = values.iter().map(|x| x.abs()).collect();
-    nm_prune_by(values, &scores, n, m);
+    let sp = pipeline::Sparsifier::new(crate::sparsity::Pattern::NM {
+        n: n as u32,
+        m: m as u32,
+    });
+    sp.sparsify_row(values, &mut Scratch::new());
 }
 
 /// Check that a row satisfies the N:M constraint (≤ n non-zeros per block;
@@ -72,6 +61,7 @@ pub fn block_occupancy(values: &[f32], m: usize) -> Vec<usize> {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the shims' semantics are exactly what these tests pin
 mod tests {
     use super::*;
     use crate::util::miniprop::{forall_simple, gen_activations, Config};

@@ -1,0 +1,835 @@
+//! Fused, allocation-free sparsification pipeline.
+//!
+//! The paper's hot loop — score a row with a criterion, apply an
+//! error-mitigation transform, keep the top-N per block — used to run as
+//! three separate allocating passes with an O(m²) rank loop per block
+//! (`nm::nm_mask`). At the flexible patterns the paper champions that
+//! overhead dominates: an 8:16 block pays 256 comparisons where ~16 suffice.
+//!
+//! [`Sparsifier`] fuses the whole pipeline into a single pass over each row:
+//!
+//! ```text
+//!   x ──┬─ η (shift: none / per-token mean / stored per-channel) ──┐
+//!       │                                                          │
+//!       └─► s_j = |x_j − η_j| · c_j   (c = CLACT col-energy /      │
+//!                 │                    Amber channel norms / 1)    │
+//!                 ▼                                                ▼
+//!        per-block partial top-N       kept:    y_j = (x_j − η_j) + η_j
+//!        (nth-element, O(m) avg)       dropped: y_j = η_j
+//!                 │
+//!                 ▼
+//!        optional VAR: y ·= sqrt(Var[x] / Var[y])   (per row)
+//! ```
+//!
+//! Selection uses `select_nth_unstable_by` over a reusable index buffer —
+//! O(m) average per block instead of the O(m²) rank loop — with the same
+//! total order `(score desc, index asc)`, so the keep-*set* (and therefore
+//! the mask and the pruned values) is bit-identical to the seed free
+//! functions: element `i` has seed-rank `#{j: s_j>s_i} + #{j<i: s_j==s_i}`,
+//! which is exactly its position in that total order.
+//!
+//! All scratch space lives in a caller-owned [`Scratch`]; after the first
+//! row of a given width no call allocates. [`Sparsifier::sparsify_batch`]
+//! drives disjoint row chunks through `util::threadpool::par_chunks_mut`
+//! with one `Scratch` per worker.
+//!
+//! The seed implementations are preserved verbatim as `reference_*`
+//! oracles: property tests assert byte-identical masks, and
+//! `rust/benches/substrate.rs` reports the fused-vs-seed throughput that
+//! `BENCH_sparsity.json` captures.
+
+use crate::sparsity::criteria::Criterion;
+use crate::sparsity::transforms::{row_var, Shift};
+use crate::sparsity::Pattern;
+use crate::util::tensor::Tensor;
+use crate::util::threadpool;
+use anyhow::{Context, Result};
+use std::cmp::Ordering;
+
+/// Reusable scratch buffers for the fused pipeline. Create once, pass to
+/// every per-row call; buffers grow to the widest row seen and are then
+/// reused without further allocation.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// Fused criterion scores for the current row.
+    scores: Vec<f32>,
+    /// Index buffer for the partial selection (block- or row-sized).
+    idx: Vec<u32>,
+    /// Snapshot of the unmodified row, kept only when VAR needs it.
+    orig: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+}
+
+/// `(score desc, index asc)` — the seed tie-break order. NaN scores have no
+/// total order; they are treated as equal (the seed rank loop kept NaN
+/// elements unconditionally — scores here come from `abs()`/norms and are
+/// never NaN in practice).
+#[inline]
+fn cmp_rank(scores: &[f32], a: u32, b: u32) -> Ordering {
+    match scores[b as usize].partial_cmp(&scores[a as usize]) {
+        Some(Ordering::Equal) | None => a.cmp(&b),
+        Some(o) => o,
+    }
+}
+
+/// Fill `idx` with `0..scores.len()` and partition it so that `idx[..keep]`
+/// is exactly the seed keep-set (top `keep` by `(score desc, index asc)`).
+/// Returns the clamped keep count. O(len) average via nth-element.
+fn select_top(scores: &[f32], keep: usize, idx: &mut Vec<u32>) -> usize {
+    let len = scores.len();
+    debug_assert!(len <= u32::MAX as usize);
+    idx.clear();
+    idx.extend((0..len).map(|i| i as u32));
+    let keep = keep.min(len);
+    if keep == 0 || keep == len {
+        return keep;
+    }
+    idx.select_nth_unstable_by(keep - 1, |&a, &b| cmp_rank(scores, a, b));
+    keep
+}
+
+#[inline]
+fn eta_at(eta_chan: Option<&[f32]>, eta_scalar: f32, j: usize) -> f32 {
+    match eta_chan {
+        Some(v) => v[j],
+        None => eta_scalar,
+    }
+}
+
+/// The fused pipeline object: pattern + criterion scale + transform hooks,
+/// built once per (method × pattern) cell and reused across every row.
+#[derive(Clone, Debug)]
+pub struct Sparsifier {
+    pattern: Pattern,
+    criterion: Criterion,
+    shift: Shift,
+    use_var: bool,
+    /// Per-channel score multiplier: CLACT column energies or Amber channel
+    /// norms. `None` means plain magnitude (ACT). Multiplying by a positive
+    /// per-channel constant is exactly how both criteria reorder a row —
+    /// CLACT's per-row 1/‖x‖₂ factor is rank-invariant and is omitted here.
+    channel_scale: Option<Vec<f32>>,
+}
+
+impl Sparsifier {
+    /// Plain magnitude (ACT) sparsifier with no transforms.
+    pub fn new(pattern: Pattern) -> Sparsifier {
+        Sparsifier {
+            pattern,
+            criterion: Criterion::Act,
+            shift: Shift::None,
+            use_var: false,
+            channel_scale: None,
+        }
+    }
+
+    /// Build the sparsifier for a named criterion. CLACT derives its
+    /// per-channel scale from a calibration activation matrix; Amber-Pruner
+    /// derives it from the layer's weight matrix.
+    pub fn for_criterion(
+        pattern: Pattern,
+        criterion: Criterion,
+        calib_activations: Option<&Tensor>,
+        weights: Option<&Tensor>,
+    ) -> Result<Sparsifier> {
+        let mut sp = Sparsifier::new(pattern);
+        sp.criterion = criterion;
+        match criterion {
+            Criterion::Act => {}
+            Criterion::Clact => {
+                let x = calib_activations
+                    .context("CLACT needs a calibration activation matrix")?;
+                sp.channel_scale = Some(crate::sparsity::criteria::clact_col_energy(x));
+            }
+            Criterion::Amber => {
+                let w = weights.context("Amber-Pruner needs the layer weight matrix")?;
+                sp.channel_scale = Some(crate::sparsity::criteria::amber_channel_norms(w));
+            }
+        }
+        Ok(sp)
+    }
+
+    /// Set the shift transform (D-PTS dynamic per-token mean, or a stored
+    /// S-PTS/L-PTS per-channel vector).
+    pub fn with_shift(mut self, shift: Shift) -> Sparsifier {
+        self.shift = shift;
+        self
+    }
+
+    /// Enable/disable the per-token VAR variance correction.
+    pub fn with_var(mut self, on: bool) -> Sparsifier {
+        self.use_var = on;
+        self
+    }
+
+    /// Set an explicit per-channel score scale (e.g. a stored
+    /// `amber_cscale` calibration vector).
+    pub fn with_channel_scale(mut self, scale: Vec<f32>) -> Sparsifier {
+        self.channel_scale = Some(scale);
+        self
+    }
+
+    /// Label the criterion this pipeline's channel scale realizes (CLACT
+    /// column energies vs Amber channel norms are indistinguishable once
+    /// baked into `channel_scale`; the label keeps reports honest). Prefer
+    /// [`Sparsifier::for_criterion`], which derives scale + label together.
+    pub fn with_criterion(mut self, criterion: Criterion) -> Sparsifier {
+        self.criterion = criterion;
+        self
+    }
+
+    pub fn pattern(&self) -> Pattern {
+        self.pattern
+    }
+
+    pub fn criterion(&self) -> Criterion {
+        self.criterion
+    }
+
+    pub fn uses_var(&self) -> bool {
+        self.use_var
+    }
+
+    pub fn shift(&self) -> &Shift {
+        &self.shift
+    }
+
+    /// Number of elements the selection keeps for a row of width `h`.
+    pub fn kept_per_row(&self, h: usize) -> usize {
+        match self.pattern {
+            Pattern::Dense => h,
+            Pattern::NM { n, m } => h / m as usize * n as usize,
+            Pattern::Unstructured { keep_pct } => {
+                ((h as f64) * (keep_pct as f64 / 100.0)).round() as usize
+            }
+        }
+    }
+
+    /// Fused single pass over one row, in place: shift → score → per-block
+    /// top-N → compensate → optional VAR. Bit-identical to the seed
+    /// composition (`shift_*` → `nm_prune_magnitude`/`topk` → unshift →
+    /// `var_correction` + `scale_rows`).
+    ///
+    /// Panics (like the seed) if the row length is not a multiple of M for
+    /// an N:M pattern, or if a stored vector's length mismatches the row.
+    pub fn sparsify_row(&self, row: &mut [f32], scratch: &mut Scratch) {
+        let h = row.len();
+        if matches!(self.pattern, Pattern::Dense) || h == 0 {
+            return;
+        }
+        if let Pattern::NM { n, m } = self.pattern {
+            let (n, m) = (n as usize, m as usize);
+            assert!(n > 0 && n <= m, "invalid N:M {n}:{m}");
+            assert_eq!(h % m, 0, "row length {h} not a multiple of M={m}");
+        }
+
+        // Snapshot for VAR (the correction compares against the original x).
+        if self.use_var {
+            scratch.orig.clear();
+            scratch.orig.extend_from_slice(row);
+        }
+
+        let (eta_scalar, eta_chan, shifted) = self.shift_params(row);
+        self.fill_scores(row, eta_scalar, eta_chan, scratch);
+
+        // Partial selection + compensated writeback. Kept elements replay
+        // the seed's (x−η)+η rounding; dropped elements become 0+η = η.
+        match self.pattern {
+            Pattern::Dense => unreachable!(),
+            Pattern::NM { n, m } => {
+                let (n, m) = (n as usize, m as usize);
+                for base in (0..h).step_by(m) {
+                    let keep = select_top(&scratch.scores[base..base + m], n, &mut scratch.idx);
+                    writeback(row, base, &scratch.idx, keep, shifted, eta_chan, eta_scalar);
+                }
+            }
+            Pattern::Unstructured { .. } => {
+                let keep = select_top(&scratch.scores, self.kept_per_row(h), &mut scratch.idx);
+                writeback(row, 0, &scratch.idx, keep, shifted, eta_chan, eta_scalar);
+            }
+        }
+
+        // VAR: ν = sqrt(Var[x] / Var[y]), identical guard and f64 math to
+        // the seed `var_correction` + `scale_rows`.
+        if self.use_var {
+            let v_orig = row_var(&scratch.orig[..h]);
+            let v_pruned = row_var(row);
+            let nu = if v_pruned <= 1e-12 {
+                1.0
+            } else {
+                (v_orig / v_pruned).sqrt() as f32
+            };
+            for v in row.iter_mut() {
+                *v *= nu;
+            }
+        }
+    }
+
+    /// Shift parameters for one row: `(η_scalar, η_per_channel, shifted?)`.
+    /// The per-token mean matches the seed's `row_means` bit-for-bit (f64
+    /// accumulate, f32 cast).
+    fn shift_params<'a>(&'a self, row: &[f32]) -> (f32, Option<&'a [f32]>, bool) {
+        let eta_scalar: f32 = match self.shift {
+            Shift::DynamicPerToken => {
+                (row.iter().map(|v| *v as f64).sum::<f64>() / row.len() as f64) as f32
+            }
+            _ => 0.0,
+        };
+        let eta_chan: Option<&[f32]> = match &self.shift {
+            Shift::PerChannel(v) => {
+                assert_eq!(v.len(), row.len(), "per-channel eta length mismatch");
+                Some(v.as_slice())
+            }
+            _ => None,
+        };
+        (eta_scalar, eta_chan, !matches!(self.shift, Shift::None))
+    }
+
+    /// Fused criterion scores into scratch: `s_j = |x_j − η_j| · c_j`.
+    fn fill_scores(
+        &self,
+        row: &[f32],
+        eta_scalar: f32,
+        eta_chan: Option<&[f32]>,
+        scratch: &mut Scratch,
+    ) {
+        scratch.scores.clear();
+        match &self.channel_scale {
+            None => {
+                for (j, v) in row.iter().enumerate() {
+                    scratch
+                        .scores
+                        .push((*v - eta_at(eta_chan, eta_scalar, j)).abs());
+                }
+            }
+            Some(cs) => {
+                assert_eq!(cs.len(), row.len(), "channel scale length mismatch");
+                for (j, v) in row.iter().enumerate() {
+                    scratch
+                        .scores
+                        .push((*v - eta_at(eta_chan, eta_scalar, j)).abs() * cs[j]);
+                }
+            }
+        }
+    }
+
+    /// Compute the keep-mask of one row without modifying values.
+    /// `mask.len()` must equal `values.len()`.
+    pub fn mask_row_into(&self, values: &[f32], mask: &mut [bool], scratch: &mut Scratch) {
+        let h = values.len();
+        assert_eq!(mask.len(), h, "mask length mismatch");
+        if matches!(self.pattern, Pattern::Dense) {
+            mask.iter_mut().for_each(|b| *b = true);
+            return;
+        }
+        if h == 0 {
+            return;
+        }
+        // Same shift + score computation as sparsify_row, selection only.
+        let (eta_scalar, eta_chan, _shifted) = self.shift_params(values);
+        self.fill_scores(values, eta_scalar, eta_chan, scratch);
+        mask.iter_mut().for_each(|b| *b = false);
+        match self.pattern {
+            Pattern::Dense => unreachable!(),
+            Pattern::NM { n, m } => {
+                let (n, m) = (n as usize, m as usize);
+                assert!(n > 0 && n <= m, "invalid N:M {n}:{m}");
+                assert_eq!(h % m, 0, "row length {h} not a multiple of M={m}");
+                for base in (0..h).step_by(m) {
+                    let keep = select_top(&scratch.scores[base..base + m], n, &mut scratch.idx);
+                    for &i in &scratch.idx[..keep] {
+                        mask[base + i as usize] = true;
+                    }
+                }
+            }
+            Pattern::Unstructured { .. } => {
+                let keep = select_top(&scratch.scores, self.kept_per_row(h), &mut scratch.idx);
+                for &i in &scratch.idx[..keep] {
+                    mask[i as usize] = true;
+                }
+            }
+        }
+    }
+
+    /// Sparsify every row of a `[rows, h]` matrix in place (single thread,
+    /// caller-owned scratch).
+    pub fn sparsify(&self, x: &mut Tensor, scratch: &mut Scratch) {
+        let h = x.cols();
+        for row in x.data.chunks_exact_mut(h) {
+            self.sparsify_row(row, scratch);
+        }
+    }
+
+    /// Row-parallel batch driver: splits the matrix into contiguous row
+    /// chunks and runs each through the fused pass on
+    /// `util::threadpool::par_chunks_mut`, one `Scratch` per worker.
+    /// Results are identical to [`Sparsifier::sparsify`] regardless of
+    /// `threads` (rows are independent).
+    pub fn sparsify_batch(&self, x: &mut Tensor, threads: usize) {
+        let h = x.cols();
+        let rows = x.rows();
+        if rows == 0 || h == 0 || matches!(self.pattern, Pattern::Dense) {
+            return;
+        }
+        let threads = threads.max(1).min(rows);
+        let rows_per_chunk = (rows + threads - 1) / threads;
+        threadpool::par_chunks_mut(&mut x.data, rows_per_chunk * h, threads, |_chunk, span| {
+            let mut scratch = Scratch::new();
+            for row in span.chunks_exact_mut(h) {
+                self.sparsify_row(row, &mut scratch);
+            }
+        });
+    }
+}
+
+#[inline]
+fn writeback(
+    row: &mut [f32],
+    base: usize,
+    idx: &[u32],
+    keep: usize,
+    shifted: bool,
+    eta_chan: Option<&[f32]>,
+    eta_scalar: f32,
+) {
+    for &i in &idx[keep..] {
+        let j = base + i as usize;
+        row[j] = eta_at(eta_chan, eta_scalar, j);
+    }
+    if shifted {
+        for &i in &idx[..keep] {
+            let j = base + i as usize;
+            let e = eta_at(eta_chan, eta_scalar, j);
+            row[j] = (row[j] - e) + e;
+        }
+    }
+}
+
+// ------------------------------------------------------------------ free fns
+// Selection-only entry points used by the deprecated shims and by callers
+// that bring their own scores (e.g. metadata encoding).
+
+/// Write the N:M keep-mask for `scores` into `mask` (pre-sized, any
+/// contents). Fused-path equivalent of the seed `nm::nm_mask`.
+pub fn nm_mask_into(
+    scores: &[f32],
+    n: usize,
+    m: usize,
+    mask: &mut [bool],
+    scratch: &mut Scratch,
+) {
+    assert!(n > 0 && n <= m, "invalid N:M {n}:{m}");
+    assert_eq!(
+        scores.len() % m,
+        0,
+        "row length {} not a multiple of M={m}",
+        scores.len()
+    );
+    assert_eq!(mask.len(), scores.len(), "mask length mismatch");
+    mask.iter_mut().for_each(|b| *b = false);
+    for base in (0..scores.len()).step_by(m) {
+        let keep = select_top(&scores[base..base + m], n, &mut scratch.idx);
+        for &i in &scratch.idx[..keep] {
+            mask[base + i as usize] = true;
+        }
+    }
+}
+
+/// Write the top-`keep` mask for `scores` into `mask`. Fused-path
+/// equivalent of the seed `unstructured::topk_mask`.
+pub fn topk_mask_into(scores: &[f32], keep: usize, mask: &mut [bool], scratch: &mut Scratch) {
+    assert_eq!(mask.len(), scores.len(), "mask length mismatch");
+    mask.iter_mut().for_each(|b| *b = false);
+    let keep = select_top(scores, keep, &mut scratch.idx);
+    for &i in &scratch.idx[..keep] {
+        mask[i as usize] = true;
+    }
+}
+
+/// Zero the elements of `values` outside the per-block top-N of `scores`
+/// (which may differ from `values` — CLACT/Amber). Fused-path equivalent of
+/// the seed `nm::nm_prune_by`.
+pub fn nm_prune_by_scores(
+    values: &mut [f32],
+    scores: &[f32],
+    n: usize,
+    m: usize,
+    scratch: &mut Scratch,
+) {
+    assert_eq!(values.len(), scores.len());
+    assert!(n > 0 && n <= m, "invalid N:M {n}:{m}");
+    assert_eq!(
+        scores.len() % m,
+        0,
+        "row length {} not a multiple of M={m}",
+        scores.len()
+    );
+    for base in (0..scores.len()).step_by(m) {
+        let keep = select_top(&scores[base..base + m], n, &mut scratch.idx);
+        for &i in &scratch.idx[keep..] {
+            values[base + i as usize] = 0.0;
+        }
+    }
+}
+
+/// Keep the top-`keep` elements of `values` by magnitude, zeroing the rest.
+/// Fused-path equivalent of the seed `unstructured::prune_row_magnitude`.
+pub fn prune_row_topk_magnitude(values: &mut [f32], keep: usize, scratch: &mut Scratch) {
+    scratch.scores.clear();
+    scratch.scores.extend(values.iter().map(|x| x.abs()));
+    let keep = select_top(&scratch.scores, keep, &mut scratch.idx);
+    for &i in &scratch.idx[keep..] {
+        values[i as usize] = 0.0;
+    }
+}
+
+// ---------------------------------------------------------------- reference
+// The seed implementations, preserved verbatim as oracles. Property tests
+// pin the fused path byte-identical to these; `benches/substrate.rs` reports
+// the fused-vs-seed throughput ratio captured in BENCH_sparsity.json.
+
+/// The seed O(m²) rank-loop N:M mask (oracle; do not use on hot paths).
+pub fn reference_nm_mask(scores: &[f32], n: usize, m: usize) -> Vec<bool> {
+    assert!(n > 0 && n <= m, "invalid N:M {n}:{m}");
+    assert_eq!(
+        scores.len() % m,
+        0,
+        "row length {} not a multiple of M={m}",
+        scores.len()
+    );
+    let mut mask = vec![false; scores.len()];
+    for (b, block) in scores.chunks_exact(m).enumerate() {
+        let base = b * m;
+        for i in 0..m {
+            let si = block[i];
+            let mut rank = 0usize;
+            for (j, &sj) in block.iter().enumerate() {
+                if sj > si || (sj == si && j < i) {
+                    rank += 1;
+                }
+            }
+            if rank < n {
+                mask[base + i] = true;
+            }
+        }
+    }
+    mask
+}
+
+/// The seed sort-based top-k mask (oracle).
+pub fn reference_topk_mask(scores: &[f32], keep: usize) -> Vec<bool> {
+    let keep = keep.min(scores.len());
+    if keep == scores.len() {
+        return vec![true; scores.len()];
+    }
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut mask = vec![false; scores.len()];
+    for &i in idx.iter().take(keep) {
+        mask[i] = true;
+    }
+    mask
+}
+
+/// The seed allocating per-row magnitude prune for any pattern (oracle).
+pub fn reference_row_prune(values: &mut [f32], pattern: Pattern) {
+    match pattern {
+        Pattern::Dense => {}
+        Pattern::NM { n, m } => {
+            let scores: Vec<f32> = values.iter().map(|x| x.abs()).collect();
+            let mask = reference_nm_mask(&scores, n as usize, m as usize);
+            for (v, keep) in values.iter_mut().zip(mask) {
+                if !keep {
+                    *v = 0.0;
+                }
+            }
+        }
+        Pattern::Unstructured { keep_pct } => {
+            let keep = ((values.len() as f64) * (keep_pct as f64 / 100.0)).round() as usize;
+            let scores: Vec<f32> = values.iter().map(|x| x.abs()).collect();
+            let mask = reference_topk_mask(&scores, keep);
+            for (v, k) in values.iter_mut().zip(mask) {
+                if !k {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::paper_patterns;
+    use crate::sparsity::transforms::{
+        col_means, row_means, scale_rows, shift_cols, shift_rows, var_correction,
+    };
+    use crate::util::miniprop::{forall_simple, gen_activations, Config};
+    use crate::util::prng::Rng;
+
+    fn rand_matrix(rng: &mut Rng, l: usize, h: usize, mean: f32) -> Tensor {
+        Tensor::from_vec(
+            &[l, h],
+            (0..l * h).map(|_| rng.normal() as f32 + mean).collect(),
+        )
+    }
+
+    /// Seed composition oracle for the full mitigated pipeline: shift →
+    /// per-row reference prune → unshift → VAR, exactly the seed
+    /// `mitigated_nm_prune` generalized to any pattern.
+    fn reference_mitigated(x: &Tensor, pattern: Pattern, shift: &Shift, use_var: bool) -> Tensor {
+        let (shifted, eta_rows, eta_cols): (Tensor, Option<Vec<f32>>, Option<Vec<f32>>) =
+            match shift {
+                Shift::None => (x.clone(), None, None),
+                Shift::DynamicPerToken => {
+                    let eta = row_means(x);
+                    (shift_rows(x, &eta), Some(eta), None)
+                }
+                Shift::PerChannel(eta) => (shift_cols(x, eta), None, Some(eta.clone())),
+            };
+        let mut pruned = shifted;
+        for i in 0..pruned.rows() {
+            reference_row_prune(pruned.row_mut(i), pattern);
+        }
+        let mut restored = pruned;
+        if let Some(eta) = &eta_rows {
+            for i in 0..restored.rows() {
+                let e = eta[i];
+                for v in restored.row_mut(i) {
+                    *v += e;
+                }
+            }
+        }
+        if let Some(eta) = &eta_cols {
+            for i in 0..restored.rows() {
+                for (v, e) in restored.row_mut(i).iter_mut().zip(eta) {
+                    *v += *e;
+                }
+            }
+        }
+        if use_var {
+            let nu = var_correction(x, &restored);
+            scale_rows(&mut restored, &nu);
+        }
+        restored
+    }
+
+    #[test]
+    fn fused_nm_mask_matches_seed_oracle() {
+        // Satellite: random rows × all paper N:M patterns, byte-identical
+        // masks including tie-break-toward-lower-index on duplicate scores
+        // (gen_activations seeds exact ±1.0 ties and zeros).
+        let cfg = Config::default();
+        forall_simple(
+            &cfg,
+            |rng: &mut Rng| {
+                let m = *rng.choose(&[4usize, 8, 16, 32]);
+                let n = rng.range(1, m + 1);
+                let blocks = rng.range(1, 8);
+                (gen_activations(rng, m * blocks), n, m)
+            },
+            |(xs, n, m)| {
+                let mut mask = vec![false; xs.len()];
+                let mut scratch = Scratch::new();
+                nm_mask_into(xs, *n, *m, &mut mask, &mut scratch);
+                mask == reference_nm_mask(xs, *n, *m)
+            },
+        );
+    }
+
+    #[test]
+    fn fused_topk_matches_seed_oracle() {
+        let cfg = Config::default();
+        forall_simple(
+            &cfg,
+            |rng: &mut Rng| {
+                let len = rng.range(1, 300);
+                let keep = rng.range(0, len + 2); // includes 0 and > len
+                (gen_activations(rng, len), keep)
+            },
+            |(xs, keep)| {
+                let mut mask = vec![false; xs.len()];
+                let mut scratch = Scratch::new();
+                topk_mask_into(xs, *keep, &mut mask, &mut scratch);
+                mask == reference_topk_mask(xs, *keep)
+            },
+        );
+    }
+
+    #[test]
+    fn fused_row_prune_matches_seed_all_paper_patterns() {
+        let cfg = Config::default();
+        let patterns = paper_patterns();
+        forall_simple(
+            &cfg,
+            |rng: &mut Rng| {
+                let pattern = *rng.choose(&patterns);
+                // All paper patterns have M | 32, so 32·k rows fit all.
+                let xs = gen_activations(rng, 32 * rng.range(1, 6));
+                (xs, pattern)
+            },
+            |(xs, pattern)| {
+                let mut fused = xs.clone();
+                let mut scratch = Scratch::new();
+                Sparsifier::new(*pattern).sparsify_row(&mut fused, &mut scratch);
+                let mut seed = xs.clone();
+                reference_row_prune(&mut seed, *pattern);
+                // Bit-identical, not approximately equal.
+                fused.iter().zip(&seed).all(|(a, b)| a.to_bits() == b.to_bits())
+            },
+        );
+    }
+
+    #[test]
+    fn fused_mitigated_matches_seed_composition_bitwise() {
+        let mut rng = Rng::new(0xF00D);
+        let patterns = [
+            Pattern::NM { n: 2, m: 4 },
+            Pattern::NM { n: 8, m: 16 },
+            Pattern::Unstructured { keep_pct: 50 },
+        ];
+        for pattern in patterns {
+            for shift_kind in 0..3 {
+                for use_var in [false, true] {
+                    let x = rand_matrix(&mut rng, 6, 32, 3.0);
+                    let shift = match shift_kind {
+                        0 => Shift::None,
+                        1 => Shift::DynamicPerToken,
+                        _ => Shift::PerChannel(col_means(&x)),
+                    };
+                    let expected = reference_mitigated(&x, pattern, &shift, use_var);
+                    let mut got = x.clone();
+                    let sp = Sparsifier::new(pattern)
+                        .with_shift(shift.clone())
+                        .with_var(use_var);
+                    let mut scratch = Scratch::new();
+                    sp.sparsify(&mut got, &mut scratch);
+                    assert_eq!(
+                        got.data
+                            .iter()
+                            .map(|v| v.to_bits())
+                            .collect::<Vec<_>>(),
+                        expected
+                            .data
+                            .iter()
+                            .map(|v| v.to_bits())
+                            .collect::<Vec<_>>(),
+                        "pattern {pattern} shift {shift:?} var {use_var}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn channel_scale_reorders_like_external_scores() {
+        // Pruning values by |x|·c must equal pruning by precomputed scores.
+        let mut rng = Rng::new(11);
+        let h = 32;
+        let xs: Vec<f32> = (0..h).map(|_| rng.normal() as f32).collect();
+        let cs: Vec<f32> = (0..h).map(|_| rng.normal().abs() as f32 + 0.1).collect();
+        let scores: Vec<f32> = xs.iter().zip(&cs).map(|(x, c)| x.abs() * c).collect();
+        let mut scratch = Scratch::new();
+        let mut a = xs.clone();
+        Sparsifier::new(Pattern::NM { n: 2, m: 4 })
+            .with_channel_scale(cs)
+            .sparsify_row(&mut a, &mut scratch);
+        let mut b = xs.clone();
+        nm_prune_by_scores(&mut b, &scores, 2, 4, &mut scratch);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn batch_matches_row_loop_any_thread_count() {
+        let mut rng = Rng::new(21);
+        let x = rand_matrix(&mut rng, 37, 64, 1.0); // odd row count on purpose
+        let sp = Sparsifier::new(Pattern::NM { n: 8, m: 16 })
+            .with_shift(Shift::DynamicPerToken)
+            .with_var(true);
+        let mut serial = x.clone();
+        let mut scratch = Scratch::new();
+        sp.sparsify(&mut serial, &mut scratch);
+        for threads in [1, 2, 3, 8, 64] {
+            let mut par = x.clone();
+            sp.sparsify_batch(&mut par, threads);
+            assert_eq!(par.data, serial.data, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_stateless() {
+        // One scratch across rows of different widths and patterns.
+        let mut scratch = Scratch::new();
+        let mut a = vec![1.0f32, -2.0, 3.0, -4.0];
+        Sparsifier::new(Pattern::NM { n: 2, m: 4 }).sparsify_row(&mut a, &mut scratch);
+        assert_eq!(a, vec![0.0, 0.0, 3.0, -4.0]);
+        let mut b: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        Sparsifier::new(Pattern::NM { n: 16, m: 32 }).sparsify_row(&mut b, &mut scratch);
+        assert_eq!(b.iter().filter(|v| **v != 0.0).count(), 16);
+        let mut c = vec![5.0f32; 4];
+        Sparsifier::new(Pattern::Unstructured { keep_pct: 50 })
+            .sparsify_row(&mut c, &mut scratch);
+        assert_eq!(c, vec![5.0, 5.0, 0.0, 0.0]); // ties break low-index
+    }
+
+    #[test]
+    fn mask_row_matches_prune_zeros() {
+        let mut rng = Rng::new(31);
+        let xs: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+        let sp = Sparsifier::new(Pattern::NM { n: 4, m: 8 });
+        let mut scratch = Scratch::new();
+        let mut mask = vec![false; xs.len()];
+        sp.mask_row_into(&xs, &mut mask, &mut scratch);
+        let mut pruned = xs.clone();
+        sp.sparsify_row(&mut pruned, &mut scratch);
+        for (j, keep) in mask.iter().enumerate() {
+            assert_eq!(*keep, pruned[j] != 0.0 || xs[j] == 0.0, "col {j}");
+        }
+        assert_eq!(mask.iter().filter(|k| **k).count(), 32);
+    }
+
+    #[test]
+    fn dense_is_identity() {
+        let mut v = vec![1.0f32, -0.0, 2.0];
+        let before = v.clone();
+        let mut scratch = Scratch::new();
+        Sparsifier::new(Pattern::Dense)
+            .with_var(true)
+            .sparsify_row(&mut v, &mut scratch);
+        assert_eq!(
+            v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            before.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn kept_per_row_counts() {
+        assert_eq!(Sparsifier::new(Pattern::NM { n: 8, m: 16 }).kept_per_row(64), 32);
+        assert_eq!(
+            Sparsifier::new(Pattern::Unstructured { keep_pct: 30 }).kept_per_row(100),
+            30
+        );
+        assert_eq!(Sparsifier::new(Pattern::Dense).kept_per_row(7), 7);
+    }
+
+    #[test]
+    fn for_criterion_requires_inputs() {
+        let p = Pattern::NM { n: 2, m: 4 };
+        assert!(Sparsifier::for_criterion(p, Criterion::Clact, None, None).is_err());
+        assert!(Sparsifier::for_criterion(p, Criterion::Amber, None, None).is_err());
+        let x = Tensor::from_vec(&[2, 4], vec![1.0; 8]);
+        let sp = Sparsifier::for_criterion(p, Criterion::Clact, Some(&x), None).unwrap();
+        assert_eq!(sp.criterion(), Criterion::Clact);
+        assert!(sp.channel_scale.is_some());
+    }
+}

@@ -62,8 +62,9 @@ pub fn shift_cols(x: &Tensor, eta: &[f32]) -> Tensor {
     out
 }
 
-/// Population variance of a row.
-fn row_var(row: &[f32]) -> f64 {
+/// Population variance of a row (shared with the fused pipeline so both
+/// paths stay bit-identical).
+pub(crate) fn row_var(row: &[f32]) -> f64 {
     let n = row.len() as f64;
     let mean = row.iter().map(|v| *v as f64).sum::<f64>() / n;
     row.iter().map(|v| (*v as f64 - mean).powi(2)).sum::<f64>() / n
@@ -98,8 +99,12 @@ pub fn scale_rows(x: &mut Tensor, nu: &[f32]) {
 }
 
 /// Full reference pipeline for one activation matrix: optional shift →
-/// magnitude N:M prune → unshift → optional VAR. Mirrors the kernel's
-/// `sparse_linear` pre-matmul stage; used by analysis tools and tests.
+/// magnitude N:M prune → unshift → optional VAR.
+///
+/// Thin shim over the fused [`crate::sparsity::pipeline::Sparsifier`],
+/// which executes the identical math in a single allocation-free pass per
+/// row; kept because golden tests and analysis tools pin this signature.
+#[deprecated(note = "use sparsity::pipeline::Sparsifier with .with_shift()/.with_var()")]
 pub fn mitigated_nm_prune(
     x: &Tensor,
     n: usize,
@@ -107,48 +112,20 @@ pub fn mitigated_nm_prune(
     shift: Shift,
     use_var: bool,
 ) -> Tensor {
-    let (shifted, restore): (Tensor, Option<ShiftKind>) = match &shift {
-        Shift::None => (x.clone(), None),
-        Shift::DynamicPerToken => {
-            let eta = row_means(x);
-            (shift_rows(x, &eta), Some(ShiftKind::Rows(eta)))
-        }
-        Shift::PerChannel(eta) => (shift_cols(x, eta), Some(ShiftKind::Cols(eta.clone()))),
-    };
-    let mut pruned = shifted.clone();
-    for i in 0..pruned.rows() {
-        crate::sparsity::nm::nm_prune_magnitude(pruned.row_mut(i), n, m);
-    }
-    // Compensate: add η back (paper: Y = ((X̂⊙M) + η) Wᵀ).
-    let mut restored = pruned.clone();
-    match restore {
-        None => {}
-        Some(ShiftKind::Rows(eta)) => {
-            for i in 0..restored.rows() {
-                for v in restored.row_mut(i) {
-                    *v += eta[i];
-                }
-            }
-        }
-        Some(ShiftKind::Cols(eta)) => {
-            for i in 0..restored.rows() {
-                for (v, e) in restored.row_mut(i).iter_mut().zip(&eta) {
-                    *v += *e;
-                }
-            }
-        }
-    }
-    if use_var {
-        // VAR is defined on the unshifted prune (paper applies it to X⊙M);
-        // when combined with shift we scale the restored matrix, matching
-        // the kernel's VAR+PTS composition order.
-        let nu = var_correction(x, &restored);
-        scale_rows(&mut restored, &nu);
-    }
-    restored
+    use crate::sparsity::pipeline::{Scratch, Sparsifier};
+    let sp = Sparsifier::new(crate::sparsity::Pattern::NM {
+        n: n as u32,
+        m: m as u32,
+    })
+    .with_shift(shift)
+    .with_var(use_var);
+    let mut out = x.clone();
+    let mut scratch = Scratch::new();
+    sp.sparsify(&mut out, &mut scratch);
+    out
 }
 
-/// Shift mode for [`mitigated_nm_prune`].
+/// Shift mode of the mitigation pipeline (paper §2.3).
 #[derive(Clone, Debug)]
 pub enum Shift {
     None,
@@ -158,12 +135,8 @@ pub enum Shift {
     PerChannel(Vec<f32>),
 }
 
-enum ShiftKind {
-    Rows(Vec<f32>),
-    Cols(Vec<f32>),
-}
-
 #[cfg(test)]
+#[allow(deprecated)] // the shims' semantics are exactly what these tests pin
 mod tests {
     use super::*;
     use crate::util::prng::Rng;

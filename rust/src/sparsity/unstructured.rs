@@ -6,38 +6,29 @@
 //! global-threshold variant over a whole tensor (used for weight pruning,
 //! matching how magnitude weight pruning is usually done).
 
+use crate::sparsity::pipeline::{self, Scratch};
+
 /// Keep-mask retaining the `keep` highest-scoring elements of the row.
 /// Ties break toward lower indices (same rank rule as N:M).
+///
+/// Thin shim over the fused pipeline's partial selection (bit-identical
+/// masks for NaN-free scores, O(len) average instead of a full sort). Hot
+/// paths should hold a [`Scratch`] and call [`pipeline::topk_mask_into`]
+/// directly.
+#[deprecated(note = "use sparsity::pipeline::topk_mask_into with a reusable Scratch")]
 pub fn topk_mask(scores: &[f32], keep: usize) -> Vec<bool> {
-    let keep = keep.min(scores.len());
-    if keep == scores.len() {
-        return vec![true; scores.len()];
-    }
-    // Sort indices by (score desc, index asc) and mark the first `keep`.
-    let mut idx: Vec<usize> = (0..scores.len()).collect();
-    idx.sort_by(|&a, &b| {
-        scores[b]
-            .partial_cmp(&scores[a])
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
-    });
     let mut mask = vec![false; scores.len()];
-    for &i in idx.iter().take(keep) {
-        mask[i] = true;
-    }
+    let mut scratch = Scratch::new();
+    pipeline::topk_mask_into(scores, keep, &mut mask, &mut scratch);
     mask
 }
 
 /// Prune a row in place, keeping the top `keep_frac` fraction by |x|.
+#[deprecated(note = "use sparsity::pipeline::Sparsifier::sparsify_row or prune_row_topk_magnitude")]
 pub fn prune_row_magnitude(values: &mut [f32], keep_frac: f64) {
     let keep = ((values.len() as f64) * keep_frac).round() as usize;
-    let scores: Vec<f32> = values.iter().map(|x| x.abs()).collect();
-    let mask = topk_mask(&scores, keep);
-    for (v, k) in values.iter_mut().zip(mask) {
-        if !k {
-            *v = 0.0;
-        }
-    }
+    let mut scratch = Scratch::new();
+    pipeline::prune_row_topk_magnitude(values, keep, &mut scratch);
 }
 
 /// Global magnitude threshold that achieves `sparsity` over the whole slice
@@ -62,6 +53,7 @@ pub fn prune_global_magnitude(values: &mut [f32], sparsity: f64) -> f32 {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the shims' semantics are exactly what these tests pin
 mod tests {
     use super::*;
     use crate::util::miniprop::{forall_simple, gen_activations, Config};

@@ -7,7 +7,8 @@
 //! input dimension (Table 2/11/12 WT rows), mirroring how 2:4 weight
 //! sparsity is laid out for sparse tensor cores.
 
-use crate::sparsity::{nm, unstructured, Pattern};
+use crate::sparsity::pipeline::{Scratch, Sparsifier};
+use crate::sparsity::{unstructured, Pattern};
 use crate::util::tensor::{Tensor, TensorStore};
 use anyhow::Result;
 
@@ -26,33 +27,51 @@ pub fn prunable_weight_names(store: &TensorStore) -> Vec<String> {
 
 /// Apply weight pruning with `pattern` to every prunable tensor in `store`.
 /// Returns the number of tensors pruned.
+///
+/// The N:M path builds one fused [`Sparsifier`] + [`Scratch`] for the whole
+/// store and reuses them across every tensor row — the bind-time cost for
+/// the WT baselines is a single allocation-free sweep.
 pub fn prune_weights(store: &mut TensorStore, pattern: Pattern) -> Result<usize> {
     let names = prunable_weight_names(store);
+    let sparsifier = Sparsifier::new(pattern);
+    let mut scratch = Scratch::new();
     for name in &names {
         let t = store.get_mut(name)?;
-        prune_weight_tensor(t, pattern);
+        prune_tensor_rows(t, &sparsifier, &mut scratch);
     }
     Ok(names.len())
 }
 
 /// Prune a single `[out, in]` weight tensor.
 pub fn prune_weight_tensor(w: &mut Tensor, pattern: Pattern) {
-    match pattern {
+    prune_tensor_rows(w, &Sparsifier::new(pattern), &mut Scratch::new());
+}
+
+fn prune_tensor_rows(w: &mut Tensor, sp: &Sparsifier, scratch: &mut Scratch) {
+    match sp.pattern() {
         Pattern::Dense => {}
-        Pattern::NM { n, m } => {
+        Pattern::NM { m, .. } => {
             // N:M along the input dim: every row gets blockwise top-N by |w|.
             // Rows whose length is not a multiple of M keep a dense tail
             // (does not occur with our model dims; guarded for safety).
             let (rows, cols) = (w.rows(), w.cols());
             let main = cols - cols % m as usize;
-            for r in 0..rows {
-                let row = w.row_mut(r);
-                if main > 0 {
-                    nm::nm_prune_magnitude(&mut row[..main], n as usize, m as usize);
+            if main == 0 {
+                return;
+            }
+            if main == cols {
+                // Common case: the whole tensor is block-aligned — let the
+                // row-parallel batch driver sweep it.
+                sp.sparsify_batch(w, crate::util::threadpool::default_threads());
+            } else {
+                for r in 0..rows {
+                    sp.sparsify_row(&mut w.row_mut(r)[..main], scratch);
                 }
             }
         }
         Pattern::Unstructured { keep_pct } => {
+            // Weight-side unstructured pruning is a *global* magnitude
+            // threshold (not per-row top-k), so it stays on its own path.
             let sparsity = 1.0 - keep_pct as f64 / 100.0;
             unstructured::prune_global_magnitude(&mut w.data, sparsity);
         }

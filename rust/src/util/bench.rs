@@ -5,6 +5,7 @@
 //! warmup, robust statistics and throughput reporting, plus a `--filter`
 //! CLI like libtest's.
 
+use crate::util::json::Json;
 use crate::util::stats::{fmt_duration_s, TimingStats};
 use std::time::Instant;
 
@@ -137,6 +138,38 @@ impl BenchSuite {
         &self.results
     }
 
+    /// Throughput (items/sec) of a named benchmark, if it ran with items.
+    pub fn rate_of(&self, name: &str) -> Option<f64> {
+        self.results
+            .iter()
+            .find(|r| r.name == name)
+            .and_then(|r| r.throughput_items.map(|items| items / r.stats.mean_s.max(1e-12)))
+    }
+
+    /// Machine-readable dump of every measurement — bench targets write
+    /// this (plus any derived fields) to `BENCH_<suite>.json` files so CI
+    /// and the hardware model can cite measured baselines.
+    pub fn to_json(&self) -> Json {
+        let mut results = Vec::with_capacity(self.results.len());
+        for r in &self.results {
+            let mut e = Json::obj();
+            e.insert("name", r.name.as_str().into());
+            e.insert("mean_s", r.stats.mean_s.into());
+            e.insert("p50_s", r.stats.p50_s.into());
+            e.insert("p95_s", r.stats.p95_s.into());
+            e.insert("iters_per_sample", r.iters_per_sample.into());
+            if let Some(items) = r.throughput_items {
+                e.insert("items_per_iter", items.into());
+                e.insert("items_per_sec", (items / r.stats.mean_s.max(1e-12)).into());
+            }
+            results.push(e);
+        }
+        let mut j = Json::obj();
+        j.insert("suite", self.name.as_str().into());
+        j.insert("results", Json::Arr(results));
+        j
+    }
+
     /// Print the closing summary (called on drop as well).
     pub fn finish(&self) {
         println!(
@@ -211,6 +244,34 @@ mod tests {
         assert!(suite.results().is_empty());
         suite.bench("match-me-exactly", || {});
         assert_eq!(suite.results().len(), 1);
+    }
+
+    #[test]
+    fn json_dump_has_rates() {
+        let mut suite = BenchSuite {
+            name: "jt".into(),
+            filter: None,
+            results: vec![],
+            target_time_s: 0.01,
+            samples: 2,
+        };
+        let mut acc = 0u64;
+        suite.bench_with_items("with-items", Some(64.0), || {
+            acc = acc.wrapping_add(std::hint::black_box(3u64));
+            std::hint::black_box(&acc);
+        });
+        suite.bench("no-items", || {
+            std::hint::black_box(1 + 1);
+        });
+        let j = suite.to_json();
+        assert_eq!(j.get("suite").and_then(|s| s.as_str()), Some("jt"));
+        let rs = j.get("results").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(rs.len(), 2);
+        assert!(rs[0].get("items_per_sec").is_some());
+        assert!(rs[1].get("items_per_sec").is_none());
+        assert!(suite.rate_of("with-items").unwrap() > 0.0);
+        assert!(suite.rate_of("no-items").is_none());
+        assert!(suite.rate_of("missing").is_none());
     }
 
     #[test]

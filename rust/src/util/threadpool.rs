@@ -63,8 +63,7 @@ impl ThreadPool {
 
     /// Pool sized to available parallelism.
     pub fn with_default_size() -> ThreadPool {
-        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-        ThreadPool::new(n)
+        ThreadPool::new(default_threads())
     }
 
     /// Submit a job.
@@ -95,6 +94,55 @@ impl Drop for ThreadPool {
             w.join().ok();
         }
     }
+}
+
+/// Available parallelism (≥ 1) — the default worker count for the parallel
+/// helpers below.
+pub fn default_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Parallel in-place map over disjoint chunks of `data`: `f(chunk_index,
+/// chunk)` is called for every `chunk_len`-sized chunk (the last may be
+/// shorter), spread across up to `threads` scoped workers. Chunks are
+/// assigned contiguously so each worker touches one memory span; the call
+/// blocks until every chunk is done. Used by the fused sparsification
+/// pipeline's row-parallel batch driver.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    if data.is_empty() {
+        return;
+    }
+    let n_chunks = (data.len() + chunk_len - 1) / chunk_len;
+    let threads = threads.max(1).min(n_chunks);
+    if threads == 1 {
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    let chunks_per_worker = (n_chunks + threads - 1) / threads;
+    thread::scope(|scope| {
+        let mut rest = data;
+        let mut first_chunk = 0usize;
+        while !rest.is_empty() {
+            let take = (chunks_per_worker * chunk_len).min(rest.len());
+            let (span, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let f = &f;
+            let base = first_chunk;
+            scope.spawn(move || {
+                for (i, chunk) in span.chunks_mut(chunk_len).enumerate() {
+                    f(base + i, chunk);
+                }
+            });
+            first_chunk += chunks_per_worker;
+        }
+    });
 }
 
 /// Parallel map: applies `f` to every item, preserving order, using `threads`
@@ -157,6 +205,38 @@ mod tests {
         let items: Vec<usize> = (0..1000).collect();
         let out = par_map(&items, 8, |x| x * 2);
         assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_chunks_mut_covers_all_chunks() {
+        let mut data: Vec<u64> = vec![0; 103]; // deliberately not a multiple
+        par_chunks_mut(&mut data, 10, 4, |ci, chunk| {
+            for v in chunk.iter_mut() {
+                *v = ci as u64 + 1;
+            }
+        });
+        // Every element written, with its chunk's 1-based index.
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, (i / 10) as u64 + 1, "element {i}");
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_single_thread_and_empty() {
+        let mut data: Vec<u8> = vec![0; 7];
+        par_chunks_mut(&mut data, 3, 1, |_ci, chunk| {
+            for v in chunk.iter_mut() {
+                *v += 1;
+            }
+        });
+        assert_eq!(data, vec![1; 7]);
+        let mut empty: Vec<u8> = vec![];
+        par_chunks_mut(&mut empty, 3, 4, |_, _| panic!("no chunks expected"));
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
     }
 
     #[test]

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 gate (DESIGN.md §5): build, test, and compile the benches.
+# Every PR runs exactly this locally before merging:
+#
+#   tools/ci.sh
+#
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# The crate sources live under rust/; tolerate a manifest at either level.
+if [ -f rust/Cargo.toml ]; then
+  cd rust
+elif [ ! -f Cargo.toml ]; then
+  echo "ci: no Cargo.toml found at repo root or rust/ — cannot run the gate" >&2
+  exit 1
+fi
+
+cargo build --release
+cargo test -q
+cargo bench --no-run
+echo "ci: tier-1 gate green"
