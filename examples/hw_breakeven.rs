@@ -12,10 +12,24 @@
 use nmsparse::hwmodel::{assess, incremental_die_area_pct, EdpModel};
 use nmsparse::metadata::{bits_per_element, Encoding};
 use nmsparse::sparsity::Pattern;
-use nmsparse::tables::{load_measured_overhead, OVERHEAD_BENCH_FILE};
+use nmsparse::tables::{
+    load_measured_overhead, load_packed_bench, OVERHEAD_BENCH_FILE, PACKED_BENCH_FILE,
+};
 use std::path::Path;
 
 fn main() {
+    // Measured compressed-stream footprints (written by `cargo bench --
+    // substrate`): per-pattern bytes/row of the packed representation.
+    // When present, the EDP analysis below uses the *measured* bandwidth
+    // ratio r = dense/packed instead of the theoretical 1/density.
+    let packed = load_packed_bench(Path::new(PACKED_BENCH_FILE));
+    let measured_r = |pat: &str| {
+        packed.as_ref().and_then(|rows| {
+            rows.iter()
+                .find(|r| r.pattern == pat)
+                .map(|r| r.measured_bandwidth_reduction)
+        })
+    };
     println!("== flexibility vs metadata (the §1 argument) ==");
     println!(
         "{:<8} {:>16} {:>14} {:>12} {:>10}",
@@ -37,6 +51,18 @@ fn main() {
     }
 
     println!("\n== EDP break-even sweep (Appendix A.1) ==");
+    // Bandwidth ratio: measured from the packed 8:16 stream when the bench
+    // has run, the paper's theoretical 2.0 otherwise.
+    let r_816 = measured_r("8:16").unwrap_or(2.0);
+    println!(
+        "bandwidth ratio r = {:.3} ({})",
+        r_816,
+        if measured_r("8:16").is_some() {
+            "measured: dense/packed bytes per row, BENCH_packed.json"
+        } else {
+            "theoretical 1/density — run `cargo bench -- substrate` to measure"
+        }
+    );
     println!(
         "{:<10} {:>8} {:>8} {:>12} {:>12}",
         "overhead", "util", "r", "EDP gain", "k required"
@@ -44,12 +70,12 @@ fn main() {
     for overhead in [0.15, 0.30, 0.45] {
         for util in [0.75, 0.85, 0.95] {
             let m = EdpModel {
-                bandwidth_reduction: 2.0,
+                bandwidth_reduction: r_816,
                 utilization: util,
                 overhead,
             };
             println!(
-                "{:<10.2} {:>8.2} {:>8.1} {:>11.3}x {:>12.3}",
+                "{:<10.2} {:>8.2} {:>8.2} {:>11.3}x {:>12.3}",
                 overhead,
                 util,
                 m.bandwidth_reduction,
@@ -58,14 +84,41 @@ fn main() {
             );
         }
     }
-    let paper = EdpModel::paper_default();
+    let mut paper = EdpModel::paper_default();
+    paper.bandwidth_reduction = r_816;
     println!(
-        "\npaper parameterization: EDP gain {:.3}x, break-even k > {:.2} \
+        "\npaper parameterization at r={:.2}: EDP gain {:.3}x, break-even k > {:.2} \
          (conservative bar {:.1}x)",
+        r_816,
         paper.edp_improvement(),
         paper.breakeven_k(),
         EdpModel::CONSERVATIVE_K
     );
+
+    if let Some(rows) = &packed {
+        println!("\n== measured packed activation I/O ({PACKED_BENCH_FILE}) ==");
+        println!(
+            "{:<10} {:>14} {:>14} {:>10} {:>14} {:>12}",
+            "pattern", "dense B/row", "packed B/row", "r", "codec xbitloop", "EDP gain"
+        );
+        for row in rows {
+            let m = EdpModel::paper_default()
+                .with_measured_bandwidth(row.dense_bytes_per_row, row.packed_bytes_per_row);
+            println!(
+                "{:<10} {:>14.0} {:>14.0} {:>10.3} {:>14} {:>11.3}x",
+                row.pattern,
+                row.dense_bytes_per_row,
+                row.packed_bytes_per_row,
+                row.measured_bandwidth_reduction,
+                if row.codec_word_speedup > 0.0 {
+                    format!("{:.1}x", row.codec_word_speedup)
+                } else {
+                    "-".into()
+                },
+                m.edp_improvement(),
+            );
+        }
+    }
 
     // Measured software baseline: `cargo bench -- tables` times the fused
     // Sparsifier against end-to-end forward time per pattern and writes the
@@ -78,10 +131,12 @@ fn main() {
                 "pattern", "alpha (sw)", "EDP gain", "k required"
             );
             for (pat, frac) in &measured {
-                let r = match Pattern::parse(pat) {
+                // Prefer the measured packed bandwidth ratio per pattern;
+                // theoretical 1/density only when the packed bench is absent.
+                let r = measured_r(pat).unwrap_or_else(|| match Pattern::parse(pat) {
                     Ok(p) => 1.0 / p.density().max(1e-9),
                     Err(_) => 2.0,
-                };
+                });
                 let m = EdpModel {
                     bandwidth_reduction: r,
                     utilization: 0.85,

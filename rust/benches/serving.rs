@@ -28,6 +28,24 @@ fn main() {
             }
             std::hint::black_box(total);
         });
+        // The serve-loop pattern: one reused buffer across flushes.
+        let mut buf: Vec<usize> = Vec::new();
+        suite.bench_with_items(
+            "batcher/push+drain_into 1024 items (items)",
+            Some(1024.0),
+            move || {
+                let mut b = Batcher::new(policy);
+                for i in 0..1024usize {
+                    b.push(i);
+                }
+                let mut total = 0;
+                while !b.is_empty() {
+                    b.drain_batch_into(&mut buf);
+                    total += buf.len();
+                }
+                std::hint::black_box(total);
+            },
+        );
     }
 
     // ---- row packing ----

@@ -8,8 +8,8 @@
 //! `BENCH_sparsity.json` with the per-pattern rows/sec of the seed loop,
 //! the fused per-row pass and the row-parallel batch driver.
 
-use nmsparse::metadata::MaskCodec;
-use nmsparse::sparsity::{pipeline, Pattern, Scratch, Sparsifier};
+use nmsparse::metadata::{mask_to_word, word_to_mask, MaskCodec};
+use nmsparse::sparsity::{pipeline, PackedNM, Pattern, Scratch, Sparsifier};
 use nmsparse::synthlang::vocab::Vocab;
 use nmsparse::util::bench::BenchSuite;
 use nmsparse::util::json::{self, Json};
@@ -151,33 +151,124 @@ fn main() {
         );
     }
 
-    // ---- metadata codecs ----
+    // ---- packed activation streams (compressed-domain path) ----
+    // Pack/unpack bandwidth, packed-vs-dense GEMV and word-vs-bit codec
+    // throughput per pattern; written to BENCH_packed.json below. The
+    // acceptance gate requires the word-level codec roundtrip >= 5x the
+    // seed per-bit path at 8:16.
+    let packed_patterns = ["2:4", "4:8", "8:16", "16:32", "u50"];
+    let dense_row_bytes = (h * 4) as f64;
+    let mut packed_footprints: Vec<(String, f64)> = Vec::new();
+    {
+        let x = Tensor::from_vec(
+            &[rows, h],
+            (0..rows * h).map(|_| rng.normal() as f32).collect(),
+        );
+        let v: Vec<f32> = (0..h).map(|_| rng.normal() as f32).collect();
+        for key in packed_patterns {
+            let pattern = Pattern::parse(key).unwrap();
+            let sp = Sparsifier::new(pattern);
+            let bytes_total = (rows * h * 4) as f64;
+            {
+                let mut packed = PackedNM::new(pattern, h);
+                let mut scratch = Scratch::new();
+                suite.bench_with_items(
+                    &format!("packed/pack {key} (bytes)"),
+                    Some(bytes_total),
+                    || {
+                        sp.pack(&x, &mut packed, &mut scratch);
+                        std::hint::black_box(&packed);
+                    },
+                );
+            }
+            {
+                let mut packed = PackedNM::new(pattern, h);
+                suite.bench_with_items(
+                    &format!("packed/pack batch {key} (bytes)"),
+                    Some(bytes_total),
+                    || {
+                        sp.pack_batch(&x, &mut packed, threads);
+                        std::hint::black_box(&packed);
+                    },
+                );
+            }
+            let mut packed = PackedNM::new(pattern, h);
+            let mut scratch = Scratch::new();
+            sp.pack(&x, &mut packed, &mut scratch);
+            {
+                let mut y = Tensor::zeros(&[rows, h]);
+                suite.bench_with_items(
+                    &format!("packed/unpack {key} (bytes)"),
+                    Some(bytes_total),
+                    || {
+                        packed.decode_into(&mut y, 1);
+                        std::hint::black_box(&y);
+                    },
+                );
+            }
+            {
+                let mut out = vec![0.0f32; rows];
+                suite.bench_with_items(
+                    &format!("packed/gemv {key} (rows)"),
+                    Some(rows as f64),
+                    || {
+                        packed.matvec_into(&v, &mut out, 1);
+                        std::hint::black_box(&out);
+                    },
+                );
+                // Dense GEMV over the decoded (zero-carrying) matrix.
+                let dense = packed.to_dense();
+                suite.bench_with_items(
+                    &format!("packed/gemv dense {key} (rows)"),
+                    Some(rows as f64),
+                    || {
+                        for (r, o) in out.iter_mut().enumerate() {
+                            *o = dense.row(r).iter().zip(&v).map(|(a, b)| a * b).sum();
+                        }
+                        std::hint::black_box(&out);
+                    },
+                );
+            }
+            let codec = if matches!(pattern, Pattern::NM { .. }) {
+                MaskCodec::Combinadic
+            } else {
+                MaskCodec::Bitmap
+            };
+            packed_footprints.push((key.to_string(), packed.measured_bytes_per_row(codec)));
+        }
+    }
+
+    // ---- metadata codecs: word path vs the seed per-bit path ----
     for codec in [MaskCodec::Bitmap, MaskCodec::IndexList, MaskCodec::Combinadic] {
         let (n, m) = (8usize, 16usize);
-        let masks: Vec<Vec<bool>> = (0..256)
+        let words: Vec<u32> = (0..256)
             .map(|_| {
                 let idx = rng.sample_indices(m, n);
                 let mut mk = vec![false; m];
                 for i in idx {
                     mk[i] = true;
                 }
-                mk
+                mask_to_word(&mk)
             })
             .collect();
-        let elts = (256 * m) as f64;
+        let masks: Vec<Vec<bool>> = words.iter().map(|&w| word_to_mask(w, m)).collect();
+        let blocks = words.len() as f64;
         suite.bench_with_items(
-            &format!("metadata/encode {codec:?} 8:16 (elts)"),
-            Some(elts),
+            &format!("metadata/word roundtrip {codec:?} 8:16 (blocks)"),
+            Some(blocks),
             || {
-                std::hint::black_box(codec.encode_blocks(&masks, n, m));
+                let (bytes, _) = codec.encode_words(&words, n, m);
+                std::hint::black_box(codec.decode_words(&bytes, words.len(), n, m).unwrap());
             },
         );
-        let (bytes, _) = codec.encode_blocks(&masks, n, m);
         suite.bench_with_items(
-            &format!("metadata/decode {codec:?} 8:16 (elts)"),
-            Some(elts),
+            &format!("metadata/bit roundtrip {codec:?} 8:16 (blocks)"),
+            Some(blocks),
             || {
-                std::hint::black_box(codec.decode_blocks(&bytes, 256, n, m).unwrap());
+                let (bytes, _) = codec.reference_encode_blocks(&masks, n, m);
+                std::hint::black_box(
+                    codec.reference_decode_blocks(&bytes, masks.len(), n, m).unwrap(),
+                );
             },
         );
     }
@@ -231,6 +322,67 @@ fn main() {
             match std::fs::write("BENCH_sparsity.json", j.pretty()) {
                 Ok(()) => println!("wrote BENCH_sparsity.json"),
                 Err(e) => eprintln!("could not write BENCH_sparsity.json: {e}"),
+            }
+        }
+    }
+
+    // ---- machine-readable packed report (BENCH_packed.json) ----
+    // Per-pattern measured bytes-per-row of the compressed activation
+    // stream (kept values + encoded metadata), pack/unpack bandwidth,
+    // packed-vs-dense GEMV and the word-vs-bit codec speedup the
+    // acceptance gate checks (>= 5x at 8:16). `nmsparse table table6` and
+    // `examples/hw_breakeven.rs` consume this file in place of the
+    // theoretical bits_per_element story. Skipped when a --filter hid the
+    // packed benches.
+    {
+        let mut patterns = Json::obj();
+        let mut have_any = false;
+        let codec_word = suite.rate_of("metadata/word roundtrip Combinadic 8:16 (blocks)");
+        let codec_bit = suite.rate_of("metadata/bit roundtrip Combinadic 8:16 (blocks)");
+        for (key, packed_bytes_per_row) in &packed_footprints {
+            let pack = suite.rate_of(&format!("packed/pack {key} (bytes)"));
+            let pack_batch = suite.rate_of(&format!("packed/pack batch {key} (bytes)"));
+            let unpack = suite.rate_of(&format!("packed/unpack {key} (bytes)"));
+            let gemv = suite.rate_of(&format!("packed/gemv {key} (rows)"));
+            let gemv_dense = suite.rate_of(&format!("packed/gemv dense {key} (rows)"));
+            if let (Some(pack), Some(unpack), Some(gemv), Some(gemv_dense)) =
+                (pack, unpack, gemv, gemv_dense)
+            {
+                have_any = true;
+                let mut p = Json::obj();
+                p.insert("dense_bytes_per_row", dense_row_bytes.into());
+                p.insert("packed_bytes_per_row", (*packed_bytes_per_row).into());
+                p.insert(
+                    "measured_bandwidth_reduction",
+                    (dense_row_bytes / packed_bytes_per_row.max(1e-12)).into(),
+                );
+                p.insert("pack_gbps", (pack / 1e9).into());
+                if let Some(pb) = pack_batch {
+                    p.insert("pack_batch_gbps", (pb / 1e9).into());
+                }
+                p.insert("unpack_gbps", (unpack / 1e9).into());
+                p.insert("packed_gemv_rows_per_sec", gemv.into());
+                p.insert("dense_gemv_rows_per_sec", gemv_dense.into());
+                p.insert("packed_gemv_speedup", (gemv / gemv_dense).into());
+                if key == "8:16" {
+                    if let (Some(w), Some(b)) = (codec_word, codec_bit) {
+                        p.insert("codec_word_blocks_per_sec", w.into());
+                        p.insert("codec_bit_blocks_per_sec", b.into());
+                        p.insert("codec_word_speedup", (w / b).into());
+                    }
+                }
+                patterns.insert(key, p);
+            }
+        }
+        if have_any {
+            let mut j = suite.to_json();
+            j.insert("rows", rows.into());
+            j.insert("hidden", h.into());
+            j.insert("threads", threads.into());
+            j.insert("patterns", patterns);
+            match std::fs::write("BENCH_packed.json", j.pretty()) {
+                Ok(()) => println!("wrote BENCH_packed.json"),
+                Err(e) => eprintln!("could not write BENCH_packed.json: {e}"),
             }
         }
     }

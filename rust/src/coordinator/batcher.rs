@@ -75,10 +75,21 @@ impl<T> Batcher<T> {
         self.queue.front().map(|(_, t0)| *t0 + self.policy.max_wait)
     }
 
-    /// Remove up to `capacity` items in FIFO order.
-    pub fn drain_batch(&mut self) -> Vec<T> {
+    /// Remove up to `capacity` items in FIFO order into a caller-owned
+    /// buffer (cleared first) — the serve loop reuses one buffer across
+    /// flushes instead of allocating a fresh `Vec` per batch.
+    pub fn drain_batch_into(&mut self, out: &mut Vec<T>) {
+        out.clear();
         let n = self.queue.len().min(self.policy.capacity);
-        self.queue.drain(..n).map(|(t, _)| t).collect()
+        out.extend(self.queue.drain(..n).map(|(t, _)| t));
+    }
+
+    /// Remove up to `capacity` items in FIFO order (allocating wrapper
+    /// over [`Batcher::drain_batch_into`]).
+    pub fn drain_batch(&mut self) -> Vec<T> {
+        let mut out = Vec::with_capacity(self.queue.len().min(self.policy.capacity));
+        self.drain_batch_into(&mut out);
+        out
     }
 }
 
@@ -178,6 +189,33 @@ mod tests {
         assert_eq!(b.drain_batch(), vec![0, 1, 2]);
         assert_eq!(b.drain_batch(), vec![3, 4, 5]);
         assert_eq!(b.drain_batch(), vec![6, 7]);
+    }
+
+    #[test]
+    fn drain_into_reuses_buffer_and_matches_wrapper() {
+        let mut a = Batcher::new(policy(3, 10));
+        let mut b = Batcher::new(policy(3, 10));
+        let now = Instant::now();
+        for i in 0..8 {
+            a.push_at(i, now);
+            b.push_at(i, now);
+        }
+        let mut buf: Vec<i32> = Vec::new();
+        let mut cap_after_first = 0usize;
+        for round in 0..3 {
+            a.drain_batch_into(&mut buf);
+            assert_eq!(buf, b.drain_batch(), "round {round}");
+            if round == 0 {
+                cap_after_first = buf.capacity();
+            } else {
+                // The reused buffer never re-allocates: batches are capped
+                // at `capacity`, which the first round already fit.
+                assert_eq!(buf.capacity(), cap_after_first, "round {round}");
+            }
+        }
+        assert!(a.is_empty() && b.is_empty());
+        a.drain_batch_into(&mut buf);
+        assert!(buf.is_empty(), "empty batcher clears the buffer");
     }
 
     #[test]

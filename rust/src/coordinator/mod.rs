@@ -186,13 +186,32 @@ impl Coordinator {
     }
 
     /// Greedy generation: extend each prompt until a stop token or
-    /// `max_new` tokens. Prompts are processed in fixed-size groups; each
-    /// step runs one full-context forward (no KV cache — the model is small
-    /// and the artifact shape is static).
+    /// `max_new` tokens. Allocating wrapper over
+    /// [`Coordinator::generate_refs`].
     pub fn generate(
         &self,
         cfg: &MethodConfig,
         prompts: &[Vec<u32>],
+        max_new: usize,
+        stop: &[u32],
+    ) -> Result<Vec<Vec<u32>>> {
+        let refs: Vec<&[u32]> = prompts.iter().map(|p| p.as_slice()).collect();
+        self.generate_refs(cfg, &refs, max_new, stop)
+    }
+
+    /// Greedy generation over borrowed prompt rows: extend each prompt
+    /// until a stop token or `max_new` tokens. Prompts are processed in
+    /// fixed-size groups; each step runs one full-context forward (no KV
+    /// cache — the model is small and the artifact shape is static).
+    ///
+    /// Takes `&[&[u32]]` so per-token callers (the serve decode loop, which
+    /// borrows each session's incrementally-maintained row) don't clone
+    /// every prompt on every step just to call in; the one working copy per
+    /// group below is the only token copy on the path.
+    pub fn generate_refs(
+        &self,
+        cfg: &MethodConfig,
+        prompts: &[&[u32]],
         max_new: usize,
         stop: &[u32],
     ) -> Result<Vec<Vec<u32>>> {
@@ -205,7 +224,7 @@ impl Coordinator {
             let group: Vec<usize> =
                 (group_start..(group_start + batch).min(prompts.len())).collect();
             let mut rows: Vec<Vec<u32>> =
-                group.iter().map(|&i| prompts[i].clone()).collect();
+                group.iter().map(|&i| prompts[i].to_vec()).collect();
             let mut done: Vec<bool> = vec![false; group.len()];
             for _ in 0..max_new {
                 if done.iter().all(|d| *d) {

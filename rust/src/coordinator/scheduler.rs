@@ -12,7 +12,7 @@
 //!
 //! Pure logic (no engine handle), so invariants are property-tested.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 /// A prefill-only scoring job.
 #[derive(Clone, Debug, PartialEq)]
@@ -24,6 +24,12 @@ pub struct ScoreJob {
 }
 
 /// An autoregressive generation session.
+///
+/// The full engine row (prompt + generated) is kept incrementally in a
+/// private buffer: `row()` is a borrow, and each decode step appends one
+/// token instead of re-cloning the whole prompt (the seed rebuilt an
+/// O(len) `Vec` per token per session). Mutate generation state only
+/// through [`Session::push_token`] so the buffer stays in sync.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Session {
     pub id: u64,
@@ -31,19 +37,32 @@ pub struct Session {
     pub generated: Vec<u32>,
     pub max_new: usize,
     pub done: bool,
+    /// `tokens ++ generated`, maintained incrementally by `push_token`.
+    row: Vec<u32>,
 }
 
 impl Session {
-    /// Current full row (prompt + generated so far).
-    pub fn row(&self) -> Vec<u32> {
-        let mut r = self.tokens.clone();
-        r.extend(&self.generated);
-        r
+    pub fn new(id: u64, tokens: Vec<u32>, max_new: usize) -> Session {
+        Session {
+            id,
+            row: tokens.clone(),
+            tokens,
+            generated: Vec::new(),
+            max_new: max_new.max(1),
+            done: false,
+        }
+    }
+
+    /// Current full row (prompt + generated so far) — a borrow of the
+    /// incrementally-maintained buffer, not a fresh allocation.
+    pub fn row(&self) -> &[u32] {
+        &self.row
     }
 
     /// Record one generated token; mark done on stop token or budget.
     pub fn push_token(&mut self, tok: u32, stop: &[u32]) {
         self.generated.push(tok);
+        self.row.push(tok);
         if stop.contains(&tok) || self.generated.len() >= self.max_new {
             self.done = true;
         }
@@ -85,6 +104,9 @@ pub struct Scheduler {
     batch: usize,
     scores: VecDeque<ScoreJob>,
     sessions: Vec<Session>,
+    /// session id → index in `sessions` — O(1) lookup for the per-token
+    /// `session_mut` calls in the decode loop (the seed scanned linearly).
+    session_idx: HashMap<u64, usize>,
     decode_streak: usize,
     next_id: u64,
 }
@@ -96,6 +118,7 @@ impl Scheduler {
             batch,
             scores: VecDeque::new(),
             sessions: Vec::new(),
+            session_idx: HashMap::new(),
             decode_streak: 0,
             next_id: 1,
         }
@@ -113,13 +136,8 @@ impl Scheduler {
     pub fn submit_generate(&mut self, tokens: Vec<u32>, max_new: usize) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        self.sessions.push(Session {
-            id,
-            tokens,
-            generated: Vec::new(),
-            max_new: max_new.max(1),
-            done: false,
-        });
+        self.session_idx.insert(id, self.sessions.len());
+        self.sessions.push(Session::new(id, tokens, max_new));
         id
     }
 
@@ -128,18 +146,26 @@ impl Scheduler {
     }
 
     pub fn session(&self, id: u64) -> Option<&Session> {
-        self.sessions.iter().find(|s| s.id == id)
+        self.session_idx.get(&id).map(|&i| &self.sessions[i])
     }
 
     pub fn session_mut(&mut self, id: u64) -> Option<&mut Session> {
-        self.sessions.iter_mut().find(|s| s.id == id)
+        match self.session_idx.get(&id) {
+            Some(&i) => Some(&mut self.sessions[i]),
+            None => None,
+        }
     }
 
-    /// Remove finished sessions, returning them.
+    /// Remove finished sessions, returning them. Rebuilds the id→index
+    /// map (O(live) once per reap, vs O(live) per lookup before).
     pub fn reap_done(&mut self) -> Vec<Session> {
         let (done, live): (Vec<_>, Vec<_>) =
             self.sessions.drain(..).partition(|s| s.done);
         self.sessions = live;
+        self.session_idx.clear();
+        for (i, s) in self.sessions.iter().enumerate() {
+            self.session_idx.insert(s.id, i);
+        }
         done
     }
 
@@ -233,28 +259,54 @@ mod tests {
 
     #[test]
     fn sessions_finish_on_stop_or_budget() {
-        let mut sess = Session {
-            id: 1,
-            tokens: vec![1],
-            generated: vec![],
-            max_new: 3,
-            done: false,
-        };
+        let mut sess = Session::new(1, vec![1], 3);
         sess.push_token(7, &[99]);
         assert!(!sess.done);
         sess.push_token(99, &[99]);
         assert!(sess.done); // stop token
-        let mut sess2 = Session {
-            id: 2,
-            tokens: vec![1],
-            generated: vec![],
-            max_new: 2,
-            done: false,
-        };
+        let mut sess2 = Session::new(2, vec![1], 2);
         sess2.push_token(5, &[99]);
         sess2.push_token(6, &[99]);
         assert!(sess2.done); // budget
-        assert_eq!(sess2.row(), vec![1, 5, 6]);
+        assert_eq!(sess2.row(), &[1, 5, 6][..]);
+    }
+
+    #[test]
+    fn incremental_row_tracks_prompt_plus_generated() {
+        // The row buffer stays in sync with tokens ++ generated across
+        // many pushes — the invariant the O(1) row() borrow rests on.
+        let mut sess = Session::new(7, vec![10, 11, 12], 100);
+        assert_eq!(sess.row(), &[10, 11, 12][..]);
+        for t in 0..50u32 {
+            sess.push_token(t, &[]);
+            let mut expect = sess.tokens.clone();
+            expect.extend(&sess.generated);
+            assert_eq!(sess.row(), expect.as_slice());
+        }
+    }
+
+    #[test]
+    fn session_lookup_survives_reap() {
+        // The id→index map must be rebuilt when reap_done compacts the
+        // session vec, or lookups would hit the wrong session.
+        let mut s = Scheduler::new(8, SchedPolicy::default());
+        let a = s.submit_generate(vec![1], 1);
+        let b = s.submit_generate(vec![2], 5);
+        let c = s.submit_generate(vec![3], 5);
+        s.session_mut(a).unwrap().push_token(9, &[]); // a done
+        s.reap_done();
+        assert!(s.session(a).is_none());
+        assert_eq!(s.session(b).unwrap().tokens, vec![2]);
+        assert_eq!(s.session_mut(c).unwrap().tokens, vec![3]);
+        // New submissions after a reap keep ids and indices consistent.
+        let d = s.submit_generate(vec![4], 5);
+        assert_eq!(s.session(d).unwrap().tokens, vec![4]);
+        s.session_mut(b).unwrap().push_token(9, &[9]); // b done via stop
+        let done = s.reap_done();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, b);
+        assert_eq!(s.session(c).unwrap().tokens, vec![3]);
+        assert_eq!(s.session(d).unwrap().tokens, vec![4]);
     }
 
     #[test]

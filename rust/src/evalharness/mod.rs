@@ -10,7 +10,7 @@ pub mod ifeval;
 
 use crate::coordinator::methods::MethodConfig;
 use crate::coordinator::Coordinator;
-use crate::sparsity::{Scratch, Sparsifier};
+use crate::sparsity::{PackedNM, Scratch, Sparsifier};
 use crate::synthlang::tasks::TaskSet;
 use crate::util::tensor::Tensor;
 use anyhow::Result;
@@ -88,10 +88,29 @@ pub fn eval_suite(
 /// matrix. Needs no compiled engines — build the cell's pipeline with
 /// [`MethodConfig::sparsifier`] and rank method cells cheaply before paying
 /// for a full engine evaluation.
+///
+/// Selection-only pipelines (every plain criterion cell) go through the
+/// compressed domain: the `Sparsifier` emits a [`PackedNM`] stream and the
+/// error is reduced from the stream's dropped-element set — no dense
+/// pruned copy is ever materialized, and the result is bit-identical to
+/// the dense formula (pinned by a test below). Pipelines that rewrite
+/// values (shift / VAR) fall back to the dense difference.
 pub fn sparsify_proxy_error(sp: &Sparsifier, x: &Tensor) -> f64 {
+    if sp.is_packable() {
+        let mut packed = PackedNM::new(sp.pattern(), x.cols());
+        let mut scratch = Scratch::new();
+        sp.pack(x, &mut packed, &mut scratch);
+        return packed.fidelity_error_vs(x);
+    }
     let mut y = x.clone();
     let mut scratch = Scratch::new();
     sp.sparsify(&mut y, &mut scratch);
+    dense_proxy_error(x, &y)
+}
+
+/// The dense-difference fidelity formula — the fallback path and the
+/// oracle the packed reduction is pinned against.
+fn dense_proxy_error(x: &Tensor, y: &Tensor) -> f64 {
     let denom = x.l2().max(1e-12);
     let diff = x
         .data
@@ -145,6 +164,46 @@ mod tests {
         let base = vec![tr("a", 0.8)];
         let meth = vec![tr("a", 0.4)];
         assert!((avg_relative_drop(&base, &meth) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn packed_proxy_matches_dense_formula_bitwise() {
+        use crate::sparsity::{paper_patterns, Pattern};
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(77);
+        let x = Tensor::from_vec(
+            &[12, 64],
+            (0..12 * 64).map(|_| rng.normal() as f32).collect(),
+        );
+        for pattern in paper_patterns().into_iter().chain([Pattern::Dense]) {
+            let sp = Sparsifier::new(pattern);
+            assert!(sp.is_selection_only());
+            // The packed-stream reduction vs the dense-difference oracle.
+            let packed = sparsify_proxy_error(&sp, &x);
+            let mut y = x.clone();
+            let mut scratch = Scratch::new();
+            sp.sparsify(&mut y, &mut scratch);
+            let dense = dense_proxy_error(&x, &y);
+            assert_eq!(packed.to_bits(), dense.to_bits(), "{pattern}");
+        }
+    }
+
+    #[test]
+    fn shifted_pipeline_uses_dense_fallback() {
+        use crate::sparsity::transforms::Shift;
+        use crate::sparsity::Pattern;
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(79);
+        let x = Tensor::from_vec(
+            &[4, 32],
+            (0..4 * 32).map(|_| rng.normal() as f32 + 2.0).collect(),
+        );
+        let sp = Sparsifier::new(Pattern::NM { n: 2, m: 4 }).with_shift(Shift::DynamicPerToken);
+        assert!(!sp.is_selection_only());
+        // Shift compensation reconstructs better than plain selection.
+        let e_shift = sparsify_proxy_error(&sp, &x);
+        let e_plain = sparsify_proxy_error(&Sparsifier::new(Pattern::NM { n: 2, m: 4 }), &x);
+        assert!(e_shift > 0.0 && e_shift < e_plain, "{e_shift} vs {e_plain}");
     }
 
     #[test]

@@ -48,6 +48,23 @@ impl EdpModel {
         }
     }
 
+    /// Replace the theoretical bandwidth-reduction ratio `r` (1/density)
+    /// with one *measured* from packed activation streams: dense bytes per
+    /// row over packed bytes per row (kept values + encoded metadata), as
+    /// reported by `BENCH_packed.json`. The measured ratio is lower than
+    /// the theoretical one because it pays for real metadata and word
+    /// padding — exactly the honesty Appendix A's break-even needs.
+    pub fn with_measured_bandwidth(
+        mut self,
+        dense_bytes_per_row: f64,
+        packed_bytes_per_row: f64,
+    ) -> EdpModel {
+        if packed_bytes_per_row > 0.0 && dense_bytes_per_row > 0.0 {
+            self.bandwidth_reduction = dense_bytes_per_row / packed_bytes_per_row;
+        }
+        self
+    }
+
     /// `EDP_dense / EDP_sparse ≈ r·η / (1+α)`.
     pub fn edp_improvement(&self) -> f64 {
         self.bandwidth_reduction * self.utilization / (1.0 + self.overhead)
@@ -227,6 +244,19 @@ mod tests {
         assert!(m.net_benefit(1.7));
         assert!(m.net_benefit(EdpModel::CONSERVATIVE_K));
         assert!(!m.net_benefit(1.3)); // below the conservative 1.6x bar
+    }
+
+    #[test]
+    fn measured_bandwidth_overrides_theoretical_r() {
+        // 4096 dense bytes vs 2296 packed (2048 values + 248 metadata for
+        // 8:16 at h=1024): r drops from 2.0 to ~1.78.
+        let m = EdpModel::paper_default().with_measured_bandwidth(4096.0, 2296.0);
+        assert!((m.bandwidth_reduction - 4096.0 / 2296.0).abs() < 1e-12);
+        assert!(m.bandwidth_reduction < 2.0);
+        assert!(m.edp_improvement() < EdpModel::paper_default().edp_improvement());
+        // Degenerate measurements leave the model untouched.
+        let untouched = EdpModel::paper_default().with_measured_bandwidth(4096.0, 0.0);
+        assert_eq!(untouched.bandwidth_reduction, 2.0);
     }
 
     #[test]

@@ -161,12 +161,14 @@ pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
                 }
             }
             Work::Decode(ids) => {
-                // One decode step for each active session.
-                let prompts: Vec<Vec<u32>> = ids
+                // One decode step for each active session. Rows are
+                // borrowed straight from the sessions' incremental
+                // buffers — no per-token clone at this call site.
+                let prompts: Vec<&[u32]> = ids
                     .iter()
                     .map(|id| scheduler.session(*id).unwrap().row())
                     .collect();
-                match coord.generate(&cfg, &prompts, 1, &[period, EOS]) {
+                match coord.generate_refs(&cfg, &prompts, 1, &[period, EOS]) {
                     Ok(outs) => {
                         for (id, out) in ids.iter().zip(outs) {
                             let sess = scheduler.session_mut(*id).unwrap();

@@ -1,15 +1,36 @@
-//! Concrete mask codecs: bitmap, index-list and combinadic rank coding.
+//! Concrete mask codecs: bitmap, index-list and combinadic rank coding,
+//! rebuilt for compressed-domain execution (word-at-a-time bit packing and
+//! LUT-accelerated combinadics).
 //!
 //! The combinadic (combinatorial number system) codec maps an N-of-M keep
 //! mask to its rank in the lexicographic enumeration of all C(M,N)
 //! combinations — the densest possible fixed-width block encoding, and the
 //! scheme Appendix A.3's "combinatorial encoder/decoder ... lightweight
-//! lookup tables" refers to. Round-trip correctness is property-tested.
+//! lookup tables" refers to. Two implementations coexist:
+//!
+//! - the **word path** ([`MaskCodec::encode_words`]/[`decode_words`]): block
+//!   masks are `u32` words (bit `i` = element `i` kept), bit streams move
+//!   through a `u64` accumulator ([`WordWriter`]/[`WordReader`]) instead of
+//!   one bit at a time, and combinadic ranks go through a [`CombinadicLut`]
+//!   of precomputed binomial rows (plus a full rank→word table for small
+//!   patterns) — Appendix A.3's lookup tables, literally;
+//! - the **reference path** ([`MaskCodec::reference_encode_blocks`]/
+//!   [`reference_decode_blocks`]): the seed per-bit `BitWriter`/`BitReader`
+//!   loops over `Vec<bool>` masks, preserved verbatim as the equivalence
+//!   oracle and the baseline `rust/benches/substrate.rs` measures the word
+//!   path against (`BENCH_packed.json`).
+//!
+//! The byte streams of the two paths are bit-identical (LSB-first within
+//! the stream); property tests pin this for every codec and paper pattern.
 
 use super::binomial;
 use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Encode a keep-mask (length M, exactly N ones) to its combinadic rank.
+/// Loop reference: recomputes each binomial from scratch. Hot paths use
+/// [`CombinadicLut`]; property tests pin the two equal.
 pub fn encode_combinadic(mask: &[bool]) -> u128 {
     let m = mask.len() as u64;
     let n_total = mask.iter().filter(|b| **b).count() as u64;
@@ -32,6 +53,7 @@ pub fn encode_combinadic(mask: &[bool]) -> u128 {
 }
 
 /// Decode a combinadic rank back to a keep-mask of `n` ones in `m` slots.
+/// Loop reference counterpart of [`encode_combinadic`].
 pub fn decode_combinadic(mut rank: u128, n: usize, m: usize) -> Result<Vec<bool>> {
     let total = binomial(m as u64, n as u64);
     if rank >= total {
@@ -58,6 +80,169 @@ pub fn decode_combinadic(mut rank: u128, n: usize, m: usize) -> Result<Vec<bool>
     Ok(mask)
 }
 
+/// Bit `i` of the word = `mask[i]`. Masks wider than 32 are rejected by the
+/// callers (the word APIs assert `m <= 32`).
+pub fn mask_to_word(mask: &[bool]) -> u32 {
+    debug_assert!(mask.len() <= 32);
+    let mut w = 0u32;
+    for (i, &b) in mask.iter().enumerate() {
+        if b {
+            w |= 1 << i;
+        }
+    }
+    w
+}
+
+/// Inverse of [`mask_to_word`].
+pub fn word_to_mask(word: u32, m: usize) -> Vec<bool> {
+    debug_assert!(m <= 32);
+    (0..m).map(|i| word >> i & 1 == 1).collect()
+}
+
+/// Precomputed combinadic tables for one N:M pattern (Appendix A.3's
+/// "lightweight lookup tables"): one row of binomials per remaining-count,
+/// so encode/decode never recompute C(s, k), plus a full rank→word table
+/// when the pattern is small enough (covers 2:4, 4:8 and 8:16; 16:32 falls
+/// back to the table-driven loop).
+///
+/// Build once per (n, m) and reuse — construction costs O(n·m) binomials
+/// plus the optional O(C(m,n)) decode table.
+#[derive(Clone, Debug)]
+pub struct CombinadicLut {
+    n: usize,
+    m: usize,
+    /// ⌈log2 C(m,n)⌉ — the fixed stream width of one encoded block.
+    width: usize,
+    /// Total number of valid words, C(m, n). Fits u64 for every m ≤ 32.
+    total: u64,
+    /// `binom[k * (m+1) + s] = C(s, k)` for k ≤ n, s ≤ m.
+    binom: Vec<u64>,
+    /// rank → word, when `total` is small enough to tabulate fully.
+    decode_table: Option<Vec<u32>>,
+}
+
+impl CombinadicLut {
+    /// Largest C(m,n) for which the full rank→word decode table is built.
+    /// 8:16 (12 870 entries, ~50 KiB) is in; 16:32 (6·10⁸) is out.
+    pub const DECODE_TABLE_MAX: u64 = 1 << 16;
+
+    pub fn new(n: usize, m: usize) -> CombinadicLut {
+        assert!(n > 0 && n <= m && m <= 32, "invalid N:M {n}:{m} for LUT");
+        let total = binomial(m as u64, n as u64) as u64;
+        let mut lut_binom = Vec::with_capacity((n + 1) * (m + 1));
+        for k in 0..=n {
+            for s in 0..=m {
+                lut_binom.push(binomial(s as u64, k as u64) as u64);
+            }
+        }
+        let mut lut = CombinadicLut {
+            n,
+            m,
+            width: super::ceil_log2(total as u128) as usize,
+            total,
+            binom: lut_binom,
+            decode_table: None,
+        };
+        if total <= Self::DECODE_TABLE_MAX {
+            let table: Vec<u32> = (0..total).map(|r| lut.decode_loop(r)).collect();
+            lut.decode_table = Some(table);
+        }
+        lut
+    }
+
+    /// Process-wide cached LUT for a pattern. Construction (binomial rows
+    /// plus the rank→word table) happens once per (n, m) for the process
+    /// lifetime; every stream encode/decode afterwards is pure table work.
+    /// [`MaskCodec`] goes through here so per-call codec cost measures the
+    /// codec, not LUT construction. The cache is bounded by the n ≤ m ≤ 32
+    /// pattern space.
+    pub fn cached(n: usize, m: usize) -> Arc<CombinadicLut> {
+        static CACHE: OnceLock<Mutex<HashMap<(usize, usize), Arc<CombinadicLut>>>> =
+            OnceLock::new();
+        let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        let mut guard = cache.lock().unwrap();
+        Arc::clone(
+            guard
+                .entry((n, m))
+                .or_insert_with(|| Arc::new(CombinadicLut::new(n, m))),
+        )
+    }
+
+    #[inline]
+    fn b(&self, s: usize, k: usize) -> u64 {
+        self.binom[k * (self.m + 1) + s]
+    }
+
+    /// Stream width of one encoded block, ⌈log2 C(m,n)⌉ bits.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Number of valid words, C(m, n).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Rank of a block word with exactly `n` of the low `m` bits set.
+    /// Equal to [`encode_combinadic`] of the corresponding bool mask.
+    #[inline]
+    pub fn encode_word(&self, word: u32) -> u64 {
+        debug_assert_eq!(word.count_ones() as usize, self.n, "word popcount != N");
+        let mut rank = 0u64;
+        let mut remaining = self.n;
+        for pos in 0..self.m {
+            if remaining == 0 {
+                break;
+            }
+            let slots_after = self.m - pos - 1;
+            if word >> pos & 1 == 1 {
+                remaining -= 1;
+            } else {
+                rank += self.b(slots_after, remaining - 1);
+            }
+        }
+        rank
+    }
+
+    fn decode_loop(&self, mut rank: u64) -> u32 {
+        let mut word = 0u32;
+        let mut remaining = self.n;
+        for pos in 0..self.m {
+            if remaining == 0 {
+                break;
+            }
+            let slots_after = self.m - pos - 1;
+            let with_here = self.b(slots_after, remaining - 1);
+            if rank < with_here {
+                word |= 1 << pos;
+                remaining -= 1;
+            } else {
+                rank -= with_here;
+            }
+        }
+        debug_assert_eq!(remaining, 0);
+        word
+    }
+
+    /// Word for a rank. Table lookup for small patterns, LUT-driven loop
+    /// otherwise. Errors on out-of-range ranks like [`decode_combinadic`].
+    #[inline]
+    pub fn decode_word(&self, rank: u64) -> Result<u32> {
+        if rank >= self.total {
+            bail!(
+                "rank {rank} out of range for {}:{} (max {})",
+                self.n,
+                self.m,
+                self.total
+            );
+        }
+        match &self.decode_table {
+            Some(t) => Ok(t[rank as usize]),
+            None => Ok(self.decode_loop(rank)),
+        }
+    }
+}
+
 /// A codec for streams of N:M block masks, tracking encoded size in bits.
 #[derive(Clone, Copy, Debug)]
 pub enum MaskCodec {
@@ -67,9 +252,123 @@ pub enum MaskCodec {
 }
 
 impl MaskCodec {
+    /// Encode a stream of `u32` block words (bit `i` = element `i` kept,
+    /// exactly `n` bits set per word for N:M streams) into a bit-packed
+    /// byte buffer. Returns (bytes, bits_used). The primary compressed-
+    /// domain entry point — `PackedNM` metadata flows through here.
+    pub fn encode_words(&self, words: &[u32], n: usize, m: usize) -> (Vec<u8>, usize) {
+        assert!(m <= 32, "word codec supports block widths up to 32");
+        let mut bits = WordWriter::new();
+        match self {
+            MaskCodec::Bitmap => {
+                for &word in words {
+                    bits.push_word(word as u64, m);
+                }
+            }
+            MaskCodec::IndexList => {
+                let w = super::ceil_log2(m as u128) as usize;
+                for &word in words {
+                    let mut x = word;
+                    while x != 0 {
+                        bits.push_word(x.trailing_zeros() as u64, w);
+                        x &= x - 1;
+                    }
+                }
+            }
+            MaskCodec::Combinadic => {
+                let lut = CombinadicLut::cached(n, m);
+                let w = lut.width();
+                for &word in words {
+                    bits.push_word(lut.encode_word(word), w);
+                }
+            }
+        }
+        let used = bits.len_bits();
+        (bits.into_bytes(), used)
+    }
+
+    /// Decode `count` block words back out of a bit-packed buffer.
+    pub fn decode_words(&self, bytes: &[u8], count: usize, n: usize, m: usize) -> Result<Vec<u32>> {
+        assert!(m <= 32, "word codec supports block widths up to 32");
+        let mut r = WordReader::new(bytes);
+        let mut out = Vec::with_capacity(count);
+        match self {
+            MaskCodec::Bitmap => {
+                for _ in 0..count {
+                    out.push(r.read_word(m)? as u32);
+                }
+            }
+            MaskCodec::IndexList => {
+                let w = super::ceil_log2(m as u128) as usize;
+                for _ in 0..count {
+                    let mut word = 0u32;
+                    for _ in 0..n {
+                        let idx = r.read_word(w)? as usize;
+                        if idx >= m {
+                            bail!("index {idx} out of range");
+                        }
+                        if word >> idx & 1 == 1 {
+                            bail!("duplicate index {idx} in block (mask would have fewer than {n} ones)");
+                        }
+                        word |= 1 << idx;
+                    }
+                    out.push(word);
+                }
+            }
+            MaskCodec::Combinadic => {
+                let lut = CombinadicLut::cached(n, m);
+                let w = lut.width();
+                for _ in 0..count {
+                    out.push(lut.decode_word(r.read_word(w)?)?);
+                }
+            }
+        }
+        Ok(out)
+    }
+
     /// Encode a sequence of block masks (each length m) into a bit-packed
-    /// byte buffer. Returns (bytes, bits_used).
+    /// byte buffer. Returns (bytes, bits_used). Thin shim over
+    /// [`MaskCodec::encode_words`] for the common `m <= 32` case (property
+    /// tests pin it bit-identical to the reference path); wider blocks fall
+    /// back to the reference per-bit encoder.
     pub fn encode_blocks(&self, masks: &[Vec<bool>], n: usize, m: usize) -> (Vec<u8>, usize) {
+        if m > 32 {
+            return self.reference_encode_blocks(masks, n, m);
+        }
+        let words: Vec<u32> = masks
+            .iter()
+            .map(|mask| {
+                debug_assert_eq!(mask.len(), m);
+                mask_to_word(mask)
+            })
+            .collect();
+        self.encode_words(&words, n, m)
+    }
+
+    /// Decode `count` block masks back out of a bit-packed buffer. Shim
+    /// over [`MaskCodec::decode_words`] (see [`MaskCodec::encode_blocks`]).
+    pub fn decode_blocks(
+        &self,
+        bytes: &[u8],
+        count: usize,
+        n: usize,
+        m: usize,
+    ) -> Result<Vec<Vec<bool>>> {
+        if m > 32 {
+            return self.reference_decode_blocks(bytes, count, n, m);
+        }
+        let words = self.decode_words(bytes, count, n, m)?;
+        Ok(words.into_iter().map(|w| word_to_mask(w, m)).collect())
+    }
+
+    /// The seed per-bit encoder, preserved verbatim as the oracle for the
+    /// word path and the baseline `benches/substrate.rs` measures against.
+    pub fn reference_encode_blocks(
+        &self,
+        masks: &[Vec<bool>],
+        n: usize,
+        m: usize,
+    ) -> (Vec<u8>, usize) {
         let mut bits = BitWriter::new();
         for mask in masks {
             debug_assert_eq!(mask.len(), m);
@@ -97,8 +396,10 @@ impl MaskCodec {
         (bits.into_bytes(), used)
     }
 
-    /// Decode `count` block masks back out of a bit-packed buffer.
-    pub fn decode_blocks(
+    /// The seed per-bit decoder (plus the duplicate-index guard the seed
+    /// was missing: an IndexList block naming the same slot twice would
+    /// silently yield a mask with fewer than N ones).
+    pub fn reference_decode_blocks(
         &self,
         bytes: &[u8],
         count: usize,
@@ -124,6 +425,9 @@ impl MaskCodec {
                         if idx >= m {
                             bail!("index {idx} out of range");
                         }
+                        if mask[idx] {
+                            bail!("duplicate index {idx} in block (mask would have fewer than {n} ones)");
+                        }
                         mask[idx] = true;
                     }
                     out.push(mask);
@@ -139,7 +443,123 @@ impl MaskCodec {
     }
 }
 
-/// LSB-first bit writer.
+/// LSB-first bit writer with a u64 accumulator: bits collect in `acc` and
+/// spill to the word buffer 64 at a time, so a 14-bit combinadic rank costs
+/// one shift/or (plus an occasional word flush) instead of 14 single-bit
+/// read-modify-writes. Byte output is identical to the seed [`BitWriter`].
+#[derive(Debug, Default)]
+pub struct WordWriter {
+    words: Vec<u64>,
+    acc: u64,
+    /// Bits currently buffered in `acc`; invariant: < 64.
+    acc_bits: usize,
+    bits: usize,
+}
+
+impl WordWriter {
+    pub fn new() -> WordWriter {
+        WordWriter::default()
+    }
+
+    /// Append the low `width` (≤ 64) bits of `value`, LSB first.
+    #[inline]
+    pub fn push_word(&mut self, value: u64, width: usize) {
+        debug_assert!(width <= 64);
+        if width == 0 {
+            return;
+        }
+        let v = if width == 64 {
+            value
+        } else {
+            value & ((1u64 << width) - 1)
+        };
+        self.acc |= v << self.acc_bits;
+        if self.acc_bits + width >= 64 {
+            self.words.push(self.acc);
+            let used = 64 - self.acc_bits;
+            self.acc = if used >= width { 0 } else { v >> used };
+            self.acc_bits = width - used;
+        } else {
+            self.acc_bits += width;
+        }
+        self.bits += width;
+    }
+
+    /// Append the low `width` (≤ 128) bits of `value`, LSB first.
+    pub fn push_bits(&mut self, value: u128, width: usize) {
+        if width <= 64 {
+            self.push_word(value as u64, width);
+        } else {
+            self.push_word(value as u64, 64);
+            self.push_word((value >> 64) as u64, width - 64);
+        }
+    }
+
+    pub fn len_bits(&self) -> usize {
+        self.bits
+    }
+
+    /// Serialize to bytes (little-endian words, truncated to ⌈bits/8⌉) —
+    /// byte-for-byte what the seed per-bit writer produces.
+    pub fn into_bytes(mut self) -> Vec<u8> {
+        if self.acc_bits > 0 {
+            self.words.push(self.acc);
+        }
+        let mut out = Vec::with_capacity(self.words.len() * 8);
+        for w in &self.words {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out.truncate((self.bits + 7) / 8);
+        out
+    }
+}
+
+/// LSB-first reader consuming byte-sized chunks (≤ 8 per 64-bit read)
+/// instead of single bits; accepts any buffer the writers produce.
+pub struct WordReader<'a> {
+    bytes: &'a [u8],
+    bit: usize,
+}
+
+impl<'a> WordReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> WordReader<'a> {
+        WordReader { bytes, bit: 0 }
+    }
+
+    /// Read `width` (≤ 64) bits, LSB first.
+    #[inline]
+    pub fn read_word(&mut self, width: usize) -> Result<u64> {
+        debug_assert!(width <= 64);
+        let mut v = 0u64;
+        let mut got = 0usize;
+        while got < width {
+            let byte = self.bit / 8;
+            if byte >= self.bytes.len() {
+                bail!("bit buffer exhausted");
+            }
+            let off = self.bit % 8;
+            let take = (width - got).min(8 - off);
+            let chunk = (self.bytes[byte] >> off) as u64 & ((1u64 << take) - 1);
+            v |= chunk << got;
+            got += take;
+            self.bit += take;
+        }
+        Ok(v)
+    }
+
+    /// Read `width` (≤ 128) bits, LSB first.
+    pub fn read_bits(&mut self, width: usize) -> Result<u128> {
+        if width <= 64 {
+            return Ok(self.read_word(width)? as u128);
+        }
+        let lo = self.read_word(64)? as u128;
+        let hi = self.read_word(width - 64)? as u128;
+        Ok(lo | hi << 64)
+    }
+}
+
+/// LSB-first bit writer (seed implementation, kept as the reference the
+/// word-level [`WordWriter`] is pinned against and benchmarked over).
 struct BitWriter {
     bytes: Vec<u8>,
     bit: usize,
@@ -171,7 +591,7 @@ impl BitWriter {
     }
 }
 
-/// LSB-first bit reader.
+/// LSB-first bit reader (seed implementation, reference for [`WordReader`]).
 struct BitReader<'a> {
     bytes: &'a [u8],
     bit: usize,
@@ -248,6 +668,61 @@ mod tests {
     }
 
     #[test]
+    fn lut_matches_loop_exhaustively_small_patterns() {
+        // Satellite: LUT-combinadic ≡ loop-combinadic for EVERY rank at the
+        // tabulated patterns (2:4 required; 4:8 and 8:16 ride along).
+        for (n, m) in [(2usize, 4usize), (4, 8), (8, 16)] {
+            let lut = CombinadicLut::new(n, m);
+            assert_eq!(lut.total() as u128, binomial(m as u64, n as u64));
+            for rank in 0..lut.total() {
+                let mask = decode_combinadic(rank as u128, n, m).unwrap();
+                let word = mask_to_word(&mask);
+                assert_eq!(lut.encode_word(word) as u128, encode_combinadic(&mask));
+                assert_eq!(lut.decode_word(rank).unwrap(), word, "{n}:{m} rank {rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn lut_matches_loop_sampled_16_32() {
+        // 16:32 exceeds DECODE_TABLE_MAX, so the loop-with-LUT path runs.
+        let lut = CombinadicLut::new(16, 32);
+        assert!(lut.total() > CombinadicLut::DECODE_TABLE_MAX);
+        let cfg = Config { cases: 512, ..Config::default() };
+        forall_simple(
+            &cfg,
+            |rng: &mut Rng| (rng.next_u64() % lut.total()),
+            |&rank| {
+                let mask = decode_combinadic(rank as u128, 16, 32).unwrap();
+                let word = mask_to_word(&mask);
+                lut.encode_word(word) == rank
+                    && lut.decode_word(rank).unwrap() == word
+                    && lut.encode_word(word) as u128 == encode_combinadic(&mask)
+            },
+        );
+    }
+
+    #[test]
+    fn cached_lut_is_shared_and_equivalent() {
+        let a = CombinadicLut::cached(8, 16);
+        let b = CombinadicLut::cached(8, 16);
+        assert!(Arc::ptr_eq(&a, &b), "same pattern returns the same Arc");
+        let fresh = CombinadicLut::new(8, 16);
+        for rank in [0u64, 1, 6434, 12_869] {
+            assert_eq!(a.decode_word(rank).unwrap(), fresh.decode_word(rank).unwrap());
+        }
+        let other = CombinadicLut::cached(2, 4);
+        assert!(!Arc::ptr_eq(&a, &other));
+    }
+
+    #[test]
+    fn lut_rejects_out_of_range_rank() {
+        assert!(CombinadicLut::new(2, 4).decode_word(6).is_err());
+        assert!(CombinadicLut::new(8, 16).decode_word(12_870).is_err());
+        assert!(CombinadicLut::new(16, 32).decode_word(601_080_390).is_err());
+    }
+
+    #[test]
     fn rank_out_of_range_rejected() {
         assert!(decode_combinadic(6, 2, 4).is_err());
         assert!(decode_combinadic(12_870, 8, 16).is_err());
@@ -264,6 +739,92 @@ mod tests {
             let decoded = codec.decode_blocks(&bytes, masks.len(), n, m).unwrap();
             assert_eq!(decoded, masks, "{codec:?}");
         }
+    }
+
+    #[test]
+    fn word_stream_bit_identical_to_reference_stream() {
+        // The tentpole pin: the word path's byte output equals the seed
+        // per-bit path's for every codec and paper pattern, and both decode
+        // each other's streams.
+        let cfg = Config { cases: 96, ..Config::default() };
+        forall_simple(
+            &cfg,
+            |rng: &mut Rng| {
+                let (n, m) = *rng.choose(&[(2usize, 4usize), (4, 8), (8, 16), (16, 32)]);
+                let count = rng.range(1, 20);
+                let masks: Vec<Vec<bool>> =
+                    (0..count).map(|_| random_mask(rng, n, m)).collect();
+                let codec_i = rng.below(3);
+                (masks, n, m, codec_i)
+            },
+            |(masks, n, m, codec_i)| {
+                let codec = [MaskCodec::Bitmap, MaskCodec::IndexList, MaskCodec::Combinadic]
+                    [*codec_i];
+                let (ref_bytes, ref_bits) = codec.reference_encode_blocks(masks, *n, *m);
+                let (word_bytes, word_bits) = codec.encode_blocks(masks, *n, *m);
+                if ref_bytes != word_bytes || ref_bits != word_bits {
+                    return false;
+                }
+                // Cross-decode: each path reads the other's bytes.
+                let via_ref = codec
+                    .reference_decode_blocks(&word_bytes, masks.len(), *n, *m)
+                    .unwrap();
+                let via_word = codec.decode_blocks(&ref_bytes, masks.len(), *n, *m).unwrap();
+                via_ref == *masks && via_word == *masks
+            },
+        );
+    }
+
+    #[test]
+    fn words_api_roundtrip() {
+        let mut rng = Rng::new(29);
+        for codec in [MaskCodec::Bitmap, MaskCodec::IndexList, MaskCodec::Combinadic] {
+            let (n, m) = (4usize, 8usize);
+            let words: Vec<u32> = (0..100)
+                .map(|_| mask_to_word(&random_mask(&mut rng, n, m)))
+                .collect();
+            let (bytes, bits) = codec.encode_words(&words, n, m);
+            assert!(bits <= bytes.len() * 8);
+            let decoded = codec.decode_words(&bytes, words.len(), n, m).unwrap();
+            assert_eq!(decoded, words, "{codec:?}");
+        }
+    }
+
+    #[test]
+    fn index_list_duplicate_indices_rejected() {
+        // Satellite bugfix: a corrupted IndexList stream naming the same
+        // slot twice used to decode silently into a mask with < N ones.
+        let (n, m) = (2usize, 4usize);
+        // Two blocks, 2 bits per index: [0, 0] (duplicate) then [1, 3].
+        let mut w = WordWriter::new();
+        for idx in [0u64, 0, 1, 3] {
+            w.push_word(idx, 2);
+        }
+        let bytes = w.into_bytes();
+        let err = MaskCodec::IndexList
+            .decode_words(&bytes, 2, n, m)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate index 0"), "{err}");
+        let err = MaskCodec::IndexList
+            .decode_blocks(&bytes, 2, n, m)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate index 0"), "{err}");
+        let err = MaskCodec::IndexList
+            .reference_decode_blocks(&bytes, 2, n, m)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate index 0"), "{err}");
+        // A valid stream still decodes.
+        let mut w = WordWriter::new();
+        for idx in [0u64, 2, 1, 3] {
+            w.push_word(idx, 2);
+        }
+        let ok = MaskCodec::IndexList
+            .decode_words(&w.into_bytes(), 2, n, m)
+            .unwrap();
+        assert_eq!(ok, vec![0b0101, 0b1010]);
     }
 
     #[test]
@@ -285,6 +846,78 @@ mod tests {
     }
 
     #[test]
+    fn word_writer_matches_bit_writer_on_random_pushes() {
+        // Byte-for-byte equivalence of the u64-accumulator writer and the
+        // seed per-bit writer over adversarial (value, width) sequences,
+        // and both readers read both outputs back.
+        let widths = [1usize, 2, 3, 7, 8, 9, 13, 14, 30, 31, 32, 33, 63, 64, 65, 100, 127, 128];
+        let cfg = Config { cases: 128, ..Config::default() };
+        forall_simple(
+            &cfg,
+            |rng: &mut Rng| {
+                let count = rng.range(1, 24);
+                (0..count)
+                    .map(|_| {
+                        let w = *rng.choose(&widths);
+                        let v = if w >= 128 {
+                            (rng.next_u64() as u128) << 64 | rng.next_u64() as u128
+                        } else {
+                            ((rng.next_u64() as u128) << 64 | rng.next_u64() as u128)
+                                & ((1u128 << w) - 1)
+                        };
+                        (v, w)
+                    })
+                    .collect::<Vec<(u128, usize)>>()
+            },
+            |seq| {
+                let mut bw = BitWriter::new();
+                let mut ww = WordWriter::new();
+                for &(v, w) in seq {
+                    bw.push_bits(v, w);
+                    ww.push_bits(v, w);
+                }
+                if bw.len_bits() != ww.len_bits() {
+                    return false;
+                }
+                let b1 = bw.into_bytes();
+                let b2 = ww.into_bytes();
+                if b1 != b2 {
+                    return false;
+                }
+                let mut br = BitReader::new(&b1);
+                let mut wr = WordReader::new(&b1);
+                seq.iter().all(|&(v, w)| {
+                    br.read_bits(w).unwrap() == v && wr.read_bits(w).unwrap() == v
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn word_writer_cross_boundaries() {
+        let mut w = WordWriter::new();
+        w.push_bits(0b1_0110_1011, 9);
+        w.push_bits(0b111, 3);
+        let bits = w.len_bits();
+        let bytes = w.into_bytes();
+        assert_eq!(bits, 12);
+        let mut r = WordReader::new(&bytes);
+        assert_eq!(r.read_bits(9).unwrap(), 0b1_0110_1011);
+        assert_eq!(r.read_bits(3).unwrap(), 0b111);
+        assert!(r.read_bits(1).is_err() || bytes.len() * 8 >= 13);
+    }
+
+    #[test]
+    fn reader_errors_when_exhausted() {
+        let mut w = WordWriter::new();
+        w.push_word(0x7, 3);
+        let bytes = w.into_bytes(); // one byte
+        let mut r = WordReader::new(&bytes);
+        assert_eq!(r.read_word(8).unwrap(), 0x7); // within the padded byte
+        assert!(r.read_word(1).is_err());
+    }
+
+    #[test]
     fn bitwriter_cross_byte_boundaries() {
         let mut w = BitWriter::new();
         w.push_bits(0b1_0110_1011, 9);
@@ -296,5 +929,13 @@ mod tests {
         assert_eq!(r.read_bits(9).unwrap(), 0b1_0110_1011);
         assert_eq!(r.read_bits(3).unwrap(), 0b111);
         assert!(r.read_bits(1).is_err() || bytes.len() * 8 >= 13);
+    }
+
+    #[test]
+    fn mask_word_roundtrip() {
+        let mask = vec![true, false, false, true, true, false];
+        let w = mask_to_word(&mask);
+        assert_eq!(w, 0b011001);
+        assert_eq!(word_to_mask(w, 6), mask);
     }
 }

@@ -13,7 +13,10 @@
 
 pub mod codec;
 
-pub use codec::{decode_combinadic, encode_combinadic, MaskCodec};
+pub use codec::{
+    decode_combinadic, encode_combinadic, mask_to_word, word_to_mask, CombinadicLut, MaskCodec,
+    WordReader, WordWriter,
+};
 
 /// Binomial coefficient C(n, k) in u128 (exact for every pattern we use).
 pub fn binomial(n: u64, k: u64) -> u128 {

@@ -6,7 +6,9 @@
 //! artifact (weights are dequantized to f32 on load — we measure the
 //! *accuracy* effect of quantization, as the paper does, not kernel speed).
 
+use crate::metadata::MaskCodec;
 use crate::sparsity::pipeline::{Scratch, Sparsifier};
+use crate::sparsity::PackedNM;
 use crate::util::tensor::{Tensor, TensorStore};
 use anyhow::Result;
 
@@ -19,6 +21,11 @@ pub struct QuantStats {
     pub mean_abs_err: f64,
     pub compressed_bytes: usize,
     pub original_bytes: usize,
+    /// Bytes of the packed sparse+quant representation (kept values at the
+    /// quantized width, *measured* combinadic metadata, dense tails and
+    /// per-row scales) — populated when `quantize_store_with` ran with a
+    /// selection-only sparsifier and packed each tensor post-prune.
+    pub packed_bytes: usize,
 }
 
 impl QuantStats {
@@ -27,6 +34,16 @@ impl QuantStats {
             return 0.0;
         }
         self.original_bytes as f64 / self.compressed_bytes as f64
+    }
+
+    /// original / packed — what dense f32 shrinks to once pruning's zeros
+    /// stop being stored at all (vs [`QuantStats::compression_ratio`],
+    /// which still pays for them at the quantized width).
+    pub fn sparse_compression_ratio(&self) -> f64 {
+        if self.packed_bytes == 0 {
+            return 0.0;
+        }
+        self.original_bytes as f64 / self.packed_bytes as f64
     }
 }
 
@@ -89,6 +106,15 @@ pub fn quantize_store_with(
     let mut abs_err_sum = 0.0f64;
     let mut scratch = Scratch::new();
     let mut pre_quant: Vec<f32> = Vec::new();
+    // Pack post-prune: the quantized sparse rows re-emitted as a PackedNM
+    // stream so `packed_bytes` reports the *measured* compressed footprint.
+    // Re-selection uses plain magnitude (not the caller's criterion, whose
+    // channel scale could zero-score a surviving value): top-|q| keeps
+    // every nonzero of an already-pruned row, so the stream decodes to
+    // exactly the stored dense row.
+    let pack_sp = sparsifier
+        .filter(|sp| sp.is_packable())
+        .map(|sp| Sparsifier::new(sp.pattern()));
     for name in &names {
         let t = store.get_mut(name)?;
         let (rows, cols) = (t.rows(), t.cols());
@@ -96,6 +122,10 @@ pub fn quantize_store_with(
         let sparsify_cols = match sparsifier.map(|sp| sp.pattern()) {
             Some(crate::sparsity::Pattern::NM { m, .. }) => cols - cols % m as usize,
             _ => cols,
+        };
+        let mut packed = match &pack_sp {
+            Some(ps) if sparsify_cols > 0 => Some(PackedNM::new(ps.pattern(), sparsify_cols)),
+            _ => None,
         };
         for r in 0..rows {
             let row = t.row_mut(r);
@@ -113,11 +143,20 @@ pub fn quantize_store_with(
                 .zip(&pre_quant)
                 .map(|(a, b)| (a - b).abs() as f64)
                 .sum::<f64>();
+            if let Some(p) = packed.as_mut() {
+                pack_sp.as_ref().unwrap().pack_row_into(&row[..sparsify_cols], p, &mut scratch);
+            }
         }
         stats.tensors += 1;
         stats.params += rows * cols;
         stats.original_bytes += rows * cols * 4;
         stats.compressed_bytes += rows * cols * (bits as usize) / 8 + rows * 4;
+        if let Some(p) = &packed {
+            let values_bytes = p.values().len() * bits as usize / 8;
+            let meta_bytes = (p.encoded_metadata_bits(MaskCodec::Combinadic) + 7) / 8;
+            let tail_bytes = rows * (cols - sparsify_cols) * bits as usize / 8;
+            stats.packed_bytes += values_bytes + meta_bytes + tail_bytes + rows * 4;
+        }
     }
     stats.mean_abs_err = if stats.params > 0 {
         abs_err_sum / stats.params as f64
@@ -214,6 +253,40 @@ mod tests {
                 ));
             }
         }
+    }
+
+    #[test]
+    fn packed_accounting_reflects_sparse_storage() {
+        use crate::sparsity::{Pattern, Scratch};
+        let mut rng = Rng::new(8);
+        let mut s = TensorStore::new();
+        s.insert("layers.0.q.w", rand_w(&mut rng, 16, 64));
+        s.insert("layers.2.odd.w", rand_w(&mut rng, 4, 10)); // dense tail of 2
+        let sp = Sparsifier::new(Pattern::NM { n: 2, m: 4 });
+        let stats = quantize_store_with(&mut s, 8, Some(&sp)).unwrap();
+        // Packed: half the values at int8 + ~3 bits/block metadata — well
+        // under the dense-int8 footprint, well over nothing.
+        assert!(stats.packed_bytes > 0);
+        assert!(
+            stats.packed_bytes < stats.compressed_bytes,
+            "{} vs {}",
+            stats.packed_bytes,
+            stats.compressed_bytes
+        );
+        assert!(stats.sparse_compression_ratio() > stats.compression_ratio());
+        // Re-packing the stored (quantized) rows reconstructs them exactly:
+        // selection on the quantized row keeps every nonzero.
+        let t = s.get("layers.0.q.w").unwrap();
+        let mut packed = crate::sparsity::PackedNM::new(sp.pattern(), 64);
+        let mut scratch = Scratch::new();
+        sp.pack(t, &mut packed, &mut scratch);
+        assert_eq!(packed.to_dense().data, t.data);
+        // Without a sparsifier there is nothing to pack.
+        let mut dense_store = TensorStore::new();
+        dense_store.insert("layers.0.q.w", rand_w(&mut rng, 8, 16));
+        let dense_stats = quantize_store(&mut dense_store, 8).unwrap();
+        assert_eq!(dense_stats.packed_bytes, 0);
+        assert_eq!(dense_stats.sparse_compression_ratio(), 0.0);
     }
 
     #[test]

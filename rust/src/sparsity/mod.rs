@@ -15,11 +15,13 @@
 
 pub mod criteria;
 pub mod nm;
+pub mod packed;
 pub mod pipeline;
 pub mod transforms;
 pub mod unstructured;
 pub mod weightprune;
 
+pub use packed::PackedNM;
 pub use pipeline::{Scratch, Sparsifier};
 
 use anyhow::{bail, Result};
@@ -95,6 +97,18 @@ impl Pattern {
     /// Fraction of elements removed.
     pub fn sparsity(&self) -> f64 {
         1.0 - self.density()
+    }
+
+    /// Number of elements selection keeps in a row of width `h` — the
+    /// uniform per-row geometry `Sparsifier` and `PackedNM` share.
+    pub fn kept_per_row(&self, h: usize) -> usize {
+        match self {
+            Pattern::Dense => h,
+            Pattern::NM { n, m } => h / *m as usize * *n as usize,
+            Pattern::Unstructured { keep_pct } => {
+                (((h as f64) * (*keep_pct as f64 / 100.0)).round() as usize).min(h)
+            }
+        }
     }
 
     /// Number of valid layouts per block (`C(m, n)`), the paper's

@@ -1,0 +1,506 @@
+//! Compressed-domain N:M activation streams (`PackedNM`).
+//!
+//! The paper's hardware case (Appendix A / Table 6) rests on N:M sparsity
+//! cutting activation I/O nearly in half — which only materializes if the
+//! system actually *moves* the compressed form. `PackedNM` is that form on
+//! the rust side: per row, the kept f32 values stored contiguously in
+//! ascending column order plus **one `u32` metadata word per block** (bit
+//! `i` set ⇔ element `base+i` kept). The fused
+//! [`Sparsifier`](crate::sparsity::Sparsifier) emits it directly during its
+//! selection pass (`pack_row_into`/`pack`/`pack_batch`) — no dense
+//! writeback, no per-block `Vec<bool>` — and the kernels here operate on
+//! the stream without ever materializing the dense tensor:
+//!
+//! - [`PackedNM::row_dot`] / [`PackedNM::matvec_into`]: packed·dense
+//!   GEMV — each row touches `kept_per_row` values instead of `cols`;
+//! - [`PackedNM::decode_row_into`] / [`PackedNM::decode_into`]:
+//!   scatter back to dense (zero-filled), row-parallel over
+//!   `threadpool::par_chunks_mut`;
+//! - [`PackedNM::row_l2`] / [`PackedNM::l2`] /
+//!   [`PackedNM::fidelity_error_vs`]: reductions over the stream —
+//!   `evalharness::sparsify_proxy_error` computes reconstruction fidelity
+//!   this way, bit-identical to the dense formula.
+//!
+//! Metadata leaves the machine through `metadata::MaskCodec::encode_words`
+//! (combinadic for N:M); [`PackedNM::measured_bytes_per_row`] reports the
+//! *measured* encoded footprint that `BENCH_packed.json`, `table6` and
+//! `examples/hw_breakeven.rs` cite in place of theoretical
+//! `bits_per_element`.
+//!
+//! Geometry is uniform: every row keeps exactly `kept_per_row` elements
+//! (N:M keeps n per block; unstructured keeps the same rounded count per
+//! row), so row offsets are trivial and repacking into an existing
+//! `PackedNM` of the same shape is allocation-free (buffers are resized in
+//! place — scratch-owned steady state, like the `Sparsifier` itself).
+//! Packing applies to *selection-only* pipelines (no shift, no VAR): those
+//! drop elements to exactly `0.0` and keep values unchanged, which is what
+//! a zero-fill scatter reconstructs — `rust/tests/packed_roundtrip.rs`
+//! pins `decode(pack(x)) ≡ sparsify(x)` bitwise for every paper pattern.
+
+use crate::metadata::MaskCodec;
+use crate::sparsity::Pattern;
+use crate::util::tensor::Tensor;
+use crate::util::threadpool;
+
+/// Metadata block width for patterns without a native block: one `u32`
+/// word covers 32 columns.
+const WORD_BLOCK: usize = 32;
+
+/// A compressed activation tensor: `[rows, cols]` logically, stored as
+/// contiguous kept values + one metadata word per block. See the module
+/// docs for layout and invariants.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedNM {
+    pattern: Pattern,
+    rows: usize,
+    cols: usize,
+    /// Metadata block width: `m` for N:M, 32 otherwise.
+    block: usize,
+    /// Kept elements per row (uniform across rows).
+    kept_per_row: usize,
+    /// `rows * kept_per_row` kept values, row-major, ascending column
+    /// order within each row.
+    pub(crate) values: Vec<f32>,
+    /// `rows * blocks_per_row` metadata words, row-major.
+    pub(crate) meta: Vec<u32>,
+}
+
+impl PackedNM {
+    /// Empty stream for rows of width `cols` under `pattern`. Panics on
+    /// geometry the packed layout cannot hold (N:M with `m > 32` or
+    /// `cols % m != 0` — the same rows the dense pipeline rejects).
+    pub fn new(pattern: Pattern, cols: usize) -> PackedNM {
+        let block = match pattern {
+            Pattern::NM { n, m } => {
+                let (n, m) = (n as usize, m as usize);
+                assert!(n > 0 && n <= m, "invalid N:M {n}:{m}");
+                assert!(m <= 32, "packed N:M supports M up to 32 (one u32 word per block)");
+                assert_eq!(cols % m, 0, "row length {cols} not a multiple of M={m}");
+                m
+            }
+            _ => WORD_BLOCK,
+        };
+        PackedNM {
+            pattern,
+            rows: 0,
+            cols,
+            block,
+            kept_per_row: pattern.kept_per_row(cols),
+            values: Vec::new(),
+            meta: Vec::new(),
+        }
+    }
+
+    /// Re-shape for a fresh pack of `rows` rows, reusing the existing
+    /// allocations (no allocation when the new extent fits capacity).
+    pub(crate) fn reset_for(&mut self, pattern: Pattern, cols: usize, rows: usize) {
+        if self.pattern != pattern || self.cols != cols {
+            let fresh = PackedNM::new(pattern, cols);
+            self.pattern = fresh.pattern;
+            self.cols = fresh.cols;
+            self.block = fresh.block;
+            self.kept_per_row = fresh.kept_per_row;
+        }
+        self.rows = rows;
+        self.values.resize(rows * self.kept_per_row, 0.0);
+        self.meta.resize(rows * self.blocks_per_row(), 0);
+    }
+
+    /// Append one (uninitialized) row, returning its index. The caller
+    /// fills it through [`PackedNM::row_slots_mut`].
+    pub(crate) fn append_row_slot(&mut self) -> usize {
+        let r = self.rows;
+        self.rows += 1;
+        self.values.resize(self.rows * self.kept_per_row, 0.0);
+        self.meta.resize(self.rows * self.blocks_per_row(), 0);
+        r
+    }
+
+    /// Mutable (values, meta) slices of row `r` — the emitter's write
+    /// window.
+    pub(crate) fn row_slots_mut(&mut self, r: usize) -> (&mut [f32], &mut [u32]) {
+        let kpr = self.kept_per_row;
+        let bpr = self.blocks_per_row();
+        (
+            &mut self.values[r * kpr..(r + 1) * kpr],
+            &mut self.meta[r * bpr..(r + 1) * bpr],
+        )
+    }
+
+    /// Both output buffers at once — the parallel emitter splits them into
+    /// lockstep row chunks.
+    pub(crate) fn buffers_mut(&mut self) -> (&mut [f32], &mut [u32]) {
+        (&mut self.values, &mut self.meta)
+    }
+
+    /// Drop all rows, keeping buffers for reuse.
+    pub fn clear(&mut self) {
+        self.rows = 0;
+        self.values.clear();
+        self.meta.clear();
+    }
+
+    pub fn pattern(&self) -> Pattern {
+        self.pattern
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Metadata block width (`m` for N:M, 32 otherwise).
+    pub fn block_width(&self) -> usize {
+        self.block
+    }
+
+    pub fn kept_per_row(&self) -> usize {
+        self.kept_per_row
+    }
+
+    pub fn blocks_per_row(&self) -> usize {
+        (self.cols + self.block - 1) / self.block
+    }
+
+    /// All kept values, row-major.
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    /// All metadata words, row-major.
+    pub fn meta_words(&self) -> &[u32] {
+        &self.meta
+    }
+
+    /// Kept values of row `r`, ascending column order.
+    pub fn row_values(&self, r: usize) -> &[f32] {
+        &self.values[r * self.kept_per_row..(r + 1) * self.kept_per_row]
+    }
+
+    /// Metadata words of row `r`.
+    pub fn meta_row(&self, r: usize) -> &[u32] {
+        let bpr = self.blocks_per_row();
+        &self.meta[r * bpr..(r + 1) * bpr]
+    }
+
+    // ------------------------------------------------------------- kernels
+
+    /// Scatter row `r` into `out` (length `cols`): kept values land at
+    /// their columns, everything else becomes `0.0` — exactly what the
+    /// selection-only `Sparsifier` writes densely.
+    pub fn decode_row_into(&self, r: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.cols, "decode row length mismatch");
+        out.iter_mut().for_each(|v| *v = 0.0);
+        let vals = self.row_values(r);
+        let mut vi = 0usize;
+        for (bi, &word) in self.meta_row(r).iter().enumerate() {
+            let base = bi * self.block;
+            let mut w = word;
+            while w != 0 {
+                let b = w.trailing_zeros() as usize;
+                out[base + b] = vals[vi];
+                vi += 1;
+                w &= w - 1;
+            }
+        }
+        debug_assert_eq!(vi, vals.len());
+    }
+
+    /// Scatter the whole stream into a `[rows, cols]` tensor, row-parallel
+    /// over up to `threads` workers.
+    pub fn decode_into(&self, x: &mut Tensor, threads: usize) {
+        assert_eq!(x.shape, vec![self.rows, self.cols], "decode shape mismatch");
+        if self.rows == 0 || self.cols == 0 {
+            return;
+        }
+        let cols = self.cols;
+        let threads = threads.max(1).min(self.rows);
+        let rows_per_chunk = (self.rows + threads - 1) / threads;
+        threadpool::par_chunks_mut(&mut x.data, rows_per_chunk * cols, threads, |ci, chunk| {
+            for (i, row) in chunk.chunks_exact_mut(cols).enumerate() {
+                self.decode_row_into(ci * rows_per_chunk + i, row);
+            }
+        });
+    }
+
+    /// Convenience dense materialization (allocates; tests and one-shots).
+    pub fn to_dense(&self) -> Tensor {
+        let mut t = Tensor::zeros(&[self.rows, self.cols]);
+        self.decode_into(&mut t, 1);
+        t
+    }
+
+    /// Dot product of packed row `r` with a dense vector (length `cols`)
+    /// — touches `kept_per_row` elements instead of `cols`.
+    pub fn row_dot(&self, r: usize, v: &[f32]) -> f32 {
+        assert_eq!(v.len(), self.cols, "dot length mismatch");
+        let vals = self.row_values(r);
+        let mut acc = 0.0f32;
+        let mut vi = 0usize;
+        for (bi, &word) in self.meta_row(r).iter().enumerate() {
+            let base = bi * self.block;
+            let mut w = word;
+            while w != 0 {
+                let b = w.trailing_zeros() as usize;
+                acc += vals[vi] * v[base + b];
+                vi += 1;
+                w &= w - 1;
+            }
+        }
+        acc
+    }
+
+    /// Packed·dense GEMV: `out[r] = packed_row(r) · v`, row-parallel.
+    pub fn matvec_into(&self, v: &[f32], out: &mut [f32], threads: usize) {
+        assert_eq!(out.len(), self.rows, "matvec output length mismatch");
+        if self.rows == 0 {
+            return;
+        }
+        let threads = threads.max(1).min(self.rows);
+        let rows_per_chunk = (self.rows + threads - 1) / threads;
+        threadpool::par_chunks_mut(out, rows_per_chunk, threads, |ci, chunk| {
+            for (i, o) in chunk.iter_mut().enumerate() {
+                *o = self.row_dot(ci * rows_per_chunk + i, v);
+            }
+        });
+    }
+
+    /// L2 norm of row `r` (zeros contribute nothing, so this equals the
+    /// dense row's norm).
+    pub fn row_l2(&self, r: usize) -> f64 {
+        self.row_values(r)
+            .iter()
+            .map(|x| (*x as f64) * (*x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// L2 norm of the whole stream.
+    pub fn l2(&self) -> f64 {
+        self.values
+            .iter()
+            .map(|x| (*x as f64) * (*x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Relative L2 reconstruction error `‖x − decode(self)‖₂ / ‖x‖₂`
+    /// computed from the stream alone: kept elements reconstruct exactly,
+    /// so only *dropped* elements of `x` contribute — iterated in row-major
+    /// order, making the f64 accumulation bit-identical to the dense
+    /// formula over `x − sparsify(x)`.
+    pub fn fidelity_error_vs(&self, x: &Tensor) -> f64 {
+        assert_eq!(x.shape, vec![self.rows, self.cols], "fidelity shape mismatch");
+        let mut sum = 0.0f64;
+        for r in 0..self.rows {
+            let row = x.row(r);
+            for (bi, &word) in self.meta_row(r).iter().enumerate() {
+                let base = bi * self.block;
+                let width = self.block.min(self.cols - base);
+                for b in 0..width {
+                    if word >> b & 1 == 0 {
+                        let d = row[base + b] as f64;
+                        sum += d * d;
+                    }
+                }
+            }
+        }
+        sum.sqrt() / x.l2().max(1e-12)
+    }
+
+    // ----------------------------------------------------------- footprint
+
+    /// Bytes of the value payload (f32).
+    pub fn payload_bytes(&self) -> usize {
+        self.values.len() * 4
+    }
+
+    /// *Measured* metadata footprint in bits: the actual output size of
+    /// `codec` over this stream's words (combinadic/index-list/bitmap for
+    /// N:M). Patterns without a fixed per-block ones-count (unstructured,
+    /// dense) are reported at the dense-bitmap floor of one bit per
+    /// element.
+    pub fn encoded_metadata_bits(&self, codec: MaskCodec) -> usize {
+        match self.pattern {
+            Pattern::NM { n, m } => {
+                let (_, bits) = codec.encode_words(&self.meta, n as usize, m as usize);
+                bits
+            }
+            _ => self.rows * self.cols,
+        }
+    }
+
+    /// Measured compressed footprint per row: value payload plus encoded
+    /// metadata, in bytes. The number `BENCH_packed.json` reports and
+    /// `table6`/`hw_breakeven` cite against the dense `cols * 4`.
+    pub fn measured_bytes_per_row(&self, codec: MaskCodec) -> f64 {
+        if self.rows == 0 {
+            return 0.0;
+        }
+        let meta_bytes = (self.encoded_metadata_bits(codec) + 7) / 8;
+        (self.payload_bytes() + meta_bytes) as f64 / self.rows as f64
+    }
+
+    /// Dense footprint per row (f32), the baseline for the bandwidth
+    /// ratio.
+    pub fn dense_bytes_per_row(&self) -> f64 {
+        (self.cols * 4) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::{paper_patterns, Scratch, Sparsifier};
+    use crate::util::prng::Rng;
+
+    fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Tensor {
+        Tensor::from_vec(
+            &[rows, cols],
+            (0..rows * cols).map(|_| rng.normal() as f32).collect(),
+        )
+    }
+
+    #[test]
+    fn pack_decode_roundtrip_matches_dense_sparsify() {
+        let mut rng = Rng::new(3);
+        for pattern in paper_patterns() {
+            let x = rand_matrix(&mut rng, 7, 64);
+            let sp = Sparsifier::new(pattern);
+            let mut packed = PackedNM::new(pattern, 64);
+            let mut scratch = Scratch::new();
+            sp.pack(&x, &mut packed, &mut scratch);
+            assert_eq!(packed.rows(), 7);
+            assert_eq!(packed.kept_per_row(), sp.kept_per_row(64));
+            let mut dense = x.clone();
+            sp.sparsify(&mut dense, &mut scratch);
+            let decoded = packed.to_dense();
+            assert_eq!(
+                decoded.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                dense.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{pattern}"
+            );
+        }
+    }
+
+    #[test]
+    fn matvec_matches_dense_gemv() {
+        let mut rng = Rng::new(5);
+        let x = rand_matrix(&mut rng, 33, 96);
+        let v: Vec<f32> = (0..96).map(|_| rng.normal() as f32).collect();
+        let sp = Sparsifier::new(Pattern::NM { n: 8, m: 16 });
+        let mut packed = PackedNM::new(sp.pattern(), 96);
+        let mut scratch = Scratch::new();
+        sp.pack(&x, &mut packed, &mut scratch);
+        let mut dense = x.clone();
+        sp.sparsify(&mut dense, &mut scratch);
+        for threads in [1usize, 4] {
+            let mut out = vec![0.0f32; 33];
+            packed.matvec_into(&v, &mut out, threads);
+            for r in 0..33 {
+                let expect: f32 = dense.row(r).iter().zip(&v).map(|(a, b)| a * b).sum();
+                assert!(
+                    (out[r] - expect).abs() <= 1e-4 * expect.abs().max(1.0),
+                    "row {r}: {} vs {expect} (threads {threads})",
+                    out[r]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn l2_and_fidelity_match_dense() {
+        let mut rng = Rng::new(11);
+        let x = rand_matrix(&mut rng, 9, 32);
+        let sp = Sparsifier::new(Pattern::NM { n: 2, m: 4 });
+        let mut packed = PackedNM::new(sp.pattern(), 32);
+        let mut scratch = Scratch::new();
+        sp.pack(&x, &mut packed, &mut scratch);
+        let dense = packed.to_dense();
+        assert!((packed.l2() - dense.l2()).abs() < 1e-9);
+        for r in 0..9 {
+            let row_norm = dense.row(r).iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+            assert!((packed.row_l2(r) - row_norm).abs() < 1e-9);
+        }
+        // Fidelity from the stream == fidelity from the dense difference.
+        let denom = x.l2().max(1e-12);
+        let diff = x
+            .data
+            .iter()
+            .zip(&dense.data)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert_eq!(packed.fidelity_error_vs(&x), diff / denom);
+    }
+
+    #[test]
+    fn reuse_is_allocation_stable() {
+        // Repacking the same shape must not grow the buffers.
+        let mut rng = Rng::new(13);
+        let sp = Sparsifier::new(Pattern::NM { n: 4, m: 8 });
+        let mut packed = PackedNM::new(sp.pattern(), 64);
+        let mut scratch = Scratch::new();
+        let x = rand_matrix(&mut rng, 16, 64);
+        sp.pack(&x, &mut packed, &mut scratch);
+        let cap_v = packed.values.capacity();
+        let cap_m = packed.meta.capacity();
+        for _ in 0..5 {
+            let y = rand_matrix(&mut rng, 16, 64);
+            sp.pack(&y, &mut packed, &mut scratch);
+            assert_eq!(packed.values.capacity(), cap_v);
+            assert_eq!(packed.meta.capacity(), cap_m);
+        }
+    }
+
+    #[test]
+    fn unstructured_tail_block_handled() {
+        // cols not a multiple of 32: tail metadata word is partial.
+        let mut rng = Rng::new(17);
+        let x = rand_matrix(&mut rng, 4, 40);
+        let sp = Sparsifier::new(Pattern::Unstructured { keep_pct: 50 });
+        let mut packed = PackedNM::new(sp.pattern(), 40);
+        let mut scratch = Scratch::new();
+        sp.pack(&x, &mut packed, &mut scratch);
+        assert_eq!(packed.blocks_per_row(), 2);
+        assert_eq!(packed.kept_per_row(), 20);
+        let mut dense = x.clone();
+        sp.sparsify(&mut dense, &mut scratch);
+        assert_eq!(packed.to_dense().data, dense.data);
+        // No ghost bits beyond the tail width.
+        for r in 0..4 {
+            assert_eq!(packed.meta_row(r)[1] >> 8, 0, "bits past column 40");
+        }
+    }
+
+    #[test]
+    fn measured_footprint_orders_sensibly() {
+        let mut rng = Rng::new(19);
+        let x = rand_matrix(&mut rng, 8, 128);
+        let sp = Sparsifier::new(Pattern::NM { n: 8, m: 16 });
+        let mut packed = PackedNM::new(sp.pattern(), 128);
+        let mut scratch = Scratch::new();
+        sp.pack(&x, &mut packed, &mut scratch);
+        let dense = packed.dense_bytes_per_row();
+        let comb = packed.measured_bytes_per_row(MaskCodec::Combinadic);
+        let bitmap = packed.measured_bytes_per_row(MaskCodec::Bitmap);
+        // Half the values + metadata: well under dense, combinadic ≤ bitmap.
+        assert!(comb < dense, "{comb} vs {dense}");
+        assert!(comb <= bitmap, "{comb} vs {bitmap}");
+        // 8 blocks/row * 14 bits = 112 bits -> 14 bytes; payload 64*4.
+        assert_eq!(packed.payload_bytes(), 8 * 64 * 4);
+        assert_eq!(
+            packed.encoded_metadata_bits(MaskCodec::Combinadic),
+            8 * 8 * 14
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "not a multiple of M")]
+    fn misaligned_nm_rejected() {
+        PackedNM::new(Pattern::NM { n: 2, m: 4 }, 30);
+    }
+}

@@ -201,13 +201,30 @@ impl Sparsifier {
 
     /// Number of elements the selection keeps for a row of width `h`.
     pub fn kept_per_row(&self, h: usize) -> usize {
-        match self.pattern {
-            Pattern::Dense => h,
-            Pattern::NM { n, m } => h / m as usize * n as usize,
-            Pattern::Unstructured { keep_pct } => {
-                ((h as f64) * (keep_pct as f64 / 100.0)).round() as usize
+        self.pattern.kept_per_row(h)
+    }
+
+    /// Does this pipeline only *select* (no shift, no VAR)? Selection-only
+    /// pipelines drop elements to exactly `0.0` and leave kept values
+    /// untouched, which is what the packed compressed representation
+    /// ([`PackedNM`]) can carry — a per-channel criterion scale is fine
+    /// (it reorders selection without changing values).
+    pub fn is_selection_only(&self) -> bool {
+        matches!(self.shift, Shift::None) && !self.use_var
+    }
+
+    /// Can this pipeline emit a [`PackedNM`](crate::sparsity::PackedNM)
+    /// stream? Selection-only (see [`Sparsifier::is_selection_only`]) and
+    /// within the packed layout's geometry (one `u32` word per block ⇒
+    /// N:M blocks up to M = 32). The single predicate both
+    /// `evalharness::sparsify_proxy_error` and `quant` consult before
+    /// taking the compressed-domain path.
+    pub fn is_packable(&self) -> bool {
+        self.is_selection_only()
+            && match self.pattern {
+                Pattern::NM { m, .. } => m <= 32,
+                _ => true,
             }
-        }
     }
 
     /// Fused single pass over one row, in place: shift → score → per-block
@@ -384,6 +401,151 @@ impl Sparsifier {
                 self.sparsify_row(row, &mut scratch);
             }
         });
+    }
+
+    // ------------------------------------------------- compressed emission
+
+    /// Emit one row straight into the packed stream during the selection
+    /// pass: score → per-block top-N → metadata word + kept values, with
+    /// no dense writeback and no per-block mask allocation. Requires a
+    /// selection-only pipeline (see [`Sparsifier::is_selection_only`]);
+    /// `decode` of the emitted row is bit-identical to
+    /// [`Sparsifier::sparsify_row`] on the same data.
+    pub fn pack_row_into(
+        &self,
+        row: &[f32],
+        packed: &mut crate::sparsity::PackedNM,
+        scratch: &mut Scratch,
+    ) {
+        assert_eq!(packed.pattern(), self.pattern, "packed stream pattern mismatch");
+        assert_eq!(packed.cols(), row.len(), "packed stream width mismatch");
+        let r = packed.append_row_slot();
+        let (vals, meta) = packed.row_slots_mut(r);
+        self.pack_row_to(row, vals, meta, scratch);
+    }
+
+    /// Pack every row of a `[rows, h]` matrix into `packed` (single
+    /// thread, caller-owned scratch). The stream is re-shaped in place —
+    /// repacking a same-shaped matrix allocates nothing.
+    pub fn pack(
+        &self,
+        x: &Tensor,
+        packed: &mut crate::sparsity::PackedNM,
+        scratch: &mut Scratch,
+    ) {
+        let (rows, h) = (x.rows(), x.cols());
+        packed.reset_for(self.pattern, h, rows);
+        for r in 0..rows {
+            let (vals, meta) = packed.row_slots_mut(r);
+            // Borrow dance: row_slots_mut holds `packed`; re-borrow x only.
+            self.pack_row_to(x.row(r), vals, meta, scratch);
+        }
+    }
+
+    /// Row-parallel packed emission: kept-values and metadata outputs are
+    /// split into lockstep row chunks on `threadpool::par_chunks2_mut`,
+    /// one `Scratch` per worker. Identical to [`Sparsifier::pack`] at any
+    /// thread count.
+    pub fn pack_batch(&self, x: &Tensor, packed: &mut crate::sparsity::PackedNM, threads: usize) {
+        let (rows, h) = (x.rows(), x.cols());
+        packed.reset_for(self.pattern, h, rows);
+        if rows == 0 || h == 0 {
+            return;
+        }
+        let kpr = packed.kept_per_row();
+        let bpr = packed.blocks_per_row();
+        if kpr == 0 {
+            // Nothing is kept (tiny unstructured keep fractions): the
+            // stream is all-zero metadata and an empty value payload.
+            let (_, meta) = packed.buffers_mut();
+            meta.iter_mut().for_each(|w| *w = 0);
+            return;
+        }
+        let threads = threads.max(1).min(rows);
+        let rows_per_chunk = (rows + threads - 1) / threads;
+        let (values, meta) = packed.buffers_mut();
+        threadpool::par_chunks2_mut(
+            values,
+            rows_per_chunk * kpr,
+            meta,
+            rows_per_chunk * bpr,
+            threads,
+            |ci, vspan, mspan| {
+                let mut scratch = Scratch::new();
+                for (i, (vals, mw)) in vspan
+                    .chunks_exact_mut(kpr)
+                    .zip(mspan.chunks_exact_mut(bpr))
+                    .enumerate()
+                {
+                    self.pack_row_to(x.row(ci * rows_per_chunk + i), vals, mw, &mut scratch);
+                }
+            },
+        );
+    }
+
+    /// Selection + compressed emission for one row into exact-size output
+    /// slots (`vals.len() == kept_per_row`, `meta.len() == blocks_per_row`).
+    fn pack_row_to(&self, row: &[f32], vals: &mut [f32], meta: &mut [u32], scratch: &mut Scratch) {
+        assert!(
+            self.is_selection_only(),
+            "packed emission requires a selection-only pipeline (no shift/VAR)"
+        );
+        let h = row.len();
+        if h == 0 {
+            return;
+        }
+        self.fill_scores(row, 0.0, None, scratch);
+        let mut vi = 0usize;
+        match self.pattern {
+            Pattern::Dense => {
+                vals.copy_from_slice(row);
+                vi = h;
+                for (bi, word) in meta.iter_mut().enumerate() {
+                    let width = 32usize.min(h - bi * 32);
+                    *word = if width == 32 { u32::MAX } else { (1u32 << width) - 1 };
+                }
+            }
+            Pattern::NM { n, m } => {
+                let (n, m) = (n as usize, m as usize);
+                assert!(n > 0 && n <= m, "invalid N:M {n}:{m}");
+                assert_eq!(h % m, 0, "row length {h} not a multiple of M={m}");
+                for (bi, base) in (0..h).step_by(m).enumerate() {
+                    let keep = select_top(&scratch.scores[base..base + m], n, &mut scratch.idx);
+                    let mut word = 0u32;
+                    for &i in &scratch.idx[..keep] {
+                        word |= 1 << i;
+                    }
+                    meta[bi] = word;
+                    // Walking the word's set bits yields the keep-set in
+                    // ascending column order without sorting the indices.
+                    let mut w = word;
+                    while w != 0 {
+                        let b = w.trailing_zeros() as usize;
+                        vals[vi] = row[base + b];
+                        vi += 1;
+                        w &= w - 1;
+                    }
+                }
+            }
+            Pattern::Unstructured { .. } => {
+                let keep = select_top(&scratch.scores, self.kept_per_row(h), &mut scratch.idx);
+                meta.iter_mut().for_each(|w| *w = 0);
+                for &i in &scratch.idx[..keep] {
+                    meta[i as usize / 32] |= 1 << (i % 32);
+                }
+                for (bi, &word) in meta.iter().enumerate() {
+                    let base = bi * 32;
+                    let mut w = word;
+                    while w != 0 {
+                        let b = w.trailing_zeros() as usize;
+                        vals[vi] = row[base + b];
+                        vi += 1;
+                        w &= w - 1;
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(vi, vals.len(), "kept-count / slot-size mismatch");
     }
 }
 
@@ -764,6 +926,57 @@ mod tests {
             sp.sparsify_batch(&mut par, threads);
             assert_eq!(par.data, serial.data, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn pack_batch_matches_serial_any_thread_count() {
+        use crate::sparsity::PackedNM;
+        let mut rng = Rng::new(91);
+        let x = rand_matrix(&mut rng, 29, 64, 0.0); // odd row count on purpose
+        for pattern in [
+            Pattern::NM { n: 8, m: 16 },
+            Pattern::Unstructured { keep_pct: 30 },
+        ] {
+            let sp = Sparsifier::new(pattern);
+            let mut serial = PackedNM::new(pattern, 64);
+            let mut scratch = Scratch::new();
+            sp.pack(&x, &mut serial, &mut scratch);
+            for threads in [1usize, 2, 3, 8, 64] {
+                let mut par = PackedNM::new(pattern, 64);
+                sp.pack_batch(&x, &mut par, threads);
+                assert_eq!(par, serial, "{pattern} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_with_channel_scale_matches_sparsify_zeros() {
+        use crate::sparsity::PackedNM;
+        let mut rng = Rng::new(93);
+        let h = 32;
+        let xs: Vec<f32> = (0..h).map(|_| rng.normal() as f32).collect();
+        let cs: Vec<f32> = (0..h).map(|_| rng.normal().abs() as f32 + 0.1).collect();
+        let sp = Sparsifier::new(Pattern::NM { n: 2, m: 4 }).with_channel_scale(cs);
+        assert!(sp.is_selection_only());
+        let mut scratch = Scratch::new();
+        let mut packed = PackedNM::new(sp.pattern(), h);
+        sp.pack_row_into(&xs, &mut packed, &mut scratch);
+        let mut dense = xs.clone();
+        sp.sparsify_row(&mut dense, &mut scratch);
+        let mut decoded = vec![0.0f32; h];
+        packed.decode_row_into(0, &mut decoded);
+        assert_eq!(decoded, dense);
+    }
+
+    #[test]
+    #[should_panic(expected = "selection-only")]
+    fn packed_emission_rejects_shifted_pipelines() {
+        use crate::sparsity::PackedNM;
+        let sp = Sparsifier::new(Pattern::NM { n: 2, m: 4 }).with_shift(Shift::DynamicPerToken);
+        assert!(!sp.is_selection_only());
+        let mut packed = PackedNM::new(sp.pattern(), 4);
+        let mut scratch = Scratch::new();
+        sp.pack_row_into(&[1.0, 2.0, 3.0, 4.0], &mut packed, &mut scratch);
     }
 
     #[test]

@@ -145,6 +145,69 @@ where
     });
 }
 
+/// Lockstep dual-slice variant of [`par_chunks_mut`]: splits `a` into
+/// `a_chunk`-sized chunks and `b` into `b_chunk`-sized chunks (same chunk
+/// count required — the last chunk of each may be shorter) and calls
+/// `f(chunk_index, a_chunk, b_chunk)` for each pair across up to `threads`
+/// scoped workers. Used by the packed-stream emitter, whose kept-values and
+/// metadata-words outputs are two parallel row-blocked arrays.
+pub fn par_chunks2_mut<A, B, F>(
+    a: &mut [A],
+    a_chunk: usize,
+    b: &mut [B],
+    b_chunk: usize,
+    threads: usize,
+    f: F,
+) where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut [A], &mut [B]) + Sync,
+{
+    assert!(a_chunk > 0 && b_chunk > 0, "chunk lengths must be positive");
+    let n_chunks = (a.len() + a_chunk - 1) / a_chunk;
+    assert_eq!(
+        n_chunks,
+        (b.len() + b_chunk - 1) / b_chunk,
+        "slices disagree on chunk count"
+    );
+    if a.is_empty() && b.is_empty() {
+        return;
+    }
+    let threads = threads.max(1).min(n_chunks);
+    if threads == 1 {
+        for (i, (ca, cb)) in a.chunks_mut(a_chunk).zip(b.chunks_mut(b_chunk)).enumerate() {
+            f(i, ca, cb);
+        }
+        return;
+    }
+    let chunks_per_worker = (n_chunks + threads - 1) / threads;
+    thread::scope(|scope| {
+        let mut rest_a = a;
+        let mut rest_b = b;
+        let mut first_chunk = 0usize;
+        while !rest_a.is_empty() || !rest_b.is_empty() {
+            let take_a = (chunks_per_worker * a_chunk).min(rest_a.len());
+            let take_b = (chunks_per_worker * b_chunk).min(rest_b.len());
+            let (span_a, tail_a) = rest_a.split_at_mut(take_a);
+            let (span_b, tail_b) = rest_b.split_at_mut(take_b);
+            rest_a = tail_a;
+            rest_b = tail_b;
+            let f = &f;
+            let base = first_chunk;
+            scope.spawn(move || {
+                for (i, (ca, cb)) in span_a
+                    .chunks_mut(a_chunk)
+                    .zip(span_b.chunks_mut(b_chunk))
+                    .enumerate()
+                {
+                    f(base + i, ca, cb);
+                }
+            });
+            first_chunk += chunks_per_worker;
+        }
+    });
+}
+
 /// Parallel map: applies `f` to every item, preserving order, using `threads`
 /// workers via scoped threads (no 'static bound on inputs).
 pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
@@ -232,6 +295,47 @@ mod tests {
         assert_eq!(data, vec![1; 7]);
         let mut empty: Vec<u8> = vec![];
         par_chunks_mut(&mut empty, 3, 4, |_, _| panic!("no chunks expected"));
+    }
+
+    #[test]
+    fn par_chunks2_mut_lockstep_coverage() {
+        // 7 chunks of (3, 2): last chunk of each is short.
+        let mut a: Vec<u64> = vec![0; 20];
+        let mut b: Vec<u64> = vec![0; 13];
+        par_chunks2_mut(&mut a, 3, &mut b, 2, 4, |ci, ca, cb| {
+            for v in ca.iter_mut() {
+                *v = ci as u64 + 1;
+            }
+            for v in cb.iter_mut() {
+                *v = (ci as u64 + 1) * 100;
+            }
+        });
+        for (i, v) in a.iter().enumerate() {
+            assert_eq!(*v, (i / 3) as u64 + 1, "a[{i}]");
+        }
+        for (i, v) in b.iter().enumerate() {
+            assert_eq!(*v, ((i / 2) as u64 + 1) * 100, "b[{i}]");
+        }
+        // Single-thread path and empty inputs.
+        let mut a: Vec<u8> = vec![0; 4];
+        let mut b: Vec<u8> = vec![0; 2];
+        par_chunks2_mut(&mut a, 2, &mut b, 1, 1, |_ci, ca, cb| {
+            ca.iter_mut().for_each(|v| *v += 1);
+            cb.iter_mut().for_each(|v| *v += 1);
+        });
+        assert_eq!(a, vec![1; 4]);
+        assert_eq!(b, vec![1; 2]);
+        let mut ea: Vec<u8> = vec![];
+        let mut eb: Vec<u8> = vec![];
+        par_chunks2_mut(&mut ea, 1, &mut eb, 1, 4, |_, _, _| panic!("no chunks"));
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk count")]
+    fn par_chunks2_mut_rejects_mismatched_chunk_counts() {
+        let mut a: Vec<u8> = vec![0; 10];
+        let mut b: Vec<u8> = vec![0; 2];
+        par_chunks2_mut(&mut a, 2, &mut b, 1, 2, |_, _, _| {});
     }
 
     #[test]

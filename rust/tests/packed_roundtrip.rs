@@ -1,0 +1,229 @@
+//! Property suite for the compressed-domain path (no artifacts needed):
+//!
+//! 1. pack → unpack → dense is bit-identical to the fused `Sparsifier`'s
+//!    dense output for every paper pattern (2:4, 4:8, 8:16, 16:32 and
+//!    unstructured top-k), including tie-heavy rows;
+//! 2. the parallel packed emitter equals the serial one at any thread
+//!    count, and the packed GEMV agrees with the dense GEMV;
+//! 3. LUT-combinadic ≡ loop-combinadic — every rank at 2:4, sampled ranks
+//!    at 8:16 and 16:32;
+//! 4. the word-level codec's byte streams are bit-identical to the seed
+//!    per-bit path, and corrupted IndexList streams are rejected.
+//!
+//! `tools/ci.sh` runs this file as the packed smoke
+//! (`cargo test -q --test packed_roundtrip`).
+
+use nmsparse::metadata::{
+    decode_combinadic, encode_combinadic, mask_to_word, CombinadicLut, MaskCodec,
+};
+use nmsparse::sparsity::{paper_patterns, PackedNM, Pattern, Scratch, Sparsifier};
+use nmsparse::util::miniprop::{forall_simple, gen_activations, Config};
+use nmsparse::util::prng::Rng;
+use nmsparse::util::tensor::Tensor;
+
+#[test]
+fn pack_unpack_bit_identical_to_sparsifier_all_paper_patterns() {
+    let cfg = Config::default();
+    let patterns = paper_patterns();
+    forall_simple(
+        &cfg,
+        |rng: &mut Rng| {
+            let pattern = *rng.choose(&patterns);
+            let rows = rng.range(1, 6);
+            // All paper patterns have M | 32; gen_activations seeds exact
+            // ±1.0 ties and zeros (the adversarial tie-heavy distribution).
+            let h = 32 * rng.range(1, 5);
+            (gen_activations(rng, rows * h), rows, h, pattern)
+        },
+        |(xs, rows, h, pattern)| {
+            let x = Tensor::from_vec(&[*rows, *h], xs.clone());
+            let sp = Sparsifier::new(*pattern);
+            let mut scratch = Scratch::new();
+            let mut packed = PackedNM::new(*pattern, *h);
+            sp.pack(&x, &mut packed, &mut scratch);
+            let mut dense = x.clone();
+            sp.sparsify(&mut dense, &mut scratch);
+            let mut decoded = Tensor::zeros(&[*rows, *h]);
+            packed.decode_into(&mut decoded, 1);
+            decoded
+                .data
+                .iter()
+                .zip(&dense.data)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+        },
+    );
+}
+
+#[test]
+fn pack_batch_equals_serial_pack_any_thread_count() {
+    let cfg = Config { cases: 48, ..Config::default() };
+    let patterns = paper_patterns();
+    forall_simple(
+        &cfg,
+        |rng: &mut Rng| {
+            let pattern = *rng.choose(&patterns);
+            let rows = rng.range(1, 20);
+            let h = 32 * rng.range(1, 4);
+            let threads = *rng.choose(&[1usize, 2, 3, 7, 16]);
+            (gen_activations(rng, rows * h), rows, h, pattern, threads)
+        },
+        |(xs, rows, h, pattern, threads)| {
+            let x = Tensor::from_vec(&[*rows, *h], xs.clone());
+            let sp = Sparsifier::new(*pattern);
+            let mut scratch = Scratch::new();
+            let mut serial = PackedNM::new(*pattern, *h);
+            sp.pack(&x, &mut serial, &mut scratch);
+            let mut par = PackedNM::new(*pattern, *h);
+            sp.pack_batch(&x, &mut par, *threads);
+            par == serial
+        },
+    );
+}
+
+#[test]
+fn packed_gemv_agrees_with_dense_gemv() {
+    let cfg = Config { cases: 48, ..Config::default() };
+    forall_simple(
+        &cfg,
+        |rng: &mut Rng| {
+            let rows = rng.range(1, 12);
+            let h = 32 * rng.range(1, 4);
+            let xs = gen_activations(rng, rows * h);
+            let v = gen_activations(rng, h);
+            (xs, v, rows, h)
+        },
+        |(xs, v, rows, h)| {
+            let x = Tensor::from_vec(&[*rows, *h], xs.clone());
+            let sp = Sparsifier::new(Pattern::NM { n: 8, m: 16 });
+            let mut scratch = Scratch::new();
+            let mut packed = PackedNM::new(sp.pattern(), *h);
+            sp.pack(&x, &mut packed, &mut scratch);
+            let mut dense = x.clone();
+            sp.sparsify(&mut dense, &mut scratch);
+            let mut out = vec![0.0f32; *rows];
+            packed.matvec_into(v, &mut out, 3);
+            (0..*rows).all(|r| {
+                let expect: f32 = dense.row(r).iter().zip(v).map(|(a, b)| a * b).sum();
+                (out[r] - expect).abs() <= 1e-3 * expect.abs().max(1.0)
+            })
+        },
+    );
+}
+
+#[test]
+fn lut_combinadic_equals_loop_every_rank_2_4() {
+    let lut = CombinadicLut::new(2, 4);
+    assert_eq!(lut.total(), 6);
+    for rank in 0..6u64 {
+        let mask = decode_combinadic(rank as u128, 2, 4).unwrap();
+        let word = mask_to_word(&mask);
+        assert_eq!(lut.decode_word(rank).unwrap(), word);
+        assert_eq!(lut.encode_word(word) as u128, encode_combinadic(&mask));
+        assert_eq!(lut.encode_word(word), rank);
+    }
+}
+
+#[test]
+fn lut_combinadic_equals_loop_sampled_large_patterns() {
+    let cfg = Config { cases: 256, ..Config::default() };
+    let luts = [CombinadicLut::new(8, 16), CombinadicLut::new(16, 32)];
+    forall_simple(
+        &cfg,
+        |rng: &mut Rng| {
+            let which = rng.below(2);
+            (which, rng.next_u64() % luts[which].total())
+        },
+        |&(which, rank)| {
+            let lut = &luts[which];
+            let (n, m) = if which == 0 { (8, 16) } else { (16, 32) };
+            let mask = decode_combinadic(rank as u128, n, m).unwrap();
+            let word = mask_to_word(&mask);
+            lut.decode_word(rank).unwrap() == word
+                && lut.encode_word(word) == rank
+                && lut.encode_word(word) as u128 == encode_combinadic(&mask)
+        },
+    );
+}
+
+#[test]
+fn word_codec_streams_equal_reference_streams() {
+    let cfg = Config { cases: 64, ..Config::default() };
+    forall_simple(
+        &cfg,
+        |rng: &mut Rng| {
+            let (n, m) = *rng.choose(&[(2usize, 4usize), (4, 8), (8, 16), (16, 32)]);
+            let count = rng.range(1, 30);
+            let masks: Vec<Vec<bool>> = (0..count)
+                .map(|_| {
+                    let idx = rng.sample_indices(m, n);
+                    let mut mk = vec![false; m];
+                    for i in idx {
+                        mk[i] = true;
+                    }
+                    mk
+                })
+                .collect();
+            (masks, n, m, rng.below(3))
+        },
+        |(masks, n, m, codec_i)| {
+            let codec =
+                [MaskCodec::Bitmap, MaskCodec::IndexList, MaskCodec::Combinadic][*codec_i];
+            let (ref_bytes, ref_bits) = codec.reference_encode_blocks(masks, *n, *m);
+            let (bytes, bits) = codec.encode_blocks(masks, *n, *m);
+            bytes == ref_bytes
+                && bits == ref_bits
+                && codec.decode_blocks(&bytes, masks.len(), *n, *m).unwrap() == *masks
+        },
+    );
+}
+
+#[test]
+fn corrupted_index_list_rejected() {
+    // Encode [0, 2] then corrupt into [0, 0]: 2-bit indices at 2:4, so the
+    // block byte 0b00_1000 -> 0b00_0000.
+    let masks = vec![vec![true, false, true, false]];
+    let (mut bytes, _) = MaskCodec::IndexList.encode_blocks(&masks, 2, 4);
+    assert_eq!(
+        MaskCodec::IndexList.decode_blocks(&bytes, 1, 2, 4).unwrap(),
+        masks
+    );
+    bytes[0] &= 0b0011; // second index 2 -> 0, duplicating the first
+    let err = MaskCodec::IndexList
+        .decode_blocks(&bytes, 1, 2, 4)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("duplicate index"), "{err}");
+}
+
+#[test]
+fn packed_fidelity_matches_dense_difference() {
+    let cfg = Config { cases: 64, ..Config::default() };
+    let patterns = paper_patterns();
+    forall_simple(
+        &cfg,
+        |rng: &mut Rng| {
+            let pattern = *rng.choose(&patterns);
+            let rows = rng.range(1, 8);
+            let h = 32 * rng.range(1, 4);
+            (gen_activations(rng, rows * h), rows, h, pattern)
+        },
+        |(xs, rows, h, pattern)| {
+            let x = Tensor::from_vec(&[*rows, *h], xs.clone());
+            let sp = Sparsifier::new(*pattern);
+            let mut scratch = Scratch::new();
+            let mut packed = PackedNM::new(*pattern, *h);
+            sp.pack(&x, &mut packed, &mut scratch);
+            let mut dense = x.clone();
+            sp.sparsify(&mut dense, &mut scratch);
+            let denom = x.l2().max(1e-12);
+            let diff = x
+                .data
+                .iter()
+                .zip(&dense.data)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            packed.fidelity_error_vs(&x).to_bits() == (diff / denom).to_bits()
+        },
+    );
+}

@@ -1,0 +1,157 @@
+#!/usr/bin/env python3
+"""Schema check for the machine-readable bench dumps (BENCH_*.json).
+
+Three emitters write these files (see DESIGN.md §3):
+
+- rust/benches/substrate.rs -> BENCH_sparsity.json, BENCH_packed.json
+- rust/benches/tables.rs    -> BENCH_sparsify_overhead.json
+
+`nmsparse table table6` and `examples/hw_breakeven.rs` consume them, so a
+malformed dump silently degrades the measured columns back to the analytic
+fallbacks. This script fails CI loudly instead. Files that have not been
+produced yet are fine (benches are optional in the tier-1 gate); files
+that exist but violate their schema are not.
+
+Usage: tools/check_bench_json.py [dir ...]   (default: repo root and rust/)
+"""
+
+import json
+import sys
+from pathlib import Path
+
+
+def err(path, msg):
+    print(f"check_bench_json: {path}: {msg}", file=sys.stderr)
+    return 1
+
+
+def require(obj, key, types, path, ctx):
+    if key not in obj:
+        return err(path, f"{ctx}: missing required key '{key}'")
+    if not isinstance(obj[key], types):
+        return err(path, f"{ctx}: key '{key}' has type {type(obj[key]).__name__}")
+    return 0
+
+
+def check_patterns(doc, path, required, optional=()):
+    """Common shape: {"patterns": {"<pattern>": {required...}}}, non-empty."""
+    bad = require(doc, "patterns", dict, path, "top level")
+    if bad:
+        return bad
+    if not doc["patterns"]:
+        return err(path, "'patterns' is empty")
+    for name, entry in doc["patterns"].items():
+        if not isinstance(entry, dict):
+            return err(path, f"pattern '{name}' is not an object")
+        for key in required:
+            bad |= require(entry, key, (int, float), path, f"pattern '{name}'")
+        for key in optional:
+            if key in entry and not isinstance(entry[key], (int, float)):
+                bad |= err(path, f"pattern '{name}': optional key '{key}' not numeric")
+    return bad
+
+
+def check_sparsity(doc, path):
+    return check_patterns(
+        doc,
+        path,
+        required=(
+            "seed_rows_per_sec",
+            "fused_row_rows_per_sec",
+            "fused_batch_rows_per_sec",
+            "fused_row_speedup_vs_seed",
+            "fused_batch_speedup_vs_seed",
+        ),
+    )
+
+
+def check_overhead(doc, path):
+    bad = check_patterns(doc, path, required=("overhead_frac",),
+                         optional=("sparsify_s_per_forward",))
+    for name, entry in doc.get("patterns", {}).items():
+        frac = entry.get("overhead_frac")
+        if isinstance(frac, (int, float)) and frac < 0:
+            bad |= err(path, f"pattern '{name}': negative overhead_frac {frac}")
+    return bad
+
+
+def check_packed(doc, path):
+    bad = check_patterns(
+        doc,
+        path,
+        required=(
+            "dense_bytes_per_row",
+            "packed_bytes_per_row",
+            "measured_bandwidth_reduction",
+            "pack_gbps",
+            "unpack_gbps",
+            "packed_gemv_rows_per_sec",
+            "dense_gemv_rows_per_sec",
+            "packed_gemv_speedup",
+        ),
+        optional=(
+            "pack_batch_gbps",
+            "codec_word_blocks_per_sec",
+            "codec_bit_blocks_per_sec",
+            "codec_word_speedup",
+        ),
+    )
+    if bad:
+        return bad
+    for name, entry in doc["patterns"].items():
+        dense = entry["dense_bytes_per_row"]
+        packed = entry["packed_bytes_per_row"]
+        r = entry["measured_bandwidth_reduction"]
+        if packed <= 0 or dense <= 0:
+            bad |= err(path, f"pattern '{name}': non-positive bytes/row")
+        elif abs(r - dense / packed) > 1e-6 * max(r, 1.0):
+            bad |= err(
+                path,
+                f"pattern '{name}': measured_bandwidth_reduction {r} != "
+                f"dense/packed {dense / packed}",
+            )
+    # The compressed stream must actually be smaller than dense somewhere.
+    if not any(e["packed_bytes_per_row"] < e["dense_bytes_per_row"]
+               for e in doc["patterns"].values()):
+        bad |= err(path, "no pattern shows packed < dense bytes/row")
+    return bad
+
+
+CHECKERS = {
+    "BENCH_sparsity.json": check_sparsity,
+    "BENCH_sparsify_overhead.json": check_overhead,
+    "BENCH_packed.json": check_packed,
+}
+
+
+def main(argv):
+    roots = [Path(p) for p in argv[1:]] or [Path("."), Path("rust")]
+    seen, bad = 0, 0
+    visited = set()
+    for root in roots:
+        if not root.is_dir():
+            continue
+        for path in sorted(root.glob("BENCH_*.json")):
+            if path.resolve() in visited:
+                continue
+            visited.add(path.resolve())
+            try:
+                doc = json.loads(path.read_text())
+            except (OSError, json.JSONDecodeError) as e:
+                bad |= err(path, f"unreadable: {e}")
+                continue
+            checker = CHECKERS.get(path.name)
+            if checker is None:
+                print(f"check_bench_json: {path}: unknown BENCH file (no schema), skipping")
+                continue
+            seen += 1
+            bad |= checker(doc, path)
+    if bad:
+        return 1
+    print(f"check_bench_json: {seen} bench dump(s) OK"
+          + ("" if seen else " (none present — benches not run, fine)"))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -6,6 +6,7 @@
 #
 set -euo pipefail
 cd "$(dirname "$0")/.."
+ROOT="$(pwd)"
 
 # The crate sources live under rust/; tolerate a manifest at either level.
 if [ -f rust/Cargo.toml ]; then
@@ -16,6 +17,19 @@ elif [ ! -f Cargo.toml ]; then
 fi
 
 cargo build --release
+# Packed-stream smoke first, as a fast-fail: the compressed-domain
+# invariants (pack->unpack bit-identity, LUT==loop combinadic, word==bit
+# codec streams) gate everything downstream, and this one test binary
+# finishes long before the full suite below (which runs it again as part
+# of `cargo test`; the duplicate run is a few property suites, cheap).
+cargo test -q --test packed_roundtrip
 cargo test -q
 cargo bench --no-run
+# Any bench dumps lying around must match the schemas table6/hw_breakeven
+# consume (absent files are fine — benches are optional here).
+if command -v python3 >/dev/null 2>&1; then
+  python3 "$ROOT/tools/check_bench_json.py" "$ROOT" "$ROOT/rust" "$(pwd)"
+else
+  echo "ci: python3 not found — skipping BENCH_*.json schema check"
+fi
 echo "ci: tier-1 gate green"
