@@ -64,7 +64,8 @@ fn main() -> Result<()> {
     let mut drops = Vec::new();
     for key in ["2:4", "4:8", "8:16", "16:32", "u50"] {
         let d = ctx.drop_core(&MethodConfig::act(Pattern::parse(key)?))?;
-        println!("  {key:>6}: drop {d:.2}%  (paper: {})", nmsparse::tables::paper_ref::fig2_drop(key));
+        let paper = nmsparse::tables::paper_ref::fig2_drop(key);
+        println!("  {key:>6}: drop {d:.2}%  (paper: {paper})");
         drops.push((key, d));
     }
 

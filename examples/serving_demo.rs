@@ -1,7 +1,9 @@
-//! Serving demo: spawn the `nmsparse serve` coordinator as a child process,
-//! drive it as a client over the TCP JSON protocol, and report per-request
-//! latencies — the miniature of a production deployment of the sparse
-//! model.
+//! Serving demo: spawn the `nmsparse serve` coordinator (two engine
+//! replicas) as a child process, drive it as a client over the TCP JSON
+//! protocol, and report per-request latencies plus the server's own
+//! `{"op":"stats"}` view (p50/p95/p99 histogram, batch occupancy,
+//! rejection rate) — the miniature of a production deployment of the
+//! sparse model. For sustained load curves use `nmsparse loadgen`.
 //!
 //! ```bash
 //! make build && cargo run --release --offline --example serving_demo
@@ -51,9 +53,12 @@ fn roundtrip(
 
 fn main() -> Result<()> {
     let bin = std::env::var("NMSPARSE_BIN").unwrap_or("target/release/nmsparse".into());
-    println!("spawning {bin} serve on {ADDR} (8:16 / S-PTS)...");
+    println!("spawning {bin} serve on {ADDR} (8:16 / S-PTS, 2 replicas)...");
     let mut child = Command::new(&bin)
-        .args(["serve", "--addr", ADDR, "--pattern", "8:16", "--method", "S-PTS"])
+        .args([
+            "serve", "--addr", ADDR, "--pattern", "8:16", "--method", "S-PTS",
+            "--replicas", "2",
+        ])
         .stdout(Stdio::inherit())
         .stderr(Stdio::inherit())
         .spawn()
@@ -117,6 +122,21 @@ fn main() -> Result<()> {
             );
         }
         println!("generate latency: {}", TimingStats::from_durations(&gen_lat).summary());
+
+        // The server's own measured view of the run.
+        let (stats, _) = roundtrip(&mut reader, &mut writer, r#"{"op":"stats"}"#)?;
+        let lat = stats.req("latency_ms")?;
+        let ms = |j: &json::Json, k: &str| j.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0);
+        println!(
+            "server stats: served {} (rejected {}) | p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms | \
+             occupancy {:.2}",
+            ms(&stats, "served"),
+            ms(&stats, "rejected"),
+            ms(lat, "p50"),
+            ms(lat, "p95"),
+            ms(lat, "p99"),
+            ms(&stats, "batch_occupancy"),
+        );
         Ok(())
     })();
 

@@ -1,8 +1,13 @@
 //! Serving-layer benchmarks: batcher/scheduler/packing logic (pure rust)
-//! — the coordinator must stay negligible next to the PJRT executable.
+//! — the coordinator must stay negligible next to the PJRT executable —
+//! plus an end-to-end multi-replica `ServerCore` run through the same
+//! loadgen harness `nmsparse loadgen` uses, dumped to
+//! `BENCH_serving.json` for `nmsparse table serving` and the CI schema
+//! gate.
 
 use nmsparse::coordinator::batcher::{pack_rows, BatchPolicy, Batcher};
 use nmsparse::coordinator::scheduler::{SchedPolicy, Scheduler, Work};
+use nmsparse::launcher::loadgen::{self, BackendChoice, LoadgenConfig, Mode};
 use nmsparse::util::bench::BenchSuite;
 use nmsparse::util::prng::Rng;
 use std::time::Duration;
@@ -94,6 +99,41 @@ fn main() {
                 std::hint::black_box(&s);
             },
         );
+    }
+
+    // ---- end-to-end ServerCore under load (BENCH_serving.json) ----
+    //
+    // Reuses the loadgen harness: 2 synthetic replicas with a simulated
+    // per-forward cost, closed-loop clients, server-side latency
+    // histogram. Skipped under --filter unless it matches.
+    {
+        let cfg = LoadgenConfig {
+            replicas: 2,
+            queue_cap: 64,
+            max_requests: 512,
+            concurrency: 16,
+            rate_rps: 0.0,
+            mode: Mode::Mixed,
+            max_new: 8,
+            max_wait: Duration::from_millis(2),
+            seed: 7,
+            backend: BackendChoice::Synthetic {
+                batch: 16,
+                forward_cost: Duration::from_micros(150),
+            },
+        };
+        let name = "server_core/closed-loop 512 mixed x2 replicas (reqs)";
+        let mut last = None;
+        suite.bench_with_items(name, Some(cfg.max_requests as f64), || {
+            last = Some(loadgen::run(&cfg).expect("loadgen run"));
+        });
+        if let Some(report) = last {
+            println!("server_core: {}", report.summary());
+            match loadgen::write_bench_json(&report, std::path::Path::new("BENCH_serving.json")) {
+                Ok(()) => println!("wrote BENCH_serving.json"),
+                Err(e) => eprintln!("could not write BENCH_serving.json: {e}"),
+            }
+        }
     }
 
     suite.finish();

@@ -133,13 +133,24 @@ pub fn pack_rows(rows: &[Vec<u32>], batch: usize, seq: usize) -> Vec<PackedBatch
 }
 
 /// How much of the packed compute is useful — diagnostics for the batching
-/// policy (padding waste).
+/// policy (padding waste). Degenerate inputs (no batches, or a zero batch
+/// dimension, which `pack_rows` itself guards with `batch.max(1)`) report
+/// 1.0 instead of dividing by zero.
 pub fn packing_efficiency(batches: &[PackedBatch], batch: usize) -> f64 {
-    if batches.is_empty() {
+    let used: usize = batches.iter().map(|b| b.rows).sum();
+    occupancy(used, batches.len(), batch)
+}
+
+/// The `packing_efficiency` formula over raw counts: `rows` useful rows
+/// dispatched across `batches` fixed-shape launches of `capacity` slots.
+/// Used by [`crate::coordinator::server::ServerCore`] to report batch
+/// occupancy without materializing `PackedBatch`es. Returns 1.0 when no
+/// batch was dispatched (nothing was wasted).
+pub fn occupancy(rows: usize, batches: usize, capacity: usize) -> f64 {
+    if batches == 0 {
         return 1.0;
     }
-    let used: usize = batches.iter().map(|b| b.rows).sum();
-    used as f64 / (batches.len() * batch) as f64
+    rows as f64 / (batches * capacity.max(1)) as f64
 }
 
 #[cfg(test)]
@@ -307,5 +318,20 @@ mod tests {
         let packed = pack_rows(&rows, 4, 8);
         // 6 rows over 2 batches of 4 = 0.75.
         assert!((packing_efficiency(&packed, 4) - 0.75).abs() < 1e-12);
+        assert_eq!(packing_efficiency(&[], 4), 1.0);
+    }
+
+    #[test]
+    fn efficiency_degenerate_batch_dim() {
+        // batch == 0 used to divide by zero (pack_rows guards with
+        // batch.max(1) but the efficiency denominator did not).
+        let rows = vec![vec![1u32]; 3];
+        let packed = pack_rows(&rows, 0, 8);
+        let e = packing_efficiency(&packed, 0);
+        assert!(e.is_finite());
+        assert!((e - 1.0).abs() < 1e-12); // 3 rows over 3 batches of max(0,1)=1 slot
+        assert_eq!(occupancy(0, 0, 16), 1.0);
+        assert!((occupancy(12, 1, 16) - 0.75).abs() < 1e-12);
+        assert!(occupancy(5, 5, 0).is_finite());
     }
 }

@@ -495,7 +495,9 @@ mod tests {
         assert!((pruned.get("layers.0.q.w").unwrap().zero_fraction() - 0.5).abs() < 0.1);
         let q = MethodConfig::quant8();
         let quanted = q.transformed_weights(&w).unwrap();
-        assert!(quanted.get("layers.0.q.w").unwrap().max_abs_diff(w.get("layers.0.q.w").unwrap()) > 0.0);
+        let qdiff =
+            quanted.get("layers.0.q.w").unwrap().max_abs_diff(w.get("layers.0.q.w").unwrap());
+        assert!(qdiff > 0.0);
         // None leaves weights untouched.
         let act = MethodConfig::dense();
         assert_eq!(

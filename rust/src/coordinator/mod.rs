@@ -5,6 +5,9 @@
 //! - [`pool`]: compiled-variant + bound-engine caches;
 //! - [`batcher`]: dynamic batching and fixed-shape packing;
 //! - [`scheduler`]: continuous batching of mixed score/generate traffic;
+//! - [`server`]: the socket-free multi-replica serving core (bounded
+//!   admission, session-affine routing, deadline-driven batching,
+//!   per-request latency stats) behind `nmsparse serve` / `loadgen`;
 //! - [`Coordinator`]: the high-level API the eval harness, tables, server
 //!   and examples use — score rows, measure perplexity, greedy-generate.
 
@@ -12,6 +15,7 @@ pub mod batcher;
 pub mod methods;
 pub mod pool;
 pub mod scheduler;
+pub mod server;
 
 use crate::coordinator::batcher::pack_rows;
 use crate::coordinator::methods::MethodConfig;
@@ -108,7 +112,11 @@ impl Coordinator {
         let mut spans: Vec<(usize, usize)> = Vec::with_capacity(rows.len());
         for (row, (s, e)) in rows {
             anyhow::ensure!(*s >= 1, "span must start at >= 1 (token 0 has no context)");
-            anyhow::ensure!(*e <= row.len() && s < e, "bad span ({s},{e}) for row len {}", row.len());
+            anyhow::ensure!(
+                *e <= row.len() && s < e,
+                "bad span ({s},{e}) for row len {}",
+                row.len()
+            );
             if row.len() > seq {
                 let cut = row.len() - seq;
                 anyhow::ensure!(

@@ -4,7 +4,10 @@
 //! ~11 MB of weights. Both are cached so table harnesses that sweep dozens
 //! of (pattern × method) cells pay each cost once. Single-threaded by
 //! design: PJRT wrapper types hold raw pointers (not `Send`), and XLA
-//! already parallelizes execution internally.
+//! already parallelizes execution internally. Multi-replica serving
+//! therefore opens one pool *per replica thread* — see
+//! [`crate::coordinator::server::CoordinatorBackend`], whose factory runs
+//! inside each worker so no `Rc<Engine>` ever crosses a thread boundary.
 
 use crate::coordinator::methods::MethodConfig;
 use crate::runtime::{Engine, Manifest, Runtime, Variant};

@@ -1,0 +1,803 @@
+//! Multi-replica serving core — the socket-free engine room behind
+//! `nmsparse serve` and `nmsparse loadgen`.
+//!
+//! The seed server was one engine thread with unbounded admission and a
+//! 2 ms busy-poll idle loop. [`ServerCore`] scales that loop to N engine
+//! replicas and makes its behavior measurable:
+//!
+//! - **Replica-per-thread.** PJRT handles are not `Send`
+//!   (`EnginePool::engine` returns `Rc<Engine>`), so each worker thread
+//!   builds its *own* backend via the caller's factory — for the real
+//!   path that means each replica opens its own `Coordinator`/engine
+//!   pool ([`CoordinatorBackend`]); tests and CI use the artifact-free
+//!   [`SyntheticBackend`].
+//! - **Session-affine routing.** [`ServerHandle::submit_with_key`] pins a
+//!   session key (e.g. one TCP connection) to a replica, so decode
+//!   sessions and their follow-up traffic stay on the engine that holds
+//!   them; keyless traffic goes to the least-loaded replica.
+//! - **Bounded admission.** Each replica admits at most `queue_cap`
+//!   in-flight requests; beyond that [`SubmitError::Overloaded`] is
+//!   returned *synchronously* and the protocol layer replies
+//!   `{"ok":false,"error":"overloaded"}` instead of queueing without
+//!   bound.
+//! - **Deadline-driven waits.** Requests stage in a
+//!   [`Batcher`]; an idle replica blocks on its channel until
+//!   [`Batcher::next_deadline`] (or a new request) instead of the seed's
+//!   fixed 2 ms sleep — full batches dispatch immediately, partial
+//!   batches after `max_wait`.
+//! - **Graceful drain.** [`ServerCore::shutdown`] stops admission, wakes
+//!   every replica, and joins them only after all admitted work has been
+//!   answered — no ticket is left dangling.
+//! - **Measured, not asserted.** Every request's submit→reply latency is
+//!   recorded into a [`Histogram`] (p50/p95/p99), and batch occupancy
+//!   uses the `packing_efficiency` formula over dispatched rows vs
+//!   slots. `{"op":"stats"}` and `BENCH_serving.json` read these.
+
+use crate::coordinator::batcher::{occupancy, BatchPolicy, Batcher};
+use crate::coordinator::methods::MethodConfig;
+use crate::coordinator::scheduler::{SchedPolicy, Scheduler, Work};
+use crate::coordinator::Coordinator;
+use crate::util::stats::Histogram;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::fmt;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------- requests
+
+/// A parsed request, ready for a replica's scheduler.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Score the continuation span `[start, end)` of `tokens`.
+    Score { tokens: Vec<u32>, span: (usize, usize) },
+    /// Greedy-generate up to `max_new` tokens after the prompt.
+    Generate { tokens: Vec<u32>, max_new: usize },
+}
+
+/// A terminal reply for one request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Score { score: f64 },
+    Generate { tokens: Vec<u32> },
+    Error { message: String },
+}
+
+/// Why a submit was refused before reaching a replica.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The replica's `queue_cap` is full — shed load instead of queueing.
+    Overloaded { replica: usize },
+    /// The core is shutting down (or the replica is gone).
+    Closed,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Overloaded { .. } => write!(f, "overloaded"),
+            SubmitError::Closed => write!(f, "shutting down"),
+        }
+    }
+}
+
+/// Handle to one in-flight request: which replica took it, and where its
+/// terminal [`Response`] will arrive.
+pub struct Ticket {
+    pub replica: usize,
+    rx: mpsc::Receiver<Response>,
+}
+
+impl Ticket {
+    /// Block until the reply arrives. `None` only if the replica died
+    /// without answering (never happens on the drain path).
+    pub fn recv(&self) -> Option<Response> {
+        self.rx.recv().ok()
+    }
+
+    pub fn recv_timeout(&self, d: Duration) -> Option<Response> {
+        self.rx.recv_timeout(d).ok()
+    }
+
+    pub fn try_recv(&self) -> Option<Response> {
+        self.rx.try_recv().ok()
+    }
+}
+
+// ---------------------------------------------------------------- backends
+
+/// What one replica thread needs from its engine. Implementations own all
+/// non-`Send` state (they are *built inside* the replica thread by the
+/// factory passed to [`ServerCore::start`]).
+pub trait ReplicaBackend {
+    /// Fixed batch capacity — scheduler slots per dispatch.
+    fn batch(&self) -> usize;
+
+    /// Score each `(tokens, span)` row: sum of continuation logprobs.
+    fn score_rows(&mut self, rows: &[(Vec<u32>, (usize, usize))]) -> Result<Vec<f64>>;
+
+    /// One greedy decode step per prompt; `None` means the context is
+    /// exhausted and the session must end.
+    fn decode_step(&mut self, prompts: &[&[u32]]) -> Result<Vec<Option<u32>>>;
+
+    /// Tokens that terminate a generate session.
+    fn stop_tokens(&self) -> Vec<u32>;
+}
+
+/// The production backend: one [`Coordinator`] (engine pool, PJRT client,
+/// bound engine) owned wholesale by one replica thread.
+pub struct CoordinatorBackend {
+    coord: Coordinator,
+    cfg: MethodConfig,
+    stop: Vec<u32>,
+    batch: usize,
+}
+
+impl CoordinatorBackend {
+    /// Open the artifacts directory and bind the configured engine before
+    /// taking traffic. Call this from inside the replica factory — the
+    /// pool's PJRT handles must never cross threads.
+    pub fn open(artifacts: &Path, cfg: MethodConfig, stop: Vec<u32>) -> Result<CoordinatorBackend> {
+        let coord = Coordinator::open(artifacts)?;
+        let batch = {
+            let engine = coord.pool.engine(&cfg)?;
+            engine.dims().batch
+        };
+        Ok(CoordinatorBackend { coord, cfg, stop, batch })
+    }
+}
+
+impl ReplicaBackend for CoordinatorBackend {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn score_rows(&mut self, rows: &[(Vec<u32>, (usize, usize))]) -> Result<Vec<f64>> {
+        self.coord.score_rows(&self.cfg, rows)
+    }
+
+    fn decode_step(&mut self, prompts: &[&[u32]]) -> Result<Vec<Option<u32>>> {
+        let outs = self.coord.generate_refs(&self.cfg, prompts, 1, &self.stop)?;
+        Ok(outs.into_iter().map(|o| o.into_iter().next()).collect())
+    }
+
+    fn stop_tokens(&self) -> Vec<u32> {
+        self.stop.clone()
+    }
+}
+
+/// Deterministic artifact-free backend for tests, benches and the CI
+/// loadgen smoke: scores and tokens are pure functions of the input, and
+/// an optional per-forward sleep models engine latency (paid once per
+/// dispatched batch, so batching amortizes it exactly like the real
+/// engine would).
+pub struct SyntheticBackend {
+    batch: usize,
+    forward_cost: Duration,
+}
+
+impl SyntheticBackend {
+    /// The stop token [`SyntheticBackend::next_token`] occasionally emits.
+    pub const STOP: u32 = 1;
+
+    pub fn new(batch: usize, forward_cost: Duration) -> SyntheticBackend {
+        SyntheticBackend { batch: batch.max(1), forward_cost }
+    }
+
+    /// The deterministic score formula — loopback tests assert against it.
+    pub fn score_of(tokens: &[u32], span: (usize, usize)) -> f64 {
+        let e = span.1.min(tokens.len());
+        let s = span.0.min(e);
+        let sum: u64 = tokens[s..e].iter().map(|t| *t as u64).sum();
+        -((sum % 1000) as f64) / 100.0 - tokens.len() as f64 * 0.01
+    }
+
+    /// Deterministic next token (FNV over the prompt), sometimes the stop
+    /// token so sessions end by stop as well as by budget.
+    pub fn next_token(prompt: &[u32]) -> u32 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for t in prompt {
+            h = (h ^ *t as u64).wrapping_mul(0x0100_0000_01b3);
+        }
+        let tok = (h % 96) as u32 + 2;
+        if tok % 13 == 0 {
+            Self::STOP
+        } else {
+            tok
+        }
+    }
+
+    fn forward(&self) {
+        if !self.forward_cost.is_zero() {
+            std::thread::sleep(self.forward_cost);
+        }
+    }
+}
+
+impl ReplicaBackend for SyntheticBackend {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn score_rows(&mut self, rows: &[(Vec<u32>, (usize, usize))]) -> Result<Vec<f64>> {
+        self.forward();
+        Ok(rows.iter().map(|(t, s)| Self::score_of(t, *s)).collect())
+    }
+
+    fn decode_step(&mut self, prompts: &[&[u32]]) -> Result<Vec<Option<u32>>> {
+        self.forward();
+        Ok(prompts.iter().map(|p| Some(Self::next_token(p))).collect())
+    }
+
+    fn stop_tokens(&self) -> Vec<u32> {
+        vec![Self::STOP]
+    }
+}
+
+// ---------------------------------------------------------------- stats
+
+/// Per-replica serving counters + latency distribution. Snapshots are
+/// cheap clones; the aggregate merge is exact (see [`Histogram::merge`]).
+#[derive(Clone, Debug, Default)]
+pub struct ReplicaStats {
+    /// Scheduler batch capacity (0 until the replica reports in).
+    pub capacity: usize,
+    /// Requests admitted past the queue-depth gate.
+    pub submitted: u64,
+    /// Requests answered with a terminal response (ok or error). Generate
+    /// sessions count exactly once, at completion, whether or not the
+    /// client still listens — `--max-requests` stays deterministic under
+    /// mixed workloads.
+    pub served: u64,
+    /// Subset of `served` answered with `Response::Error`.
+    pub errors: u64,
+    /// Requests refused at admission (queue full).
+    pub rejected: u64,
+    /// Engine dispatches (score batches + decode steps).
+    pub batches: u64,
+    /// Useful rows across those dispatches.
+    pub batch_rows: u64,
+    /// Available slots across those dispatches (`batches × capacity`).
+    pub batch_slots: u64,
+    /// Submit→reply latency of every served request.
+    pub latency: Histogram,
+}
+
+/// Aggregate view over all replicas.
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub replicas: usize,
+    pub submitted: u64,
+    pub served: u64,
+    pub errors: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub batch_rows: u64,
+    pub batch_slots: u64,
+    pub latency: Histogram,
+}
+
+impl ServerStats {
+    /// Fraction of dispatched batch slots that carried real rows — the
+    /// `packing_efficiency` formula over the serving run.
+    pub fn batch_occupancy(&self) -> f64 {
+        occupancy(self.batch_rows as usize, self.batch_slots as usize, 1)
+    }
+
+    /// Rejected / (admitted + rejected).
+    pub fn rejection_rate(&self) -> f64 {
+        let offered = self.submitted + self.rejected;
+        if offered == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / offered as f64
+        }
+    }
+
+    /// All requests that reached a terminal outcome (served or shed).
+    pub fn completed(&self) -> u64 {
+        self.served + self.rejected
+    }
+}
+
+// ---------------------------------------------------------------- core
+
+/// Tuning for [`ServerCore::start`].
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Engine replicas (worker threads), each with its own backend.
+    pub replicas: usize,
+    /// Max in-flight requests per replica before admission sheds load.
+    pub queue_cap: usize,
+    /// Max time a staged request waits for its batch to fill.
+    pub max_wait: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { replicas: 1, queue_cap: 64, max_wait: Duration::from_millis(5) }
+    }
+}
+
+enum Envelope {
+    Req { req: Request, reply: mpsc::Sender<Response>, t0: Instant },
+    /// Wakes a replica blocked on its channel (shutdown path).
+    Wake,
+}
+
+struct Shared {
+    depth: Vec<AtomicUsize>,
+    stats: Vec<Mutex<ReplicaStats>>,
+    shutdown: AtomicBool,
+}
+
+/// Cloneable submitter — IO threads and load generators each hold one.
+#[derive(Clone)]
+pub struct ServerHandle {
+    txs: Vec<mpsc::Sender<Envelope>>,
+    shared: Arc<Shared>,
+    rr: Arc<AtomicUsize>,
+    queue_cap: usize,
+}
+
+impl ServerHandle {
+    pub fn replicas(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Submit with least-loaded routing.
+    pub fn submit(&self, req: Request) -> Result<Ticket, SubmitError> {
+        self.submit_with_key(None, req)
+    }
+
+    /// Submit with optional session affinity: a `Some(key)` always routes
+    /// to `key % replicas`, so one session's traffic stays on one engine.
+    pub fn submit_with_key(&self, key: Option<u64>, req: Request) -> Result<Ticket, SubmitError> {
+        if self.shared.shutdown.load(Ordering::Acquire) {
+            return Err(SubmitError::Closed);
+        }
+        let n = self.txs.len();
+        let replica = match key {
+            Some(k) => (k % n as u64) as usize,
+            None => self.least_loaded(),
+        };
+        // Exact bounded admission: depth counts everything in flight on
+        // the replica (staged + scheduled), decremented on terminal reply.
+        let admitted = self.shared.depth[replica]
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |d| {
+                if d < self.queue_cap {
+                    Some(d + 1)
+                } else {
+                    None
+                }
+            })
+            .is_ok();
+        if !admitted {
+            self.shared.stats[replica].lock().unwrap().rejected += 1;
+            return Err(SubmitError::Overloaded { replica });
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let env = Envelope::Req { req, reply: reply_tx, t0: Instant::now() };
+        if self.txs[replica].send(env).is_err() {
+            self.shared.depth[replica].fetch_sub(1, Ordering::AcqRel);
+            return Err(SubmitError::Closed);
+        }
+        self.shared.stats[replica].lock().unwrap().submitted += 1;
+        Ok(Ticket { replica, rx: reply_rx })
+    }
+
+    fn least_loaded(&self) -> usize {
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % self.txs.len();
+        let mut best = start;
+        let mut best_depth = usize::MAX;
+        for i in 0..self.txs.len() {
+            let r = (start + i) % self.txs.len();
+            let d = self.shared.depth[r].load(Ordering::Relaxed);
+            if d < best_depth {
+                best = r;
+                best_depth = d;
+            }
+        }
+        best
+    }
+
+    /// In-flight depth of one replica.
+    pub fn depth(&self, replica: usize) -> usize {
+        self.shared.depth[replica].load(Ordering::Relaxed)
+    }
+
+    /// Snapshot every replica's counters.
+    pub fn replica_stats(&self) -> Vec<ReplicaStats> {
+        self.shared.stats.iter().map(|m| m.lock().unwrap().clone()).collect()
+    }
+
+    /// Aggregate snapshot across replicas (exact histogram merge).
+    pub fn stats(&self) -> ServerStats {
+        let mut agg = ServerStats { replicas: self.txs.len(), ..Default::default() };
+        for s in self.replica_stats() {
+            agg.submitted += s.submitted;
+            agg.served += s.served;
+            agg.errors += s.errors;
+            agg.rejected += s.rejected;
+            agg.batches += s.batches;
+            agg.batch_rows += s.batch_rows;
+            agg.batch_slots += s.batch_slots;
+            agg.latency.merge(&s.latency);
+        }
+        agg
+    }
+
+    /// Requests with a terminal outcome so far (served + rejected).
+    pub fn completed(&self) -> u64 {
+        let s = self.stats();
+        s.completed()
+    }
+}
+
+/// The multi-replica serving core. See the module docs for the design.
+pub struct ServerCore {
+    handle: ServerHandle,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ServerCore {
+    /// Spawn `cfg.replicas` worker threads. `factory(r)` runs *inside*
+    /// thread `r` to build its backend (PJRT state never crosses
+    /// threads); `start` waits until every replica is ready and fails
+    /// fast if any factory errors.
+    pub fn start<B, F>(cfg: ServerConfig, factory: F) -> Result<ServerCore>
+    where
+        B: ReplicaBackend + 'static,
+        F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+    {
+        let n = cfg.replicas.max(1);
+        let queue_cap = cfg.queue_cap.max(1);
+        let shared = Arc::new(Shared {
+            depth: (0..n).map(|_| AtomicUsize::new(0)).collect(),
+            stats: (0..n).map(|_| Mutex::new(ReplicaStats::default())).collect(),
+            shutdown: AtomicBool::new(false),
+        });
+        let factory = Arc::new(factory);
+        let mut txs = Vec::with_capacity(n);
+        let mut workers = Vec::with_capacity(n);
+        let mut ready_rxs = Vec::with_capacity(n);
+        for r in 0..n {
+            let (tx, rx) = mpsc::channel::<Envelope>();
+            let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
+            let shared_r = Arc::clone(&shared);
+            let factory_r = Arc::clone(&factory);
+            let max_wait = cfg.max_wait;
+            let worker = std::thread::Builder::new()
+                .name(format!("nmsparse-replica-{r}"))
+                .spawn(move || {
+                    let backend = match factory_r(r) {
+                        Ok(b) => {
+                            ready_tx.send(Ok(())).ok();
+                            b
+                        }
+                        Err(e) => {
+                            ready_tx.send(Err(format!("{e:#}"))).ok();
+                            return;
+                        }
+                    };
+                    run_replica(r, backend, rx, shared_r, max_wait);
+                })?;
+            txs.push(tx);
+            workers.push(worker);
+            ready_rxs.push(ready_rx);
+        }
+        let core = ServerCore {
+            handle: ServerHandle { txs, shared, rr: Arc::new(AtomicUsize::new(0)), queue_cap },
+            workers,
+        };
+        for (r, ready) in ready_rxs.into_iter().enumerate() {
+            match ready.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    core.stop_workers();
+                    anyhow::bail!("replica {r} failed to start: {e}");
+                }
+                Err(_) => {
+                    core.stop_workers();
+                    anyhow::bail!("replica {r} died during startup");
+                }
+            }
+        }
+        Ok(core)
+    }
+
+    /// A cloneable submitter for IO threads / load generators.
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.handle.replicas()
+    }
+
+    pub fn submit(&self, req: Request) -> Result<Ticket, SubmitError> {
+        self.handle.submit(req)
+    }
+
+    pub fn submit_with_key(&self, key: Option<u64>, req: Request) -> Result<Ticket, SubmitError> {
+        self.handle.submit_with_key(key, req)
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        self.handle.stats()
+    }
+
+    pub fn replica_stats(&self) -> Vec<ReplicaStats> {
+        self.handle.replica_stats()
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.handle.completed()
+    }
+
+    fn stop_workers(&self) {
+        self.handle.shared.shutdown.store(true, Ordering::Release);
+        for tx in &self.handle.txs {
+            tx.send(Envelope::Wake).ok();
+        }
+    }
+
+    /// Graceful drain: stop admitting, wake every replica, and join them
+    /// once all already-admitted work has been answered. Returns the
+    /// final aggregate stats.
+    pub fn shutdown(mut self) -> ServerStats {
+        self.stop_workers();
+        for w in self.workers.drain(..) {
+            w.join().ok();
+        }
+        self.handle.stats()
+    }
+}
+
+impl Drop for ServerCore {
+    fn drop(&mut self) {
+        if !self.workers.is_empty() {
+            self.stop_workers();
+            for w in self.workers.drain(..) {
+                w.join().ok();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- worker
+
+struct PendingReply {
+    tx: mpsc::Sender<Response>,
+    t0: Instant,
+}
+
+/// One replica's engine loop: stage → flush-by-deadline → dispatch.
+fn run_replica<B: ReplicaBackend>(
+    r: usize,
+    mut backend: B,
+    rx: mpsc::Receiver<Envelope>,
+    shared: Arc<Shared>,
+    max_wait: Duration,
+) {
+    let capacity = backend.batch().max(1);
+    let stop = backend.stop_tokens();
+    shared.stats[r].lock().unwrap().capacity = capacity;
+    let mut sched = Scheduler::new(capacity, SchedPolicy::default());
+    let mut admit: Batcher<Envelope> = Batcher::new(BatchPolicy { capacity, max_wait });
+    let mut flush_buf: Vec<Envelope> = Vec::new();
+    let mut score_replies: HashMap<u64, PendingReply> = HashMap::new();
+    let mut gen_replies: HashMap<u64, PendingReply> = HashMap::new();
+    let mut disconnected = false;
+
+    let finish = |shared: &Shared, pending: PendingReply, resp: Response| {
+        let is_err = matches!(resp, Response::Error { .. });
+        pending.tx.send(resp).ok(); // client may be gone; still count
+        shared.depth[r].fetch_sub(1, Ordering::AcqRel);
+        let mut st = shared.stats[r].lock().unwrap();
+        st.served += 1;
+        st.errors += is_err as u64;
+        st.latency.record(pending.t0.elapsed().as_secs_f64());
+    };
+    let record_batch = |shared: &Shared, rows: usize| {
+        let mut st = shared.stats[r].lock().unwrap();
+        st.batches += 1;
+        st.batch_rows += rows as u64;
+        st.batch_slots += capacity as u64;
+    };
+
+    loop {
+        // Ingest everything already queued on the channel (non-blocking).
+        loop {
+            match rx.try_recv() {
+                Ok(env @ Envelope::Req { .. }) => admit.push(env),
+                Ok(Envelope::Wake) => {}
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        let draining = disconnected || shared.shutdown.load(Ordering::Acquire);
+        // Move staged requests into the scheduler when the batch is full,
+        // the oldest request's deadline expired, or we are draining.
+        if admit.ready(Instant::now()) || (draining && !admit.is_empty()) {
+            admit.drain_batch_into(&mut flush_buf);
+            for env in flush_buf.drain(..) {
+                let Envelope::Req { req, reply, t0 } = env else { continue };
+                match req {
+                    Request::Score { tokens, span } => {
+                        let id = sched.submit_score(tokens, span);
+                        score_replies.insert(id, PendingReply { tx: reply, t0 });
+                    }
+                    Request::Generate { tokens, max_new } => {
+                        let id = sched.submit_generate(tokens, max_new);
+                        gen_replies.insert(id, PendingReply { tx: reply, t0 });
+                    }
+                }
+            }
+        }
+        match sched.next_work() {
+            Work::Idle => {
+                if draining && admit.is_empty() {
+                    break; // fully drained — every admitted request answered
+                }
+                // Deadline-driven wait (replaces the seed's 2 ms poll):
+                // sleep until the oldest staged request must flush, or
+                // block outright when nothing is staged.
+                let got = match admit.next_deadline() {
+                    Some(d) => rx.recv_timeout(d.saturating_duration_since(Instant::now())),
+                    None => rx.recv().map_err(|_| mpsc::RecvTimeoutError::Disconnected),
+                };
+                match got {
+                    Ok(env @ Envelope::Req { .. }) => admit.push(env),
+                    Ok(Envelope::Wake) | Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => disconnected = true,
+                }
+            }
+            Work::Score(ids) => {
+                let rows: Vec<(Vec<u32>, (usize, usize))> = ids
+                    .iter()
+                    .map(|id| {
+                        let j = sched.score_job(*id).unwrap();
+                        (j.tokens.clone(), j.span)
+                    })
+                    .collect();
+                let result = backend.score_rows(&rows);
+                record_batch(&shared, ids.len());
+                match result {
+                    Ok(scores) => {
+                        for (id, score) in ids.iter().zip(scores) {
+                            sched.complete_score(*id);
+                            if let Some(p) = score_replies.remove(id) {
+                                finish(&shared, p, Response::Score { score });
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        let message = format!("{e:#}");
+                        for id in ids {
+                            sched.complete_score(id);
+                            if let Some(p) = score_replies.remove(&id) {
+                                finish(&shared, p, Response::Error { message: message.clone() });
+                            }
+                        }
+                    }
+                }
+            }
+            Work::Decode(ids) => {
+                let step = {
+                    let prompts: Vec<&[u32]> =
+                        ids.iter().map(|id| sched.session(*id).unwrap().row()).collect();
+                    backend.decode_step(&prompts)
+                };
+                record_batch(&shared, ids.len());
+                match step {
+                    Ok(outs) => {
+                        for (id, out) in ids.iter().zip(outs) {
+                            let sess = sched.session_mut(*id).unwrap();
+                            match out {
+                                Some(tok) => sess.push_token(tok, &stop),
+                                None => sess.done = true, // context full
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        let message = format!("{e:#}");
+                        for id in &ids {
+                            sched.session_mut(*id).unwrap().done = true;
+                            if let Some(p) = gen_replies.remove(id) {
+                                finish(&shared, p, Response::Error { message: message.clone() });
+                            }
+                        }
+                    }
+                }
+                for sess in sched.reap_done() {
+                    // Completions count toward `served` exactly once here,
+                    // reply listener or not (the error path above already
+                    // removed its entry, so no double count).
+                    if let Some(p) = gen_replies.remove(&sess.id) {
+                        finish(&shared, p, Response::Generate { tokens: sess.generated });
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth_core(replicas: usize, queue_cap: usize) -> ServerCore {
+        ServerCore::start(
+            ServerConfig {
+                replicas,
+                queue_cap,
+                max_wait: Duration::from_millis(1),
+            },
+            |_r| Ok(SyntheticBackend::new(4, Duration::ZERO)),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn score_roundtrip_matches_formula() {
+        let core = synth_core(2, 16);
+        let tokens = vec![5u32, 9, 14, 3];
+        let span = (1, 4);
+        let t = core.submit(Request::Score { tokens: tokens.clone(), span }).unwrap();
+        match t.recv().unwrap() {
+            Response::Score { score } => {
+                assert_eq!(score, SyntheticBackend::score_of(&tokens, span));
+            }
+            other => panic!("unexpected response {other:?}"),
+        }
+        let stats = core.shutdown();
+        assert_eq!(stats.served, 1);
+        assert_eq!(stats.rejected, 0);
+        assert_eq!(stats.latency.count(), 1);
+    }
+
+    #[test]
+    fn session_affinity_pins_replica() {
+        let core = synth_core(3, 32);
+        let mut replicas = Vec::new();
+        for _ in 0..6 {
+            let t = core
+                .submit_with_key(Some(41), Request::Score { tokens: vec![2, 3], span: (1, 2) })
+                .unwrap();
+            replicas.push(t.replica);
+            assert!(t.recv().is_some());
+        }
+        assert!(replicas.windows(2).all(|w| w[0] == w[1]), "{replicas:?}");
+        assert_eq!(replicas[0], (41 % 3) as usize);
+        core.shutdown();
+    }
+
+    #[test]
+    fn factory_failure_propagates() {
+        let err = ServerCore::start(ServerConfig::default(), |r| {
+            if r == 0 {
+                anyhow::bail!("no artifacts here")
+            }
+            Ok(SyntheticBackend::new(2, Duration::ZERO))
+        })
+        .err()
+        .expect("start must fail");
+        assert!(format!("{err:#}").contains("no artifacts here"));
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_closed() {
+        let core = synth_core(1, 4);
+        let handle = core.handle();
+        core.shutdown();
+        let err = handle.submit(Request::Score { tokens: vec![2], span: (1, 1) }).err();
+        assert_eq!(err, Some(SubmitError::Closed));
+    }
+}

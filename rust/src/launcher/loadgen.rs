@@ -1,0 +1,449 @@
+//! `nmsparse loadgen` — closed- and open-loop load generator for the
+//! multi-replica [`ServerCore`], emitting `BENCH_serving.json`.
+//!
+//! Closed loop (`--rate 0`, default): `--concurrency` client threads each
+//! keep exactly one request in flight — measures latency under a fixed
+//! offered concurrency. Each client uses its index as the session key, so
+//! the run also exercises session-affine routing.
+//!
+//! Open loop (`--rate R`): requests are submitted at a fixed R req/s
+//! regardless of completion — measures behavior at a target arrival rate,
+//! including admission-control shedding (`rejection_rate`).
+//!
+//! Default backend is [`SyntheticBackend`] (deterministic, artifact-free,
+//! optional simulated per-forward cost) so the CI smoke runs on a machine
+//! with only rustc/cargo; `--backend artifacts` drives the real engine
+//! replicas. The report (throughput, p50/p95/p99 latency from the
+//! server-side [`Histogram`], batch occupancy, rejection rate) is what
+//! `tables` and `tools/check_bench_json.py` consume.
+
+use crate::coordinator::methods::MethodConfig;
+use crate::coordinator::server::{
+    CoordinatorBackend, Request, ServerConfig, ServerCore, ServerStats, SubmitError,
+    SyntheticBackend, Ticket,
+};
+use crate::sparsity::Pattern;
+use crate::synthlang::vocab::{Vocab, EOS};
+use crate::util::cli::{usage, Args, OptSpec};
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Traffic mix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Score,
+    Generate,
+    Mixed,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Result<Mode> {
+        match s {
+            "score" => Ok(Mode::Score),
+            "generate" => Ok(Mode::Generate),
+            "mixed" => Ok(Mode::Mixed),
+            other => bail!("unknown --mode '{other}' (score, generate, mixed)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Mode::Score => "score",
+            Mode::Generate => "generate",
+            Mode::Mixed => "mixed",
+        }
+    }
+}
+
+/// Which engine the replicas run.
+#[derive(Clone, Debug)]
+pub enum BackendChoice {
+    /// Deterministic artifact-free backend; `forward_cost` is charged once
+    /// per dispatched batch (so batching amortizes it, like PJRT).
+    Synthetic { batch: usize, forward_cost: Duration },
+    /// Real engines: each replica opens its own pool from this directory.
+    Artifacts { dir: PathBuf, pattern: String, method: String },
+}
+
+/// One loadgen run, fully specified.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    pub replicas: usize,
+    pub queue_cap: usize,
+    pub max_requests: usize,
+    /// Closed-loop client threads (ignored in open-loop mode).
+    pub concurrency: usize,
+    /// Open-loop arrival rate in req/s; 0 selects the closed loop.
+    pub rate_rps: f64,
+    pub mode: Mode,
+    pub max_new: usize,
+    pub max_wait: Duration,
+    pub seed: u64,
+    pub backend: BackendChoice,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            replicas: 2,
+            queue_cap: 128,
+            max_requests: 256,
+            concurrency: 16,
+            rate_rps: 0.0,
+            mode: Mode::Mixed,
+            max_new: 8,
+            max_wait: Duration::from_millis(5),
+            seed: 7,
+            backend: BackendChoice::Synthetic {
+                batch: 16,
+                forward_cost: Duration::from_micros(150),
+            },
+        }
+    }
+}
+
+/// Outcome of a run: final server stats plus wall-clock derived rates.
+#[derive(Clone, Debug)]
+pub struct LoadgenReport {
+    pub stats: ServerStats,
+    pub requests: usize,
+    pub wall_s: f64,
+    pub mode: Mode,
+    pub replicas: usize,
+    pub queue_cap: usize,
+    pub backend_name: &'static str,
+}
+
+impl LoadgenReport {
+    pub fn throughput_rps(&self) -> f64 {
+        self.stats.served as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// The `BENCH_serving.json` document (see `tools/check_bench_json.py`).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.insert("suite", "serving".into());
+        j.insert("mode", self.mode.as_str().into());
+        j.insert("backend", self.backend_name.into());
+        j.insert("replicas", (self.replicas as f64).into());
+        j.insert("queue_cap", (self.queue_cap as f64).into());
+        j.insert("requests", (self.requests as f64).into());
+        j.insert("served", (self.stats.served as f64).into());
+        j.insert("rejected", (self.stats.rejected as f64).into());
+        j.insert("errors", (self.stats.errors as f64).into());
+        j.insert("wall_s", self.wall_s.into());
+        j.insert("throughput_rps", self.throughput_rps().into());
+        j.insert("latency_ms", latency_ms_json(&self.stats.latency));
+        j.insert("batch_occupancy", self.stats.batch_occupancy().into());
+        j.insert("rejection_rate", self.stats.rejection_rate().into());
+        j
+    }
+
+    /// Human summary printed by the CLI and the bench.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} reqs in {:.2}s -> {:.1} req/s | served {} rejected {} errors {} | \
+             latency {} | occupancy {:.2}",
+            self.requests,
+            self.wall_s,
+            self.throughput_rps(),
+            self.stats.served,
+            self.stats.rejected,
+            self.stats.errors,
+            self.stats.latency.summary(),
+            self.stats.batch_occupancy(),
+        )
+    }
+}
+
+/// The `latency_ms` JSON block (mean/p50/p95/p99/max, milliseconds) —
+/// shared by `BENCH_serving.json` and the serve `{"op":"stats"}` reply so
+/// the two consumers can never desync.
+pub fn latency_ms_json(lat: &crate::util::stats::Histogram) -> Json {
+    let ms = 1e3;
+    let mut l = Json::obj();
+    l.insert("mean", (lat.mean_s() * ms).into());
+    l.insert("p50", (lat.percentile(50.0) * ms).into());
+    l.insert("p95", (lat.percentile(95.0) * ms).into());
+    l.insert("p99", (lat.percentile(99.0) * ms).into());
+    l.insert("max", (lat.max_s() * ms).into());
+    l
+}
+
+/// Deterministic request synthesis: request `idx` of a run is the same
+/// tokens/span/budget for a given seed, independent of thread timing.
+pub fn make_request(seed: u64, idx: usize, mode: Mode, max_new: usize) -> Request {
+    let mut rng = Rng::new(seed ^ (idx as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    let score = match mode {
+        Mode::Score => true,
+        Mode::Generate => false,
+        Mode::Mixed => idx % 3 != 2, // 2:1 score:generate
+    };
+    if score {
+        let len = rng.range(4, 24);
+        let tokens: Vec<u32> = (0..len).map(|_| rng.range(3, 120) as u32).collect();
+        let start = rng.range(1, len);
+        let end = rng.range(start + 1, len + 1);
+        Request::Score { tokens, span: (start, end) }
+    } else {
+        let len = rng.range(3, 16);
+        let tokens: Vec<u32> = (0..len).map(|_| rng.range(3, 120) as u32).collect();
+        Request::Generate { tokens, max_new: rng.range(1, max_new.max(1) + 1) }
+    }
+}
+
+fn start_core(cfg: &LoadgenConfig) -> Result<(ServerCore, &'static str)> {
+    let server_cfg = ServerConfig {
+        replicas: cfg.replicas,
+        queue_cap: cfg.queue_cap,
+        max_wait: cfg.max_wait,
+    };
+    match &cfg.backend {
+        BackendChoice::Synthetic { batch, forward_cost } => {
+            let (batch, forward_cost) = (*batch, *forward_cost);
+            let core = ServerCore::start(server_cfg, move |_r| {
+                Ok(SyntheticBackend::new(batch, forward_cost))
+            })?;
+            Ok((core, "synthetic"))
+        }
+        BackendChoice::Artifacts { dir, pattern, method } => {
+            let pattern = Pattern::parse(pattern)?;
+            let mcfg = MethodConfig::by_name(method, pattern)?;
+            let vocab = Vocab::synthlang();
+            let stop = vec![vocab.id(".")?, EOS];
+            let dir = dir.clone();
+            let core = ServerCore::start(server_cfg, move |_r| {
+                CoordinatorBackend::open(&dir, mcfg.clone(), stop.clone())
+            })?;
+            Ok((core, "artifacts"))
+        }
+    }
+}
+
+/// Run the generator to completion and return the report. The server-side
+/// histogram provides the latency distribution (submit → terminal reply).
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    anyhow::ensure!(cfg.max_requests > 0, "--max-requests must be > 0 for a bounded run");
+    let (core, backend_name) = start_core(cfg)?;
+    let t0 = Instant::now();
+    if cfg.rate_rps > 0.0 {
+        run_open_loop(&core, cfg);
+    } else {
+        run_closed_loop(&core, cfg);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let stats = core.shutdown();
+    Ok(LoadgenReport {
+        stats,
+        requests: cfg.max_requests,
+        wall_s,
+        mode: cfg.mode,
+        replicas: cfg.replicas,
+        queue_cap: cfg.queue_cap,
+        backend_name,
+    })
+}
+
+fn run_closed_loop(core: &ServerCore, cfg: &LoadgenConfig) {
+    let next = Arc::new(AtomicUsize::new(0));
+    std::thread::scope(|scope| {
+        for client in 0..cfg.concurrency.max(1) {
+            let handle = core.handle();
+            let next = Arc::clone(&next);
+            scope.spawn(move || loop {
+                let idx = next.fetch_add(1, Ordering::Relaxed);
+                if idx >= cfg.max_requests {
+                    break;
+                }
+                let req = make_request(cfg.seed, idx, cfg.mode, cfg.max_new);
+                // Session affinity: one client = one session key.
+                match handle.submit_with_key(Some(client as u64), req) {
+                    Ok(ticket) => {
+                        let _ = ticket.recv(); // one in flight per client
+                    }
+                    Err(SubmitError::Overloaded { .. }) => {} // shed; counted server-side
+                    Err(SubmitError::Closed) => break,
+                }
+            });
+        }
+    });
+}
+
+fn run_open_loop(core: &ServerCore, cfg: &LoadgenConfig) {
+    let interval = Duration::from_secs_f64(1.0 / cfg.rate_rps);
+    let start = Instant::now();
+    let mut tickets: Vec<Ticket> = Vec::with_capacity(cfg.max_requests);
+    for idx in 0..cfg.max_requests {
+        let due = start + interval.mul_f64(idx as f64);
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        let req = make_request(cfg.seed, idx, cfg.mode, cfg.max_new);
+        match core.submit(req) {
+            Ok(t) => tickets.push(t),
+            Err(SubmitError::Overloaded { .. }) => {} // shed; counted server-side
+            Err(SubmitError::Closed) => break,
+        }
+    }
+    for t in &tickets {
+        let _ = t.recv();
+    }
+}
+
+/// Write `report.to_json()` to `path` (pretty, trailing newline).
+pub fn write_bench_json(report: &LoadgenReport, path: &std::path::Path) -> Result<()> {
+    std::fs::write(path, report.to_json().pretty())
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+pub fn cmd_loadgen(rest: Vec<String>) -> Result<()> {
+    #[rustfmt::skip]
+    let specs = vec![
+        OptSpec { name: "replicas", takes_value: true, default: Some("2"), help: "engine replicas" },
+        OptSpec { name: "queue-cap", takes_value: true, default: Some("128"), help: "per-replica admission cap" },
+        OptSpec { name: "max-requests", takes_value: true, default: Some("256"), help: "total requests (bounded run)" },
+        OptSpec { name: "concurrency", takes_value: true, default: Some("16"), help: "closed-loop clients" },
+        OptSpec { name: "rate", takes_value: true, default: Some("0"), help: "open-loop req/s (0 = closed loop)" },
+        OptSpec { name: "mode", takes_value: true, default: Some("mixed"), help: "score | generate | mixed" },
+        OptSpec { name: "max-new", takes_value: true, default: Some("8"), help: "max generated tokens" },
+        OptSpec { name: "max-wait-ms", takes_value: true, default: Some("5"), help: "batch deadline (ms)" },
+        OptSpec { name: "seed", takes_value: true, default: Some("7"), help: "request-synthesis seed" },
+        OptSpec { name: "backend", takes_value: true, default: Some("synthetic"), help: "synthetic | artifacts" },
+        OptSpec { name: "batch", takes_value: true, default: Some("16"), help: "synthetic batch capacity" },
+        OptSpec { name: "forward-us", takes_value: true, default: Some("150"), help: "synthetic per-forward cost (us)" },
+        OptSpec { name: "artifacts", takes_value: true, default: Some("artifacts"), help: "artifacts dir (artifacts backend)" },
+        OptSpec { name: "pattern", takes_value: true, default: Some("8:16"), help: "sparsity pattern (artifacts backend)" },
+        OptSpec { name: "method", takes_value: true, default: Some("S-PTS"), help: "method (artifacts backend)" },
+        OptSpec { name: "out", takes_value: true, default: Some("BENCH_serving.json"), help: "report path ('' = skip)" },
+        OptSpec { name: "help", takes_value: false, default: None, help: "show help" },
+    ];
+    let a = Args::parse(rest, &specs)?;
+    if a.flag("help") {
+        print!("{}", usage("loadgen", "Drive a multi-replica ServerCore and measure it.", &specs));
+        return Ok(());
+    }
+    let backend = match a.get("backend").as_str() {
+        "synthetic" => BackendChoice::Synthetic {
+            batch: a.get_usize("batch")?,
+            forward_cost: Duration::from_micros(a.get_u64("forward-us")?),
+        },
+        "artifacts" => BackendChoice::Artifacts {
+            dir: PathBuf::from(a.get("artifacts")),
+            pattern: a.get("pattern"),
+            method: a.get("method"),
+        },
+        other => bail!("unknown --backend '{other}' (synthetic, artifacts)"),
+    };
+    let cfg = LoadgenConfig {
+        replicas: a.get_usize("replicas")?,
+        queue_cap: a.get_usize("queue-cap")?,
+        max_requests: a.get_usize("max-requests")?,
+        concurrency: a.get_usize("concurrency")?,
+        rate_rps: a.get_f64("rate")?,
+        mode: Mode::parse(&a.get("mode"))?,
+        max_new: a.get_usize("max-new")?,
+        max_wait: Duration::from_millis(a.get_u64("max-wait-ms")?),
+        seed: a.get_u64("seed")?,
+        backend,
+    };
+    println!(
+        "loadgen: {} requests, {} replicas (cap {}), {} loop, {} backend",
+        cfg.max_requests,
+        cfg.replicas,
+        cfg.queue_cap,
+        if cfg.rate_rps > 0.0 { "open" } else { "closed" },
+        a.get("backend"),
+    );
+    let report = run(&cfg)?;
+    println!("loadgen: {}", report.summary());
+    let out = a.get("out");
+    if !out.is_empty() {
+        let path = PathBuf::from(out);
+        write_bench_json(&report, &path)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_synthesis_is_deterministic_and_valid() {
+        for idx in 0..200 {
+            let a = make_request(42, idx, Mode::Mixed, 8);
+            let b = make_request(42, idx, Mode::Mixed, 8);
+            assert_eq!(a, b);
+            match a {
+                Request::Score { tokens, span: (s, e) } => {
+                    assert!(!tokens.is_empty());
+                    assert!(s >= 1 && s < e && e <= tokens.len());
+                }
+                Request::Generate { tokens, max_new } => {
+                    assert!(!tokens.is_empty());
+                    assert!((1..=8).contains(&max_new));
+                }
+            }
+        }
+        // Mode filters hold.
+        assert!((0..60).all(|i| matches!(
+            make_request(1, i, Mode::Score, 4),
+            Request::Score { .. }
+        )));
+        assert!((0..60).all(|i| matches!(
+            make_request(1, i, Mode::Generate, 4),
+            Request::Generate { .. }
+        )));
+    }
+
+    #[test]
+    fn closed_loop_synthetic_run_reports() {
+        let cfg = LoadgenConfig {
+            replicas: 2,
+            queue_cap: 32,
+            max_requests: 48,
+            concurrency: 6,
+            max_new: 4,
+            backend: BackendChoice::Synthetic { batch: 4, forward_cost: Duration::ZERO },
+            ..Default::default()
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.stats.served + report.stats.rejected, 48);
+        assert_eq!(report.stats.errors, 0);
+        assert!(report.throughput_rps() > 0.0);
+        assert_eq!(report.stats.latency.count(), report.stats.served);
+        let j = report.to_json();
+        assert_eq!(j.get("suite").and_then(|s| s.as_str()), Some("serving"));
+        let lat = j.get("latency_ms").unwrap();
+        let p50 = lat.get("p50").and_then(|x| x.as_f64()).unwrap();
+        let p95 = lat.get("p95").and_then(|x| x.as_f64()).unwrap();
+        let p99 = lat.get("p99").and_then(|x| x.as_f64()).unwrap();
+        assert!(p50 <= p95 && p95 <= p99);
+        let occ = j.get("batch_occupancy").and_then(|x| x.as_f64()).unwrap();
+        assert!((0.0..=1.0).contains(&occ));
+    }
+
+    #[test]
+    fn open_loop_reports_rate_and_resolves_all_tickets() {
+        let cfg = LoadgenConfig {
+            replicas: 1,
+            queue_cap: 8,
+            max_requests: 32,
+            rate_rps: 4000.0,
+            mode: Mode::Score,
+            backend: BackendChoice::Synthetic { batch: 4, forward_cost: Duration::ZERO },
+            ..Default::default()
+        };
+        let report = run(&cfg).unwrap();
+        // Every request reached a terminal outcome: served or shed.
+        assert_eq!(report.stats.served + report.stats.rejected, 32);
+        assert!(report.stats.served > 0);
+    }
+}

@@ -9,9 +9,11 @@ use crate::util::cli::{usage, Args, OptSpec};
 use anyhow::{bail, Result};
 use std::path::PathBuf;
 
+pub mod loadgen;
 mod serve;
 
 /// Common options shared by evaluation subcommands.
+#[rustfmt::skip]
 fn common_specs() -> Vec<OptSpec> {
     vec![
         OptSpec { name: "artifacts", takes_value: true, default: Some("artifacts"), help: "artifacts directory" },
@@ -36,6 +38,7 @@ pub fn dispatch(raw: &[String]) -> Result<()> {
         "ifeval" => cmd_ifeval(rest),
         "table" => crate::tables::cmd_table(rest),
         "serve" => serve::cmd_serve(rest),
+        "loadgen" => loadgen::cmd_loadgen(rest),
         "--help" | "-h" | "help" => {
             print!("{}", top_usage());
             Ok(())
@@ -55,13 +58,18 @@ fn top_usage() -> String {
        ppl       perplexity on the validation corpus\n\
        ifeval    instruction-following strict/loose accuracy\n\
        table     regenerate a paper table/figure (fig1 fig2 table2 table3\n\
-                 table4 table5 table6 table7 table8 table10 table11 table12 table14)\n\
-       serve     TCP scoring/generation server (see examples/client.rs)\n"
+                 table4 table5 table6 table7 table8 table10 table11 table12\n\
+                 table14 serving)\n\
+       serve     TCP scoring/generation server (multi-replica; see\n\
+                 examples/serving_demo.rs)\n\
+       loadgen   closed/open-loop load generator against a ServerCore;\n\
+                 emits BENCH_serving.json\n"
         .to_string()
 }
 
 fn cmd_datagen(rest: Vec<String>) -> Result<()> {
     let mut specs = common_specs();
+    #[rustfmt::skip]
     specs.extend([
         OptSpec { name: "seed", takes_value: true, default: Some("20250710"), help: "world seed" },
         OptSpec { name: "entities", takes_value: true, default: Some("48"), help: "world entities" },
@@ -126,8 +134,15 @@ fn cmd_info(rest: Vec<String>) -> Result<()> {
     let a = Args::parse(rest, &specs)?;
     let coord = open_coordinator(&a)?;
     let m = &coord.pool.manifest;
-    println!("model: {} params, vocab {}, d_model {}, layers {}, heads {}, ffn {}",
-        m.dims.num_params, m.dims.vocab, m.dims.d_model, m.dims.n_layers, m.dims.n_heads, m.dims.ffn);
+    println!(
+        "model: {} params, vocab {}, d_model {}, layers {}, heads {}, ffn {}",
+        m.dims.num_params,
+        m.dims.vocab,
+        m.dims.d_model,
+        m.dims.n_layers,
+        m.dims.n_heads,
+        m.dims.ffn
+    );
     println!("eval shape: batch {} x seq {}", m.dims.batch, m.dims.seq);
     println!("training: final loss {:.4}, valid ppl {:.3}", m.train_final_loss, m.train_valid_ppl);
     println!("variants ({}):", m.variants.len());
@@ -147,6 +162,7 @@ pub fn load_tasks(data: &std::path::Path, names: &[&str]) -> Result<Vec<tasks::T
 
 fn cmd_eval(rest: Vec<String>) -> Result<()> {
     let mut specs = common_specs();
+    #[rustfmt::skip]
     specs.extend([
         OptSpec { name: "pattern", takes_value: true, default: Some("8:16"), help: "sparsity pattern (dense, 2:4, 8:16, u50, ...)" },
         OptSpec { name: "method", takes_value: true, default: Some("ACT"), help: "method name (ACT, S-PTS, VAR, CLACT, ...)" },
@@ -206,6 +222,7 @@ pub fn resolve_task_names(arg: &str) -> Vec<&'static str> {
 
 fn cmd_ppl(rest: Vec<String>) -> Result<()> {
     let mut specs = common_specs();
+    #[rustfmt::skip]
     specs.extend([
         OptSpec { name: "pattern", takes_value: true, default: Some("8:16"), help: "sparsity pattern" },
         OptSpec { name: "method", takes_value: true, default: Some("ACT"), help: "method name" },
@@ -230,6 +247,7 @@ fn cmd_ppl(rest: Vec<String>) -> Result<()> {
 
 fn cmd_ifeval(rest: Vec<String>) -> Result<()> {
     let mut specs = common_specs();
+    #[rustfmt::skip]
     specs.extend([
         OptSpec { name: "pattern", takes_value: true, default: Some("8:16"), help: "sparsity pattern" },
         OptSpec { name: "method", takes_value: true, default: Some("S-PTS"), help: "method name" },

@@ -1,50 +1,59 @@
-//! `nmsparse serve` — a single-process scoring/generation server.
+//! `nmsparse serve` — the TCP front-end over the multi-replica
+//! [`ServerCore`].
 //!
 //! Line-delimited JSON over TCP (no HTTP stack in the offline image — the
-//! protocol is deliberately minimal; see `examples/serving_client.rs`):
+//! protocol is deliberately minimal):
 //!
 //! ```text
 //! -> {"op":"ping"}
-//! <- {"ok":true,"variant":"8_16","method":"S-PTS"}
+//! <- {"ok":true,"variant":"8_16","method":"S-PTS","replicas":2}
 //! -> {"op":"score","text":"does the red fox live in the den ?","choice":" yes"}
 //! <- {"ok":true,"score":-1.23}
 //! -> {"op":"generate","text":"repeat the word fox two times :","max_new":8}
 //! <- {"ok":true,"text":"fox fox ."}
+//! -> {"op":"stats"}
+//! <- {"ok":true,"served":412,"rejected":3,"latency_ms":{"p50":...},...}
 //! ```
 //!
-//! Architecture: IO threads own sockets and exchange requests/responses
-//! with the single engine thread (PJRT handles are not `Send`) over
-//! channels; the engine thread runs a continuous-batching loop using
-//! [`crate::coordinator::scheduler::Scheduler`] + the dynamic
-//! [`crate::coordinator::batcher::Batcher`] policy.
+//! When a replica's admission queue is full the request is shed
+//! immediately with `{"ok":false,"error":"overloaded"}` — clients retry
+//! with backoff instead of stacking unbounded work.
+//!
+//! Architecture: this file owns only sockets and JSON. Each accepted
+//! connection gets an IO thread holding a [`ServerHandle`]; requests
+//! route session-affine (connection id as the key) into the engine
+//! replicas, which batch by deadline and record per-request latency (see
+//! `coordinator/server.rs`). `--max-requests N` serves exactly N
+//! requests (scores, generates, rejections, pings and stats all count),
+//! then drains gracefully — the loadgen smoke in `tools/ci.sh` relies on
+//! that determinism.
 
 use crate::coordinator::methods::MethodConfig;
-use crate::coordinator::scheduler::{SchedPolicy, Scheduler, Work};
-use crate::coordinator::Coordinator;
+use crate::coordinator::server::{
+    CoordinatorBackend, Request, Response, ServerConfig, ServerCore, ServerHandle, SubmitError,
+};
 use crate::sparsity::Pattern;
 use crate::synthlang::vocab::{Vocab, EOS};
 use crate::util::cli::{usage, Args, OptSpec};
 use crate::util::json::{self, Json};
 use anyhow::{Context, Result};
-use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
-/// A request forwarded from an IO thread to the engine loop.
-struct IoRequest {
-    line: String,
-    reply: mpsc::Sender<String>,
-}
-
 pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
+    #[rustfmt::skip]
     let specs = vec![
         OptSpec { name: "artifacts", takes_value: true, default: Some("artifacts"), help: "artifacts dir" },
         OptSpec { name: "addr", takes_value: true, default: Some("127.0.0.1:7433"), help: "listen address" },
         OptSpec { name: "pattern", takes_value: true, default: Some("8:16"), help: "sparsity pattern" },
         OptSpec { name: "method", takes_value: true, default: Some("S-PTS"), help: "method name" },
+        OptSpec { name: "replicas", takes_value: true, default: Some("1"), help: "engine replicas (each opens its own pool)" },
+        OptSpec { name: "queue-cap", takes_value: true, default: Some("64"), help: "per-replica admission cap" },
+        OptSpec { name: "max-wait-ms", takes_value: true, default: Some("5"), help: "batch deadline (ms)" },
         OptSpec { name: "max-requests", takes_value: true, default: Some("0"), help: "exit after N requests (0 = run forever)" },
         OptSpec { name: "help", takes_value: false, default: None, help: "show help" },
     ];
@@ -53,178 +62,89 @@ pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
         print!("{}", usage("serve", "Run the TCP scoring/generation server.", &specs));
         return Ok(());
     }
-    let coord = Coordinator::open(&PathBuf::from(a.get("artifacts")))?;
     let pattern = Pattern::parse(&a.get("pattern"))?;
     let cfg = MethodConfig::by_name(&a.get("method"), pattern)?;
-    let engine = coord.pool.engine(&cfg)?; // bind before accepting traffic
-    let dims = engine.dims().clone();
-    drop(engine);
-    let vocab = Vocab::synthlang();
-    let max_requests = a.get_usize("max-requests")?;
+    let vocab = Arc::new(Vocab::synthlang());
+    let stop = vec![vocab.id(".")?, EOS];
+    let artifacts = PathBuf::from(a.get("artifacts"));
+    let max_requests = a.get_usize("max-requests")? as u64;
+
+    let server_cfg = ServerConfig {
+        replicas: a.get_usize("replicas")?,
+        queue_cap: a.get_usize("queue-cap")?,
+        max_wait: Duration::from_millis(a.get_u64("max-wait-ms")?),
+    };
+    // Each replica thread opens its own Coordinator/engine pool (PJRT
+    // handles are not Send); start() blocks until every engine is bound.
+    let factory_cfg = cfg.clone();
+    let core = ServerCore::start(server_cfg, move |_r| {
+        CoordinatorBackend::open(&artifacts, factory_cfg.clone(), stop.clone())
+    })?;
 
     let listener = TcpListener::bind(a.get("addr")).context("binding server address")?;
     listener.set_nonblocking(true)?;
     println!(
-        "serving {} / {} on {} (batch {} x seq {})",
+        "serving {} / {} on {} ({} replica(s), queue cap {})",
         cfg.variant_key,
         cfg.id,
         a.get("addr"),
-        dims.batch,
-        dims.seq
+        core.replicas(),
+        server_cfg.queue_cap.max(1),
     );
 
-    let (req_tx, req_rx) = mpsc::channel::<IoRequest>();
-    let mut served = 0usize;
-    let mut scheduler = Scheduler::new(dims.batch, SchedPolicy::default());
-    // Pending replies: scheduler id -> (reply channel, kind-specific state).
-    let mut score_replies: HashMap<u64, mpsc::Sender<String>> = HashMap::new();
-    let mut gen_replies: HashMap<u64, mpsc::Sender<String>> = HashMap::new();
-    let period = vocab.id(".")?;
-
+    // Requests answered at this protocol layer (ping/stats/parse errors);
+    // score/generate outcomes are counted inside the core.
+    let extra = Arc::new(AtomicU64::new(0));
+    let banner = Arc::new((cfg.variant_key.clone(), cfg.id.clone()));
+    let mut conn_seq = 0u64;
     loop {
-        // Accept new connections; spawn an IO thread per client.
+        // The accept path may poll; the engine replicas never do — they
+        // block on their channels / batch deadlines.
         match listener.accept() {
-            Ok((stream, _)) => spawn_io_thread(stream, req_tx.clone()),
-            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+            Ok((stream, _)) => {
+                conn_seq += 1;
+                spawn_io_thread(
+                    stream,
+                    core.handle(),
+                    Arc::clone(&vocab),
+                    Arc::clone(&extra),
+                    Arc::clone(&banner),
+                    conn_seq,
+                );
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
             Err(e) => return Err(e.into()),
         }
-        // Ingest queued requests (non-blocking).
-        while let Ok(req) = req_rx.try_recv() {
-            match parse_request(&req.line, &vocab) {
-                Ok(ParsedRequest::Ping) => {
-                    let mut r = Json::obj();
-                    r.insert("ok", true.into());
-                    r.insert("variant", cfg.variant_key.as_str().into());
-                    r.insert("method", cfg.id.as_str().into());
-                    req.reply.send(r.dump()).ok();
-                    served += 1;
-                }
-                Ok(ParsedRequest::Score { tokens, span }) => {
-                    let id = scheduler.submit_score(tokens, span);
-                    score_replies.insert(id, req.reply);
-                }
-                Ok(ParsedRequest::Generate { tokens, max_new }) => {
-                    let id = scheduler.submit_generate(tokens, max_new);
-                    gen_replies.insert(id, req.reply);
-                }
-                Err(e) => {
-                    let mut r = Json::obj();
-                    r.insert("ok", false.into());
-                    r.insert("error", format!("{e:#}").into());
-                    req.reply.send(r.dump()).ok();
-                    served += 1;
-                }
-            }
-        }
-        // Dispatch one unit of work.
-        match scheduler.next_work() {
-            Work::Idle => {
-                if max_requests > 0 && served >= max_requests {
-                    println!("served {served} requests; exiting (--max-requests)");
-                    return Ok(());
-                }
-                std::thread::sleep(Duration::from_millis(2));
-            }
-            Work::Score(ids) => {
-                let rows: Vec<(Vec<u32>, (usize, usize))> = ids
-                    .iter()
-                    .map(|id| {
-                        let j = scheduler.score_job(*id).unwrap();
-                        (j.tokens.clone(), j.span)
-                    })
-                    .collect();
-                match coord.score_rows(&cfg, &rows) {
-                    Ok(scores) => {
-                        for (id, score) in ids.iter().zip(scores) {
-                            if let Some(tx) = score_replies.remove(id) {
-                                let mut r = Json::obj();
-                                r.insert("ok", true.into());
-                                r.insert("score", score.into());
-                                tx.send(r.dump()).ok();
-                                served += 1;
-                            }
-                            scheduler.complete_score(*id);
-                        }
-                    }
-                    Err(e) => {
-                        for id in ids {
-                            if let Some(tx) = score_replies.remove(&id) {
-                                let mut r = Json::obj();
-                                r.insert("ok", false.into());
-                                r.insert("error", format!("{e:#}").into());
-                                tx.send(r.dump()).ok();
-                                served += 1;
-                            }
-                            scheduler.complete_score(id);
-                        }
-                    }
-                }
-            }
-            Work::Decode(ids) => {
-                // One decode step for each active session. Rows are
-                // borrowed straight from the sessions' incremental
-                // buffers — no per-token clone at this call site.
-                let prompts: Vec<&[u32]> = ids
-                    .iter()
-                    .map(|id| scheduler.session(*id).unwrap().row())
-                    .collect();
-                match coord.generate_refs(&cfg, &prompts, 1, &[period, EOS]) {
-                    Ok(outs) => {
-                        for (id, out) in ids.iter().zip(outs) {
-                            let sess = scheduler.session_mut(*id).unwrap();
-                            match out.first() {
-                                Some(tok) => sess.push_token(*tok, &[period, EOS]),
-                                None => sess.done = true, // context full
-                            }
-                        }
-                    }
-                    Err(e) => {
-                        for id in &ids {
-                            scheduler.session_mut(*id).unwrap().done = true;
-                            if let Some(tx) = gen_replies.remove(id) {
-                                let mut r = Json::obj();
-                                r.insert("ok", false.into());
-                                r.insert("error", format!("{e:#}").into());
-                                tx.send(r.dump()).ok();
-                                served += 1;
-                            }
-                        }
-                    }
-                }
-                for sess in scheduler.reap_done() {
-                    if let Some(tx) = gen_replies.remove(&sess.id) {
-                        let mut r = Json::obj();
-                        r.insert("ok", true.into());
-                        r.insert(
-                            "tokens",
-                            Json::Arr(
-                                sess.generated
-                                    .iter()
-                                    .map(|t| Json::Num(*t as f64))
-                                    .collect(),
-                            ),
-                        );
-                        r.insert("text", vocab.decode(&sess.generated).into());
-                        tx.send(r.dump()).ok();
-                        served += 1;
-                    }
-                }
-            }
+        if max_requests > 0 && core.completed() + extra.load(Ordering::Relaxed) >= max_requests {
+            break;
         }
     }
+    let stats = core.shutdown();
+    println!(
+        "served {} requests ({} rejected, {} errors); exiting (--max-requests)",
+        stats.served + extra.load(Ordering::Relaxed),
+        stats.rejected,
+        stats.errors,
+    );
+    println!("latency: {} | occupancy {:.2}", stats.latency.summary(), stats.batch_occupancy());
+    Ok(())
 }
 
-enum ParsedRequest {
+/// One parsed protocol line.
+enum ClientOp {
     Ping,
-    Score { tokens: Vec<u32>, span: (usize, usize) },
-    Generate { tokens: Vec<u32>, max_new: usize },
+    Stats,
+    Engine(Request),
 }
 
-fn parse_request(line: &str, vocab: &Vocab) -> Result<ParsedRequest> {
+fn parse_request(line: &str, vocab: &Vocab) -> Result<ClientOp> {
     let j = json::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
     let op = j.req("op")?.as_str().context("op")?;
     match op {
-        "ping" => Ok(ParsedRequest::Ping),
+        "ping" => Ok(ClientOp::Ping),
+        "stats" => Ok(ClientOp::Stats),
         "score" => {
             let ctx = vocab.encode(j.req("text")?.as_str().context("text")?)?;
             let choice = vocab.encode(j.req("choice")?.as_str().context("choice")?)?;
@@ -232,7 +152,7 @@ fn parse_request(line: &str, vocab: &Vocab) -> Result<ParsedRequest> {
             let mut tokens = ctx.clone();
             let start = tokens.len();
             tokens.extend(&choice);
-            Ok(ParsedRequest::Score { span: (start, tokens.len()), tokens })
+            Ok(ClientOp::Engine(Request::Score { span: (start, tokens.len()), tokens }))
         }
         "generate" => {
             let tokens = vocab.encode(j.req("text")?.as_str().context("text")?)?;
@@ -242,13 +162,72 @@ fn parse_request(line: &str, vocab: &Vocab) -> Result<ParsedRequest> {
                 .and_then(|x| x.as_usize())
                 .unwrap_or(12)
                 .clamp(1, 48);
-            Ok(ParsedRequest::Generate { tokens, max_new })
+            Ok(ClientOp::Engine(Request::Generate { tokens, max_new }))
         }
         other => anyhow::bail!("unknown op '{other}'"),
     }
 }
 
-fn spawn_io_thread(stream: TcpStream, req_tx: mpsc::Sender<IoRequest>) {
+fn error_reply(message: &str) -> String {
+    let mut r = Json::obj();
+    r.insert("ok", false.into());
+    r.insert("error", message.into());
+    r.dump()
+}
+
+fn response_reply(resp: &Response, vocab: &Vocab) -> String {
+    let mut r = Json::obj();
+    match resp {
+        Response::Score { score } => {
+            r.insert("ok", true.into());
+            r.insert("score", (*score).into());
+        }
+        Response::Generate { tokens } => {
+            r.insert("ok", true.into());
+            r.insert(
+                "tokens",
+                Json::Arr(tokens.iter().map(|t| Json::Num(*t as f64)).collect()),
+            );
+            r.insert("text", vocab.decode(tokens).into());
+        }
+        Response::Error { message } => {
+            r.insert("ok", false.into());
+            r.insert("error", message.as_str().into());
+        }
+    }
+    r.dump()
+}
+
+fn stats_reply(handle: &ServerHandle) -> String {
+    let s = handle.stats();
+    let mut r = Json::obj();
+    r.insert("ok", true.into());
+    r.insert("replicas", (s.replicas as f64).into());
+    r.insert("submitted", (s.submitted as f64).into());
+    r.insert("served", (s.served as f64).into());
+    r.insert("rejected", (s.rejected as f64).into());
+    r.insert("errors", (s.errors as f64).into());
+    r.insert("latency_ms", super::loadgen::latency_ms_json(&s.latency));
+    r.insert("batch_occupancy", s.batch_occupancy().into());
+    r.insert("rejection_rate", s.rejection_rate().into());
+    r.insert(
+        "depth",
+        Json::Arr((0..s.replicas).map(|i| Json::Num(handle.depth(i) as f64)).collect()),
+    );
+    r.dump()
+}
+
+/// Per-connection IO thread: read a line, route it, write the reply. The
+/// connection id is the session-affinity key, so one client's decode
+/// sessions stay on one replica.
+fn spawn_io_thread(
+    stream: TcpStream,
+    handle: ServerHandle,
+    vocab: Arc<Vocab>,
+    extra: Arc<AtomicU64>,
+    banner: Arc<(String, String)>,
+    conn_id: u64,
+) {
     std::thread::spawn(move || {
         stream.set_nonblocking(false).ok();
         let mut writer = match stream.try_clone() {
@@ -261,22 +240,38 @@ fn spawn_io_thread(stream: TcpStream, req_tx: mpsc::Sender<IoRequest>) {
             if line.trim().is_empty() {
                 continue;
             }
-            let (tx, rx) = mpsc::channel();
-            if req_tx
-                .send(IoRequest { line, reply: tx })
-                .is_err()
-            {
-                break;
-            }
-            match rx.recv() {
-                Ok(resp) => {
-                    if writer.write_all(resp.as_bytes()).is_err()
-                        || writer.write_all(b"\n").is_err()
-                    {
-                        break;
+            let reply = match parse_request(&line, &vocab) {
+                Ok(ClientOp::Ping) => {
+                    extra.fetch_add(1, Ordering::Relaxed);
+                    let mut r = Json::obj();
+                    r.insert("ok", true.into());
+                    r.insert("variant", banner.0.as_str().into());
+                    r.insert("method", banner.1.as_str().into());
+                    r.insert("replicas", (handle.replicas() as f64).into());
+                    r.dump()
+                }
+                Ok(ClientOp::Stats) => {
+                    extra.fetch_add(1, Ordering::Relaxed);
+                    stats_reply(&handle)
+                }
+                Ok(ClientOp::Engine(req)) => {
+                    match handle.submit_with_key(Some(conn_id), req) {
+                        // Blocking recv: one request in flight per
+                        // connection, like the line protocol implies.
+                        Ok(ticket) => match ticket.recv() {
+                            Some(resp) => response_reply(&resp, &vocab),
+                            None => error_reply(&SubmitError::Closed.to_string()),
+                        },
+                        Err(e) => error_reply(&e.to_string()), // "overloaded" / shutdown
                     }
                 }
-                Err(_) => break,
+                Err(e) => {
+                    extra.fetch_add(1, Ordering::Relaxed);
+                    error_reply(&format!("{e:#}"))
+                }
+            };
+            if writer.write_all(reply.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
+                break;
             }
         }
     });

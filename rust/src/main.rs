@@ -8,7 +8,8 @@
 //!   ppl       perplexity of a configuration on the validation corpus
 //!   ifeval    instruction-following (strict/loose) for a configuration
 //!   table     regenerate a paper table/figure (fig1, fig2, table2, ...)
-//!   serve     run the TCP scoring/generation server
+//!   serve     run the TCP scoring/generation server (multi-replica)
+//!   loadgen   drive a multi-replica ServerCore; emits BENCH_serving.json
 //!
 //! Run `nmsparse <cmd> --help` for options.
 

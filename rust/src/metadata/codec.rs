@@ -308,7 +308,7 @@ impl MaskCodec {
                             bail!("index {idx} out of range");
                         }
                         if word >> idx & 1 == 1 {
-                            bail!("duplicate index {idx} in block (mask would have fewer than {n} ones)");
+                            bail!("duplicate index {idx} in block (mask would under-fill)");
                         }
                         word |= 1 << idx;
                     }
@@ -426,7 +426,7 @@ impl MaskCodec {
                             bail!("index {idx} out of range");
                         }
                         if mask[idx] {
-                            bail!("duplicate index {idx} in block (mask would have fewer than {n} ones)");
+                            bail!("duplicate index {idx} in block (mask would under-fill)");
                         }
                         mask[idx] = true;
                     }

@@ -19,6 +19,19 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
+// The real `xla` crate only exists behind the default-off `pjrt` feature
+// (CI machines have no PJRT plugin). Without it, `stub` provides the same
+// API surface: constructors succeed, and the first call that would need
+// XLA fails with an error pointing at `--features pjrt`. The module is
+// `pub` (doc-hidden) because stub types appear in public signatures
+// (`Runtime::upload` returns a buffer) — a private module would trip the
+// `private_interfaces` lint.
+#[cfg(not(feature = "pjrt"))]
+#[doc(hidden)]
+pub mod stub;
+#[cfg(not(feature = "pjrt"))]
+use stub as xla;
+
 /// One named input of a variant executable.
 #[derive(Clone, Debug)]
 pub struct InputSpec {

@@ -1,0 +1,122 @@
+//! CPU stub for the `xla` crate, compiled when the default-off `pjrt`
+//! feature is disabled.
+//!
+//! CI machines (and fresh checkouts) have no PJRT plugin and no AOT
+//! artifacts, but the crate must still build, run its tests, and serve
+//! synthetic traffic (`nmsparse loadgen`, `ServerCore` +
+//! `SyntheticBackend`). This module mirrors exactly the slice of the
+//! `xla` API that `runtime::mod` touches: constructors succeed so
+//! `Runtime::cpu()` / `EnginePool::open` work artifact-free code paths,
+//! and the first call that would actually need XLA (`compile`,
+//! `execute_b`) fails with a descriptive error pointing at the feature
+//! flag. Rebuild with `--features pjrt` for the real engine.
+
+use std::path::Path;
+
+/// Error type standing in for `xla::Error`; call sites only format it
+/// with `{:?}`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+fn unavailable<T>(what: &str) -> Result<T, Error> {
+    Err(Error(format!(
+        "{what} requires the PJRT runtime, but nmsparse was built without the \
+         default-off `pjrt` feature (cargo build --features pjrt)"
+    )))
+}
+
+/// Stand-in for `xla::PjRtClient`.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub (pjrt feature disabled)".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable("compiling an HLO variant")
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _shape: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        Ok(PjRtBuffer)
+    }
+}
+
+/// Stand-in for `xla::HloModuleProto` (text parse is a file-existence
+/// check; real parsing needs XLA).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, Error> {
+        if Path::new(path).exists() {
+            Ok(HloModuleProto)
+        } else {
+            Err(Error(format!("no HLO text at {path}")))
+        }
+    }
+}
+
+/// Stand-in for `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stand-in for `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable("executing a bound engine")
+    }
+}
+
+/// Stand-in for `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable("fetching a device buffer")
+    }
+}
+
+/// Stand-in for `xla::Literal`.
+pub struct Literal;
+
+impl Literal {
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal), Error> {
+        unavailable("untupling a literal")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable("reading a literal")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_builds_and_fails_descriptively() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("stub"));
+        let buf = client.buffer_from_host_buffer(&[1.0f32], &[1], None).unwrap();
+        let err = PjRtLoadedExecutable.execute_b(&[&buf]).unwrap_err();
+        assert!(format!("{err:?}").contains("pjrt"));
+        assert!(HloModuleProto::from_text_file("/definitely/not/here.hlo.txt").is_err());
+        assert!(Literal.to_vec::<f32>().is_err());
+    }
+}

@@ -45,7 +45,7 @@ impl Pattern {
     pub fn parse(s: &str) -> Result<Pattern> {
         let s = s.trim();
         if s.is_empty() {
-            bail!("empty sparsity pattern (expected 'dense', 'N:M' like '8:16', or 'uK' like 'u50')");
+            bail!("empty sparsity pattern (expected 'dense', 'N:M' like '8:16', or 'u50')");
         }
         if s.eq_ignore_ascii_case("dense") || s.eq_ignore_ascii_case("orig") {
             return Ok(Pattern::Dense);
@@ -53,7 +53,7 @@ impl Pattern {
         if s.starts_with('u') || s.starts_with('U') {
             let p = s[1..].trim();
             if p.is_empty() {
-                bail!("unstructured pattern '{s}' is missing the sparsity percentage (expected e.g. 'u50')");
+                bail!("unstructured pattern '{s}' missing the sparsity percentage, e.g. 'u50'");
             }
             let sparsity: u32 = p.parse().map_err(|_| {
                 anyhow::anyhow!("unstructured pattern '{s}': '{p}' is not a percentage in 0..=99")
@@ -66,7 +66,10 @@ impl Pattern {
         if let Some((n, m)) = s.split_once(':') {
             let (n_s, m_s) = (n.trim(), m.trim());
             if n_s.is_empty() || m_s.is_empty() {
-                bail!("N:M pattern '{s}' is missing {} of the ':'", if n_s.is_empty() { "N before" } else { "M after" });
+                bail!(
+                    "N:M pattern '{s}' is missing {} of the ':'",
+                    if n_s.is_empty() { "N before" } else { "M after" }
+                );
             }
             let n: u32 = n_s.parse().map_err(|_| {
                 anyhow::anyhow!("N:M pattern '{s}': '{n_s}' is not a positive integer")
@@ -82,7 +85,7 @@ impl Pattern {
             }
             return Ok(Pattern::NM { n, m });
         }
-        bail!("unrecognized sparsity pattern '{s}' (expected 'dense', 'N:M' like '8:16', or 'uK' like 'u50')")
+        bail!("unrecognized sparsity pattern '{s}' (want 'dense', N:M like '8:16', or 'u50')")
     }
 
     /// Fraction of elements kept.

@@ -216,7 +216,12 @@ pub fn generate(
     })
 }
 
-fn mc_example(vocab: &Vocab, ctx: &str, choices: &[impl AsRef<str>], label: usize) -> Result<Example> {
+fn mc_example(
+    vocab: &Vocab,
+    ctx: &str,
+    choices: &[impl AsRef<str>],
+    label: usize,
+) -> Result<Example> {
     let context = vocab.encode(ctx)?;
     let mut enc = Vec::with_capacity(choices.len());
     let mut txt = format!("{ctx} => [");

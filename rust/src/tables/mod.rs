@@ -129,6 +129,7 @@ impl TableCtx {
 
 /// `nmsparse table <id>` entry point.
 pub fn cmd_table(rest: Vec<String>) -> Result<()> {
+    #[rustfmt::skip]
     let specs = vec![
         OptSpec { name: "artifacts", takes_value: true, default: Some("artifacts"), help: "artifacts dir" },
         OptSpec { name: "data", takes_value: true, default: Some("artifacts/data"), help: "data dir" },
@@ -139,7 +140,9 @@ pub fn cmd_table(rest: Vec<String>) -> Result<()> {
     ];
     let a = Args::parse(rest, &specs)?;
     if a.flag("help") || a.positional.is_empty() {
-        print!("{}", usage("table <id>", "Regenerate a paper table/figure.\nIds: fig1 fig2 table2 table3 table4 table5 table6 table7 table8 table10 table11 table12 table14 all", &specs));
+        let about = "Regenerate a paper table/figure.\nIds: fig1 fig2 table2 table3 table4 \
+                     table5 table6 table7 table8 table10 table11 table12 table14 serving all";
+        print!("{}", usage("table <id>", about, &specs));
         return Ok(());
     }
     let id = a.positional[0].clone();
@@ -150,8 +153,8 @@ pub fn cmd_table(rest: Vec<String>) -> Result<()> {
 
     let ids: Vec<&str> = if id == "all" {
         vec![
-            "table6", "fig1", "fig2", "table2", "table4", "table8", "table3",
-            "table5", "table11", "table12", "table14",
+            "table6", "serving", "fig1", "fig2", "table2", "table4", "table8",
+            "table3", "table5", "table11", "table12", "table14",
         ]
     } else {
         vec![id.as_str()]
@@ -181,6 +184,7 @@ pub fn generate(ctx: &mut TableCtx, id: &str) -> Result<Table> {
         "table4" => table4_unstructured_methods(ctx),
         "table5" | "table13" => table5_layer_sensitivity(ctx),
         "table6" => Ok(table6_hw_complexity()),
+        "serving" => Ok(table_serving()),
         "table8" => table8_combinations(ctx),
         "table11" => table11_full(ctx, Pattern::NM { n: 2, m: 4 }),
         "table12" => table11_full(ctx, Pattern::NM { n: 8, m: 16 }),
@@ -196,7 +200,10 @@ pub fn generate(ctx: &mut TableCtx, id: &str) -> Result<Table> {
 fn fig1_unstructured_act_vs_wt(ctx: &mut TableCtx) -> Result<Table> {
     let mut t = Table::new(
         "Figure 1 / Table 10 — unstructured ACT (activations) vs WT (weights)",
-        &["sparsity", "target", "ppl", "ArcE", "BoolQ", "PIQA", "Wino", "drop%", "paper drop% (L3.1)"],
+        &[
+            "sparsity", "target", "ppl", "ArcE", "BoolQ", "PIQA", "Wino", "drop%",
+            "paper drop% (L3.1)",
+        ],
     );
     let (base, _) = ctx.eval_core(&MethodConfig::dense())?;
     let base_ppl = ctx.ppl(&MethodConfig::dense())?;
@@ -227,7 +234,8 @@ fn fig1_unstructured_act_vs_wt(ctx: &mut TableCtx) -> Result<Table> {
             ));
         }
     }
-    t.note = "expected shape: ACT degrades far less than WT at 50%/70%; both collapse by 90%".into();
+    t.note =
+        "expected shape: ACT degrades far less than WT at 50%/70%; both collapse by 90%".into();
     Ok(t)
 }
 
@@ -485,7 +493,10 @@ fn table6_hw_complexity() -> Table {
                 cell("8:16"),
                 format!(
                     "dense {:.0} B/row; values + measured combinadic metadata",
-                    find("8:16").or_else(|| find("2:4")).map(|r| r.dense_bytes_per_row).unwrap_or(0.0)
+                    find("8:16")
+                        .or_else(|| find("2:4"))
+                        .map(|r| r.dense_bytes_per_row)
+                        .unwrap_or(0.0)
                 ),
             ]);
             if let Some(r) = find("8:16") {
@@ -549,7 +560,11 @@ fn table6_hw_complexity() -> Table {
     t.row(vec![
         "break-even k".into(),
         "-".into(),
-        format!("> {:.2} (conservative {:.1})", edp.breakeven_k() / edp.edp_improvement() * 1.31, hwmodel::EdpModel::CONSERVATIVE_K),
+        format!(
+            "> {:.2} (conservative {:.1})",
+            edp.breakeven_k() / edp.edp_improvement() * 1.31,
+            hwmodel::EdpModel::CONSERVATIVE_K
+        ),
         "paper: k > 1.31, conservative 1.6".into(),
     ]);
     t.note = "Appendix A model; act-I/O row and EDP's r are measured from BENCH_packed.json \
@@ -630,6 +645,102 @@ pub fn load_packed_bench(path: &std::path::Path) -> Option<Vec<PackedBenchRow>> 
         });
     }
     Some(out)
+}
+
+// ------------------------------------------------- measured serving perf
+
+/// Where `cargo bench -- serving` / `nmsparse loadgen` drop the measured
+/// multi-replica serving numbers (see `rust/src/launcher/loadgen.rs`).
+pub const SERVING_BENCH_FILE: &str = "BENCH_serving.json";
+
+/// The measured serving summary from [`SERVING_BENCH_FILE`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServingBenchSummary {
+    pub mode: String,
+    pub backend: String,
+    pub replicas: f64,
+    pub requests: f64,
+    pub served: f64,
+    pub rejected: f64,
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub batch_occupancy: f64,
+    pub rejection_rate: f64,
+}
+
+/// Load the measured serving summary. `None` when the loadgen/bench has
+/// not been run — callers render a pointer at the command instead.
+pub fn load_serving_bench(path: &std::path::Path) -> Option<ServingBenchSummary> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = crate::util::json::parse(&text).ok()?;
+    let f = |key: &str| j.get(key).and_then(|x| x.as_f64());
+    let s = |key: &str| j.get(key).and_then(|x| x.as_str()).map(|x| x.to_string());
+    let lat = j.get("latency_ms")?;
+    let lf = |key: &str| lat.get(key).and_then(|x| x.as_f64());
+    Some(ServingBenchSummary {
+        mode: s("mode")?,
+        backend: s("backend")?,
+        replicas: f("replicas")?,
+        requests: f("requests")?,
+        served: f("served")?,
+        rejected: f("rejected")?,
+        throughput_rps: f("throughput_rps")?,
+        p50_ms: lf("p50")?,
+        p95_ms: lf("p95")?,
+        p99_ms: lf("p99")?,
+        batch_occupancy: f("batch_occupancy")?,
+        rejection_rate: f("rejection_rate")?,
+    })
+}
+
+/// `nmsparse table serving` — the measured multi-replica serving profile.
+/// Purely a consumer of [`SERVING_BENCH_FILE`]; needs no artifacts.
+fn table_serving() -> Table {
+    let mut t = Table::new(
+        "Serving — multi-replica ServerCore under load (measured)",
+        &["metric", "value", "source"],
+    );
+    match load_serving_bench(std::path::Path::new(SERVING_BENCH_FILE)) {
+        Some(m) => {
+            let src = format!("{} backend, {} mode", m.backend, m.mode);
+            t.row(vec![
+                "throughput".into(),
+                format!("{:.1} req/s", m.throughput_rps),
+                src.clone(),
+            ]);
+            t.row(vec![
+                "latency p50 / p95 / p99".into(),
+                format!("{:.2} / {:.2} / {:.2} ms", m.p50_ms, m.p95_ms, m.p99_ms),
+                "server-side histogram (util::stats)".into(),
+            ]);
+            t.row(vec![
+                "batch occupancy".into(),
+                format!("{:.2}", m.batch_occupancy),
+                "packing_efficiency over dispatched slots".into(),
+            ]);
+            t.row(vec![
+                "rejection rate".into(),
+                format!("{:.3}", m.rejection_rate),
+                format!("admission cap; {} of {} shed", m.rejected, m.requests),
+            ]);
+            t.row(vec![
+                "replicas".into(),
+                format!("{:.0}", m.replicas),
+                format!("{:.0} served", m.served),
+            ]);
+            t.note = "run `nmsparse loadgen` or `cargo bench -- serving` to refresh".into();
+        }
+        None => {
+            t.row(vec![
+                "serving profile".into(),
+                "-".into(),
+                "no BENCH_serving.json — run `nmsparse loadgen`".into(),
+            ]);
+        }
+    }
+    t
 }
 
 // ---------------------------------------------------------------- table 8
@@ -721,7 +832,11 @@ fn table14_vs_quant(ctx: &mut TableCtx) -> Result<Table> {
     push(ctx, "int8 weights (ours, PTQ)", &MethodConfig::quant8())?;
     let u50 = Pattern::Unstructured { keep_pct: 50 };
     let p816 = Pattern::NM { n: 8, m: 16 };
-    push(ctx, "50% unstruct + S-PTS", &MethodConfig::by_name("S-PTS", u50).map(|mut c| { c.eta_family = Some("spts_eta".into()); c })?)?;
+    let spts_u50 = MethodConfig::by_name("S-PTS", u50).map(|mut c| {
+        c.eta_family = Some("spts_eta".into());
+        c
+    })?;
+    push(ctx, "50% unstruct + S-PTS", &spts_u50)?;
     push(ctx, "50% unstruct + VAR", &MethodConfig::by_name("VAR", u50)?)?;
     push(ctx, "8:16 + ACT", &MethodConfig::by_name("ACT", p816)?)?;
     push(ctx, "8:16 + Amber-Pruner", &MethodConfig::by_name("Amber-Pruner", p816)?)?;
@@ -764,6 +879,42 @@ mod tests {
         // back gracefully when no BENCH_packed.json is in cwd).
         let t = table6_hw_complexity();
         assert!(t.rows.len() >= 7);
+    }
+
+    #[test]
+    fn serving_table_renders_without_bench_file() {
+        // Pure consumer table — must render a pointer row when no
+        // BENCH_serving.json is in cwd (and never require artifacts).
+        let t = table_serving();
+        assert!(!t.rows.is_empty());
+    }
+
+    #[test]
+    fn serving_bench_loader_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("nmsparse-serving-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_serving.json");
+        std::fs::write(
+            &path,
+            r#"{"suite": "serving", "mode": "mixed", "backend": "synthetic",
+                "replicas": 2, "queue_cap": 64, "requests": 512,
+                "served": 500, "rejected": 12, "errors": 0,
+                "wall_s": 1.5, "throughput_rps": 333.3,
+                "latency_ms": {"mean": 4.0, "p50": 3.1, "p95": 9.9, "p99": 14.2, "max": 20.0},
+                "batch_occupancy": 0.82, "rejection_rate": 0.023}"#,
+        )
+        .unwrap();
+        let m = load_serving_bench(&path).unwrap();
+        assert_eq!(m.mode, "mixed");
+        assert_eq!(m.replicas, 2.0);
+        assert!((m.throughput_rps - 333.3).abs() < 1e-9);
+        assert!(m.p50_ms <= m.p95_ms && m.p95_ms <= m.p99_ms);
+        assert!((m.rejection_rate - 0.023).abs() < 1e-12);
+        // Missing file and missing required field both yield None.
+        assert!(load_serving_bench(std::path::Path::new("/definitely/not/here.json")).is_none());
+        std::fs::write(&path, r#"{"mode": "mixed", "backend": "synthetic"}"#).unwrap();
+        assert!(load_serving_bench(&path).is_none());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

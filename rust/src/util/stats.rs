@@ -113,6 +113,156 @@ pub fn fmt_duration_s(s: f64) -> String {
     }
 }
 
+/// Reusable log-bucketed latency histogram for the serving path.
+///
+/// Buckets are geometric: 8 per octave (each spans a ×2^(1/8) ≈ 9% range)
+/// from 1 µs to ~4.4 ks, so percentile error is bounded by bucket width
+/// while `record` stays allocation-free and O(1). Designed for the
+/// [`crate::coordinator::server::ServerCore`] per-request latency stats
+/// (`{"op":"stats"}` and `BENCH_serving.json`):
+///
+/// - **Monotone percentiles**: `p <= q` implies
+///   `percentile(p) <= percentile(q)` (cumulative-count search over fixed
+///   buckets, clamped to the observed `[min, max]`).
+/// - **Associative, commutative merge**: counts add element-wise and the
+///   duration sum is saturating integer nanoseconds, so merging per-replica
+///   histograms in any grouping yields identical stats (property-tested).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum_ns: u64,
+    min_s: f64,
+    max_s: f64,
+}
+
+/// Smallest bucketed latency (seconds); everything below lands in bucket 0.
+const HIST_MIN_S: f64 = 1e-6;
+/// Buckets per octave (factor-of-two range).
+const HIST_PER_OCTAVE: f64 = 8.0;
+/// 8/octave × 32 octaves ≈ 1 µs .. 4.4 ks.
+const HIST_BUCKETS: usize = 256;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: vec![0; HIST_BUCKETS],
+            total: 0,
+            sum_ns: 0,
+            min_s: f64::INFINITY,
+            max_s: 0.0,
+        }
+    }
+
+    fn bucket_of(s: f64) -> usize {
+        if s <= HIST_MIN_S {
+            return 0; // `record` clamps, so s is finite and >= 0 here
+        }
+        let idx = ((s / HIST_MIN_S).log2() * HIST_PER_OCTAVE).floor() as usize;
+        idx.min(HIST_BUCKETS - 1)
+    }
+
+    /// Geometric midpoint of a bucket (seconds).
+    fn bucket_mid(idx: usize) -> f64 {
+        HIST_MIN_S * 2f64.powf((idx as f64 + 0.5) / HIST_PER_OCTAVE)
+    }
+
+    /// Record one latency in seconds. Negative/NaN values clamp to 0.
+    pub fn record(&mut self, seconds: f64) {
+        let s = if seconds.is_finite() && seconds > 0.0 { seconds } else { 0.0 };
+        self.counts[Self::bucket_of(s)] += 1;
+        self.total += 1;
+        self.sum_ns = self.sum_ns.saturating_add((s * 1e9).round() as u64);
+        self.min_s = self.min_s.min(s);
+        self.max_s = self.max_s.max(s);
+    }
+
+    /// Record one latency from a `Duration`.
+    pub fn record_duration(&mut self, d: Duration) {
+        self.record(d.as_secs_f64());
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Mean recorded latency in seconds (0 when empty).
+    pub fn mean_s(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum_ns as f64 / 1e9 / self.total as f64
+    }
+
+    pub fn min_s(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.min_s
+        }
+    }
+
+    pub fn max_s(&self) -> f64 {
+        self.max_s
+    }
+
+    /// Approximate percentile (seconds), `p` in [0, 100]. Returns the
+    /// geometric midpoint of the bucket holding the rank-`ceil(p/100·n)`
+    /// sample, clamped to the observed `[min, max]` so no percentile ever
+    /// leaves the observed range.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let p = p.clamp(0.0, 100.0);
+        let rank = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_mid(i).clamp(self.min_s, self.max_s);
+            }
+        }
+        self.max_s
+    }
+
+    /// Merge another histogram into this one (associative + commutative).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+        if other.total > 0 {
+            self.min_s = self.min_s.min(other.min_s);
+            self.max_s = self.max_s.max(other.max_s);
+        }
+    }
+
+    /// One-line summary used by the serve log and loadgen report.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={} p50={} p95={} p99={} max={}",
+            self.total,
+            fmt_duration_s(self.mean_s()),
+            fmt_duration_s(self.percentile(50.0)),
+            fmt_duration_s(self.percentile(95.0)),
+            fmt_duration_s(self.percentile(99.0)),
+            fmt_duration_s(self.max_s()),
+        )
+    }
+}
+
 /// Time a closure once.
 pub fn time_once<R, F: FnOnce() -> R>(f: F) -> (R, Duration) {
     let t0 = Instant::now();
@@ -169,6 +319,116 @@ mod tests {
         assert_eq!(stats.n, 5);
         assert!(stats.mean_s >= 0.0);
         assert!(stats.min_s <= stats.max_s);
+    }
+
+    #[test]
+    fn histogram_basics() {
+        let mut h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.mean_s(), 0.0);
+        for ms in [1.0, 2.0, 3.0, 4.0, 100.0] {
+            h.record(ms * 1e-3);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.min_s() - 1e-3).abs() < 1e-12);
+        assert!((h.max_s() - 0.1).abs() < 1e-12);
+        // Bucket resolution is ~9%, so percentiles land near the samples.
+        assert!((h.percentile(50.0) - 3e-3).abs() < 3e-4);
+        assert!(h.percentile(0.0) >= h.min_s());
+        assert!(h.percentile(100.0) <= h.max_s());
+        assert!(h.mean_s() > 0.0);
+        assert!(h.summary().starts_with("n=5"));
+        // Degenerate inputs clamp instead of poisoning the buckets.
+        h.record(-1.0);
+        h.record(f64::NAN);
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.min_s(), 0.0);
+    }
+
+    #[test]
+    fn histogram_percentiles_track_known_distribution() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-4); // 0.1ms .. 100ms uniform
+        }
+        let p50 = h.percentile(50.0);
+        let p95 = h.percentile(95.0);
+        let p99 = h.percentile(99.0);
+        assert!((p50 - 0.05).abs() / 0.05 < 0.10, "p50={p50}");
+        assert!((p95 - 0.095).abs() / 0.095 < 0.10, "p95={p95}");
+        assert!((p99 - 0.099).abs() / 0.099 < 0.10, "p99={p99}");
+        assert!(p50 <= p95 && p95 <= p99);
+    }
+
+    #[test]
+    fn prop_histogram_percentile_monotone() {
+        // For any sample set and any pair p <= q, percentile(p) <=
+        // percentile(q), and all percentiles stay within [min, max].
+        let cfg = crate::util::miniprop::Config { cases: 128, ..Default::default() };
+        crate::util::miniprop::forall_simple(
+            &cfg,
+            |rng: &mut crate::util::prng::Rng| {
+                let n = rng.range(1, 60);
+                let samples: Vec<f64> =
+                    (0..n).map(|_| rng.f64() * 10f64.powi(rng.range(0, 7) as i32 - 4)).collect();
+                let ps: Vec<f64> = (0..8).map(|_| rng.f64() * 100.0).collect();
+                (samples, ps)
+            },
+            |(samples, ps)| {
+                let mut h = Histogram::new();
+                for s in samples {
+                    h.record(*s);
+                }
+                let mut sorted = ps.clone();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let vals: Vec<f64> = sorted.iter().map(|p| h.percentile(*p)).collect();
+                vals.windows(2).all(|w| w[0] <= w[1])
+                    && vals.iter().all(|v| *v >= h.min_s() && *v <= h.max_s())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_histogram_merge_associative_commutative() {
+        // (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c) and a ⊕ b == b ⊕ a, exactly —
+        // the invariant that makes per-replica stats aggregation safe.
+        let cfg = crate::util::miniprop::Config { cases: 96, ..Default::default() };
+        crate::util::miniprop::forall_simple(
+            &cfg,
+            |rng: &mut crate::util::prng::Rng| {
+                let mut parts: Vec<Vec<f64>> = Vec::new();
+                for _ in 0..3 {
+                    let n = rng.range(0, 20);
+                    parts.push((0..n).map(|_| rng.f64() * 0.5).collect());
+                }
+                parts
+            },
+            |parts| {
+                let hs: Vec<Histogram> = parts
+                    .iter()
+                    .map(|p| {
+                        let mut h = Histogram::new();
+                        for s in p {
+                            h.record(*s);
+                        }
+                        h
+                    })
+                    .collect();
+                let mut left = hs[0].clone();
+                left.merge(&hs[1]);
+                left.merge(&hs[2]);
+                let mut bc = hs[1].clone();
+                bc.merge(&hs[2]);
+                let mut right = hs[0].clone();
+                right.merge(&bc);
+                let mut ba = hs[1].clone();
+                ba.merge(&hs[0]);
+                let mut ab = hs[0].clone();
+                ab.merge(&hs[1]);
+                left == right && ab == ba
+            },
+        );
     }
 
     #[test]

@@ -5,12 +5,16 @@ Three emitters write these files (see DESIGN.md §3):
 
 - rust/benches/substrate.rs -> BENCH_sparsity.json, BENCH_packed.json
 - rust/benches/tables.rs    -> BENCH_sparsify_overhead.json
+- rust/src/launcher/loadgen.rs (`nmsparse loadgen`, also wrapped by
+  rust/benches/serving.rs)  -> BENCH_serving.json
 
-`nmsparse table table6` and `examples/hw_breakeven.rs` consume them, so a
-malformed dump silently degrades the measured columns back to the analytic
-fallbacks. This script fails CI loudly instead. Files that have not been
-produced yet are fine (benches are optional in the tier-1 gate); files
-that exist but violate their schema are not.
+`nmsparse table table6`/`table serving` and `examples/hw_breakeven.rs`
+consume them, so a malformed dump silently degrades the measured columns
+back to the analytic fallbacks. This script fails CI loudly instead.
+Files that have not been produced yet are fine (benches are optional in
+the tier-1 gate); files that exist but violate their schema are not, and
+a BENCH_*.json with no registered schema is an error (every emitter must
+register here).
 
 Usage: tools/check_bench_json.py [dir ...]   (default: repo root and rust/)
 """
@@ -117,10 +121,44 @@ def check_packed(doc, path):
     return bad
 
 
+def check_serving(doc, path):
+    bad = 0
+    for key in ("mode", "backend"):
+        bad |= require(doc, key, str, path, "top level")
+    for key in ("replicas", "queue_cap", "requests", "served", "rejected",
+                "errors", "wall_s", "throughput_rps", "batch_occupancy",
+                "rejection_rate"):
+        bad |= require(doc, key, (int, float), path, "top level")
+    bad |= require(doc, "latency_ms", dict, path, "top level")
+    if bad:
+        return bad
+    lat = doc["latency_ms"]
+    for key in ("mean", "p50", "p95", "p99", "max"):
+        bad |= require(lat, key, (int, float), path, "latency_ms")
+    if bad:
+        return bad
+    if not lat["p50"] <= lat["p95"] <= lat["p99"]:
+        bad |= err(path, f"latency percentiles not monotone: "
+                         f"p50={lat['p50']} p95={lat['p95']} p99={lat['p99']}")
+    if doc["served"] > 0 and doc["throughput_rps"] <= 0:
+        bad |= err(path, "served > 0 but throughput_rps <= 0")
+    if doc["served"] + doc["rejected"] > doc["requests"]:
+        bad |= err(path, f"served + rejected ({doc['served']} + {doc['rejected']}) "
+                         f"exceeds requests ({doc['requests']})")
+    if not 0.0 <= doc["batch_occupancy"] <= 1.0 + 1e-9:
+        bad |= err(path, f"batch_occupancy {doc['batch_occupancy']} outside [0, 1]")
+    if not 0.0 <= doc["rejection_rate"] <= 1.0 + 1e-9:
+        bad |= err(path, f"rejection_rate {doc['rejection_rate']} outside [0, 1]")
+    if doc["replicas"] < 1:
+        bad |= err(path, f"replicas {doc['replicas']} < 1")
+    return bad
+
+
 CHECKERS = {
     "BENCH_sparsity.json": check_sparsity,
     "BENCH_sparsify_overhead.json": check_overhead,
     "BENCH_packed.json": check_packed,
+    "BENCH_serving.json": check_serving,
 }
 
 
@@ -142,7 +180,8 @@ def main(argv):
                 continue
             checker = CHECKERS.get(path.name)
             if checker is None:
-                print(f"check_bench_json: {path}: unknown BENCH file (no schema), skipping")
+                bad |= err(path, "unknown BENCH_*.json with no registered schema "
+                                 "(register a checker in tools/check_bench_json.py)")
                 continue
             seen += 1
             bad |= checker(doc, path)

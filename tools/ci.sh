@@ -25,8 +25,16 @@ cargo build --release
 cargo test -q --test packed_roundtrip
 cargo test -q
 cargo bench --no-run
-# Any bench dumps lying around must match the schemas table6/hw_breakeven
-# consume (absent files are fine — benches are optional here).
+# Serving smoke: a bounded loadgen run against a 2-replica ServerCore on
+# the synthetic backend (no PJRT, no artifacts needed). Emits
+# BENCH_serving.json, which the schema gate below then validates — this
+# proves admission control, drain and the latency histogram end to end.
+cargo run --release -q -- loadgen \
+  --replicas 2 --queue-cap 64 --max-requests 96 --concurrency 8 \
+  --forward-us 100 --out BENCH_serving.json
+# Any bench dumps lying around must match the schemas the tables consume
+# (absent files are fine — benches are optional here; unknown BENCH_*.json
+# names or schema violations are not).
 if command -v python3 >/dev/null 2>&1; then
   python3 "$ROOT/tools/check_bench_json.py" "$ROOT" "$ROOT/rust" "$(pwd)"
 else
