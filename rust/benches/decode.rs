@@ -1,0 +1,162 @@
+//! Native decode-engine benchmarks -> `BENCH_decode.json`.
+//!
+//! Measures the numbers the paper's serving argument turns on, from a
+//! *real* decode loop (seeded synthetic model, no PJRT, no artifacts):
+//!
+//! - prefill vs decode tokens/sec;
+//! - per-step latency at several context lengths, for the KV-cached step
+//!   AND the full-context baseline (one whole-row forward per token, the
+//!   PJRT path's semantics) — the cached step must not inherit the
+//!   baseline's growth with context;
+//! - measured activation bytes per step: dense-equivalent vs what the
+//!   compressed-domain path actually moved (packed payload + raw `u32`
+//!   metadata words).
+//!
+//! `tools/check_bench_json.py` gates the emitted schema, including
+//! `full_step_growth > cached_step_growth`.
+
+use nmsparse::engine::{EngineConfig, NativeEngine, NativeSparsity};
+use nmsparse::sparsity::Pattern;
+use nmsparse::util::bench::BenchSuite;
+use nmsparse::util::json::Json;
+use nmsparse::util::prng::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("decode");
+    suite.target_time_s = 0.6;
+    suite.samples = 10;
+
+    let cfg = EngineConfig {
+        vocab: 160,
+        d_model: 128,
+        n_layers: 2,
+        n_heads: 4,
+        ffn: 256,
+        max_seq: 128,
+    };
+    let pattern = Pattern::NM { n: 8, m: 16 };
+    let mut engine =
+        NativeEngine::synthetic(&cfg, 7, NativeSparsity::act(pattern)).expect("engine");
+    let mut kv = engine.new_cache();
+    let mut rng = Rng::new(11);
+    let row: Vec<u32> = (0..cfg.max_seq).map(|_| rng.range(3, cfg.vocab) as u32).collect();
+
+    // ---- prefill throughput ----
+    let prefill_len = 64usize;
+    suite.bench_with_items(
+        &format!("decode/prefill {prefill_len} tokens (tokens)"),
+        Some(prefill_len as f64),
+        || {
+            kv.reset();
+            engine.prefill(&mut kv, &row[..prefill_len]).unwrap();
+        },
+    );
+    let prefill_tps = suite.rate_of(&format!("decode/prefill {prefill_len} tokens (tokens)"));
+
+    // ---- decode throughput (prefill 8, generate 32, KV-cached) ----
+    suite.bench_with_items("decode/generate 32 tokens after 8 (tokens)", Some(32.0), || {
+        let out = engine.generate_greedy(&mut kv, &row[..8], 32, &[]).unwrap();
+        std::hint::black_box(out);
+    });
+    let decode_tps = suite.rate_of("decode/generate 32 tokens after 8 (tokens)");
+
+    // ---- per-step latency vs context: cached step vs full-context ----
+    let contexts = [8usize, 32, 96];
+    let mut cached_ms = Vec::new();
+    let mut full_ms = Vec::new();
+    for &ctx in &contexts {
+        // Cached: prebuild the cache once, truncate back before each
+        // timed step so every iteration decodes at exactly `ctx`.
+        kv.reset();
+        engine.prefill(&mut kv, &row[..ctx]).unwrap();
+        let name = format!("decode/cached step @ ctx {ctx} (tokens)");
+        suite.bench_with_items(&name, Some(1.0), || {
+            kv.truncate(ctx);
+            engine.step(&mut kv, row[ctx]).unwrap();
+        });
+        cached_ms.push(step_ms(&suite, &name));
+        // Full-context baseline: one whole-row forward per token.
+        let name = format!("decode/full-context step @ ctx {ctx} (tokens)");
+        suite.bench_with_items(&name, Some(1.0), || {
+            engine.full_context(&mut kv, &row[..ctx]).unwrap();
+        });
+        full_ms.push(step_ms(&suite, &name));
+    }
+
+    // ---- measured bytes per step (packed vs dense-equivalent) ----
+    engine.reset_stats();
+    kv.reset();
+    engine.prefill(&mut kv, &row[..32]).unwrap();
+    let stats = engine.stats();
+    let dense_bytes_per_step = stats.dense_activation_bytes as f64 / stats.steps as f64;
+    let moved_bytes_per_step = stats.moved_activation_bytes as f64 / stats.steps as f64;
+
+    // ---- report ----
+    let cached_growth = cached_ms.last().unwrap() / cached_ms.first().unwrap().max(1e-9);
+    let full_growth = full_ms.last().unwrap() / full_ms.first().unwrap().max(1e-9);
+    println!(
+        "decode: step growth ctx {}->{}: cached {:.2}x vs full-context {:.2}x | \
+         bytes/step {:.0} -> {:.0} ({:.2}x reduction)",
+        contexts[0],
+        contexts[contexts.len() - 1],
+        cached_growth,
+        full_growth,
+        dense_bytes_per_step,
+        moved_bytes_per_step,
+        stats.bytes_reduction(),
+    );
+
+    let mut j = Json::obj();
+    j.insert("suite", "decode".into());
+    j.insert("backend", "synthetic".into());
+    j.insert("pattern", pattern.to_string().as_str().into());
+    j.insert("method", "ACT".into());
+    let mut m = Json::obj();
+    m.insert("vocab", (cfg.vocab as f64).into());
+    m.insert("d_model", (cfg.d_model as f64).into());
+    m.insert("n_layers", (cfg.n_layers as f64).into());
+    m.insert("ffn", (cfg.ffn as f64).into());
+    m.insert("max_seq", (cfg.max_seq as f64).into());
+    j.insert("model", m);
+    j.insert("prefill_tokens_per_sec", prefill_tps.unwrap_or(0.0).into());
+    j.insert("decode_tokens_per_sec", decode_tps.unwrap_or(0.0).into());
+    let mut ctx_arr = Vec::new();
+    for (i, &ctx) in contexts.iter().enumerate() {
+        let mut e = Json::obj();
+        e.insert("context", (ctx as f64).into());
+        e.insert("cached_step_ms", cached_ms[i].into());
+        e.insert("full_step_ms", full_ms[i].into());
+        ctx_arr.push(e);
+    }
+    j.insert("contexts", Json::Arr(ctx_arr));
+    j.insert("cached_step_growth", cached_growth.into());
+    j.insert("full_step_growth", full_growth.into());
+    j.insert("dense_bytes_per_step", dense_bytes_per_step.into());
+    j.insert("packed_bytes_per_step", moved_bytes_per_step.into());
+    j.insert("bytes_reduction", (dense_bytes_per_step / moved_bytes_per_step.max(1e-9)).into());
+    // Only a complete run writes the dump — a --filter'd run would emit
+    // zeros that the schema gate rightly rejects.
+    let complete = cached_ms.iter().chain(&full_ms).all(|ms| *ms > 0.0)
+        && prefill_tps.is_some()
+        && decode_tps.is_some();
+    if complete {
+        match std::fs::write("BENCH_decode.json", j.pretty()) {
+            Ok(()) => println!("wrote BENCH_decode.json"),
+            Err(e) => eprintln!("could not write BENCH_decode.json: {e}"),
+        }
+    } else {
+        println!("decode: filtered run — skipping BENCH_decode.json");
+    }
+
+    suite.finish();
+}
+
+/// Mean per-iteration time of a named benchmark, in milliseconds.
+fn step_ms(suite: &BenchSuite, name: &str) -> f64 {
+    suite
+        .results()
+        .iter()
+        .find(|r| r.name == name)
+        .map(|r| r.stats.mean_s * 1e3)
+        .unwrap_or(0.0)
+}

@@ -9,7 +9,9 @@
 //!   admission, session-affine routing, deadline-driven batching,
 //!   per-request latency stats) behind `nmsparse serve` / `loadgen`;
 //! - [`Coordinator`]: the high-level API the eval harness, tables, server
-//!   and examples use — score rows, measure perplexity, greedy-generate.
+//!   and examples use — score rows, measure perplexity, greedy-generate
+//!   (full-context PJRT by default; KV-cached native decode via
+//!   [`Coordinator::set_native`] / `EnginePool::native_engine`).
 
 pub mod batcher;
 pub mod methods;
@@ -82,6 +84,11 @@ pub struct Coordinator {
     pub pool: EnginePool,
     /// Running counts for throughput reporting.
     pub stats: CoordStats,
+    /// Route generation through the native KV-cached engine
+    /// (`EnginePool::native_engine`) instead of full-context PJRT
+    /// forwards. Scoring/perplexity stay on the PJRT path — the native
+    /// engine's win is the decode loop.
+    use_native: bool,
 }
 
 impl Coordinator {
@@ -90,7 +97,27 @@ impl Coordinator {
         Ok(Coordinator {
             pool: EnginePool::open(artifacts_dir)?,
             stats: CoordStats::new(),
+            use_native: false,
         })
+    }
+
+    /// Open with native KV-cached decode selected (see
+    /// [`Coordinator::set_native`]).
+    pub fn open_native(artifacts_dir: &Path) -> Result<Coordinator> {
+        let mut c = Coordinator::open(artifacts_dir)?;
+        c.set_native(true);
+        Ok(c)
+    }
+
+    /// Select (or deselect) the native decode engine for generation. The
+    /// full-context PJRT path stays available and is the equivalence
+    /// oracle (`rust/tests/integration.rs`).
+    pub fn set_native(&mut self, on: bool) {
+        self.use_native = on;
+    }
+
+    pub fn uses_native(&self) -> bool {
+        self.use_native
     }
 
     /// Sum of continuation logprobs for each `(row, span)`:
@@ -208,9 +235,16 @@ impl Coordinator {
     }
 
     /// Greedy generation over borrowed prompt rows: extend each prompt
-    /// until a stop token or `max_new` tokens. Prompts are processed in
-    /// fixed-size groups; each step runs one full-context forward (no KV
-    /// cache — the model is small and the artifact shape is static).
+    /// until a stop token or `max_new` tokens.
+    ///
+    /// Two execution paths share these semantics:
+    /// - **PJRT (default):** prompts are processed in fixed-size groups;
+    ///   each step runs one full-context forward (the artifact shape is
+    ///   static).
+    /// - **Native ([`Coordinator::set_native`]):** each prompt prefills
+    ///   once and then decodes one token per step against a KV cache
+    ///   (`engine::NativeEngine`), with the configured N:M activation
+    ///   sparsification applied in the compressed domain at every step.
     ///
     /// Takes `&[&[u32]]` so per-token callers (the serve decode loop, which
     /// borrows each session's incrementally-maintained row) don't clone
@@ -223,6 +257,9 @@ impl Coordinator {
         max_new: usize,
         stop: &[u32],
     ) -> Result<Vec<Vec<u32>>> {
+        if self.use_native {
+            return self.generate_refs_native(cfg, prompts, max_new, stop);
+        }
         let engine = self.pool.engine(cfg)?;
         let dims = engine.dims().clone();
         let (batch, seq, vocab) = (dims.batch, dims.seq, dims.vocab);
@@ -257,6 +294,31 @@ impl Coordinator {
                     }
                 }
             }
+        }
+        Ok(outputs)
+    }
+
+    /// The KV-cached generation loop behind [`Coordinator::generate_refs`]
+    /// when the native engine is selected. One prefill per prompt, then
+    /// one step per token; `forwards` counts engine steps (a step *is* a
+    /// forward on this path), so throughput reports stay honest.
+    fn generate_refs_native(
+        &self,
+        cfg: &MethodConfig,
+        prompts: &[&[u32]],
+        max_new: usize,
+        stop: &[u32],
+    ) -> Result<Vec<Vec<u32>>> {
+        let engine = self.pool.native_engine(cfg)?;
+        let mut engine = engine.borrow_mut();
+        let mut kv = engine.new_cache();
+        let mut outputs = Vec::with_capacity(prompts.len());
+        for prompt in prompts {
+            let steps_before = engine.stats().steps;
+            let out = engine.generate_greedy(&mut kv, prompt, max_new, stop)?;
+            self.stats.add_forwards((engine.stats().steps - steps_before) as usize);
+            self.stats.add_tokens_generated(out.len());
+            outputs.push(out);
         }
         Ok(outputs)
     }

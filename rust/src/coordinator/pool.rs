@@ -10,6 +10,7 @@
 //! inside each worker so no `Rc<Engine>` ever crosses a thread boundary.
 
 use crate::coordinator::methods::MethodConfig;
+use crate::engine::{EngineConfig, NativeEngine, NativeModel, NativeSparsity};
 use crate::runtime::{Engine, Manifest, Runtime, Variant};
 use crate::util::tensor::TensorStore;
 use anyhow::{Context, Result};
@@ -28,6 +29,9 @@ pub struct EnginePool {
     pub methodparams: TensorStore,
     variants: RefCell<HashMap<String, Arc<Variant>>>,
     engines: RefCell<HashMap<String, Rc<Engine>>>,
+    /// Native (KV-cached, PJRT-free) engines, same cache key space as the
+    /// bound PJRT engines.
+    natives: RefCell<HashMap<String, Rc<RefCell<NativeEngine>>>>,
     /// Compile + bind wall-times, for the perf report.
     pub load_log: RefCell<Vec<(String, f64)>>,
 }
@@ -48,6 +52,7 @@ impl EnginePool {
             methodparams,
             variants: RefCell::new(HashMap::new()),
             engines: RefCell::new(HashMap::new()),
+            natives: RefCell::new(HashMap::new()),
             load_log: RefCell::new(Vec::new()),
         })
     }
@@ -83,6 +88,29 @@ impl EnginePool {
             .borrow_mut()
             .push((format!("bind:{}", cfg.id), t0.elapsed().as_secs_f64()));
         self.engines.borrow_mut().insert(ekey, Rc::clone(&engine));
+        Ok(engine)
+    }
+
+    /// Get (build-caching) a *native* engine for a method configuration:
+    /// the artifacts checkpoint (after this config's weight transform)
+    /// loaded into a pure-rust KV-cached [`NativeEngine`] at the
+    /// manifest's dimensions. No PJRT compile or device upload — the
+    /// native path works with the default-off `pjrt` feature.
+    pub fn native_engine(&self, cfg: &MethodConfig) -> Result<Rc<RefCell<NativeEngine>>> {
+        let ekey = cfg.engine_key();
+        if let Some(e) = self.natives.borrow().get(&ekey) {
+            return Ok(Rc::clone(e));
+        }
+        let t0 = std::time::Instant::now();
+        let sparsity = NativeSparsity::from_method(cfg)?;
+        let weights = cfg.transformed_weights(&self.weights)?;
+        let model = NativeModel::from_store(&weights, &EngineConfig::from_dims(&self.manifest.dims))
+            .context("building native model from the artifacts checkpoint")?;
+        let engine = Rc::new(RefCell::new(NativeEngine::new(model, sparsity)?));
+        self.load_log
+            .borrow_mut()
+            .push((format!("native:{}", cfg.id), t0.elapsed().as_secs_f64()));
+        self.natives.borrow_mut().insert(ekey, Rc::clone(&engine));
         Ok(engine)
     }
 

@@ -9,19 +9,27 @@
 //!   (`EnginePool::engine` returns `Rc<Engine>`), so each worker thread
 //!   builds its *own* backend via the caller's factory — for the real
 //!   path that means each replica opens its own `Coordinator`/engine
-//!   pool ([`CoordinatorBackend`]); tests and CI use the artifact-free
-//!   [`SyntheticBackend`].
+//!   pool ([`CoordinatorBackend`]); `--backend native` runs the
+//!   KV-cached [`NativeBackend`] (artifacts checkpoint when present,
+//!   seeded synthetic model otherwise); tests and CI use the
+//!   artifact-free [`SyntheticBackend`].
 //! - **Session-affine routing.** [`ServerHandle::submit_with_key`] pins a
 //!   session key (e.g. one TCP connection) to a replica, so decode
 //!   sessions and their follow-up traffic stay on the engine that holds
 //!   them; keyless traffic goes to the least-loaded replica.
+//! - **Work stealing.** Staged requests live in per-replica injection
+//!   queues; an *idle* replica steals the oldest staged request from the
+//!   deepest other queue (skewed session keys no longer serialize on one
+//!   engine). Affinity still governs placement — stealing only moves
+//!   work that has not started, and a submit into a backlogged replica
+//!   wakes a potential thief.
 //! - **Bounded admission.** Each replica admits at most `queue_cap`
 //!   in-flight requests; beyond that [`SubmitError::Overloaded`] is
 //!   returned *synchronously* and the protocol layer replies
 //!   `{"ok":false,"error":"overloaded"}` instead of queueing without
 //!   bound.
 //! - **Deadline-driven waits.** Requests stage in a
-//!   [`Batcher`]; an idle replica blocks on its channel until
+//!   [`Batcher`]; an idle replica blocks on its wake channel until
 //!   [`Batcher::next_deadline`] (or a new request) instead of the seed's
 //!   fixed 2 ms sleep — full batches dispatch immediately, partial
 //!   batches after `max_wait`.
@@ -37,9 +45,15 @@ use crate::coordinator::batcher::{occupancy, BatchPolicy, Batcher};
 use crate::coordinator::methods::MethodConfig;
 use crate::coordinator::scheduler::{SchedPolicy, Scheduler, Work};
 use crate::coordinator::Coordinator;
+use crate::engine::{
+    EngineConfig, KvCache, NativeEngine, NativeModel, NativeSparsity, SessionKvPool,
+};
+use crate::runtime::Manifest;
+use crate::sparsity::Pattern;
 use crate::util::stats::Histogram;
+use crate::util::tensor::TensorStore;
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::fmt;
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -85,7 +99,8 @@ impl fmt::Display for SubmitError {
 }
 
 /// Handle to one in-flight request: which replica took it, and where its
-/// terminal [`Response`] will arrive.
+/// terminal [`Response`] will arrive. A stolen request answers from the
+/// thief; `replica` records the admission target.
 pub struct Ticket {
     pub replica: usize,
     rx: mpsc::Receiver<Response>,
@@ -123,12 +138,27 @@ pub trait ReplicaBackend {
     /// exhausted and the session must end.
     fn decode_step(&mut self, prompts: &[&[u32]]) -> Result<Vec<Option<u32>>>;
 
+    /// Session-aware decode step: `(session id, full row)` pairs. The id
+    /// is stable for the life of a generate session on this replica —
+    /// KV-cached backends key incremental state by it. Default: ignore
+    /// the ids (stateless backends).
+    fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> Result<Vec<Option<u32>>> {
+        let prompts: Vec<&[u32]> = rows.iter().map(|(_, p)| *p).collect();
+        self.decode_step(&prompts)
+    }
+
+    /// A generate session finished (stop/budget/context/error) — release
+    /// any per-session state. Default: nothing to release.
+    fn end_session(&mut self, _id: u64) {}
+
     /// Tokens that terminate a generate session.
     fn stop_tokens(&self) -> Vec<u32>;
 }
 
-/// The production backend: one [`Coordinator`] (engine pool, PJRT client,
-/// bound engine) owned wholesale by one replica thread.
+/// The production PJRT backend: one [`Coordinator`] (engine pool, PJRT
+/// client, bound engine) owned wholesale by one replica thread. Every
+/// decode step is a full-context forward (the artifact executables are
+/// fixed-shape) — [`NativeBackend`] is the KV-cached alternative.
 pub struct CoordinatorBackend {
     coord: Coordinator,
     cfg: MethodConfig,
@@ -162,6 +192,194 @@ impl ReplicaBackend for CoordinatorBackend {
     fn decode_step(&mut self, prompts: &[&[u32]]) -> Result<Vec<Option<u32>>> {
         let outs = self.coord.generate_refs(&self.cfg, prompts, 1, &self.stop)?;
         Ok(outs.into_iter().map(|o| o.into_iter().next()).collect())
+    }
+
+    fn stop_tokens(&self) -> Vec<u32> {
+        self.stop.clone()
+    }
+}
+
+/// The native KV-cached backend (`--backend native`): a pure-rust
+/// [`NativeEngine`] whose generate sessions decode one token per step
+/// against per-session caches in a bounded LRU [`SessionKvPool`] — no
+/// full-context re-forward per token, no PJRT, no artifacts required
+/// (weights come from the artifacts checkpoint when present, otherwise a
+/// seeded deterministic synthetic model).
+///
+/// Context-edge sessions follow the `generate_greedy` budget rule (the
+/// token that fills the context is emitted, then the session ends). One
+/// documented corner: a context-*edge* session evicted from the LRU pool
+/// right before its terminal step is indistinguishable from a fresh
+/// edge prompt and restarts its window for one extra token — bounded by
+/// the session's `max_new`, and never a wrong token.
+pub struct NativeBackend {
+    engine: NativeEngine,
+    /// Scratch cache for prefill-only work (scoring, stateless decode).
+    score_kv: KvCache,
+    /// Per-session incremental caches, keyed by scheduler session id.
+    sessions: SessionKvPool,
+    stop: Vec<u32>,
+    batch: usize,
+    /// "artifacts" or "synthetic" — where the weights came from.
+    pub origin: &'static str,
+}
+
+impl NativeBackend {
+    /// Resident per-session KV caches per replica; an evicted session is
+    /// re-prefilled from its row on its next step (slower, never wrong).
+    pub const DEFAULT_SESSION_CAP: usize = 64;
+
+    /// Artifacts checkpoint when `io_manifest.json` exists under
+    /// `artifacts` (with this method's weight transform applied), else a
+    /// seeded synthetic model at [`EngineConfig::tiny`] dimensions.
+    pub fn open(
+        artifacts: &Path,
+        pattern: Pattern,
+        method: &str,
+        stop: Vec<u32>,
+        batch: usize,
+        seed: u64,
+    ) -> Result<NativeBackend> {
+        let mcfg = MethodConfig::by_name(method, pattern)?;
+        let sparsity = NativeSparsity::from_method(&mcfg)?;
+        if artifacts.join("io_manifest.json").exists() {
+            let manifest = Manifest::load(artifacts)?;
+            let weights = TensorStore::load(&artifacts.join("ckpt"))?;
+            let weights = mcfg.transformed_weights(&weights)?;
+            let cfg = EngineConfig::from_dims(&manifest.dims);
+            let model = NativeModel::from_store(&weights, &cfg)?;
+            NativeBackend::from_model(model, sparsity, stop, batch, "artifacts")
+        } else {
+            let model = NativeModel::synthetic(&EngineConfig::tiny(), seed);
+            NativeBackend::from_model(model, sparsity, stop, batch, "synthetic")
+        }
+    }
+
+    /// Purely synthetic backend (tests, loadgen, CI smoke).
+    pub fn synthetic(
+        cfg: &EngineConfig,
+        seed: u64,
+        sparsity: NativeSparsity,
+        stop: Vec<u32>,
+        batch: usize,
+    ) -> Result<NativeBackend> {
+        let model = NativeModel::synthetic(cfg, seed);
+        NativeBackend::from_model(model, sparsity, stop, batch, "synthetic")
+    }
+
+    fn from_model(
+        model: NativeModel,
+        sparsity: NativeSparsity,
+        stop: Vec<u32>,
+        batch: usize,
+        origin: &'static str,
+    ) -> Result<NativeBackend> {
+        let engine = NativeEngine::new(model, sparsity)?;
+        Ok(NativeBackend {
+            score_kv: engine.new_cache(),
+            sessions: SessionKvPool::new(engine.config(), Self::DEFAULT_SESSION_CAP),
+            engine,
+            stop,
+            batch: batch.max(1),
+            origin,
+        })
+    }
+
+    /// Override the LRU session-cache bound (tests pin eviction safety
+    /// at cap 1).
+    pub fn with_session_cap(mut self, cap: usize) -> NativeBackend {
+        self.sessions = SessionKvPool::new(self.engine.config(), cap);
+        self
+    }
+
+    pub fn engine(&self) -> &NativeEngine {
+        &self.engine
+    }
+}
+
+impl ReplicaBackend for NativeBackend {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn score_rows(&mut self, rows: &[(Vec<u32>, (usize, usize))]) -> Result<Vec<f64>> {
+        let max_seq = self.engine.config().max_seq;
+        let mut out = Vec::with_capacity(rows.len());
+        for (tokens, (s, e)) in rows {
+            // Left-crop long rows and re-base the span, exactly like
+            // `Coordinator::score_rows`.
+            let (row, span) = if tokens.len() > max_seq {
+                let cut = tokens.len() - max_seq;
+                anyhow::ensure!(
+                    *s > cut,
+                    "row of {} tokens cannot be scored: continuation span starts \
+                     inside the cropped prefix (max_seq={max_seq})",
+                    tokens.len()
+                );
+                (&tokens[cut..], (*s - cut, *e - cut))
+            } else {
+                (&tokens[..], (*s, *e))
+            };
+            out.push(self.engine.score_span(&mut self.score_kv, row, span)?);
+        }
+        Ok(out)
+    }
+
+    /// Stateless fallback: one full-context forward per call.
+    fn decode_step(&mut self, prompts: &[&[u32]]) -> Result<Vec<Option<u32>>> {
+        let max_seq = self.engine.config().max_seq;
+        let mut out = Vec::with_capacity(prompts.len());
+        for p in prompts {
+            if p.len() > max_seq {
+                out.push(None);
+                continue;
+            }
+            self.engine.full_context(&mut self.score_kv, p)?;
+            out.push(Some(self.engine.argmax_token()));
+        }
+        Ok(out)
+    }
+
+    /// The KV-cached step: each session advances by feeding only the
+    /// tokens its cache has not seen (normally exactly one).
+    fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> Result<Vec<Option<u32>>> {
+        let max_seq = self.engine.config().max_seq;
+        let mut out = Vec::with_capacity(rows.len());
+        for (id, row) in rows {
+            if row.len() >= max_seq {
+                if self.sessions.contains(*id) {
+                    // We already emitted the token that filled the
+                    // context (the `generate_greedy` budget rule) —
+                    // session over.
+                    self.sessions.remove(*id);
+                    out.push(None);
+                } else {
+                    // Fresh prompt at/past the context edge: left-crop
+                    // (the PJRT `pack_rows` rule) and emit the one
+                    // budget-rule token; the next step ends the session.
+                    let cropped = &row[row.len() - max_seq..];
+                    let kv = self.sessions.get_or_create(*id);
+                    kv.reset();
+                    self.engine.prefill(kv, cropped)?;
+                    out.push(Some(self.engine.argmax_token()));
+                }
+                continue;
+            }
+            let kv = self.sessions.get_or_create(*id);
+            if kv.len() >= row.len() {
+                // Desynced (an evicted-and-rebound cache starts at 0, so
+                // only a shrunken row lands here): rebuild from scratch.
+                kv.reset();
+            }
+            let start = kv.len();
+            self.engine.prefill(kv, &row[start..])?;
+            out.push(Some(self.engine.argmax_token()));
+        }
+        Ok(out)
+    }
+
+    fn end_session(&mut self, id: u64) {
+        self.sessions.remove(id);
     }
 
     fn stop_tokens(&self) -> Vec<u32> {
@@ -256,6 +474,8 @@ pub struct ReplicaStats {
     pub errors: u64,
     /// Requests refused at admission (queue full).
     pub rejected: u64,
+    /// Staged requests this replica stole from a deeper queue while idle.
+    pub stolen: u64,
     /// Engine dispatches (score batches + decode steps).
     pub batches: u64,
     /// Useful rows across those dispatches.
@@ -274,6 +494,7 @@ pub struct ServerStats {
     pub served: u64,
     pub errors: u64,
     pub rejected: u64,
+    pub stolen: u64,
     pub batches: u64,
     pub batch_rows: u64,
     pub batch_slots: u64,
@@ -322,22 +543,29 @@ impl Default for ServerConfig {
     }
 }
 
-enum Envelope {
-    Req { req: Request, reply: mpsc::Sender<Response>, t0: Instant },
-    /// Wakes a replica blocked on its channel (shutdown path).
-    Wake,
+/// One admitted request staged for (or stolen into) a replica.
+struct Staged {
+    req: Request,
+    reply: mpsc::Sender<Response>,
+    t0: Instant,
 }
 
 struct Shared {
     depth: Vec<AtomicUsize>,
     stats: Vec<Mutex<ReplicaStats>>,
+    /// Per-replica staging queues. Work an idle replica may steal lives
+    /// here; once a worker ingests an entry into its batcher/scheduler it
+    /// is no longer stealable.
+    inject: Vec<Mutex<VecDeque<Staged>>>,
     shutdown: AtomicBool,
 }
 
 /// Cloneable submitter — IO threads and load generators each hold one.
 #[derive(Clone)]
 pub struct ServerHandle {
-    txs: Vec<mpsc::Sender<Envelope>>,
+    /// Wake channels: one signal per staged request (plus shutdown/steal
+    /// hints). Requests themselves travel through `Shared::inject`.
+    txs: Vec<mpsc::Sender<()>>,
     shared: Arc<Shared>,
     rr: Arc<AtomicUsize>,
     queue_cap: usize,
@@ -354,7 +582,8 @@ impl ServerHandle {
     }
 
     /// Submit with optional session affinity: a `Some(key)` always routes
-    /// to `key % replicas`, so one session's traffic stays on one engine.
+    /// to `key % replicas`, so one session's traffic stays on one engine
+    /// (an idle replica may still steal it before it starts).
     pub fn submit_with_key(&self, key: Option<u64>, req: Request) -> Result<Ticket, SubmitError> {
         if self.shared.shutdown.load(Ordering::Acquire) {
             return Err(SubmitError::Closed);
@@ -365,7 +594,8 @@ impl ServerHandle {
             None => self.least_loaded(),
         };
         // Exact bounded admission: depth counts everything in flight on
-        // the replica (staged + scheduled), decremented on terminal reply.
+        // the replica (staged + scheduled), decremented on terminal reply
+        // (transferred to the thief when stolen).
         let admitted = self.shared.depth[replica]
             .fetch_update(Ordering::AcqRel, Ordering::Acquire, |d| {
                 if d < self.queue_cap {
@@ -380,12 +610,26 @@ impl ServerHandle {
             return Err(SubmitError::Overloaded { replica });
         }
         let (reply_tx, reply_rx) = mpsc::channel();
-        let env = Envelope::Req { req, reply: reply_tx, t0: Instant::now() };
-        if self.txs[replica].send(env).is_err() {
-            self.shared.depth[replica].fetch_sub(1, Ordering::AcqRel);
-            return Err(SubmitError::Closed);
+        let staged = Staged { req, reply: reply_tx, t0: Instant::now() };
+        {
+            // Signal-then-push under the queue lock: the worker's ingest
+            // also takes the lock, so a wake can never race past its own
+            // request.
+            let mut q = self.shared.inject[replica].lock().unwrap();
+            if self.txs[replica].send(()).is_err() {
+                drop(q);
+                self.shared.depth[replica].fetch_sub(1, Ordering::AcqRel);
+                return Err(SubmitError::Closed);
+            }
+            q.push_back(staged);
         }
         self.shared.stats[replica].lock().unwrap().submitted += 1;
+        // Steal hint: the target has a backlog — wake the least-loaded
+        // other replica so an idle engine can pull from this queue.
+        if n > 1 && self.shared.depth[replica].load(Ordering::Relaxed) >= 2 {
+            let thief = self.least_loaded_excluding(replica);
+            self.txs[thief].send(()).ok();
+        }
         Ok(Ticket { replica, rx: reply_rx })
     }
 
@@ -395,6 +639,23 @@ impl ServerHandle {
         let mut best_depth = usize::MAX;
         for i in 0..self.txs.len() {
             let r = (start + i) % self.txs.len();
+            let d = self.shared.depth[r].load(Ordering::Relaxed);
+            if d < best_depth {
+                best = r;
+                best_depth = d;
+            }
+        }
+        best
+    }
+
+    fn least_loaded_excluding(&self, skip: usize) -> usize {
+        let n = self.txs.len();
+        let mut best = (skip + 1) % n;
+        let mut best_depth = usize::MAX;
+        for r in 0..n {
+            if r == skip {
+                continue;
+            }
             let d = self.shared.depth[r].load(Ordering::Relaxed);
             if d < best_depth {
                 best = r;
@@ -422,6 +683,7 @@ impl ServerHandle {
             agg.served += s.served;
             agg.errors += s.errors;
             agg.rejected += s.rejected;
+            agg.stolen += s.stolen;
             agg.batches += s.batches;
             agg.batch_rows += s.batch_rows;
             agg.batch_slots += s.batch_slots;
@@ -458,6 +720,7 @@ impl ServerCore {
         let shared = Arc::new(Shared {
             depth: (0..n).map(|_| AtomicUsize::new(0)).collect(),
             stats: (0..n).map(|_| Mutex::new(ReplicaStats::default())).collect(),
+            inject: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
             shutdown: AtomicBool::new(false),
         });
         let factory = Arc::new(factory);
@@ -465,7 +728,7 @@ impl ServerCore {
         let mut workers = Vec::with_capacity(n);
         let mut ready_rxs = Vec::with_capacity(n);
         for r in 0..n {
-            let (tx, rx) = mpsc::channel::<Envelope>();
+            let (tx, rx) = mpsc::channel::<()>();
             let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
             let shared_r = Arc::clone(&shared);
             let factory_r = Arc::clone(&factory);
@@ -541,7 +804,7 @@ impl ServerCore {
     fn stop_workers(&self) {
         self.handle.shared.shutdown.store(true, Ordering::Release);
         for tx in &self.handle.txs {
-            tx.send(Envelope::Wake).ok();
+            tx.send(()).ok();
         }
     }
 
@@ -575,11 +838,49 @@ struct PendingReply {
     t0: Instant,
 }
 
-/// One replica's engine loop: stage → flush-by-deadline → dispatch.
+/// Steal the oldest staged request from the deepest other injection
+/// queue, moving its in-flight accounting to replica `r`. Returns whether
+/// anything was stolen. Two guards keep this behind the affinity rules:
+/// only *staged* work moves (requests a replica has already scheduled —
+/// including every step of a running decode session — stay put, so
+/// session state never migrates), and only from a victim that is
+/// actually busy (`depth > staged backlog` means it has work in flight
+/// beyond its queue; an idle replica is about to drain its own queue and
+/// should not be robbed of it).
+fn try_steal(r: usize, shared: &Shared, admit: &mut Batcher<Staged>) -> bool {
+    let n = shared.inject.len();
+    if n <= 1 {
+        return false;
+    }
+    let mut victim = None;
+    let mut deepest = 0usize;
+    for v in 0..n {
+        if v == r {
+            continue;
+        }
+        let backlog = shared.inject[v].lock().unwrap().len();
+        if backlog > deepest && shared.depth[v].load(Ordering::Acquire) > backlog {
+            deepest = backlog;
+            victim = Some(v);
+        }
+    }
+    let Some(v) = victim else { return false };
+    let Some(staged) = shared.inject[v].lock().unwrap().pop_front() else {
+        return false;
+    };
+    shared.depth[v].fetch_sub(1, Ordering::AcqRel);
+    shared.depth[r].fetch_add(1, Ordering::AcqRel);
+    shared.stats[r].lock().unwrap().stolen += 1;
+    admit.push(staged);
+    true
+}
+
+/// One replica's engine loop: ingest → stage → flush-by-deadline →
+/// dispatch, stealing from deeper queues when idle.
 fn run_replica<B: ReplicaBackend>(
     r: usize,
     mut backend: B,
-    rx: mpsc::Receiver<Envelope>,
+    rx: mpsc::Receiver<()>,
     shared: Arc<Shared>,
     max_wait: Duration,
 ) {
@@ -587,8 +888,8 @@ fn run_replica<B: ReplicaBackend>(
     let stop = backend.stop_tokens();
     shared.stats[r].lock().unwrap().capacity = capacity;
     let mut sched = Scheduler::new(capacity, SchedPolicy::default());
-    let mut admit: Batcher<Envelope> = Batcher::new(BatchPolicy { capacity, max_wait });
-    let mut flush_buf: Vec<Envelope> = Vec::new();
+    let mut admit: Batcher<Staged> = Batcher::new(BatchPolicy { capacity, max_wait });
+    let mut flush_buf: Vec<Staged> = Vec::new();
     let mut score_replies: HashMap<u64, PendingReply> = HashMap::new();
     let mut gen_replies: HashMap<u64, PendingReply> = HashMap::new();
     let mut disconnected = false;
@@ -610,11 +911,16 @@ fn run_replica<B: ReplicaBackend>(
     };
 
     loop {
-        // Ingest everything already queued on the channel (non-blocking).
+        // Drain pending wake signals FIRST, then ingest. A wake is sent
+        // (under the inject lock) before its request is pushed, so any
+        // signal consumed here has its request either already visible or
+        // behind the lock the ingest below is about to take — consuming
+        // signals *after* ingesting could eat the wake for a request
+        // staged in between and then block forever on the channel with
+        // work stranded in the queue.
         loop {
             match rx.try_recv() {
-                Ok(env @ Envelope::Req { .. }) => admit.push(env),
-                Ok(Envelope::Wake) => {}
+                Ok(()) => {}
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
                     disconnected = true;
@@ -622,13 +928,20 @@ fn run_replica<B: ReplicaBackend>(
                 }
             }
         }
+        // Ingest everything staged for this replica.
+        {
+            let mut q = shared.inject[r].lock().unwrap();
+            while let Some(staged) = q.pop_front() {
+                admit.push(staged);
+            }
+        }
         let draining = disconnected || shared.shutdown.load(Ordering::Acquire);
         // Move staged requests into the scheduler when the batch is full,
         // the oldest request's deadline expired, or we are draining.
         if admit.ready(Instant::now()) || (draining && !admit.is_empty()) {
             admit.drain_batch_into(&mut flush_buf);
-            for env in flush_buf.drain(..) {
-                let Envelope::Req { req, reply, t0 } = env else { continue };
+            for staged in flush_buf.drain(..) {
+                let Staged { req, reply, t0 } = staged;
                 match req {
                     Request::Score { tokens, span } => {
                         let id = sched.submit_score(tokens, span);
@@ -643,19 +956,30 @@ fn run_replica<B: ReplicaBackend>(
         }
         match sched.next_work() {
             Work::Idle => {
-                if draining && admit.is_empty() {
-                    break; // fully drained — every admitted request answered
+                if draining {
+                    if admit.is_empty() && shared.inject[r].lock().unwrap().is_empty() {
+                        break; // fully drained — every admitted request answered
+                    }
+                    continue; // ingest/flush the rest without sleeping
+                }
+                // Idle with nothing staged: steal before sleeping.
+                if admit.is_empty() && try_steal(r, &shared, &mut admit) {
+                    continue;
                 }
                 // Deadline-driven wait (replaces the seed's 2 ms poll):
                 // sleep until the oldest staged request must flush, or
-                // block outright when nothing is staged.
+                // block outright when nothing is staged. Belt-and-braces
+                // against wake/ingest reorderings: never block without a
+                // deadline while our own queue holds work.
+                if admit.is_empty() && !shared.inject[r].lock().unwrap().is_empty() {
+                    continue;
+                }
                 let got = match admit.next_deadline() {
                     Some(d) => rx.recv_timeout(d.saturating_duration_since(Instant::now())),
                     None => rx.recv().map_err(|_| mpsc::RecvTimeoutError::Disconnected),
                 };
                 match got {
-                    Ok(env @ Envelope::Req { .. }) => admit.push(env),
-                    Ok(Envelope::Wake) | Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Ok(()) | Err(mpsc::RecvTimeoutError::Timeout) => {}
                     Err(mpsc::RecvTimeoutError::Disconnected) => disconnected = true,
                 }
             }
@@ -691,9 +1015,11 @@ fn run_replica<B: ReplicaBackend>(
             }
             Work::Decode(ids) => {
                 let step = {
-                    let prompts: Vec<&[u32]> =
-                        ids.iter().map(|id| sched.session(*id).unwrap().row()).collect();
-                    backend.decode_step(&prompts)
+                    let rows: Vec<(u64, &[u32])> = ids
+                        .iter()
+                        .map(|id| (*id, sched.session(*id).unwrap().row()))
+                        .collect();
+                    backend.decode_step_sessions(&rows)
                 };
                 record_batch(&shared, ids.len());
                 match step {
@@ -717,9 +1043,11 @@ fn run_replica<B: ReplicaBackend>(
                     }
                 }
                 for sess in sched.reap_done() {
-                    // Completions count toward `served` exactly once here,
+                    // Release per-session backend state (KV cache), then
+                    // count the completion toward `served` exactly once,
                     // reply listener or not (the error path above already
                     // removed its entry, so no double count).
+                    backend.end_session(sess.id);
                     if let Some(p) = gen_replies.remove(&sess.id) {
                         finish(&shared, p, Response::Generate { tokens: sess.generated });
                     }
@@ -799,5 +1127,75 @@ mod tests {
         core.shutdown();
         let err = handle.submit(Request::Score { tokens: vec![2], span: (1, 1) }).err();
         assert_eq!(err, Some(SubmitError::Closed));
+    }
+
+    #[test]
+    fn native_backend_generates_engine_identical_tokens() {
+        // End-to-end through the serving loop: the KV-cached NativeBackend
+        // must produce exactly what the bare engine produces.
+        let cfg = EngineConfig {
+            vocab: 48,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            ffn: 64,
+            max_seq: 32,
+        };
+        let pattern = Pattern::NM { n: 8, m: 16 };
+        let stop: Vec<u32> = vec![2];
+        let core = {
+            let (cfg, stop) = (cfg.clone(), stop.clone());
+            ServerCore::start(ServerConfig::default(), move |_r| {
+                NativeBackend::synthetic(&cfg, 5, NativeSparsity::act(pattern), stop.clone(), 4)
+            })
+            .unwrap()
+        };
+        let mut engine = NativeEngine::synthetic(&cfg, 5, NativeSparsity::act(pattern)).unwrap();
+        let mut kv = engine.new_cache();
+        let prompts: Vec<Vec<u32>> = vec![vec![3, 7, 11], vec![40, 1, 2, 3, 4], vec![9]];
+        let mut tickets = Vec::new();
+        for p in &prompts {
+            tickets.push(
+                core.submit(Request::Generate { tokens: p.clone(), max_new: 12 }).unwrap(),
+            );
+        }
+        for (t, p) in tickets.iter().zip(&prompts) {
+            let want = engine.generate_greedy(&mut kv, p, 12, &stop).unwrap();
+            match t.recv().unwrap() {
+                Response::Generate { tokens } => assert_eq!(tokens, want, "prompt {p:?}"),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        let stats = core.shutdown();
+        assert_eq!(stats.served, 3);
+        assert_eq!(stats.errors, 0);
+    }
+
+    #[test]
+    fn native_backend_scores_match_engine() {
+        let cfg = EngineConfig {
+            vocab: 48,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            ffn: 64,
+            max_seq: 32,
+        };
+        let pattern = Pattern::NM { n: 2, m: 4 };
+        let core = {
+            let cfg = cfg.clone();
+            ServerCore::start(ServerConfig::default(), move |_r| {
+                NativeBackend::synthetic(&cfg, 6, NativeSparsity::act(pattern), vec![2], 4)
+            })
+            .unwrap()
+        };
+        let mut engine = NativeEngine::synthetic(&cfg, 6, NativeSparsity::act(pattern)).unwrap();
+        let mut kv = engine.new_cache();
+        let tokens = vec![4u32, 9, 13, 2, 30, 8];
+        let span = (2, 6);
+        let want = engine.score_span(&mut kv, &tokens, span).unwrap();
+        let t = core.submit(Request::Score { tokens, span }).unwrap();
+        assert_eq!(t.recv().unwrap(), Response::Score { score: want });
+        core.shutdown();
     }
 }

@@ -1,0 +1,540 @@
+//! Native decode engine: the per-token step kernel.
+//!
+//! [`NativeEngine::step`] runs one token through the transformer against a
+//! [`KvCache`] — the per-step cost is the layer matmuls plus attention
+//! over the cached positions, instead of the full-context forward the
+//! PJRT path re-runs per generated token. The paper's N:M activation
+//! sparsification sits exactly where `python/compile/model.py` puts it:
+//! on the *input* of each of the seven linear sites (q/k/v/o/gate/up/
+//! down). For selection-only pipelines the step never materializes the
+//! sparsified row densely — the fused [`Sparsifier`] emits a [`PackedNM`]
+//! stream during selection and the matvec runs in the compressed domain
+//! ([`PackedNM::matmul_nt_into`], the same `row_dot` kernel as
+//! [`PackedNM::matvec_into`]), so the bytes-moved numbers in
+//! [`DecodeStats`] come from the stream that actually fed the GEMV.
+//!
+//! The packed and dense paths are bitwise-equal by construction: dropped
+//! elements are exactly `0.0`, the kept products are accumulated in the
+//! same ascending-column order, and `acc + ±0.0` never changes an f32
+//! accumulation that started at `+0.0` — `rust/tests/native_decode.rs`
+//! pins this.
+
+use crate::coordinator::methods::MethodConfig;
+use crate::engine::kv::KvCache;
+use crate::engine::model::{EngineConfig, NativeModel, SITES};
+use crate::sparsity::{PackedNM, Pattern, Scratch, Sparsifier};
+use crate::util::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+
+/// How (and whether) the engine sparsifies site inputs.
+#[derive(Clone, Debug)]
+pub struct NativeSparsity {
+    /// `None` = dense forward (the ORIG baseline).
+    sparsifier: Option<Sparsifier>,
+    disabled_sites: Vec<String>,
+    /// Test/bench knob: run the sparsified-dense path even when the
+    /// pipeline could emit a packed stream.
+    force_dense: bool,
+}
+
+impl NativeSparsity {
+    /// Dense (no sparsification).
+    pub fn dense() -> NativeSparsity {
+        NativeSparsity { sparsifier: None, disabled_sites: Vec::new(), force_dense: false }
+    }
+
+    /// Plain magnitude (ACT) sparsification at `pattern` on every site.
+    pub fn act(pattern: Pattern) -> NativeSparsity {
+        let sparsifier = match pattern {
+            Pattern::Dense => None,
+            p => Some(Sparsifier::new(p)),
+        };
+        NativeSparsity { sparsifier, disabled_sites: Vec::new(), force_dense: false }
+    }
+
+    /// Realize a [`MethodConfig`] natively. Supported: ORIG/dense, ACT,
+    /// D-PTS, VAR (and their site exemptions). Methods needing per-site
+    /// calibration vectors (S-PTS/L-PTS/CLACT/Amber/LS) or an R-Sparse
+    /// variant are kernel-path-only and error here rather than silently
+    /// downgrading.
+    pub fn from_method(cfg: &MethodConfig) -> Result<NativeSparsity> {
+        if cfg.rank.is_some() {
+            bail!("method '{}' is an R-Sparse variant — not representable natively", cfg.id);
+        }
+        let pattern = cfg.pattern()?;
+        let sparsifier = match pattern {
+            Pattern::Dense => None,
+            _ => Some(cfg.sparsifier(None, None).with_context(|| {
+                format!(
+                    "native engine cannot realize method '{}' (per-site calibration \
+                     vectors are kernel-path-only)",
+                    cfg.id
+                )
+            })?),
+        };
+        Ok(NativeSparsity {
+            sparsifier,
+            disabled_sites: cfg.disabled_sites.clone(),
+            force_dense: false,
+        })
+    }
+
+    /// Disable the compressed-domain path (dense sparsified matvecs).
+    pub fn with_force_dense(mut self, on: bool) -> NativeSparsity {
+        self.force_dense = on;
+        self
+    }
+
+    pub fn pattern(&self) -> Pattern {
+        self.sparsifier.as_ref().map(|s| s.pattern()).unwrap_or(Pattern::Dense)
+    }
+
+    pub fn sparsifier(&self) -> Option<&Sparsifier> {
+        self.sparsifier.as_ref()
+    }
+}
+
+/// Running byte/step counters for the decode loop. `dense_activation_bytes`
+/// is what a dense engine would have moved through the sparsified sites;
+/// `moved_activation_bytes` is what this engine actually moved (packed
+/// payload + raw `u32` metadata words on the compressed path). The ratio
+/// is the measured activation-I/O reduction `BENCH_decode.json` reports.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DecodeStats {
+    /// Tokens stepped (prefill + decode).
+    pub steps: u64,
+    /// Site linears executed.
+    pub site_rows: u64,
+    pub dense_activation_bytes: u64,
+    pub moved_activation_bytes: u64,
+}
+
+impl DecodeStats {
+    pub fn reset(&mut self) {
+        *self = DecodeStats::default();
+    }
+
+    /// dense / moved (1.0 when nothing has run).
+    pub fn bytes_reduction(&self) -> f64 {
+        if self.moved_activation_bytes == 0 {
+            1.0
+        } else {
+            self.dense_activation_bytes as f64 / self.moved_activation_bytes as f64
+        }
+    }
+}
+
+/// The native engine: model weights + sparsification config + all scratch
+/// buffers for one step. Steady state allocates nothing — every buffer is
+/// sized at construction.
+pub struct NativeEngine {
+    model: NativeModel,
+    sparsity: NativeSparsity,
+    /// Per-site sparsification enables, indexed like [`SITES`].
+    enabled: [bool; 7],
+    /// Compressed stream for `d_model`-wide site inputs (None off the
+    /// packed path or when the pattern cannot hold that width).
+    packed_d: Option<PackedNM>,
+    /// Compressed stream for the `ffn`-wide `down` input.
+    packed_f: Option<PackedNM>,
+    /// RoPE inverse frequencies, `[head_dim/2]` — shared by every head,
+    /// precomputed once (a `powf` per element per step would dominate
+    /// the very step cost `BENCH_decode.json` measures).
+    rope_freqs: Vec<f32>,
+    scratch: Scratch,
+    // Step buffers (residual stream, norms, projections, FFN, outputs).
+    x: Vec<f32>,
+    h: Vec<f32>,
+    act: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    ctx: Vec<f32>,
+    site_out_d: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    fbuf: Vec<f32>,
+    probs: Vec<f32>,
+    logits: Vec<f32>,
+    stats: DecodeStats,
+}
+
+const ROPE_BASE: f32 = 10000.0;
+
+impl NativeEngine {
+    pub fn new(model: NativeModel, sparsity: NativeSparsity) -> Result<NativeEngine> {
+        let cfg = model.cfg.clone();
+        anyhow::ensure!(
+            cfg.n_heads > 0 && cfg.d_model % cfg.n_heads == 0,
+            "d_model {} not divisible by n_heads {}",
+            cfg.d_model,
+            cfg.n_heads
+        );
+        anyhow::ensure!(cfg.head_dim() % 2 == 0, "RoPE needs an even head_dim");
+        anyhow::ensure!(cfg.max_seq > 0, "max_seq must be positive");
+        let enabled = site_enables(&sparsity);
+        // Enabled sparsified sites must fit the pattern's block geometry.
+        if let Some(sp) = sparsity.sparsifier() {
+            if let Pattern::NM { m, .. } = sp.pattern() {
+                for (i, site) in SITES.iter().enumerate() {
+                    let din = cfg.site_in_dim(site);
+                    anyhow::ensure!(
+                        !enabled[i] || din % m as usize == 0,
+                        "site '{site}' width {din} is not a multiple of M={m}"
+                    );
+                }
+            }
+        }
+        let use_packed = match sparsity.sparsifier() {
+            Some(sp) => sp.is_packable() && !sparsity.force_dense,
+            None => false,
+        };
+        let needs_d = enabled[..6].iter().any(|e| *e); // q k v o gate up
+        let needs_f = enabled[6]; // down
+        let mk = |cols: usize| {
+            sparsity.sparsifier().map(|sp| PackedNM::new(sp.pattern(), cols))
+        };
+        let (packed_d, packed_f) = if use_packed {
+            (
+                if needs_d { mk(cfg.d_model) } else { None },
+                if needs_f { mk(cfg.ffn) } else { None },
+            )
+        } else {
+            (None, None)
+        };
+        let half = cfg.head_dim() / 2;
+        let rope_freqs: Vec<f32> =
+            (0..half).map(|i| ROPE_BASE.powf(-(i as f32) / half as f32)).collect();
+        Ok(NativeEngine {
+            rope_freqs,
+            x: vec![0.0; cfg.d_model],
+            h: vec![0.0; cfg.d_model],
+            act: Vec::with_capacity(cfg.ffn.max(cfg.d_model)),
+            q: vec![0.0; cfg.d_model],
+            k: vec![0.0; cfg.d_model],
+            v: vec![0.0; cfg.d_model],
+            ctx: vec![0.0; cfg.d_model],
+            site_out_d: vec![0.0; cfg.d_model],
+            gate: vec![0.0; cfg.ffn],
+            up: vec![0.0; cfg.ffn],
+            fbuf: vec![0.0; cfg.ffn],
+            probs: Vec::with_capacity(cfg.max_seq),
+            logits: vec![0.0; cfg.vocab],
+            scratch: Scratch::new(),
+            stats: DecodeStats::default(),
+            model,
+            sparsity,
+            enabled,
+            packed_d,
+            packed_f,
+        })
+    }
+
+    /// Seeded synthetic engine (no artifacts) — CI, benches, tests.
+    pub fn synthetic(
+        cfg: &EngineConfig,
+        seed: u64,
+        sparsity: NativeSparsity,
+    ) -> Result<NativeEngine> {
+        NativeEngine::new(NativeModel::synthetic(cfg, seed), sparsity)
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.model.cfg
+    }
+
+    pub fn model(&self) -> &NativeModel {
+        &self.model
+    }
+
+    pub fn sparsity(&self) -> &NativeSparsity {
+        &self.sparsity
+    }
+
+    /// Is the compressed-domain matvec path active?
+    pub fn uses_packed(&self) -> bool {
+        self.packed_d.is_some() || self.packed_f.is_some()
+    }
+
+    /// A fresh KV cache sized for this engine.
+    pub fn new_cache(&self) -> KvCache {
+        KvCache::new(&self.model.cfg)
+    }
+
+    pub fn stats(&self) -> DecodeStats {
+        self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats.reset();
+    }
+
+    /// Next-token logits after the last [`NativeEngine::step`].
+    pub fn logits(&self) -> &[f32] {
+        &self.logits
+    }
+
+    /// Greedy token from the current logits (first index on ties — the
+    /// same rule as `Coordinator`'s argmax).
+    pub fn argmax_token(&self) -> u32 {
+        let mut best = 0usize;
+        for (i, x) in self.logits.iter().enumerate() {
+            if *x > self.logits[best] {
+                best = i;
+            }
+        }
+        best as u32
+    }
+
+    /// `log p(token)` under the current logits (f64 log-softmax).
+    pub fn logprob_of(&self, token: u32) -> f64 {
+        let max = self.logits.iter().fold(f32::NEG_INFINITY, |a, b| a.max(*b)) as f64;
+        let sum: f64 = self.logits.iter().map(|v| ((*v as f64) - max).exp()).sum();
+        (self.logits[token as usize] as f64) - max - sum.ln()
+    }
+
+    /// Advance one token: consume `token` at the cache's next position and
+    /// leave next-token logits in [`NativeEngine::logits`]. Errors when the
+    /// cache is full or the token is out of vocabulary.
+    pub fn step(&mut self, kv: &mut KvCache, token: u32) -> Result<()> {
+        let NativeEngine {
+            model,
+            sparsity,
+            enabled,
+            packed_d,
+            packed_f,
+            rope_freqs,
+            scratch,
+            x,
+            h,
+            act,
+            q,
+            k,
+            v,
+            ctx,
+            site_out_d,
+            gate,
+            up,
+            fbuf,
+            probs,
+            logits,
+            stats,
+        } = self;
+        let cfg = &model.cfg;
+        anyhow::ensure!(
+            !kv.is_full(),
+            "KV cache full: context length {} reached",
+            kv.capacity()
+        );
+        anyhow::ensure!(
+            (token as usize) < cfg.vocab,
+            "token {token} out of vocabulary ({})",
+            cfg.vocab
+        );
+        let pos = kv.len();
+        let sp = sparsity.sparsifier();
+        x.copy_from_slice(model.embed.row(token as usize));
+        for (l, layer) in model.layers.iter().enumerate() {
+            // Attention block.
+            rmsnorm_into(x, &layer.norm1, h);
+            apply_site(&layer.wq, h, sp, enabled[0], packed_d.as_mut(), scratch, act, q, stats);
+            apply_site(&layer.wk, h, sp, enabled[1], packed_d.as_mut(), scratch, act, k, stats);
+            apply_site(&layer.wv, h, sp, enabled[2], packed_d.as_mut(), scratch, act, v, stats);
+            rope_in_place(q, cfg.n_heads, cfg.head_dim(), pos, rope_freqs);
+            rope_in_place(k, cfg.n_heads, cfg.head_dim(), pos, rope_freqs);
+            kv.write_row(l, k, v);
+            attention_into(
+                q,
+                kv.keys(l, pos + 1),
+                kv.values(l, pos + 1),
+                pos + 1,
+                cfg.n_heads,
+                cfg.head_dim(),
+                probs,
+                ctx,
+            );
+            let pd = packed_d.as_mut();
+            apply_site(&layer.wo, ctx, sp, enabled[3], pd, scratch, act, site_out_d, stats);
+            add_assign(x, site_out_d);
+
+            // FFN block (SwiGLU).
+            rmsnorm_into(x, &layer.norm2, h);
+            let pg = packed_d.as_mut();
+            apply_site(&layer.wgate, h, sp, enabled[4], pg, scratch, act, gate, stats);
+            let pu = packed_d.as_mut();
+            apply_site(&layer.wup, h, sp, enabled[5], pu, scratch, act, up, stats);
+            for ((f, g), u) in fbuf.iter_mut().zip(gate.iter()).zip(up.iter()) {
+                *f = silu(*g) * u;
+            }
+            let pf = packed_f.as_mut();
+            apply_site(&layer.wdown, fbuf, sp, enabled[6], pf, scratch, act, site_out_d, stats);
+            add_assign(x, site_out_d);
+        }
+        kv.advance();
+        rmsnorm_into(x, &model.final_norm, h);
+        dense_matvec(&model.lm_head, h, logits);
+        stats.steps += 1;
+        Ok(())
+    }
+}
+
+/// Which sites sparsify, in [`SITES`] order.
+fn site_enables(sparsity: &NativeSparsity) -> [bool; 7] {
+    let mut enabled = [sparsity.sparsifier.is_some(); 7];
+    for (i, site) in SITES.iter().enumerate() {
+        if sparsity.disabled_sites.iter().any(|d| d == site) {
+            enabled[i] = false;
+        }
+    }
+    enabled
+}
+
+/// One (possibly sparsified) linear site: `out[o] = w.row(o) · s(input)`.
+/// The compressed path packs the row during selection and runs the GEMV
+/// over the stream; the dense path sparsifies a copy in place. Byte
+/// counters record what actually moved.
+#[allow(clippy::too_many_arguments)]
+fn apply_site(
+    w: &Tensor,
+    input: &[f32],
+    sp: Option<&Sparsifier>,
+    enabled: bool,
+    packed: Option<&mut PackedNM>,
+    scratch: &mut Scratch,
+    act: &mut Vec<f32>,
+    out: &mut [f32],
+    stats: &mut DecodeStats,
+) {
+    let din = input.len();
+    debug_assert_eq!(w.cols(), din);
+    debug_assert_eq!(w.rows(), out.len());
+    stats.site_rows += 1;
+    stats.dense_activation_bytes += (din * 4) as u64;
+    match (sp, enabled) {
+        (Some(sp), true) => match packed {
+            Some(packed) => {
+                packed.clear();
+                sp.pack_row_into(input, packed, scratch);
+                stats.moved_activation_bytes +=
+                    (packed.values().len() * 4 + packed.meta_words().len() * 4) as u64;
+                packed.matmul_nt_into(w, out, 1);
+            }
+            None => {
+                act.clear();
+                act.extend_from_slice(input);
+                sp.sparsify_row(act, scratch);
+                stats.moved_activation_bytes += (din * 4) as u64;
+                dense_matvec(w, act, out);
+            }
+        },
+        _ => {
+            stats.moved_activation_bytes += (din * 4) as u64;
+            dense_matvec(w, input, out);
+        }
+    }
+}
+
+/// RMSNorm with the python model's epsilon (1e-6), f64 mean accumulation.
+fn rmsnorm_into(x: &[f32], g: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), g.len());
+    debug_assert_eq!(x.len(), out.len());
+    let ms = x.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>() / x.len() as f64;
+    let r = (1.0 / (ms + 1e-6).sqrt()) as f32;
+    for ((o, v), gg) in out.iter_mut().zip(x).zip(g) {
+        *o = *v * r * *gg;
+    }
+}
+
+/// Rotary position embedding at one position (split-half convention,
+/// matching `python/compile/model.py::rope`). `freqs` is the engine's
+/// precomputed `[head_dim/2]` inverse-frequency table.
+fn rope_in_place(x: &mut [f32], n_heads: usize, head_dim: usize, pos: usize, freqs: &[f32]) {
+    let half = head_dim / 2;
+    debug_assert_eq!(freqs.len(), half);
+    for head in 0..n_heads {
+        let o = head * head_dim;
+        for (i, freq) in freqs.iter().enumerate() {
+            let ang = pos as f32 * freq;
+            let (sin, cos) = ang.sin_cos();
+            let a = x[o + i];
+            let b = x[o + i + half];
+            x[o + i] = a * cos - b * sin;
+            x[o + i + half] = a * sin + b * cos;
+        }
+    }
+}
+
+/// Causal attention for one query over `rows` cached positions.
+#[allow(clippy::too_many_arguments)]
+fn attention_into(
+    q: &[f32],
+    keys: &[f32],
+    vals: &[f32],
+    rows: usize,
+    n_heads: usize,
+    head_dim: usize,
+    probs: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let d = n_heads * head_dim;
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    for head in 0..n_heads {
+        let off = head * head_dim;
+        let qh = &q[off..off + head_dim];
+        probs.clear();
+        let mut maxs = f32::NEG_INFINITY;
+        for j in 0..rows {
+            let kh = &keys[j * d + off..j * d + off + head_dim];
+            let s = dot(qh, kh) * scale;
+            probs.push(s);
+            maxs = maxs.max(s);
+        }
+        let mut denom = 0.0f32;
+        for p in probs.iter_mut() {
+            *p = (*p - maxs).exp();
+            denom += *p;
+        }
+        let inv = 1.0 / denom;
+        let oh = &mut out[off..off + head_dim];
+        oh.iter_mut().for_each(|o| *o = 0.0);
+        for (j, p) in probs.iter().enumerate() {
+            let wj = p * inv;
+            let vh = &vals[j * d + off..j * d + off + head_dim];
+            for (o, vv) in oh.iter_mut().zip(vh) {
+                *o += wj * vv;
+            }
+        }
+    }
+}
+
+/// Dense GEMV: `out[o] = w.row(o) · x` — the baseline the packed path is
+/// bitwise-equal to on selection-only pipelines.
+pub(crate) fn dense_matvec(w: &Tensor, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(w.cols(), x.len());
+    debug_assert_eq!(w.rows(), out.len());
+    let cols = w.cols();
+    for (o, row) in out.iter_mut().zip(w.data.chunks_exact(cols)) {
+        *o = dot(row, x);
+    }
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+#[inline]
+fn add_assign(x: &mut [f32], y: &[f32]) {
+    for (a, b) in x.iter_mut().zip(y) {
+        *a += b;
+    }
+}

@@ -1,0 +1,266 @@
+//! Prefill and generation loops over the native step kernel.
+//!
+//! Everything here is a composition of [`NativeEngine::step`]; the
+//! KV-cached incremental path and the full-context reference path run the
+//! *same* per-position code, so token-identical greedy outputs are a
+//! structural property of the cache bookkeeping — exactly what
+//! `rust/tests/native_decode.rs` stresses (truncation, reset, eviction,
+//! stop-token placement). The full-context loop re-prefills the whole row
+//! for every generated token, so its per-token cost grows with context
+//! while the cached loop's stays flat: `benches/decode.rs` measures both
+//! into `BENCH_decode.json`.
+
+use crate::engine::decode::NativeEngine;
+use crate::engine::kv::KvCache;
+use anyhow::Result;
+
+impl NativeEngine {
+    /// Feed `tokens` through the step kernel, extending the cache. Leaves
+    /// next-token logits loaded; no-op on an empty slice.
+    pub fn prefill(&mut self, kv: &mut KvCache, tokens: &[u32]) -> Result<()> {
+        for t in tokens {
+            self.step(kv, *t)?;
+        }
+        Ok(())
+    }
+
+    /// Reference full-context forward: reset the cache and replay the
+    /// whole row. One call of this per generated token is the
+    /// full-context baseline the PJRT path implements.
+    pub fn full_context(&mut self, kv: &mut KvCache, tokens: &[u32]) -> Result<()> {
+        kv.reset();
+        self.prefill(kv, tokens)
+    }
+
+    /// KV-cached greedy generation: prefill the prompt once, then one
+    /// step per emitted token. Stops on a stop token, the `max_new`
+    /// budget, or a full context (mirroring `Coordinator::generate_refs`:
+    /// the token that fills the context is still emitted).
+    pub fn generate_greedy(
+        &mut self,
+        kv: &mut KvCache,
+        prompt: &[u32],
+        max_new: usize,
+        stop: &[u32],
+    ) -> Result<Vec<u32>> {
+        let max_seq = self.config().max_seq;
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        // Left-crop long prompts (keep the most recent context), like the
+        // PJRT path's `pack_rows`.
+        let prompt = &prompt[prompt.len().saturating_sub(max_seq)..];
+        kv.reset();
+        self.prefill(kv, prompt)?;
+        let mut out = Vec::new();
+        for _ in 0..max_new {
+            let tok = self.argmax_token();
+            out.push(tok);
+            // Same termination rule as the full-context loop (and PJRT's
+            // `generate_refs`): the token that fills the context is still
+            // emitted, then the session ends.
+            if stop.contains(&tok) || prompt.len() + out.len() >= max_seq || out.len() >= max_new {
+                break;
+            }
+            self.step(kv, tok)?;
+        }
+        Ok(out)
+    }
+
+    /// Full-context greedy reference: identical outputs to
+    /// [`NativeEngine::generate_greedy`], at one whole-row forward per
+    /// token — the equivalence oracle and the cost baseline.
+    pub fn generate_greedy_full(
+        &mut self,
+        kv: &mut KvCache,
+        prompt: &[u32],
+        max_new: usize,
+        stop: &[u32],
+    ) -> Result<Vec<u32>> {
+        let max_seq = self.config().max_seq;
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        let prompt = &prompt[prompt.len().saturating_sub(max_seq)..];
+        let mut row = prompt.to_vec();
+        let mut out = Vec::new();
+        for _ in 0..max_new {
+            self.full_context(kv, &row)?;
+            let tok = self.argmax_token();
+            out.push(tok);
+            row.push(tok);
+            if stop.contains(&tok) || row.len() >= max_seq {
+                break;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Sum of continuation logprobs over span `[start, end)` of `tokens`:
+    /// `sum_t log p(tokens[t] | tokens[:t])` — the native twin of
+    /// `Coordinator::score_rows` for one row (the caller crops/re-bases
+    /// long rows the same way).
+    pub fn score_span(
+        &mut self,
+        kv: &mut KvCache,
+        tokens: &[u32],
+        span: (usize, usize),
+    ) -> Result<f64> {
+        let (s, e) = span;
+        anyhow::ensure!(s >= 1, "span must start at >= 1 (token 0 has no context)");
+        anyhow::ensure!(
+            e <= tokens.len() && s < e,
+            "bad span ({s},{e}) for row len {}",
+            tokens.len()
+        );
+        anyhow::ensure!(
+            tokens.len() <= self.config().max_seq,
+            "row of {} tokens exceeds the engine context ({}) — crop before scoring",
+            tokens.len(),
+            self.config().max_seq
+        );
+        kv.reset();
+        let mut total = 0.0f64;
+        // After stepping tokens[..t+1], logits predict tokens[t+1].
+        for t in 0..e - 1 {
+            self.step(kv, tokens[t])?;
+            let nxt = tokens[t + 1];
+            if t + 1 >= s {
+                anyhow::ensure!(
+                    (nxt as usize) < self.config().vocab,
+                    "token {nxt} out of vocabulary"
+                );
+                total += self.logprob_of(nxt);
+            }
+        }
+        Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::decode::NativeSparsity;
+    use crate::engine::model::EngineConfig;
+    use crate::sparsity::Pattern;
+
+    fn tiny_engine(pattern: Pattern) -> NativeEngine {
+        let cfg = EngineConfig {
+            vocab: 48,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            ffn: 64,
+            max_seq: 24,
+        };
+        NativeEngine::synthetic(&cfg, 42, NativeSparsity::act(pattern)).unwrap()
+    }
+
+    #[test]
+    fn prefill_then_step_extends_cache() {
+        let mut e = tiny_engine(Pattern::NM { n: 8, m: 16 });
+        let mut kv = e.new_cache();
+        e.prefill(&mut kv, &[1, 2, 3]).unwrap();
+        assert_eq!(kv.len(), 3);
+        let tok = e.argmax_token();
+        assert!((tok as usize) < e.config().vocab);
+        e.step(&mut kv, tok).unwrap();
+        assert_eq!(kv.len(), 4);
+        assert_eq!(e.stats().steps, 4);
+    }
+
+    #[test]
+    fn cached_equals_full_context_greedy() {
+        for pattern in [Pattern::Dense, Pattern::NM { n: 2, m: 4 }, Pattern::NM { n: 8, m: 16 }] {
+            let mut e = tiny_engine(pattern);
+            let mut kv = e.new_cache();
+            let prompt = [3u32, 14, 7, 20];
+            let cached = e.generate_greedy(&mut kv, &prompt, 10, &[]).unwrap();
+            let full = e.generate_greedy_full(&mut kv, &prompt, 10, &[]).unwrap();
+            assert_eq!(cached, full, "{pattern}");
+            assert_eq!(cached.len(), 10);
+        }
+    }
+
+    #[test]
+    fn generation_stops_on_context_budget_and_stop() {
+        let mut e = tiny_engine(Pattern::NM { n: 8, m: 16 });
+        let mut kv = e.new_cache();
+        // Budget.
+        let out = e.generate_greedy(&mut kv, &[5, 6], 3, &[]).unwrap();
+        assert_eq!(out.len(), 3);
+        // Stop token: generate once, then replay with that token as stop.
+        let free = e.generate_greedy(&mut kv, &[5, 6], 8, &[]).unwrap();
+        let stop = free[2];
+        let stopped = e.generate_greedy(&mut kv, &[5, 6], 8, &[stop]).unwrap();
+        let cut = stopped.iter().position(|t| *t == stop).unwrap();
+        assert_eq!(&stopped[..=cut], &free[..=cut]);
+        assert_eq!(cut + 1, stopped.len());
+        // Context: prompts at (or cropped to) the context edge emit
+        // exactly one token — the PJRT `generate_refs` budget rule — and
+        // both loops agree on it.
+        for extra in [-1i64, 0, 5] {
+            let len = (e.config().max_seq as i64 + extra) as u32;
+            let long: Vec<u32> = (0..len).map(|i| i % 40).collect();
+            let cached = e.generate_greedy(&mut kv, &long, 8, &[]).unwrap();
+            let full = e.generate_greedy_full(&mut kv, &long, 8, &[]).unwrap();
+            assert_eq!(cached, full, "extra={extra}");
+            assert_eq!(cached.len(), 1, "extra={extra}");
+        }
+    }
+
+    #[test]
+    fn score_span_matches_manual_logprob_sum() {
+        let mut e = tiny_engine(Pattern::NM { n: 2, m: 4 });
+        let mut kv = e.new_cache();
+        let tokens = [4u32, 9, 13, 2, 30];
+        let span = (2, 5);
+        let got = e.score_span(&mut kv, &tokens, span).unwrap();
+        // Manual replay.
+        let mut manual = 0.0f64;
+        kv.reset();
+        for t in 0..tokens.len() - 1 {
+            e.step(&mut kv, tokens[t]).unwrap();
+            if t + 1 >= span.0 {
+                manual += e.logprob_of(tokens[t + 1]);
+            }
+        }
+        assert_eq!(got, manual);
+        assert!(got < 0.0, "logprobs are negative: {got}");
+        // Bad spans are errors.
+        assert!(e.score_span(&mut kv, &tokens, (0, 2)).is_err());
+        assert!(e.score_span(&mut kv, &tokens, (3, 3)).is_err());
+        assert!(e.score_span(&mut kv, &tokens, (1, 9)).is_err());
+    }
+
+    #[test]
+    fn packed_and_dense_paths_agree_bitwise() {
+        let cfg = EngineConfig {
+            vocab: 48,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            ffn: 64,
+            max_seq: 24,
+        };
+        let pattern = Pattern::NM { n: 8, m: 16 };
+        let mut packed =
+            NativeEngine::synthetic(&cfg, 9, NativeSparsity::act(pattern)).unwrap();
+        let mut dense = NativeEngine::synthetic(
+            &cfg,
+            9,
+            NativeSparsity::act(pattern).with_force_dense(true),
+        )
+        .unwrap();
+        assert!(packed.uses_packed());
+        assert!(!dense.uses_packed());
+        let mut kva = packed.new_cache();
+        let mut kvb = dense.new_cache();
+        packed.prefill(&mut kva, &[1, 2, 3, 4, 5]).unwrap();
+        dense.prefill(&mut kvb, &[1, 2, 3, 4, 5]).unwrap();
+        let a: Vec<u32> = packed.logits().iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = dense.logits().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "compressed-domain GEMV must be bitwise-equal");
+        // And the packed engine actually moved fewer activation bytes.
+        let (sp, sd) = (packed.stats(), dense.stats());
+        assert_eq!(sp.dense_activation_bytes, sd.dense_activation_bytes);
+        assert!(sp.moved_activation_bytes < sd.moved_activation_bytes);
+        assert!(sp.bytes_reduction() > 1.5, "{}", sp.bytes_reduction());
+    }
+}

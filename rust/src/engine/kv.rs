@@ -1,0 +1,253 @@
+//! Per-session KV cache for the native decode engine.
+//!
+//! Memory layout (see DESIGN.md §2.9): one contiguous f32 buffer per
+//! projection, indexed `[layer][position][d_model]` —
+//! `k[(l * max_seq + pos) * d_model + i]`. A position's K/V rows for
+//! every layer are written during that token's step and become immutable;
+//! attention at position `t` reads the `t + 1` leading rows of its
+//! layer's span. `len` alone tracks validity, so [`KvCache::reset`] and
+//! [`KvCache::truncate`] are O(1) bookkeeping (no zeroing), and a cache
+//! evicted from the [`SessionKvPool`] is rebound to a new session by
+//! resetting — buffers are never freed in steady state.
+
+use crate::engine::model::EngineConfig;
+
+/// KV storage for one decode session.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    d_model: usize,
+    max_seq: usize,
+    len: usize,
+    /// `[n_layers * max_seq * d_model]` keys (post-RoPE).
+    k: Vec<f32>,
+    /// `[n_layers * max_seq * d_model]` values.
+    v: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn new(cfg: &EngineConfig) -> KvCache {
+        let n = cfg.n_layers * cfg.max_seq * cfg.d_model;
+        KvCache {
+            d_model: cfg.d_model,
+            max_seq: cfg.max_seq,
+            len: 0,
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+        }
+    }
+
+    /// Cached positions (tokens already processed).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Position capacity (the engine's `max_seq`).
+    pub fn capacity(&self) -> usize {
+        self.max_seq
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len >= self.max_seq
+    }
+
+    /// Forget everything (O(1) — validity is tracked by `len`).
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    /// Roll back to the first `len` positions (no-op if already shorter).
+    /// Positions ≥ `len` will be overwritten by subsequent steps.
+    pub fn truncate(&mut self, len: usize) {
+        self.len = self.len.min(len);
+    }
+
+    /// Write the current position's K and V rows for `layer`. Every layer
+    /// must be written before [`KvCache::advance`] moves to the next
+    /// position. Panics when full — the engine checks before stepping.
+    pub fn write_row(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
+        assert!(self.len < self.max_seq, "KV cache full");
+        assert_eq!(k_row.len(), self.d_model);
+        assert_eq!(v_row.len(), self.d_model);
+        let base = (layer * self.max_seq + self.len) * self.d_model;
+        self.k[base..base + self.d_model].copy_from_slice(k_row);
+        self.v[base..base + self.d_model].copy_from_slice(v_row);
+    }
+
+    /// Commit the current position (call once per token, after every
+    /// layer's [`KvCache::write_row`]).
+    pub fn advance(&mut self) {
+        assert!(self.len < self.max_seq, "KV cache full");
+        self.len += 1;
+    }
+
+    /// The valid key rows of `layer`, including the in-flight position:
+    /// `rows` rows of `d_model` — attention at position `t` passes
+    /// `rows = t + 1` (its own row was just written, `len` still `t`).
+    pub fn keys(&self, layer: usize, rows: usize) -> &[f32] {
+        debug_assert!(rows <= self.max_seq);
+        let base = layer * self.max_seq * self.d_model;
+        &self.k[base..base + rows * self.d_model]
+    }
+
+    /// The valid value rows of `layer` (see [`KvCache::keys`]).
+    pub fn values(&self, layer: usize, rows: usize) -> &[f32] {
+        debug_assert!(rows <= self.max_seq);
+        let base = layer * self.max_seq * self.d_model;
+        &self.v[base..base + rows * self.d_model]
+    }
+
+    /// Resident footprint of the cache buffers in bytes.
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+}
+
+/// LRU pool of per-session caches, keyed by the scheduler's session id.
+/// Bounded: admitting session `cap + 1` evicts the least-recently-used
+/// cache and rebinds its buffers (reset, no reallocation). An evicted
+/// session that steps again is re-prefilled from its row — slower, never
+/// wrong (`rust/tests/native_decode.rs` pins token identity under cap 1).
+#[derive(Debug)]
+pub struct SessionKvPool {
+    cfg: EngineConfig,
+    cap: usize,
+    /// `(session id, cache)`, least-recently-used first.
+    entries: Vec<(u64, KvCache)>,
+    evictions: u64,
+}
+
+impl SessionKvPool {
+    pub fn new(cfg: &EngineConfig, cap: usize) -> SessionKvPool {
+        SessionKvPool {
+            cfg: cfg.clone(),
+            cap: cap.max(1),
+            entries: Vec::new(),
+            evictions: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.entries.iter().any(|(e, _)| *e == id)
+    }
+
+    /// Sessions evicted to make room so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// The session's cache, created (or rebound from the evicted LRU
+    /// entry) on miss; the entry becomes most-recently-used.
+    pub fn get_or_create(&mut self, id: u64) -> &mut KvCache {
+        if let Some(i) = self.entries.iter().position(|(e, _)| *e == id) {
+            let entry = self.entries.remove(i);
+            self.entries.push(entry);
+        } else if self.entries.len() < self.cap {
+            self.entries.push((id, KvCache::new(&self.cfg)));
+        } else {
+            // Evict the LRU entry, reusing its buffers for the new session.
+            let (_, mut cache) = self.entries.remove(0);
+            cache.reset();
+            self.evictions += 1;
+            self.entries.push((id, cache));
+        }
+        &mut self.entries.last_mut().expect("just pushed").1
+    }
+
+    /// Drop a finished session's cache (buffers are freed; live sessions
+    /// keep theirs).
+    pub fn remove(&mut self, id: u64) {
+        self.entries.retain(|(e, _)| *e != id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> EngineConfig {
+        EngineConfig {
+            vocab: 16,
+            d_model: 4,
+            n_layers: 2,
+            n_heads: 1,
+            ffn: 8,
+            max_seq: 3,
+        }
+    }
+
+    #[test]
+    fn write_advance_read_roundtrip() {
+        let mut kv = KvCache::new(&cfg());
+        assert!(kv.is_empty() && !kv.is_full());
+        kv.write_row(0, &[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0]);
+        kv.write_row(1, &[9.0; 4], &[10.0; 4]);
+        // Before advance, the in-flight row is readable as rows = len + 1.
+        assert_eq!(kv.keys(0, 1), &[1.0, 2.0, 3.0, 4.0]);
+        kv.advance();
+        kv.write_row(0, &[11.0; 4], &[12.0; 4]);
+        kv.advance();
+        assert_eq!(kv.len(), 2);
+        assert_eq!(&kv.keys(0, 2)[4..], &[11.0; 4]);
+        assert_eq!(kv.values(1, 1), &[10.0; 4]);
+        // Layers are disjoint spans.
+        assert_eq!(kv.keys(1, 1), &[9.0; 4]);
+    }
+
+    #[test]
+    fn full_and_truncate_semantics() {
+        let mut kv = KvCache::new(&cfg());
+        for i in 0..3 {
+            kv.write_row(0, &[i as f32; 4], &[0.0; 4]);
+            kv.write_row(1, &[0.0; 4], &[0.0; 4]);
+            kv.advance();
+        }
+        assert!(kv.is_full());
+        kv.truncate(1);
+        assert_eq!(kv.len(), 1);
+        assert!(!kv.is_full());
+        assert_eq!(kv.keys(0, 1), &[0.0; 4]);
+        kv.truncate(5); // no-op: cannot extend
+        assert_eq!(kv.len(), 1);
+        kv.reset();
+        assert!(kv.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "KV cache full")]
+    fn advance_past_capacity_panics() {
+        let mut kv = KvCache::new(&cfg());
+        for _ in 0..4 {
+            kv.advance();
+        }
+    }
+
+    #[test]
+    fn pool_lru_eviction_and_rebind() {
+        let mut pool = SessionKvPool::new(&cfg(), 2);
+        pool.get_or_create(1).advance();
+        pool.get_or_create(2);
+        pool.get_or_create(1); // touch 1: now 2 is LRU
+        assert_eq!(pool.len(), 2);
+        pool.get_or_create(3); // evicts 2
+        assert_eq!(pool.evictions(), 1);
+        assert!(pool.contains(1) && pool.contains(3) && !pool.contains(2));
+        // Session 1 kept its state; the rebound cache starts empty.
+        assert_eq!(pool.get_or_create(1).len(), 1);
+        assert_eq!(pool.get_or_create(3).len(), 0);
+        pool.remove(1);
+        assert!(!pool.contains(1));
+        assert_eq!(pool.len(), 1);
+    }
+}

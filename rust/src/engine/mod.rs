@@ -1,0 +1,36 @@
+//! Native decode engine: KV-cached incremental decoding over packed N:M
+//! activations (DESIGN.md §2.9).
+//!
+//! The PJRT path re-runs a full-context forward for every generated token
+//! (the artifact executables are fixed-shape); this subsystem is the
+//! serving-native alternative — a pure-rust CPU transformer that prefills
+//! a prompt once and then decodes one token per step against a
+//! per-session [`KvCache`], applying the paper's N:M activation
+//! sparsification at the seven linear sites on every step and executing
+//! the sparse matvecs in the compressed domain over [`PackedNM`] streams:
+//!
+//! - [`model`]: weights + configuration — artifact checkpoints load via
+//!   [`NativeModel::from_store`] (same tensor names as `aot.py`); CI and
+//!   benches use the seeded deterministic [`NativeModel::synthetic`];
+//! - [`kv`]: the per-session KV cache and the LRU [`SessionKvPool`] the
+//!   serving backend keys by scheduler session id;
+//! - [`decode`]: the per-token step kernel ([`NativeEngine::step`]) and
+//!   the [`DecodeStats`] byte counters behind `BENCH_decode.json`;
+//! - [`forward`]: prefill, the full-context reference loop (the
+//!   equivalence oracle: token-identical by construction, pinned under
+//!   cache eviction/truncation by `rust/tests/native_decode.rs`), greedy
+//!   generation and span scoring.
+//!
+//! Consumers: `coordinator::server::NativeBackend` (`--backend native` in
+//! `nmsparse serve`/`loadgen`), `EnginePool::native_engine` +
+//! `Coordinator::generate_refs` (artifact-backed native decode), and
+//! `benches/decode.rs`.
+
+pub mod decode;
+pub mod forward;
+pub mod kv;
+pub mod model;
+
+pub use decode::{DecodeStats, NativeEngine, NativeSparsity};
+pub use kv::{KvCache, SessionKvPool};
+pub use model::{EngineConfig, NativeModel, SITES};

@@ -1,0 +1,338 @@
+//! Native decode-engine weights + configuration.
+//!
+//! [`NativeModel`] is the rust-side twin of `python/compile/model.py`: the
+//! same Llama-style architecture (RMSNorm → q/k/v/o attention with RoPE →
+//! RMSNorm → SwiGLU gate/up/down), the same seven sparsifiable linear
+//! sites, and the same checkpoint tensor names (`embed.w`, `lm_head.w`,
+//! `final_norm.g`, `layers.{l}.{site}.w`, `layers.{l}.norm{1,2}.g`), so a
+//! checkpoint written by `aot.py` loads directly via
+//! [`NativeModel::from_store`]. When no artifacts exist (CI, benches,
+//! tests), [`NativeModel::synthetic`] builds a seeded deterministic model
+//! with the python `init_params` shape rules — every weight is a pure
+//! function of `(seed, tensor name)`, so two processes agree bit-for-bit.
+
+use crate::runtime::ModelDims;
+use crate::util::prng::Rng;
+use crate::util::tensor::{Tensor, TensorStore};
+use anyhow::Result;
+
+/// The seven sparsifiable linear sites, in the canonical order shared with
+/// `python/compile/model.py` (`SITES`) and the AOT manifest.
+pub const SITES: [&str; 7] = ["q", "k", "v", "o", "gate", "up", "down"];
+
+/// Static dimensions of a native engine model.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EngineConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn: usize,
+    /// KV-cache capacity: the longest context a session may reach.
+    pub max_seq: usize,
+}
+
+impl EngineConfig {
+    /// CI-sized synthetic default: big enough that packed 8:16/16:32
+    /// matvecs are real work, small enough that tests and the loadgen
+    /// smoke stay fast. All widths are multiples of 32 so every paper
+    /// N:M pattern divides every site.
+    pub fn tiny() -> EngineConfig {
+        EngineConfig {
+            vocab: 160,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 2,
+            ffn: 128,
+            max_seq: 64,
+        }
+    }
+
+    /// Adopt the dimensions recorded in an artifacts manifest (the KV
+    /// capacity is the artifact's eval sequence length).
+    pub fn from_dims(d: &ModelDims) -> EngineConfig {
+        EngineConfig {
+            vocab: d.vocab,
+            d_model: d.d_model,
+            n_layers: d.n_layers,
+            n_heads: d.n_heads,
+            ffn: d.ffn,
+            max_seq: d.seq,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Input width of a linear site — what gets sparsified.
+    pub fn site_in_dim(&self, site: &str) -> usize {
+        if site == "down" {
+            self.ffn
+        } else {
+            self.d_model
+        }
+    }
+
+    pub fn site_out_dim(&self, site: &str) -> usize {
+        if site == "gate" || site == "up" {
+            self.ffn
+        } else {
+            self.d_model
+        }
+    }
+
+    /// Total parameter count (embedding + head + norms + site weights).
+    pub fn num_params(&self) -> usize {
+        let sites: usize = SITES
+            .iter()
+            .map(|s| self.site_in_dim(s) * self.site_out_dim(s))
+            .sum();
+        2 * self.vocab * self.d_model            // embed.w + lm_head.w
+            + self.d_model * (2 * self.n_layers + 1) // norms
+            + sites * self.n_layers
+    }
+}
+
+/// One transformer layer's weights. Linear weights are `[out, in]`
+/// row-major — `y[o] = w.row(o) · x`, the layout `matmul_nt_into` and the
+/// python `h2d @ w.T` both assume.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub norm1: Vec<f32>,
+    pub norm2: Vec<f32>,
+    pub wq: Tensor,
+    pub wk: Tensor,
+    pub wv: Tensor,
+    pub wo: Tensor,
+    pub wgate: Tensor,
+    pub wup: Tensor,
+    pub wdown: Tensor,
+}
+
+impl LayerWeights {
+    /// Weight matrix of a named site.
+    pub fn site(&self, site: &str) -> &Tensor {
+        match site {
+            "q" => &self.wq,
+            "k" => &self.wk,
+            "v" => &self.wv,
+            "o" => &self.wo,
+            "gate" => &self.wgate,
+            "up" => &self.wup,
+            "down" => &self.wdown,
+            other => panic!("unknown site '{other}'"),
+        }
+    }
+}
+
+/// Full weights of the native engine.
+#[derive(Clone, Debug)]
+pub struct NativeModel {
+    pub cfg: EngineConfig,
+    /// `[vocab, d_model]` token embedding (dense — never sparsified).
+    pub embed: Tensor,
+    /// `[vocab, d_model]` untied output head (dense).
+    pub lm_head: Tensor,
+    pub final_norm: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+}
+
+impl NativeModel {
+    /// Seeded deterministic synthetic model: scaled-normal site weights
+    /// (`N(0,1)/sqrt(fan_in)`, python's `init_params` rule), all norms 1.
+    /// Each tensor's stream is `Rng::new(seed ^ fnv1a64(name))` — a pure
+    /// function of `(seed, name)`, never of construction order.
+    pub fn synthetic(cfg: &EngineConfig, seed: u64) -> NativeModel {
+        let stream = |name: &str| Rng::new(seed ^ crate::util::prng::fnv1a64(name.as_bytes()));
+        let normal = |name: &str, rows: usize, cols: usize| -> Tensor {
+            let mut rng = stream(name);
+            let scale = 1.0 / (cols as f64).sqrt();
+            Tensor::from_vec(
+                &[rows, cols],
+                (0..rows * cols)
+                    .map(|_| (rng.normal() * scale) as f32)
+                    .collect(),
+            )
+        };
+        let embed = normal("embed.w", cfg.vocab, cfg.d_model);
+        let lm_head = normal("lm_head.w", cfg.vocab, cfg.d_model);
+        let layers = (0..cfg.n_layers)
+            .map(|l| {
+                let w = |s: &str| {
+                    normal(
+                        &format!("layers.{l}.{s}.w"),
+                        cfg.site_out_dim(s),
+                        cfg.site_in_dim(s),
+                    )
+                };
+                LayerWeights {
+                    norm1: vec![1.0; cfg.d_model],
+                    norm2: vec![1.0; cfg.d_model],
+                    wq: w("q"),
+                    wk: w("k"),
+                    wv: w("v"),
+                    wo: w("o"),
+                    wgate: w("gate"),
+                    wup: w("up"),
+                    wdown: w("down"),
+                }
+            })
+            .collect();
+        NativeModel {
+            cfg: cfg.clone(),
+            embed,
+            lm_head,
+            final_norm: vec![1.0; cfg.d_model],
+            layers,
+        }
+    }
+
+    /// Load from a checkpoint store (`aot.py` / [`TensorStore::save`]
+    /// naming). Shapes are validated against `cfg`.
+    pub fn from_store(store: &TensorStore, cfg: &EngineConfig) -> Result<NativeModel> {
+        let matrix = |name: &str, rows: usize, cols: usize| -> Result<Tensor> {
+            let t = store.get(name)?;
+            anyhow::ensure!(
+                t.shape == [rows, cols],
+                "tensor '{name}': checkpoint shape {:?}, engine config wants [{rows}, {cols}]",
+                t.shape
+            );
+            Ok(t.clone())
+        };
+        let gain = |name: &str| -> Result<Vec<f32>> {
+            let t = store.get(name)?;
+            anyhow::ensure!(
+                t.shape == [cfg.d_model],
+                "tensor '{name}': checkpoint shape {:?}, engine config wants [{}]",
+                t.shape,
+                cfg.d_model
+            );
+            Ok(t.data.clone())
+        };
+        let embed = matrix("embed.w", cfg.vocab, cfg.d_model)?;
+        let lm_head = matrix("lm_head.w", cfg.vocab, cfg.d_model)?;
+        let final_norm = gain("final_norm.g")?;
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let w = |s: &str| -> Result<Tensor> {
+                matrix(
+                    &format!("layers.{l}.{s}.w"),
+                    cfg.site_out_dim(s),
+                    cfg.site_in_dim(s),
+                )
+            };
+            layers.push(LayerWeights {
+                norm1: gain(&format!("layers.{l}.norm1.g"))?,
+                norm2: gain(&format!("layers.{l}.norm2.g"))?,
+                wq: w("q")?,
+                wk: w("k")?,
+                wv: w("v")?,
+                wo: w("o")?,
+                wgate: w("gate")?,
+                wup: w("up")?,
+                wdown: w("down")?,
+            });
+        }
+        Ok(NativeModel {
+            cfg: cfg.clone(),
+            embed,
+            lm_head,
+            final_norm,
+            layers,
+        })
+    }
+
+    /// Serialize back to the `aot.py` naming — the round-trip oracle for
+    /// [`NativeModel::from_store`], also used by tests to fabricate a
+    /// loadable artifacts directory without python.
+    pub fn to_store(&self) -> TensorStore {
+        let cfg = &self.cfg;
+        let mut s = TensorStore::new();
+        s.insert("embed.w", self.embed.clone());
+        s.insert("lm_head.w", self.lm_head.clone());
+        s.insert(
+            "final_norm.g",
+            Tensor::from_vec(&[cfg.d_model], self.final_norm.clone()),
+        );
+        for (l, layer) in self.layers.iter().enumerate() {
+            for site in SITES {
+                s.insert(&format!("layers.{l}.{site}.w"), layer.site(site).clone());
+            }
+            s.insert(
+                &format!("layers.{l}.norm1.g"),
+                Tensor::from_vec(&[cfg.d_model], layer.norm1.clone()),
+            );
+            s.insert(
+                &format!("layers.{l}.norm2.g"),
+                Tensor::from_vec(&[cfg.d_model], layer.norm2.clone()),
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_dims_follow_python_rules() {
+        let cfg = EngineConfig::tiny();
+        assert_eq!(cfg.head_dim(), 32);
+        assert_eq!(cfg.site_in_dim("down"), cfg.ffn);
+        assert_eq!(cfg.site_in_dim("q"), cfg.d_model);
+        assert_eq!(cfg.site_out_dim("gate"), cfg.ffn);
+        assert_eq!(cfg.site_out_dim("o"), cfg.d_model);
+        // num_params matches a hand count for the tiny config:
+        // 2*160*64 + 64*(2*2+1) + 2*(4*64*64 + 2*128*64 + 128*64).
+        let sites_per_layer = 4 * 64 * 64 + 2 * 128 * 64 + 128 * 64;
+        assert_eq!(cfg.num_params(), 2 * 160 * 64 + 64 * 5 + 2 * sites_per_layer);
+    }
+
+    #[test]
+    fn synthetic_is_deterministic_and_order_free() {
+        let cfg = EngineConfig::tiny();
+        let a = NativeModel::synthetic(&cfg, 7);
+        let b = NativeModel::synthetic(&cfg, 7);
+        assert_eq!(a.embed.data, b.embed.data);
+        assert_eq!(a.layers[1].wdown.data, b.layers[1].wdown.data);
+        let c = NativeModel::synthetic(&cfg, 8);
+        assert_ne!(a.embed.data, c.embed.data);
+        // Scaled init keeps values small.
+        assert!(a.embed.data.iter().all(|v| v.abs() < 2.0));
+    }
+
+    #[test]
+    fn store_roundtrip_preserves_weights() {
+        let cfg = EngineConfig {
+            vocab: 32,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            ffn: 32,
+            max_seq: 16,
+        };
+        let m = NativeModel::synthetic(&cfg, 3);
+        let store = m.to_store();
+        assert_eq!(store.num_params(), cfg.num_params());
+        let back = NativeModel::from_store(&store, &cfg).unwrap();
+        assert_eq!(back.embed.data, m.embed.data);
+        assert_eq!(back.lm_head.data, m.lm_head.data);
+        assert_eq!(back.final_norm, m.final_norm);
+        for l in 0..cfg.n_layers {
+            for site in SITES {
+                assert_eq!(
+                    back.layers[l].site(site).data,
+                    m.layers[l].site(site).data,
+                    "layer {l} site {site}"
+                );
+            }
+        }
+        // Wrong dims are a shape error, not silent misload.
+        let mut bad = cfg.clone();
+        bad.d_model = 16;
+        bad.n_heads = 1;
+        assert!(NativeModel::from_store(&store, &bad).is_err());
+    }
+}

@@ -1,0 +1,154 @@
+//! `nmsparse decode` — drive the native KV-cached decode engine from the
+//! command line.
+//!
+//! Loads the artifacts checkpoint when `--artifacts` points at a real
+//! directory, otherwise builds the seeded synthetic model, prefills a
+//! deterministic prompt, greedy-decodes, and prints the tokens plus an
+//! FNV-64 hash of the output. `--check` additionally replays the same
+//! generation through the full-context reference loop and errors on any
+//! divergence — the CI smoke in `tools/ci.sh` runs this twice and pins
+//! both the in-process KV≡full equivalence and the cross-run hash.
+
+use crate::coordinator::methods::MethodConfig;
+use crate::engine::{EngineConfig, NativeEngine, NativeModel, NativeSparsity};
+use crate::runtime::Manifest;
+use crate::sparsity::Pattern;
+use crate::util::cli::{usage, Args, OptSpec};
+use crate::util::prng::Rng;
+use crate::util::tensor::TensorStore;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+pub fn cmd_decode(rest: Vec<String>) -> Result<()> {
+    #[rustfmt::skip]
+    let specs = vec![
+        OptSpec { name: "artifacts", takes_value: true, default: Some("artifacts"), help: "artifacts dir (missing -> synthetic model)" },
+        OptSpec { name: "pattern", takes_value: true, default: Some("8:16"), help: "sparsity pattern" },
+        OptSpec { name: "method", takes_value: true, default: Some("ACT"), help: "method (ACT, D-PTS, VAR, dense)" },
+        OptSpec { name: "seed", takes_value: true, default: Some("7"), help: "synthetic weights + prompt seed" },
+        OptSpec { name: "prompt-len", takes_value: true, default: Some("8"), help: "random prompt length" },
+        OptSpec { name: "prompt-tokens", takes_value: true, default: Some(""), help: "explicit comma-separated prompt token ids" },
+        OptSpec { name: "max-new", takes_value: true, default: Some("16"), help: "tokens to generate" },
+        OptSpec { name: "check", takes_value: false, default: None, help: "verify KV-cached == full-context reference" },
+        OptSpec { name: "dense-path", takes_value: false, default: None, help: "disable the compressed-domain matvec" },
+        OptSpec { name: "help", takes_value: false, default: None, help: "show help" },
+    ];
+    let a = Args::parse(rest, &specs)?;
+    if a.flag("help") {
+        print!("{}", usage("decode", "Run the native KV-cached decode engine.", &specs));
+        return Ok(());
+    }
+    let pattern = Pattern::parse(&a.get("pattern"))?;
+    let mcfg = MethodConfig::by_name(&a.get("method"), pattern)?;
+    let sparsity =
+        NativeSparsity::from_method(&mcfg)?.with_force_dense(a.flag("dense-path"));
+    let seed = a.get_u64("seed")?;
+    let max_new = a.get_usize("max-new")?.max(1);
+
+    let artifacts = PathBuf::from(a.get("artifacts"));
+    let (model, origin) = if artifacts.join("io_manifest.json").exists() {
+        let manifest = Manifest::load(&artifacts)?;
+        let weights = mcfg.transformed_weights(&TensorStore::load(&artifacts.join("ckpt"))?)?;
+        let cfg = EngineConfig::from_dims(&manifest.dims);
+        (NativeModel::from_store(&weights, &cfg)?, "artifacts")
+    } else {
+        (NativeModel::synthetic(&EngineConfig::tiny(), seed), "synthetic")
+    };
+    let cfg = model.cfg.clone();
+    let mut engine = NativeEngine::new(model, sparsity)?;
+
+    let prompt: Vec<u32> = {
+        let explicit = a.get("prompt-tokens");
+        if explicit.is_empty() {
+            let mut rng = Rng::new(seed ^ 0x9e37_79b9);
+            let len = a.get_usize("prompt-len")?.max(1);
+            (0..len).map(|_| rng.range(3, cfg.vocab.min(128)) as u32).collect()
+        } else {
+            explicit
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse::<u32>()
+                        .map_err(|_| anyhow::anyhow!("bad token id '{t}' in --prompt-tokens"))
+                })
+                .collect::<Result<Vec<u32>>>()?
+        }
+    };
+
+    println!(
+        "decode: {origin} model (vocab {}, d_model {}, {} layers, ffn {}, max_seq {}), \
+         pattern {}, method {}, packed={}",
+        cfg.vocab,
+        cfg.d_model,
+        cfg.n_layers,
+        cfg.ffn,
+        cfg.max_seq,
+        pattern,
+        mcfg.id,
+        engine.uses_packed(),
+    );
+
+    let mut kv = engine.new_cache();
+    let t0 = std::time::Instant::now();
+    let out = engine.generate_greedy(&mut kv, &prompt, max_new, &[])?;
+    let dt = t0.elapsed().as_secs_f64();
+    if a.flag("check") {
+        let full = engine.generate_greedy_full(&mut kv, &prompt, max_new, &[])?;
+        if out != full {
+            bail!(
+                "KV-cached decode diverged from the full-context reference:\n  \
+                 kv:   {out:?}\n  full: {full:?}"
+            );
+        }
+        println!("check: KV-cached decode == full-context reference ({} tokens)", out.len());
+    }
+    let stats = engine.stats();
+    println!("prompt {prompt:?}\ntokens {out:?}");
+    println!(
+        "decoded {} tokens in {:.3}s ({:.1} tok/s) | activation bytes: dense-equivalent {} -> \
+         moved {} ({:.2}x reduction)",
+        out.len(),
+        dt,
+        out.len() as f64 / dt.max(1e-9),
+        stats.dense_activation_bytes,
+        stats.moved_activation_bytes,
+        stats.bytes_reduction(),
+    );
+    println!("hash {:016x}", fnv64(&out));
+    Ok(())
+}
+
+/// FNV-1a over the generated token stream (LE bytes) — the determinism
+/// pin the CI smoke compares across runs.
+fn fnv64(tokens: &[u32]) -> u64 {
+    let bytes: Vec<u8> = tokens.iter().flat_map(|t| t.to_le_bytes()).collect();
+    crate::util::prng::fnv1a64(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_is_order_sensitive() {
+        assert_ne!(fnv64(&[1, 2, 3]), fnv64(&[3, 2, 1]));
+        assert_eq!(fnv64(&[1, 2, 3]), fnv64(&[1, 2, 3]));
+        assert_ne!(fnv64(&[]), fnv64(&[0]));
+    }
+
+    #[test]
+    fn decode_smoke_runs_synthetic() {
+        // No artifacts dir -> synthetic model; --check pins kv == full.
+        let args: Vec<String> = [
+            "--artifacts", "/definitely/not/here",
+            "--seed", "3",
+            "--prompt-len", "4",
+            "--max-new", "6",
+            "--check",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        cmd_decode(args).unwrap();
+    }
+}

@@ -10,17 +10,23 @@
 //! regardless of completion — measures behavior at a target arrival rate,
 //! including admission-control shedding (`rejection_rate`).
 //!
+//! Sweep (`--sweep r1,r2,...`): one bounded open-loop run per offered
+//! rate against a fresh core, emitting the latency-vs-offered-rate curve
+//! as `BENCH_serving_sweep.json` (rendered by `nmsparse table serving`).
+//!
 //! Default backend is [`SyntheticBackend`] (deterministic, artifact-free,
 //! optional simulated per-forward cost) so the CI smoke runs on a machine
-//! with only rustc/cargo; `--backend artifacts` drives the real engine
-//! replicas. The report (throughput, p50/p95/p99 latency from the
-//! server-side [`Histogram`], batch occupancy, rejection rate) is what
-//! `tables` and `tools/check_bench_json.py` consume.
+//! with only rustc/cargo; `--backend artifacts` drives the real PJRT
+//! engine replicas and `--backend native` the KV-cached
+//! [`NativeBackend`] (artifacts checkpoint when present, seeded synthetic
+//! model otherwise). The report (throughput, p50/p95/p99 latency from
+//! the server-side [`Histogram`], batch occupancy, rejection rate) is
+//! what `tables` and `tools/check_bench_json.py` consume.
 
 use crate::coordinator::methods::MethodConfig;
 use crate::coordinator::server::{
-    CoordinatorBackend, Request, ServerConfig, ServerCore, ServerStats, SubmitError,
-    SyntheticBackend, Ticket,
+    CoordinatorBackend, NativeBackend, Request, ServerConfig, ServerCore, ServerStats,
+    SubmitError, SyntheticBackend, Ticket,
 };
 use crate::sparsity::Pattern;
 use crate::synthlang::vocab::{Vocab, EOS};
@@ -68,6 +74,9 @@ pub enum BackendChoice {
     Synthetic { batch: usize, forward_cost: Duration },
     /// Real engines: each replica opens its own pool from this directory.
     Artifacts { dir: PathBuf, pattern: String, method: String },
+    /// KV-cached native decode engines — artifacts checkpoint when `dir`
+    /// holds one, seeded synthetic model otherwise. No PJRT either way.
+    Native { dir: PathBuf, pattern: String, method: String, seed: u64, batch: usize },
 }
 
 /// One loadgen run, fully specified.
@@ -141,6 +150,7 @@ impl LoadgenReport {
         j.insert("latency_ms", latency_ms_json(&self.stats.latency));
         j.insert("batch_occupancy", self.stats.batch_occupancy().into());
         j.insert("rejection_rate", self.stats.rejection_rate().into());
+        j.insert("stolen", (self.stats.stolen as f64).into());
         j
     }
 
@@ -222,6 +232,16 @@ fn start_core(cfg: &LoadgenConfig) -> Result<(ServerCore, &'static str)> {
             })?;
             Ok((core, "artifacts"))
         }
+        BackendChoice::Native { dir, pattern, method, seed, batch } => {
+            let pattern = Pattern::parse(pattern)?;
+            let vocab = Vocab::synthlang();
+            let stop = vec![vocab.id(".")?, EOS];
+            let (dir, method, seed, batch) = (dir.clone(), method.clone(), *seed, *batch);
+            let core = ServerCore::start(server_cfg, move |_r| {
+                NativeBackend::open(&dir, pattern, &method, stop.clone(), batch, seed)
+            })?;
+            Ok((core, "native"))
+        }
     }
 }
 
@@ -302,6 +322,76 @@ pub fn write_bench_json(report: &LoadgenReport, path: &std::path::Path) -> Resul
         .with_context(|| format!("writing {}", path.display()))
 }
 
+// ------------------------------------------------------------------ sweep
+
+/// One point of a latency-vs-offered-rate sweep.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub rate_rps: f64,
+    pub report: LoadgenReport,
+}
+
+/// Open-loop sweep: one bounded run per offered rate, each against a
+/// fresh core (clean histograms, no cross-rate pollution). Rates must be
+/// positive; `cfg.max_requests` requests are offered at every point.
+pub fn run_sweep(cfg: &LoadgenConfig, rates: &[f64]) -> Result<Vec<SweepPoint>> {
+    anyhow::ensure!(!rates.is_empty(), "--sweep needs at least one rate");
+    anyhow::ensure!(
+        rates.windows(2).all(|w| w[0] < w[1]),
+        "--sweep rates must be strictly increasing (the sweep curve is rate-ordered)"
+    );
+    let mut points = Vec::with_capacity(rates.len());
+    for &rate_rps in rates {
+        anyhow::ensure!(rate_rps > 0.0, "sweep rates must be positive (got {rate_rps})");
+        let mut point_cfg = cfg.clone();
+        point_cfg.rate_rps = rate_rps;
+        let report = run(&point_cfg)?;
+        println!("sweep @ {rate_rps:>8.1} req/s: {}", report.summary());
+        points.push(SweepPoint { rate_rps, report });
+    }
+    Ok(points)
+}
+
+/// The `BENCH_serving_sweep.json` document (see
+/// `tools/check_bench_json.py`): shared run shape at the top level, one
+/// entry per offered rate under `points`.
+pub fn sweep_json(cfg: &LoadgenConfig, points: &[SweepPoint]) -> Json {
+    let mut j = Json::obj();
+    j.insert("suite", "serving_sweep".into());
+    j.insert("mode", cfg.mode.as_str().into());
+    j.insert(
+        "backend",
+        points.first().map(|p| p.report.backend_name).unwrap_or("synthetic").into(),
+    );
+    j.insert("replicas", (cfg.replicas as f64).into());
+    j.insert("queue_cap", (cfg.queue_cap as f64).into());
+    j.insert("requests_per_point", (cfg.max_requests as f64).into());
+    let mut arr = Vec::with_capacity(points.len());
+    for p in points {
+        let mut e = Json::obj();
+        e.insert("rate_rps", p.rate_rps.into());
+        e.insert("served", (p.report.stats.served as f64).into());
+        e.insert("rejected", (p.report.stats.rejected as f64).into());
+        e.insert("throughput_rps", p.report.throughput_rps().into());
+        e.insert("latency_ms", latency_ms_json(&p.report.stats.latency));
+        e.insert("rejection_rate", p.report.stats.rejection_rate().into());
+        e.insert("batch_occupancy", p.report.stats.batch_occupancy().into());
+        arr.push(e);
+    }
+    j.insert("points", Json::Arr(arr));
+    j
+}
+
+/// Write the sweep document to `path`.
+pub fn write_sweep_json(
+    cfg: &LoadgenConfig,
+    points: &[SweepPoint],
+    path: &std::path::Path,
+) -> Result<()> {
+    std::fs::write(path, sweep_json(cfg, points).pretty())
+        .with_context(|| format!("writing {}", path.display()))
+}
+
 pub fn cmd_loadgen(rest: Vec<String>) -> Result<()> {
     #[rustfmt::skip]
     let specs = vec![
@@ -314,12 +404,14 @@ pub fn cmd_loadgen(rest: Vec<String>) -> Result<()> {
         OptSpec { name: "max-new", takes_value: true, default: Some("8"), help: "max generated tokens" },
         OptSpec { name: "max-wait-ms", takes_value: true, default: Some("5"), help: "batch deadline (ms)" },
         OptSpec { name: "seed", takes_value: true, default: Some("7"), help: "request-synthesis seed" },
-        OptSpec { name: "backend", takes_value: true, default: Some("synthetic"), help: "synthetic | artifacts" },
-        OptSpec { name: "batch", takes_value: true, default: Some("16"), help: "synthetic batch capacity" },
+        OptSpec { name: "backend", takes_value: true, default: Some("synthetic"), help: "synthetic | artifacts | native" },
+        OptSpec { name: "batch", takes_value: true, default: Some("16"), help: "synthetic/native batch capacity" },
         OptSpec { name: "forward-us", takes_value: true, default: Some("150"), help: "synthetic per-forward cost (us)" },
-        OptSpec { name: "artifacts", takes_value: true, default: Some("artifacts"), help: "artifacts dir (artifacts backend)" },
-        OptSpec { name: "pattern", takes_value: true, default: Some("8:16"), help: "sparsity pattern (artifacts backend)" },
-        OptSpec { name: "method", takes_value: true, default: Some("S-PTS"), help: "method (artifacts backend)" },
+        OptSpec { name: "artifacts", takes_value: true, default: Some("artifacts"), help: "artifacts dir (artifacts/native backends)" },
+        OptSpec { name: "pattern", takes_value: true, default: Some("8:16"), help: "sparsity pattern (artifacts/native backends)" },
+        OptSpec { name: "method", takes_value: true, default: Some("S-PTS"), help: "method (artifacts/native backends)" },
+        OptSpec { name: "sweep", takes_value: true, default: Some(""), help: "open-loop rate grid 'r1,r2,...' (req/s)" },
+        OptSpec { name: "sweep-out", takes_value: true, default: Some("BENCH_serving_sweep.json"), help: "sweep report path" },
         OptSpec { name: "out", takes_value: true, default: Some("BENCH_serving.json"), help: "report path ('' = skip)" },
         OptSpec { name: "help", takes_value: false, default: None, help: "show help" },
     ];
@@ -338,7 +430,16 @@ pub fn cmd_loadgen(rest: Vec<String>) -> Result<()> {
             pattern: a.get("pattern"),
             method: a.get("method"),
         },
-        other => bail!("unknown --backend '{other}' (synthetic, artifacts)"),
+        "native" => BackendChoice::Native {
+            dir: PathBuf::from(a.get("artifacts")),
+            pattern: a.get("pattern"),
+            // The native engine realizes ACT/D-PTS/VAR; the loadgen
+            // default S-PTS is kernel-only, so default to ACT here.
+            method: if a.given("method") { a.get("method") } else { "ACT".to_string() },
+            seed: a.get_u64("seed")?,
+            batch: a.get_usize("batch")?,
+        },
+        other => bail!("unknown --backend '{other}' (synthetic, artifacts, native)"),
     };
     let cfg = LoadgenConfig {
         replicas: a.get_usize("replicas")?,
@@ -352,6 +453,31 @@ pub fn cmd_loadgen(rest: Vec<String>) -> Result<()> {
         seed: a.get_u64("seed")?,
         backend,
     };
+    // Sweep mode: one open-loop run per rate -> BENCH_serving_sweep.json.
+    let sweep_rates = a.get("sweep");
+    if !sweep_rates.is_empty() {
+        let rates: Vec<f64> = sweep_rates
+            .split(',')
+            .map(|r| {
+                r.trim()
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("bad sweep rate '{r}' (want req/s numbers)"))
+            })
+            .collect::<Result<_>>()?;
+        println!(
+            "loadgen sweep: {} rates x {} requests, {} replicas (cap {}), {} backend",
+            rates.len(),
+            cfg.max_requests,
+            cfg.replicas,
+            cfg.queue_cap,
+            a.get("backend"),
+        );
+        let points = run_sweep(&cfg, &rates)?;
+        let path = PathBuf::from(a.get("sweep-out"));
+        write_sweep_json(&cfg, &points, &path)?;
+        println!("wrote {}", path.display());
+        return Ok(());
+    }
     println!(
         "loadgen: {} requests, {} replicas (cap {}), {} loop, {} backend",
         cfg.max_requests,
@@ -428,6 +554,59 @@ mod tests {
         assert!(p50 <= p95 && p95 <= p99);
         let occ = j.get("batch_occupancy").and_then(|x| x.as_f64()).unwrap();
         assert!((0.0..=1.0).contains(&occ));
+    }
+
+    #[test]
+    fn native_backend_run_completes_without_errors() {
+        let cfg = LoadgenConfig {
+            replicas: 1,
+            queue_cap: 64,
+            max_requests: 24,
+            concurrency: 4,
+            max_new: 4,
+            mode: Mode::Mixed,
+            backend: BackendChoice::Native {
+                dir: PathBuf::from("/definitely/not/here"),
+                pattern: "8:16".into(),
+                method: "ACT".into(),
+                seed: 3,
+                batch: 4,
+            },
+            ..Default::default()
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.backend_name, "native");
+        assert_eq!(report.stats.served + report.stats.rejected, 24);
+        assert_eq!(report.stats.errors, 0);
+    }
+
+    #[test]
+    fn sweep_produces_one_point_per_rate() {
+        let cfg = LoadgenConfig {
+            replicas: 1,
+            queue_cap: 16,
+            max_requests: 16,
+            mode: Mode::Score,
+            backend: BackendChoice::Synthetic { batch: 4, forward_cost: Duration::ZERO },
+            ..Default::default()
+        };
+        let points = run_sweep(&cfg, &[2000.0, 4000.0]).unwrap();
+        assert_eq!(points.len(), 2);
+        for p in &points {
+            assert_eq!(p.report.stats.served + p.report.stats.rejected, 16);
+            assert!((p.rate_rps - 2000.0).abs() < 1e-9 || (p.rate_rps - 4000.0).abs() < 1e-9);
+        }
+        let j = sweep_json(&cfg, &points);
+        assert_eq!(j.get("suite").and_then(|s| s.as_str()), Some("serving_sweep"));
+        let arr = j.get("points").and_then(|p| p.as_arr()).unwrap();
+        assert_eq!(arr.len(), 2);
+        for e in arr {
+            assert!(e.get("rate_rps").and_then(|x| x.as_f64()).unwrap() > 0.0);
+            assert!(e.get("latency_ms").and_then(|l| l.get("p95")).is_some());
+        }
+        // Degenerate sweeps are rejected.
+        assert!(run_sweep(&cfg, &[]).is_err());
+        assert!(run_sweep(&cfg, &[0.0]).is_err());
     }
 
     #[test]

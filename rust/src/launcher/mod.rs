@@ -9,6 +9,7 @@ use crate::util::cli::{usage, Args, OptSpec};
 use anyhow::{bail, Result};
 use std::path::PathBuf;
 
+mod decode;
 pub mod loadgen;
 mod serve;
 
@@ -39,6 +40,7 @@ pub fn dispatch(raw: &[String]) -> Result<()> {
         "table" => crate::tables::cmd_table(rest),
         "serve" => serve::cmd_serve(rest),
         "loadgen" => loadgen::cmd_loadgen(rest),
+        "decode" => decode::cmd_decode(rest),
         "--help" | "-h" | "help" => {
             print!("{}", top_usage());
             Ok(())
@@ -61,9 +63,12 @@ fn top_usage() -> String {
                  table4 table5 table6 table7 table8 table10 table11 table12\n\
                  table14 serving)\n\
        serve     TCP scoring/generation server (multi-replica; see\n\
-                 examples/serving_demo.rs)\n\
+                 examples/serving_demo.rs; --backend coordinator|native)\n\
        loadgen   closed/open-loop load generator against a ServerCore;\n\
-                 emits BENCH_serving.json\n"
+                 emits BENCH_serving.json (--sweep emits\n\
+                 BENCH_serving_sweep.json)\n\
+       decode    native KV-cached decode engine (synthetic or artifacts;\n\
+                 --check pins KV == full-context)\n"
         .to_string()
 }
 

@@ -30,7 +30,8 @@
 
 use crate::coordinator::methods::MethodConfig;
 use crate::coordinator::server::{
-    CoordinatorBackend, Request, Response, ServerConfig, ServerCore, ServerHandle, SubmitError,
+    CoordinatorBackend, NativeBackend, Request, Response, ServerConfig, ServerCore, ServerHandle,
+    SubmitError,
 };
 use crate::sparsity::Pattern;
 use crate::synthlang::vocab::{Vocab, EOS};
@@ -51,6 +52,8 @@ pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
         OptSpec { name: "addr", takes_value: true, default: Some("127.0.0.1:7433"), help: "listen address" },
         OptSpec { name: "pattern", takes_value: true, default: Some("8:16"), help: "sparsity pattern" },
         OptSpec { name: "method", takes_value: true, default: Some("S-PTS"), help: "method name" },
+        OptSpec { name: "backend", takes_value: true, default: Some("coordinator"), help: "coordinator (PJRT, full-context) | native (KV-cached)" },
+        OptSpec { name: "seed", takes_value: true, default: Some("7"), help: "native synthetic-model seed (no artifacts)" },
         OptSpec { name: "replicas", takes_value: true, default: Some("1"), help: "engine replicas (each opens its own pool)" },
         OptSpec { name: "queue-cap", takes_value: true, default: Some("64"), help: "per-replica admission cap" },
         OptSpec { name: "max-wait-ms", takes_value: true, default: Some("5"), help: "batch deadline (ms)" },
@@ -63,7 +66,17 @@ pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
         return Ok(());
     }
     let pattern = Pattern::parse(&a.get("pattern"))?;
-    let cfg = MethodConfig::by_name(&a.get("method"), pattern)?;
+    let backend_kind = a.get("backend");
+    // The serve-wide default method (S-PTS) is kernel-path-only; when the
+    // native backend is selected and --method was not given, fall back to
+    // ACT (an *explicit* S-PTS still errors loudly at startup). The
+    // banner and ping replies show the method actually served.
+    let method_name = if backend_kind == "native" && !a.given("method") {
+        "ACT".to_string()
+    } else {
+        a.get("method")
+    };
+    let cfg = MethodConfig::by_name(&method_name, pattern)?;
     let vocab = Arc::new(Vocab::synthlang());
     let stop = vec![vocab.id(".")?, EOS];
     let artifacts = PathBuf::from(a.get("artifacts"));
@@ -74,22 +87,40 @@ pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
         queue_cap: a.get_usize("queue-cap")?,
         max_wait: Duration::from_millis(a.get_u64("max-wait-ms")?),
     };
-    // Each replica thread opens its own Coordinator/engine pool (PJRT
-    // handles are not Send); start() blocks until every engine is bound.
-    let factory_cfg = cfg.clone();
-    let core = ServerCore::start(server_cfg, move |_r| {
-        CoordinatorBackend::open(&artifacts, factory_cfg.clone(), stop.clone())
-    })?;
+    // Each replica thread builds its own backend (PJRT handles are not
+    // Send; native engines simply stay per-thread); start() blocks until
+    // every engine is ready.
+    let core = match backend_kind.as_str() {
+        "coordinator" => {
+            let factory_cfg = cfg.clone();
+            let (artifacts, stop) = (artifacts.clone(), stop.clone());
+            ServerCore::start(server_cfg, move |_r| {
+                CoordinatorBackend::open(&artifacts, factory_cfg.clone(), stop.clone())
+            })?
+        }
+        "native" => {
+            // KV-cached native decode: artifacts checkpoint when present,
+            // seeded synthetic model otherwise (no PJRT either way).
+            let (artifacts, stop) = (artifacts.clone(), stop.clone());
+            let method = method_name.clone();
+            let seed = a.get_u64("seed")?;
+            ServerCore::start(server_cfg, move |_r| {
+                NativeBackend::open(&artifacts, pattern, &method, stop.clone(), 8, seed)
+            })?
+        }
+        other => anyhow::bail!("unknown --backend '{other}' (coordinator, native)"),
+    };
 
     let listener = TcpListener::bind(a.get("addr")).context("binding server address")?;
     listener.set_nonblocking(true)?;
     println!(
-        "serving {} / {} on {} ({} replica(s), queue cap {})",
+        "serving {} / {} on {} ({} replica(s), queue cap {}, {} backend)",
         cfg.variant_key,
         cfg.id,
         a.get("addr"),
         core.replicas(),
         server_cfg.queue_cap.max(1),
+        backend_kind,
     );
 
     // Requests answered at this protocol layer (ping/stats/parse errors);
@@ -207,6 +238,7 @@ fn stats_reply(handle: &ServerHandle) -> String {
     r.insert("served", (s.served as f64).into());
     r.insert("rejected", (s.rejected as f64).into());
     r.insert("errors", (s.errors as f64).into());
+    r.insert("stolen", (s.stolen as f64).into());
     r.insert("latency_ms", super::loadgen::latency_ms_json(&s.latency));
     r.insert("batch_occupancy", s.batch_occupancy().into());
     r.insert("rejection_rate", s.rejection_rate().into());

@@ -10,7 +10,8 @@
 //! - **L3** (this crate): coordinator — PJRT runtime, request batching and
 //!   scheduling, the lm-eval-style harness, the SynthLang data substrate,
 //!   the fused rust-native sparsification pipeline
-//!   ([`sparsity::pipeline::Sparsifier`]) and quantization baselines, the
+//!   ([`sparsity::pipeline::Sparsifier`]), the native KV-cached decode
+//!   engine ([`engine::NativeEngine`]) and quantization baselines, the
 //!   hardware cost model, and the paper-table reproduction harness.
 //!
 //! See `DESIGN.md` (repo root) for the three-layer architecture, the
@@ -19,6 +20,7 @@
 //! `results/` and rendered with `tools/results_to_md.py`.
 
 pub mod coordinator;
+pub mod engine;
 pub mod evalharness;
 pub mod hwmodel;
 pub mod launcher;

@@ -8,8 +8,12 @@
 //!   ppl       perplexity of a configuration on the validation corpus
 //!   ifeval    instruction-following (strict/loose) for a configuration
 //!   table     regenerate a paper table/figure (fig1, fig2, table2, ...)
-//!   serve     run the TCP scoring/generation server (multi-replica)
+//!   serve     run the TCP scoring/generation server (multi-replica;
+//!             --backend coordinator|native)
 //!   loadgen   drive a multi-replica ServerCore; emits BENCH_serving.json
+//!             (--sweep emits BENCH_serving_sweep.json)
+//!   decode    run the native KV-cached decode engine (--check pins
+//!             KV-cached == full-context)
 //!
 //! Run `nmsparse <cmd> --help` for options.
 

@@ -11,8 +11,10 @@
 //! writeback, no per-block `Vec<bool>` — and the kernels here operate on
 //! the stream without ever materializing the dense tensor:
 //!
-//! - [`PackedNM::row_dot`] / [`PackedNM::matvec_into`]: packed·dense
-//!   GEMV — each row touches `kept_per_row` values instead of `cols`;
+//! - [`PackedNM::row_dot`] / [`PackedNM::matvec_into`] /
+//!   [`PackedNM::matmul_nt_into`]: packed·dense GEMV/GEMM — each row
+//!   touches `kept_per_row` values instead of `cols` (the GEMM form is
+//!   the per-site linear of the native decode engine, §2.9);
 //! - [`PackedNM::decode_row_into`] / [`PackedNM::decode_into`]:
 //!   scatter back to dense (zero-filled), row-parallel over
 //!   `threadpool::par_chunks_mut`;
@@ -268,6 +270,31 @@ impl PackedNM {
         });
     }
 
+    /// Compressed-domain linear layer: `out[r * w.rows() + o] =
+    /// row(r) · w.row(o)` — packed activations `[rows, cols]` times a
+    /// dense `[w_rows, cols]` weight matrix transposed, the GEMM one
+    /// decode step runs per sparsified site (`y = W · s(x)` with the
+    /// packed operand the activation row). Same `row_dot` kernel as
+    /// [`PackedNM::matvec_into`]; parallel over packed rows.
+    pub fn matmul_nt_into(&self, w: &Tensor, out: &mut [f32], threads: usize) {
+        assert_eq!(w.cols(), self.cols, "matmul inner-dim mismatch");
+        let w_rows = w.rows();
+        assert_eq!(out.len(), self.rows * w_rows, "matmul output length mismatch");
+        if self.rows == 0 || w_rows == 0 {
+            return;
+        }
+        let threads = threads.max(1).min(self.rows);
+        let rows_per_chunk = (self.rows + threads - 1) / threads;
+        threadpool::par_chunks_mut(out, rows_per_chunk * w_rows, threads, |ci, chunk| {
+            for (i, orow) in chunk.chunks_exact_mut(w_rows).enumerate() {
+                let r = ci * rows_per_chunk + i;
+                for (o, y) in orow.iter_mut().enumerate() {
+                    *y = self.row_dot(r, w.row(o));
+                }
+            }
+        });
+    }
+
     /// L2 norm of row `r` (zeros contribute nothing, so this equals the
     /// dense row's norm).
     pub fn row_l2(&self, r: usize) -> f64 {
@@ -407,6 +434,40 @@ mod tests {
                     "row {r}: {} vs {expect} (threads {threads})",
                     out[r]
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_nt_matches_matvec_columns_and_dense_gemm() {
+        let mut rng = Rng::new(7);
+        let x = rand_matrix(&mut rng, 5, 64);
+        let w = rand_matrix(&mut rng, 9, 64); // [w_rows, cols]
+        let sp = Sparsifier::new(Pattern::NM { n: 2, m: 4 });
+        let mut packed = PackedNM::new(sp.pattern(), 64);
+        let mut scratch = Scratch::new();
+        sp.pack(&x, &mut packed, &mut scratch);
+        for threads in [1usize, 3] {
+            let mut out = vec![0.0f32; 5 * 9];
+            packed.matmul_nt_into(&w, &mut out, threads);
+            // Column o of the result is exactly matvec_into against w.row(o).
+            for o in 0..9 {
+                let mut col = vec![0.0f32; 5];
+                packed.matvec_into(w.row(o), &mut col, 1);
+                for r in 0..5 {
+                    assert_eq!(out[r * 9 + o].to_bits(), col[r].to_bits(), "r{r} o{o}");
+                }
+            }
+            // And bitwise equal to the dense GEMM over the sparsified rows
+            // (ascending-column accumulation; ±0.0 terms never flip bits).
+            let mut dense = x.clone();
+            sp.sparsify(&mut dense, &mut scratch);
+            for r in 0..5 {
+                for o in 0..9 {
+                    let expect: f32 =
+                        dense.row(r).iter().zip(w.row(o)).map(|(a, b)| a * b).sum();
+                    assert_eq!(out[r * 9 + o].to_bits(), expect.to_bits(), "r{r} o{o}");
+                }
             }
         }
     }

@@ -695,6 +695,43 @@ pub fn load_serving_bench(path: &std::path::Path) -> Option<ServingBenchSummary>
     })
 }
 
+/// Where `nmsparse loadgen --sweep` drops the latency-vs-offered-rate
+/// curve (one open-loop run per rate).
+pub const SERVING_SWEEP_FILE: &str = "BENCH_serving_sweep.json";
+
+/// One measured point of the offered-rate sweep.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepPointSummary {
+    pub rate_rps: f64,
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub rejection_rate: f64,
+}
+
+/// Load the sweep curve; `None` when the sweep has not been run.
+pub fn load_serving_sweep(path: &std::path::Path) -> Option<Vec<SweepPointSummary>> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = crate::util::json::parse(&text).ok()?;
+    let points = j.get("points")?.as_arr()?;
+    let mut out = Vec::with_capacity(points.len());
+    for p in points {
+        let f = |key: &str| p.get(key).and_then(|x| x.as_f64());
+        let lat = p.get("latency_ms")?;
+        let lf = |key: &str| lat.get(key).and_then(|x| x.as_f64());
+        out.push(SweepPointSummary {
+            rate_rps: f("rate_rps")?,
+            throughput_rps: f("throughput_rps")?,
+            p50_ms: lf("p50")?,
+            p95_ms: lf("p95")?,
+            p99_ms: lf("p99")?,
+            rejection_rate: f("rejection_rate")?,
+        });
+    }
+    Some(out)
+}
+
 /// `nmsparse table serving` — the measured multi-replica serving profile.
 /// Purely a consumer of [`SERVING_BENCH_FILE`]; needs no artifacts.
 fn table_serving() -> Table {
@@ -737,6 +774,28 @@ fn table_serving() -> Table {
                 "serving profile".into(),
                 "-".into(),
                 "no BENCH_serving.json — run `nmsparse loadgen`".into(),
+            ]);
+        }
+    }
+    // Latency-vs-offered-rate curve, when the sweep has been run.
+    match load_serving_sweep(std::path::Path::new(SERVING_SWEEP_FILE)) {
+        Some(points) => {
+            for p in &points {
+                t.row(vec![
+                    format!("sweep @ {:.0} req/s", p.rate_rps),
+                    format!(
+                        "{:.1} served/s | p50/p95/p99 {:.2}/{:.2}/{:.2} ms",
+                        p.throughput_rps, p.p50_ms, p.p95_ms, p.p99_ms
+                    ),
+                    format!("rejection {:.3}", p.rejection_rate),
+                ]);
+            }
+        }
+        None => {
+            t.row(vec![
+                "rate sweep".into(),
+                "-".into(),
+                "no BENCH_serving_sweep.json — run `nmsparse loadgen --sweep r1,r2,...`".into(),
             ]);
         }
     }
@@ -914,6 +973,39 @@ mod tests {
         assert!(load_serving_bench(std::path::Path::new("/definitely/not/here.json")).is_none());
         std::fs::write(&path, r#"{"mode": "mixed", "backend": "synthetic"}"#).unwrap();
         assert!(load_serving_bench(&path).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn serving_sweep_loader_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("nmsparse-sweep-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_serving_sweep.json");
+        std::fs::write(
+            &path,
+            r#"{"suite": "serving_sweep", "mode": "mixed", "backend": "synthetic",
+                "replicas": 2, "queue_cap": 32, "requests_per_point": 64,
+                "points": [
+                  {"rate_rps": 100.0, "served": 64, "rejected": 0,
+                   "throughput_rps": 99.1, "rejection_rate": 0.0,
+                   "batch_occupancy": 0.4,
+                   "latency_ms": {"mean": 2.0, "p50": 1.5, "p95": 4.0, "p99": 6.0, "max": 9.0}},
+                  {"rate_rps": 400.0, "served": 60, "rejected": 4,
+                   "throughput_rps": 350.0, "rejection_rate": 0.0625,
+                   "batch_occupancy": 0.7,
+                   "latency_ms": {"mean": 5.0, "p50": 4.0, "p95": 11.0, "p99": 15.0, "max": 22.0}}
+                ]}"#,
+        )
+        .unwrap();
+        let points = load_serving_sweep(&path).unwrap();
+        assert_eq!(points.len(), 2);
+        assert_eq!(points[0].rate_rps, 100.0);
+        assert!((points[1].rejection_rate - 0.0625).abs() < 1e-12);
+        assert!(points[1].p50_ms <= points[1].p95_ms);
+        // Missing file and malformed points both yield None.
+        assert!(load_serving_sweep(std::path::Path::new("/definitely/not/here.json")).is_none());
+        std::fs::write(&path, r#"{"points": [{"rate_rps": 1.0}]}"#).unwrap();
+        assert!(load_serving_sweep(&path).is_none());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -18,6 +18,21 @@ pub fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Canonical byte-wise FNV-1a (64-bit): the project's label/stream hash.
+/// Used to derive per-tensor synthetic-weight streams
+/// (`engine::NativeModel::synthetic`) and the decode smoke's output hash
+/// (`nmsparse decode`) — one definition, so a constant typo cannot split
+/// the two. (`Rng::fork` predates this helper with a slightly different
+/// multiplier; its output feeds existing corpora, so it stays as is.)
+#[inline]
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h = (h ^ *b as u64).wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
 /// xoshiro256** PRNG. Small, fast, and good enough for synthetic-data and
 /// benchmark workloads (not cryptographic).
 #[derive(Clone, Debug)]
@@ -155,6 +170,14 @@ impl Rng {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        // Offset basis for empty input; classic FNV-1a test vector for "a".
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(fnv1a64(b"ab"), fnv1a64(b"ba"));
+    }
 
     #[test]
     fn deterministic_for_seed() {

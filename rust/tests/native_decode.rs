@@ -1,0 +1,277 @@
+//! Decode-equivalence property suite for the native engine (no
+//! artifacts, no PJRT): KV-cached incremental decode must be
+//! token-identical to the full-context reference loop across patterns,
+//! prompt shapes and stop-token placements, and must survive every cache
+//! lifecycle edge — reset, truncation, LRU eviction, re-prefill — plus
+//! the artifacts-format round trip through `Coordinator`'s native path.
+
+use nmsparse::coordinator::methods::MethodConfig;
+use nmsparse::coordinator::server::{NativeBackend, ReplicaBackend};
+use nmsparse::coordinator::Coordinator;
+use nmsparse::engine::{EngineConfig, NativeEngine, NativeSparsity};
+use nmsparse::sparsity::Pattern;
+use nmsparse::util::miniprop::{forall_simple, Config};
+use nmsparse::util::prng::Rng;
+
+fn test_cfg(max_seq: usize) -> EngineConfig {
+    EngineConfig {
+        vocab: 48,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        ffn: 64,
+        max_seq,
+    }
+}
+
+fn patterns() -> Vec<Pattern> {
+    vec![
+        Pattern::Dense,
+        Pattern::NM { n: 2, m: 4 },
+        Pattern::NM { n: 8, m: 16 },
+        Pattern::NM { n: 16, m: 32 },
+        Pattern::Unstructured { keep_pct: 50 },
+    ]
+}
+
+#[test]
+fn prop_kv_cached_decode_token_identical_to_full_context() {
+    // The acceptance property: across patterns (2:4, 8:16, 16:32, dense,
+    // u50), model seeds, prompt lengths, budgets and stop-token
+    // placements, the KV-cached loop and the full-context loop emit the
+    // same tokens.
+    let cfg = Config { cases: 24, ..Config::default() };
+    let pats = patterns();
+    forall_simple(
+        &cfg,
+        |rng: &mut Rng| {
+            let pattern = *rng.choose(&pats);
+            let seed = rng.next_u64();
+            let plen = rng.range(1, 12);
+            let prompt: Vec<u32> = (0..plen).map(|_| rng.range(0, 48) as u32).collect();
+            let max_new = rng.range(1, 14);
+            // Half the cases pick stop tokens from the vocab (sometimes
+            // hitting mid-generation), half run stop-free.
+            let stops: Vec<u32> = if rng.chance(0.5) {
+                (0..rng.range(1, 4)).map(|_| rng.range(0, 48) as u32).collect()
+            } else {
+                Vec::new()
+            };
+            (pattern, seed, prompt, max_new, stops)
+        },
+        |(pattern, seed, prompt, max_new, stops)| {
+            let mut e =
+                NativeEngine::synthetic(&test_cfg(32), *seed, NativeSparsity::act(*pattern))
+                    .unwrap();
+            let mut kv = e.new_cache();
+            let cached = e.generate_greedy(&mut kv, prompt, *max_new, stops).unwrap();
+            let full = e.generate_greedy_full(&mut kv, prompt, *max_new, stops).unwrap();
+            cached == full && !cached.is_empty() && cached.len() <= *max_new
+        },
+    );
+}
+
+#[test]
+fn prop_stop_token_placement_truncates_identically() {
+    // Take a free-running generation, pick each of its tokens as the stop
+    // token in turn, and pin that both loops cut at exactly that point.
+    let cfg = Config { cases: 10, ..Config::default() };
+    forall_simple(
+        &cfg,
+        |rng: &mut Rng| (rng.next_u64(), rng.range(1, 6)),
+        |(seed, plen)| {
+            let pattern = Pattern::NM { n: 8, m: 16 };
+            let mut e =
+                NativeEngine::synthetic(&test_cfg(32), *seed, NativeSparsity::act(pattern))
+                    .unwrap();
+            let mut kv = e.new_cache();
+            let prompt: Vec<u32> = (0..*plen).map(|i| (i * 7 % 48) as u32).collect();
+            let free = e.generate_greedy(&mut kv, &prompt, 8, &[]).unwrap();
+            for (i, stop) in free.iter().enumerate() {
+                let cached = e.generate_greedy(&mut kv, &prompt, 8, &[*stop]).unwrap();
+                let full = e.generate_greedy_full(&mut kv, &prompt, 8, &[*stop]).unwrap();
+                if cached != full {
+                    return false;
+                }
+                // Cut at the first occurrence of the stop token.
+                let first = free.iter().position(|t| t == stop).unwrap();
+                if first <= i && cached != free[..=first].to_vec() {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn cache_reuse_and_reset_are_stateless() {
+    // One cache object reused (reset) across many prompts must match
+    // fresh caches exactly.
+    let pattern = Pattern::NM { n: 2, m: 4 };
+    let mut e = NativeEngine::synthetic(&test_cfg(32), 11, NativeSparsity::act(pattern)).unwrap();
+    let mut shared = e.new_cache();
+    let prompts: Vec<Vec<u32>> = vec![vec![1, 2, 3], vec![40, 41], vec![7; 10], vec![0]];
+    let mut first = Vec::new();
+    for p in &prompts {
+        first.push(e.generate_greedy(&mut shared, p, 6, &[]).unwrap());
+    }
+    for (p, want) in prompts.iter().zip(&first) {
+        let mut fresh = e.new_cache();
+        assert_eq!(&e.generate_greedy(&mut fresh, p, 6, &[]).unwrap(), want);
+    }
+}
+
+#[test]
+fn truncate_rolls_back_to_identical_logits() {
+    // Truncating the cache to a prefix and re-stepping must be
+    // indistinguishable from prefilling that prefix fresh.
+    let pattern = Pattern::NM { n: 8, m: 16 };
+    let mut e = NativeEngine::synthetic(&test_cfg(32), 13, NativeSparsity::act(pattern)).unwrap();
+    let row: Vec<u32> = (0..20).map(|i| (i * 5 % 48) as u32).collect();
+    let mut kv = e.new_cache();
+    e.prefill(&mut kv, &row).unwrap();
+    for cut in [1usize, 7, 19] {
+        kv.truncate(cut);
+        e.step(&mut kv, row[cut]).unwrap();
+        let after_truncate: Vec<u32> = e.logits().iter().map(|v| v.to_bits()).collect();
+        let mut fresh = e.new_cache();
+        e.prefill(&mut fresh, &row[..cut + 1]).unwrap();
+        let from_fresh: Vec<u32> = e.logits().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(after_truncate, from_fresh, "cut={cut}");
+        // Restore for the next cut.
+        kv.reset();
+        e.prefill(&mut kv, &row).unwrap();
+    }
+}
+
+#[test]
+fn session_eviction_under_cap_one_is_token_identical() {
+    // Two interleaved sessions on a cap-1 KV pool force an eviction and
+    // a full re-prefill on every step — tokens must not change.
+    let cfg = test_cfg(32);
+    let pattern = Pattern::NM { n: 8, m: 16 };
+    let stop: Vec<u32> = vec![2];
+    let mut backend =
+        NativeBackend::synthetic(&cfg, 5, NativeSparsity::act(pattern), stop.clone(), 4)
+            .unwrap()
+            .with_session_cap(1);
+    let mut engine = NativeEngine::synthetic(&cfg, 5, NativeSparsity::act(pattern)).unwrap();
+    let mut kv = engine.new_cache();
+    let prompts: [Vec<u32>; 2] = [vec![3, 7, 11], vec![40, 1, 9, 9]];
+    let max_new = 8;
+    let want: Vec<Vec<u32>> = prompts
+        .iter()
+        .map(|p| engine.generate_greedy(&mut kv, p, max_new, &stop).unwrap())
+        .collect();
+    // Drive both sessions a step at a time through the backend, exactly
+    // like the replica worker would.
+    let mut rows: Vec<Vec<u32>> = prompts.to_vec();
+    let mut got: Vec<Vec<u32>> = vec![Vec::new(); 2];
+    let mut done = [false; 2];
+    for _ in 0..max_new {
+        let live: Vec<(u64, &[u32])> = (0..2)
+            .filter(|i| !done[*i])
+            .map(|i| (i as u64 + 1, rows[i].as_slice()))
+            .collect();
+        if live.is_empty() {
+            break;
+        }
+        let ids: Vec<usize> = (0..2).filter(|i| !done[*i]).collect();
+        let outs = backend.decode_step_sessions(&live).unwrap();
+        for (i, out) in ids.into_iter().zip(outs) {
+            match out {
+                Some(tok) => {
+                    got[i].push(tok);
+                    rows[i].push(tok);
+                    if stop.contains(&tok) || got[i].len() >= max_new {
+                        done[i] = true;
+                    }
+                }
+                None => done[i] = true,
+            }
+        }
+    }
+    assert_eq!(got[0], want[0]);
+    assert_eq!(got[1], want[1]);
+}
+
+#[test]
+fn coordinator_native_path_roundtrips_through_artifacts_format() {
+    // Fabricate an artifacts directory from a synthetic model (the exact
+    // files `aot.py` writes: io_manifest.json + ckpt.{bin,json} +
+    // methodparams.{bin,json}) and pin Coordinator::generate_refs on the
+    // native path against the bare engine. No PJRT is touched.
+    let cfg = test_cfg(24);
+    let model = nmsparse::engine::NativeModel::synthetic(&cfg, 21);
+    let dir = std::env::temp_dir().join(format!("nmsparse-native-art-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    model.to_store().save(&dir.join("ckpt")).unwrap();
+    let mut mp = nmsparse::util::tensor::TensorStore::new();
+    mp.insert("placeholder", nmsparse::util::tensor::Tensor::scalar(0.0));
+    mp.save(&dir.join("methodparams")).unwrap();
+    let manifest = format!(
+        r#"{{
+  "config": {{"vocab": {}, "d_model": {}, "n_layers": {}, "n_heads": {},
+             "ffn": {}, "eval_batch": 2, "eval_seq": {},
+             "num_params": {}, "sites": ["q","k","v","o","gate","up","down"]}},
+  "train": {{"final_loss": 0.0, "valid_ppl": 1.0, "steps": 0}},
+  "variants": {{}}
+}}"#,
+        cfg.vocab, cfg.d_model, cfg.n_layers, cfg.n_heads, cfg.ffn, cfg.max_seq,
+        cfg.num_params()
+    );
+    std::fs::write(dir.join("io_manifest.json"), manifest).unwrap();
+
+    let pattern = Pattern::NM { n: 8, m: 16 };
+    let mcfg = MethodConfig::by_name("ACT", pattern).unwrap();
+    let coord = Coordinator::open_native(&dir).unwrap();
+    assert!(coord.uses_native());
+    let prompts: Vec<Vec<u32>> = vec![vec![1, 2, 3], vec![10; 6]];
+    let stop = vec![2u32];
+    let got = coord.generate(&mcfg, &prompts, 6, &stop).unwrap();
+
+    let mut engine = NativeEngine::new(model, NativeSparsity::act(pattern)).unwrap();
+    let mut kv = engine.new_cache();
+    for (p, g) in prompts.iter().zip(&got) {
+        let want = engine.generate_greedy(&mut kv, p, 6, &stop).unwrap();
+        assert_eq!(g, &want, "prompt {p:?}");
+    }
+    assert!(coord.stats.tokens_generated() > 0);
+    assert!(coord.stats.forwards() > 0);
+
+    // The serving backend loads the same directory as real artifacts.
+    let backend = NativeBackend::open(&dir, pattern, "ACT", stop, 4, 0).unwrap();
+    assert_eq!(backend.origin, "artifacts");
+    assert_eq!(backend.engine().config(), &cfg);
+
+    // Methods the native engine cannot realize fail loudly, not silently.
+    let spts = MethodConfig::by_name("S-PTS", pattern).unwrap();
+    assert!(coord.pool.native_engine(&spts).is_err());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn context_exhaustion_ends_sessions_cleanly() {
+    let cfg = test_cfg(16);
+    let pattern = Pattern::NM { n: 2, m: 4 };
+    let mut backend =
+        NativeBackend::synthetic(&cfg, 9, NativeSparsity::act(pattern), vec![], 4).unwrap();
+    let mut engine = NativeEngine::synthetic(&cfg, 9, NativeSparsity::act(pattern)).unwrap();
+    let mut kv = engine.new_cache();
+    // A fresh prompt at/past the context edge gets exactly the one
+    // budget-rule token `generate_greedy` emits (left-cropped), and the
+    // *next* step ends the session with None.
+    for (id, len) in [(1u64, 17usize), (2, 16)] {
+        let prompt: Vec<u32> = (0..len as u32).map(|i| i % 40).collect();
+        let want = engine.generate_greedy(&mut kv, &prompt, 8, &[]).unwrap();
+        assert_eq!(want.len(), 1, "budget rule emits exactly one token");
+        let outs = backend.decode_step_sessions(&[(id, prompt.as_slice())]).unwrap();
+        assert_eq!(outs, vec![Some(want[0])], "len={len}");
+        let mut grown = prompt.clone();
+        grown.push(want[0]);
+        let outs = backend.decode_step_sessions(&[(id, grown.as_slice())]).unwrap();
+        assert_eq!(outs, vec![None], "len={len}");
+    }
+}

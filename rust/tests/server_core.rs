@@ -150,6 +150,83 @@ fn shutdown_drains_every_admitted_request() {
     }
 }
 
+/// Gated backend that also announces when a forward *starts* — lets the
+/// steal test know replica 0 is wedged inside its engine call before
+/// piling work onto its queue.
+struct NotifyGatedBackend {
+    entered: mpsc::Sender<()>,
+    gate: mpsc::Receiver<()>,
+}
+
+impl ReplicaBackend for NotifyGatedBackend {
+    fn batch(&self) -> usize {
+        1
+    }
+
+    fn score_rows(&mut self, rows: &[(Vec<u32>, (usize, usize))]) -> anyhow::Result<Vec<f64>> {
+        self.entered.send(()).ok();
+        self.gate.recv().ok(); // blocks only while the test holds the tx
+        Ok(rows.iter().map(|_| 1.0).collect())
+    }
+
+    fn decode_step(&mut self, prompts: &[&[u32]]) -> anyhow::Result<Vec<Option<u32>>> {
+        self.entered.send(()).ok();
+        self.gate.recv().ok();
+        Ok(prompts.iter().map(|_| Some(SyntheticBackend::STOP)).collect())
+    }
+
+    fn stop_tokens(&self) -> Vec<u32> {
+        vec![SyntheticBackend::STOP]
+    }
+}
+
+#[test]
+fn idle_replica_steals_from_deepest_queue() {
+    // All traffic is keyed to replica 0 (worst-case skewed session keys).
+    // Replica 0 wedges inside its first forward; the idle replica 1 must
+    // steal the staged backlog and answer it while 0 is still stuck.
+    let (enter_tx, enter_rx) = mpsc::channel::<()>();
+    let (gate0_tx, gate0_rx) = mpsc::channel::<()>();
+    let (gate1_tx, gate1_rx) = mpsc::channel::<()>();
+    drop(gate1_tx); // replica 1 never blocks (recv errors immediately)
+    let slots = Mutex::new(vec![Some((enter_tx.clone(), gate0_rx)), Some((enter_tx, gate1_rx))]);
+    let core = ServerCore::start(
+        ServerConfig { replicas: 2, queue_cap: 16, max_wait: Duration::from_millis(1) },
+        move |r| {
+            let (entered, gate) = slots.lock().unwrap()[r].take().expect("one backend per replica");
+            Ok(NotifyGatedBackend { entered, gate })
+        },
+    )
+    .unwrap();
+    let req = || Request::Score { tokens: vec![4, 5, 6], span: (1, 3) };
+    // First request reaches replica 0's engine and wedges there.
+    let t0 = core.submit_with_key(Some(0), req()).unwrap();
+    assert_eq!(t0.replica, 0);
+    enter_rx.recv().expect("replica 0 entered its forward");
+    // Backlog lands on replica 0's queue while it is stuck.
+    let backlog: Vec<_> =
+        (0..3).map(|_| core.submit_with_key(Some(0), req()).unwrap()).collect();
+    for t in &backlog {
+        assert_eq!(t.replica, 0, "affinity still routes to replica 0");
+        // Replica 1 (idle, woken by the steal hint) must answer this
+        // while replica 0 is still wedged.
+        let resp = t.recv_timeout(Duration::from_secs(10)).expect("stolen request answered");
+        assert_eq!(resp, Response::Score { score: 1.0 });
+    }
+    // Unwedge replica 0 so its held request finishes too.
+    gate0_tx.send(()).unwrap();
+    assert_eq!(t0.recv(), Some(Response::Score { score: 1.0 }));
+    let handle = core.handle();
+    let stats = core.shutdown(); // joins workers: all counters final
+    let per_replica = handle.replica_stats();
+    assert_eq!(stats.served, 4);
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.stolen, 3, "all three backlog requests were stolen");
+    assert_eq!(per_replica[1].stolen, 3, "replica 1 did the stealing");
+    assert_eq!(per_replica[1].served, 3);
+    assert_eq!(per_replica[0].served, 1);
+}
+
 #[test]
 fn generate_completion_counts_without_listener() {
     // A client that disconnects mid-generation must not stall

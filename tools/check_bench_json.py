@@ -6,7 +6,11 @@ Three emitters write these files (see DESIGN.md §3):
 - rust/benches/substrate.rs -> BENCH_sparsity.json, BENCH_packed.json
 - rust/benches/tables.rs    -> BENCH_sparsify_overhead.json
 - rust/src/launcher/loadgen.rs (`nmsparse loadgen`, also wrapped by
-  rust/benches/serving.rs)  -> BENCH_serving.json
+  rust/benches/serving.rs)  -> BENCH_serving.json; `--sweep` emits
+  BENCH_serving_sweep.json
+- rust/benches/decode.rs    -> BENCH_decode.json (native KV-cached decode
+  engine: step cost vs context for the cached and full-context loops,
+  measured packed-vs-dense activation bytes)
 
 `nmsparse table table6`/`table serving` and `examples/hw_breakeven.rs`
 consume them, so a malformed dump silently degrades the measured columns
@@ -154,11 +158,101 @@ def check_serving(doc, path):
     return bad
 
 
+def check_serving_sweep(doc, path):
+    bad = 0
+    for key in ("mode", "backend"):
+        bad |= require(doc, key, str, path, "top level")
+    for key in ("replicas", "queue_cap", "requests_per_point"):
+        bad |= require(doc, key, (int, float), path, "top level")
+    bad |= require(doc, "points", list, path, "top level")
+    if bad:
+        return bad
+    if not doc["points"]:
+        return err(path, "'points' is empty — a sweep needs at least one rate")
+    prev_rate = 0.0
+    for i, p in enumerate(doc["points"]):
+        ctx = f"points[{i}]"
+        if not isinstance(p, dict):
+            return err(path, f"{ctx} is not an object")
+        for key in ("rate_rps", "served", "rejected", "throughput_rps",
+                    "rejection_rate", "batch_occupancy"):
+            bad |= require(p, key, (int, float), path, ctx)
+        bad |= require(p, "latency_ms", dict, path, ctx)
+        if bad:
+            return bad
+        for key in ("mean", "p50", "p95", "p99", "max"):
+            bad |= require(p["latency_ms"], key, (int, float), path, f"{ctx}.latency_ms")
+        if bad:
+            return bad
+        lat = p["latency_ms"]
+        if not lat["p50"] <= lat["p95"] <= lat["p99"]:
+            bad |= err(path, f"{ctx}: latency percentiles not monotone")
+        if p["rate_rps"] <= prev_rate:
+            bad |= err(path, f"{ctx}: rates must be strictly increasing "
+                             f"({p['rate_rps']} after {prev_rate})")
+        prev_rate = p["rate_rps"]
+        if not 0.0 <= p["rejection_rate"] <= 1.0 + 1e-9:
+            bad |= err(path, f"{ctx}: rejection_rate {p['rejection_rate']} outside [0, 1]")
+        if p["served"] + p["rejected"] > doc["requests_per_point"]:
+            bad |= err(path, f"{ctx}: served + rejected exceeds requests_per_point")
+    return bad
+
+
+def check_decode(doc, path):
+    bad = 0
+    for key in ("backend", "pattern", "method"):
+        bad |= require(doc, key, str, path, "top level")
+    for key in ("prefill_tokens_per_sec", "decode_tokens_per_sec",
+                "cached_step_growth", "full_step_growth",
+                "dense_bytes_per_step", "packed_bytes_per_step",
+                "bytes_reduction"):
+        bad |= require(doc, key, (int, float), path, "top level")
+    bad |= require(doc, "model", dict, path, "top level")
+    bad |= require(doc, "contexts", list, path, "top level")
+    if bad:
+        return bad
+    for key in ("vocab", "d_model", "n_layers", "ffn", "max_seq"):
+        bad |= require(doc["model"], key, (int, float), path, "model")
+    if not doc["contexts"]:
+        return err(path, "'contexts' is empty")
+    prev_ctx = 0
+    for i, c in enumerate(doc["contexts"]):
+        ctx = f"contexts[{i}]"
+        if not isinstance(c, dict):
+            return err(path, f"{ctx} is not an object")
+        for key in ("context", "cached_step_ms", "full_step_ms"):
+            bad |= require(c, key, (int, float), path, ctx)
+        if bad:
+            return bad
+        if c["context"] <= prev_ctx:
+            bad |= err(path, f"{ctx}: contexts must be strictly increasing")
+        prev_ctx = c["context"]
+        if c["cached_step_ms"] <= 0 or c["full_step_ms"] <= 0:
+            bad |= err(path, f"{ctx}: non-positive step time")
+    # The point of the KV cache: the cached step must not inherit the
+    # full-context baseline's growth with context length.
+    if doc["full_step_growth"] <= doc["cached_step_growth"]:
+        bad |= err(path, f"cached step cost grew as fast as the full-context "
+                         f"baseline (cached {doc['cached_step_growth']}x vs "
+                         f"full {doc['full_step_growth']}x) — KV cache not "
+                         f"paying off")
+    if doc["prefill_tokens_per_sec"] <= 0 or doc["decode_tokens_per_sec"] <= 0:
+        bad |= err(path, "non-positive tokens/sec")
+    # A sparse pattern must actually shrink the moved activation bytes.
+    if doc["pattern"] != "dense" and \
+            doc["packed_bytes_per_step"] >= doc["dense_bytes_per_step"]:
+        bad |= err(path, f"packed bytes/step {doc['packed_bytes_per_step']} not "
+                         f"below dense {doc['dense_bytes_per_step']}")
+    return bad
+
+
 CHECKERS = {
     "BENCH_sparsity.json": check_sparsity,
     "BENCH_sparsify_overhead.json": check_overhead,
     "BENCH_packed.json": check_packed,
     "BENCH_serving.json": check_serving,
+    "BENCH_serving_sweep.json": check_serving_sweep,
+    "BENCH_decode.json": check_decode,
 }
 
 

@@ -32,6 +32,23 @@ cargo bench --no-run
 cargo run --release -q -- loadgen \
   --replicas 2 --queue-cap 64 --max-requests 96 --concurrency 8 \
   --forward-us 100 --out BENCH_serving.json
+# Native-decode smoke: seeded synthetic model, KV-cached vs full-context
+# equivalence checked in-process (--check), output hash printed. Two runs
+# must print the same hash — the determinism pin (no baked-in hash to go
+# stale; the invariant is cross-run identity plus the in-process check).
+DECODE_ARGS="decode --seed 11 --prompt-len 6 --max-new 12 --check"
+H1="$(cargo run --release -q -- $DECODE_ARGS | grep '^hash ')"
+H2="$(cargo run --release -q -- $DECODE_ARGS | grep '^hash ')"
+if [ -z "$H1" ] || [ "$H1" != "$H2" ]; then
+  echo "ci: native decode smoke failed (hash '$H1' vs '$H2')" >&2
+  exit 1
+fi
+echo "ci: native decode smoke OK ($H1)"
+# Open-loop sweep smoke on the KV-cached native backend (2 rates, bounded)
+# -> BENCH_serving_sweep.json, schema-gated below.
+cargo run --release -q -- loadgen \
+  --backend native --replicas 2 --queue-cap 32 --max-requests 40 \
+  --sweep 200,400 --mode mixed --max-new 4 --out ''
 # Any bench dumps lying around must match the schemas the tables consume
 # (absent files are fine — benches are optional here; unknown BENCH_*.json
 # names or schema violations are not).
