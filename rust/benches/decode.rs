@@ -8,14 +8,20 @@
 //!   AND the full-context baseline (one whole-row forward per token, the
 //!   PJRT path's semantics) — the cached step must not inherit the
 //!   baseline's growth with context;
+//! - batched vs sequential decode: `step_batch` over K concurrent lanes
+//!   against K per-session `step` loops — the amortization the batched
+//!   session-stepping API exists for (one weight-row stream per step
+//!   instead of one per lane); the two are asserted bitwise-identical
+//!   before timing;
 //! - measured activation bytes per step: dense-equivalent vs what the
 //!   compressed-domain path actually moved (packed payload + raw `u32`
 //!   metadata words).
 //!
 //! `tools/check_bench_json.py` gates the emitted schema, including
-//! `full_step_growth > cached_step_growth`.
+//! `full_step_growth > cached_step_growth` and batched ≥ sequential
+//! tok/s at batch ≥ 4.
 
-use nmsparse::engine::{EngineConfig, NativeEngine, NativeSparsity};
+use nmsparse::engine::{EngineConfig, NativeEngine, NativeSparsity, SessionKvPool, StepBatch};
 use nmsparse::sparsity::Pattern;
 use nmsparse::util::bench::BenchSuite;
 use nmsparse::util::json::Json;
@@ -37,7 +43,8 @@ fn main() {
     let pattern = Pattern::NM { n: 8, m: 16 };
     let mut engine =
         NativeEngine::synthetic(&cfg, 7, NativeSparsity::act(pattern)).expect("engine");
-    let mut kv = engine.new_cache();
+    let mut pool = engine.new_kv_pool();
+    let mut kv = pool.new_cache();
     let mut rng = Rng::new(11);
     let row: Vec<u32> = (0..cfg.max_seq).map(|_| rng.range(3, cfg.vocab) as u32).collect();
 
@@ -47,15 +54,15 @@ fn main() {
         &format!("decode/prefill {prefill_len} tokens (tokens)"),
         Some(prefill_len as f64),
         || {
-            kv.reset();
-            engine.prefill(&mut kv, &row[..prefill_len]).unwrap();
+            kv.reset(&mut pool);
+            engine.prefill(&mut kv, &mut pool, &row[..prefill_len]).unwrap();
         },
     );
     let prefill_tps = suite.rate_of(&format!("decode/prefill {prefill_len} tokens (tokens)"));
 
     // ---- decode throughput (prefill 8, generate 32, KV-cached) ----
     suite.bench_with_items("decode/generate 32 tokens after 8 (tokens)", Some(32.0), || {
-        let out = engine.generate_greedy(&mut kv, &row[..8], 32, &[]).unwrap();
+        let out = engine.generate_greedy(&mut kv, &mut pool, &row[..8], 32, &[]).unwrap();
         std::hint::black_box(out);
     });
     let decode_tps = suite.rate_of("decode/generate 32 tokens after 8 (tokens)");
@@ -67,26 +74,97 @@ fn main() {
     for &ctx in &contexts {
         // Cached: prebuild the cache once, truncate back before each
         // timed step so every iteration decodes at exactly `ctx`.
-        kv.reset();
-        engine.prefill(&mut kv, &row[..ctx]).unwrap();
+        kv.reset(&mut pool);
+        engine.prefill(&mut kv, &mut pool, &row[..ctx]).unwrap();
         let name = format!("decode/cached step @ ctx {ctx} (tokens)");
         suite.bench_with_items(&name, Some(1.0), || {
-            kv.truncate(ctx);
-            engine.step(&mut kv, row[ctx]).unwrap();
+            kv.truncate(&mut pool, ctx);
+            engine.step(&mut kv, &mut pool, row[ctx]).unwrap();
         });
         cached_ms.push(step_ms(&suite, &name));
         // Full-context baseline: one whole-row forward per token.
         let name = format!("decode/full-context step @ ctx {ctx} (tokens)");
         suite.bench_with_items(&name, Some(1.0), || {
-            engine.full_context(&mut kv, &row[..ctx]).unwrap();
+            engine.full_context(&mut kv, &mut pool, &row[..ctx]).unwrap();
         });
         full_ms.push(step_ms(&suite, &name));
     }
 
+    // ---- batched vs sequential session stepping ----
+    // K concurrent lanes at ragged contexts: one step_batch per step vs
+    // K per-session step calls. Same tokens, same caches, same math —
+    // the batched form amortizes each weight row across lanes.
+    let lane_counts = [1usize, 4, 8];
+    let mut batched_rows = Vec::new();
+    for &lanes in &lane_counts {
+        let mut sessions = SessionKvPool::new(lanes.max(2));
+        let mut batch = StepBatch::new();
+        let ctx_of = |i: usize| 12 + 9 * i; // ragged lane contexts
+        for i in 0..lanes {
+            let slot = sessions.get_or_create(&mut pool, i as u64 + 1);
+            slot.kv.reset(&mut pool);
+            engine.prefill(&mut slot.kv, &mut pool, &row[..ctx_of(i)]).unwrap();
+        }
+        // Bitwise identity before timing: one batched step == per-lane
+        // sequential steps on separate caches.
+        {
+            batch.clear();
+            for i in 0..lanes {
+                batch.push(i as u64 + 1, row[ctx_of(i)]);
+            }
+            engine.step_batch(&mut batch, &mut sessions, &mut pool).unwrap();
+            for i in 0..lanes {
+                let mut check_kv = pool.new_cache();
+                engine.prefill(&mut check_kv, &mut pool, &row[..ctx_of(i)]).unwrap();
+                engine.step(&mut check_kv, &mut pool, row[ctx_of(i)]).unwrap();
+                let want: Vec<u32> = engine.logits().iter().map(|v| v.to_bits()).collect();
+                let got: Vec<u32> = batch.logits(i).iter().map(|v| v.to_bits()).collect();
+                assert_eq!(got, want, "lane {i}: batched != sequential logits");
+                check_kv.reset(&mut pool);
+            }
+            for i in 0..lanes {
+                let slot = sessions.get_mut(i as u64 + 1).unwrap();
+                slot.kv.truncate(&mut pool, ctx_of(i));
+            }
+        }
+        let name = format!("decode/step_batch {lanes} lanes (tokens)");
+        suite.bench_with_items(&name, Some(lanes as f64), || {
+            batch.clear();
+            for i in 0..lanes {
+                let slot = sessions.get_mut(i as u64 + 1).unwrap();
+                slot.kv.truncate(&mut pool, ctx_of(i));
+                batch.push(i as u64 + 1, row[ctx_of(i)]);
+            }
+            engine.step_batch(&mut batch, &mut sessions, &mut pool).unwrap();
+        });
+        let batched_tps = suite.rate_of(&name).unwrap_or(0.0);
+        let name = format!("decode/sequential {lanes} lanes (tokens)");
+        suite.bench_with_items(&name, Some(lanes as f64), || {
+            for i in 0..lanes {
+                let slot = sessions.get_mut(i as u64 + 1).unwrap();
+                slot.kv.truncate(&mut pool, ctx_of(i));
+            }
+            for i in 0..lanes {
+                let slot = sessions.get_mut(i as u64 + 1).unwrap();
+                engine.step(&mut slot.kv, &mut pool, row[ctx_of(i)]).unwrap();
+            }
+        });
+        let sequential_tps = suite.rate_of(&name).unwrap_or(0.0);
+        for i in 0..lanes {
+            sessions.remove(&mut pool, i as u64 + 1);
+        }
+        println!(
+            "decode: {lanes} lanes batched {batched_tps:.0} tok/s vs sequential \
+             {sequential_tps:.0} tok/s ({:.2}x)",
+            batched_tps / sequential_tps.max(1e-9),
+        );
+        batched_rows.push((lanes, batched_tps, sequential_tps));
+    }
+
     // ---- measured bytes per step (packed vs dense-equivalent) ----
     engine.reset_stats();
-    kv.reset();
-    engine.prefill(&mut kv, &row[..32]).unwrap();
+    kv.reset(&mut pool);
+    engine.prefill(&mut kv, &mut pool, &row[..32]).unwrap();
     let stats = engine.stats();
     let dense_bytes_per_step = stats.dense_activation_bytes as f64 / stats.steps as f64;
     let moved_bytes_per_step = stats.moved_activation_bytes as f64 / stats.steps as f64;
@@ -129,6 +207,16 @@ fn main() {
         ctx_arr.push(e);
     }
     j.insert("contexts", Json::Arr(ctx_arr));
+    let mut batch_arr = Vec::new();
+    for &(lanes, btps, stps) in &batched_rows {
+        let mut e = Json::obj();
+        e.insert("batch", (lanes as f64).into());
+        e.insert("batched_tokens_per_sec", btps.into());
+        e.insert("sequential_tokens_per_sec", stps.into());
+        e.insert("batched_speedup", (btps / stps.max(1e-9)).into());
+        batch_arr.push(e);
+    }
+    j.insert("batched", Json::Arr(batch_arr));
     j.insert("cached_step_growth", cached_growth.into());
     j.insert("full_step_growth", full_growth.into());
     j.insert("dense_bytes_per_step", dense_bytes_per_step.into());
@@ -138,7 +226,8 @@ fn main() {
     // zeros that the schema gate rightly rejects.
     let complete = cached_ms.iter().chain(&full_ms).all(|ms| *ms > 0.0)
         && prefill_tps.is_some()
-        && decode_tps.is_some();
+        && decode_tps.is_some()
+        && batched_rows.iter().all(|(_, b, s)| *b > 0.0 && *s > 0.0);
     if complete {
         match std::fs::write("BENCH_decode.json", j.pretty()) {
             Ok(()) => println!("wrote BENCH_decode.json"),

@@ -311,11 +311,12 @@ impl Coordinator {
     ) -> Result<Vec<Vec<u32>>> {
         let engine = self.pool.native_engine(cfg)?;
         let mut engine = engine.borrow_mut();
-        let mut kv = engine.new_cache();
+        let mut kv_pool = engine.new_kv_pool();
+        let mut kv = kv_pool.new_cache();
         let mut outputs = Vec::with_capacity(prompts.len());
         for prompt in prompts {
             let steps_before = engine.stats().steps;
-            let out = engine.generate_greedy(&mut kv, prompt, max_new, stop)?;
+            let out = engine.generate_greedy(&mut kv, &mut kv_pool, prompt, max_new, stop)?;
             self.stats.add_forwards((engine.stats().steps - steps_before) as usize);
             self.stats.add_tokens_generated(out.len());
             outputs.push(out);

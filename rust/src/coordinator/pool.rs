@@ -94,17 +94,21 @@ impl EnginePool {
     /// Get (build-caching) a *native* engine for a method configuration:
     /// the artifacts checkpoint (after this config's weight transform)
     /// loaded into a pure-rust KV-cached [`NativeEngine`] at the
-    /// manifest's dimensions. No PJRT compile or device upload — the
-    /// native path works with the default-off `pjrt` feature.
+    /// manifest's dimensions, with per-site calibration vectors
+    /// (S-PTS/L-PTS eta, Amber channel norms) drawn from the methodparams
+    /// store. No PJRT compile or device upload — the native path works
+    /// with the default-off `pjrt` feature.
     pub fn native_engine(&self, cfg: &MethodConfig) -> Result<Rc<RefCell<NativeEngine>>> {
         let ekey = cfg.engine_key();
         if let Some(e) = self.natives.borrow().get(&ekey) {
             return Ok(Rc::clone(e));
         }
         let t0 = std::time::Instant::now();
-        let sparsity = NativeSparsity::from_method(cfg)?;
+        let engine_cfg = EngineConfig::from_dims(&self.manifest.dims);
+        let sparsity =
+            NativeSparsity::from_method_with_params(cfg, &self.methodparams, &engine_cfg)?;
         let weights = cfg.transformed_weights(&self.weights)?;
-        let model = NativeModel::from_store(&weights, &EngineConfig::from_dims(&self.manifest.dims))
+        let model = NativeModel::from_store(&weights, &engine_cfg)
             .context("building native model from the artifacts checkpoint")?;
         let engine = Rc::new(RefCell::new(NativeEngine::new(model, sparsity)?));
         self.load_log

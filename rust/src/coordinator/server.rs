@@ -13,6 +13,12 @@
 //!   KV-cached [`NativeBackend`] (artifacts checkpoint when present,
 //!   seeded synthetic model otherwise); tests and CI use the
 //!   artifact-free [`SyntheticBackend`].
+//! - **Batched session stepping.** `ReplicaBackend::decode_step_sessions`
+//!   is THE decode op: each worker tick hands every live session to the
+//!   backend at once, and the native backend turns the tick into one
+//!   `StepBatch` — each sparsified site one packed multi-row matmul over
+//!   all lanes, paged KV per session, page-granular sliding windows for
+//!   context-exhausted sessions (DESIGN.md §2.10).
 //! - **Session-affine routing.** [`ServerHandle::submit_with_key`] pins a
 //!   session key (e.g. one TCP connection) to a replica, so decode
 //!   sessions and their follow-up traffic stay on the engine that holds
@@ -46,12 +52,11 @@ use crate::coordinator::methods::MethodConfig;
 use crate::coordinator::scheduler::{SchedPolicy, Scheduler, Work};
 use crate::coordinator::Coordinator;
 use crate::engine::{
-    EngineConfig, KvCache, NativeEngine, NativeModel, NativeSparsity, SessionKvPool,
+    EngineConfig, KvCache, KvPagePool, NativeEngine, NativeModel, NativeSparsity, SessionKvPool,
+    StepBatch,
 };
-use crate::runtime::Manifest;
 use crate::sparsity::Pattern;
 use crate::util::stats::Histogram;
-use crate::util::tensor::TensorStore;
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
 use std::fmt;
@@ -126,7 +131,10 @@ impl Ticket {
 
 /// What one replica thread needs from its engine. Implementations own all
 /// non-`Send` state (they are *built inside* the replica thread by the
-/// factory passed to [`ServerCore::start`]).
+/// factory passed to [`ServerCore::start`]). The surface is deliberately
+/// lean — three ops and a release hook; the per-prompt `decode_step` of
+/// earlier revisions is gone, batched session stepping IS the primary
+/// decode op.
 pub trait ReplicaBackend {
     /// Fixed batch capacity — scheduler slots per dispatch.
     fn batch(&self) -> usize;
@@ -134,18 +142,16 @@ pub trait ReplicaBackend {
     /// Score each `(tokens, span)` row: sum of continuation logprobs.
     fn score_rows(&mut self, rows: &[(Vec<u32>, (usize, usize))]) -> Result<Vec<f64>>;
 
-    /// One greedy decode step per prompt; `None` means the context is
-    /// exhausted and the session must end.
-    fn decode_step(&mut self, prompts: &[&[u32]]) -> Result<Vec<Option<u32>>>;
-
-    /// Session-aware decode step: `(session id, full row)` pairs. The id
-    /// is stable for the life of a generate session on this replica —
-    /// KV-cached backends key incremental state by it. Default: ignore
-    /// the ids (stateless backends).
-    fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> Result<Vec<Option<u32>>> {
-        let prompts: Vec<&[u32]> = rows.iter().map(|(_, p)| *p).collect();
-        self.decode_step(&prompts)
-    }
+    /// THE decode op: advance every `(session id, full row)` lane one
+    /// token. The id is stable for the life of a generate session on
+    /// this replica — KV-cached backends key incremental state by it and
+    /// batch all lanes through one `StepBatch` per call; stateless
+    /// backends just read the rows. A backend may return `None` to end a
+    /// session early; the shipped backends emit until the scheduler ends
+    /// sessions via stop tokens or the `max_new` budget (the native
+    /// backend slides past the context edge, the coordinator backend
+    /// left-crops).
+    fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> Result<Vec<Option<u32>>>;
 
     /// A generate session finished (stop/budget/context/error) — release
     /// any per-session state. Default: nothing to release.
@@ -189,8 +195,14 @@ impl ReplicaBackend for CoordinatorBackend {
         self.coord.score_rows(&self.cfg, rows)
     }
 
-    fn decode_step(&mut self, prompts: &[&[u32]]) -> Result<Vec<Option<u32>>> {
-        let outs = self.coord.generate_refs(&self.cfg, prompts, 1, &self.stop)?;
+    /// Stateless: one full-context forward per row (the artifact
+    /// executables are fixed-shape); session ids are irrelevant. Rows at
+    /// or past the context edge are left-cropped by `pack_rows`, so this
+    /// backend always emits (`Some`) — its sessions end at the scheduler
+    /// level via stop tokens or the `max_new` budget.
+    fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> Result<Vec<Option<u32>>> {
+        let prompts: Vec<&[u32]> = rows.iter().map(|(_, p)| *p).collect();
+        let outs = self.coord.generate_refs(&self.cfg, &prompts, 1, &self.stop)?;
         Ok(outs.into_iter().map(|o| o.into_iter().next()).collect())
     }
 
@@ -200,37 +212,49 @@ impl ReplicaBackend for CoordinatorBackend {
 }
 
 /// The native KV-cached backend (`--backend native`): a pure-rust
-/// [`NativeEngine`] whose generate sessions decode one token per step
-/// against per-session caches in a bounded LRU [`SessionKvPool`] — no
-/// full-context re-forward per token, no PJRT, no artifacts required
+/// [`NativeEngine`] whose generate sessions decode against per-session
+/// paged caches ([`SessionKvPool`] slots over a shared [`KvPagePool`]) —
+/// no full-context re-forward per token, no PJRT, no artifacts required
 /// (weights come from the artifacts checkpoint when present, otherwise a
-/// seeded deterministic synthetic model).
+/// seeded deterministic synthetic model; calibrated per-site S-PTS/L-PTS/
+/// Amber vectors load from the artifacts methodparams store).
 ///
-/// Context-edge sessions follow the `generate_greedy` budget rule (the
-/// token that fills the context is emitted, then the session ends). One
-/// documented corner: a context-*edge* session evicted from the LRU pool
-/// right before its terminal step is indistinguishable from a fresh
-/// edge prompt and restarts its window for one extra token — bounded by
-/// the session's `max_new`, and never a wrong token.
+/// Every scheduler tick becomes **one [`StepBatch`]** across all live
+/// lanes (chunked to the session-cache cap so an LRU eviction can never
+/// rob a lane mid-batch): each sparsified site runs as one packed
+/// multi-row matmul. Context-exhausted sessions **slide** instead of
+/// ending — the page-granular window rule
+/// ([`KvPagePool::window_start`]) drops the oldest page block and
+/// re-anchors (crop + re-prefill, the native twin of the PJRT crop
+/// path), so generation continues to the session's `max_new` budget. The
+/// rule is a pure function of the row length, so an evicted session
+/// re-prefills its window transparently on its next step — slower, never
+/// wrong (`rust/tests/step_batch.rs` pins cap-1 interleaving).
 pub struct NativeBackend {
     engine: NativeEngine,
-    /// Scratch cache for prefill-only work (scoring, stateless decode).
+    /// Shared page storage for every cache below.
+    pages: KvPagePool,
+    /// Scratch cache for prefill-only work (scoring).
     score_kv: KvCache,
-    /// Per-session incremental caches, keyed by scheduler session id.
+    /// Per-session incremental cache slots, keyed by scheduler session
+    /// id; each slot records the window anchor its cache is built at.
     sessions: SessionKvPool,
+    /// Reusable batched-step plan — one per tick.
+    batch: StepBatch,
     stop: Vec<u32>,
-    batch: usize,
+    batch_cap: usize,
     /// "artifacts" or "synthetic" — where the weights came from.
     pub origin: &'static str,
 }
 
 impl NativeBackend {
-    /// Resident per-session KV caches per replica; an evicted session is
+    /// Resident per-session KV slots per replica; an evicted session is
     /// re-prefilled from its row on its next step (slower, never wrong).
     pub const DEFAULT_SESSION_CAP: usize = 64;
 
     /// Artifacts checkpoint when `io_manifest.json` exists under
-    /// `artifacts` (with this method's weight transform applied), else a
+    /// `artifacts` (with this method's weight transform applied, and
+    /// per-site calibration vectors from the methodparams store), else a
     /// seeded synthetic model at [`EngineConfig::tiny`] dimensions.
     pub fn open(
         artifacts: &Path,
@@ -241,18 +265,9 @@ impl NativeBackend {
         seed: u64,
     ) -> Result<NativeBackend> {
         let mcfg = MethodConfig::by_name(method, pattern)?;
-        let sparsity = NativeSparsity::from_method(&mcfg)?;
-        if artifacts.join("io_manifest.json").exists() {
-            let manifest = Manifest::load(artifacts)?;
-            let weights = TensorStore::load(&artifacts.join("ckpt"))?;
-            let weights = mcfg.transformed_weights(&weights)?;
-            let cfg = EngineConfig::from_dims(&manifest.dims);
-            let model = NativeModel::from_store(&weights, &cfg)?;
-            NativeBackend::from_model(model, sparsity, stop, batch, "artifacts")
-        } else {
-            let model = NativeModel::synthetic(&EngineConfig::tiny(), seed);
-            NativeBackend::from_model(model, sparsity, stop, batch, "synthetic")
-        }
+        let (model, sparsity, origin) =
+            crate::engine::decode::load_native_parts(artifacts, &mcfg, seed)?;
+        NativeBackend::from_model(model, sparsity, stop, batch, origin)
     }
 
     /// Purely synthetic backend (tests, loadgen, CI smoke).
@@ -275,31 +290,61 @@ impl NativeBackend {
         origin: &'static str,
     ) -> Result<NativeBackend> {
         let engine = NativeEngine::new(model, sparsity)?;
-        Ok(NativeBackend {
-            score_kv: engine.new_cache(),
-            sessions: SessionKvPool::new(engine.config(), Self::DEFAULT_SESSION_CAP),
-            engine,
-            stop,
-            batch: batch.max(1),
-            origin,
-        })
+        let mut backend = NativeBackend::from_engine(engine, stop, batch);
+        backend.origin = origin;
+        Ok(backend)
     }
 
-    /// Override the LRU session-cache bound (tests pin eviction safety
-    /// at cap 1).
+    /// Wrap an already-built engine (e.g. `nmsparse decode --lanes`
+    /// reusing its loaded model) in a serving backend. The session-slot
+    /// pool is sized to at least the scheduler tick width (`batch`): a
+    /// cap below it would make each tick's chunks evict each other's
+    /// slots, silently degrading every token to a full-window re-prefill
+    /// (`with_session_cap` remains the explicit override for tests).
+    pub fn from_engine(engine: NativeEngine, stop: Vec<u32>, batch: usize) -> NativeBackend {
+        let pages = engine.new_kv_pool();
+        let batch_cap = batch.max(1);
+        NativeBackend {
+            score_kv: pages.new_cache(),
+            sessions: SessionKvPool::new(Self::DEFAULT_SESSION_CAP.max(batch_cap)),
+            batch: StepBatch::new(),
+            pages,
+            engine,
+            stop,
+            batch_cap,
+            origin: "prebuilt",
+        }
+    }
+
+    /// Override the LRU session-slot bound (tests pin eviction safety at
+    /// cap 1 — batched steps chunk lanes to this bound).
     pub fn with_session_cap(mut self, cap: usize) -> NativeBackend {
-        self.sessions = SessionKvPool::new(self.engine.config(), cap);
+        self.sessions = SessionKvPool::new(cap);
+        self
+    }
+
+    /// Override the KV page granularity (tests pin page-boundary and
+    /// sliding-window behavior with tiny pages).
+    pub fn with_page_tokens(mut self, page_tokens: usize) -> NativeBackend {
+        self.pages = self.engine.new_kv_pool_with(page_tokens);
+        self.score_kv = self.pages.new_cache();
+        self.sessions = SessionKvPool::new(self.sessions.cap());
         self
     }
 
     pub fn engine(&self) -> &NativeEngine {
         &self.engine
     }
+
+    /// The shared page pool (tests read peak/outstanding byte counters).
+    pub fn pages(&self) -> &KvPagePool {
+        &self.pages
+    }
 }
 
 impl ReplicaBackend for NativeBackend {
     fn batch(&self) -> usize {
-        self.batch
+        self.batch_cap
     }
 
     fn score_rows(&mut self, rows: &[(Vec<u32>, (usize, usize))]) -> Result<Vec<f64>> {
@@ -320,66 +365,94 @@ impl ReplicaBackend for NativeBackend {
             } else {
                 (&tokens[..], (*s, *e))
             };
-            out.push(self.engine.score_span(&mut self.score_kv, row, span)?);
+            out.push(self.engine.score_span(&mut self.score_kv, &mut self.pages, row, span)?);
         }
+        // Scoring is prefill-only scratch work — recycle its pages now
+        // rather than pinning them until the next score request (they
+        // would distort the live-context page counters).
+        self.score_kv.reset(&mut self.pages);
         Ok(out)
     }
 
-    /// Stateless fallback: one full-context forward per call.
-    fn decode_step(&mut self, prompts: &[&[u32]]) -> Result<Vec<Option<u32>>> {
-        let max_seq = self.engine.config().max_seq;
-        let mut out = Vec::with_capacity(prompts.len());
-        for p in prompts {
-            if p.len() > max_seq {
-                out.push(None);
-                continue;
-            }
-            self.engine.full_context(&mut self.score_kv, p)?;
-            out.push(Some(self.engine.argmax_token()));
-        }
-        Ok(out)
-    }
-
-    /// The KV-cached step: each session advances by feeding only the
-    /// tokens its cache has not seen (normally exactly one).
+    /// One batched step across every lane. Each session feeds only the
+    /// window tokens its cache has not seen (normally exactly one; a
+    /// fresh, evicted or freshly-slid session catches up over several
+    /// ragged batched steps), and a lane's final token loads the logits
+    /// its next token is read from. Sessions never end on context here —
+    /// the sliding window keeps them alive until stop/budget.
     fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> Result<Vec<Option<u32>>> {
-        let max_seq = self.engine.config().max_seq;
-        let mut out = Vec::with_capacity(rows.len());
-        for (id, row) in rows {
-            if row.len() >= max_seq {
-                if self.sessions.contains(*id) {
-                    // We already emitted the token that filled the
-                    // context (the `generate_greedy` budget rule) —
-                    // session over.
-                    self.sessions.remove(*id);
-                    out.push(None);
-                } else {
-                    // Fresh prompt at/past the context edge: left-crop
-                    // (the PJRT `pack_rows` rule) and emit the one
-                    // budget-rule token; the next step ends the session.
-                    let cropped = &row[row.len() - max_seq..];
-                    let kv = self.sessions.get_or_create(*id);
-                    kv.reset();
-                    self.engine.prefill(kv, cropped)?;
-                    out.push(Some(self.engine.argmax_token()));
+        let mut out = vec![None; rows.len()];
+        let cap = self.sessions.cap();
+        let vocab = self.engine.config().vocab as u32;
+        for (chunk_idx, chunk) in rows.chunks(cap).enumerate() {
+            let base = chunk_idx * cap;
+            // A degenerate lane (empty row, out-of-vocab prompt token)
+            // must not poison the shared batch: it ends its OWN session
+            // (stays `None`, slot released) while healthy concurrent
+            // lanes keep decoding — `Err` from here would abort every
+            // session in the tick.
+            let mut dead = vec![false; chunk.len()];
+            // Reconcile each lane's cache with its current window. The
+            // window start is a pure function of the row length, so a
+            // rebound (evicted) slot simply re-prefills. `>=` (not `>`):
+            // a cache already fed through the whole row means the caller
+            // re-ticked an unchanged row (its emitted token was never
+            // appended) — rebuild and re-emit deterministically instead
+            // of returning a session-ending None. In the normal flow the
+            // row has grown past the fed prefix, so equality never
+            // triggers a rebuild there.
+            for (j, (id, row)) in chunk.iter().enumerate() {
+                if row.is_empty() {
+                    dead[j] = true;
+                    self.sessions.remove(&mut self.pages, *id);
+                    continue;
                 }
-                continue;
+                let ws = self.pages.window_start(row.len());
+                let slot = self.sessions.get_or_create(&mut self.pages, *id);
+                if slot.anchor != ws || ws + slot.kv.len() >= row.len() {
+                    slot.kv.reset(&mut self.pages);
+                    slot.anchor = ws;
+                }
             }
-            let kv = self.sessions.get_or_create(*id);
-            if kv.len() >= row.len() {
-                // Desynced (an evicted-and-rebound cache starts at 0, so
-                // only a shrunken row lands here): rebuild from scratch.
-                kv.reset();
+            loop {
+                self.batch.clear();
+                for (j, (id, row)) in chunk.iter().enumerate() {
+                    if dead[j] {
+                        continue;
+                    }
+                    let slot = self.sessions.get_mut(*id).expect("reconciled above");
+                    let fed = slot.anchor + slot.kv.len();
+                    if fed < row.len() {
+                        if row[fed] >= vocab {
+                            dead[j] = true;
+                            self.sessions.remove(&mut self.pages, *id);
+                            continue;
+                        }
+                        self.batch.push(*id, row[fed]);
+                    }
+                }
+                if self.batch.is_empty() {
+                    break;
+                }
+                self.engine.step_batch(&mut self.batch, &mut self.sessions, &mut self.pages)?;
+                // Lanes whose step consumed their final row token emit.
+                let mut lane = 0usize;
+                for (j, (id, row)) in chunk.iter().enumerate() {
+                    if lane < self.batch.len() && self.batch.lanes()[lane].session == *id {
+                        let slot = self.sessions.get_mut(*id).expect("still resident");
+                        if slot.anchor + slot.kv.len() == row.len() {
+                            out[base + j] = Some(self.batch.argmax(lane));
+                        }
+                        lane += 1;
+                    }
+                }
             }
-            let start = kv.len();
-            self.engine.prefill(kv, &row[start..])?;
-            out.push(Some(self.engine.argmax_token()));
         }
         Ok(out)
     }
 
     fn end_session(&mut self, id: u64) {
-        self.sessions.remove(id);
+        self.sessions.remove(&mut self.pages, id);
     }
 
     fn stop_tokens(&self) -> Vec<u32> {
@@ -445,9 +518,9 @@ impl ReplicaBackend for SyntheticBackend {
         Ok(rows.iter().map(|(t, s)| Self::score_of(t, *s)).collect())
     }
 
-    fn decode_step(&mut self, prompts: &[&[u32]]) -> Result<Vec<Option<u32>>> {
+    fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> Result<Vec<Option<u32>>> {
         self.forward();
-        Ok(prompts.iter().map(|p| Some(Self::next_token(p))).collect())
+        Ok(rows.iter().map(|(_, p)| Some(Self::next_token(p))).collect())
     }
 
     fn stop_tokens(&self) -> Vec<u32> {
@@ -1151,7 +1224,8 @@ mod tests {
             .unwrap()
         };
         let mut engine = NativeEngine::synthetic(&cfg, 5, NativeSparsity::act(pattern)).unwrap();
-        let mut kv = engine.new_cache();
+        let mut pool = engine.new_kv_pool();
+        let mut kv = pool.new_cache();
         let prompts: Vec<Vec<u32>> = vec![vec![3, 7, 11], vec![40, 1, 2, 3, 4], vec![9]];
         let mut tickets = Vec::new();
         for p in &prompts {
@@ -1160,7 +1234,7 @@ mod tests {
             );
         }
         for (t, p) in tickets.iter().zip(&prompts) {
-            let want = engine.generate_greedy(&mut kv, p, 12, &stop).unwrap();
+            let want = engine.generate_greedy_sliding(&mut kv, &mut pool, p, 12, &stop).unwrap();
             match t.recv().unwrap() {
                 Response::Generate { tokens } => assert_eq!(tokens, want, "prompt {p:?}"),
                 other => panic!("unexpected {other:?}"),
@@ -1190,10 +1264,11 @@ mod tests {
             .unwrap()
         };
         let mut engine = NativeEngine::synthetic(&cfg, 6, NativeSparsity::act(pattern)).unwrap();
-        let mut kv = engine.new_cache();
+        let mut pool = engine.new_kv_pool();
+        let mut kv = pool.new_cache();
         let tokens = vec![4u32, 9, 13, 2, 30, 8];
         let span = (2, 6);
-        let want = engine.score_span(&mut kv, &tokens, span).unwrap();
+        let want = engine.score_span(&mut kv, &mut pool, &tokens, span).unwrap();
         let t = core.submit(Request::Score { tokens, span }).unwrap();
         assert_eq!(t.recv().unwrap(), Response::Score { score: want });
         core.shutdown();

@@ -1,0 +1,341 @@
+//! Batched session stepping: [`StepBatch`] + [`NativeEngine::step_batch`].
+//!
+//! PR 4's engine stepped one session per call, so serving K concurrent
+//! decodes ran each of the seven sparsified sites K times as independent
+//! matvecs — the compressed-domain kernels never amortized across
+//! sessions. `step_batch` is the multiplexed form (DESIGN.md §2.10): a
+//! [`StepBatch`] is a reusable plan of `{session, token}` lanes (the KV
+//! handle rides in the [`SessionKvPool`] keyed by the session id), and
+//! one call advances every lane by one token, running each site as **one
+//! packed multi-row matmul** across all lanes
+//! ([`PackedNM::matmul_nt_into`](crate::sparsity::PackedNM) over a
+//! lanes-row stream) and the lm head as one multi-row dense matmul. A
+//! weight row is streamed once per step instead of once per lane — the
+//! batched-vs-sequential tok/s rows in `BENCH_decode.json` measure
+//! exactly that amortization.
+//!
+//! **Token identity is structural**: per lane, the batched step performs
+//! the same operations in the same order as [`NativeEngine::step`] —
+//! packing a lane's row is the same single-row selection pass, every
+//! matmul output is the same ascending-column dot, and attention reads
+//! the lane's own cache — so `step_batch` over K sessions is bitwise
+//! logits-identical to K sequential `step` loops at any lane count,
+//! ragged lane lengths included (`rust/tests/step_batch.rs` pins it).
+//!
+//! Contract: every lane's session must already be resident in the
+//! [`SessionKvPool`] (callers chunk batches to the pool's `cap`, so a
+//! mid-batch LRU eviction can never rob a live lane), session ids must
+//! be unique within a batch, and no lane's cache may be full — sliding
+//! full sessions is the serving layer's job
+//! (`NativeBackend::decode_step_sessions`).
+
+use crate::engine::decode::{
+    add_assign, apply_site_batch, argmax, attention_paged, dense_matmul_nt, pick, rmsnorm_into,
+    rope_in_place, silu, NativeEngine,
+};
+use crate::engine::kv::{KvPagePool, SessionKvPool};
+use anyhow::{Context, Result};
+
+/// One lane of a batched step: which session advances, and by which
+/// token.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Lane {
+    pub session: u64,
+    pub token: u32,
+}
+
+/// A reusable batched-step plan: push one lane per live session each
+/// tick, step, read per-lane logits, clear, repeat. All per-lane scratch
+/// (lane-major `[lanes × width]` working buffers, per-lane logits) lives
+/// here and is retained across ticks, so steady-state batched decode
+/// allocates nothing once the peak lane count has been seen.
+#[derive(Debug, Default)]
+pub struct StepBatch {
+    lanes: Vec<Lane>,
+    /// Logit width (set by the last step; 0 before any step).
+    vocab: usize,
+    // Lane-major working buffers, `[lanes × d_model]`…
+    x: Vec<f32>,
+    h: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    ctx: Vec<f32>,
+    out_d: Vec<f32>,
+    // …`[lanes × ffn]`…
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    fbuf: Vec<f32>,
+    // …and `[lanes × vocab]` next-token logits.
+    logits: Vec<f32>,
+    probs: Vec<f32>,
+}
+
+impl StepBatch {
+    pub fn new() -> StepBatch {
+        StepBatch::default()
+    }
+
+    /// Drop all lanes, keeping buffers for reuse.
+    pub fn clear(&mut self) {
+        self.lanes.clear();
+    }
+
+    /// Add a lane: advance `session` by `token` on the next step.
+    pub fn push(&mut self, session: u64, token: u32) {
+        self.lanes.push(Lane { session, token });
+    }
+
+    pub fn len(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.is_empty()
+    }
+
+    pub fn lanes(&self) -> &[Lane] {
+        &self.lanes
+    }
+
+    /// Next-token logits of `lane` after the last
+    /// [`NativeEngine::step_batch`].
+    pub fn logits(&self, lane: usize) -> &[f32] {
+        &self.logits[lane * self.vocab..(lane + 1) * self.vocab]
+    }
+
+    /// Greedy token of `lane` (first index on ties — the same rule as
+    /// [`NativeEngine::argmax_token`]).
+    pub fn argmax(&self, lane: usize) -> u32 {
+        argmax(self.logits(lane))
+    }
+
+    fn resize(&mut self, d_model: usize, ffn: usize, vocab: usize) {
+        let n = self.lanes.len();
+        self.vocab = vocab;
+        for buf in [
+            &mut self.x,
+            &mut self.h,
+            &mut self.q,
+            &mut self.k,
+            &mut self.v,
+            &mut self.ctx,
+            &mut self.out_d,
+        ] {
+            buf.resize(n * d_model, 0.0);
+        }
+        for buf in [&mut self.gate, &mut self.up, &mut self.fbuf] {
+            buf.resize(n * ffn, 0.0);
+        }
+        self.logits.resize(n * vocab, 0.0);
+    }
+}
+
+impl NativeEngine {
+    /// Advance every lane of `batch` by one token — the batched,
+    /// session-multiplexed form of [`NativeEngine::step`]. Each of the
+    /// seven sparsified sites runs as one packed multi-row matmul across
+    /// all lanes; per-lane next-token logits land in the batch
+    /// ([`StepBatch::logits`] / [`StepBatch::argmax`]). A no-op on an
+    /// empty batch. Errors (before touching any cache) on a duplicate
+    /// session id, an out-of-vocabulary token, a lane whose session is
+    /// not resident in `sessions`, or a full lane cache.
+    pub fn step_batch(
+        &mut self,
+        batch: &mut StepBatch,
+        sessions: &mut SessionKvPool,
+        pool: &mut KvPagePool,
+    ) -> Result<()> {
+        let n = batch.lanes.len();
+        if n == 0 {
+            return Ok(());
+        }
+        let cfg = self.model.cfg.clone();
+        let (d, ffn) = (cfg.d_model, cfg.ffn);
+        for (i, lane) in batch.lanes.iter().enumerate() {
+            anyhow::ensure!(
+                (lane.token as usize) < cfg.vocab,
+                "lane {i}: token {} out of vocabulary ({})",
+                lane.token,
+                cfg.vocab
+            );
+            anyhow::ensure!(
+                batch.lanes[..i].iter().all(|prev| prev.session != lane.session),
+                "lane {i}: session {} appears twice in one StepBatch",
+                lane.session
+            );
+            let slot = sessions.get_mut(lane.session).with_context(|| {
+                format!(
+                    "lane {i}: session {} not resident in the SessionKvPool — \
+                     reserve caches (chunked to the pool cap) before stepping",
+                    lane.session
+                )
+            })?;
+            anyhow::ensure!(
+                !slot.kv.is_full(),
+                "lane {i}: KV cache full: context length {} reached",
+                slot.kv.capacity()
+            );
+        }
+        batch.resize(d, ffn, cfg.vocab);
+        let StepBatch { lanes, x, h, q, k, v, ctx, out_d, gate, up, fbuf, logits, probs, .. } =
+            batch;
+
+        for (i, lane) in lanes.iter().enumerate() {
+            x[i * d..(i + 1) * d].copy_from_slice(self.model.embed.row(lane.token as usize));
+        }
+        for l in 0..cfg.n_layers {
+            let layer = &self.model.layers[l];
+            // Attention block: batched q/k/v sites, per-lane rope +
+            // cache write + attention over the lane's own pages.
+            for i in 0..n {
+                rmsnorm_into(&x[i * d..(i + 1) * d], &layer.norm1, &mut h[i * d..(i + 1) * d]);
+            }
+            let s0 = site_sp(&self.sparsity, &self.enabled, l, 0);
+            let p0 = pick(s0, self.packed_d.as_mut());
+            apply_site_batch(
+                &layer.wq,
+                h,
+                n,
+                s0,
+                p0,
+                &mut self.scratch,
+                &mut self.act,
+                q,
+                &mut self.stats,
+            );
+            let s1 = site_sp(&self.sparsity, &self.enabled, l, 1);
+            let p1 = pick(s1, self.packed_d.as_mut());
+            apply_site_batch(
+                &layer.wk,
+                h,
+                n,
+                s1,
+                p1,
+                &mut self.scratch,
+                &mut self.act,
+                k,
+                &mut self.stats,
+            );
+            let s2 = site_sp(&self.sparsity, &self.enabled, l, 2);
+            let p2 = pick(s2, self.packed_d.as_mut());
+            apply_site_batch(
+                &layer.wv,
+                h,
+                n,
+                s2,
+                p2,
+                &mut self.scratch,
+                &mut self.act,
+                v,
+                &mut self.stats,
+            );
+            for (i, lane) in lanes.iter().enumerate() {
+                let slot = sessions.get_mut(lane.session).expect("validated resident");
+                let pos = slot.kv.len();
+                let (hd, nh) = (cfg.head_dim(), cfg.n_heads);
+                rope_in_place(&mut q[i * d..(i + 1) * d], nh, hd, pos, &self.rope_freqs);
+                rope_in_place(&mut k[i * d..(i + 1) * d], nh, hd, pos, &self.rope_freqs);
+                slot.kv.write_row(pool, l, &k[i * d..(i + 1) * d], &v[i * d..(i + 1) * d]);
+                attention_paged(
+                    &q[i * d..(i + 1) * d],
+                    &slot.kv,
+                    l,
+                    pos + 1,
+                    nh,
+                    hd,
+                    probs,
+                    &mut ctx[i * d..(i + 1) * d],
+                );
+            }
+            let s3 = site_sp(&self.sparsity, &self.enabled, l, 3);
+            let p3 = pick(s3, self.packed_d.as_mut());
+            apply_site_batch(
+                &layer.wo,
+                ctx,
+                n,
+                s3,
+                p3,
+                &mut self.scratch,
+                &mut self.act,
+                out_d,
+                &mut self.stats,
+            );
+            add_assign(x, out_d);
+
+            // FFN block (SwiGLU): batched gate/up/down sites.
+            for i in 0..n {
+                rmsnorm_into(&x[i * d..(i + 1) * d], &layer.norm2, &mut h[i * d..(i + 1) * d]);
+            }
+            let s4 = site_sp(&self.sparsity, &self.enabled, l, 4);
+            let p4 = pick(s4, self.packed_d.as_mut());
+            apply_site_batch(
+                &layer.wgate,
+                h,
+                n,
+                s4,
+                p4,
+                &mut self.scratch,
+                &mut self.act,
+                gate,
+                &mut self.stats,
+            );
+            let s5 = site_sp(&self.sparsity, &self.enabled, l, 5);
+            let p5 = pick(s5, self.packed_d.as_mut());
+            apply_site_batch(
+                &layer.wup,
+                h,
+                n,
+                s5,
+                p5,
+                &mut self.scratch,
+                &mut self.act,
+                up,
+                &mut self.stats,
+            );
+            for ((f, g), u) in fbuf.iter_mut().zip(gate.iter()).zip(up.iter()) {
+                *f = silu(*g) * u;
+            }
+            let s6 = site_sp(&self.sparsity, &self.enabled, l, 6);
+            let p6 = pick(s6, self.packed_f.as_mut());
+            apply_site_batch(
+                &layer.wdown,
+                fbuf,
+                n,
+                s6,
+                p6,
+                &mut self.scratch,
+                &mut self.act,
+                out_d,
+                &mut self.stats,
+            );
+            add_assign(x, out_d);
+        }
+        for lane in lanes.iter() {
+            sessions.get_mut(lane.session).expect("validated resident").kv.advance();
+        }
+        for i in 0..n {
+            let hx = &mut h[i * d..(i + 1) * d];
+            rmsnorm_into(&x[i * d..(i + 1) * d], &self.model.final_norm, hx);
+        }
+        dense_matmul_nt(&self.model.lm_head, h, n, logits);
+        self.stats.steps += n as u64;
+        Ok(())
+    }
+}
+
+/// The pipeline applied at `(layer, site)` for a batched step — `None`
+/// when the site is disabled or the engine is dense. Takes the fields
+/// (not the engine) so the packed streams stay independently borrowable.
+fn site_sp<'a>(
+    sparsity: &'a crate::engine::decode::NativeSparsity,
+    enabled: &[bool; 7],
+    layer: usize,
+    site: usize,
+) -> Option<&'a crate::sparsity::Sparsifier> {
+    if enabled[site] {
+        sparsity.site(layer, site)
+    } else {
+        None
+    }
+}

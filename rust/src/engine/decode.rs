@@ -1,17 +1,27 @@
 //! Native decode engine: the per-token step kernel.
 //!
 //! [`NativeEngine::step`] runs one token through the transformer against a
-//! [`KvCache`] — the per-step cost is the layer matmuls plus attention
-//! over the cached positions, instead of the full-context forward the
-//! PJRT path re-runs per generated token. The paper's N:M activation
-//! sparsification sits exactly where `python/compile/model.py` puts it:
-//! on the *input* of each of the seven linear sites (q/k/v/o/gate/up/
-//! down). For selection-only pipelines the step never materializes the
-//! sparsified row densely — the fused [`Sparsifier`] emits a [`PackedNM`]
-//! stream during selection and the matvec runs in the compressed domain
-//! ([`PackedNM::matmul_nt_into`], the same `row_dot` kernel as
-//! [`PackedNM::matvec_into`]), so the bytes-moved numbers in
-//! [`DecodeStats`] come from the stream that actually fed the GEMV.
+//! paged [`KvCache`] — the per-step cost is the layer matmuls plus
+//! attention over the cached positions, instead of the full-context
+//! forward the PJRT path re-runs per generated token. The paper's N:M
+//! activation sparsification sits exactly where `python/compile/model.py`
+//! puts it: on the *input* of each of the seven linear sites (q/k/v/o/
+//! gate/up/down). For selection-only pipelines the step never materializes
+//! the sparsified row densely — the fused [`Sparsifier`] emits a
+//! [`PackedNM`] stream during selection and the matvec runs in the
+//! compressed domain ([`PackedNM::matmul_nt_into`]), so the bytes-moved
+//! numbers in [`DecodeStats`] come from the stream that actually fed the
+//! GEMV. [`NativeEngine::step_batch`](crate::engine::StepBatch) is the
+//! multi-session form: the same seven sites as one multi-row matmul
+//! across every lane (`engine/batch.rs`).
+//!
+//! [`NativeSparsity`] carries either one shared pipeline (ACT/D-PTS/VAR)
+//! or a **per-(layer, site) table** built from calibrated methodparams
+//! vectors ([`NativeSparsity::from_method_with_params`]): S-PTS/L-PTS eta
+//! shifts and Amber channel norms load straight from the artifacts store,
+//! so calibrated methods run on the native path, not just PJRT. Shifted
+//! pipelines are not selection-only and take the sparsified-dense path;
+//! packable sites still stream compressed.
 //!
 //! The packed and dense paths are bitwise-equal by construction: dropped
 //! elements are exactly `0.0`, the kept products are accumulated in the
@@ -20,17 +30,54 @@
 //! pins this.
 
 use crate::coordinator::methods::MethodConfig;
-use crate::engine::kv::KvCache;
+use crate::engine::kv::{KvCache, KvPagePool};
 use crate::engine::model::{EngineConfig, NativeModel, SITES};
+use crate::runtime::Manifest;
 use crate::sparsity::{PackedNM, Pattern, Scratch, Sparsifier};
-use crate::util::tensor::Tensor;
+use crate::util::tensor::{Tensor, TensorStore};
 use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// THE artifacts-or-synthetic loading policy, shared by the serving
+/// backend (`NativeBackend::open`) and `nmsparse decode` so the two can
+/// never drift: when `artifacts` holds a manifest, load the checkpoint
+/// (this method's weight transform applied) at the manifest's dimensions
+/// and draw per-site calibration vectors from the methodparams store
+/// ([`NativeSparsity::from_method_with_params`] — a missing or corrupt
+/// store is a loud error); otherwise build the seeded synthetic model at
+/// [`EngineConfig::tiny`] dimensions, where only vector-free methods
+/// work. Returns `(model, sparsity, origin)` with `origin` one of
+/// `"artifacts"` / `"synthetic"`.
+pub fn load_native_parts(
+    artifacts: &Path,
+    mcfg: &MethodConfig,
+    seed: u64,
+) -> Result<(NativeModel, NativeSparsity, &'static str)> {
+    if artifacts.join("io_manifest.json").exists() {
+        let manifest = Manifest::load(artifacts)?;
+        let cfg = EngineConfig::from_dims(&manifest.dims);
+        let weights = mcfg.transformed_weights(&TensorStore::load(&artifacts.join("ckpt"))?)?;
+        let methodparams = TensorStore::load(&artifacts.join("methodparams"))
+            .context("loading methodparams")?;
+        let sparsity = NativeSparsity::from_method_with_params(mcfg, &methodparams, &cfg)?;
+        Ok((NativeModel::from_store(&weights, &cfg)?, sparsity, "artifacts"))
+    } else {
+        let sparsity = NativeSparsity::from_method(mcfg)?;
+        Ok((NativeModel::synthetic(&EngineConfig::tiny(), seed), sparsity, "synthetic"))
+    }
+}
 
 /// How (and whether) the engine sparsifies site inputs.
 #[derive(Clone, Debug)]
 pub struct NativeSparsity {
-    /// `None` = dense forward (the ORIG baseline).
-    sparsifier: Option<Sparsifier>,
+    pattern: Pattern,
+    /// Shared pipeline for every enabled site (`None` = dense forward,
+    /// the ORIG baseline).
+    shared: Option<Sparsifier>,
+    /// Per-(layer, site) pipelines from calibrated method vectors,
+    /// indexed `layer * 7 + site`; `None` entries are dense. Empty unless
+    /// built by [`NativeSparsity::from_method_with_params`].
+    per_site: Vec<Option<Sparsifier>>,
     disabled_sites: Vec<String>,
     /// Test/bench knob: run the sparsified-dense path even when the
     /// pipeline could emit a packed stream.
@@ -40,40 +87,131 @@ pub struct NativeSparsity {
 impl NativeSparsity {
     /// Dense (no sparsification).
     pub fn dense() -> NativeSparsity {
-        NativeSparsity { sparsifier: None, disabled_sites: Vec::new(), force_dense: false }
+        NativeSparsity {
+            pattern: Pattern::Dense,
+            shared: None,
+            per_site: Vec::new(),
+            disabled_sites: Vec::new(),
+            force_dense: false,
+        }
     }
 
     /// Plain magnitude (ACT) sparsification at `pattern` on every site.
     pub fn act(pattern: Pattern) -> NativeSparsity {
-        let sparsifier = match pattern {
+        let shared = match pattern {
             Pattern::Dense => None,
             p => Some(Sparsifier::new(p)),
         };
-        NativeSparsity { sparsifier, disabled_sites: Vec::new(), force_dense: false }
+        NativeSparsity {
+            pattern,
+            shared,
+            per_site: Vec::new(),
+            disabled_sites: Vec::new(),
+            force_dense: false,
+        }
     }
 
-    /// Realize a [`MethodConfig`] natively. Supported: ORIG/dense, ACT,
-    /// D-PTS, VAR (and their site exemptions). Methods needing per-site
-    /// calibration vectors (S-PTS/L-PTS/CLACT/Amber/LS) or an R-Sparse
-    /// variant are kernel-path-only and error here rather than silently
-    /// downgrading.
+    /// Realize a [`MethodConfig`] natively without calibration data.
+    /// Supported: ORIG/dense, ACT, D-PTS, VAR (and their site
+    /// exemptions). Methods needing per-site calibration vectors
+    /// (S-PTS/L-PTS/Amber) load through
+    /// [`NativeSparsity::from_method_with_params`]; CLACT (data-dependent
+    /// column energies), LS diagonal scales and R-Sparse variants are
+    /// kernel-path-only and error rather than silently downgrading.
     pub fn from_method(cfg: &MethodConfig) -> Result<NativeSparsity> {
         if cfg.rank.is_some() {
             bail!("method '{}' is an R-Sparse variant — not representable natively", cfg.id);
         }
         let pattern = cfg.pattern()?;
-        let sparsifier = match pattern {
+        let shared = match pattern {
             Pattern::Dense => None,
             _ => Some(cfg.sparsifier(None, None).with_context(|| {
                 format!(
-                    "native engine cannot realize method '{}' (per-site calibration \
-                     vectors are kernel-path-only)",
+                    "native engine cannot realize method '{}' without its calibration \
+                     vectors (load them via NativeSparsity::from_method_with_params)",
                     cfg.id
                 )
             })?),
         };
         Ok(NativeSparsity {
-            sparsifier,
+            pattern,
+            shared,
+            per_site: Vec::new(),
+            disabled_sites: cfg.disabled_sites.clone(),
+            force_dense: false,
+        })
+    }
+
+    /// Realize a [`MethodConfig`] natively, drawing per-(layer, site)
+    /// calibration vectors from a methodparams store: S-PTS/L-PTS eta
+    /// shifts (`{eta_family}.l{l}.{site}`) and Amber channel norms
+    /// (`{cscale_family}.l{l}.{site}`), validated against each site's
+    /// input width. Methods without such families fall back to
+    /// [`NativeSparsity::from_method`]; missing store entries are errors,
+    /// never silent downgrades to ACT.
+    pub fn from_method_with_params(
+        cfg: &MethodConfig,
+        methodparams: &TensorStore,
+        engine_cfg: &EngineConfig,
+    ) -> Result<NativeSparsity> {
+        if cfg.rank.is_some() {
+            bail!("method '{}' is an R-Sparse variant — not representable natively", cfg.id);
+        }
+        let pattern = cfg.pattern()?;
+        let needs_eta = cfg.shift_mode as i64 == 2;
+        let needs_cscale = cfg.cscale_family.is_some();
+        if matches!(pattern, Pattern::Dense) || (!needs_eta && !needs_cscale) {
+            return NativeSparsity::from_method(cfg);
+        }
+        // Borrowed lookups — Sparsifier construction copies what it
+        // keeps, so no transient per-site clones of the store tensors.
+        fn family<'a>(
+            store: &'a TensorStore,
+            method_id: &str,
+            fam: &Option<String>,
+            l: usize,
+            site: &str,
+            din: usize,
+        ) -> Result<&'a [f32]> {
+            let fam = fam.as_ref().with_context(|| {
+                format!("method '{method_id}' sets a calibrated mode but names no param family")
+            })?;
+            let name = format!("{fam}.l{l}.{site}");
+            let t = store
+                .get(&name)
+                .with_context(|| format!("method '{method_id}' needs tensor '{name}'"))?;
+            anyhow::ensure!(
+                t.data.len() == din,
+                "methodparams tensor '{name}' has {} elements, site '{site}' is {din} wide",
+                t.data.len()
+            );
+            Ok(&t.data)
+        }
+        let mut per_site = Vec::with_capacity(engine_cfg.n_layers * SITES.len());
+        for l in 0..engine_cfg.n_layers {
+            for site in SITES {
+                if cfg.disabled_sites.iter().any(|d| d == site) {
+                    per_site.push(None);
+                    continue;
+                }
+                let din = engine_cfg.site_in_dim(site);
+                let eta = if needs_eta {
+                    Some(family(methodparams, &cfg.id, &cfg.eta_family, l, site, din)?)
+                } else {
+                    None
+                };
+                let cs = if needs_cscale {
+                    Some(family(methodparams, &cfg.id, &cfg.cscale_family, l, site, din)?)
+                } else {
+                    None
+                };
+                per_site.push(Some(cfg.sparsifier(eta, cs)?));
+            }
+        }
+        Ok(NativeSparsity {
+            pattern,
+            shared: None,
+            per_site,
             disabled_sites: cfg.disabled_sites.clone(),
             force_dense: false,
         })
@@ -86,11 +224,32 @@ impl NativeSparsity {
     }
 
     pub fn pattern(&self) -> Pattern {
-        self.sparsifier.as_ref().map(|s| s.pattern()).unwrap_or(Pattern::Dense)
+        self.pattern
     }
 
-    pub fn sparsifier(&self) -> Option<&Sparsifier> {
-        self.sparsifier.as_ref()
+    /// Is any sparsification configured at all?
+    pub fn is_sparse(&self) -> bool {
+        self.shared.is_some() || self.per_site.iter().any(|s| s.is_some())
+    }
+
+    /// Does this configuration carry per-(layer, site) calibrated
+    /// pipelines (vs one shared pipeline)?
+    pub fn is_per_site(&self) -> bool {
+        !self.per_site.is_empty()
+    }
+
+    /// The pipeline applied at `(layer, site_idx)` — [`SITES`] order.
+    /// `None` means that site runs dense.
+    pub fn site(&self, layer: usize, site_idx: usize) -> Option<&Sparsifier> {
+        if self.per_site.is_empty() {
+            self.shared.as_ref()
+        } else {
+            self.per_site[layer * SITES.len() + site_idx].as_ref()
+        }
+    }
+
+    pub(crate) fn force_dense(&self) -> bool {
+        self.force_dense
     }
 }
 
@@ -101,9 +260,9 @@ impl NativeSparsity {
 /// is the measured activation-I/O reduction `BENCH_decode.json` reports.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct DecodeStats {
-    /// Tokens stepped (prefill + decode).
+    /// Tokens stepped (prefill + decode; batched lanes count one each).
     pub steps: u64,
-    /// Site linears executed.
+    /// Site linear rows executed.
     pub site_rows: u64,
     pub dense_activation_bytes: u64,
     pub moved_activation_bytes: u64,
@@ -125,27 +284,31 @@ impl DecodeStats {
 }
 
 /// The native engine: model weights + sparsification config + all scratch
-/// buffers for one step. Steady state allocates nothing — every buffer is
-/// sized at construction.
+/// buffers for one single-lane step. Steady state allocates nothing —
+/// every buffer is sized at construction (batched lanes carry their own
+/// scratch in [`StepBatch`](crate::engine::StepBatch)).
 pub struct NativeEngine {
-    model: NativeModel,
-    sparsity: NativeSparsity,
+    pub(crate) model: NativeModel,
+    pub(crate) sparsity: NativeSparsity,
     /// Per-site sparsification enables, indexed like [`SITES`].
-    enabled: [bool; 7],
+    pub(crate) enabled: [bool; 7],
     /// Compressed stream for `d_model`-wide site inputs (None off the
-    /// packed path or when the pattern cannot hold that width).
-    packed_d: Option<PackedNM>,
+    /// packed path or when the pattern cannot hold that width). Grows to
+    /// the widest lane count seen, then steady.
+    pub(crate) packed_d: Option<PackedNM>,
     /// Compressed stream for the `ffn`-wide `down` input.
-    packed_f: Option<PackedNM>,
+    pub(crate) packed_f: Option<PackedNM>,
     /// RoPE inverse frequencies, `[head_dim/2]` — shared by every head,
     /// precomputed once (a `powf` per element per step would dominate
     /// the very step cost `BENCH_decode.json` measures).
-    rope_freqs: Vec<f32>,
-    scratch: Scratch,
-    // Step buffers (residual stream, norms, projections, FFN, outputs).
+    pub(crate) rope_freqs: Vec<f32>,
+    pub(crate) scratch: Scratch,
+    /// Single-row scratch for the sparsified-dense path (shared with the
+    /// batched stepper: lanes sparsify one row at a time).
+    pub(crate) act: Vec<f32>,
+    // Single-lane step buffers (residual stream, norms, projections, FFN).
     x: Vec<f32>,
     h: Vec<f32>,
-    act: Vec<f32>,
     q: Vec<f32>,
     k: Vec<f32>,
     v: Vec<f32>,
@@ -156,7 +319,7 @@ pub struct NativeEngine {
     fbuf: Vec<f32>,
     probs: Vec<f32>,
     logits: Vec<f32>,
-    stats: DecodeStats,
+    pub(crate) stats: DecodeStats,
 }
 
 const ROPE_BASE: f32 = 10000.0;
@@ -174,34 +337,30 @@ impl NativeEngine {
         anyhow::ensure!(cfg.max_seq > 0, "max_seq must be positive");
         let enabled = site_enables(&sparsity);
         // Enabled sparsified sites must fit the pattern's block geometry.
-        if let Some(sp) = sparsity.sparsifier() {
-            if let Pattern::NM { m, .. } = sp.pattern() {
-                for (i, site) in SITES.iter().enumerate() {
-                    let din = cfg.site_in_dim(site);
-                    anyhow::ensure!(
-                        !enabled[i] || din % m as usize == 0,
-                        "site '{site}' width {din} is not a multiple of M={m}"
-                    );
-                }
+        if let Pattern::NM { m, .. } = sparsity.pattern() {
+            for (i, site) in SITES.iter().enumerate() {
+                let din = cfg.site_in_dim(site);
+                anyhow::ensure!(
+                    !enabled[i] || din % m as usize == 0,
+                    "site '{site}' width {din} is not a multiple of M={m}"
+                );
             }
         }
-        let use_packed = match sparsity.sparsifier() {
-            Some(sp) => sp.is_packable() && !sparsity.force_dense,
-            None => false,
-        };
-        let needs_d = enabled[..6].iter().any(|e| *e); // q k v o gate up
-        let needs_f = enabled[6]; // down
-        let mk = |cols: usize| {
-            sparsity.sparsifier().map(|sp| PackedNM::new(sp.pattern(), cols))
-        };
-        let (packed_d, packed_f) = if use_packed {
-            (
-                if needs_d { mk(cfg.d_model) } else { None },
-                if needs_f { mk(cfg.ffn) } else { None },
-            )
-        } else {
-            (None, None)
-        };
+        // A site streams compressed when its pipeline is selection-only
+        // (per-site tables may mix: an eta-shifted site goes dense while
+        // an Amber-scaled one packs).
+        let mut packable = [false; 7];
+        for (i, p) in packable.iter_mut().enumerate() {
+            *p = enabled[i]
+                && (0..cfg.n_layers)
+                    .any(|l| sparsity.site(l, i).is_some_and(Sparsifier::is_packable));
+        }
+        let force_dense = sparsity.force_dense();
+        let needs_d = !force_dense && packable[..6].iter().any(|&p| p); // q k v o gate up
+        let needs_f = !force_dense && packable[6]; // down
+        let mk = |cols: usize| Some(PackedNM::new(sparsity.pattern(), cols));
+        let packed_d = if needs_d { mk(cfg.d_model) } else { None };
+        let packed_f = if needs_f { mk(cfg.ffn) } else { None };
         let half = cfg.head_dim() / 2;
         let rope_freqs: Vec<f32> =
             (0..half).map(|i| ROPE_BASE.powf(-(i as f32) / half as f32)).collect();
@@ -256,9 +415,16 @@ impl NativeEngine {
         self.packed_d.is_some() || self.packed_f.is_some()
     }
 
-    /// A fresh KV cache sized for this engine.
-    pub fn new_cache(&self) -> KvCache {
-        KvCache::new(&self.model.cfg)
+    /// A page pool sized for this engine at the default page granularity.
+    pub fn new_kv_pool(&self) -> KvPagePool {
+        let cfg = &self.model.cfg;
+        KvPagePool::new(cfg, KvPagePool::default_page_tokens(cfg.max_seq))
+    }
+
+    /// A page pool with an explicit page size (tests pin page-boundary
+    /// and sliding-window behavior with tiny pages).
+    pub fn new_kv_pool_with(&self, page_tokens: usize) -> KvPagePool {
+        KvPagePool::new(&self.model.cfg, page_tokens)
     }
 
     pub fn stats(&self) -> DecodeStats {
@@ -277,13 +443,7 @@ impl NativeEngine {
     /// Greedy token from the current logits (first index on ties — the
     /// same rule as `Coordinator`'s argmax).
     pub fn argmax_token(&self) -> u32 {
-        let mut best = 0usize;
-        for (i, x) in self.logits.iter().enumerate() {
-            if *x > self.logits[best] {
-                best = i;
-            }
-        }
-        best as u32
+        argmax(&self.logits)
     }
 
     /// `log p(token)` under the current logits (f64 log-softmax).
@@ -296,7 +456,7 @@ impl NativeEngine {
     /// Advance one token: consume `token` at the cache's next position and
     /// leave next-token logits in [`NativeEngine::logits`]. Errors when the
     /// cache is full or the token is out of vocabulary.
-    pub fn step(&mut self, kv: &mut KvCache, token: u32) -> Result<()> {
+    pub fn step(&mut self, kv: &mut KvCache, pool: &mut KvPagePool, token: u32) -> Result<()> {
         let NativeEngine {
             model,
             sparsity,
@@ -332,42 +492,38 @@ impl NativeEngine {
             cfg.vocab
         );
         let pos = kv.len();
-        let sp = sparsity.sparsifier();
         x.copy_from_slice(model.embed.row(token as usize));
         for (l, layer) in model.layers.iter().enumerate() {
+            let sp = |i: usize| if enabled[i] { sparsity.site(l, i) } else { None };
             // Attention block.
             rmsnorm_into(x, &layer.norm1, h);
-            apply_site(&layer.wq, h, sp, enabled[0], packed_d.as_mut(), scratch, act, q, stats);
-            apply_site(&layer.wk, h, sp, enabled[1], packed_d.as_mut(), scratch, act, k, stats);
-            apply_site(&layer.wv, h, sp, enabled[2], packed_d.as_mut(), scratch, act, v, stats);
+            let (s0, s1, s2) = (sp(0), sp(1), sp(2));
+            apply_site(&layer.wq, h, s0, pick(s0, packed_d.as_mut()), scratch, act, q, stats);
+            apply_site(&layer.wk, h, s1, pick(s1, packed_d.as_mut()), scratch, act, k, stats);
+            apply_site(&layer.wv, h, s2, pick(s2, packed_d.as_mut()), scratch, act, v, stats);
             rope_in_place(q, cfg.n_heads, cfg.head_dim(), pos, rope_freqs);
             rope_in_place(k, cfg.n_heads, cfg.head_dim(), pos, rope_freqs);
-            kv.write_row(l, k, v);
-            attention_into(
-                q,
-                kv.keys(l, pos + 1),
-                kv.values(l, pos + 1),
-                pos + 1,
-                cfg.n_heads,
-                cfg.head_dim(),
-                probs,
-                ctx,
-            );
-            let pd = packed_d.as_mut();
-            apply_site(&layer.wo, ctx, sp, enabled[3], pd, scratch, act, site_out_d, stats);
+            kv.write_row(pool, l, k, v);
+            attention_paged(q, kv, l, pos + 1, cfg.n_heads, cfg.head_dim(), probs, ctx);
+            let s3 = sp(3);
+            let pd = pick(s3, packed_d.as_mut());
+            apply_site(&layer.wo, ctx, s3, pd, scratch, act, site_out_d, stats);
             add_assign(x, site_out_d);
 
             // FFN block (SwiGLU).
             rmsnorm_into(x, &layer.norm2, h);
-            let pg = packed_d.as_mut();
-            apply_site(&layer.wgate, h, sp, enabled[4], pg, scratch, act, gate, stats);
-            let pu = packed_d.as_mut();
-            apply_site(&layer.wup, h, sp, enabled[5], pu, scratch, act, up, stats);
+            let s4 = sp(4);
+            let pg = pick(s4, packed_d.as_mut());
+            apply_site(&layer.wgate, h, s4, pg, scratch, act, gate, stats);
+            let s5 = sp(5);
+            let pu = pick(s5, packed_d.as_mut());
+            apply_site(&layer.wup, h, s5, pu, scratch, act, up, stats);
             for ((f, g), u) in fbuf.iter_mut().zip(gate.iter()).zip(up.iter()) {
                 *f = silu(*g) * u;
             }
-            let pf = packed_f.as_mut();
-            apply_site(&layer.wdown, fbuf, sp, enabled[6], pf, scratch, act, site_out_d, stats);
+            let s6 = sp(6);
+            let pf = pick(s6, packed_f.as_mut());
+            apply_site(&layer.wdown, fbuf, s6, pf, scratch, act, site_out_d, stats);
             add_assign(x, site_out_d);
         }
         kv.advance();
@@ -378,9 +534,20 @@ impl NativeEngine {
     }
 }
 
+/// First index of the maximum (the `Coordinator` tie-break rule).
+pub(crate) fn argmax(xs: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, x) in xs.iter().enumerate() {
+        if *x > xs[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
 /// Which sites sparsify, in [`SITES`] order.
 fn site_enables(sparsity: &NativeSparsity) -> [bool; 7] {
-    let mut enabled = [sparsity.sparsifier.is_some(); 7];
+    let mut enabled = [sparsity.is_sparse(); 7];
     for (i, site) in SITES.iter().enumerate() {
         if sparsity.disabled_sites.iter().any(|d| d == site) {
             enabled[i] = false;
@@ -389,16 +556,28 @@ fn site_enables(sparsity: &NativeSparsity) -> [bool; 7] {
     enabled
 }
 
+/// The packed stream to use for a site: only selection-only pipelines can
+/// stream compressed; everything else (shifted, VAR, dense) goes through
+/// the dense matvec.
+#[inline]
+pub(crate) fn pick<'a>(
+    sp: Option<&Sparsifier>,
+    packed: Option<&'a mut PackedNM>,
+) -> Option<&'a mut PackedNM> {
+    match sp {
+        Some(s) if s.is_packable() => packed,
+        _ => None,
+    }
+}
+
 /// One (possibly sparsified) linear site: `out[o] = w.row(o) · s(input)`.
 /// The compressed path packs the row during selection and runs the GEMV
 /// over the stream; the dense path sparsifies a copy in place. Byte
 /// counters record what actually moved.
-#[allow(clippy::too_many_arguments)]
-fn apply_site(
+pub(crate) fn apply_site(
     w: &Tensor,
     input: &[f32],
     sp: Option<&Sparsifier>,
-    enabled: bool,
     packed: Option<&mut PackedNM>,
     scratch: &mut Scratch,
     act: &mut Vec<f32>,
@@ -410,8 +589,8 @@ fn apply_site(
     debug_assert_eq!(w.rows(), out.len());
     stats.site_rows += 1;
     stats.dense_activation_bytes += (din * 4) as u64;
-    match (sp, enabled) {
-        (Some(sp), true) => match packed {
+    match sp {
+        Some(sp) => match packed {
             Some(packed) => {
                 packed.clear();
                 sp.pack_row_into(input, packed, scratch);
@@ -427,15 +606,67 @@ fn apply_site(
                 dense_matvec(w, act, out);
             }
         },
-        _ => {
+        None => {
             stats.moved_activation_bytes += (din * 4) as u64;
             dense_matvec(w, input, out);
         }
     }
 }
 
+/// The batched-lane form of [`apply_site`]: `lanes` input rows (lane-major
+/// `[lanes, din]`) through one site as a single multi-row matmul. On the
+/// compressed path every lane's row is packed by the same single-row
+/// selection pass into one stream and the GEMM runs once over all lanes
+/// (weight-row-major — see [`PackedNM::matmul_nt_into`]); the dense paths
+/// sparsify or forward per lane with the identical per-row kernels, so
+/// each lane's output is bitwise-equal to a single-lane [`apply_site`].
+pub(crate) fn apply_site_batch(
+    w: &Tensor,
+    inputs: &[f32],
+    lanes: usize,
+    sp: Option<&Sparsifier>,
+    packed: Option<&mut PackedNM>,
+    scratch: &mut Scratch,
+    act: &mut Vec<f32>,
+    out: &mut [f32],
+    stats: &mut DecodeStats,
+) {
+    let din = w.cols();
+    let w_rows = w.rows();
+    debug_assert_eq!(inputs.len(), lanes * din);
+    debug_assert_eq!(out.len(), lanes * w_rows);
+    stats.site_rows += lanes as u64;
+    stats.dense_activation_bytes += (lanes * din * 4) as u64;
+    match sp {
+        Some(sp) => match packed {
+            Some(packed) => {
+                packed.clear();
+                for r in 0..lanes {
+                    sp.pack_row_into(&inputs[r * din..(r + 1) * din], packed, scratch);
+                }
+                stats.moved_activation_bytes +=
+                    (packed.values().len() * 4 + packed.meta_words().len() * 4) as u64;
+                packed.matmul_nt_into(w, out, 1);
+            }
+            None => {
+                for r in 0..lanes {
+                    act.clear();
+                    act.extend_from_slice(&inputs[r * din..(r + 1) * din]);
+                    sp.sparsify_row(act, scratch);
+                    stats.moved_activation_bytes += (din * 4) as u64;
+                    dense_matvec(w, act, &mut out[r * w_rows..(r + 1) * w_rows]);
+                }
+            }
+        },
+        None => {
+            stats.moved_activation_bytes += (lanes * din * 4) as u64;
+            dense_matmul_nt(w, inputs, lanes, out);
+        }
+    }
+}
+
 /// RMSNorm with the python model's epsilon (1e-6), f64 mean accumulation.
-fn rmsnorm_into(x: &[f32], g: &[f32], out: &mut [f32]) {
+pub(crate) fn rmsnorm_into(x: &[f32], g: &[f32], out: &mut [f32]) {
     debug_assert_eq!(x.len(), g.len());
     debug_assert_eq!(x.len(), out.len());
     let ms = x.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>() / x.len() as f64;
@@ -448,7 +679,13 @@ fn rmsnorm_into(x: &[f32], g: &[f32], out: &mut [f32]) {
 /// Rotary position embedding at one position (split-half convention,
 /// matching `python/compile/model.py::rope`). `freqs` is the engine's
 /// precomputed `[head_dim/2]` inverse-frequency table.
-fn rope_in_place(x: &mut [f32], n_heads: usize, head_dim: usize, pos: usize, freqs: &[f32]) {
+pub(crate) fn rope_in_place(
+    x: &mut [f32],
+    n_heads: usize,
+    head_dim: usize,
+    pos: usize,
+    freqs: &[f32],
+) {
     let half = head_dim / 2;
     debug_assert_eq!(freqs.len(), half);
     for head in 0..n_heads {
@@ -464,12 +701,14 @@ fn rope_in_place(x: &mut [f32], n_heads: usize, head_dim: usize, pos: usize, fre
     }
 }
 
-/// Causal attention for one query over `rows` cached positions.
-#[allow(clippy::too_many_arguments)]
-fn attention_into(
+/// Causal attention for one query over `rows` cached positions, read as
+/// per-page contiguous slabs from the paged cache. Positions are visited
+/// in order across segments, so scores and the weighted value sum
+/// accumulate exactly as they did over one contiguous buffer.
+pub(crate) fn attention_paged(
     q: &[f32],
-    keys: &[f32],
-    vals: &[f32],
+    kv: &KvCache,
+    layer: usize,
     rows: usize,
     n_heads: usize,
     head_dim: usize,
@@ -483,11 +722,12 @@ fn attention_into(
         let qh = &q[off..off + head_dim];
         probs.clear();
         let mut maxs = f32::NEG_INFINITY;
-        for j in 0..rows {
-            let kh = &keys[j * d + off..j * d + off + head_dim];
-            let s = dot(qh, kh) * scale;
-            probs.push(s);
-            maxs = maxs.max(s);
+        for seg in kv.key_segments(layer, rows) {
+            for krow in seg.chunks_exact(d) {
+                let s = dot(qh, &krow[off..off + head_dim]) * scale;
+                probs.push(s);
+                maxs = maxs.max(s);
+            }
         }
         let mut denom = 0.0f32;
         for p in probs.iter_mut() {
@@ -497,13 +737,17 @@ fn attention_into(
         let inv = 1.0 / denom;
         let oh = &mut out[off..off + head_dim];
         oh.iter_mut().for_each(|o| *o = 0.0);
-        for (j, p) in probs.iter().enumerate() {
-            let wj = p * inv;
-            let vh = &vals[j * d + off..j * d + off + head_dim];
-            for (o, vv) in oh.iter_mut().zip(vh) {
-                *o += wj * vv;
+        let mut j = 0usize;
+        for seg in kv.value_segments(layer, rows) {
+            for vrow in seg.chunks_exact(d) {
+                let wj = probs[j] * inv;
+                j += 1;
+                for (o, vv) in oh.iter_mut().zip(&vrow[off..off + head_dim]) {
+                    *o += wj * vv;
+                }
             }
         }
+        debug_assert_eq!(j, rows);
     }
 }
 
@@ -518,8 +762,27 @@ pub(crate) fn dense_matvec(w: &Tensor, x: &[f32], out: &mut [f32]) {
     }
 }
 
+/// Batched dense linear over `rows` lane inputs (`xs` is `[rows, cols]`
+/// row-major): `out[r * w.rows() + o] = w.row(o) · xs[r]`, iterated
+/// weight-row-major so one weight row serves every lane while hot —
+/// the dense-site / lm-head form of the batched step. Each output is the
+/// same ascending-index dot as [`dense_matvec`], so the two are
+/// bitwise-equal.
+pub(crate) fn dense_matmul_nt(w: &Tensor, xs: &[f32], rows: usize, out: &mut [f32]) {
+    let cols = w.cols();
+    let w_rows = w.rows();
+    debug_assert_eq!(xs.len(), rows * cols);
+    debug_assert_eq!(out.len(), rows * w_rows);
+    for o in 0..w_rows {
+        let wrow = w.row(o);
+        for r in 0..rows {
+            out[r * w_rows + o] = dot(wrow, &xs[r * cols..(r + 1) * cols]);
+        }
+    }
+}
+
 #[inline]
-fn dot(a: &[f32], b: &[f32]) -> f32 {
+pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
     let mut acc = 0.0f32;
     for (x, y) in a.iter().zip(b) {
         acc += x * y;
@@ -528,12 +791,12 @@ fn dot(a: &[f32], b: &[f32]) -> f32 {
 }
 
 #[inline]
-fn silu(x: f32) -> f32 {
+pub(crate) fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
 #[inline]
-fn add_assign(x: &mut [f32], y: &[f32]) {
+pub(crate) fn add_assign(x: &mut [f32], y: &[f32]) {
     for (a, b) in x.iter_mut().zip(y) {
         *a += b;
     }

@@ -9,17 +9,31 @@
 //! for every generated token, so its per-token cost grows with context
 //! while the cached loop's stays flat: `benches/decode.rs` measures both
 //! into `BENCH_decode.json`.
+//!
+//! Two context-edge policies exist side by side:
+//! [`NativeEngine::generate_greedy`] keeps the PJRT budget rule (the
+//! token that fills the context is emitted, then the session ends — the
+//! parity oracle for `Coordinator::generate_refs`), while
+//! [`NativeEngine::generate_greedy_sliding`] is the serving rule
+//! (DESIGN.md §2.10): a full session drops its oldest page-aligned block
+//! ([`window_start`]) and re-anchors instead of ending — the sequential
+//! reference the batched `NativeBackend` sessions are pinned against.
 
 use crate::engine::decode::NativeEngine;
-use crate::engine::kv::KvCache;
+use crate::engine::kv::{window_start, KvCache, KvPagePool};
 use anyhow::Result;
 
 impl NativeEngine {
     /// Feed `tokens` through the step kernel, extending the cache. Leaves
     /// next-token logits loaded; no-op on an empty slice.
-    pub fn prefill(&mut self, kv: &mut KvCache, tokens: &[u32]) -> Result<()> {
+    pub fn prefill(
+        &mut self,
+        kv: &mut KvCache,
+        pool: &mut KvPagePool,
+        tokens: &[u32],
+    ) -> Result<()> {
         for t in tokens {
-            self.step(kv, *t)?;
+            self.step(kv, pool, *t)?;
         }
         Ok(())
     }
@@ -27,9 +41,14 @@ impl NativeEngine {
     /// Reference full-context forward: reset the cache and replay the
     /// whole row. One call of this per generated token is the
     /// full-context baseline the PJRT path implements.
-    pub fn full_context(&mut self, kv: &mut KvCache, tokens: &[u32]) -> Result<()> {
-        kv.reset();
-        self.prefill(kv, tokens)
+    pub fn full_context(
+        &mut self,
+        kv: &mut KvCache,
+        pool: &mut KvPagePool,
+        tokens: &[u32],
+    ) -> Result<()> {
+        kv.reset(pool);
+        self.prefill(kv, pool, tokens)
     }
 
     /// KV-cached greedy generation: prefill the prompt once, then one
@@ -39,6 +58,7 @@ impl NativeEngine {
     pub fn generate_greedy(
         &mut self,
         kv: &mut KvCache,
+        pool: &mut KvPagePool,
         prompt: &[u32],
         max_new: usize,
         stop: &[u32],
@@ -48,8 +68,8 @@ impl NativeEngine {
         // Left-crop long prompts (keep the most recent context), like the
         // PJRT path's `pack_rows`.
         let prompt = &prompt[prompt.len().saturating_sub(max_seq)..];
-        kv.reset();
-        self.prefill(kv, prompt)?;
+        kv.reset(pool);
+        self.prefill(kv, pool, prompt)?;
         let mut out = Vec::new();
         for _ in 0..max_new {
             let tok = self.argmax_token();
@@ -60,7 +80,7 @@ impl NativeEngine {
             if stop.contains(&tok) || prompt.len() + out.len() >= max_seq || out.len() >= max_new {
                 break;
             }
-            self.step(kv, tok)?;
+            self.step(kv, pool, tok)?;
         }
         Ok(out)
     }
@@ -71,6 +91,7 @@ impl NativeEngine {
     pub fn generate_greedy_full(
         &mut self,
         kv: &mut KvCache,
+        pool: &mut KvPagePool,
         prompt: &[u32],
         max_new: usize,
         stop: &[u32],
@@ -81,11 +102,59 @@ impl NativeEngine {
         let mut row = prompt.to_vec();
         let mut out = Vec::new();
         for _ in 0..max_new {
-            self.full_context(kv, &row)?;
+            self.full_context(kv, pool, &row)?;
             let tok = self.argmax_token();
             out.push(tok);
             row.push(tok);
             if stop.contains(&tok) || row.len() >= max_seq {
+                break;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Sliding-window greedy generation — the serving-session rule: a row
+    /// that outgrows the context drops its oldest page-aligned block
+    /// ([`window_start`] on `pool`'s page grid) and re-anchors at
+    /// position 0 (a page-granular crop + re-prefill; RoPE positions are
+    /// absolute, so retained pages cannot be reused across a slide), then
+    /// keeps generating to the `max_new` budget instead of ending. This
+    /// sequential loop is the reference the batched
+    /// `NativeBackend::decode_step_sessions` path is pinned against —
+    /// the rule is a pure function of the row length, so the two can
+    /// never disagree on where a window starts.
+    pub fn generate_greedy_sliding(
+        &mut self,
+        kv: &mut KvCache,
+        pool: &mut KvPagePool,
+        prompt: &[u32],
+        max_new: usize,
+        stop: &[u32],
+    ) -> Result<Vec<u32>> {
+        let max_seq = self.config().max_seq;
+        let pt = pool.page_tokens();
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        let mut row = prompt.to_vec();
+        let mut anchor = 0usize;
+        kv.reset(pool);
+        let mut out = Vec::new();
+        for _ in 0..max_new {
+            let ws = window_start(row.len(), max_seq, pt);
+            // Same reconcile as the batched backend (`>=`: a cache fed
+            // through the whole row is stale and rebuilds; unreachable
+            // in this loop, where the row grows every iteration).
+            if ws != anchor || anchor + kv.len() >= row.len() {
+                kv.reset(pool);
+                anchor = ws;
+            }
+            let fed = anchor + kv.len();
+            for t in fed..row.len() {
+                self.step(kv, pool, row[t])?;
+            }
+            let tok = self.argmax_token();
+            out.push(tok);
+            row.push(tok);
+            if stop.contains(&tok) {
                 break;
             }
         }
@@ -99,6 +168,7 @@ impl NativeEngine {
     pub fn score_span(
         &mut self,
         kv: &mut KvCache,
+        pool: &mut KvPagePool,
         tokens: &[u32],
         span: (usize, usize),
     ) -> Result<f64> {
@@ -115,11 +185,11 @@ impl NativeEngine {
             tokens.len(),
             self.config().max_seq
         );
-        kv.reset();
+        kv.reset(pool);
         let mut total = 0.0f64;
         // After stepping tokens[..t+1], logits predict tokens[t+1].
         for t in 0..e - 1 {
-            self.step(kv, tokens[t])?;
+            self.step(kv, pool, tokens[t])?;
             let nxt = tokens[t + 1];
             if t + 1 >= s {
                 anyhow::ensure!(
@@ -155,24 +225,28 @@ mod tests {
     #[test]
     fn prefill_then_step_extends_cache() {
         let mut e = tiny_engine(Pattern::NM { n: 8, m: 16 });
-        let mut kv = e.new_cache();
-        e.prefill(&mut kv, &[1, 2, 3]).unwrap();
+        let mut pool = e.new_kv_pool();
+        let mut kv = pool.new_cache();
+        e.prefill(&mut kv, &mut pool, &[1, 2, 3]).unwrap();
         assert_eq!(kv.len(), 3);
         let tok = e.argmax_token();
         assert!((tok as usize) < e.config().vocab);
-        e.step(&mut kv, tok).unwrap();
+        e.step(&mut kv, &mut pool, tok).unwrap();
         assert_eq!(kv.len(), 4);
         assert_eq!(e.stats().steps, 4);
+        // Paged storage: only the pages the 4 positions need are held.
+        assert_eq!(kv.pages_held(), 4usize.div_ceil(pool.page_tokens()));
     }
 
     #[test]
     fn cached_equals_full_context_greedy() {
         for pattern in [Pattern::Dense, Pattern::NM { n: 2, m: 4 }, Pattern::NM { n: 8, m: 16 }] {
             let mut e = tiny_engine(pattern);
-            let mut kv = e.new_cache();
+            let mut pool = e.new_kv_pool();
+            let mut kv = pool.new_cache();
             let prompt = [3u32, 14, 7, 20];
-            let cached = e.generate_greedy(&mut kv, &prompt, 10, &[]).unwrap();
-            let full = e.generate_greedy_full(&mut kv, &prompt, 10, &[]).unwrap();
+            let cached = e.generate_greedy(&mut kv, &mut pool, &prompt, 10, &[]).unwrap();
+            let full = e.generate_greedy_full(&mut kv, &mut pool, &prompt, 10, &[]).unwrap();
             assert_eq!(cached, full, "{pattern}");
             assert_eq!(cached.len(), 10);
         }
@@ -181,14 +255,15 @@ mod tests {
     #[test]
     fn generation_stops_on_context_budget_and_stop() {
         let mut e = tiny_engine(Pattern::NM { n: 8, m: 16 });
-        let mut kv = e.new_cache();
+        let mut pool = e.new_kv_pool();
+        let mut kv = pool.new_cache();
         // Budget.
-        let out = e.generate_greedy(&mut kv, &[5, 6], 3, &[]).unwrap();
+        let out = e.generate_greedy(&mut kv, &mut pool, &[5, 6], 3, &[]).unwrap();
         assert_eq!(out.len(), 3);
         // Stop token: generate once, then replay with that token as stop.
-        let free = e.generate_greedy(&mut kv, &[5, 6], 8, &[]).unwrap();
+        let free = e.generate_greedy(&mut kv, &mut pool, &[5, 6], 8, &[]).unwrap();
         let stop = free[2];
-        let stopped = e.generate_greedy(&mut kv, &[5, 6], 8, &[stop]).unwrap();
+        let stopped = e.generate_greedy(&mut kv, &mut pool, &[5, 6], 8, &[stop]).unwrap();
         let cut = stopped.iter().position(|t| *t == stop).unwrap();
         assert_eq!(&stopped[..=cut], &free[..=cut]);
         assert_eq!(cut + 1, stopped.len());
@@ -198,25 +273,54 @@ mod tests {
         for extra in [-1i64, 0, 5] {
             let len = (e.config().max_seq as i64 + extra) as u32;
             let long: Vec<u32> = (0..len).map(|i| i % 40).collect();
-            let cached = e.generate_greedy(&mut kv, &long, 8, &[]).unwrap();
-            let full = e.generate_greedy_full(&mut kv, &long, 8, &[]).unwrap();
+            let cached = e.generate_greedy(&mut kv, &mut pool, &long, 8, &[]).unwrap();
+            let full = e.generate_greedy_full(&mut kv, &mut pool, &long, 8, &[]).unwrap();
             assert_eq!(cached, full, "extra={extra}");
             assert_eq!(cached.len(), 1, "extra={extra}");
         }
     }
 
     #[test]
+    fn sliding_generation_outlives_the_context_budget() {
+        let mut e = tiny_engine(Pattern::NM { n: 8, m: 16 });
+        let max_seq = e.config().max_seq;
+        let mut pool = e.new_kv_pool_with(4);
+        let mut kv = pool.new_cache();
+        // A prompt near the edge: the budget rule emits one token, the
+        // sliding rule keeps going to the full budget.
+        let prompt: Vec<u32> = (0..max_seq as u32 - 2).map(|i| i % 40).collect();
+        let budget = e.generate_greedy(&mut kv, &mut pool, &prompt, 6, &[]).unwrap();
+        assert_eq!(budget.len(), 2, "budget rule: fills context, then ends");
+        let slid = e.generate_greedy_sliding(&mut kv, &mut pool, &prompt, 6, &[]).unwrap();
+        assert_eq!(slid.len(), 6, "sliding rule: generation continues");
+        // Until the first slide, the two rules see identical windows.
+        assert_eq!(&slid[..2], &budget[..]);
+        // Manual reference: per emitted token, crop the row at the
+        // page-granular window start and run one full-context forward.
+        let mut row = prompt.clone();
+        for (i, want) in slid.iter().enumerate() {
+            let ws = window_start(row.len(), max_seq, pool.page_tokens());
+            e.full_context(&mut kv, &mut pool, &row[ws..]).unwrap();
+            assert_eq!(e.argmax_token(), *want, "token {i}");
+            row.push(*want);
+        }
+        // The cache never exceeds the window, so pages stay bounded.
+        assert!(kv.pages_held() <= max_seq.div_ceil(pool.page_tokens()));
+    }
+
+    #[test]
     fn score_span_matches_manual_logprob_sum() {
         let mut e = tiny_engine(Pattern::NM { n: 2, m: 4 });
-        let mut kv = e.new_cache();
+        let mut pool = e.new_kv_pool();
+        let mut kv = pool.new_cache();
         let tokens = [4u32, 9, 13, 2, 30];
         let span = (2, 5);
-        let got = e.score_span(&mut kv, &tokens, span).unwrap();
+        let got = e.score_span(&mut kv, &mut pool, &tokens, span).unwrap();
         // Manual replay.
         let mut manual = 0.0f64;
-        kv.reset();
+        kv.reset(&mut pool);
         for t in 0..tokens.len() - 1 {
-            e.step(&mut kv, tokens[t]).unwrap();
+            e.step(&mut kv, &mut pool, tokens[t]).unwrap();
             if t + 1 >= span.0 {
                 manual += e.logprob_of(tokens[t + 1]);
             }
@@ -224,9 +328,9 @@ mod tests {
         assert_eq!(got, manual);
         assert!(got < 0.0, "logprobs are negative: {got}");
         // Bad spans are errors.
-        assert!(e.score_span(&mut kv, &tokens, (0, 2)).is_err());
-        assert!(e.score_span(&mut kv, &tokens, (3, 3)).is_err());
-        assert!(e.score_span(&mut kv, &tokens, (1, 9)).is_err());
+        assert!(e.score_span(&mut kv, &mut pool, &tokens, (0, 2)).is_err());
+        assert!(e.score_span(&mut kv, &mut pool, &tokens, (3, 3)).is_err());
+        assert!(e.score_span(&mut kv, &mut pool, &tokens, (1, 9)).is_err());
     }
 
     #[test]
@@ -250,10 +354,12 @@ mod tests {
         .unwrap();
         assert!(packed.uses_packed());
         assert!(!dense.uses_packed());
-        let mut kva = packed.new_cache();
-        let mut kvb = dense.new_cache();
-        packed.prefill(&mut kva, &[1, 2, 3, 4, 5]).unwrap();
-        dense.prefill(&mut kvb, &[1, 2, 3, 4, 5]).unwrap();
+        let mut pool_a = packed.new_kv_pool();
+        let mut pool_b = dense.new_kv_pool();
+        let mut kva = pool_a.new_cache();
+        let mut kvb = pool_b.new_cache();
+        packed.prefill(&mut kva, &mut pool_a, &[1, 2, 3, 4, 5]).unwrap();
+        dense.prefill(&mut kvb, &mut pool_b, &[1, 2, 3, 4, 5]).unwrap();
         let a: Vec<u32> = packed.logits().iter().map(|v| v.to_bits()).collect();
         let b: Vec<u32> = dense.logits().iter().map(|v| v.to_bits()).collect();
         assert_eq!(a, b, "compressed-domain GEMV must be bitwise-equal");

@@ -1,42 +1,204 @@
-//! Per-session KV cache for the native decode engine.
+//! Paged per-session KV storage for the native decode engine.
 //!
-//! Memory layout (see DESIGN.md §2.9): one contiguous f32 buffer per
-//! projection, indexed `[layer][position][d_model]` —
-//! `k[(l * max_seq + pos) * d_model + i]`. A position's K/V rows for
-//! every layer are written during that token's step and become immutable;
-//! attention at position `t` reads the `t + 1` leading rows of its
-//! layer's span. `len` alone tracks validity, so [`KvCache::reset`] and
-//! [`KvCache::truncate`] are O(1) bookkeeping (no zeroing), and a cache
-//! evicted from the [`SessionKvPool`] is rebound to a new session by
-//! resetting — buffers are never freed in steady state.
+//! PR 4's cache pinned `n_layers × max_seq × d_model` buffers per session
+//! — a replica serving 64 mostly-short sessions held 64 full-context
+//! allocations. This module replaces that with **paged allocation**
+//! (DESIGN.md §2.10): KV rows live in fixed-size [`KvPage`]s of
+//! `page_tokens` positions, checked out of a shared [`KvPagePool`] as a
+//! session's context grows and recycled (O(1) per page, free-list push)
+//! the moment [`KvCache::truncate`] / [`KvCache::reset`] / eviction lets
+//! them go. Peak KV bytes therefore track *live context*, not
+//! `sessions × max_seq` — the pool counts it ([`KvPagePool::peak_bytes`]).
+//!
+//! Page layout: one page holds `page_tokens` consecutive positions for
+//! *every* layer — `k[(layer * page_tokens + slot) * d_model + i]` — so
+//! attention over one layer reads one contiguous slab per page
+//! ([`KvCache::key_segments`]). A position's rows are written during that
+//! token's step and then immutable; `len` alone tracks validity, so a
+//! recycled page's stale contents are never observable.
+//!
+//! The pool also owns the **sliding-window rule** ([`window_start`]): a
+//! session whose row outgrows `max_seq` drops its oldest page-aligned
+//! block and re-anchors at position 0 (RoPE positions are absolute, so a
+//! slide is a page-granular crop + re-prefill — the native twin of the
+//! PJRT path's left-crop, amortized over `page_tokens` tokens). The rule
+//! is a pure function of the row length, so an evicted session recomputes
+//! the same window and re-prefills transparently.
 
 use crate::engine::model::EngineConfig;
 
-/// KV storage for one decode session.
-#[derive(Clone, Debug)]
-pub struct KvCache {
-    d_model: usize,
-    max_seq: usize,
-    len: usize,
-    /// `[n_layers * max_seq * d_model]` keys (post-RoPE).
+/// One fixed-size block of KV storage: `page_tokens` positions × every
+/// layer, for both K and V. Buffers are allocated once and recycled
+/// through the [`KvPagePool`] free list, never shrunk.
+#[derive(Debug)]
+pub struct KvPage {
+    /// `[n_layers * page_tokens * d_model]` keys (post-RoPE).
     k: Vec<f32>,
-    /// `[n_layers * max_seq * d_model]` values.
+    /// `[n_layers * page_tokens * d_model]` values.
     v: Vec<f32>,
 }
 
-impl KvCache {
-    pub fn new(cfg: &EngineConfig) -> KvCache {
-        let n = cfg.n_layers * cfg.max_seq * cfg.d_model;
-        KvCache {
+/// Shared page allocator + recycler for every cache of one engine
+/// geometry (one per replica backend). `take`/`put` are O(1) free-list
+/// ops; fresh pages are allocated only when the free list is empty, so
+/// steady-state serving reuses a working set proportional to live
+/// context.
+#[derive(Debug)]
+pub struct KvPagePool {
+    d_model: usize,
+    n_layers: usize,
+    page_tokens: usize,
+    max_seq: usize,
+    free: Vec<KvPage>,
+    /// Pages currently held by caches.
+    outstanding: usize,
+    /// High-water mark of `outstanding` — the proportionality witness.
+    peak: usize,
+    /// Pages served from the free list (recycles).
+    recycled: u64,
+    /// Fresh page allocations ever made.
+    allocated: u64,
+}
+
+impl KvPagePool {
+    /// Default page size for a context budget: coarse enough that window
+    /// slides stay rare, fine enough that short sessions hold little.
+    pub fn default_page_tokens(max_seq: usize) -> usize {
+        (max_seq / 4).clamp(1, 32).min(max_seq.max(1))
+    }
+
+    pub fn new(cfg: &EngineConfig, page_tokens: usize) -> KvPagePool {
+        let page_tokens = page_tokens.clamp(1, cfg.max_seq.max(1));
+        KvPagePool {
             d_model: cfg.d_model,
+            n_layers: cfg.n_layers,
+            page_tokens,
             max_seq: cfg.max_seq,
-            len: 0,
-            k: vec![0.0; n],
-            v: vec![0.0; n],
+            free: Vec::new(),
+            outstanding: 0,
+            peak: 0,
+            recycled: 0,
+            allocated: 0,
         }
     }
 
-    /// Cached positions (tokens already processed).
+    /// Position capacity of one page.
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// The engine context budget this pool serves.
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    /// Resident bytes of one page (K + V, f32).
+    pub fn page_bytes(&self) -> usize {
+        2 * self.n_layers * self.page_tokens * self.d_model * 4
+    }
+
+    /// Pages currently checked out by caches.
+    pub fn outstanding_pages(&self) -> usize {
+        self.outstanding
+    }
+
+    /// High-water mark of checked-out pages.
+    pub fn peak_pages(&self) -> usize {
+        self.peak
+    }
+
+    /// Bytes currently checked out by caches.
+    pub fn outstanding_bytes(&self) -> usize {
+        self.outstanding * self.page_bytes()
+    }
+
+    /// High-water mark of checked-out bytes — what "peak KV proportional
+    /// to live context" is asserted against.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak * self.page_bytes()
+    }
+
+    /// Pages served from the free list instead of a fresh allocation.
+    pub fn recycled(&self) -> u64 {
+        self.recycled
+    }
+
+    /// Fresh page allocations ever made (free + outstanding).
+    pub fn pages_allocated(&self) -> u64 {
+        self.allocated
+    }
+
+    /// A fresh empty cache bound to this pool's geometry.
+    pub fn new_cache(&self) -> KvCache {
+        KvCache {
+            d_model: self.d_model,
+            n_layers: self.n_layers,
+            page_tokens: self.page_tokens,
+            max_seq: self.max_seq,
+            len: 0,
+            pages: Vec::new(),
+        }
+    }
+
+    /// First window position for a row of `row_len` tokens under this
+    /// pool's page grid — see [`window_start`].
+    pub fn window_start(&self, row_len: usize) -> usize {
+        window_start(row_len, self.max_seq, self.page_tokens)
+    }
+
+    fn take_page(&mut self) -> KvPage {
+        self.outstanding += 1;
+        self.peak = self.peak.max(self.outstanding);
+        match self.free.pop() {
+            Some(page) => {
+                self.recycled += 1;
+                page
+            }
+            None => {
+                self.allocated += 1;
+                let n = self.n_layers * self.page_tokens * self.d_model;
+                KvPage { k: vec![0.0; n], v: vec![0.0; n] }
+            }
+        }
+    }
+
+    fn put_page(&mut self, page: KvPage) {
+        debug_assert!(self.outstanding > 0, "page released twice");
+        self.outstanding -= 1;
+        self.free.push(page);
+    }
+}
+
+/// First retained position of a session row under the sliding-window
+/// rule: rows within the context budget keep everything; longer rows drop
+/// the oldest tokens in whole-page steps, so the retained window length
+/// stays in `(max_seq - page_tokens, max_seq]`. Pure function of the row
+/// length — an evicted session recomputes the same window.
+pub fn window_start(row_len: usize, max_seq: usize, page_tokens: usize) -> usize {
+    if row_len <= max_seq {
+        0
+    } else {
+        (row_len - max_seq).div_ceil(page_tokens) * page_tokens
+    }
+}
+
+/// KV storage for one decode session: an ordered list of pages checked
+/// out of the [`KvPagePool`], plus `len` (the committed positions).
+/// Methods that can change the page set take the pool so recycling is
+/// immediate; dropping a cache without resetting it frees the memory but
+/// skips the recycle (fine for one-shot tools, avoided on serving paths).
+#[derive(Debug)]
+pub struct KvCache {
+    d_model: usize,
+    n_layers: usize,
+    page_tokens: usize,
+    max_seq: usize,
+    len: usize,
+    pages: Vec<KvPage>,
+}
+
+impl KvCache {
+    /// Cached positions (tokens already committed).
     pub fn len(&self) -> usize {
         self.len
     }
@@ -54,80 +216,128 @@ impl KvCache {
         self.len >= self.max_seq
     }
 
-    /// Forget everything (O(1) — validity is tracked by `len`).
-    pub fn reset(&mut self) {
-        self.len = 0;
+    /// Pages currently held.
+    pub fn pages_held(&self) -> usize {
+        self.pages.len()
     }
 
-    /// Roll back to the first `len` positions (no-op if already shorter).
-    /// Positions ≥ `len` will be overwritten by subsequent steps.
-    pub fn truncate(&mut self, len: usize) {
+    /// Resident bytes of the held pages (measured from the buffers, so
+    /// it can never drift from the pool's page geometry).
+    pub fn bytes(&self) -> usize {
+        self.pages.iter().map(|p| (p.k.len() + p.v.len()) * 4).sum()
+    }
+
+    /// Forget everything, returning every page to the pool.
+    pub fn reset(&mut self, pool: &mut KvPagePool) {
+        self.truncate(pool, 0);
+    }
+
+    /// Roll back to the first `len` positions (no-op if already shorter),
+    /// returning pages past the new end to the pool — O(1) per released
+    /// page. Positions ≥ `len` will be overwritten by subsequent steps.
+    pub fn truncate(&mut self, pool: &mut KvPagePool, len: usize) {
         self.len = self.len.min(len);
+        let needed = self.len.div_ceil(self.page_tokens);
+        while self.pages.len() > needed {
+            pool.put_page(self.pages.pop().expect("pages.len() > needed"));
+        }
     }
 
-    /// Write the current position's K and V rows for `layer`. Every layer
-    /// must be written before [`KvCache::advance`] moves to the next
-    /// position. Panics when full — the engine checks before stepping.
-    pub fn write_row(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
+    /// Write the current position's K and V rows for `layer`, checking a
+    /// page out of the pool at page boundaries. Every layer must be
+    /// written before [`KvCache::advance`] commits the position. Panics
+    /// when full — the engine checks before stepping.
+    pub fn write_row(&mut self, pool: &mut KvPagePool, layer: usize, k_row: &[f32], v_row: &[f32]) {
         assert!(self.len < self.max_seq, "KV cache full");
         assert_eq!(k_row.len(), self.d_model);
         assert_eq!(v_row.len(), self.d_model);
-        let base = (layer * self.max_seq + self.len) * self.d_model;
-        self.k[base..base + self.d_model].copy_from_slice(k_row);
-        self.v[base..base + self.d_model].copy_from_slice(v_row);
+        let (page, slot) = (self.len / self.page_tokens, self.len % self.page_tokens);
+        if page == self.pages.len() {
+            let fresh = pool.take_page();
+            debug_assert_eq!(
+                fresh.k.len(),
+                self.n_layers * self.page_tokens * self.d_model,
+                "cache used with a pool of different page geometry"
+            );
+            self.pages.push(fresh);
+        }
+        let base = (layer * self.page_tokens + slot) * self.d_model;
+        let p = &mut self.pages[page];
+        p.k[base..base + self.d_model].copy_from_slice(k_row);
+        p.v[base..base + self.d_model].copy_from_slice(v_row);
     }
 
     /// Commit the current position (call once per token, after every
     /// layer's [`KvCache::write_row`]).
     pub fn advance(&mut self) {
         assert!(self.len < self.max_seq, "KV cache full");
+        debug_assert!(
+            self.len / self.page_tokens < self.pages.len(),
+            "advance before any write_row at this position"
+        );
         self.len += 1;
     }
 
-    /// The valid key rows of `layer`, including the in-flight position:
-    /// `rows` rows of `d_model` — attention at position `t` passes
-    /// `rows = t + 1` (its own row was just written, `len` still `t`).
-    pub fn keys(&self, layer: usize, rows: usize) -> &[f32] {
-        debug_assert!(rows <= self.max_seq);
-        let base = layer * self.max_seq * self.d_model;
-        &self.k[base..base + rows * self.d_model]
+    /// The valid key rows of `layer` as per-page contiguous slabs, in
+    /// position order — attention at position `t` passes `rows = t + 1`
+    /// (its own row was just written, `len` still `t`). Each slab is
+    /// `min(page_tokens, remaining) × d_model`.
+    pub fn key_segments(&self, layer: usize, rows: usize) -> impl Iterator<Item = &[f32]> + '_ {
+        self.segments(layer, rows, false)
     }
 
-    /// The valid value rows of `layer` (see [`KvCache::keys`]).
-    pub fn values(&self, layer: usize, rows: usize) -> &[f32] {
-        debug_assert!(rows <= self.max_seq);
-        let base = layer * self.max_seq * self.d_model;
-        &self.v[base..base + rows * self.d_model]
+    /// The valid value rows of `layer` (see [`KvCache::key_segments`]).
+    pub fn value_segments(&self, layer: usize, rows: usize) -> impl Iterator<Item = &[f32]> + '_ {
+        self.segments(layer, rows, true)
     }
 
-    /// Resident footprint of the cache buffers in bytes.
-    pub fn bytes(&self) -> usize {
-        (self.k.len() + self.v.len()) * 4
+    fn segments(
+        &self,
+        layer: usize,
+        rows: usize,
+        values: bool,
+    ) -> impl Iterator<Item = &[f32]> + '_ {
+        let (pt, d) = (self.page_tokens, self.d_model);
+        debug_assert!(rows <= self.pages.len() * pt, "reading unwritten rows");
+        let n_pages = rows.div_ceil(pt);
+        (0..n_pages).map(move |p| {
+            let take = (rows - p * pt).min(pt);
+            let base = layer * pt * d;
+            let page = &self.pages[p];
+            let buf = if values { &page.v } else { &page.k };
+            &buf[base..base + take * d]
+        })
     }
 }
 
-/// LRU pool of per-session caches, keyed by the scheduler's session id.
-/// Bounded: admitting session `cap + 1` evicts the least-recently-used
-/// cache and rebinds its buffers (reset, no reallocation). An evicted
-/// session that steps again is re-prefilled from its row — slower, never
-/// wrong (`rust/tests/native_decode.rs` pins token identity under cap 1).
+/// LRU pool of per-session cache slots, keyed by the scheduler's session
+/// id. Bounded: admitting session `cap + 1` evicts the least-recently-
+/// used slot, returning its pages to the shared [`KvPagePool`]. An
+/// evicted session that steps again re-prefills its window from the row
+/// — slower, never wrong (`rust/tests/step_batch.rs` pins token identity
+/// at cap 1 with interleaved sessions).
 #[derive(Debug)]
 pub struct SessionKvPool {
-    cfg: EngineConfig,
     cap: usize,
-    /// `(session id, cache)`, least-recently-used first.
-    entries: Vec<(u64, KvCache)>,
+    /// `(session id, slot)`, least-recently-used first.
+    entries: Vec<(u64, SessionSlot)>,
     evictions: u64,
 }
 
+/// One session's cache plus the window position it is anchored at:
+/// `kv` holds positions `anchor..anchor + kv.len()` of the session row.
+/// A slide (or a rebind after eviction) resets the cache and moves the
+/// anchor; the backend reconciles `anchor` against [`window_start`]
+/// before every step.
+#[derive(Debug)]
+pub struct SessionSlot {
+    pub anchor: usize,
+    pub kv: KvCache,
+}
+
 impl SessionKvPool {
-    pub fn new(cfg: &EngineConfig, cap: usize) -> SessionKvPool {
-        SessionKvPool {
-            cfg: cfg.clone(),
-            cap: cap.max(1),
-            entries: Vec::new(),
-            evictions: 0,
-        }
+    pub fn new(cap: usize) -> SessionKvPool {
+        SessionKvPool { cap: cap.max(1), entries: Vec::new(), evictions: 0 }
     }
 
     pub fn len(&self) -> usize {
@@ -136,6 +346,11 @@ impl SessionKvPool {
 
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
+    }
+
+    /// Resident-slot bound — batched steps must chunk lanes to this.
+    pub fn cap(&self) -> usize {
+        self.cap
     }
 
     pub fn contains(&self, id: u64) -> bool {
@@ -147,28 +362,40 @@ impl SessionKvPool {
         self.evictions
     }
 
-    /// The session's cache, created (or rebound from the evicted LRU
-    /// entry) on miss; the entry becomes most-recently-used.
-    pub fn get_or_create(&mut self, id: u64) -> &mut KvCache {
+    /// The session's slot, created (or rebound from the evicted LRU
+    /// entry, its pages recycled) on miss; the entry becomes
+    /// most-recently-used.
+    pub fn get_or_create(&mut self, pages: &mut KvPagePool, id: u64) -> &mut SessionSlot {
         if let Some(i) = self.entries.iter().position(|(e, _)| *e == id) {
             let entry = self.entries.remove(i);
             self.entries.push(entry);
         } else if self.entries.len() < self.cap {
-            self.entries.push((id, KvCache::new(&self.cfg)));
+            self.entries.push((id, SessionSlot { anchor: 0, kv: pages.new_cache() }));
         } else {
-            // Evict the LRU entry, reusing its buffers for the new session.
-            let (_, mut cache) = self.entries.remove(0);
-            cache.reset();
+            // Evict the LRU entry: pages go back to the pool, the slot is
+            // rebound to the new session.
+            let (_, mut slot) = self.entries.remove(0);
+            slot.kv.reset(pages);
+            slot.anchor = 0;
             self.evictions += 1;
-            self.entries.push((id, cache));
+            self.entries.push((id, slot));
         }
         &mut self.entries.last_mut().expect("just pushed").1
     }
 
-    /// Drop a finished session's cache (buffers are freed; live sessions
-    /// keep theirs).
-    pub fn remove(&mut self, id: u64) {
-        self.entries.retain(|(e, _)| *e != id);
+    /// Borrow a resident session's slot without touching LRU order —
+    /// what [`NativeEngine::step_batch`](crate::engine::NativeEngine)
+    /// uses mid-step (residency is the caller's contract).
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut SessionSlot> {
+        self.entries.iter_mut().find(|(e, _)| *e == id).map(|(_, s)| s)
+    }
+
+    /// Drop a finished session's slot, recycling its pages.
+    pub fn remove(&mut self, pages: &mut KvPagePool, id: u64) {
+        if let Some(i) = self.entries.iter().position(|(e, _)| *e == id) {
+            let (_, mut slot) = self.entries.remove(i);
+            slot.kv.reset(pages);
+        }
     }
 }
 
@@ -183,71 +410,156 @@ mod tests {
             n_layers: 2,
             n_heads: 1,
             ffn: 8,
-            max_seq: 3,
+            max_seq: 6,
         }
     }
 
-    #[test]
-    fn write_advance_read_roundtrip() {
-        let mut kv = KvCache::new(&cfg());
-        assert!(kv.is_empty() && !kv.is_full());
-        kv.write_row(0, &[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0]);
-        kv.write_row(1, &[9.0; 4], &[10.0; 4]);
-        // Before advance, the in-flight row is readable as rows = len + 1.
-        assert_eq!(kv.keys(0, 1), &[1.0, 2.0, 3.0, 4.0]);
-        kv.advance();
-        kv.write_row(0, &[11.0; 4], &[12.0; 4]);
-        kv.advance();
-        assert_eq!(kv.len(), 2);
-        assert_eq!(&kv.keys(0, 2)[4..], &[11.0; 4]);
-        assert_eq!(kv.values(1, 1), &[10.0; 4]);
-        // Layers are disjoint spans.
-        assert_eq!(kv.keys(1, 1), &[9.0; 4]);
+    fn pool_pt(page_tokens: usize) -> KvPagePool {
+        KvPagePool::new(&cfg(), page_tokens)
+    }
+
+    /// All key rows of `layer` flattened back to one dense buffer.
+    fn flat_keys(kv: &KvCache, layer: usize, rows: usize) -> Vec<f32> {
+        kv.key_segments(layer, rows).flatten().copied().collect()
     }
 
     #[test]
-    fn full_and_truncate_semantics() {
-        let mut kv = KvCache::new(&cfg());
-        for i in 0..3 {
-            kv.write_row(0, &[i as f32; 4], &[0.0; 4]);
-            kv.write_row(1, &[0.0; 4], &[0.0; 4]);
+    fn write_advance_read_roundtrip_across_pages() {
+        let mut pool = pool_pt(2);
+        let mut kv = pool.new_cache();
+        assert!(kv.is_empty() && !kv.is_full());
+        for pos in 0..5 {
+            let krow = [pos as f32; 4];
+            let vrow = [pos as f32 + 100.0; 4];
+            kv.write_row(&mut pool, 0, &krow, &vrow);
+            kv.write_row(&mut pool, 1, &[pos as f32 + 50.0; 4], &[0.0; 4]);
+            // Before advance, the in-flight row is readable as rows = len + 1.
+            assert_eq!(flat_keys(&kv, 0, pos + 1)[pos * 4], pos as f32);
+            kv.advance();
+        }
+        assert_eq!(kv.len(), 5);
+        assert_eq!(kv.pages_held(), 3); // ceil(5 / 2)
+        assert_eq!(pool.outstanding_pages(), 3);
+        // Layers are disjoint slabs; segments cover rows in order.
+        let k0 = flat_keys(&kv, 0, 5);
+        let k1 = flat_keys(&kv, 1, 5);
+        for pos in 0..5 {
+            assert_eq!(k0[pos * 4..pos * 4 + 4], [pos as f32; 4]);
+            assert_eq!(k1[pos * 4..pos * 4 + 4], [pos as f32 + 50.0; 4]);
+        }
+        let v0: Vec<f32> = kv.value_segments(0, 5).flatten().copied().collect();
+        assert_eq!(v0[0], 100.0);
+        assert_eq!(v0[16], 104.0);
+    }
+
+    #[test]
+    fn truncate_recycles_pages_and_reuse_is_allocation_free() {
+        let mut pool = pool_pt(2);
+        let mut kv = pool.new_cache();
+        for pos in 0..6 {
+            kv.write_row(&mut pool, 0, &[pos as f32; 4], &[0.0; 4]);
+            kv.write_row(&mut pool, 1, &[0.0; 4], &[0.0; 4]);
             kv.advance();
         }
         assert!(kv.is_full());
-        kv.truncate(1);
-        assert_eq!(kv.len(), 1);
-        assert!(!kv.is_full());
-        assert_eq!(kv.keys(0, 1), &[0.0; 4]);
-        kv.truncate(5); // no-op: cannot extend
-        assert_eq!(kv.len(), 1);
-        kv.reset();
+        assert_eq!(pool.pages_allocated(), 3);
+        kv.truncate(&mut pool, 3); // keeps ceil(3/2) = 2 pages
+        assert_eq!(kv.len(), 3);
+        assert_eq!(kv.pages_held(), 2);
+        assert_eq!(pool.outstanding_pages(), 2);
+        kv.truncate(&mut pool, 9); // no-op: cannot extend
+        assert_eq!(kv.len(), 3);
+        // Old prefix survives truncation.
+        assert_eq!(flat_keys(&kv, 0, 3)[8], 2.0);
+        // Regrow: the released page comes back from the free list.
+        for pos in 3..6 {
+            kv.write_row(&mut pool, 0, &[pos as f32 * 10.0; 4], &[0.0; 4]);
+            kv.write_row(&mut pool, 1, &[0.0; 4], &[0.0; 4]);
+            kv.advance();
+        }
+        assert_eq!(pool.pages_allocated(), 3, "no fresh allocation on regrow");
+        assert_eq!(pool.recycled(), 1);
+        assert_eq!(flat_keys(&kv, 0, 6)[20], 50.0);
+        kv.reset(&mut pool);
         assert!(kv.is_empty());
+        assert_eq!(kv.pages_held(), 0);
+        assert_eq!(pool.outstanding_pages(), 0);
+        assert_eq!(pool.peak_pages(), 3);
     }
 
     #[test]
     #[should_panic(expected = "KV cache full")]
-    fn advance_past_capacity_panics() {
-        let mut kv = KvCache::new(&cfg());
-        for _ in 0..4 {
+    fn write_past_capacity_panics() {
+        let mut pool = pool_pt(3);
+        let mut kv = pool.new_cache();
+        for _ in 0..7 {
+            kv.write_row(&mut pool, 0, &[0.0; 4], &[0.0; 4]);
+            kv.write_row(&mut pool, 1, &[0.0; 4], &[0.0; 4]);
             kv.advance();
         }
     }
 
     #[test]
-    fn pool_lru_eviction_and_rebind() {
-        let mut pool = SessionKvPool::new(&cfg(), 2);
-        pool.get_or_create(1).advance();
-        pool.get_or_create(2);
-        pool.get_or_create(1); // touch 1: now 2 is LRU
+    fn window_start_is_page_granular() {
+        // Within budget: no slide.
+        assert_eq!(window_start(0, 8, 4), 0);
+        assert_eq!(window_start(8, 8, 4), 0);
+        // One token over: slide one whole page.
+        assert_eq!(window_start(9, 8, 4), 4);
+        assert_eq!(window_start(12, 8, 4), 4);
+        assert_eq!(window_start(13, 8, 4), 8);
+        // Window length stays in (max_seq - page_tokens, max_seq].
+        for row_len in 1..200usize {
+            let ws = window_start(row_len, 8, 4);
+            let w = row_len - ws;
+            assert!(w <= 8 && (row_len <= 8 || w > 8 - 4), "row_len {row_len}");
+            assert_eq!(ws % 4, 0, "page-aligned start");
+        }
+        // page_tokens = 1 degenerates to an exact crop.
+        assert_eq!(window_start(11, 8, 1), 3);
+    }
+
+    #[test]
+    fn session_pool_lru_eviction_recycles_pages() {
+        let mut pages = pool_pt(2);
+        let mut pool = SessionKvPool::new(2);
+        let s1 = pool.get_or_create(&mut pages, 1);
+        s1.kv.write_row(&mut pages, 0, &[1.0; 4], &[0.0; 4]);
+        s1.kv.write_row(&mut pages, 1, &[0.0; 4], &[0.0; 4]);
+        s1.kv.advance();
+        pool.get_or_create(&mut pages, 2);
+        pool.get_or_create(&mut pages, 1); // touch 1: now 2 is LRU
         assert_eq!(pool.len(), 2);
-        pool.get_or_create(3); // evicts 2
+        pool.get_or_create(&mut pages, 3); // evicts 2
         assert_eq!(pool.evictions(), 1);
         assert!(pool.contains(1) && pool.contains(3) && !pool.contains(2));
-        // Session 1 kept its state; the rebound cache starts empty.
-        assert_eq!(pool.get_or_create(1).len(), 1);
-        assert_eq!(pool.get_or_create(3).len(), 0);
-        pool.remove(1);
+        // Session 1 kept its state; the rebound slot starts empty.
+        assert_eq!(pool.get_or_create(&mut pages, 1).kv.len(), 1);
+        assert_eq!(pool.get_or_create(&mut pages, 3).kv.len(), 0);
+        assert_eq!(pool.get_or_create(&mut pages, 3).anchor, 0);
+        pool.remove(&mut pages, 1);
         assert!(!pool.contains(1));
         assert_eq!(pool.len(), 1);
+        assert_eq!(pages.outstanding_pages(), 0, "removed session's pages recycled");
+        assert!(pool.get_mut(9).is_none());
+    }
+
+    #[test]
+    fn peak_tracks_live_context_not_capacity() {
+        // 8 short sessions against a max_seq-6 geometry: peak pages stay
+        // proportional to the 1 live position each, far under 8 × 3 pages.
+        let mut pages = pool_pt(2);
+        let mut pool = SessionKvPool::new(8);
+        for id in 0..8u64 {
+            let slot = pool.get_or_create(&mut pages, id);
+            slot.kv.write_row(&mut pages, 0, &[0.0; 4], &[0.0; 4]);
+            slot.kv.write_row(&mut pages, 1, &[0.0; 4], &[0.0; 4]);
+            slot.kv.advance();
+        }
+        assert_eq!(pages.outstanding_pages(), 8);
+        assert_eq!(pages.peak_pages(), 8);
+        let pinned_pages = 8 * 6usize.div_ceil(2);
+        assert!(pages.peak_pages() * 3 <= pinned_pages, "paged ≪ pinned");
+        assert!(pages.peak_bytes() < pinned_pages * pages.page_bytes());
     }
 }

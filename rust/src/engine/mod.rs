@@ -1,36 +1,50 @@
 //! Native decode engine: KV-cached incremental decoding over packed N:M
-//! activations (DESIGN.md §2.9).
+//! activations (DESIGN.md §2.9–§2.10).
 //!
 //! The PJRT path re-runs a full-context forward for every generated token
 //! (the artifact executables are fixed-shape); this subsystem is the
 //! serving-native alternative — a pure-rust CPU transformer that prefills
-//! a prompt once and then decodes one token per step against a
-//! per-session [`KvCache`], applying the paper's N:M activation
-//! sparsification at the seven linear sites on every step and executing
-//! the sparse matvecs in the compressed domain over [`PackedNM`] streams:
+//! a prompt once and then decodes one token per step against per-session
+//! paged KV storage, applying the paper's N:M activation sparsification
+//! at the seven linear sites on every step and executing the sparse
+//! matvecs in the compressed domain over
+//! [`PackedNM`](crate::sparsity::PackedNM) streams:
 //!
 //! - [`model`]: weights + configuration — artifact checkpoints load via
 //!   [`NativeModel::from_store`] (same tensor names as `aot.py`); CI and
 //!   benches use the seeded deterministic [`NativeModel::synthetic`];
-//! - [`kv`]: the per-session KV cache and the LRU [`SessionKvPool`] the
-//!   serving backend keys by scheduler session id;
-//! - [`decode`]: the per-token step kernel ([`NativeEngine::step`]) and
-//!   the [`DecodeStats`] byte counters behind `BENCH_decode.json`;
+//! - [`kv`]: paged KV storage — fixed-size pages checked out of a shared
+//!   [`KvPagePool`] (peak bytes track live context, not
+//!   `sessions × max_seq`), the LRU [`SessionKvPool`] of per-session
+//!   slots, and the page-granular sliding-window rule
+//!   ([`kv::window_start`]);
+//! - [`decode`]: the per-token step kernel ([`NativeEngine::step`]), the
+//!   per-(layer, site) [`NativeSparsity`] table (S-PTS/L-PTS/Amber
+//!   vectors from methodparams), and the [`DecodeStats`] byte counters
+//!   behind `BENCH_decode.json`;
+//! - [`batch`]: the batched session-stepping API — a reusable
+//!   [`StepBatch`] of `{session, token}` lanes advanced by
+//!   [`NativeEngine::step_batch`], each sparsified site running as one
+//!   packed multi-row matmul across all lanes, bitwise token-identical
+//!   to sequential per-session stepping;
 //! - [`forward`]: prefill, the full-context reference loop (the
-//!   equivalence oracle: token-identical by construction, pinned under
-//!   cache eviction/truncation by `rust/tests/native_decode.rs`), greedy
-//!   generation and span scoring.
+//!   equivalence oracle: token-identical by construction), greedy
+//!   generation under both context-edge rules (PJRT budget rule and the
+//!   serving sliding-window rule), and span scoring.
 //!
 //! Consumers: `coordinator::server::NativeBackend` (`--backend native` in
-//! `nmsparse serve`/`loadgen`), `EnginePool::native_engine` +
-//! `Coordinator::generate_refs` (artifact-backed native decode), and
-//! `benches/decode.rs`.
+//! `nmsparse serve`/`loadgen` — one `StepBatch` per scheduler tick),
+//! `EnginePool::native_engine` + `Coordinator::generate_refs`
+//! (artifact-backed native decode), `nmsparse decode` (single-lane and
+//! `--lanes` batched smoke), and `benches/decode.rs`.
 
+pub mod batch;
 pub mod decode;
 pub mod forward;
 pub mod kv;
 pub mod model;
 
+pub use batch::{Lane, StepBatch};
 pub use decode::{DecodeStats, NativeEngine, NativeSparsity};
-pub use kv::{KvCache, SessionKvPool};
+pub use kv::{window_start, KvCache, KvPagePool, SessionKvPool, SessionSlot};
 pub use model::{EngineConfig, NativeModel, SITES};

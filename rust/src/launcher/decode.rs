@@ -8,27 +8,37 @@
 //! generation through the full-context reference loop and errors on any
 //! divergence — the CI smoke in `tools/ci.sh` runs this twice and pins
 //! both the in-process KV≡full equivalence and the cross-run hash.
+//!
+//! `--lanes N` (N > 1) switches to the batched session-stepping path:
+//! N concurrent sliding-window sessions driven through a real
+//! [`NativeBackend`] (one `StepBatch` per tick, exactly the serving
+//! loop), hashing all lanes' outputs. `--no-batch` runs the same N
+//! sessions through the sequential sliding reference loop instead — the
+//! CI batched-decode smoke pins the two hashes equal.
 
 use crate::coordinator::methods::MethodConfig;
-use crate::engine::{EngineConfig, NativeEngine, NativeModel, NativeSparsity};
-use crate::runtime::Manifest;
+use crate::coordinator::server::{NativeBackend, ReplicaBackend};
+use crate::engine::decode::load_native_parts;
+use crate::engine::NativeEngine;
 use crate::sparsity::Pattern;
 use crate::util::cli::{usage, Args, OptSpec};
 use crate::util::prng::Rng;
-use crate::util::tensor::TensorStore;
 use anyhow::{bail, Result};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 pub fn cmd_decode(rest: Vec<String>) -> Result<()> {
     #[rustfmt::skip]
     let specs = vec![
         OptSpec { name: "artifacts", takes_value: true, default: Some("artifacts"), help: "artifacts dir (missing -> synthetic model)" },
         OptSpec { name: "pattern", takes_value: true, default: Some("8:16"), help: "sparsity pattern" },
-        OptSpec { name: "method", takes_value: true, default: Some("ACT"), help: "method (ACT, D-PTS, VAR, dense)" },
+        OptSpec { name: "method", takes_value: true, default: Some("ACT"), help: "method (ACT, D-PTS, VAR, dense; S-PTS/L-PTS/Amber with artifacts)" },
         OptSpec { name: "seed", takes_value: true, default: Some("7"), help: "synthetic weights + prompt seed" },
         OptSpec { name: "prompt-len", takes_value: true, default: Some("8"), help: "random prompt length" },
         OptSpec { name: "prompt-tokens", takes_value: true, default: Some(""), help: "explicit comma-separated prompt token ids" },
         OptSpec { name: "max-new", takes_value: true, default: Some("16"), help: "tokens to generate" },
+        OptSpec { name: "lanes", takes_value: true, default: Some("1"), help: "concurrent sessions (>1 = batched step_batch path)" },
+        OptSpec { name: "no-batch", takes_value: false, default: None, help: "step --lanes sessions sequentially (sliding reference)" },
+        OptSpec { name: "page-tokens", takes_value: true, default: Some("0"), help: "KV page size in positions (0 = engine default)" },
         OptSpec { name: "check", takes_value: false, default: None, help: "verify KV-cached == full-context reference" },
         OptSpec { name: "dense-path", takes_value: false, default: None, help: "disable the compressed-domain matvec" },
         OptSpec { name: "help", takes_value: false, default: None, help: "show help" },
@@ -40,29 +50,46 @@ pub fn cmd_decode(rest: Vec<String>) -> Result<()> {
     }
     let pattern = Pattern::parse(&a.get("pattern"))?;
     let mcfg = MethodConfig::by_name(&a.get("method"), pattern)?;
-    let sparsity =
-        NativeSparsity::from_method(&mcfg)?.with_force_dense(a.flag("dense-path"));
     let seed = a.get_u64("seed")?;
     let max_new = a.get_usize("max-new")?.max(1);
-
+    let lanes = a.get_usize("lanes")?.max(1);
+    let page_tokens = a.get_usize("page-tokens")?;
     let artifacts = PathBuf::from(a.get("artifacts"));
-    let (model, origin) = if artifacts.join("io_manifest.json").exists() {
-        let manifest = Manifest::load(&artifacts)?;
-        let weights = mcfg.transformed_weights(&TensorStore::load(&artifacts.join("ckpt"))?)?;
-        let cfg = EngineConfig::from_dims(&manifest.dims);
-        (NativeModel::from_store(&weights, &cfg)?, "artifacts")
-    } else {
-        (NativeModel::synthetic(&EngineConfig::tiny(), seed), "synthetic")
-    };
+
+    if lanes > 1 {
+        anyhow::ensure!(
+            a.get("prompt-tokens").is_empty(),
+            "--prompt-tokens drives a single session; use --lanes 1 with it"
+        );
+        return decode_lanes(
+            &artifacts,
+            pattern,
+            &mcfg,
+            seed,
+            a.get_usize("prompt-len")?.max(1),
+            max_new,
+            lanes,
+            page_tokens,
+            a.flag("no-batch"),
+            a.flag("dense-path"),
+            a.flag("check"),
+        );
+    }
+
+    let (model, sparsity, origin) = load_native_parts(&artifacts, &mcfg, seed)?;
+    let sparsity = sparsity.with_force_dense(a.flag("dense-path"));
     let cfg = model.cfg.clone();
     let mut engine = NativeEngine::new(model, sparsity)?;
+    let mut pool = if page_tokens > 0 {
+        engine.new_kv_pool_with(page_tokens)
+    } else {
+        engine.new_kv_pool()
+    };
 
     let prompt: Vec<u32> = {
         let explicit = a.get("prompt-tokens");
         if explicit.is_empty() {
-            let mut rng = Rng::new(seed ^ 0x9e37_79b9);
-            let len = a.get_usize("prompt-len")?.max(1);
-            (0..len).map(|_| rng.range(3, cfg.vocab.min(128)) as u32).collect()
+            lane_prompt(seed, 0, a.get_usize("prompt-len")?.max(1), cfg.vocab)
         } else {
             explicit
                 .split(',')
@@ -88,12 +115,12 @@ pub fn cmd_decode(rest: Vec<String>) -> Result<()> {
         engine.uses_packed(),
     );
 
-    let mut kv = engine.new_cache();
+    let mut kv = pool.new_cache();
     let t0 = std::time::Instant::now();
-    let out = engine.generate_greedy(&mut kv, &prompt, max_new, &[])?;
+    let out = engine.generate_greedy(&mut kv, &mut pool, &prompt, max_new, &[])?;
     let dt = t0.elapsed().as_secs_f64();
     if a.flag("check") {
-        let full = engine.generate_greedy_full(&mut kv, &prompt, max_new, &[])?;
+        let full = engine.generate_greedy_full(&mut kv, &mut pool, &prompt, max_new, &[])?;
         if out != full {
             bail!(
                 "KV-cached decode diverged from the full-context reference:\n  \
@@ -114,14 +141,167 @@ pub fn cmd_decode(rest: Vec<String>) -> Result<()> {
         stats.moved_activation_bytes,
         stats.bytes_reduction(),
     );
-    println!("hash {:016x}", fnv64(&out));
+    println!("hash {:016x}", fnv64_lanes(std::slice::from_ref(&out)));
     Ok(())
 }
 
-/// FNV-1a over the generated token stream (LE bytes) — the determinism
-/// pin the CI smoke compares across runs.
-fn fnv64(tokens: &[u32]) -> u64 {
-    let bytes: Vec<u8> = tokens.iter().flat_map(|t| t.to_le_bytes()).collect();
+/// Deterministic per-lane prompt: a pure function of `(seed, lane)`.
+fn lane_prompt(seed: u64, lane: u64, len: usize, vocab: usize) -> Vec<u32> {
+    let mut rng = Rng::new(seed ^ 0x9e37_79b9 ^ lane.wrapping_mul(0x1000_0000_01b3));
+    (0..len).map(|_| rng.range(3, vocab.min(128)) as u32).collect()
+}
+
+/// Sequential sliding reference: one session at a time through
+/// [`NativeEngine::generate_greedy_sliding`].
+fn lanes_sequential(
+    mut engine: NativeEngine,
+    prompts: &[Vec<u32>],
+    max_new: usize,
+    page_tokens: usize,
+) -> Result<Vec<Vec<u32>>> {
+    let mut pool = if page_tokens > 0 {
+        engine.new_kv_pool_with(page_tokens)
+    } else {
+        engine.new_kv_pool()
+    };
+    let mut kv = pool.new_cache();
+    prompts
+        .iter()
+        .map(|p| engine.generate_greedy_sliding(&mut kv, &mut pool, p, max_new, &[]))
+        .collect()
+}
+
+/// The serving loop: every tick is one batched step across all live
+/// sessions through a real [`NativeBackend`].
+fn lanes_batched(
+    engine: NativeEngine,
+    prompts: &[Vec<u32>],
+    max_new: usize,
+    page_tokens: usize,
+) -> Result<Vec<Vec<u32>>> {
+    let lanes = prompts.len();
+    let mut backend = NativeBackend::from_engine(engine, vec![], lanes);
+    if page_tokens > 0 {
+        backend = backend.with_page_tokens(page_tokens);
+    }
+    let mut rows = prompts.to_vec();
+    let mut outs: Vec<Vec<u32>> = vec![Vec::new(); lanes];
+    let mut done = vec![false; lanes];
+    loop {
+        let live: Vec<(u64, &[u32])> = (0..lanes)
+            .filter(|i| !done[*i])
+            .map(|i| (i as u64 + 1, rows[i].as_slice()))
+            .collect();
+        if live.is_empty() {
+            break;
+        }
+        let ids: Vec<usize> = (0..lanes).filter(|i| !done[*i]).collect();
+        let step = backend.decode_step_sessions(&live)?;
+        for (i, tok) in ids.into_iter().zip(step) {
+            match tok {
+                Some(tok) => {
+                    outs[i].push(tok);
+                    rows[i].push(tok);
+                    if outs[i].len() >= max_new {
+                        done[i] = true;
+                        backend.end_session(i as u64 + 1);
+                    }
+                }
+                None => {
+                    done[i] = true;
+                    backend.end_session(i as u64 + 1);
+                }
+            }
+        }
+    }
+    Ok(outs)
+}
+
+/// The batched-decode smoke: `lanes` concurrent sliding-window sessions,
+/// either through a real [`NativeBackend`] (one `StepBatch` per tick —
+/// the serving loop) or, with `no_batch`, through the sequential sliding
+/// reference. Both print the same per-lane tokens and one hash over all
+/// lanes; `tools/ci.sh` pins the two hashes equal across invocations,
+/// and `--check` pins them equal in-process (batched ≡ sequential).
+#[allow(clippy::too_many_arguments)]
+fn decode_lanes(
+    artifacts: &Path,
+    pattern: Pattern,
+    mcfg: &MethodConfig,
+    seed: u64,
+    prompt_len: usize,
+    max_new: usize,
+    lanes: usize,
+    page_tokens: usize,
+    no_batch: bool,
+    dense_path: bool,
+    check: bool,
+) -> Result<()> {
+    let (model, sparsity, origin) = load_native_parts(artifacts, mcfg, seed)?;
+    let sparsity = sparsity.with_force_dense(dense_path);
+    let cfg = model.cfg.clone();
+    let prompts: Vec<Vec<u32>> =
+        (0..lanes as u64).map(|l| lane_prompt(seed, l, prompt_len, cfg.vocab)).collect();
+    let mode = if no_batch { "sequential" } else { "batched" };
+    println!(
+        "decode: {origin} model, pattern {pattern}, method {}, {lanes} lanes ({mode}), \
+         max_new {max_new}",
+        mcfg.id,
+    );
+
+    // With --check, run the OTHER path too (on a same-weights engine)
+    // and pin token identity in-process.
+    let other: Option<Vec<Vec<u32>>> = if check {
+        let twin = NativeEngine::new(model.clone(), sparsity.clone())?;
+        Some(if no_batch {
+            lanes_batched(twin, &prompts, max_new, page_tokens)?
+        } else {
+            lanes_sequential(twin, &prompts, max_new, page_tokens)?
+        })
+    } else {
+        None
+    };
+    let t0 = std::time::Instant::now();
+    let engine = NativeEngine::new(model, sparsity)?;
+    let outs: Vec<Vec<u32>> = if no_batch {
+        lanes_sequential(engine, &prompts, max_new, page_tokens)?
+    } else {
+        lanes_batched(engine, &prompts, max_new, page_tokens)?
+    };
+    if let Some(other) = other {
+        if other != outs {
+            bail!(
+                "batched and sequential sliding decode diverged:\n  {mode}: {outs:?}\n  \
+                 other: {other:?}"
+            );
+        }
+        println!("check: batched == sequential sliding decode ({lanes} lanes)");
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let total: usize = outs.iter().map(|o| o.len()).sum();
+    for (i, (p, o)) in prompts.iter().zip(&outs).enumerate() {
+        println!("lane {i}: prompt {p:?} -> tokens {o:?}");
+    }
+    println!(
+        "decoded {total} tokens across {lanes} lanes in {:.3}s ({:.1} tok/s, {mode})",
+        dt,
+        total as f64 / dt.max(1e-9),
+    );
+    println!("hash {:016x}", fnv64_lanes(&outs));
+    Ok(())
+}
+
+/// FNV-1a over all lanes' token streams (LE bytes, `0xffff_ffff` lane
+/// separators) — the determinism pin the CI smokes compare across runs
+/// and across the batched/sequential paths.
+fn fnv64_lanes(lanes: &[Vec<u32>]) -> u64 {
+    let mut bytes: Vec<u8> = Vec::new();
+    for tokens in lanes {
+        for t in tokens {
+            bytes.extend_from_slice(&t.to_le_bytes());
+        }
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+    }
     crate::util::prng::fnv1a64(&bytes)
 }
 
@@ -130,10 +310,15 @@ mod tests {
     use super::*;
 
     #[test]
-    fn fnv_is_order_sensitive() {
-        assert_ne!(fnv64(&[1, 2, 3]), fnv64(&[3, 2, 1]));
-        assert_eq!(fnv64(&[1, 2, 3]), fnv64(&[1, 2, 3]));
-        assert_ne!(fnv64(&[]), fnv64(&[0]));
+    fn fnv_is_order_and_lane_sensitive() {
+        assert_ne!(fnv64_lanes(&[vec![1, 2, 3]]), fnv64_lanes(&[vec![3, 2, 1]]));
+        assert_eq!(fnv64_lanes(&[vec![1, 2, 3]]), fnv64_lanes(&[vec![1, 2, 3]]));
+        assert_ne!(fnv64_lanes(&[]), fnv64_lanes(&[vec![]]));
+        // Lane boundaries matter: [1,2]+[3] != [1]+[2,3].
+        assert_ne!(
+            fnv64_lanes(&[vec![1, 2], vec![3]]),
+            fnv64_lanes(&[vec![1], vec![2, 3]])
+        );
     }
 
     #[test]
@@ -150,5 +335,28 @@ mod tests {
         .map(|s| s.to_string())
         .collect();
         cmd_decode(args).unwrap();
+    }
+
+    #[test]
+    fn batched_and_sequential_lanes_agree() {
+        // The CI smoke's property, in-process: --check makes decode_lanes
+        // run BOTH the batched backend loop and the sequential sliding
+        // loops and bail on any divergence.
+        let base: Vec<String> = [
+            "--artifacts", "/definitely/not/here",
+            "--seed", "11",
+            "--prompt-len", "5",
+            "--max-new", "8",
+            "--lanes", "3",
+            "--page-tokens", "8",
+            "--check",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        cmd_decode(base.clone()).unwrap();
+        let mut seq = base;
+        seq.push("--no-batch".into());
+        cmd_decode(seq).unwrap();
     }
 }

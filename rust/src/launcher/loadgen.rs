@@ -433,8 +433,10 @@ pub fn cmd_loadgen(rest: Vec<String>) -> Result<()> {
         "native" => BackendChoice::Native {
             dir: PathBuf::from(a.get("artifacts")),
             pattern: a.get("pattern"),
-            // The native engine realizes ACT/D-PTS/VAR; the loadgen
-            // default S-PTS is kernel-only, so default to ACT here.
+            // Without artifacts the native engine has no methodparams,
+            // so the loadgen default S-PTS cannot load its per-site eta
+            // vectors; default to ACT here (an explicit --method S-PTS
+            // works against a real artifacts dir).
             method: if a.given("method") { a.get("method") } else { "ACT".to_string() },
             seed: a.get_u64("seed")?,
             batch: a.get_usize("batch")?,

@@ -67,9 +67,12 @@ pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
     }
     let pattern = Pattern::parse(&a.get("pattern"))?;
     let backend_kind = a.get("backend");
-    // The serve-wide default method (S-PTS) is kernel-path-only; when the
-    // native backend is selected and --method was not given, fall back to
-    // ACT (an *explicit* S-PTS still errors loudly at startup). The
+    // The serve-wide default method (S-PTS) needs per-site calibration
+    // vectors, which the native backend only has when an artifacts
+    // methodparams store exists; when the native backend is selected and
+    // --method was not given, fall back to ACT so the artifact-free path
+    // still starts (an *explicit* S-PTS without artifacts errors loudly
+    // at startup, and runs natively when artifacts are present). The
     // banner and ping replies show the method actually served.
     let method_name = if backend_kind == "native" && !a.given("method") {
         "ACT".to_string()

@@ -274,8 +274,13 @@ impl PackedNM {
     /// row(r) · w.row(o)` — packed activations `[rows, cols]` times a
     /// dense `[w_rows, cols]` weight matrix transposed, the GEMM one
     /// decode step runs per sparsified site (`y = W · s(x)` with the
-    /// packed operand the activation row). Same `row_dot` kernel as
-    /// [`PackedNM::matvec_into`]; parallel over packed rows.
+    /// packed operand the activation rows — one per batched lane in
+    /// `NativeEngine::step_batch`). Same `row_dot` kernel as
+    /// [`PackedNM::matvec_into`]; parallel over packed-row groups, and
+    /// weight-row-major *within* a group so one weight row serves every
+    /// lane while hot (each output is the same ascending-column dot
+    /// regardless of iteration order, so single-row and batched calls
+    /// stay bitwise-equal).
     pub fn matmul_nt_into(&self, w: &Tensor, out: &mut [f32], threads: usize) {
         assert_eq!(w.cols(), self.cols, "matmul inner-dim mismatch");
         let w_rows = w.rows();
@@ -286,10 +291,12 @@ impl PackedNM {
         let threads = threads.max(1).min(self.rows);
         let rows_per_chunk = (self.rows + threads - 1) / threads;
         threadpool::par_chunks_mut(out, rows_per_chunk * w_rows, threads, |ci, chunk| {
-            for (i, orow) in chunk.chunks_exact_mut(w_rows).enumerate() {
-                let r = ci * rows_per_chunk + i;
-                for (o, y) in orow.iter_mut().enumerate() {
-                    *y = self.row_dot(r, w.row(o));
+            let base = ci * rows_per_chunk;
+            let group = chunk.len() / w_rows;
+            for o in 0..w_rows {
+                let wrow = w.row(o);
+                for i in 0..group {
+                    chunk[i * w_rows + o] = self.row_dot(base + i, wrow);
                 }
             }
         });

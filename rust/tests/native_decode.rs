@@ -2,8 +2,11 @@
 //! artifacts, no PJRT): KV-cached incremental decode must be
 //! token-identical to the full-context reference loop across patterns,
 //! prompt shapes and stop-token placements, and must survive every cache
-//! lifecycle edge — reset, truncation, LRU eviction, re-prefill — plus
-//! the artifacts-format round trip through `Coordinator`'s native path.
+//! lifecycle edge — reset, truncation, LRU eviction, re-prefill, paged
+//! sliding windows — plus the artifacts-format round trip through
+//! `Coordinator`'s native path (including per-site S-PTS methodparams).
+//! The batched `step_batch` twin of these properties lives in
+//! `rust/tests/step_batch.rs`.
 
 use nmsparse::coordinator::methods::MethodConfig;
 use nmsparse::coordinator::server::{NativeBackend, ReplicaBackend};
@@ -12,6 +15,7 @@ use nmsparse::engine::{EngineConfig, NativeEngine, NativeSparsity};
 use nmsparse::sparsity::Pattern;
 use nmsparse::util::miniprop::{forall_simple, Config};
 use nmsparse::util::prng::Rng;
+use nmsparse::util::tensor::{Tensor, TensorStore};
 
 fn test_cfg(max_seq: usize) -> EngineConfig {
     EngineConfig {
@@ -63,9 +67,11 @@ fn prop_kv_cached_decode_token_identical_to_full_context() {
             let mut e =
                 NativeEngine::synthetic(&test_cfg(32), *seed, NativeSparsity::act(*pattern))
                     .unwrap();
-            let mut kv = e.new_cache();
-            let cached = e.generate_greedy(&mut kv, prompt, *max_new, stops).unwrap();
-            let full = e.generate_greedy_full(&mut kv, prompt, *max_new, stops).unwrap();
+            let mut pool = e.new_kv_pool();
+            let mut kv = pool.new_cache();
+            let cached = e.generate_greedy(&mut kv, &mut pool, prompt, *max_new, stops).unwrap();
+            let full =
+                e.generate_greedy_full(&mut kv, &mut pool, prompt, *max_new, stops).unwrap();
             cached == full && !cached.is_empty() && cached.len() <= *max_new
         },
     );
@@ -84,12 +90,15 @@ fn prop_stop_token_placement_truncates_identically() {
             let mut e =
                 NativeEngine::synthetic(&test_cfg(32), *seed, NativeSparsity::act(pattern))
                     .unwrap();
-            let mut kv = e.new_cache();
+            let mut pool = e.new_kv_pool();
+            let mut kv = pool.new_cache();
             let prompt: Vec<u32> = (0..*plen).map(|i| (i * 7 % 48) as u32).collect();
-            let free = e.generate_greedy(&mut kv, &prompt, 8, &[]).unwrap();
+            let free = e.generate_greedy(&mut kv, &mut pool, &prompt, 8, &[]).unwrap();
             for (i, stop) in free.iter().enumerate() {
-                let cached = e.generate_greedy(&mut kv, &prompt, 8, &[*stop]).unwrap();
-                let full = e.generate_greedy_full(&mut kv, &prompt, 8, &[*stop]).unwrap();
+                let cached =
+                    e.generate_greedy(&mut kv, &mut pool, &prompt, 8, &[*stop]).unwrap();
+                let full =
+                    e.generate_greedy_full(&mut kv, &mut pool, &prompt, 8, &[*stop]).unwrap();
                 if cached != full {
                     return false;
                 }
@@ -110,45 +119,53 @@ fn cache_reuse_and_reset_are_stateless() {
     // fresh caches exactly.
     let pattern = Pattern::NM { n: 2, m: 4 };
     let mut e = NativeEngine::synthetic(&test_cfg(32), 11, NativeSparsity::act(pattern)).unwrap();
-    let mut shared = e.new_cache();
+    let mut pool = e.new_kv_pool();
+    let mut shared = pool.new_cache();
     let prompts: Vec<Vec<u32>> = vec![vec![1, 2, 3], vec![40, 41], vec![7; 10], vec![0]];
     let mut first = Vec::new();
     for p in &prompts {
-        first.push(e.generate_greedy(&mut shared, p, 6, &[]).unwrap());
+        first.push(e.generate_greedy(&mut shared, &mut pool, p, 6, &[]).unwrap());
     }
     for (p, want) in prompts.iter().zip(&first) {
-        let mut fresh = e.new_cache();
-        assert_eq!(&e.generate_greedy(&mut fresh, p, 6, &[]).unwrap(), want);
+        let mut fresh = pool.new_cache();
+        assert_eq!(&e.generate_greedy(&mut fresh, &mut pool, p, 6, &[]).unwrap(), want);
+        fresh.reset(&mut pool);
     }
 }
 
 #[test]
 fn truncate_rolls_back_to_identical_logits() {
     // Truncating the cache to a prefix and re-stepping must be
-    // indistinguishable from prefilling that prefix fresh.
+    // indistinguishable from prefilling that prefix fresh — including
+    // cuts that release whole pages and cuts inside a page.
     let pattern = Pattern::NM { n: 8, m: 16 };
     let mut e = NativeEngine::synthetic(&test_cfg(32), 13, NativeSparsity::act(pattern)).unwrap();
+    let mut pool = e.new_kv_pool_with(4);
     let row: Vec<u32> = (0..20).map(|i| (i * 5 % 48) as u32).collect();
-    let mut kv = e.new_cache();
-    e.prefill(&mut kv, &row).unwrap();
-    for cut in [1usize, 7, 19] {
-        kv.truncate(cut);
-        e.step(&mut kv, row[cut]).unwrap();
+    let mut kv = pool.new_cache();
+    e.prefill(&mut kv, &mut pool, &row).unwrap();
+    for cut in [1usize, 4, 7, 19] {
+        kv.truncate(&mut pool, cut);
+        assert!(kv.pages_held() <= cut.div_ceil(4).max(1), "pages recycled at cut={cut}");
+        e.step(&mut kv, &mut pool, row[cut]).unwrap();
         let after_truncate: Vec<u32> = e.logits().iter().map(|v| v.to_bits()).collect();
-        let mut fresh = e.new_cache();
-        e.prefill(&mut fresh, &row[..cut + 1]).unwrap();
+        let mut fresh = pool.new_cache();
+        e.prefill(&mut fresh, &mut pool, &row[..cut + 1]).unwrap();
         let from_fresh: Vec<u32> = e.logits().iter().map(|v| v.to_bits()).collect();
         assert_eq!(after_truncate, from_fresh, "cut={cut}");
+        fresh.reset(&mut pool);
         // Restore for the next cut.
-        kv.reset();
-        e.prefill(&mut kv, &row).unwrap();
+        kv.reset(&mut pool);
+        e.prefill(&mut kv, &mut pool, &row).unwrap();
     }
 }
 
 #[test]
 fn session_eviction_under_cap_one_is_token_identical() {
-    // Two interleaved sessions on a cap-1 KV pool force an eviction and
-    // a full re-prefill on every step — tokens must not change.
+    // Two interleaved sessions on a cap-1 slot pool force an eviction and
+    // a full window re-prefill on every step — tokens must not change.
+    // This is the regression pin for the PR 4 eviction corner: the
+    // backend reconciles anchors internally, no caller-side handling.
     let cfg = test_cfg(32);
     let pattern = Pattern::NM { n: 8, m: 16 };
     let stop: Vec<u32> = vec![2];
@@ -157,12 +174,13 @@ fn session_eviction_under_cap_one_is_token_identical() {
             .unwrap()
             .with_session_cap(1);
     let mut engine = NativeEngine::synthetic(&cfg, 5, NativeSparsity::act(pattern)).unwrap();
-    let mut kv = engine.new_cache();
+    let mut pool = engine.new_kv_pool();
+    let mut kv = pool.new_cache();
     let prompts: [Vec<u32>; 2] = [vec![3, 7, 11], vec![40, 1, 9, 9]];
     let max_new = 8;
     let want: Vec<Vec<u32>> = prompts
         .iter()
-        .map(|p| engine.generate_greedy(&mut kv, p, max_new, &stop).unwrap())
+        .map(|p| engine.generate_greedy_sliding(&mut kv, &mut pool, p, max_new, &stop).unwrap())
         .collect();
     // Drive both sessions a step at a time through the backend, exactly
     // like the replica worker would.
@@ -194,21 +212,32 @@ fn session_eviction_under_cap_one_is_token_identical() {
     }
     assert_eq!(got[0], want[0]);
     assert_eq!(got[1], want[1]);
+    assert!(backend.engine().stats().steps > 0);
 }
 
 #[test]
 fn coordinator_native_path_roundtrips_through_artifacts_format() {
     // Fabricate an artifacts directory from a synthetic model (the exact
     // files `aot.py` writes: io_manifest.json + ckpt.{bin,json} +
-    // methodparams.{bin,json}) and pin Coordinator::generate_refs on the
-    // native path against the bare engine. No PJRT is touched.
+    // methodparams.{bin,json}, including per-site S-PTS eta vectors) and
+    // pin Coordinator::generate_refs on the native path against the bare
+    // engine. No PJRT is touched.
     let cfg = test_cfg(24);
     let model = nmsparse::engine::NativeModel::synthetic(&cfg, 21);
     let dir = std::env::temp_dir().join(format!("nmsparse-native-art-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
     model.to_store().save(&dir.join("ckpt")).unwrap();
-    let mut mp = nmsparse::util::tensor::TensorStore::new();
-    mp.insert("placeholder", nmsparse::util::tensor::Tensor::scalar(0.0));
+    let mut mp = TensorStore::new();
+    mp.insert("placeholder", Tensor::scalar(0.0));
+    // Per-site S-PTS eta vectors (what calibrate.py's spts_etas emits):
+    // deterministic small shifts, one per (layer, site), site-width wide.
+    for l in 0..cfg.n_layers {
+        for site in nmsparse::engine::SITES {
+            let din = cfg.site_in_dim(site);
+            let eta: Vec<f32> = (0..din).map(|i| ((i % 5) as f32 - 2.0) * 0.25).collect();
+            mp.insert(&format!("spts_eta.l{l}.{site}"), Tensor::from_vec(&[din], eta));
+        }
+    }
     mp.save(&dir.join("methodparams")).unwrap();
     let manifest = format!(
         r#"{{
@@ -231,47 +260,110 @@ fn coordinator_native_path_roundtrips_through_artifacts_format() {
     let stop = vec![2u32];
     let got = coord.generate(&mcfg, &prompts, 6, &stop).unwrap();
 
-    let mut engine = NativeEngine::new(model, NativeSparsity::act(pattern)).unwrap();
-    let mut kv = engine.new_cache();
+    let mut engine = NativeEngine::new(model.clone(), NativeSparsity::act(pattern)).unwrap();
+    let mut pool = engine.new_kv_pool();
+    let mut kv = pool.new_cache();
     for (p, g) in prompts.iter().zip(&got) {
-        let want = engine.generate_greedy(&mut kv, p, 6, &stop).unwrap();
+        let want = engine.generate_greedy(&mut kv, &mut pool, p, 6, &stop).unwrap();
         assert_eq!(g, &want, "prompt {p:?}");
     }
     assert!(coord.stats.tokens_generated() > 0);
     assert!(coord.stats.forwards() > 0);
 
     // The serving backend loads the same directory as real artifacts.
-    let backend = NativeBackend::open(&dir, pattern, "ACT", stop, 4, 0).unwrap();
+    let backend = NativeBackend::open(&dir, pattern, "ACT", stop.clone(), 4, 0).unwrap();
     assert_eq!(backend.origin, "artifacts");
     assert_eq!(backend.engine().config(), &cfg);
 
-    // Methods the native engine cannot realize fail loudly, not silently.
+    // Calibrated S-PTS now runs natively: per-site eta vectors load from
+    // the methodparams store and shift selection on every site.
     let spts = MethodConfig::by_name("S-PTS", pattern).unwrap();
-    assert!(coord.pool.native_engine(&spts).is_err());
+    let native_spts = coord.pool.native_engine(&spts).unwrap();
+    {
+        let mut e = native_spts.borrow_mut();
+        assert!(e.sparsity().is_per_site());
+        assert!(!e.uses_packed(), "eta-shifted pipelines are not selection-only");
+        // And it decodes: tokens match a hand-built per-site engine.
+        let mp = TensorStore::load(&dir.join("methodparams")).unwrap();
+        let sparsity = NativeSparsity::from_method_with_params(&spts, &mp, &cfg).unwrap();
+        let mut twin = NativeEngine::new(model.clone(), sparsity).unwrap();
+        let mut tp = twin.new_kv_pool();
+        let mut tkv = tp.new_cache();
+        let want = twin.generate_greedy(&mut tkv, &mut tp, &[1, 2, 3], 5, &[]).unwrap();
+        let mut ep = e.new_kv_pool();
+        let mut ekv = ep.new_cache();
+        let got = e.generate_greedy(&mut ekv, &mut ep, &[1, 2, 3], 5, &[]).unwrap();
+        assert_eq!(got, want);
+        // S-PTS actually changes the generation vs plain ACT somewhere
+        // (same seeds, shifted selection) — not a silent ACT downgrade.
+        let spts_differs = {
+            let mut any = false;
+            for p in 0..8u32 {
+                let a = engine
+                    .generate_greedy(&mut kv, &mut pool, &[p + 1, 2, 3], 6, &[])
+                    .unwrap();
+                let mut tkv2 = tp.new_cache();
+                let b = twin.generate_greedy(&mut tkv2, &mut tp, &[p + 1, 2, 3], 6, &[]).unwrap();
+                tkv2.reset(&mut tp);
+                if a != b {
+                    any = true;
+                    break;
+                }
+            }
+            any
+        };
+        assert!(spts_differs, "per-site eta had no effect on any probe prompt");
+    }
+
+    // Methods whose vectors are missing from the store still fail
+    // loudly, never silently: L-PTS wants `lpts_eta.8_16.*` entries.
+    let lpts = MethodConfig::by_name("L-PTS", pattern).unwrap();
+    assert!(coord.pool.native_engine(&lpts).is_err());
+    // And without any methodparams, S-PTS is rejected up front.
+    assert!(NativeSparsity::from_method(&spts).is_err());
 
     std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
-fn context_exhaustion_ends_sessions_cleanly() {
+fn context_exhausted_sessions_slide_instead_of_ending() {
+    // The serving rule: a session at the context edge drops its oldest
+    // page block and keeps generating. The backend must match the
+    // sequential sliding reference token-for-token, and never end the
+    // session early.
     let cfg = test_cfg(16);
     let pattern = Pattern::NM { n: 2, m: 4 };
-    let mut backend =
-        NativeBackend::synthetic(&cfg, 9, NativeSparsity::act(pattern), vec![], 4).unwrap();
+    let page_tokens = 4usize;
+    let mut backend = NativeBackend::synthetic(&cfg, 9, NativeSparsity::act(pattern), vec![], 4)
+        .unwrap()
+        .with_page_tokens(page_tokens);
     let mut engine = NativeEngine::synthetic(&cfg, 9, NativeSparsity::act(pattern)).unwrap();
-    let mut kv = engine.new_cache();
-    // A fresh prompt at/past the context edge gets exactly the one
-    // budget-rule token `generate_greedy` emits (left-cropped), and the
-    // *next* step ends the session with None.
-    for (id, len) in [(1u64, 17usize), (2, 16)] {
+    let mut pool = engine.new_kv_pool_with(page_tokens);
+    let mut kv = pool.new_cache();
+    let max_new = 10;
+    // Prompts below, at, and past the context edge all keep generating
+    // to the budget.
+    for (id, len) in [(1u64, 12usize), (2, 16), (3, 19)] {
         let prompt: Vec<u32> = (0..len as u32).map(|i| i % 40).collect();
-        let want = engine.generate_greedy(&mut kv, &prompt, 8, &[]).unwrap();
-        assert_eq!(want.len(), 1, "budget rule emits exactly one token");
-        let outs = backend.decode_step_sessions(&[(id, prompt.as_slice())]).unwrap();
-        assert_eq!(outs, vec![Some(want[0])], "len={len}");
-        let mut grown = prompt.clone();
-        grown.push(want[0]);
-        let outs = backend.decode_step_sessions(&[(id, grown.as_slice())]).unwrap();
-        assert_eq!(outs, vec![None], "len={len}");
+        let want =
+            engine.generate_greedy_sliding(&mut kv, &mut pool, &prompt, max_new, &[]).unwrap();
+        assert_eq!(want.len(), max_new, "sliding keeps the session alive (len={len})");
+        let mut row = prompt.clone();
+        let mut got = Vec::new();
+        for _ in 0..max_new {
+            let outs = backend.decode_step_sessions(&[(id, row.as_slice())]).unwrap();
+            let tok = outs[0].expect("sliding sessions never end on context");
+            got.push(tok);
+            row.push(tok);
+        }
+        assert_eq!(got, want, "len={len}");
+        backend.end_session(id);
     }
+    // Peak KV stays bounded by the window, not the ever-growing row.
+    let window_pages = cfg.max_seq.div_ceil(page_tokens);
+    assert!(
+        backend.pages().peak_pages() <= window_pages + 1,
+        "peak {} pages vs window {window_pages}",
+        backend.pages().peak_pages()
+    );
 }

@@ -93,9 +93,9 @@ impl ReplicaBackend for GatedBackend {
         Ok(rows.iter().map(|_| 1.0).collect())
     }
 
-    fn decode_step(&mut self, prompts: &[&[u32]]) -> anyhow::Result<Vec<Option<u32>>> {
+    fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> anyhow::Result<Vec<Option<u32>>> {
         self.gate.recv().ok();
-        Ok(prompts.iter().map(|_| Some(SyntheticBackend::STOP)).collect())
+        Ok(rows.iter().map(|_| Some(SyntheticBackend::STOP)).collect())
     }
 
     fn stop_tokens(&self) -> Vec<u32> {
@@ -169,10 +169,10 @@ impl ReplicaBackend for NotifyGatedBackend {
         Ok(rows.iter().map(|_| 1.0).collect())
     }
 
-    fn decode_step(&mut self, prompts: &[&[u32]]) -> anyhow::Result<Vec<Option<u32>>> {
+    fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> anyhow::Result<Vec<Option<u32>>> {
         self.entered.send(()).ok();
         self.gate.recv().ok();
-        Ok(prompts.iter().map(|_| Some(SyntheticBackend::STOP)).collect())
+        Ok(rows.iter().map(|_| Some(SyntheticBackend::STOP)).collect())
     }
 
     fn stop_tokens(&self) -> Vec<u32> {

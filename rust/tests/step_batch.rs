@@ -1,0 +1,392 @@
+//! Property suite for the batched session-stepping API and the paged KV
+//! substrate it runs on:
+//!
+//! - `step_batch` over K concurrent sessions is **bitwise
+//!   logits-identical** to K sequential per-session `step` loops, across
+//!   patterns (2:4 / 8:16 / 16:32 / dense), ragged lane lengths,
+//!   mid-batch session completion, and page-boundary crossings;
+//! - the paged-KV lifecycle (reuse / truncate / evict) against a dense
+//!   mirror, mirroring `native_decode.rs`'s cache-lifecycle pins;
+//! - peak page-pool bytes track live context, not `sessions × max_seq`;
+//! - the batched serving backend (`decode_step_sessions` chunked to the
+//!   session cap) matches the sequential sliding reference under
+//!   interleaving and eviction.
+
+use nmsparse::coordinator::server::{NativeBackend, ReplicaBackend};
+use nmsparse::engine::{
+    window_start, EngineConfig, NativeEngine, NativeSparsity, SessionKvPool, StepBatch,
+};
+use nmsparse::sparsity::Pattern;
+use nmsparse::util::miniprop::{forall_simple, Config};
+use nmsparse::util::prng::Rng;
+
+fn test_cfg(max_seq: usize) -> EngineConfig {
+    EngineConfig {
+        vocab: 48,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        ffn: 64,
+        max_seq,
+    }
+}
+
+#[test]
+fn prop_step_batch_bitwise_identical_to_sequential_steps() {
+    // Random lane counts, patterns, page sizes and ragged per-lane
+    // prompts; lanes complete mid-run (drop out at different steps).
+    // After every batched step, each live lane's logits must equal the
+    // sequential engine's bit-for-bit.
+    let cfg = Config { cases: 18, ..Config::default() };
+    let pats = [
+        Pattern::Dense,
+        Pattern::NM { n: 2, m: 4 },
+        Pattern::NM { n: 8, m: 16 },
+        Pattern::NM { n: 16, m: 32 },
+    ];
+    forall_simple(
+        &cfg,
+        |rng: &mut Rng| {
+            let pattern = pats[rng.range(0, pats.len())];
+            let seed = rng.next_u64();
+            let lanes = rng.range(1, 6);
+            let page_tokens = rng.range(1, 7); // tiny pages: boundary-heavy
+            // Ragged prompts + ragged step budgets => mid-batch dropout.
+            let prompts: Vec<Vec<u32>> = (0..lanes)
+                .map(|_| {
+                    let len = rng.range(1, 9);
+                    (0..len).map(|_| rng.range(0, 48) as u32).collect()
+                })
+                .collect();
+            let budgets: Vec<usize> = (0..lanes).map(|_| rng.range(1, 10)).collect();
+            (pattern, seed, page_tokens, prompts, budgets)
+        },
+        |(pattern, seed, page_tokens, prompts, budgets)| {
+            let ecfg = test_cfg(24);
+            let mk = || {
+                NativeEngine::synthetic(&ecfg, *seed, NativeSparsity::act(*pattern)).unwrap()
+            };
+            let lanes = prompts.len();
+            // Batched world: one engine, one SessionKvPool, one plan.
+            let mut be = mk();
+            let mut bpool = be.new_kv_pool_with(*page_tokens);
+            let mut sessions = SessionKvPool::new(lanes);
+            let mut batch = StepBatch::new();
+            let mut brows: Vec<Vec<u32>> = prompts.clone();
+            // Sequential world: same-seed engine, per-lane caches.
+            let mut se = mk();
+            let mut spool = se.new_kv_pool_with(*page_tokens);
+            let mut srows: Vec<Vec<u32>> = prompts.clone();
+            let mut skvs: Vec<_> = (0..lanes).map(|_| spool.new_cache()).collect();
+            // Total steps per lane: prefill the prompt, then decode to
+            // the lane's budget; lanes drop out as budgets exhaust.
+            let total: Vec<usize> =
+                prompts.iter().zip(budgets).map(|(p, b)| p.len() + b - 1).collect();
+            let mut fed = vec![0usize; lanes];
+            for _ in 0..*total.iter().max().unwrap() {
+                batch.clear();
+                let mut stepped: Vec<usize> = Vec::new();
+                for i in 0..lanes {
+                    if fed[i] < total[i] {
+                        batch.push(i as u64 + 1, brows[i][fed[i]]);
+                        stepped.push(i);
+                    }
+                }
+                if batch.is_empty() {
+                    break;
+                }
+                for i in 0..lanes {
+                    sessions.get_or_create(&mut bpool, i as u64 + 1);
+                }
+                be.step_batch(&mut batch, &mut sessions, &mut bpool).unwrap();
+                for (lane, &i) in stepped.iter().enumerate() {
+                    // Sequential twin steps the same token.
+                    se.step(&mut skvs[i], &mut spool, srows[i][fed[i]]).unwrap();
+                    let want: Vec<u32> = se.logits().iter().map(|v| v.to_bits()).collect();
+                    let got: Vec<u32> = batch.logits(lane).iter().map(|v| v.to_bits()).collect();
+                    if got != want {
+                        return false;
+                    }
+                    fed[i] += 1;
+                    // Past the prompt, extend both rows greedily (same
+                    // logits => same argmax).
+                    if fed[i] == brows[i].len() && fed[i] < total[i] {
+                        let tok = batch.argmax(lane);
+                        brows[i].push(tok);
+                        srows[i].push(tok);
+                    }
+                }
+            }
+            fed.iter().zip(&total).all(|(f, t)| f == t)
+        },
+    );
+}
+
+#[test]
+fn step_batch_validates_lanes() {
+    let ecfg = test_cfg(8);
+    let mut e = NativeEngine::synthetic(&ecfg, 3, NativeSparsity::act(Pattern::NM { n: 2, m: 4 }))
+        .unwrap();
+    let mut pool = e.new_kv_pool_with(2);
+    let mut sessions = SessionKvPool::new(4);
+    let mut batch = StepBatch::new();
+    // Empty batch is a no-op.
+    e.step_batch(&mut batch, &mut sessions, &mut pool).unwrap();
+    // Non-resident session errors.
+    batch.push(7, 1);
+    assert!(e.step_batch(&mut batch, &mut sessions, &mut pool).is_err());
+    sessions.get_or_create(&mut pool, 7);
+    e.step_batch(&mut batch, &mut sessions, &mut pool).unwrap();
+    // Duplicate session ids error.
+    batch.clear();
+    batch.push(7, 1);
+    batch.push(7, 2);
+    assert!(e.step_batch(&mut batch, &mut sessions, &mut pool).is_err());
+    // Out-of-vocab token errors.
+    batch.clear();
+    batch.push(7, 999);
+    assert!(e.step_batch(&mut batch, &mut sessions, &mut pool).is_err());
+    // Full cache errors (max_seq 8).
+    batch.clear();
+    batch.push(7, 1);
+    for _ in 0..7 {
+        e.step_batch(&mut batch, &mut sessions, &mut pool).unwrap();
+    }
+    assert!(sessions.get_mut(7).unwrap().kv.is_full());
+    assert!(e.step_batch(&mut batch, &mut sessions, &mut pool).is_err());
+}
+
+#[test]
+fn prop_paged_kv_lifecycle_against_dense_mirror() {
+    // Random interleavings of step/truncate/reset across two cache
+    // handles sharing one pool: logits after every operation sequence
+    // must match a fresh-prefill reference, and page accounting must
+    // never leak.
+    let cfg = Config { cases: 16, ..Config::default() };
+    forall_simple(
+        &cfg,
+        |rng: &mut Rng| {
+            let seed = rng.next_u64();
+            let page_tokens = rng.range(1, 5);
+            let ops: Vec<(u8, usize)> = (0..rng.range(3, 12))
+                .map(|_| (rng.range(0, 3) as u8, rng.range(0, 10)))
+                .collect();
+            (seed, page_tokens, ops)
+        },
+        |(seed, page_tokens, ops)| {
+            let ecfg = test_cfg(12);
+            let pattern = Pattern::NM { n: 8, m: 16 };
+            let mut e = NativeEngine::synthetic(&ecfg, *seed, NativeSparsity::act(pattern))
+                .unwrap();
+            let mut pool = e.new_kv_pool_with(*page_tokens);
+            let mut kvs = [pool.new_cache(), pool.new_cache()];
+            // The dense mirror: the token prefix each cache must be
+            // equivalent to.
+            let mut mirror: [Vec<u32>; 2] = [Vec::new(), Vec::new()];
+            for (i, (op, arg)) in ops.iter().enumerate() {
+                let which = i % 2;
+                match op {
+                    0 => {
+                        // Step one token (skip when full).
+                        if mirror[which].len() < ecfg.max_seq {
+                            let tok = (*arg % ecfg.vocab) as u32;
+                            e.step(&mut kvs[which], &mut pool, tok).unwrap();
+                            mirror[which].push(tok);
+                        }
+                    }
+                    1 => {
+                        let cut = *arg % (mirror[which].len() + 1);
+                        kvs[which].truncate(&mut pool, cut);
+                        mirror[which].truncate(cut);
+                    }
+                    _ => {
+                        kvs[which].reset(&mut pool);
+                        mirror[which].clear();
+                    }
+                }
+                // Invariants: length sync + page accounting.
+                if kvs[which].len() != mirror[which].len() {
+                    return false;
+                }
+                let want_pages = mirror[which].len().div_ceil(*page_tokens);
+                if kvs[which].pages_held() < want_pages {
+                    return false;
+                }
+                let held: usize = kvs.iter().map(|k| k.pages_held()).sum();
+                if pool.outstanding_pages() != held {
+                    return false;
+                }
+            }
+            // Equivalence: stepping one more token on the survivor must
+            // match a fresh prefill of mirror + token.
+            for which in 0..2 {
+                if mirror[which].len() >= ecfg.max_seq {
+                    continue;
+                }
+                e.step(&mut kvs[which], &mut pool, 5).unwrap();
+                let got: Vec<u32> = e.logits().iter().map(|v| v.to_bits()).collect();
+                let mut fresh = pool.new_cache();
+                let mut row = mirror[which].clone();
+                row.push(5);
+                e.prefill(&mut fresh, &mut pool, &row).unwrap();
+                let want: Vec<u32> = e.logits().iter().map(|v| v.to_bits()).collect();
+                fresh.reset(&mut pool);
+                kvs[which].truncate(&mut pool, mirror[which].len());
+                if got != want {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn peak_kv_bytes_track_live_context_not_session_count() {
+    // The acceptance criterion: many short sessions must not pin
+    // sessions × max_seq bytes. 12 sessions × 4-token contexts on a
+    // max_seq-64 engine: peak paged bytes stay far below the pinned
+    // equivalent.
+    let ecfg = EngineConfig::tiny(); // max_seq 64
+    let pattern = Pattern::NM { n: 8, m: 16 };
+    let sessions_n = 12usize;
+    let mut backend =
+        NativeBackend::synthetic(&ecfg, 17, NativeSparsity::act(pattern), vec![], sessions_n)
+            .unwrap()
+            .with_page_tokens(8);
+    let rows: Vec<Vec<u32>> = (0..sessions_n)
+        .map(|i| (0..4).map(|t| ((i * 7 + t) % 40) as u32).collect())
+        .collect();
+    let live: Vec<(u64, &[u32])> =
+        rows.iter().enumerate().map(|(i, r)| (i as u64 + 1, r.as_slice())).collect();
+    let outs = backend.decode_step_sessions(&live).unwrap();
+    assert!(outs.iter().all(|o| o.is_some()));
+    let pages = backend.pages();
+    // 4 fed positions per session => 1 page of 8 each; the pinned
+    // design held ceil(64/8) = 8 pages per session.
+    let paged_peak = pages.peak_bytes();
+    let pinned = sessions_n * ecfg.max_seq.div_ceil(8) * pages.page_bytes();
+    assert!(
+        paged_peak * 4 <= pinned,
+        "peak {paged_peak} bytes not ≪ pinned {pinned} bytes"
+    );
+    // And the pool actually recycles: ending sessions returns every page.
+    for i in 0..sessions_n {
+        backend.end_session(i as u64 + 1);
+    }
+    assert_eq!(backend.pages().outstanding_pages(), 0);
+}
+
+#[test]
+fn prop_batched_backend_matches_sliding_reference_under_eviction() {
+    // The serving-path property: random session caps (forcing chunked
+    // batches + LRU eviction), page sizes, ragged prompts and budgets —
+    // the batched backend's per-session outputs must equal the
+    // sequential sliding reference, even as rows outgrow the context.
+    let cfg = Config { cases: 12, ..Config::default() };
+    forall_simple(
+        &cfg,
+        |rng: &mut Rng| {
+            let seed = rng.next_u64();
+            let lanes = rng.range(2, 5);
+            let cap = rng.range(1, lanes + 2);
+            let page_tokens = rng.range(2, 6);
+            let prompts: Vec<Vec<u32>> = (0..lanes)
+                .map(|_| {
+                    let len = rng.range(1, 20); // may exceed max_seq 16
+                    (0..len).map(|_| rng.range(0, 48) as u32).collect()
+                })
+                .collect();
+            let max_new = rng.range(2, 8);
+            (seed, cap, page_tokens, prompts, max_new)
+        },
+        |(seed, cap, page_tokens, prompts, max_new)| {
+            let ecfg = test_cfg(16);
+            let pattern = Pattern::NM { n: 8, m: 16 };
+            let lanes = prompts.len();
+            let mut backend =
+                NativeBackend::synthetic(&ecfg, *seed, NativeSparsity::act(pattern), vec![], 8)
+                    .unwrap()
+                    .with_session_cap(*cap)
+                    .with_page_tokens(*page_tokens);
+            let mut engine =
+                NativeEngine::synthetic(&ecfg, *seed, NativeSparsity::act(pattern)).unwrap();
+            let mut pool = engine.new_kv_pool_with(*page_tokens);
+            let mut kv = pool.new_cache();
+            let want: Vec<Vec<u32>> = prompts
+                .iter()
+                .map(|p| {
+                    engine.generate_greedy_sliding(&mut kv, &mut pool, p, *max_new, &[]).unwrap()
+                })
+                .collect();
+            let mut rows = prompts.clone();
+            let mut got: Vec<Vec<u32>> = vec![Vec::new(); lanes];
+            let mut done = vec![false; lanes];
+            loop {
+                let ids: Vec<usize> = (0..lanes).filter(|i| !done[*i]).collect();
+                if ids.is_empty() {
+                    break;
+                }
+                let live: Vec<(u64, &[u32])> =
+                    ids.iter().map(|i| (*i as u64 + 1, rows[*i].as_slice())).collect();
+                let outs = backend.decode_step_sessions(&live).unwrap();
+                for (i, out) in ids.into_iter().zip(outs) {
+                    let Some(tok) = out else { return false };
+                    got[i].push(tok);
+                    rows[i].push(tok);
+                    if got[i].len() >= *max_new {
+                        done[i] = true;
+                    }
+                }
+            }
+            got == want
+        },
+    );
+}
+
+#[test]
+fn re_ticking_an_unchanged_row_re_emits_instead_of_ending() {
+    // A caller that repeats a tick without appending the emitted token
+    // (idempotent retry) must get the same token again — never a
+    // session-ending None. The reconcile rebuilds the window and
+    // re-emits; the incremental path still applies once the row grows.
+    let ecfg = test_cfg(16);
+    let pattern = Pattern::NM { n: 8, m: 16 };
+    let mut backend = NativeBackend::synthetic(&ecfg, 23, NativeSparsity::act(pattern), vec![], 4)
+        .unwrap()
+        .with_page_tokens(4);
+    for len in [3usize, 16, 21] {
+        let id = len as u64;
+        let row: Vec<u32> = (0..len as u32).map(|i| i % 40).collect();
+        let first = backend.decode_step_sessions(&[(id, row.as_slice())]).unwrap()[0];
+        let again = backend.decode_step_sessions(&[(id, row.as_slice())]).unwrap()[0];
+        assert_eq!(first, again, "len={len}");
+        assert!(first.is_some(), "len={len}");
+        // Normal continuation after the re-tick: one incremental step.
+        let mut grown = row.clone();
+        grown.push(first.unwrap());
+        let steps_before = backend.engine().stats().steps;
+        let next = backend.decode_step_sessions(&[(id, grown.as_slice())]).unwrap()[0];
+        assert!(next.is_some(), "len={len}");
+        let fed = backend.engine().stats().steps - steps_before;
+        if grown.len() <= ecfg.max_seq {
+            assert_eq!(fed, 1, "len={len}: incremental path lost after re-tick");
+        }
+        backend.end_session(id);
+    }
+}
+
+#[test]
+fn window_rule_is_stateless_and_page_aligned() {
+    for (row_len, max_seq, pt, want) in [
+        (5usize, 16usize, 4usize, 0usize),
+        (16, 16, 4, 0),
+        (17, 16, 4, 4),
+        (20, 16, 4, 4),
+        (21, 16, 4, 8),
+        (17, 16, 1, 1),
+        (40, 16, 16, 32),
+    ] {
+        assert_eq!(window_start(row_len, max_seq, pt), want, "({row_len},{max_seq},{pt})");
+    }
+}

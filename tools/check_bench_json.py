@@ -10,6 +10,7 @@ Three emitters write these files (see DESIGN.md §3):
   BENCH_serving_sweep.json
 - rust/benches/decode.rs    -> BENCH_decode.json (native KV-cached decode
   engine: step cost vs context for the cached and full-context loops,
+  batched step_batch vs sequential per-session tok/s per lane count,
   measured packed-vs-dense activation bytes)
 
 `nmsparse table table6`/`table serving` and `examples/hw_breakeven.rs`
@@ -209,6 +210,7 @@ def check_decode(doc, path):
         bad |= require(doc, key, (int, float), path, "top level")
     bad |= require(doc, "model", dict, path, "top level")
     bad |= require(doc, "contexts", list, path, "top level")
+    bad |= require(doc, "batched", list, path, "top level")
     if bad:
         return bad
     for key in ("vocab", "d_model", "n_layers", "ffn", "max_seq"):
@@ -238,6 +240,32 @@ def check_decode(doc, path):
                          f"paying off")
     if doc["prefill_tokens_per_sec"] <= 0 or doc["decode_tokens_per_sec"] <= 0:
         bad |= err(path, "non-positive tokens/sec")
+    # Batched session stepping: one StepBatch across K lanes vs K
+    # sequential per-session steps. Batch sizes strictly increase, and
+    # batching must actually pay at batch >= 4 (the amortization the
+    # batched API exists for).
+    if not doc["batched"]:
+        return err(path, "'batched' is empty — the bench always emits lane rows")
+    prev_batch = 0
+    for i, b in enumerate(doc["batched"]):
+        ctx = f"batched[{i}]"
+        if not isinstance(b, dict):
+            return err(path, f"{ctx} is not an object")
+        for key in ("batch", "batched_tokens_per_sec", "sequential_tokens_per_sec"):
+            bad |= require(b, key, (int, float), path, ctx)
+        if bad:
+            return bad
+        if b["batch"] <= prev_batch:
+            bad |= err(path, f"{ctx}: batch sizes must be strictly increasing")
+        prev_batch = b["batch"]
+        if b["batched_tokens_per_sec"] <= 0 or b["sequential_tokens_per_sec"] <= 0:
+            bad |= err(path, f"{ctx}: non-positive tokens/sec")
+        elif b["batch"] >= 4 and \
+                b["batched_tokens_per_sec"] < b["sequential_tokens_per_sec"]:
+            bad |= err(path, f"{ctx}: batched decode ({b['batched_tokens_per_sec']}"
+                             f" tok/s) slower than sequential"
+                             f" ({b['sequential_tokens_per_sec']} tok/s) at batch"
+                             f" {b['batch']} — step_batch not amortizing")
     # A sparse pattern must actually shrink the moved activation bytes.
     if doc["pattern"] != "dense" and \
             doc["packed_bytes_per_step"] >= doc["dense_bytes_per_step"]:

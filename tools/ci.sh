@@ -44,6 +44,23 @@ if [ -z "$H1" ] || [ "$H1" != "$H2" ]; then
   exit 1
 fi
 echo "ci: native decode smoke OK ($H1)"
+# Batched-decode smoke: 4 concurrent sliding-window sessions through the
+# real NativeBackend (one StepBatch per tick) must hash-identical to the
+# same 4 sessions run through the sequential sliding reference loops
+# (--check additionally pins batched == sequential in-process).
+BATCHED_ARGS="decode --seed 5 --lanes 4 --prompt-len 5 --max-new 10 --page-tokens 8 --check"
+HB="$(cargo run --release -q -- $BATCHED_ARGS | grep '^hash ')"
+HS="$(cargo run --release -q -- $BATCHED_ARGS --no-batch | grep '^hash ')"
+if [ -z "$HB" ] || [ "$HB" != "$HS" ]; then
+  echo "ci: batched decode smoke failed (batched '$HB' vs sequential '$HS')" >&2
+  exit 1
+fi
+echo "ci: batched decode smoke OK ($HB)"
+# ...and the same batched path end-to-end through a 2-replica ServerCore
+# (generate-heavy so every tick exercises step_batch).
+cargo run --release -q -- loadgen \
+  --backend native --replicas 2 --queue-cap 32 --max-requests 32 \
+  --concurrency 4 --mode generate --max-new 6 --out ''
 # Open-loop sweep smoke on the KV-cached native backend (2 rates, bounded)
 # -> BENCH_serving_sweep.json, schema-gated below.
 cargo run --release -q -- loadgen \
