@@ -13,13 +13,17 @@
 //!   session-stepping API exists for (one weight-row stream per step
 //!   instead of one per lane); the two are asserted bitwise-identical
 //!   before timing;
+//! - threads × lanes grid: the same batched tick at worker-pool widths
+//!   1/2/4 across 1/4/16 lanes (`thread_grid` in the JSON) — each cell is
+//!   asserted bitwise logits-identical to the 1-thread run before timing,
+//!   so the grid measures wall time of a computation pinned identical;
 //! - measured activation bytes per step: dense-equivalent vs what the
 //!   compressed-domain path actually moved (packed payload + raw `u32`
 //!   metadata words).
 //!
 //! `tools/check_bench_json.py` gates the emitted schema, including
-//! `full_step_growth > cached_step_growth` and batched ≥ sequential
-//! tok/s at batch ≥ 4.
+//! `full_step_growth > cached_step_growth`, batched ≥ sequential
+//! tok/s at batch ≥ 4, and threads=4 ≥ threads=1 tok/s at lanes ≥ 4.
 
 use nmsparse::engine::{EngineConfig, NativeEngine, NativeSparsity, SessionKvPool, StepBatch};
 use nmsparse::sparsity::Pattern;
@@ -161,6 +165,65 @@ fn main() {
         batched_rows.push((lanes, batched_tps, sequential_tps));
     }
 
+    // ---- threads x lanes grid: worker-pool scaling of step_batch ----
+    // The same batched tick at pool widths 1/2/4. Before timing a lane
+    // count, pin that widening the pool does not change a single logit
+    // bit (the weight-row partition gives each worker disjoint whole
+    // output rows — DESIGN.md §2.11), so the grid times a computation
+    // already proven identical.
+    let thread_counts = [1usize, 2, 4];
+    let grid_lanes = [1usize, 4, 16];
+    let mut grid_rows = Vec::new();
+    for &lanes in &grid_lanes {
+        let mut sessions = SessionKvPool::new(lanes.max(2));
+        let mut batch = StepBatch::new();
+        let ctx_of = |i: usize| 10 + 5 * (i % 7); // ragged lane contexts
+        for i in 0..lanes {
+            let slot = sessions.get_or_create(&mut pool, i as u64 + 1);
+            slot.kv.reset(&mut pool);
+            engine.prefill(&mut slot.kv, &mut pool, &row[..ctx_of(i)]).unwrap();
+        }
+        let mut want: Vec<Vec<u32>> = Vec::new();
+        for &threads in &thread_counts {
+            engine.set_threads(threads);
+            batch.clear();
+            for i in 0..lanes {
+                let slot = sessions.get_mut(i as u64 + 1).unwrap();
+                slot.kv.truncate(&mut pool, ctx_of(i));
+                batch.push(i as u64 + 1, row[ctx_of(i)]);
+            }
+            engine.step_batch(&mut batch, &mut sessions, &mut pool).unwrap();
+            let got: Vec<Vec<u32>> = (0..lanes)
+                .map(|i| batch.logits(i).iter().map(|v| v.to_bits()).collect())
+                .collect();
+            if want.is_empty() {
+                want = got;
+            } else {
+                assert_eq!(got, want, "{threads} threads changed step_batch logit bits");
+            }
+        }
+        for &threads in &thread_counts {
+            engine.set_threads(threads);
+            let name = format!("decode/step_batch {lanes} lanes x {threads} threads (tokens)");
+            suite.bench_with_items(&name, Some(lanes as f64), || {
+                batch.clear();
+                for i in 0..lanes {
+                    let slot = sessions.get_mut(i as u64 + 1).unwrap();
+                    slot.kv.truncate(&mut pool, ctx_of(i));
+                    batch.push(i as u64 + 1, row[ctx_of(i)]);
+                }
+                engine.step_batch(&mut batch, &mut sessions, &mut pool).unwrap();
+            });
+            let tps = suite.rate_of(&name).unwrap_or(0.0);
+            println!("decode: grid {lanes} lanes x {threads} threads: {tps:.0} tok/s");
+            grid_rows.push((threads, lanes, tps));
+        }
+        for i in 0..lanes {
+            sessions.remove(&mut pool, i as u64 + 1);
+        }
+    }
+    engine.set_threads(1);
+
     // ---- measured bytes per step (packed vs dense-equivalent) ----
     engine.reset_stats();
     kv.reset(&mut pool);
@@ -217,6 +280,15 @@ fn main() {
         batch_arr.push(e);
     }
     j.insert("batched", Json::Arr(batch_arr));
+    let mut grid_arr = Vec::new();
+    for &(threads, lanes, tps) in &grid_rows {
+        let mut e = Json::obj();
+        e.insert("threads", (threads as f64).into());
+        e.insert("lanes", (lanes as f64).into());
+        e.insert("tokens_per_sec", tps.into());
+        grid_arr.push(e);
+    }
+    j.insert("thread_grid", Json::Arr(grid_arr));
     j.insert("cached_step_growth", cached_growth.into());
     j.insert("full_step_growth", full_growth.into());
     j.insert("dense_bytes_per_step", dense_bytes_per_step.into());
@@ -227,7 +299,8 @@ fn main() {
     let complete = cached_ms.iter().chain(&full_ms).all(|ms| *ms > 0.0)
         && prefill_tps.is_some()
         && decode_tps.is_some()
-        && batched_rows.iter().all(|(_, b, s)| *b > 0.0 && *s > 0.0);
+        && batched_rows.iter().all(|(_, b, s)| *b > 0.0 && *s > 0.0)
+        && grid_rows.iter().all(|(_, _, t)| *t > 0.0);
     if complete {
         match std::fs::write("BENCH_decode.json", j.pretty()) {
             Ok(()) => println!("wrote BENCH_decode.json"),

@@ -14,7 +14,7 @@ use crate::engine::{EngineConfig, NativeEngine, NativeModel, NativeSparsity};
 use crate::runtime::{Engine, Manifest, Runtime, Variant};
 use crate::util::tensor::TensorStore;
 use anyhow::{Context, Result};
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::path::Path;
 use std::rc::Rc;
@@ -32,6 +32,9 @@ pub struct EnginePool {
     /// Native (KV-cached, PJRT-free) engines, same cache key space as the
     /// bound PJRT engines.
     natives: RefCell<HashMap<String, Rc<RefCell<NativeEngine>>>>,
+    /// Worker-pool width applied to native engines as they are built
+    /// (see [`EnginePool::set_native_threads`]). Default 1 = inline.
+    native_threads: Cell<usize>,
     /// Compile + bind wall-times, for the perf report.
     pub load_log: RefCell<Vec<(String, f64)>>,
 }
@@ -53,6 +56,7 @@ impl EnginePool {
             variants: RefCell::new(HashMap::new()),
             engines: RefCell::new(HashMap::new()),
             natives: RefCell::new(HashMap::new()),
+            native_threads: Cell::new(1),
             load_log: RefCell::new(Vec::new()),
         })
     }
@@ -110,12 +114,22 @@ impl EnginePool {
         let weights = cfg.transformed_weights(&self.weights)?;
         let model = NativeModel::from_store(&weights, &engine_cfg)
             .context("building native model from the artifacts checkpoint")?;
-        let engine = Rc::new(RefCell::new(NativeEngine::new(model, sparsity)?));
+        let mut native = NativeEngine::new(model, sparsity)?;
+        native.set_threads(self.native_threads.get());
+        let engine = Rc::new(RefCell::new(native));
         self.load_log
             .borrow_mut()
             .push((format!("native:{}", cfg.id), t0.elapsed().as_secs_f64()));
         self.natives.borrow_mut().insert(ekey, Rc::clone(&engine));
         Ok(engine)
+    }
+
+    /// Worker-pool width for native engines built *after* this call (min
+    /// 1; already-cached engines keep their pool — evict first to rebuild
+    /// wider). Threading never changes native decode bits, so mixing
+    /// widths across cached engines is safe, just unannounced.
+    pub fn set_native_threads(&self, threads: usize) {
+        self.native_threads.set(threads.max(1));
     }
 
     /// Number of distinct engines bound so far.

@@ -316,6 +316,15 @@ impl NativeBackend {
         }
     }
 
+    /// Resize the engine's worker pool (the `--threads` flag on
+    /// `nmsparse serve`/`loadgen --backend native`). Weight-row
+    /// partitioning keeps every lane's logits bitwise identical at any
+    /// width, so this only changes tick wall time.
+    pub fn with_threads(mut self, threads: usize) -> NativeBackend {
+        self.engine.set_threads(threads);
+        self
+    }
+
     /// Override the LRU session-slot bound (tests pin eviction safety at
     /// cap 1 — batched steps chunk lanes to this bound).
     pub fn with_session_cap(mut self, cap: usize) -> NativeBackend {

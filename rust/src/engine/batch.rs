@@ -12,7 +12,13 @@
 //! lanes-row stream) and the lm head as one multi-row dense matmul. A
 //! weight row is streamed once per step instead of once per lane — the
 //! batched-vs-sequential tok/s rows in `BENCH_decode.json` measure
-//! exactly that amortization.
+//! exactly that amortization. Every one of those matmuls (and the
+//! per-lane pack/sparsify fan-out feeding them) runs on the engine's
+//! persistent [`WorkerPool`](crate::util::threadpool::WorkerPool),
+//! partitioned by weight-row ranges — each output row is one whole dot
+//! computed by one worker, so `--threads` changes wall time, never bits
+//! (DESIGN.md §2.11; the threads×lanes grid in `BENCH_decode.json`
+//! measures the scaling).
 //!
 //! **Token identity is structural**: per lane, the batched step performs
 //! the same operations in the same order as [`NativeEngine::step`] —
@@ -199,10 +205,10 @@ impl NativeEngine {
                 n,
                 s0,
                 p0,
-                &mut self.scratch,
                 &mut self.act,
                 q,
                 &mut self.stats,
+                &self.workers,
             );
             let s1 = site_sp(&self.sparsity, &self.enabled, l, 1);
             let p1 = pick(s1, self.packed_d.as_mut());
@@ -212,10 +218,10 @@ impl NativeEngine {
                 n,
                 s1,
                 p1,
-                &mut self.scratch,
                 &mut self.act,
                 k,
                 &mut self.stats,
+                &self.workers,
             );
             let s2 = site_sp(&self.sparsity, &self.enabled, l, 2);
             let p2 = pick(s2, self.packed_d.as_mut());
@@ -225,10 +231,10 @@ impl NativeEngine {
                 n,
                 s2,
                 p2,
-                &mut self.scratch,
                 &mut self.act,
                 v,
                 &mut self.stats,
+                &self.workers,
             );
             for (i, lane) in lanes.iter().enumerate() {
                 let slot = sessions.get_mut(lane.session).expect("validated resident");
@@ -256,10 +262,10 @@ impl NativeEngine {
                 n,
                 s3,
                 p3,
-                &mut self.scratch,
                 &mut self.act,
                 out_d,
                 &mut self.stats,
+                &self.workers,
             );
             add_assign(x, out_d);
 
@@ -275,10 +281,10 @@ impl NativeEngine {
                 n,
                 s4,
                 p4,
-                &mut self.scratch,
                 &mut self.act,
                 gate,
                 &mut self.stats,
+                &self.workers,
             );
             let s5 = site_sp(&self.sparsity, &self.enabled, l, 5);
             let p5 = pick(s5, self.packed_d.as_mut());
@@ -288,10 +294,10 @@ impl NativeEngine {
                 n,
                 s5,
                 p5,
-                &mut self.scratch,
                 &mut self.act,
                 up,
                 &mut self.stats,
+                &self.workers,
             );
             for ((f, g), u) in fbuf.iter_mut().zip(gate.iter()).zip(up.iter()) {
                 *f = silu(*g) * u;
@@ -304,10 +310,10 @@ impl NativeEngine {
                 n,
                 s6,
                 p6,
-                &mut self.scratch,
                 &mut self.act,
                 out_d,
                 &mut self.stats,
+                &self.workers,
             );
             add_assign(x, out_d);
         }
@@ -318,7 +324,7 @@ impl NativeEngine {
             let hx = &mut h[i * d..(i + 1) * d];
             rmsnorm_into(&x[i * d..(i + 1) * d], &self.model.final_norm, hx);
         }
-        dense_matmul_nt(&self.model.lm_head, h, n, logits);
+        dense_matmul_nt(&self.model.lm_head, h, n, logits, &self.workers);
         self.stats.steps += n as u64;
         Ok(())
     }

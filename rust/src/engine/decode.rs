@@ -35,6 +35,7 @@ use crate::engine::model::{EngineConfig, NativeModel, SITES};
 use crate::runtime::Manifest;
 use crate::sparsity::{PackedNM, Pattern, Scratch, Sparsifier};
 use crate::util::tensor::{Tensor, TensorStore};
+use crate::util::threadpool::{DisjointSliceMut, WorkerPool};
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
@@ -320,6 +321,12 @@ pub struct NativeEngine {
     probs: Vec<f32>,
     logits: Vec<f32>,
     pub(crate) stats: DecodeStats,
+    /// The engine's one worker set: spawned at construction (default one,
+    /// i.e. fully inline), parked on a condvar between ticks, shared by
+    /// every site matmul, the lm head, and per-lane pack/sparsify fan-out
+    /// (DESIGN.md §2.11). Partitioning is by output rows, so results are
+    /// bitwise identical at any width.
+    pub(crate) workers: WorkerPool,
 }
 
 const ROPE_BASE: f32 = 10000.0;
@@ -381,6 +388,7 @@ impl NativeEngine {
             logits: vec![0.0; cfg.vocab],
             scratch: Scratch::new(),
             stats: DecodeStats::default(),
+            workers: WorkerPool::new(1),
             model,
             sparsity,
             enabled,
@@ -425,6 +433,28 @@ impl NativeEngine {
     /// and sliding-window behavior with tiny pages).
     pub fn new_kv_pool_with(&self, page_tokens: usize) -> KvPagePool {
         KvPagePool::new(&self.model.cfg, page_tokens)
+    }
+
+    /// Resize the worker pool (min 1; 1 = fully inline). Threading only
+    /// changes wall time, never bits: every output row is one whole dot
+    /// computed by exactly one worker (`rust/tests/step_batch.rs` pins
+    /// logits identical across thread counts).
+    pub fn set_threads(&mut self, threads: usize) {
+        let threads = threads.max(1);
+        if self.workers.threads() != threads {
+            self.workers = WorkerPool::new(threads);
+        }
+    }
+
+    /// Builder form of [`NativeEngine::set_threads`].
+    pub fn with_threads(mut self, threads: usize) -> NativeEngine {
+        self.set_threads(threads);
+        self
+    }
+
+    /// Current worker count (caller thread included).
+    pub fn threads(&self) -> usize {
+        self.workers.threads()
     }
 
     pub fn stats(&self) -> DecodeStats {
@@ -479,6 +509,7 @@ impl NativeEngine {
             probs,
             logits,
             stats,
+            workers,
         } = self;
         let cfg = &model.cfg;
         anyhow::ensure!(
@@ -498,37 +529,43 @@ impl NativeEngine {
             // Attention block.
             rmsnorm_into(x, &layer.norm1, h);
             let (s0, s1, s2) = (sp(0), sp(1), sp(2));
-            apply_site(&layer.wq, h, s0, pick(s0, packed_d.as_mut()), scratch, act, q, stats);
-            apply_site(&layer.wk, h, s1, pick(s1, packed_d.as_mut()), scratch, act, k, stats);
-            apply_site(&layer.wv, h, s2, pick(s2, packed_d.as_mut()), scratch, act, v, stats);
+            let p0 = pick(s0, packed_d.as_mut());
+            apply_site(&layer.wq, h, s0, p0, scratch, act, q, stats, workers);
+            let p1 = pick(s1, packed_d.as_mut());
+            apply_site(&layer.wk, h, s1, p1, scratch, act, k, stats, workers);
+            let p2 = pick(s2, packed_d.as_mut());
+            apply_site(&layer.wv, h, s2, p2, scratch, act, v, stats, workers);
             rope_in_place(q, cfg.n_heads, cfg.head_dim(), pos, rope_freqs);
             rope_in_place(k, cfg.n_heads, cfg.head_dim(), pos, rope_freqs);
             kv.write_row(pool, l, k, v);
             attention_paged(q, kv, l, pos + 1, cfg.n_heads, cfg.head_dim(), probs, ctx);
             let s3 = sp(3);
             let pd = pick(s3, packed_d.as_mut());
-            apply_site(&layer.wo, ctx, s3, pd, scratch, act, site_out_d, stats);
+            apply_site(&layer.wo, ctx, s3, pd, scratch, act, site_out_d, stats, workers);
             add_assign(x, site_out_d);
 
             // FFN block (SwiGLU).
             rmsnorm_into(x, &layer.norm2, h);
             let s4 = sp(4);
             let pg = pick(s4, packed_d.as_mut());
-            apply_site(&layer.wgate, h, s4, pg, scratch, act, gate, stats);
+            apply_site(&layer.wgate, h, s4, pg, scratch, act, gate, stats, workers);
             let s5 = sp(5);
             let pu = pick(s5, packed_d.as_mut());
-            apply_site(&layer.wup, h, s5, pu, scratch, act, up, stats);
+            apply_site(&layer.wup, h, s5, pu, scratch, act, up, stats, workers);
             for ((f, g), u) in fbuf.iter_mut().zip(gate.iter()).zip(up.iter()) {
                 *f = silu(*g) * u;
             }
             let s6 = sp(6);
             let pf = pick(s6, packed_f.as_mut());
-            apply_site(&layer.wdown, fbuf, s6, pf, scratch, act, site_out_d, stats);
+            apply_site(&layer.wdown, fbuf, s6, pf, scratch, act, site_out_d, stats, workers);
             add_assign(x, site_out_d);
         }
         kv.advance();
         rmsnorm_into(x, &model.final_norm, h);
-        dense_matvec(&model.lm_head, h, logits);
+        // The lm head is the single largest matmul of a step (vocab rows):
+        // run it through the pool too. rows == 1 keeps it bitwise equal to
+        // the dense_matvec it replaced.
+        dense_matmul_nt(&model.lm_head, h, 1, logits, workers);
         stats.steps += 1;
         Ok(())
     }
@@ -573,7 +610,9 @@ pub(crate) fn pick<'a>(
 /// One (possibly sparsified) linear site: `out[o] = w.row(o) · s(input)`.
 /// The compressed path packs the row during selection and runs the GEMV
 /// over the stream; the dense path sparsifies a copy in place. Byte
-/// counters record what actually moved.
+/// counters record what actually moved. The matmul itself runs on the
+/// engine's worker pool, partitioned by weight rows (bitwise invariant).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn apply_site(
     w: &Tensor,
     input: &[f32],
@@ -583,6 +622,7 @@ pub(crate) fn apply_site(
     act: &mut Vec<f32>,
     out: &mut [f32],
     stats: &mut DecodeStats,
+    wp: &WorkerPool,
 ) {
     let din = input.len();
     debug_assert_eq!(w.cols(), din);
@@ -596,40 +636,44 @@ pub(crate) fn apply_site(
                 sp.pack_row_into(input, packed, scratch);
                 stats.moved_activation_bytes +=
                     (packed.values().len() * 4 + packed.meta_words().len() * 4) as u64;
-                packed.matmul_nt_into(w, out, 1);
+                packed.matmul_nt_into(w, out, wp);
             }
             None => {
                 act.clear();
                 act.extend_from_slice(input);
                 sp.sparsify_row(act, scratch);
                 stats.moved_activation_bytes += (din * 4) as u64;
-                dense_matvec(w, act, out);
+                dense_matmul_nt(w, act, 1, out, wp);
             }
         },
         None => {
             stats.moved_activation_bytes += (din * 4) as u64;
-            dense_matvec(w, input, out);
+            dense_matmul_nt(w, input, 1, out, wp);
         }
     }
 }
 
 /// The batched-lane form of [`apply_site`]: `lanes` input rows (lane-major
 /// `[lanes, din]`) through one site as a single multi-row matmul. On the
-/// compressed path every lane's row is packed by the same single-row
-/// selection pass into one stream and the GEMM runs once over all lanes
-/// (weight-row-major — see [`PackedNM::matmul_nt_into`]); the dense paths
-/// sparsify or forward per lane with the identical per-row kernels, so
-/// each lane's output is bitwise-equal to a single-lane [`apply_site`].
+/// compressed path every lane's row is packed by the per-row selection
+/// kernel — rows fanned out across the pool (`pack_rows_pool`) — into one
+/// stream and the GEMM runs once over all lanes, partitioned by weight
+/// rows (see [`PackedNM::matmul_nt_into`]); the dense paths sparsify per
+/// lane on the pool (`sparsify_rows_pool`) with the identical per-row
+/// kernels, then run the pooled dense GEMM. Every lane's output is the
+/// same whole-row dot as a single-lane [`apply_site`], so batched,
+/// sequential, and any thread count are all bitwise-equal.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn apply_site_batch(
     w: &Tensor,
     inputs: &[f32],
     lanes: usize,
     sp: Option<&Sparsifier>,
     packed: Option<&mut PackedNM>,
-    scratch: &mut Scratch,
     act: &mut Vec<f32>,
     out: &mut [f32],
     stats: &mut DecodeStats,
+    wp: &WorkerPool,
 ) {
     let din = w.cols();
     let w_rows = w.rows();
@@ -640,27 +684,22 @@ pub(crate) fn apply_site_batch(
     match sp {
         Some(sp) => match packed {
             Some(packed) => {
-                packed.clear();
-                for r in 0..lanes {
-                    sp.pack_row_into(&inputs[r * din..(r + 1) * din], packed, scratch);
-                }
+                sp.pack_rows_pool(inputs, din, packed, wp);
                 stats.moved_activation_bytes +=
                     (packed.values().len() * 4 + packed.meta_words().len() * 4) as u64;
-                packed.matmul_nt_into(w, out, 1);
+                packed.matmul_nt_into(w, out, wp);
             }
             None => {
-                for r in 0..lanes {
-                    act.clear();
-                    act.extend_from_slice(&inputs[r * din..(r + 1) * din]);
-                    sp.sparsify_row(act, scratch);
-                    stats.moved_activation_bytes += (din * 4) as u64;
-                    dense_matvec(w, act, &mut out[r * w_rows..(r + 1) * w_rows]);
-                }
+                act.clear();
+                act.extend_from_slice(inputs);
+                sp.sparsify_rows_pool(act, din, wp);
+                stats.moved_activation_bytes += (lanes * din * 4) as u64;
+                dense_matmul_nt(w, act, lanes, out, wp);
             }
         },
         None => {
             stats.moved_activation_bytes += (lanes * din * 4) as u64;
-            dense_matmul_nt(w, inputs, lanes, out);
+            dense_matmul_nt(w, inputs, lanes, out, wp);
         }
     }
 }
@@ -763,22 +802,47 @@ pub(crate) fn dense_matvec(w: &Tensor, x: &[f32], out: &mut [f32]) {
 }
 
 /// Batched dense linear over `rows` lane inputs (`xs` is `[rows, cols]`
-/// row-major): `out[r * w.rows() + o] = w.row(o) · xs[r]`, iterated
-/// weight-row-major so one weight row serves every lane while hot —
-/// the dense-site / lm-head form of the batched step. Each output is the
-/// same ascending-index dot as [`dense_matvec`], so the two are
-/// bitwise-equal.
-pub(crate) fn dense_matmul_nt(w: &Tensor, xs: &[f32], rows: usize, out: &mut [f32]) {
+/// row-major): `out[r * w.rows() + o] = w.row(o) · xs[r]`, partitioned
+/// across the worker pool by **weight-row ranges** and iterated
+/// weight-row-major within a range so one weight row serves every lane
+/// while hot — the dense-site / lm-head form of the batched step. Each
+/// output is one whole ascending-index dot computed by exactly one worker
+/// (the same dot as [`dense_matvec`]), so single-threaded, pooled, and
+/// GEMV results are all bitwise-equal (DESIGN.md §2.11).
+pub(crate) fn dense_matmul_nt(
+    w: &Tensor,
+    xs: &[f32],
+    rows: usize,
+    out: &mut [f32],
+    wp: &WorkerPool,
+) {
     let cols = w.cols();
     let w_rows = w.rows();
     debug_assert_eq!(xs.len(), rows * cols);
     debug_assert_eq!(out.len(), rows * w_rows);
-    for o in 0..w_rows {
-        let wrow = w.row(o);
-        for r in 0..rows {
-            out[r * w_rows + o] = dot(wrow, &xs[r * cols..(r + 1) * cols]);
-        }
+    if rows == 0 || w_rows == 0 {
+        return;
     }
+    if wp.threads() == 1 || w_rows == 1 {
+        for o in 0..w_rows {
+            let wrow = w.row(o);
+            for r in 0..rows {
+                out[r * w_rows + o] = dot(wrow, &xs[r * cols..(r + 1) * cols]);
+            }
+        }
+        return;
+    }
+    let shared = DisjointSliceMut::new(out);
+    wp.run_ranges(w_rows, |lo, hi| {
+        for o in lo..hi {
+            let wrow = w.row(o);
+            for r in 0..rows {
+                // SAFETY: weight-row ranges are disjoint across parts, so
+                // element r*w_rows+o has exactly one writer.
+                unsafe { shared.write(r * w_rows + o, dot(wrow, &xs[r * cols..(r + 1) * cols])) };
+            }
+        }
+    });
 }
 
 #[inline]
@@ -799,5 +863,60 @@ pub(crate) fn silu(x: f32) -> f32 {
 pub(crate) fn add_assign(x: &mut [f32], y: &[f32]) {
     for (a, b) in x.iter_mut().zip(y) {
         *a += b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn pooled_dense_matmul_matches_matvec_oracle_bitwise() {
+        // Weight-row partitioning must be invisible: every output element
+        // is one whole dot, so any pool width reproduces the per-lane
+        // dense_matvec bits exactly — including pool widths that do not
+        // divide the weight-row count.
+        let mut rng = Rng::new(17);
+        let (w_rows, cols, lanes) = (13usize, 32usize, 5usize);
+        let w = Tensor::from_vec(
+            &[w_rows, cols],
+            (0..w_rows * cols).map(|_| rng.normal() as f32).collect(),
+        );
+        let xs: Vec<f32> = (0..lanes * cols).map(|_| rng.normal() as f32).collect();
+        let mut want = vec![0.0f32; lanes * w_rows];
+        for r in 0..lanes {
+            let row = &xs[r * cols..(r + 1) * cols];
+            let mut out = vec![0.0f32; w_rows];
+            dense_matvec(&w, row, &mut out);
+            want[r * w_rows..(r + 1) * w_rows].copy_from_slice(&out);
+        }
+        for threads in [1usize, 2, 4, 7] {
+            let wp = WorkerPool::new(threads);
+            let mut got = vec![0.0f32; lanes * w_rows];
+            dense_matmul_nt(&w, &xs, lanes, &mut got, &wp);
+            let same = got
+                .iter()
+                .zip(&want)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn set_threads_rebuilds_only_on_change() {
+        let mut e = NativeEngine::synthetic(
+            &EngineConfig::tiny(),
+            3,
+            NativeSparsity::act(Pattern::NM { n: 8, m: 16 }),
+        )
+        .expect("engine");
+        assert_eq!(e.threads(), 1);
+        e.set_threads(0); // clamps to 1
+        assert_eq!(e.threads(), 1);
+        e.set_threads(3);
+        assert_eq!(e.threads(), 3);
+        let e = e.with_threads(2);
+        assert_eq!(e.threads(), 2);
     }
 }

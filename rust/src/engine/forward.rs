@@ -10,6 +10,12 @@
 //! while the cached loop's stays flat: `benches/decode.rs` measures both
 //! into `BENCH_decode.json`.
 //!
+//! Threading is inherited, not re-implemented: every loop here composes
+//! [`NativeEngine::step`], whose site matmuls and lm head already run on
+//! the engine's worker pool ([`NativeEngine::set_threads`]) — and the
+//! weight-row partitioning is bitwise-invariant, so prefill/generate
+//! outputs are identical at any thread count.
+//!
 //! Two context-edge policies exist side by side:
 //! [`NativeEngine::generate_greedy`] keeps the PJRT budget rule (the
 //! token that fills the context is emitted, then the session ends — the
@@ -368,5 +374,24 @@ mod tests {
         assert_eq!(sp.dense_activation_bytes, sd.dense_activation_bytes);
         assert!(sp.moved_activation_bytes < sd.moved_activation_bytes);
         assert!(sp.bytes_reduction() > 1.5, "{}", sp.bytes_reduction());
+    }
+
+    #[test]
+    fn threaded_generation_is_token_and_logit_identical() {
+        // The forward loops inherit the pool through step(); weight-row
+        // partitioning must leave greedy decode byte-for-byte unchanged.
+        let mut single = tiny_engine(Pattern::NM { n: 8, m: 16 });
+        let mut pooled = tiny_engine(Pattern::NM { n: 8, m: 16 }).with_threads(3);
+        let mut pa = single.new_kv_pool();
+        let mut pb = pooled.new_kv_pool();
+        let mut kva = pa.new_cache();
+        let mut kvb = pb.new_cache();
+        let prompt = [3u32, 1, 4, 1, 5];
+        let a = single.generate_greedy(&mut kva, &mut pa, &prompt, 8, &[]).unwrap();
+        let b = pooled.generate_greedy(&mut kvb, &mut pb, &prompt, 8, &[]).unwrap();
+        assert_eq!(a, b, "threads must not change emitted tokens");
+        let la: Vec<u32> = single.logits().iter().map(|v| v.to_bits()).collect();
+        let lb: Vec<u32> = pooled.logits().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(la, lb, "threads must not change final logits bits");
     }
 }

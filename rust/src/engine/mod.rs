@@ -25,8 +25,10 @@
 //! - [`batch`]: the batched session-stepping API — a reusable
 //!   [`StepBatch`] of `{session, token}` lanes advanced by
 //!   [`NativeEngine::step_batch`], each sparsified site running as one
-//!   packed multi-row matmul across all lanes, bitwise token-identical
-//!   to sequential per-session stepping;
+//!   packed multi-row matmul across all lanes — partitioned by weight
+//!   rows over the engine's persistent [`WorkerPool`] (§2.11) — bitwise
+//!   token-identical to sequential per-session stepping at any thread
+//!   count;
 //! - [`forward`]: prefill, the full-context reference loop (the
 //!   equivalence oracle: token-identical by construction), greedy
 //!   generation under both context-edge rules (PJRT budget rule and the
@@ -48,3 +50,6 @@ pub use batch::{Lane, StepBatch};
 pub use decode::{DecodeStats, NativeEngine, NativeSparsity};
 pub use kv::{window_start, KvCache, KvPagePool, SessionKvPool, SessionSlot};
 pub use model::{EngineConfig, NativeModel, SITES};
+// The engine's hot-loop pool (re-exported so engine consumers and tests
+// need not reach into util:: for the threading surface).
+pub use crate::util::threadpool::WorkerPool;

@@ -37,6 +37,7 @@ pub fn cmd_decode(rest: Vec<String>) -> Result<()> {
         OptSpec { name: "prompt-tokens", takes_value: true, default: Some(""), help: "explicit comma-separated prompt token ids" },
         OptSpec { name: "max-new", takes_value: true, default: Some("16"), help: "tokens to generate" },
         OptSpec { name: "lanes", takes_value: true, default: Some("1"), help: "concurrent sessions (>1 = batched step_batch path)" },
+        OptSpec { name: "threads", takes_value: true, default: Some("1"), help: "worker-pool width for site matmuls (0 = auto; never changes bits)" },
         OptSpec { name: "no-batch", takes_value: false, default: None, help: "step --lanes sessions sequentially (sliding reference)" },
         OptSpec { name: "page-tokens", takes_value: true, default: Some("0"), help: "KV page size in positions (0 = engine default)" },
         OptSpec { name: "check", takes_value: false, default: None, help: "verify KV-cached == full-context reference" },
@@ -53,6 +54,7 @@ pub fn cmd_decode(rest: Vec<String>) -> Result<()> {
     let seed = a.get_u64("seed")?;
     let max_new = a.get_usize("max-new")?.max(1);
     let lanes = a.get_usize("lanes")?.max(1);
+    let threads = resolve_threads(a.get_usize("threads")?);
     let page_tokens = a.get_usize("page-tokens")?;
     let artifacts = PathBuf::from(a.get("artifacts"));
 
@@ -69,6 +71,7 @@ pub fn cmd_decode(rest: Vec<String>) -> Result<()> {
             a.get_usize("prompt-len")?.max(1),
             max_new,
             lanes,
+            threads,
             page_tokens,
             a.flag("no-batch"),
             a.flag("dense-path"),
@@ -79,7 +82,7 @@ pub fn cmd_decode(rest: Vec<String>) -> Result<()> {
     let (model, sparsity, origin) = load_native_parts(&artifacts, &mcfg, seed)?;
     let sparsity = sparsity.with_force_dense(a.flag("dense-path"));
     let cfg = model.cfg.clone();
-    let mut engine = NativeEngine::new(model, sparsity)?;
+    let mut engine = NativeEngine::new(model, sparsity)?.with_threads(threads);
     let mut pool = if page_tokens > 0 {
         engine.new_kv_pool_with(page_tokens)
     } else {
@@ -104,7 +107,7 @@ pub fn cmd_decode(rest: Vec<String>) -> Result<()> {
 
     println!(
         "decode: {origin} model (vocab {}, d_model {}, {} layers, ffn {}, max_seq {}), \
-         pattern {}, method {}, packed={}",
+         pattern {}, method {}, packed={}, threads={}",
         cfg.vocab,
         cfg.d_model,
         cfg.n_layers,
@@ -113,6 +116,7 @@ pub fn cmd_decode(rest: Vec<String>) -> Result<()> {
         pattern,
         mcfg.id,
         engine.uses_packed(),
+        engine.threads(),
     );
 
     let mut kv = pool.new_cache();
@@ -143,6 +147,19 @@ pub fn cmd_decode(rest: Vec<String>) -> Result<()> {
     );
     println!("hash {:016x}", fnv64_lanes(std::slice::from_ref(&out)));
     Ok(())
+}
+
+/// `--threads 0` means "ask the machine":
+/// [`default_threads`](crate::util::threadpool::default_threads) honours
+/// the `NMSPARSE_THREADS` override, else `available_parallelism`. Shared
+/// by the `decode`, `serve` and `loadgen` launchers so the flag means the
+/// same thing everywhere.
+pub(crate) fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        crate::util::threadpool::default_threads()
+    } else {
+        requested
+    }
 }
 
 /// Deterministic per-lane prompt: a pure function of `(seed, lane)`.
@@ -232,6 +249,7 @@ fn decode_lanes(
     prompt_len: usize,
     max_new: usize,
     lanes: usize,
+    threads: usize,
     page_tokens: usize,
     no_batch: bool,
     dense_path: bool,
@@ -245,14 +263,14 @@ fn decode_lanes(
     let mode = if no_batch { "sequential" } else { "batched" };
     println!(
         "decode: {origin} model, pattern {pattern}, method {}, {lanes} lanes ({mode}), \
-         max_new {max_new}",
+         max_new {max_new}, threads {threads}",
         mcfg.id,
     );
 
-    // With --check, run the OTHER path too (on a same-weights engine)
-    // and pin token identity in-process.
+    // With --check, run the OTHER path too (on a same-weights engine,
+    // same worker-pool width) and pin token identity in-process.
     let other: Option<Vec<Vec<u32>>> = if check {
-        let twin = NativeEngine::new(model.clone(), sparsity.clone())?;
+        let twin = NativeEngine::new(model.clone(), sparsity.clone())?.with_threads(threads);
         Some(if no_batch {
             lanes_batched(twin, &prompts, max_new, page_tokens)?
         } else {
@@ -262,7 +280,7 @@ fn decode_lanes(
         None
     };
     let t0 = std::time::Instant::now();
-    let engine = NativeEngine::new(model, sparsity)?;
+    let engine = NativeEngine::new(model, sparsity)?.with_threads(threads);
     let outs: Vec<Vec<u32>> = if no_batch {
         lanes_sequential(engine, &prompts, max_new, page_tokens)?
     } else {
@@ -358,5 +376,25 @@ mod tests {
         let mut seq = base;
         seq.push("--no-batch".into());
         cmd_decode(seq).unwrap();
+    }
+
+    #[test]
+    fn threaded_decode_smoke_passes_check() {
+        // --threads only changes wall time, never bits: --check still pins
+        // batched == sequential with a 3-wide worker pool on both sides.
+        let args: Vec<String> = [
+            "--artifacts", "/definitely/not/here",
+            "--seed", "5",
+            "--prompt-len", "5",
+            "--max-new", "6",
+            "--lanes", "3",
+            "--threads", "3",
+            "--page-tokens", "8",
+            "--check",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        cmd_decode(args).unwrap();
     }
 }

@@ -76,7 +76,16 @@ pub enum BackendChoice {
     Artifacts { dir: PathBuf, pattern: String, method: String },
     /// KV-cached native decode engines — artifacts checkpoint when `dir`
     /// holds one, seeded synthetic model otherwise. No PJRT either way.
-    Native { dir: PathBuf, pattern: String, method: String, seed: u64, batch: usize },
+    /// `threads` is each replica engine's worker-pool width (wall time
+    /// only; decode bits are thread-count-invariant).
+    Native {
+        dir: PathBuf,
+        pattern: String,
+        method: String,
+        seed: u64,
+        batch: usize,
+        threads: usize,
+    },
 }
 
 /// One loadgen run, fully specified.
@@ -232,13 +241,15 @@ fn start_core(cfg: &LoadgenConfig) -> Result<(ServerCore, &'static str)> {
             })?;
             Ok((core, "artifacts"))
         }
-        BackendChoice::Native { dir, pattern, method, seed, batch } => {
+        BackendChoice::Native { dir, pattern, method, seed, batch, threads } => {
             let pattern = Pattern::parse(pattern)?;
             let vocab = Vocab::synthlang();
             let stop = vec![vocab.id(".")?, EOS];
-            let (dir, method, seed, batch) = (dir.clone(), method.clone(), *seed, *batch);
+            let (dir, method) = (dir.clone(), method.clone());
+            let (seed, batch, threads) = (*seed, *batch, *threads);
             let core = ServerCore::start(server_cfg, move |_r| {
                 NativeBackend::open(&dir, pattern, &method, stop.clone(), batch, seed)
+                    .map(|b| b.with_threads(threads))
             })?;
             Ok((core, "native"))
         }
@@ -406,6 +417,7 @@ pub fn cmd_loadgen(rest: Vec<String>) -> Result<()> {
         OptSpec { name: "seed", takes_value: true, default: Some("7"), help: "request-synthesis seed" },
         OptSpec { name: "backend", takes_value: true, default: Some("synthetic"), help: "synthetic | artifacts | native" },
         OptSpec { name: "batch", takes_value: true, default: Some("16"), help: "synthetic/native batch capacity" },
+        OptSpec { name: "threads", takes_value: true, default: Some("1"), help: "native worker-pool width per replica (0 = auto; never changes bits)" },
         OptSpec { name: "forward-us", takes_value: true, default: Some("150"), help: "synthetic per-forward cost (us)" },
         OptSpec { name: "artifacts", takes_value: true, default: Some("artifacts"), help: "artifacts dir (artifacts/native backends)" },
         OptSpec { name: "pattern", takes_value: true, default: Some("8:16"), help: "sparsity pattern (artifacts/native backends)" },
@@ -440,6 +452,7 @@ pub fn cmd_loadgen(rest: Vec<String>) -> Result<()> {
             method: if a.given("method") { a.get("method") } else { "ACT".to_string() },
             seed: a.get_u64("seed")?,
             batch: a.get_usize("batch")?,
+            threads: super::decode::resolve_threads(a.get_usize("threads")?),
         },
         other => bail!("unknown --backend '{other}' (synthetic, artifacts, native)"),
     };
@@ -573,6 +586,7 @@ mod tests {
                 method: "ACT".into(),
                 seed: 3,
                 batch: 4,
+                threads: 2,
             },
             ..Default::default()
         };

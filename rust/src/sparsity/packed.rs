@@ -43,6 +43,7 @@ use crate::metadata::MaskCodec;
 use crate::sparsity::Pattern;
 use crate::util::tensor::Tensor;
 use crate::util::threadpool;
+use crate::util::threadpool::{DisjointSliceMut, WorkerPool};
 
 /// Metadata block width for patterns without a native block: one `u32`
 /// word covers 32 columns.
@@ -276,27 +277,39 @@ impl PackedNM {
     /// decode step runs per sparsified site (`y = W · s(x)` with the
     /// packed operand the activation rows — one per batched lane in
     /// `NativeEngine::step_batch`). Same `row_dot` kernel as
-    /// [`PackedNM::matvec_into`]; parallel over packed-row groups, and
-    /// weight-row-major *within* a group so one weight row serves every
-    /// lane while hot (each output is the same ascending-column dot
-    /// regardless of iteration order, so single-row and batched calls
-    /// stay bitwise-equal).
-    pub fn matmul_nt_into(&self, w: &Tensor, out: &mut [f32], threads: usize) {
+    /// [`PackedNM::matvec_into`]; partitioned across the engine's
+    /// [`WorkerPool`] by **weight-row ranges** (each worker owns output
+    /// columns `o ∈ [lo, hi)` across every lane), and weight-row-major
+    /// within a range so one weight row serves every lane while hot. Each
+    /// output element is one whole ascending-column dot computed by
+    /// exactly one worker, so the result is bitwise identical at any
+    /// thread count — and to the single-row `matvec_into` (DESIGN.md
+    /// §2.11). Lane-major output makes per-worker writes strided, hence
+    /// the [`DisjointSliceMut`] shared view.
+    pub fn matmul_nt_into(&self, w: &Tensor, out: &mut [f32], pool: &WorkerPool) {
         assert_eq!(w.cols(), self.cols, "matmul inner-dim mismatch");
         let w_rows = w.rows();
         assert_eq!(out.len(), self.rows * w_rows, "matmul output length mismatch");
         if self.rows == 0 || w_rows == 0 {
             return;
         }
-        let threads = threads.max(1).min(self.rows);
-        let rows_per_chunk = (self.rows + threads - 1) / threads;
-        threadpool::par_chunks_mut(out, rows_per_chunk * w_rows, threads, |ci, chunk| {
-            let base = ci * rows_per_chunk;
-            let group = chunk.len() / w_rows;
+        if pool.threads() == 1 || w_rows == 1 {
             for o in 0..w_rows {
                 let wrow = w.row(o);
-                for i in 0..group {
-                    chunk[i * w_rows + o] = self.row_dot(base + i, wrow);
+                for r in 0..self.rows {
+                    out[r * w_rows + o] = self.row_dot(r, wrow);
+                }
+            }
+            return;
+        }
+        let shared = DisjointSliceMut::new(out);
+        pool.run_ranges(w_rows, |lo, hi| {
+            for o in lo..hi {
+                let wrow = w.row(o);
+                for r in 0..self.rows {
+                    // SAFETY: weight-row ranges are disjoint across parts,
+                    // so element r*w_rows+o has exactly one writer.
+                    unsafe { shared.write(r * w_rows + o, self.row_dot(r, wrow)) };
                 }
             }
         });
@@ -455,8 +468,9 @@ mod tests {
         let mut scratch = Scratch::new();
         sp.pack(&x, &mut packed, &mut scratch);
         for threads in [1usize, 3] {
+            let pool = WorkerPool::new(threads);
             let mut out = vec![0.0f32; 5 * 9];
-            packed.matmul_nt_into(&w, &mut out, threads);
+            packed.matmul_nt_into(&w, &mut out, &pool);
             // Column o of the result is exactly matvec_into against w.row(o).
             for o in 0..9 {
                 let mut col = vec![0.0f32; 5];

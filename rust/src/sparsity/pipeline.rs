@@ -43,8 +43,19 @@ use crate::sparsity::transforms::{row_var, Shift};
 use crate::sparsity::Pattern;
 use crate::util::tensor::Tensor;
 use crate::util::threadpool;
+use crate::util::threadpool::{DisjointSliceMut, WorkerPool};
 use anyhow::{Context, Result};
+use std::cell::RefCell;
 use std::cmp::Ordering;
+
+thread_local! {
+    /// Per-thread scratch for the [`WorkerPool`]-driven batch entry points
+    /// (`sparsify_rows_pool` / `pack_rows_pool`). Pool workers persist
+    /// across decode ticks, so after the first tick of a given width the
+    /// hot loop allocates nothing — unlike the scoped drivers below, which
+    /// build a fresh `Scratch` per spawned worker per call.
+    static POOL_SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::new());
+}
 
 /// Reusable scratch buffers for the fused pipeline. Create once, pass to
 /// every per-row call; buffers grow to the widest row seen and are then
@@ -403,6 +414,38 @@ impl Sparsifier {
         });
     }
 
+    /// [`WorkerPool`]-driven row-parallel sparsification over a lane-major
+    /// slice (`xs.len() == rows * cols`), in place. The hot-loop twin of
+    /// [`Sparsifier::sparsify_batch`]: same per-row kernel over disjoint
+    /// row ranges, but on persistent parked workers with per-thread
+    /// reusable scratch (no spawn, no steady-state allocation). Rows are
+    /// independent, so results are bitwise identical to a serial
+    /// [`Sparsifier::sparsify_row`] loop at any pool width.
+    pub fn sparsify_rows_pool(&self, xs: &mut [f32], cols: usize, pool: &WorkerPool) {
+        if cols == 0 || xs.is_empty() || matches!(self.pattern, Pattern::Dense) {
+            return;
+        }
+        assert_eq!(xs.len() % cols, 0, "lane-major input not rectangular");
+        let rows = xs.len() / cols;
+        let shared = DisjointSliceMut::new(xs);
+        pool.run_ranges(rows, |lo, hi| {
+            POOL_SCRATCH.with(|s| {
+                let mut scratch = s.borrow_mut();
+                for r in lo..hi {
+                    // SAFETY: row ranges are disjoint across parts.
+                    let row = unsafe { shared.slice_mut(r * cols, cols) };
+                    self.sparsify_row(row, &mut scratch);
+                }
+            });
+        });
+    }
+
+    /// Tensor wrapper over [`Sparsifier::sparsify_rows_pool`].
+    pub fn sparsify_batch_pool(&self, x: &mut Tensor, pool: &WorkerPool) {
+        let h = x.cols();
+        self.sparsify_rows_pool(&mut x.data, h, pool);
+    }
+
     // ------------------------------------------------- compressed emission
 
     /// Emit one row straight into the packed stream during the selection
@@ -481,6 +524,52 @@ impl Sparsifier {
                 }
             },
         );
+    }
+
+    /// [`WorkerPool`]-driven packed emission over a lane-major slice
+    /// (`xs.len() == rows * cols`): the hot-loop twin of
+    /// [`Sparsifier::pack_batch`], used by `NativeEngine` so per-tick lane
+    /// packing shares the engine's one worker set. Each worker packs a
+    /// disjoint row range straight into its exact value/metadata slots
+    /// (uniform geometry makes the offsets trivial), with per-thread
+    /// reusable scratch. The emitted stream is bitwise identical to a
+    /// serial [`Sparsifier::pack_row_into`] loop at any pool width.
+    pub fn pack_rows_pool(
+        &self,
+        xs: &[f32],
+        cols: usize,
+        packed: &mut crate::sparsity::PackedNM,
+        pool: &WorkerPool,
+    ) {
+        let rows = if cols == 0 { 0 } else { xs.len() / cols };
+        assert_eq!(xs.len(), rows * cols, "lane-major input not rectangular");
+        packed.reset_for(self.pattern, cols, rows);
+        if rows == 0 || cols == 0 {
+            return;
+        }
+        let kpr = packed.kept_per_row();
+        let bpr = packed.blocks_per_row();
+        if kpr == 0 {
+            let (_, meta) = packed.buffers_mut();
+            meta.iter_mut().for_each(|w| *w = 0);
+            return;
+        }
+        let (values, meta) = packed.buffers_mut();
+        let vals = DisjointSliceMut::new(values);
+        let mws = DisjointSliceMut::new(meta);
+        pool.run_ranges(rows, |lo, hi| {
+            POOL_SCRATCH.with(|s| {
+                let mut scratch = s.borrow_mut();
+                for r in lo..hi {
+                    // SAFETY: row slots are disjoint across the disjoint
+                    // row ranges (kpr values + bpr words per row).
+                    let (v, m) = unsafe {
+                        (vals.slice_mut(r * kpr, kpr), mws.slice_mut(r * bpr, bpr))
+                    };
+                    self.pack_row_to(&xs[r * cols..(r + 1) * cols], v, m, &mut scratch);
+                }
+            });
+        });
     }
 
     /// Selection + compressed emission for one row into exact-size output
@@ -925,6 +1014,47 @@ mod tests {
             let mut par = x.clone();
             sp.sparsify_batch(&mut par, threads);
             assert_eq!(par.data, serial.data, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pool_batch_matches_row_loop_any_pool_width() {
+        let mut rng = Rng::new(23);
+        let x = rand_matrix(&mut rng, 31, 64, 1.0); // odd row count on purpose
+        let sp = Sparsifier::new(Pattern::NM { n: 8, m: 16 })
+            .with_shift(Shift::DynamicPerToken)
+            .with_var(true);
+        let mut serial = x.clone();
+        let mut scratch = Scratch::new();
+        sp.sparsify(&mut serial, &mut scratch);
+        for threads in [1usize, 2, 4, 7] {
+            let pool = WorkerPool::new(threads);
+            let mut par = x.clone();
+            sp.sparsify_batch_pool(&mut par, &pool);
+            assert_eq!(par.data, serial.data, "pool threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pack_rows_pool_matches_serial_any_pool_width() {
+        use crate::sparsity::PackedNM;
+        let mut rng = Rng::new(95);
+        let x = rand_matrix(&mut rng, 29, 64, 0.0); // odd row count on purpose
+        for pattern in [
+            Pattern::NM { n: 8, m: 16 },
+            Pattern::Unstructured { keep_pct: 30 },
+            Pattern::Dense,
+        ] {
+            let sp = Sparsifier::new(pattern);
+            let mut serial = PackedNM::new(pattern, 64);
+            let mut scratch = Scratch::new();
+            sp.pack(&x, &mut serial, &mut scratch);
+            for threads in [1usize, 2, 4, 7] {
+                let pool = WorkerPool::new(threads);
+                let mut par = PackedNM::new(pattern, 64);
+                sp.pack_rows_pool(&x.data, 64, &mut par, &pool);
+                assert_eq!(par, serial, "{pattern} pool threads={threads}");
+            }
         }
     }
 

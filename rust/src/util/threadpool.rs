@@ -1,11 +1,23 @@
-//! A small fixed-size thread pool.
+//! Thread pools: a queue-based `ThreadPool` for coarse offline fan-out and a
+//! persistent, parkable `WorkerPool` for hot-loop scoped work.
 //!
 //! The offline build has no tokio; the coordinator's parallelism needs are
 //! CPU-bound fan-out (evaluate many batches, generate many examples), for
 //! which a plain worker pool over an MPMC channel is the right tool anyway.
 //! Includes a `scope`-style parallel map used by the eval harness.
+//!
+//! The decode hot loop has the opposite shape: thousands of tiny ticks per
+//! second, each wanting the *same* few threads to chew disjoint ranges of a
+//! borrowed output buffer. Boxing `'static` jobs per tick ([`ThreadPool`])
+//! or re-spawning OS threads per call (`par_chunks_mut`) are both wrong
+//! there, so [`WorkerPool`] keeps its workers parked on a condvar between
+//! scopes and runs borrowed closures with a rayon-style pointer-erasure
+//! bridge (sound because [`WorkerPool::run`] blocks until every part is
+//! done). See DESIGN.md §2.11.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 
@@ -17,6 +29,23 @@ pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<thread::JoinHandle<()>>,
     pending: Arc<(Mutex<usize>, Condvar)>,
+}
+
+/// Decrements the pool's pending count on drop, so a panicking job still
+/// releases its slot: the panic then surfaces on the worker's stderr (and
+/// kills that worker) instead of leaving `wait_idle` deadlocked forever on
+/// a count that can no longer reach zero.
+struct PendingGuard<'a>(&'a (Mutex<usize>, Condvar));
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        let (lock, cv) = self.0;
+        let mut p = lock.lock().unwrap();
+        *p -= 1;
+        if *p == 0 {
+            cv.notify_all();
+        }
+    }
 }
 
 impl ThreadPool {
@@ -40,13 +69,8 @@ impl ThreadPool {
                         };
                         match job {
                             Ok(job) => {
+                                let _done = PendingGuard(&pending);
                                 job();
-                                let (lock, cv) = &*pending;
-                                let mut p = lock.lock().unwrap();
-                                *p -= 1;
-                                if *p == 0 {
-                                    cv.notify_all();
-                                }
                             }
                             Err(_) => break, // channel closed: shut down
                         }
@@ -96,10 +120,330 @@ impl Drop for ThreadPool {
     }
 }
 
-/// Available parallelism (≥ 1) — the default worker count for the parallel
-/// helpers below.
+/// Default worker count (≥ 1): the `NMSPARSE_THREADS` environment variable
+/// when set to a positive integer, otherwise available parallelism. The env
+/// override is how tests and CI pin a deterministic thread count without
+/// plumbing a flag through every entry point (DESIGN.md §2.11).
 pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("NMSPARSE_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
     thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+// ---------------------------------------------------------------------------
+// WorkerPool: persistent parked workers for per-tick scoped parallelism.
+// ---------------------------------------------------------------------------
+
+/// Type-erased borrowed closure: `data` points at a `F: Fn(usize) + Sync`
+/// living in the caller's stack frame and `call` is the monomorphized thunk
+/// that reborrows and invokes it. Sound to hand to `'static` worker threads
+/// only because [`WorkerPool::run`] does not return until every part has
+/// finished (or been drained after a panic), so the pointee outlives every
+/// dereference.
+#[derive(Clone, Copy)]
+struct JobRef {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+}
+
+// SAFETY: JobRef is only ever published under PoolShared.state's mutex and
+// only dereferenced while the owning `run` call is blocked; the closure it
+// points at is required to be Sync.
+unsafe impl Send for JobRef {}
+
+unsafe fn call_thunk<F: Fn(usize)>(data: *const (), part: usize) {
+    (*(data as *const F))(part);
+}
+
+struct PoolState {
+    job: Option<JobRef>,
+    parts: usize,
+    next: usize,
+    inflight: usize,
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers park here between scopes; `run` notifies to wake them.
+    work: Condvar,
+    /// `run` parks here while draining; the last finishing part notifies.
+    done: Condvar,
+}
+
+/// A persistent pool of parked workers for hot-loop scoped work.
+///
+/// `WorkerPool::new(t)` spawns `t - 1` OS threads once; the calling thread
+/// is the t-th worker. Between scopes the workers sleep on a condvar, so an
+/// idle pool costs nothing and a `run` call is one lock + notify (no spawn,
+/// no allocation). [`run`](WorkerPool::run) executes a borrowed closure
+/// `f(part)` for `part ∈ 0..parts`, caller participating, and returns only
+/// when every part is done — which is what makes lending stack borrows to
+/// the `'static` workers sound. Scopes must not nest (enforced at runtime):
+/// partition the output once, at the top of the kernel.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<thread::JoinHandle<()>>,
+    /// Guards against nested / concurrent scopes on one pool, which would
+    /// interleave two jobs' part counters. Atomic (not `Cell`) so the pool
+    /// stays `Sync` and part closures may capture `&pool` for inspection.
+    in_scope: AtomicBool,
+}
+
+impl WorkerPool {
+    /// Create a pool with `threads` total workers (min 1). `threads == 1`
+    /// spawns nothing: every scope runs inline on the caller.
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                job: None,
+                parts: 0,
+                next: 0,
+                inflight: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let mut workers = Vec::with_capacity(threads - 1);
+        for i in 0..threads - 1 {
+            let shared = Arc::clone(&shared);
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("nmsparse-pool-{i}"))
+                    .spawn(move || Self::worker_loop(&shared))
+                    .expect("spawn pool worker"),
+            );
+        }
+        WorkerPool {
+            shared,
+            workers,
+            in_scope: AtomicBool::new(false),
+        }
+    }
+
+    /// Total workers, caller included. Kernels use this to pick a part count.
+    pub fn threads(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    fn worker_loop(shared: &PoolShared) {
+        let mut st = shared.state.lock().unwrap();
+        loop {
+            let job = loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(job) = st.job {
+                    if st.next < st.parts {
+                        break job;
+                    }
+                }
+                st = shared.work.wait(st).unwrap();
+            };
+            let part = st.next;
+            st.next += 1;
+            st.inflight += 1;
+            drop(st);
+            let ok = catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.data, part) }));
+            st = shared.state.lock().unwrap();
+            st.inflight -= 1;
+            if ok.is_err() {
+                st.panicked = true;
+            }
+            if st.next >= st.parts && st.inflight == 0 {
+                shared.done.notify_all();
+            }
+        }
+    }
+
+    /// Run `f(part)` for every `part` in `0..parts` across the pool, caller
+    /// participating, and return once all parts have completed. Parts are
+    /// claimed dynamically (work-stealing by counter), so callers should
+    /// make parts ≈ [`threads`](WorkerPool::threads) with balanced cost.
+    ///
+    /// `f` only borrows (no `'static` bound): sound because this call blocks
+    /// until the last part finishes, draining stragglers even if a part
+    /// panics (the panic is then propagated to the caller). Panics if
+    /// called from inside another scope on the same pool.
+    pub fn run<F>(&self, parts: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if parts == 0 {
+            return;
+        }
+        assert!(
+            !self.in_scope.swap(true, Ordering::SeqCst),
+            "nested WorkerPool scope: partition once at the top of the kernel"
+        );
+        // Reset `in_scope` even when unwinding, so a caught panic leaves
+        // the pool reusable.
+        struct ScopeGuard<'a>(&'a AtomicBool);
+        impl Drop for ScopeGuard<'_> {
+            fn drop(&mut self) {
+                self.0.store(false, Ordering::SeqCst);
+            }
+        }
+        let _scope = ScopeGuard(&self.in_scope);
+
+        if self.workers.is_empty() || parts == 1 {
+            for part in 0..parts {
+                f(part);
+            }
+            return;
+        }
+
+        let job = JobRef {
+            data: &f as *const F as *const (),
+            call: call_thunk::<F>,
+        };
+        let mut st = self.shared.state.lock().unwrap();
+        st.job = Some(job);
+        st.parts = parts;
+        st.next = 0;
+        st.panicked = false;
+        drop(st);
+        self.shared.work.notify_all();
+
+        // The caller claims parts like any worker (no idle spin-up gap).
+        let mut caller_panic = None;
+        loop {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.next >= st.parts {
+                // Out of parts: drain stragglers before releasing borrows.
+                while st.inflight > 0 {
+                    st = self.shared.done.wait(st).unwrap();
+                }
+                st.job = None;
+                st.parts = 0;
+                st.next = 0;
+                let worker_panicked = st.panicked;
+                st.panicked = false;
+                drop(st);
+                if let Some(payload) = caller_panic {
+                    resume_unwind(payload);
+                }
+                if worker_panicked {
+                    panic!("WorkerPool part panicked on a pool thread (see stderr)");
+                }
+                return;
+            }
+            let part = st.next;
+            st.next += 1;
+            st.inflight += 1;
+            drop(st);
+            let ok = catch_unwind(AssertUnwindSafe(|| f(part)));
+            let mut st = self.shared.state.lock().unwrap();
+            st.inflight -= 1;
+            if let Err(payload) = ok {
+                // Remember the first caller-side panic but keep claiming:
+                // stopping early would strand unclaimed parts and deadlock
+                // the drain below. Bump `next` past the end to stop new
+                // claims instead.
+                if caller_panic.is_none() {
+                    caller_panic = Some(payload);
+                }
+                st.next = st.parts;
+            }
+            drop(st);
+        }
+    }
+
+    /// Partition `0..n` into at most [`threads`](WorkerPool::threads)
+    /// contiguous ranges and run `f(start, end)` for each across the pool.
+    /// The common entry point for the row-partitioned kernels: ranges are
+    /// disjoint by construction, so each worker owns its output rows.
+    pub fn run_ranges<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let parts = self.threads().min(n);
+        let per = (n + parts - 1) / parts;
+        self.run(parts, |p| {
+            let lo = p * per;
+            let hi = ((p + 1) * per).min(n);
+            if lo < hi {
+                f(lo, hi);
+            }
+        });
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for w in self.workers.drain(..) {
+            w.join().ok();
+        }
+    }
+}
+
+/// Shared-mutable view over a slice whose writes are *disjoint by caller
+/// contract*. The row-partitioned kernels write strided (lane-major) output
+/// elements from several workers at once — disjoint index sets, but not
+/// contiguous spans, so `split_at_mut` cannot express them. Each `write` /
+/// `slice_mut` is `unsafe`: the caller asserts no two concurrent calls
+/// touch overlapping indices and the pointee outlives the scope (both hold
+/// for [`WorkerPool::run`] over disjoint ranges).
+pub struct DisjointSliceMut<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _life: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: sharing the raw pointer across workers is sound because every
+// dereference site is itself unsafe and contracts disjointness.
+unsafe impl<T: Send> Send for DisjointSliceMut<'_, T> {}
+unsafe impl<T: Send> Sync for DisjointSliceMut<'_, T> {}
+
+impl<'a, T> DisjointSliceMut<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> DisjointSliceMut<'a, T> {
+        DisjointSliceMut {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _life: PhantomData,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write one element. SAFETY: `i < len` and no concurrent access to `i`.
+    #[inline]
+    pub unsafe fn write(&self, i: usize, v: T) {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i) = v;
+    }
+
+    /// Reborrow a subrange as `&mut [T]`. SAFETY: `start + len <= self.len`
+    /// and no concurrent access to any index in the range.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
 }
 
 /// Parallel in-place map over disjoint chunks of `data`: `f(chunk_index,
@@ -261,6 +605,143 @@ mod tests {
     fn wait_idle_on_empty_pool_returns() {
         let pool = ThreadPool::new(2);
         pool.wait_idle();
+    }
+
+    #[test]
+    fn panicking_job_does_not_deadlock_wait_idle() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        pool.execute(|| panic!("job panic (expected in test output)"));
+        for _ in 0..8 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        // Before the drop-guard fix this hung forever: the panicking job
+        // never decremented `pending`, so the count could not reach zero.
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn default_threads_honors_env_override() {
+        // Serialize against other tests reading the env by doing all the
+        // mutation in one test; edition-2021 `set_var` is a safe fn.
+        std::env::set_var("NMSPARSE_THREADS", "3");
+        assert_eq!(default_threads(), 3);
+        std::env::set_var("NMSPARSE_THREADS", " 5 ");
+        assert_eq!(default_threads(), 5, "override is trimmed before parse");
+        std::env::set_var("NMSPARSE_THREADS", "0");
+        assert!(default_threads() >= 1, "zero falls back to parallelism");
+        std::env::set_var("NMSPARSE_THREADS", "not-a-number");
+        assert!(default_threads() >= 1, "junk falls back to parallelism");
+        std::env::remove_var("NMSPARSE_THREADS");
+        assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn worker_pool_covers_all_parts_and_is_reusable() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        let hits: Vec<AtomicU64> = (0..23).map(|_| AtomicU64::new(0)).collect();
+        // Many scopes back-to-back: parks and wakes must not lose parts.
+        for _ in 0..50 {
+            pool.run(hits.len(), |p| {
+                hits[p].fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 50, "part {i}");
+        }
+    }
+
+    #[test]
+    fn worker_pool_single_thread_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let mut out = vec![0u64; 9];
+        let shared = DisjointSliceMut::new(&mut out);
+        pool.run(9, |p| unsafe { shared.write(p, p as u64 + 1) });
+        assert_eq!(out, (1..=9).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn worker_pool_run_ranges_partitions_disjointly() {
+        let pool = WorkerPool::new(3);
+        // 10 rows of 4 strided columns: lane-major writes, disjoint rows.
+        let (rows, cols) = (10usize, 4usize);
+        let mut out = vec![0u64; rows * cols];
+        let shared = DisjointSliceMut::new(&mut out);
+        pool.run_ranges(rows, |lo, hi| {
+            for r in lo..hi {
+                for c in 0..cols {
+                    // SAFETY: row ranges are disjoint across parts.
+                    unsafe { shared.write(c * rows + r, (r * cols + c) as u64 + 1) };
+                }
+            }
+        });
+        for r in 0..rows {
+            for c in 0..cols {
+                assert_eq!(out[c * rows + r], (r * cols + c) as u64 + 1);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked")]
+    fn worker_pool_part_panic_propagates() {
+        let pool = WorkerPool::new(2);
+        let data = vec![1u64; 8];
+        pool.run(8, |p| {
+            assert!(data[p] == 1);
+            if p == 3 {
+                panic!("part panicked deliberately");
+            }
+        });
+    }
+
+    #[test]
+    fn worker_pool_survives_a_panicked_scope() {
+        let pool = WorkerPool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(4, |p| {
+                if p % 2 == 0 {
+                    panic!("scope poisoned (expected in test output)");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // The drain completed and the flags were reset: the pool still works.
+        let counter = AtomicU64::new(0);
+        pool.run(7, |_| {
+            counter.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "nested WorkerPool scope")]
+    fn worker_pool_rejects_nested_scopes() {
+        let pool = WorkerPool::new(2);
+        // parts == 1 keeps the outer closure on the caller thread, so the
+        // nested `run` below deterministically trips the in_scope check.
+        pool.run(1, |_| {
+            pool.run(1, |_| {});
+        });
+    }
+
+    #[test]
+    fn worker_pool_drop_joins_cleanly() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = WorkerPool::new(3);
+            let c = Arc::clone(&counter);
+            pool.run(6, |_| {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        } // drop: workers must wake from their park and join
+        assert_eq!(counter.load(Ordering::SeqCst), 6);
     }
 
     #[test]

@@ -276,11 +276,16 @@ fn coordinator_native_path_roundtrips_through_artifacts_format() {
     assert_eq!(backend.engine().config(), &cfg);
 
     // Calibrated S-PTS now runs natively: per-site eta vectors load from
-    // the methodparams store and shift selection on every site.
+    // the methodparams store and shift selection on every site. Build it
+    // on a 2-wide worker pool (EnginePool plumbs the width to engines
+    // built after the call) — the token comparisons below then also pin
+    // that threading changes nothing on the artifacts path.
+    coord.pool.set_native_threads(2);
     let spts = MethodConfig::by_name("S-PTS", pattern).unwrap();
     let native_spts = coord.pool.native_engine(&spts).unwrap();
     {
         let mut e = native_spts.borrow_mut();
+        assert_eq!(e.threads(), 2, "EnginePool did not apply set_native_threads");
         assert!(e.sparsity().is_per_site());
         assert!(!e.uses_packed(), "eta-shifted pipelines are not selection-only");
         // And it decodes: tokens match a hand-built per-site engine.

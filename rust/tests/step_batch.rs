@@ -10,11 +10,16 @@
 //! - peak page-pool bytes track live context, not `sessions × max_seq`;
 //! - the batched serving backend (`decode_step_sessions` chunked to the
 //!   session cap) matches the sequential sliding reference under
-//!   interleaving and eviction.
+//!   interleaving and eviction;
+//! - threading is invisible to the math: a `step_batch` run on a 2/4/7
+//!   wide worker pool (widths chosen to NOT divide the row counts) emits
+//!   the same logit bits as the single-threaded run, and the pool itself
+//!   parks/wakes across many scopes, joins cleanly on drop, and rejects
+//!   nested scopes.
 
 use nmsparse::coordinator::server::{NativeBackend, ReplicaBackend};
 use nmsparse::engine::{
-    window_start, EngineConfig, NativeEngine, NativeSparsity, SessionKvPool, StepBatch,
+    window_start, EngineConfig, NativeEngine, NativeSparsity, SessionKvPool, StepBatch, WorkerPool,
 };
 use nmsparse::sparsity::Pattern;
 use nmsparse::util::miniprop::{forall_simple, Config};
@@ -374,6 +379,137 @@ fn re_ticking_an_unchanged_row_re_emits_instead_of_ending() {
         }
         backend.end_session(id);
     }
+}
+
+#[test]
+fn prop_threaded_step_batch_bitwise_identical_to_single_threaded() {
+    // The tentpole's core claim: the worker pool changes wall time,
+    // never bits. Replay the same batched decode (ragged prompts, ragged
+    // budgets, greedy extension, tiny pages) on pools of width 1/2/4/7 —
+    // 7 divides none of vocab 48, d_model 32, ffn 64, so every width
+    // exercises uneven row-range partitions — and require the full
+    // per-tick logit-bit trace to be identical across widths.
+    let cfg = Config { cases: 10, ..Config::default() };
+    let pats = [
+        Pattern::Dense,
+        Pattern::NM { n: 2, m: 4 },
+        Pattern::NM { n: 8, m: 16 },
+        Pattern::NM { n: 16, m: 32 },
+    ];
+    forall_simple(
+        &cfg,
+        |rng: &mut Rng| {
+            let pattern = pats[rng.range(0, pats.len())];
+            let seed = rng.next_u64();
+            let lanes = rng.range(1, 6);
+            let page_tokens = rng.range(1, 7);
+            let prompts: Vec<Vec<u32>> = (0..lanes)
+                .map(|_| {
+                    let len = rng.range(1, 9);
+                    (0..len).map(|_| rng.range(0, 48) as u32).collect()
+                })
+                .collect();
+            let budgets: Vec<usize> = (0..lanes).map(|_| rng.range(1, 8)).collect();
+            (pattern, seed, page_tokens, prompts, budgets)
+        },
+        |(pattern, seed, page_tokens, prompts, budgets)| {
+            let ecfg = test_cfg(24);
+            let lanes = prompts.len();
+            let total: Vec<usize> =
+                prompts.iter().zip(budgets).map(|(p, b)| p.len() + b - 1).collect();
+            // One full batched decode at a given pool width; returns the
+            // concatenated per-tick logit bits of every live lane.
+            let run = |threads: usize| -> Vec<Vec<u32>> {
+                let mut e =
+                    NativeEngine::synthetic(&ecfg, *seed, NativeSparsity::act(*pattern))
+                        .unwrap()
+                        .with_threads(threads);
+                let mut pool = e.new_kv_pool_with(*page_tokens);
+                let mut sessions = SessionKvPool::new(lanes);
+                let mut batch = StepBatch::new();
+                let mut rows: Vec<Vec<u32>> = prompts.clone();
+                let mut fed = vec![0usize; lanes];
+                let mut trace: Vec<Vec<u32>> = Vec::new();
+                loop {
+                    batch.clear();
+                    let mut stepped: Vec<usize> = Vec::new();
+                    for i in 0..lanes {
+                        if fed[i] < total[i] {
+                            batch.push(i as u64 + 1, rows[i][fed[i]]);
+                            stepped.push(i);
+                        }
+                    }
+                    if batch.is_empty() {
+                        break;
+                    }
+                    for &i in &stepped {
+                        sessions.get_or_create(&mut pool, i as u64 + 1);
+                    }
+                    e.step_batch(&mut batch, &mut sessions, &mut pool).unwrap();
+                    for (lane, &i) in stepped.iter().enumerate() {
+                        trace.push(batch.logits(lane).iter().map(|v| v.to_bits()).collect());
+                        fed[i] += 1;
+                        if fed[i] == rows[i].len() && fed[i] < total[i] {
+                            let tok = batch.argmax(lane);
+                            rows[i].push(tok);
+                        }
+                    }
+                }
+                trace
+            };
+            let base = run(1);
+            !base.is_empty() && [2usize, 4, 7].iter().all(|&t| run(t) == base)
+        },
+    );
+}
+
+#[test]
+fn worker_pool_parks_wakes_and_reuses_across_many_scopes() {
+    // One spawn, many ticks: the engine-lifetime usage pattern. Workers
+    // park between scopes; every scope must still run every part exactly
+    // once (the counter is exact, not ≥).
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let pool = WorkerPool::new(4);
+    assert_eq!(pool.threads(), 4);
+    let hits = AtomicUsize::new(0);
+    for round in 0..100 {
+        let parts = 1 + round % 9; // exercises the parts==1 inline path too
+        pool.run(parts, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    let want: usize = (0..100).map(|r| 1 + r % 9).sum();
+    assert_eq!(hits.load(Ordering::Relaxed), want);
+}
+
+#[test]
+fn worker_pool_drop_joins_cleanly_after_use() {
+    // Dropping a pool mid-lifetime (engine teardown) must join, not hang
+    // or leak parked threads — at widths below, at, and above the part
+    // count, used or never used.
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    for threads in [1usize, 2, 5] {
+        let pool = WorkerPool::new(threads);
+        let sum = AtomicUsize::new(0);
+        pool.run_ranges(33, |lo, hi| {
+            sum.fetch_add(hi - lo, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 33, "threads={threads}");
+        drop(pool);
+        let unused = WorkerPool::new(threads);
+        drop(unused); // never ran a scope: workers still parked
+    }
+}
+
+#[test]
+#[should_panic(expected = "nested WorkerPool scope")]
+fn worker_pool_rejects_nested_scopes_from_integration_surface() {
+    // Kernels partition once at the top; a part that re-enters the pool
+    // would deadlock against its own scope, so it panics instead.
+    // (parts == 1 runs inline, so the rejection fires on this thread and
+    // the original panic message propagates.)
+    let pool = WorkerPool::new(2);
+    pool.run(1, |_| pool.run(1, |_| {}));
 }
 
 #[test]

@@ -11,7 +11,8 @@ Three emitters write these files (see DESIGN.md §3):
 - rust/benches/decode.rs    -> BENCH_decode.json (native KV-cached decode
   engine: step cost vs context for the cached and full-context loops,
   batched step_batch vs sequential per-session tok/s per lane count,
-  measured packed-vs-dense activation bytes)
+  the threads x lanes worker-pool grid, measured packed-vs-dense
+  activation bytes)
 
 `nmsparse table table6`/`table serving` and `examples/hw_breakeven.rs`
 consume them, so a malformed dump silently degrades the measured columns
@@ -22,6 +23,8 @@ a BENCH_*.json with no registered schema is an error (every emitter must
 register here).
 
 Usage: tools/check_bench_json.py [dir ...]   (default: repo root and rust/)
+       tools/check_bench_json.py --self-test (run the checkers against
+                                              inline good/bad fixtures)
 """
 
 import json
@@ -271,6 +274,45 @@ def check_decode(doc, path):
             doc["packed_bytes_per_step"] >= doc["dense_bytes_per_step"]:
         bad |= err(path, f"packed bytes/step {doc['packed_bytes_per_step']} not "
                          f"below dense {doc['dense_bytes_per_step']}")
+    # Threads x lanes worker-pool grid: the bench pins every cell bitwise
+    # logits-identical to the single-threaded run before timing, so the
+    # only thing left to gate here is that threading actually pays where
+    # there are rows to spread.
+    bad |= require(doc, "thread_grid", list, path, "top level")
+    if bad:
+        return bad
+    if not doc["thread_grid"]:
+        return err(path, "'thread_grid' is empty — the bench always emits the grid")
+    cells = {}
+    for i, g in enumerate(doc["thread_grid"]):
+        ctx = f"thread_grid[{i}]"
+        if not isinstance(g, dict):
+            return err(path, f"{ctx} is not an object")
+        for key in ("threads", "lanes", "tokens_per_sec"):
+            bad |= require(g, key, (int, float), path, ctx)
+        if bad:
+            return bad
+        if g["threads"] < 1 or g["lanes"] < 1:
+            bad |= err(path, f"{ctx}: threads/lanes must be >= 1")
+        if g["tokens_per_sec"] <= 0:
+            bad |= err(path, f"{ctx}: non-positive tokens/sec")
+        cell = (g["threads"], g["lanes"])
+        if cell in cells:
+            bad |= err(path, f"{ctx}: duplicate (threads, lanes) cell {cell}")
+        cells[cell] = g["tokens_per_sec"]
+    # The monotone gate: with lane-level work to spread (lanes >= 4), a
+    # 4-wide pool must not decode slower than the single-threaded run.
+    gated = 0
+    for (threads, lanes), tps in sorted(cells.items()):
+        if threads == 4 and lanes >= 4 and (1, lanes) in cells:
+            gated += 1
+            if tps < cells[(1, lanes)]:
+                bad |= err(path, f"thread_grid: 4 threads ({tps} tok/s) slower "
+                                 f"than 1 thread ({cells[(1, lanes)]} tok/s) at "
+                                 f"lanes {lanes} — worker pool not paying")
+    if gated == 0:
+        bad |= err(path, "thread_grid: no (threads=4, lanes>=4) cell with a "
+                         "threads=1 twin — the monotone gate never ran")
     return bad
 
 
@@ -284,7 +326,91 @@ CHECKERS = {
 }
 
 
+def _good_decode_doc():
+    """A minimal BENCH_decode.json that every decode gate accepts."""
+    contexts = [{"context": c, "cached_step_ms": 0.10 + 0.01 * i,
+                 "full_step_ms": 0.2 * (i + 1)}
+                for i, c in enumerate((8, 32, 96))]
+    batched = [{"batch": b,
+                "batched_tokens_per_sec": 1000.0 * max(b, 2),
+                "sequential_tokens_per_sec": 900.0 * b}
+               for b in (1, 4, 8)]
+    grid = [{"threads": t, "lanes": l,
+             "tokens_per_sec": 800.0 * (t if l >= 4 else 1.0) * l}
+            for l in (1, 4, 16) for t in (1, 2, 4)]
+    return {
+        "suite": "decode", "backend": "synthetic",
+        "pattern": "8:16", "method": "ACT",
+        "model": {"vocab": 160, "d_model": 128, "n_layers": 2,
+                  "ffn": 256, "max_seq": 128},
+        "prefill_tokens_per_sec": 5.0e4, "decode_tokens_per_sec": 2.0e4,
+        "contexts": contexts, "batched": batched, "thread_grid": grid,
+        "cached_step_growth": 1.2, "full_step_growth": 3.0,
+        "dense_bytes_per_step": 1000.0, "packed_bytes_per_step": 400.0,
+        "bytes_reduction": 2.5,
+    }
+
+
+def self_test():
+    """Run check_decode against inline good/bad fixtures.
+
+    The gates only fire on files that exist, so a regression that silently
+    stops rejecting a bad dump would otherwise go unnoticed until a bench
+    actually produced one. CI runs this mode unconditionally.
+    """
+    import contextlib
+    import copy
+    import io
+
+    failures = []
+    good = _good_decode_doc()
+    if check_decode(copy.deepcopy(good), "<self-test:good>") != 0:
+        failures.append("good decode fixture rejected")
+
+    def expect_bad(label, mutate):
+        doc = copy.deepcopy(good)
+        mutate(doc)
+        with contextlib.redirect_stderr(io.StringIO()):
+            rejected = check_decode(doc, f"<self-test:{label}>") != 0
+        if not rejected:
+            failures.append(f"bad fixture accepted: {label}")
+
+    def slow_t4(doc):
+        for g in doc["thread_grid"]:
+            if g["threads"] == 4 and g["lanes"] == 4:
+                g["tokens_per_sec"] = 1.0  # below the threads=1 twin
+
+    def vacuous_grid(doc):
+        doc["thread_grid"] = [g for g in doc["thread_grid"] if g["lanes"] == 1]
+
+    def duplicate_cell(doc):
+        doc["thread_grid"].append(dict(doc["thread_grid"][0]))
+
+    expect_bad("missing thread_grid", lambda d: d.pop("thread_grid"))
+    expect_bad("empty thread_grid", lambda d: d.update(thread_grid=[]))
+    expect_bad("thread gate violated", slow_t4)
+    expect_bad("vacuous grid (no lanes>=4 pair)", vacuous_grid)
+    expect_bad("duplicate grid cell", duplicate_cell)
+    expect_bad("non-positive grid tok/s",
+               lambda d: d["thread_grid"][0].update(tokens_per_sec=0.0))
+    expect_bad("batched slower at batch 4",
+               lambda d: d["batched"][1].update(batched_tokens_per_sec=1.0))
+    expect_bad("cached growth not below full growth",
+               lambda d: d.update(cached_step_growth=5.0))
+    expect_bad("packed bytes not below dense",
+               lambda d: d.update(packed_bytes_per_step=2000.0))
+
+    if failures:
+        for f in failures:
+            print(f"check_bench_json --self-test: FAIL: {f}", file=sys.stderr)
+        return 1
+    print("check_bench_json --self-test: all fixtures behaved")
+    return 0
+
+
 def main(argv):
+    if argv[1:] == ["--self-test"]:
+        return self_test()
     roots = [Path(p) for p in argv[1:]] or [Path("."), Path("rust")]
     seen, bad = 0, 0
     visited = set()

@@ -56,6 +56,18 @@ if [ -z "$HB" ] || [ "$HB" != "$HS" ]; then
   exit 1
 fi
 echo "ci: batched decode smoke OK ($HB)"
+# Threaded-decode smoke: the same batched run on a 4-wide worker pool
+# (--check pins batched == sequential in-process on the threaded engine)
+# must hash-identical to the single-threaded run above — threading
+# changes wall time, never bits (DESIGN.md §2.11).
+THREAD_ARGS="decode --seed 5 --lanes 4 --prompt-len 5 --max-new 10 --page-tokens 8 --check"
+HT="$(cargo run --release -q -- $THREAD_ARGS --threads 4 | grep '^hash ')"
+H1T="$(cargo run --release -q -- $THREAD_ARGS --threads 1 | grep '^hash ')"
+if [ -z "$HT" ] || [ "$HT" != "$H1T" ] || [ "$HT" != "$HB" ]; then
+  echo "ci: threaded decode smoke failed (4 threads '$HT' vs 1 thread '$H1T')" >&2
+  exit 1
+fi
+echo "ci: threaded decode smoke OK ($HT)"
 # ...and the same batched path end-to-end through a 2-replica ServerCore
 # (generate-heavy so every tick exercises step_batch).
 cargo run --release -q -- loadgen \
@@ -70,6 +82,9 @@ cargo run --release -q -- loadgen \
 # (absent files are fine — benches are optional here; unknown BENCH_*.json
 # names or schema violations are not).
 if command -v python3 >/dev/null 2>&1; then
+  # First prove the gates themselves still reject bad dumps (inline
+  # good/bad fixtures), then scan whatever dumps exist.
+  python3 "$ROOT/tools/check_bench_json.py" --self-test
   python3 "$ROOT/tools/check_bench_json.py" "$ROOT" "$ROOT/rust" "$(pwd)"
 else
   echo "ci: python3 not found — skipping BENCH_*.json schema check"
