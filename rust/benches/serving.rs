@@ -121,6 +121,7 @@ fn main() {
                 batch: 16,
                 forward_cost: Duration::from_micros(150),
             },
+            ..Default::default()
         };
         let name = "server_core/closed-loop 512 mixed x2 replicas (reqs)";
         let mut last = None;

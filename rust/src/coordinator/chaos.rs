@@ -1,0 +1,445 @@
+//! Deterministic fault injection for the serving core.
+//!
+//! [`ChaosBackend`] wraps any [`ReplicaBackend`] and executes a
+//! [`FaultPlan`] against it: at engine-op tick `N` it panics, returns an
+//! error, or stalls for a fixed number of milliseconds. Every decision is
+//! a pure function of the plan and the op counter — no clocks, no OS
+//! randomness — so a failure schedule replays bit-for-bit and the
+//! supervision tests in `rust/tests/server_core.rs` can pin exact restart
+//! and retry counts.
+//!
+//! Three pieces:
+//!
+//! - [`FaultPlan`]: a sorted list of one-shot faults, written in a tiny
+//!   spec grammar (`panic@3;err@7;stall@5:20` — panic at op 3, error at
+//!   op 7, 20 ms stall at op 5) or drawn from a seed
+//!   ([`FaultPlan::seeded`], which always includes at least one panic so
+//!   chaos runs always exercise the restart path).
+//! - [`ChaosHandle`]: the *shared* tick counter + unfired faults. It
+//!   lives outside the replica factory, so a rebuilt backend wrapped
+//!   around the same handle continues the tick sequence instead of
+//!   replaying fault 1 — a `panic@3` fires exactly once per plan, not
+//!   once per restart.
+//! - [`ChaosArg`]: the `--chaos` CLI argument — an integer seed (each
+//!   replica derives its own plan) or an explicit spec string (every
+//!   replica runs the same plan).
+//!
+//! Faults fire on the two engine ops (`score_rows`,
+//! `decode_step_sessions`); the passthrough surface (`batch`,
+//! `stop_tokens`, `end_session`) is never faulted, so capacity probing
+//! and cleanup stay reliable even mid-plan.
+
+use crate::coordinator::server::ReplicaBackend;
+use crate::util::prng::Rng;
+use anyhow::{bail, Result};
+use std::collections::BTreeSet;
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Duration;
+
+/// One scheduled fault, keyed by the 1-based engine-op tick it fires at.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Panic inside the backend call (the supervisor must catch it).
+    Panic { tick: u64 },
+    /// Return `Err` from the backend call.
+    Error { tick: u64 },
+    /// Sleep `ms` milliseconds, then run the op normally.
+    Stall { tick: u64, ms: u64 },
+}
+
+impl Fault {
+    pub fn tick(&self) -> u64 {
+        match self {
+            Fault::Panic { tick } | Fault::Error { tick } | Fault::Stall { tick, .. } => *tick,
+        }
+    }
+}
+
+/// A reproducible failure schedule: one-shot faults at distinct ticks.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// Parse the spec grammar: `;`-separated terms of `panic@N`, `err@N`
+    /// or `stall@N:D` (D in milliseconds), ticks 1-based and distinct.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut faults = Vec::new();
+        let mut ticks = BTreeSet::new();
+        for term in spec.split(';').map(str::trim).filter(|t| !t.is_empty()) {
+            let (kind, rest) = term
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("chaos term '{term}' is missing '@tick'"))?;
+            let fault = match kind {
+                "panic" | "err" => {
+                    let tick: u64 = rest
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("chaos term '{term}': bad tick '{rest}'"))?;
+                    if kind == "panic" {
+                        Fault::Panic { tick }
+                    } else {
+                        Fault::Error { tick }
+                    }
+                }
+                "stall" => {
+                    let (t, d) = rest.split_once(':').ok_or_else(|| {
+                        anyhow::anyhow!("chaos term '{term}' needs 'stall@tick:ms'")
+                    })?;
+                    let tick: u64 = t
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("chaos term '{term}': bad tick '{t}'"))?;
+                    let ms: u64 = d
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("chaos term '{term}': bad ms '{d}'"))?;
+                    Fault::Stall { tick, ms }
+                }
+                other => bail!("unknown chaos fault kind '{other}' (panic|err|stall)"),
+            };
+            if fault.tick() == 0 {
+                bail!("chaos term '{term}': ticks are 1-based");
+            }
+            if !ticks.insert(fault.tick()) {
+                bail!("chaos spec '{spec}': duplicate tick {}", fault.tick());
+            }
+            faults.push(fault);
+        }
+        faults.sort_by_key(Fault::tick);
+        Ok(FaultPlan { faults })
+    }
+
+    /// Draw a plan from a seed: 1–2 panics (always at least one, early
+    /// enough that a bounded run reaches them even with full batches
+    /// shrinking the op count), plus 0–2 errors and 0–2 short stalls.
+    /// `horizon` is roughly the number of requests the plan should span.
+    pub fn seeded(seed: u64, horizon: u64) -> FaultPlan {
+        let mut rng = Rng::new(seed);
+        let hi = horizon.max(8);
+        let early = ((hi / 12).max(4)) as usize; // panic ticks in [1, early]
+        let late = ((hi / 3).max(8)) as usize; // other ticks in [1, late]
+        let mut ticks = BTreeSet::new();
+        let mut faults = Vec::new();
+        for _ in 0..1 + rng.below(2) {
+            faults.push(Fault::Panic { tick: draw_tick(&mut rng, &mut ticks, early) });
+        }
+        for _ in 0..rng.below(3) {
+            faults.push(Fault::Error { tick: draw_tick(&mut rng, &mut ticks, late) });
+        }
+        for _ in 0..rng.below(3) {
+            let ms = 1 + rng.below(8) as u64;
+            faults.push(Fault::Stall { tick: draw_tick(&mut rng, &mut ticks, late), ms });
+        }
+        faults.sort_by_key(Fault::tick);
+        FaultPlan { faults }
+    }
+
+    pub fn faults(&self) -> &[Fault] {
+        &self.faults
+    }
+
+    /// Render back to the spec grammar (sorted by tick; parseable).
+    pub fn to_spec(&self) -> String {
+        let terms: Vec<String> = self
+            .faults
+            .iter()
+            .map(|f| match f {
+                Fault::Panic { tick } => format!("panic@{tick}"),
+                Fault::Error { tick } => format!("err@{tick}"),
+                Fault::Stall { tick, ms } => format!("stall@{tick}:{ms}"),
+            })
+            .collect();
+        terms.join(";")
+    }
+}
+
+/// Distinct 1-based tick in `[1, hi]`. The draw ranges are far larger
+/// than the fault counts, so the rejection loop terminates fast.
+fn draw_tick(rng: &mut Rng, ticks: &mut BTreeSet<u64>, hi: usize) -> u64 {
+    loop {
+        let t = rng.range(1, hi + 1) as u64;
+        if ticks.insert(t) {
+            return t;
+        }
+    }
+}
+
+struct ChaosInner {
+    /// Engine ops observed so far (across backend rebuilds).
+    tick: u64,
+    /// Faults that have not fired yet.
+    pending: Vec<Fault>,
+}
+
+/// Shared fault state for one replica: the op counter and the unfired
+/// remainder of its plan. Clone it into every [`ChaosBackend`] built for
+/// that replica — the state survives rebuilds, so each fault is one-shot
+/// for the plan's lifetime, not per backend instance.
+#[derive(Clone)]
+pub struct ChaosHandle {
+    inner: Arc<Mutex<ChaosInner>>,
+}
+
+impl ChaosHandle {
+    pub fn new(plan: FaultPlan) -> ChaosHandle {
+        let inner = ChaosInner { tick: 0, pending: plan.faults };
+        ChaosHandle { inner: Arc::new(Mutex::new(inner)) }
+    }
+
+    /// Shorthand for `ChaosHandle::new(FaultPlan::seeded(..))`.
+    pub fn seeded(seed: u64, horizon: u64) -> ChaosHandle {
+        ChaosHandle::new(FaultPlan::seeded(seed, horizon))
+    }
+
+    /// Engine ops observed so far.
+    pub fn ticks(&self) -> u64 {
+        self.lock().tick
+    }
+
+    /// Faults still waiting to fire.
+    pub fn remaining(&self) -> usize {
+        self.lock().pending.len()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, ChaosInner> {
+        // An injected panic unwinds *after* the guard is dropped, so the
+        // mutex is never poisoned by design — recovery here is belt and
+        // braces against future faults that fire under the lock.
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Advance the op counter and act out the fault scheduled for this
+    /// tick, if any. The decision happens under the lock; the action
+    /// (sleep / `Err` / panic) happens after the guard is dropped, so a
+    /// panic can never poison the shared state.
+    fn before_op(&self) -> Result<()> {
+        let fired = {
+            let mut g = self.lock();
+            g.tick += 1;
+            let t = g.tick;
+            match g.pending.iter().position(|f| f.tick() == t) {
+                Some(i) => Some(g.pending.remove(i)),
+                None => None,
+            }
+        };
+        match fired {
+            None => Ok(()),
+            Some(Fault::Stall { ms, .. }) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                Ok(())
+            }
+            Some(Fault::Error { tick }) => bail!("chaos: injected error at tick {tick}"),
+            Some(Fault::Panic { tick }) => panic!("chaos: injected panic at tick {tick}"),
+        }
+    }
+}
+
+/// A [`ReplicaBackend`] that runs its inner backend's ops through a
+/// [`ChaosHandle`]. With `chaos: None` it is a pure passthrough, so all
+/// launcher backend arms can wrap unconditionally and a no-chaos run
+/// stays bitwise identical to an unwrapped one.
+pub struct ChaosBackend<B> {
+    inner: B,
+    chaos: Option<ChaosHandle>,
+}
+
+impl<B: ReplicaBackend> ChaosBackend<B> {
+    pub fn new(inner: B, chaos: Option<ChaosHandle>) -> ChaosBackend<B> {
+        ChaosBackend { inner, chaos }
+    }
+
+    fn tick(&self) -> Result<()> {
+        match &self.chaos {
+            Some(h) => h.before_op(),
+            None => Ok(()),
+        }
+    }
+}
+
+impl<B: ReplicaBackend> ReplicaBackend for ChaosBackend<B> {
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+
+    fn score_rows(&mut self, rows: &[(Vec<u32>, (usize, usize))]) -> Result<Vec<f64>> {
+        self.tick()?;
+        self.inner.score_rows(rows)
+    }
+
+    fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> Result<Vec<Option<u32>>> {
+        self.tick()?;
+        self.inner.decode_step_sessions(rows)
+    }
+
+    fn end_session(&mut self, id: u64) {
+        self.inner.end_session(id);
+    }
+
+    fn stop_tokens(&self) -> Vec<u32> {
+        self.inner.stop_tokens()
+    }
+}
+
+/// The `--chaos` CLI argument: a bare integer is a seed (each replica
+/// derives its own [`FaultPlan`]); anything else is a spec every replica
+/// runs verbatim.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ChaosArg {
+    Seed(u64),
+    Spec(FaultPlan),
+}
+
+impl ChaosArg {
+    pub fn parse(s: &str) -> Result<ChaosArg> {
+        let s = s.trim();
+        if s.is_empty() {
+            bail!("empty --chaos argument (want a seed or a fault spec)");
+        }
+        if s.bytes().all(|b| b.is_ascii_digit()) {
+            return Ok(ChaosArg::Seed(s.parse()?));
+        }
+        Ok(ChaosArg::Spec(FaultPlan::parse(s)?))
+    }
+
+    /// Build replica `r`'s handle. Seeds are decorrelated per replica
+    /// (golden-ratio stride); explicit specs replay identically on every
+    /// replica.
+    pub fn handle_for(&self, replica: usize, horizon: u64) -> ChaosHandle {
+        match self {
+            ChaosArg::Seed(seed) => {
+                let stride = 0x9e37_79b9_7f4a_7c15u64;
+                let sub = seed.wrapping_add(stride.wrapping_mul(replica as u64 + 1));
+                ChaosHandle::seeded(sub, horizon)
+            }
+            ChaosArg::Spec(plan) => ChaosHandle::new(plan.clone()),
+        }
+    }
+
+    /// Human-readable form for run banners.
+    pub fn describe(&self) -> String {
+        match self {
+            ChaosArg::Seed(seed) => format!("seed {seed}"),
+            ChaosArg::Spec(plan) => format!("spec '{}'", plan.to_spec()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    /// Counts calls; never fails on its own.
+    struct CountBackend {
+        calls: usize,
+    }
+
+    impl ReplicaBackend for CountBackend {
+        fn batch(&self) -> usize {
+            2
+        }
+
+        fn score_rows(&mut self, rows: &[(Vec<u32>, (usize, usize))]) -> Result<Vec<f64>> {
+            self.calls += 1;
+            Ok(vec![0.0; rows.len()])
+        }
+
+        fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> Result<Vec<Option<u32>>> {
+            self.calls += 1;
+            Ok(vec![Some(3); rows.len()])
+        }
+
+        fn stop_tokens(&self) -> Vec<u32> {
+            vec![1]
+        }
+    }
+
+    const ROW: (Vec<u32>, (usize, usize)) = (Vec::new(), (0, 0));
+
+    #[test]
+    fn spec_grammar_roundtrips_and_sorts() {
+        let plan = FaultPlan::parse("err@7; panic@3 ;stall@5:20").unwrap();
+        assert_eq!(plan.to_spec(), "panic@3;stall@5:20;err@7");
+        assert_eq!(FaultPlan::parse(&plan.to_spec()).unwrap(), plan);
+        assert_eq!(plan.faults().len(), 3);
+        assert_eq!(FaultPlan::parse("").unwrap().faults().len(), 0);
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        for bad in ["panic@", "boom@3", "panic@3;err@3", "stall@3", "stall@x:5", "panic@0"] {
+            assert!(FaultPlan::parse(bad).is_err(), "spec '{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_always_panic() {
+        for seed in [0u64, 7, 9, 0xBEEF, u64::MAX] {
+            let a = FaultPlan::seeded(seed, 100);
+            assert_eq!(a, FaultPlan::seeded(seed, 100), "seed {seed} must replay");
+            assert!(
+                a.faults().iter().any(|f| matches!(f, Fault::Panic { .. })),
+                "seed {seed} plan has no panic: {a:?}"
+            );
+            let mut seen = BTreeSet::new();
+            for f in a.faults() {
+                assert!(f.tick() >= 1);
+                assert!(seen.insert(f.tick()), "seed {seed}: duplicate tick");
+            }
+        }
+        assert_ne!(FaultPlan::seeded(1, 100), FaultPlan::seeded(2, 100));
+    }
+
+    #[test]
+    fn faults_fire_once_and_ticks_survive_rebuild() {
+        let h = ChaosHandle::new(FaultPlan::parse("err@2;panic@3").unwrap());
+        let mut b1 = ChaosBackend::new(CountBackend { calls: 0 }, Some(h.clone()));
+        assert!(b1.score_rows(&[ROW]).is_ok()); // tick 1
+        assert!(b1.score_rows(&[ROW]).is_err()); // tick 2: injected error
+        drop(b1);
+        // Rebuild around the SAME handle: the plan continues at tick 3.
+        let mut b2 = ChaosBackend::new(CountBackend { calls: 0 }, Some(h.clone()));
+        let panicked = catch_unwind(AssertUnwindSafe(|| {
+            let _ = b2.decode_step_sessions(&[(0, &[4u32][..])]);
+        }))
+        .is_err();
+        assert!(panicked, "tick 3 must panic");
+        assert!(b2.score_rows(&[ROW]).is_ok()); // tick 4: plan exhausted
+        assert_eq!(h.ticks(), 4);
+        assert_eq!(h.remaining(), 0);
+    }
+
+    #[test]
+    fn stall_sleeps_then_succeeds() {
+        let h = ChaosHandle::new(FaultPlan::parse("stall@1:5").unwrap());
+        let mut b = ChaosBackend::new(CountBackend { calls: 0 }, Some(h.clone()));
+        let t0 = std::time::Instant::now();
+        assert!(b.score_rows(&[ROW]).is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+        assert_eq!(h.remaining(), 0);
+    }
+
+    #[test]
+    fn passthrough_without_handle() {
+        let mut b = ChaosBackend::new(CountBackend { calls: 0 }, None);
+        for _ in 0..10 {
+            assert!(b.score_rows(&[ROW]).is_ok());
+        }
+        assert_eq!(b.batch(), 2);
+        assert_eq!(b.stop_tokens(), vec![1]);
+    }
+
+    #[test]
+    fn chaos_arg_parses_seed_or_spec() {
+        assert_eq!(ChaosArg::parse("42").unwrap(), ChaosArg::Seed(42));
+        let spec = ChaosArg::parse("panic@2;stall@4:3").unwrap();
+        assert!(matches!(spec, ChaosArg::Spec(_)));
+        assert!(ChaosArg::parse("").is_err());
+        assert!(ChaosArg::parse("nope@1").is_err());
+        // Per-replica seed plans are decorrelated but individually stable.
+        let arg = ChaosArg::Seed(7);
+        let h0 = arg.handle_for(0, 96);
+        let h1 = arg.handle_for(0, 96);
+        assert_eq!(h0.remaining(), h1.remaining());
+        assert_eq!(arg.describe(), "seed 7");
+    }
+}

@@ -7,13 +7,18 @@
 //! - [`scheduler`]: continuous batching of mixed score/generate traffic;
 //! - [`server`]: the socket-free multi-replica serving core (bounded
 //!   admission, session-affine routing, deadline-driven batching,
-//!   per-request latency stats) behind `nmsparse serve` / `loadgen`;
+//!   supervised replica restarts, per-request deadlines, latency stats)
+//!   behind `nmsparse serve` / `loadgen`;
+//! - [`chaos`]: deterministic fault injection ([`chaos::ChaosBackend`] +
+//!   seeded [`chaos::FaultPlan`]s) so the failure paths above replay
+//!   bit-for-bit under test and `loadgen --chaos`;
 //! - [`Coordinator`]: the high-level API the eval harness, tables, server
 //!   and examples use — score rows, measure perplexity, greedy-generate
 //!   (full-context PJRT by default; KV-cached native decode via
 //!   [`Coordinator::set_native`] / `EnginePool::native_engine`).
 
 pub mod batcher;
+pub mod chaos;
 pub mod methods;
 pub mod pool;
 pub mod scheduler;

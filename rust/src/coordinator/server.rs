@@ -42,6 +42,20 @@
 //! - **Graceful drain.** [`ServerCore::shutdown`] stops admission, wakes
 //!   every replica, and joins them only after all admitted work has been
 //!   answered — no ticket is left dangling.
+//! - **Supervised replicas.** Backend calls run under `catch_unwind`; a
+//!   panic (or an `Err`) fails the replica, not the server. Every
+//!   request the dead engine held gets a terminal answer — stateless
+//!   `score`s are transparently retried on a live sibling (bounded by
+//!   [`MAX_SCORE_RETRIES`]), stateful `generate` sessions fail fast with
+//!   [`ERR_REPLICA_FAILED`] — and the backend is rebuilt via the same
+//!   factory with capped exponential backoff ([`ReplicaStats::restarts`]
+//!   counts successful rebuilds). Work staged behind the failure stays
+//!   queued and is served after the rebuild; stealing and least-loaded
+//!   routing both avoid dead replicas (DESIGN.md §2.12).
+//! - **Per-request deadlines.** [`ServerHandle::submit_with`] carries an
+//!   optional absolute deadline; an expired request is shed from the
+//!   staged queue with a terminal [`ERR_TIMEOUT`] error instead of
+//!   occupying a batch lane (`--request-timeout-ms` on serve/loadgen).
 //! - **Measured, not asserted.** Every request's submit→reply latency is
 //!   recorded into a [`Histogram`] (p50/p95/p99), and batch occupancy
 //!   uses the `packing_efficiency` formula over dispatched rows vs
@@ -60,11 +74,36 @@ use crate::util::stats::Histogram;
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
 use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Terminal error message for requests on a replica whose backend
+/// panicked or errored (the `{"ok":false,"error":"replica_failed"}` the
+/// wire layer forwards verbatim).
+pub const ERR_REPLICA_FAILED: &str = "replica_failed";
+
+/// Terminal error message for requests whose deadline expired while
+/// staged (shed before occupying a batch lane).
+pub const ERR_TIMEOUT: &str = "timeout";
+
+/// Cross-replica retry budget for idempotent (score) requests whose
+/// replica failed mid-flight. Generates are never retried — a session's
+/// KV state died with its engine, and silently replaying a stateful
+/// request is worse than a fast, distinguishable failure.
+pub const MAX_SCORE_RETRIES: u32 = 2;
+
+/// Lock that survives poisoning: a replica thread that panics inside a
+/// backend call is caught by the supervisor, but if any future unwind
+/// path does poison a stats/inject mutex, healthy replicas and the
+/// `stats` op must keep working — the plain data under these locks is
+/// never left mid-update across an unwind boundary.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 // ---------------------------------------------------------------- requests
 
@@ -112,8 +151,10 @@ pub struct Ticket {
 }
 
 impl Ticket {
-    /// Block until the reply arrives. `None` only if the replica died
-    /// without answering (never happens on the drain path).
+    /// Block until the reply arrives. The supervised core answers every
+    /// admitted request terminally — success, [`ERR_TIMEOUT`], or
+    /// [`ERR_REPLICA_FAILED`] — so `None` (sender dropped without a
+    /// reply) indicates the core itself was torn down ungracefully.
     pub fn recv(&self) -> Option<Response> {
         self.rx.recv().ok()
     }
@@ -558,6 +599,19 @@ pub struct ReplicaStats {
     pub rejected: u64,
     /// Staged requests this replica stole from a deeper queue while idle.
     pub stolen: u64,
+    /// Successful backend rebuilds after a panic/error took the engine
+    /// down (a crash-looping factory counts attempts nowhere — only a
+    /// replica that came back).
+    pub restarts: u64,
+    /// In-flight scores this replica handed to a sibling after its
+    /// backend failed (the sibling's counters record the eventual reply).
+    pub retried: u64,
+    /// Subset of `errors`: requests shed with [`ERR_TIMEOUT`] because
+    /// their deadline expired while staged.
+    pub timed_out: u64,
+    /// Subset of `errors`: requests answered [`ERR_REPLICA_FAILED`]
+    /// because the backend died while (or after) holding them.
+    pub failed: u64,
     /// Engine dispatches (score batches + decode steps).
     pub batches: u64,
     /// Useful rows across those dispatches.
@@ -577,6 +631,10 @@ pub struct ServerStats {
     pub errors: u64,
     pub rejected: u64,
     pub stolen: u64,
+    pub restarts: u64,
+    pub retried: u64,
+    pub timed_out: u64,
+    pub failed: u64,
     pub batches: u64,
     pub batch_rows: u64,
     pub batch_slots: u64,
@@ -604,6 +662,24 @@ impl ServerStats {
     pub fn completed(&self) -> u64 {
         self.served + self.rejected
     }
+
+    /// Deadline-expired requests / admitted requests.
+    pub fn timeout_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            0.0
+        } else {
+            self.timed_out as f64 / self.submitted as f64
+        }
+    }
+
+    /// Replica-failure casualties / admitted requests.
+    pub fn failure_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            0.0
+        } else {
+            self.failed as f64 / self.submitted as f64
+        }
+    }
 }
 
 // ---------------------------------------------------------------- core
@@ -617,11 +693,24 @@ pub struct ServerConfig {
     pub queue_cap: usize,
     /// Max time a staged request waits for its batch to fill.
     pub max_wait: Duration,
+    /// First rebuild delay after a backend failure; doubles per
+    /// consecutive failure up to `restart_backoff_cap`, and resets on the
+    /// next successful engine op (clamped to ≥100 µs so a crash-looping
+    /// factory can never busy-spin a core).
+    pub restart_backoff: Duration,
+    /// Ceiling for the exponential rebuild backoff.
+    pub restart_backoff_cap: Duration,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { replicas: 1, queue_cap: 64, max_wait: Duration::from_millis(5) }
+        ServerConfig {
+            replicas: 1,
+            queue_cap: 64,
+            max_wait: Duration::from_millis(5),
+            restart_backoff: Duration::from_millis(10),
+            restart_backoff_cap: Duration::from_secs(1),
+        }
     }
 }
 
@@ -630,6 +719,10 @@ struct Staged {
     req: Request,
     reply: mpsc::Sender<Response>,
     t0: Instant,
+    /// Shed with [`ERR_TIMEOUT`] if still staged past this instant.
+    deadline: Option<Instant>,
+    /// Cross-replica retries consumed so far (scores only).
+    retries: u32,
 }
 
 struct Shared {
@@ -639,6 +732,15 @@ struct Shared {
     /// here; once a worker ingests an entry into its batcher/scheduler it
     /// is no longer stealable.
     inject: Vec<Mutex<VecDeque<Staged>>>,
+    /// Replica `r`'s backend is down, awaiting rebuild. Stealing skips
+    /// dead victims (their staged work is served after the rebuild, per
+    /// affinity) and least-loaded routing penalizes them.
+    dead: Vec<AtomicBool>,
+    /// Replica `r`'s worker loop has exited (drain complete). Set under
+    /// the replica's inject lock, checked under the same lock by
+    /// submitters and by cross-replica retries — nothing can be pushed
+    /// to a queue no worker will ever drain again.
+    exited: Vec<AtomicBool>,
     shutdown: AtomicBool,
 }
 
@@ -667,6 +769,20 @@ impl ServerHandle {
     /// to `key % replicas`, so one session's traffic stays on one engine
     /// (an idle replica may still steal it before it starts).
     pub fn submit_with_key(&self, key: Option<u64>, req: Request) -> Result<Ticket, SubmitError> {
+        self.submit_with(key, req, None)
+    }
+
+    /// [`ServerHandle::submit_with_key`] plus an optional absolute
+    /// deadline: a request still staged past it is shed with a terminal
+    /// [`ERR_TIMEOUT`] error instead of occupying a batch lane. A request
+    /// already dispatched to the engine runs to completion — the deadline
+    /// bounds queueing, not execution.
+    pub fn submit_with(
+        &self,
+        key: Option<u64>,
+        req: Request,
+        deadline: Option<Instant>,
+    ) -> Result<Ticket, SubmitError> {
         if self.shared.shutdown.load(Ordering::Acquire) {
             return Err(SubmitError::Closed);
         }
@@ -688,24 +804,28 @@ impl ServerHandle {
             })
             .is_ok();
         if !admitted {
-            self.shared.stats[replica].lock().unwrap().rejected += 1;
+            lock(&self.shared.stats[replica]).rejected += 1;
             return Err(SubmitError::Overloaded { replica });
         }
         let (reply_tx, reply_rx) = mpsc::channel();
-        let staged = Staged { req, reply: reply_tx, t0: Instant::now() };
+        let staged = Staged { req, reply: reply_tx, t0: Instant::now(), deadline, retries: 0 };
         {
             // Signal-then-push under the queue lock: the worker's ingest
             // also takes the lock, so a wake can never race past its own
-            // request.
-            let mut q = self.shared.inject[replica].lock().unwrap();
-            if self.txs[replica].send(()).is_err() {
+            // request. The exited flag is set under this same lock just
+            // before a worker's final queue check, so seeing it clear
+            // here guarantees the push will be drained.
+            let mut q = lock(&self.shared.inject[replica]);
+            if self.shared.exited[replica].load(Ordering::Acquire)
+                || self.txs[replica].send(()).is_err()
+            {
                 drop(q);
                 self.shared.depth[replica].fetch_sub(1, Ordering::AcqRel);
                 return Err(SubmitError::Closed);
             }
             q.push_back(staged);
         }
-        self.shared.stats[replica].lock().unwrap().submitted += 1;
+        lock(&self.shared.stats[replica]).submitted += 1;
         // Steal hint: the target has a backlog — wake the least-loaded
         // other replica so an idle engine can pull from this queue.
         if n > 1 && self.shared.depth[replica].load(Ordering::Relaxed) >= 2 {
@@ -721,7 +841,7 @@ impl ServerHandle {
         let mut best_depth = usize::MAX;
         for i in 0..self.txs.len() {
             let r = (start + i) % self.txs.len();
-            let d = self.shared.depth[r].load(Ordering::Relaxed);
+            let d = effective_depth(&self.shared, r);
             if d < best_depth {
                 best = r;
                 best_depth = d;
@@ -738,7 +858,7 @@ impl ServerHandle {
             if r == skip {
                 continue;
             }
-            let d = self.shared.depth[r].load(Ordering::Relaxed);
+            let d = effective_depth(&self.shared, r);
             if d < best_depth {
                 best = r;
                 best_depth = d;
@@ -754,7 +874,7 @@ impl ServerHandle {
 
     /// Snapshot every replica's counters.
     pub fn replica_stats(&self) -> Vec<ReplicaStats> {
-        self.shared.stats.iter().map(|m| m.lock().unwrap().clone()).collect()
+        self.shared.stats.iter().map(|m| lock(m).clone()).collect()
     }
 
     /// Aggregate snapshot across replicas (exact histogram merge).
@@ -766,6 +886,10 @@ impl ServerHandle {
             agg.errors += s.errors;
             agg.rejected += s.rejected;
             agg.stolen += s.stolen;
+            agg.restarts += s.restarts;
+            agg.retried += s.retried;
+            agg.timed_out += s.timed_out;
+            agg.failed += s.failed;
             agg.batches += s.batches;
             agg.batch_rows += s.batch_rows;
             agg.batch_slots += s.batch_slots;
@@ -803,18 +927,34 @@ impl ServerCore {
             depth: (0..n).map(|_| AtomicUsize::new(0)).collect(),
             stats: (0..n).map(|_| Mutex::new(ReplicaStats::default())).collect(),
             inject: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
+            dead: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            exited: (0..n).map(|_| AtomicBool::new(false)).collect(),
             shutdown: AtomicBool::new(false),
         });
         let factory = Arc::new(factory);
+        // All wake channels exist before any worker spawns: each worker
+        // holds the full peer list so a failed replica can requeue its
+        // idempotent scores onto a sibling with the same signal-then-push
+        // protocol submitters use.
         let mut txs = Vec::with_capacity(n);
+        let mut rxs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = mpsc::channel::<()>();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let wcfg = WorkerConfig {
+            max_wait: cfg.max_wait,
+            backoff: cfg.restart_backoff.max(Duration::from_micros(100)),
+            backoff_cap: cfg.restart_backoff_cap.max(cfg.restart_backoff),
+        };
         let mut workers = Vec::with_capacity(n);
         let mut ready_rxs = Vec::with_capacity(n);
-        for r in 0..n {
-            let (tx, rx) = mpsc::channel::<()>();
+        for (r, rx) in rxs.into_iter().enumerate() {
             let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
             let shared_r = Arc::clone(&shared);
             let factory_r = Arc::clone(&factory);
-            let max_wait = cfg.max_wait;
+            let peers = txs.clone();
             let worker = std::thread::Builder::new()
                 .name(format!("nmsparse-replica-{r}"))
                 .spawn(move || {
@@ -828,9 +968,8 @@ impl ServerCore {
                             return;
                         }
                     };
-                    run_replica(r, backend, rx, shared_r, max_wait);
+                    run_replica(r, backend, factory_r, rx, peers, shared_r, wcfg);
                 })?;
-            txs.push(tx);
             workers.push(worker);
             ready_rxs.push(ready_rx);
         }
@@ -869,6 +1008,15 @@ impl ServerCore {
 
     pub fn submit_with_key(&self, key: Option<u64>, req: Request) -> Result<Ticket, SubmitError> {
         self.handle.submit_with_key(key, req)
+    }
+
+    pub fn submit_with(
+        &self,
+        key: Option<u64>,
+        req: Request,
+        deadline: Option<Instant>,
+    ) -> Result<Ticket, SubmitError> {
+        self.handle.submit_with(key, req, deadline)
     }
 
     pub fn stats(&self) -> ServerStats {
@@ -918,17 +1066,79 @@ impl Drop for ServerCore {
 struct PendingReply {
     tx: mpsc::Sender<Response>,
     t0: Instant,
+    deadline: Option<Instant>,
+    retries: u32,
+}
+
+/// How a terminal reply left the replica — drives the error counters.
+enum Outcome {
+    Ok,
+    Error,
+    TimedOut,
+    Failed,
+}
+
+/// Queue depth for routing/steal decisions: a dead (restarting) replica
+/// is heavily penalized so keyless submits and steal hints prefer live
+/// engines, without ever becoming unroutable (keyed affinity still
+/// lands, and its queue is served after the rebuild).
+fn effective_depth(shared: &Shared, r: usize) -> usize {
+    let d = shared.depth[r].load(Ordering::Relaxed);
+    if shared.dead[r].load(Ordering::Relaxed) {
+        d.saturating_add(1 << 20)
+    } else {
+        d
+    }
+}
+
+/// Answer one request terminally and settle its accounting exactly once:
+/// depth released, `served` bumped (so `completed()` balances), the error
+/// taxonomy counter matching `outcome` bumped, latency recorded.
+fn finish(shared: &Shared, r: usize, pending: PendingReply, resp: Response, outcome: Outcome) {
+    pending.tx.send(resp).ok(); // client may be gone; still count
+    shared.depth[r].fetch_sub(1, Ordering::AcqRel);
+    let mut st = lock(&shared.stats[r]);
+    st.served += 1;
+    match outcome {
+        Outcome::Ok => {}
+        Outcome::Error => st.errors += 1,
+        Outcome::TimedOut => {
+            st.errors += 1;
+            st.timed_out += 1;
+        }
+        Outcome::Failed => {
+            st.errors += 1;
+            st.failed += 1;
+        }
+    }
+    st.latency.record(pending.t0.elapsed().as_secs_f64());
+}
+
+/// [`finish`] for a request that never reached the scheduler.
+fn fail_staged(shared: &Shared, r: usize, staged: Staged, message: &str, outcome: Outcome) {
+    let Staged { reply, t0, deadline, retries, .. } = staged;
+    let pending = PendingReply { tx: reply, t0, deadline, retries };
+    finish(shared, r, pending, Response::Error { message: message.into() }, outcome);
+}
+
+fn record_batch(shared: &Shared, r: usize, capacity: usize, rows: usize) {
+    let mut st = lock(&shared.stats[r]);
+    st.batches += 1;
+    st.batch_rows += rows as u64;
+    st.batch_slots += capacity as u64;
 }
 
 /// Steal the oldest staged request from the deepest other injection
 /// queue, moving its in-flight accounting to replica `r`. Returns whether
-/// anything was stolen. Two guards keep this behind the affinity rules:
+/// anything was stolen. Three guards keep this behind the affinity rules:
 /// only *staged* work moves (requests a replica has already scheduled —
 /// including every step of a running decode session — stay put, so
-/// session state never migrates), and only from a victim that is
-/// actually busy (`depth > staged backlog` means it has work in flight
-/// beyond its queue; an idle replica is about to drain its own queue and
-/// should not be robbed of it).
+/// session state never migrates), only from a victim that is actually
+/// busy (`depth > staged backlog` means it has work in flight beyond its
+/// queue; an idle replica is about to drain its own queue and should not
+/// be robbed of it), and never from a dead or exited victim (a dead
+/// replica's queue is its post-restart backlog; an exited one is
+/// mid-teardown and its queue is settled by its own drain path).
 fn try_steal(r: usize, shared: &Shared, admit: &mut Batcher<Staged>) -> bool {
     let n = shared.inject.len();
     if n <= 1 {
@@ -937,60 +1147,191 @@ fn try_steal(r: usize, shared: &Shared, admit: &mut Batcher<Staged>) -> bool {
     let mut victim = None;
     let mut deepest = 0usize;
     for v in 0..n {
-        if v == r {
+        if v == r
+            || shared.dead[v].load(Ordering::Acquire)
+            || shared.exited[v].load(Ordering::Acquire)
+        {
             continue;
         }
-        let backlog = shared.inject[v].lock().unwrap().len();
+        let backlog = lock(&shared.inject[v]).len();
         if backlog > deepest && shared.depth[v].load(Ordering::Acquire) > backlog {
             deepest = backlog;
             victim = Some(v);
         }
     }
     let Some(v) = victim else { return false };
-    let Some(staged) = shared.inject[v].lock().unwrap().pop_front() else {
+    let Some(staged) = lock(&shared.inject[v]).pop_front() else {
         return false;
     };
     shared.depth[v].fetch_sub(1, Ordering::AcqRel);
     shared.depth[r].fetch_add(1, Ordering::AcqRel);
-    shared.stats[r].lock().unwrap().stolen += 1;
+    lock(&shared.stats[r]).stolen += 1;
     admit.push(staged);
     true
 }
 
-/// One replica's engine loop: ingest → stage → flush-by-deadline →
-/// dispatch, stealing from deeper queues when idle.
-fn run_replica<B: ReplicaBackend>(
+/// Hand a failed replica's in-flight score to the least-loaded live
+/// sibling, transferring its depth accounting (retries bypass the
+/// admission gate — the request was already admitted once). Mirrors the
+/// submitter's signal-then-push protocol, and refuses targets that
+/// already exited (checked under their inject lock) so a retry can never
+/// strand in a queue no worker will drain. `false` means no live target:
+/// the caller answers the request terminally instead.
+fn requeue_score(shared: &Shared, peers: &[mpsc::Sender<()>], r: usize, staged: Staged) -> bool {
+    let n = shared.inject.len();
+    if n <= 1 {
+        return false;
+    }
+    let mut best = usize::MAX;
+    let mut victim = None;
+    for v in 0..n {
+        if v == r || shared.exited[v].load(Ordering::Acquire) {
+            continue;
+        }
+        let d = effective_depth(shared, v);
+        if d < best {
+            best = d;
+            victim = Some(v);
+        }
+    }
+    let Some(v) = victim else { return false };
+    shared.depth[v].fetch_add(1, Ordering::AcqRel);
+    {
+        let mut q = lock(&shared.inject[v]);
+        if shared.exited[v].load(Ordering::Acquire) || peers[v].send(()).is_err() {
+            drop(q);
+            shared.depth[v].fetch_sub(1, Ordering::AcqRel);
+            return false;
+        }
+        q.push_back(staged);
+    }
+    shared.depth[r].fetch_sub(1, Ordering::AcqRel);
+    lock(&shared.stats[r]).retried += 1;
+    true
+}
+
+/// Tear down a failed backend and settle every request it held: scores
+/// are retried on a live sibling (idempotent — a score has no session
+/// state, re-running it is bitwise harmless) within the
+/// [`MAX_SCORE_RETRIES`] budget, generates fail fast with
+/// [`ERR_REPLICA_FAILED`] (their KV state died with the engine). Work
+/// still staged (batcher + inject queue) is left in place — it never
+/// touched the dead engine and is served after the rebuild; deadline
+/// shedding bounds its wait. During drain nothing is retried
+/// cross-replica (a sibling may already have exited), everything settles
+/// locally.
+#[allow(clippy::too_many_arguments)]
+fn fail_replica<B: ReplicaBackend>(
     r: usize,
-    mut backend: B,
-    rx: mpsc::Receiver<()>,
-    shared: Arc<Shared>,
-    max_wait: Duration,
+    shared: &Shared,
+    peers: &[mpsc::Sender<()>],
+    backend: &mut Option<B>,
+    sched: &mut Scheduler,
+    score_replies: &mut HashMap<u64, PendingReply>,
+    gen_replies: &mut HashMap<u64, PendingReply>,
+    capacity: usize,
+    draining: bool,
 ) {
-    let capacity = backend.batch().max(1);
-    let stop = backend.stop_tokens();
-    shared.stats[r].lock().unwrap().capacity = capacity;
+    if let Some(b) = backend.take() {
+        // A backend whose Drop also panics must not kill the worker.
+        let _ = catch_unwind(AssertUnwindSafe(move || drop(b)));
+    }
+    shared.dead[r].store(true, Ordering::Release);
+    let score_ids: Vec<u64> = score_replies.keys().copied().collect();
+    for id in score_ids {
+        let Some(p) = score_replies.remove(&id) else { continue };
+        let retried = match sched.score_job(id) {
+            Some(job) if !draining && p.retries < MAX_SCORE_RETRIES => {
+                let staged = Staged {
+                    req: Request::Score { tokens: job.tokens.clone(), span: job.span },
+                    reply: p.tx.clone(),
+                    t0: p.t0,
+                    deadline: p.deadline,
+                    retries: p.retries + 1,
+                };
+                requeue_score(shared, peers, r, staged)
+            }
+            _ => false,
+        };
+        if !retried {
+            let resp = Response::Error { message: ERR_REPLICA_FAILED.into() };
+            finish(shared, r, p, resp, Outcome::Failed);
+        }
+    }
+    for (_, p) in gen_replies.drain() {
+        let resp = Response::Error { message: ERR_REPLICA_FAILED.into() };
+        finish(shared, r, p, resp, Outcome::Failed);
+    }
+    *sched = Scheduler::new(capacity, SchedPolicy::default());
+}
+
+/// Shed every staged request whose deadline expired; re-stage the rest
+/// in order. Used on the dead-replica wait path so a long restart
+/// backoff never sits on already-expired requests (the live path sheds
+/// at flush time instead).
+fn shed_expired(shared: &Shared, r: usize, admit: &mut Batcher<Staged>) {
+    if admit.is_empty() {
+        return;
+    }
+    let now = Instant::now();
+    let mut all: Vec<Staged> = Vec::with_capacity(admit.len());
+    while !admit.is_empty() {
+        all.extend(admit.drain_batch());
+    }
+    for staged in all {
+        if staged.deadline.is_some_and(|d| d <= now) {
+            fail_staged(shared, r, staged, ERR_TIMEOUT, Outcome::TimedOut);
+        } else {
+            admit.push(staged);
+        }
+    }
+}
+
+/// Per-worker tuning handed down from [`ServerConfig`].
+#[derive(Clone, Copy)]
+struct WorkerConfig {
+    max_wait: Duration,
+    backoff: Duration,
+    backoff_cap: Duration,
+}
+
+/// One replica's supervised engine loop: ingest → stage →
+/// flush-by-deadline → dispatch, stealing from deeper queues when idle.
+/// Backend calls run under `catch_unwind`; a panic (or an `Err`) hands
+/// everything the engine held to [`fail_replica`] and the backend is
+/// rebuilt via the factory with capped exponential backoff — the backoff
+/// escalates across consecutive failures and resets only once an engine
+/// op actually succeeds, so a backend that crashes right after every
+/// rebuild still backs off instead of crash-looping at full speed.
+fn run_replica<B, F>(
+    r: usize,
+    backend: B,
+    factory: Arc<F>,
+    rx: mpsc::Receiver<()>,
+    peers: Vec<mpsc::Sender<()>>,
+    shared: Arc<Shared>,
+    wcfg: WorkerConfig,
+) where
+    B: ReplicaBackend,
+    F: Fn(usize) -> Result<B>,
+{
+    let mut backend = Some(backend);
+    let mut capacity = backend.as_ref().map_or(1, |b| b.batch()).max(1);
+    let mut stop = backend.as_ref().map_or_else(Vec::new, |b| b.stop_tokens());
+    lock(&shared.stats[r]).capacity = capacity;
     let mut sched = Scheduler::new(capacity, SchedPolicy::default());
-    let mut admit: Batcher<Staged> = Batcher::new(BatchPolicy { capacity, max_wait });
+    // The admission batcher keeps its staged entries across a backend
+    // rebuild (they never touched the dead engine), so its capacity is
+    // pinned at construction; the scheduler re-reads capacity from each
+    // rebuilt backend.
+    let mut admit: Batcher<Staged> =
+        Batcher::new(BatchPolicy { capacity, max_wait: wcfg.max_wait });
     let mut flush_buf: Vec<Staged> = Vec::new();
     let mut score_replies: HashMap<u64, PendingReply> = HashMap::new();
     let mut gen_replies: HashMap<u64, PendingReply> = HashMap::new();
     let mut disconnected = false;
-
-    let finish = |shared: &Shared, pending: PendingReply, resp: Response| {
-        let is_err = matches!(resp, Response::Error { .. });
-        pending.tx.send(resp).ok(); // client may be gone; still count
-        shared.depth[r].fetch_sub(1, Ordering::AcqRel);
-        let mut st = shared.stats[r].lock().unwrap();
-        st.served += 1;
-        st.errors += is_err as u64;
-        st.latency.record(pending.t0.elapsed().as_secs_f64());
-    };
-    let record_batch = |shared: &Shared, rows: usize| {
-        let mut st = shared.stats[r].lock().unwrap();
-        st.batches += 1;
-        st.batch_rows += rows as u64;
-        st.batch_slots += capacity as u64;
-    };
+    let mut backoff = wcfg.backoff;
+    let mut rebuild_at = Instant::now();
 
     loop {
         // Drain pending wake signals FIRST, then ingest. A wake is sent
@@ -1012,26 +1353,93 @@ fn run_replica<B: ReplicaBackend>(
         }
         // Ingest everything staged for this replica.
         {
-            let mut q = shared.inject[r].lock().unwrap();
+            let mut q = lock(&shared.inject[r]);
             while let Some(staged) = q.pop_front() {
                 admit.push(staged);
             }
         }
         let draining = disconnected || shared.shutdown.load(Ordering::Acquire);
+
+        // Dead replica: rebuild (after the backoff) or wait. Staged work
+        // stays queued for the rebuilt engine — except during drain,
+        // where no rebuild is coming and everything settles terminally
+        // here (no cross-replica retries either: a sibling may already
+        // have drained and exited).
+        if backend.is_none() {
+            if draining {
+                while !admit.is_empty() {
+                    admit.drain_batch_into(&mut flush_buf);
+                    for staged in flush_buf.drain(..) {
+                        fail_staged(&shared, r, staged, ERR_REPLICA_FAILED, Outcome::Failed);
+                    }
+                }
+                let q = lock(&shared.inject[r]);
+                if q.is_empty() {
+                    // Flag-then-break under the lock: submitters check
+                    // `exited` under this same lock, so no request can
+                    // slip into the queue after this final emptiness
+                    // check.
+                    shared.exited[r].store(true, Ordering::Release);
+                    break;
+                }
+                drop(q);
+                continue; // newly staged work — loop to ingest and fail it
+            }
+            let now = Instant::now();
+            if now >= rebuild_at {
+                match catch_unwind(AssertUnwindSafe(|| factory(r))) {
+                    Ok(Ok(b)) => {
+                        capacity = b.batch().max(1);
+                        stop = b.stop_tokens();
+                        sched = Scheduler::new(capacity, SchedPolicy::default());
+                        let mut st = lock(&shared.stats[r]);
+                        st.capacity = capacity;
+                        st.restarts += 1;
+                        drop(st);
+                        backend = Some(b);
+                        shared.dead[r].store(false, Ordering::Release);
+                        continue;
+                    }
+                    Ok(Err(_)) | Err(_) => {
+                        // Factory failed (or panicked): escalate and
+                        // schedule the next attempt.
+                        rebuild_at = now + backoff;
+                        backoff = (backoff * 2).min(wcfg.backoff_cap);
+                    }
+                }
+            }
+            // While waiting out the backoff, keep deadline promises for
+            // work queued behind the dead engine.
+            shed_expired(&shared, r, &mut admit);
+            let wait = rebuild_at.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(wait) {
+                Ok(()) | Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => disconnected = true,
+            }
+            continue;
+        }
+
         // Move staged requests into the scheduler when the batch is full,
-        // the oldest request's deadline expired, or we are draining.
+        // the oldest request's deadline expired, or we are draining —
+        // shedding anything whose per-request deadline has already passed
+        // instead of spending a batch lane on it.
         if admit.ready(Instant::now()) || (draining && !admit.is_empty()) {
             admit.drain_batch_into(&mut flush_buf);
+            let now = Instant::now();
             for staged in flush_buf.drain(..) {
-                let Staged { req, reply, t0 } = staged;
+                if staged.deadline.is_some_and(|d| d <= now) {
+                    fail_staged(&shared, r, staged, ERR_TIMEOUT, Outcome::TimedOut);
+                    continue;
+                }
+                let Staged { req, reply, t0, deadline, retries } = staged;
                 match req {
                     Request::Score { tokens, span } => {
                         let id = sched.submit_score(tokens, span);
-                        score_replies.insert(id, PendingReply { tx: reply, t0 });
+                        score_replies.insert(id, PendingReply { tx: reply, t0, deadline, retries });
                     }
                     Request::Generate { tokens, max_new } => {
                         let id = sched.submit_generate(tokens, max_new);
-                        gen_replies.insert(id, PendingReply { tx: reply, t0 });
+                        gen_replies.insert(id, PendingReply { tx: reply, t0, deadline, retries });
                     }
                 }
             }
@@ -1039,8 +1447,15 @@ fn run_replica<B: ReplicaBackend>(
         match sched.next_work() {
             Work::Idle => {
                 if draining {
-                    if admit.is_empty() && shared.inject[r].lock().unwrap().is_empty() {
-                        break; // fully drained — every admitted request answered
+                    if admit.is_empty() {
+                        let q = lock(&shared.inject[r]);
+                        if q.is_empty() {
+                            // Fully drained — every admitted request
+                            // answered. Flag-then-break under the lock
+                            // (see the dead-drain path above).
+                            shared.exited[r].store(true, Ordering::Release);
+                            break;
+                        }
                     }
                     continue; // ingest/flush the rest without sleeping
                 }
@@ -1053,7 +1468,7 @@ fn run_replica<B: ReplicaBackend>(
                 // block outright when nothing is staged. Belt-and-braces
                 // against wake/ingest reorderings: never block without a
                 // deadline while our own queue holds work.
-                if admit.is_empty() && !shared.inject[r].lock().unwrap().is_empty() {
+                if admit.is_empty() && !lock(&shared.inject[r]).is_empty() {
                     continue;
                 }
                 let got = match admit.next_deadline() {
@@ -1069,29 +1484,39 @@ fn run_replica<B: ReplicaBackend>(
                 let rows: Vec<(Vec<u32>, (usize, usize))> = ids
                     .iter()
                     .map(|id| {
-                        let j = sched.score_job(*id).unwrap();
+                        let j = sched.score_job(*id).expect("scheduled score has a job");
                         (j.tokens.clone(), j.span)
                     })
                     .collect();
-                let result = backend.score_rows(&rows);
-                record_batch(&shared, ids.len());
+                let result = {
+                    let b = backend.as_mut().expect("backend alive in dispatch");
+                    catch_unwind(AssertUnwindSafe(|| b.score_rows(&rows)))
+                };
+                record_batch(&shared, r, capacity, ids.len());
                 match result {
-                    Ok(scores) => {
+                    Ok(Ok(scores)) => {
+                        backoff = wcfg.backoff; // healthy op — reset escalation
                         for (id, score) in ids.iter().zip(scores) {
                             sched.complete_score(*id);
                             if let Some(p) = score_replies.remove(id) {
-                                finish(&shared, p, Response::Score { score });
+                                finish(&shared, r, p, Response::Score { score }, Outcome::Ok);
                             }
                         }
                     }
-                    Err(e) => {
-                        let message = format!("{e:#}");
-                        for id in ids {
-                            sched.complete_score(id);
-                            if let Some(p) = score_replies.remove(&id) {
-                                finish(&shared, p, Response::Error { message: message.clone() });
-                            }
-                        }
+                    Ok(Err(_)) | Err(_) => {
+                        fail_replica(
+                            r,
+                            &shared,
+                            &peers,
+                            &mut backend,
+                            &mut sched,
+                            &mut score_replies,
+                            &mut gen_replies,
+                            capacity,
+                            draining,
+                        );
+                        rebuild_at = Instant::now() + backoff;
+                        backoff = (backoff * 2).min(wcfg.backoff_cap);
                     }
                 }
             }
@@ -1099,43 +1524,60 @@ fn run_replica<B: ReplicaBackend>(
                 let step = {
                     let rows: Vec<(u64, &[u32])> = ids
                         .iter()
-                        .map(|id| (*id, sched.session(*id).unwrap().row()))
+                        .map(|id| (*id, sched.session(*id).expect("live session").row()))
                         .collect();
-                    backend.decode_step_sessions(&rows)
+                    let b = backend.as_mut().expect("backend alive in dispatch");
+                    catch_unwind(AssertUnwindSafe(|| b.decode_step_sessions(&rows)))
                 };
-                record_batch(&shared, ids.len());
+                record_batch(&shared, r, capacity, ids.len());
                 match step {
-                    Ok(outs) => {
+                    Ok(Ok(outs)) => {
+                        backoff = wcfg.backoff; // healthy op — reset escalation
                         for (id, out) in ids.iter().zip(outs) {
-                            let sess = sched.session_mut(*id).unwrap();
+                            let sess = sched.session_mut(*id).expect("live session");
                             match out {
                                 Some(tok) => sess.push_token(tok, &stop),
-                                None => sess.done = true, // context full
+                                None => sess.done = true, // backend ended it
+                            }
+                        }
+                        for sess in sched.reap_done() {
+                            // Release per-session backend state (KV
+                            // cache) — under catch_unwind so one
+                            // session's cleanup can't take down the
+                            // replica — then count the completion toward
+                            // `served` exactly once, reply listener or
+                            // not.
+                            let b = backend.as_mut().expect("backend alive in dispatch");
+                            let _ = catch_unwind(AssertUnwindSafe(|| b.end_session(sess.id)));
+                            if let Some(p) = gen_replies.remove(&sess.id) {
+                                let resp = Response::Generate { tokens: sess.generated };
+                                finish(&shared, r, p, resp, Outcome::Ok);
                             }
                         }
                     }
-                    Err(e) => {
-                        let message = format!("{e:#}");
-                        for id in &ids {
-                            sched.session_mut(*id).unwrap().done = true;
-                            if let Some(p) = gen_replies.remove(id) {
-                                finish(&shared, p, Response::Error { message: message.clone() });
-                            }
-                        }
-                    }
-                }
-                for sess in sched.reap_done() {
-                    // Release per-session backend state (KV cache), then
-                    // count the completion toward `served` exactly once,
-                    // reply listener or not (the error path above already
-                    // removed its entry, so no double count).
-                    backend.end_session(sess.id);
-                    if let Some(p) = gen_replies.remove(&sess.id) {
-                        finish(&shared, p, Response::Generate { tokens: sess.generated });
+                    Ok(Err(_)) | Err(_) => {
+                        fail_replica(
+                            r,
+                            &shared,
+                            &peers,
+                            &mut backend,
+                            &mut sched,
+                            &mut score_replies,
+                            &mut gen_replies,
+                            capacity,
+                            draining,
+                        );
+                        rebuild_at = Instant::now() + backoff;
+                        backoff = (backoff * 2).min(wcfg.backoff_cap);
                     }
                 }
             }
         }
+    }
+    // Normal exit: drop the (healthy) backend without letting a panicking
+    // Drop impl abort the drain.
+    if let Some(b) = backend.take() {
+        let _ = catch_unwind(AssertUnwindSafe(move || drop(b)));
     }
 }
 
@@ -1149,10 +1591,23 @@ mod tests {
                 replicas,
                 queue_cap,
                 max_wait: Duration::from_millis(1),
+                ..Default::default()
             },
             |_r| Ok(SyntheticBackend::new(4, Duration::ZERO)),
         )
         .unwrap()
+    }
+
+    #[test]
+    fn error_rate_helpers_guard_div0() {
+        let mut s = ServerStats::default();
+        assert_eq!(s.timeout_rate(), 0.0);
+        assert_eq!(s.failure_rate(), 0.0);
+        s.submitted = 10;
+        s.timed_out = 2;
+        s.failed = 1;
+        assert!((s.timeout_rate() - 0.2).abs() < 1e-12);
+        assert!((s.failure_rate() - 0.1).abs() < 1e-12);
     }
 
     #[test]

@@ -20,9 +20,19 @@
 //! engine replicas and `--backend native` the KV-cached
 //! [`NativeBackend`] (artifacts checkpoint when present, seeded synthetic
 //! model otherwise). The report (throughput, p50/p95/p99 latency from
-//! the server-side [`Histogram`], batch occupancy, rejection rate) is
-//! what `tables` and `tools/check_bench_json.py` consume.
+//! the server-side [`Histogram`], batch occupancy, rejection and
+//! timeout/failure rates) is what `tables` and
+//! `tools/check_bench_json.py` consume.
+//!
+//! Robustness knobs: `--request-timeout-ms` attaches a deadline to every
+//! request (expired ones shed with a terminal `timeout` error), and
+//! `--chaos <seed-or-spec>` wraps every replica backend in a
+//! [`ChaosBackend`] executing a deterministic [`FaultPlan`] — the CI
+//! chaos smoke drives supervised restarts this way and asserts the
+//! availability counters (`restarts`/`retried`/`timed_out`/`failed`)
+//! stay balanced.
 
+use crate::coordinator::chaos::{ChaosArg, ChaosBackend, ChaosHandle};
 use crate::coordinator::methods::MethodConfig;
 use crate::coordinator::server::{
     CoordinatorBackend, NativeBackend, Request, ServerConfig, ServerCore, ServerStats,
@@ -102,6 +112,10 @@ pub struct LoadgenConfig {
     pub max_new: usize,
     pub max_wait: Duration,
     pub seed: u64,
+    /// Per-request deadline; expired requests shed with a `timeout` reply.
+    pub request_timeout: Option<Duration>,
+    /// Deterministic fault injection (seed or explicit `FaultPlan` spec).
+    pub chaos: Option<ChaosArg>,
     pub backend: BackendChoice,
 }
 
@@ -117,6 +131,8 @@ impl Default for LoadgenConfig {
             max_new: 8,
             max_wait: Duration::from_millis(5),
             seed: 7,
+            request_timeout: None,
+            chaos: None,
             backend: BackendChoice::Synthetic {
                 batch: 16,
                 forward_cost: Duration::from_micros(150),
@@ -160,20 +176,32 @@ impl LoadgenReport {
         j.insert("batch_occupancy", self.stats.batch_occupancy().into());
         j.insert("rejection_rate", self.stats.rejection_rate().into());
         j.insert("stolen", (self.stats.stolen as f64).into());
+        j.insert("restarts", (self.stats.restarts as f64).into());
+        j.insert("retried", (self.stats.retried as f64).into());
+        j.insert("timed_out", (self.stats.timed_out as f64).into());
+        j.insert("failed", (self.stats.failed as f64).into());
+        j.insert("timeout_rate", self.stats.timeout_rate().into());
+        j.insert("failure_rate", self.stats.failure_rate().into());
         j
     }
 
-    /// Human summary printed by the CLI and the bench.
+    /// Human summary printed by the CLI and the bench. The error column
+    /// breaks out deadline sheds from died-in-flight so sweep rows can
+    /// distinguish the two without opening the JSON.
     pub fn summary(&self) -> String {
         format!(
-            "{} reqs in {:.2}s -> {:.1} req/s | served {} rejected {} errors {} | \
-             latency {} | occupancy {:.2}",
+            "{} reqs in {:.2}s -> {:.1} req/s | served {} rejected {} errors {} \
+             (timeout {} failed {}) | restarts {} retried {} | latency {} | occupancy {:.2}",
             self.requests,
             self.wall_s,
             self.throughput_rps(),
             self.stats.served,
             self.stats.rejected,
             self.stats.errors,
+            self.stats.timed_out,
+            self.stats.failed,
+            self.stats.restarts,
+            self.stats.retried,
             self.stats.latency.summary(),
             self.stats.batch_occupancy(),
         )
@@ -221,12 +249,22 @@ fn start_core(cfg: &LoadgenConfig) -> Result<(ServerCore, &'static str)> {
         replicas: cfg.replicas,
         queue_cap: cfg.queue_cap,
         max_wait: cfg.max_wait,
+        ..Default::default()
     };
+    // Chaos handles are created OUTSIDE the factories so that a rebuilt
+    // replica continues its fault plan (tick counter and consumed faults
+    // survive the restart) instead of replaying it from the start. With
+    // `--chaos` unset every handle is `None` and `ChaosBackend` is a pure
+    // passthrough, keeping no-fault runs bitwise identical to before.
+    let horizon = (cfg.max_requests as u64).max(8);
+    let chaos: Vec<Option<ChaosHandle>> = (0..cfg.replicas.max(1))
+        .map(|r| cfg.chaos.as_ref().map(|c| c.handle_for(r, horizon)))
+        .collect();
     match &cfg.backend {
         BackendChoice::Synthetic { batch, forward_cost } => {
             let (batch, forward_cost) = (*batch, *forward_cost);
-            let core = ServerCore::start(server_cfg, move |_r| {
-                Ok(SyntheticBackend::new(batch, forward_cost))
+            let core = ServerCore::start(server_cfg, move |r| {
+                Ok(ChaosBackend::new(SyntheticBackend::new(batch, forward_cost), chaos[r].clone()))
             })?;
             Ok((core, "synthetic"))
         }
@@ -236,8 +274,9 @@ fn start_core(cfg: &LoadgenConfig) -> Result<(ServerCore, &'static str)> {
             let vocab = Vocab::synthlang();
             let stop = vec![vocab.id(".")?, EOS];
             let dir = dir.clone();
-            let core = ServerCore::start(server_cfg, move |_r| {
+            let core = ServerCore::start(server_cfg, move |r| {
                 CoordinatorBackend::open(&dir, mcfg.clone(), stop.clone())
+                    .map(|b| ChaosBackend::new(b, chaos[r].clone()))
             })?;
             Ok((core, "artifacts"))
         }
@@ -247,9 +286,9 @@ fn start_core(cfg: &LoadgenConfig) -> Result<(ServerCore, &'static str)> {
             let stop = vec![vocab.id(".")?, EOS];
             let (dir, method) = (dir.clone(), method.clone());
             let (seed, batch, threads) = (*seed, *batch, *threads);
-            let core = ServerCore::start(server_cfg, move |_r| {
+            let core = ServerCore::start(server_cfg, move |r| {
                 NativeBackend::open(&dir, pattern, &method, stop.clone(), batch, seed)
-                    .map(|b| b.with_threads(threads))
+                    .map(|b| ChaosBackend::new(b.with_threads(threads), chaos[r].clone()))
             })?;
             Ok((core, "native"))
         }
@@ -292,8 +331,9 @@ fn run_closed_loop(core: &ServerCore, cfg: &LoadgenConfig) {
                     break;
                 }
                 let req = make_request(cfg.seed, idx, cfg.mode, cfg.max_new);
+                let deadline = cfg.request_timeout.map(|d| Instant::now() + d);
                 // Session affinity: one client = one session key.
-                match handle.submit_with_key(Some(client as u64), req) {
+                match handle.submit_with(Some(client as u64), req, deadline) {
                     Ok(ticket) => {
                         let _ = ticket.recv(); // one in flight per client
                     }
@@ -316,7 +356,8 @@ fn run_open_loop(core: &ServerCore, cfg: &LoadgenConfig) {
             std::thread::sleep(due - now);
         }
         let req = make_request(cfg.seed, idx, cfg.mode, cfg.max_new);
-        match core.submit(req) {
+        let deadline = cfg.request_timeout.map(|d| Instant::now() + d);
+        match core.submit_with(None, req, deadline) {
             Ok(t) => tickets.push(t),
             Err(SubmitError::Overloaded { .. }) => {} // shed; counted server-side
             Err(SubmitError::Closed) => break,
@@ -387,6 +428,12 @@ pub fn sweep_json(cfg: &LoadgenConfig, points: &[SweepPoint]) -> Json {
         e.insert("latency_ms", latency_ms_json(&p.report.stats.latency));
         e.insert("rejection_rate", p.report.stats.rejection_rate().into());
         e.insert("batch_occupancy", p.report.stats.batch_occupancy().into());
+        e.insert("timed_out", (p.report.stats.timed_out as f64).into());
+        e.insert("failed", (p.report.stats.failed as f64).into());
+        e.insert("timeout_rate", p.report.stats.timeout_rate().into());
+        e.insert("failure_rate", p.report.stats.failure_rate().into());
+        e.insert("restarts", (p.report.stats.restarts as f64).into());
+        e.insert("retried", (p.report.stats.retried as f64).into());
         arr.push(e);
     }
     j.insert("points", Json::Arr(arr));
@@ -422,6 +469,8 @@ pub fn cmd_loadgen(rest: Vec<String>) -> Result<()> {
         OptSpec { name: "artifacts", takes_value: true, default: Some("artifacts"), help: "artifacts dir (artifacts/native backends)" },
         OptSpec { name: "pattern", takes_value: true, default: Some("8:16"), help: "sparsity pattern (artifacts/native backends)" },
         OptSpec { name: "method", takes_value: true, default: Some("S-PTS"), help: "method (artifacts/native backends)" },
+        OptSpec { name: "request-timeout-ms", takes_value: true, default: Some("0"), help: "per-request deadline (ms, 0 = none)" },
+        OptSpec { name: "chaos", takes_value: true, default: Some(""), help: "fault injection: integer seed or 'panic@N;err@N;stall@N:D' spec ('' = off)" },
         OptSpec { name: "sweep", takes_value: true, default: Some(""), help: "open-loop rate grid 'r1,r2,...' (req/s)" },
         OptSpec { name: "sweep-out", takes_value: true, default: Some("BENCH_serving_sweep.json"), help: "sweep report path" },
         OptSpec { name: "out", takes_value: true, default: Some("BENCH_serving.json"), help: "report path ('' = skip)" },
@@ -466,8 +515,19 @@ pub fn cmd_loadgen(rest: Vec<String>) -> Result<()> {
         max_new: a.get_usize("max-new")?,
         max_wait: Duration::from_millis(a.get_u64("max-wait-ms")?),
         seed: a.get_u64("seed")?,
+        request_timeout: {
+            let ms = a.get_u64("request-timeout-ms")?;
+            (ms > 0).then(|| Duration::from_millis(ms))
+        },
+        chaos: {
+            let s = a.get("chaos");
+            if s.is_empty() { None } else { Some(ChaosArg::parse(&s)?) }
+        },
         backend,
     };
+    if let Some(c) = &cfg.chaos {
+        println!("loadgen: chaos enabled ({})", c.describe());
+    }
     // Sweep mode: one open-loop run per rate -> BENCH_serving_sweep.json.
     let sweep_rates = a.get("sweep");
     if !sweep_rates.is_empty() {
@@ -623,6 +683,37 @@ mod tests {
         // Degenerate sweeps are rejected.
         assert!(run_sweep(&cfg, &[]).is_err());
         assert!(run_sweep(&cfg, &[0.0]).is_err());
+    }
+
+    #[test]
+    fn chaos_run_restarts_replicas_and_keeps_accounting_balanced() {
+        let cfg = LoadgenConfig {
+            replicas: 2,
+            queue_cap: 64,
+            max_requests: 80,
+            concurrency: 8,
+            max_new: 4,
+            request_timeout: Some(Duration::from_secs(5)),
+            chaos: Some(ChaosArg::parse("panic@2;err@9;stall@5:1").unwrap()),
+            backend: BackendChoice::Synthetic { batch: 4, forward_cost: Duration::ZERO },
+            ..Default::default()
+        };
+        let report = run(&cfg).unwrap();
+        // Exactly-once accounting holds under injected faults: every
+        // request is served (possibly with a terminal error) or shed.
+        assert_eq!(report.stats.served + report.stats.rejected, 80);
+        assert_eq!(report.stats.latency.count(), report.stats.served);
+        // Spec plans run on every replica, so each panics once and both
+        // replicas are rebuilt by the supervisor.
+        assert!(report.stats.restarts >= 2, "restarts = {}", report.stats.restarts);
+        let j = report.to_json();
+        for key in ["restarts", "retried", "timed_out", "failed"] {
+            assert!(j.get(key).and_then(|x| x.as_f64()).is_some(), "missing {key}");
+        }
+        for key in ["timeout_rate", "failure_rate"] {
+            let v = j.get(key).and_then(|x| x.as_f64()).unwrap();
+            assert!((0.0..=1.0).contains(&v), "{key} = {v}");
+        }
     }
 
     #[test]

@@ -19,6 +19,14 @@
 //! immediately with `{"ok":false,"error":"overloaded"}` — clients retry
 //! with backoff instead of stacking unbounded work.
 //!
+//! `--request-timeout-ms` attaches a deadline to every engine request:
+//! the core sheds expired work with `{"ok":false,"error":"timeout"}`,
+//! and the IO thread waits with `recv_timeout` (plus a socket
+//! write-timeout) so a failed replica can never hang a client
+//! connection indefinitely — the supervisor answers in-flight requests
+//! terminally with `replica_failed` and rebuilds the replica (see
+//! DESIGN.md §2.12).
+//!
 //! Architecture: this file owns only sockets and JSON. Each accepted
 //! connection gets an IO thread holding a [`ServerHandle`]; requests
 //! route session-affine (connection id as the key) into the engine
@@ -31,7 +39,7 @@
 use crate::coordinator::methods::MethodConfig;
 use crate::coordinator::server::{
     CoordinatorBackend, NativeBackend, Request, Response, ServerConfig, ServerCore, ServerHandle,
-    SubmitError,
+    SubmitError, ERR_TIMEOUT,
 };
 use crate::sparsity::Pattern;
 use crate::synthlang::vocab::{Vocab, EOS};
@@ -43,7 +51,7 @@ use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
     #[rustfmt::skip]
@@ -59,6 +67,7 @@ pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
         OptSpec { name: "queue-cap", takes_value: true, default: Some("64"), help: "per-replica admission cap" },
         OptSpec { name: "max-wait-ms", takes_value: true, default: Some("5"), help: "batch deadline (ms)" },
         OptSpec { name: "max-requests", takes_value: true, default: Some("0"), help: "exit after N requests (0 = run forever)" },
+        OptSpec { name: "request-timeout-ms", takes_value: true, default: Some("0"), help: "per-request deadline (ms, 0 = none)" },
         OptSpec { name: "help", takes_value: false, default: None, help: "show help" },
     ];
     let a = Args::parse(rest, &specs)?;
@@ -85,11 +94,16 @@ pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
     let stop = vec![vocab.id(".")?, EOS];
     let artifacts = PathBuf::from(a.get("artifacts"));
     let max_requests = a.get_usize("max-requests")? as u64;
+    let request_timeout = {
+        let ms = a.get_u64("request-timeout-ms")?;
+        (ms > 0).then(|| Duration::from_millis(ms))
+    };
 
     let server_cfg = ServerConfig {
         replicas: a.get_usize("replicas")?,
         queue_cap: a.get_usize("queue-cap")?,
         max_wait: Duration::from_millis(a.get_u64("max-wait-ms")?),
+        ..Default::default()
     };
     // Each replica thread builds its own backend (PJRT handles are not
     // Send; native engines simply stay per-thread); start() blocks until
@@ -147,6 +161,7 @@ pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
                     Arc::clone(&extra),
                     Arc::clone(&banner),
                     conn_seq,
+                    request_timeout,
                 );
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -245,9 +260,15 @@ fn stats_reply(handle: &ServerHandle) -> String {
     r.insert("rejected", (s.rejected as f64).into());
     r.insert("errors", (s.errors as f64).into());
     r.insert("stolen", (s.stolen as f64).into());
+    r.insert("restarts", (s.restarts as f64).into());
+    r.insert("retried", (s.retried as f64).into());
+    r.insert("timed_out", (s.timed_out as f64).into());
+    r.insert("failed", (s.failed as f64).into());
     r.insert("latency_ms", super::loadgen::latency_ms_json(&s.latency));
     r.insert("batch_occupancy", s.batch_occupancy().into());
     r.insert("rejection_rate", s.rejection_rate().into());
+    r.insert("timeout_rate", s.timeout_rate().into());
+    r.insert("failure_rate", s.failure_rate().into());
     r.insert(
         "depth",
         Json::Arr((0..s.replicas).map(|i| Json::Num(handle.depth(i) as f64)).collect()),
@@ -257,7 +278,11 @@ fn stats_reply(handle: &ServerHandle) -> String {
 
 /// Per-connection IO thread: read a line, route it, write the reply. The
 /// connection id is the session-affinity key, so one client's decode
-/// sessions stay on one replica.
+/// sessions stay on one replica. With a request timeout the ticket wait
+/// is bounded (`recv_timeout` with headroom past the core's own shed
+/// deadline) and the socket write is bounded too, so neither a wedged
+/// replica nor a stalled client can pin this thread forever.
+#[allow(clippy::too_many_arguments)]
 fn spawn_io_thread(
     stream: TcpStream,
     handle: ServerHandle,
@@ -265,9 +290,11 @@ fn spawn_io_thread(
     extra: Arc<AtomicU64>,
     banner: Arc<(String, String)>,
     conn_id: u64,
+    request_timeout: Option<Duration>,
 ) {
     std::thread::spawn(move || {
         stream.set_nonblocking(false).ok();
+        stream.set_write_timeout(Some(Duration::from_secs(30))).ok();
         let mut writer = match stream.try_clone() {
             Ok(w) => w,
             Err(_) => return,
@@ -293,13 +320,27 @@ fn spawn_io_thread(
                     stats_reply(&handle)
                 }
                 Ok(ClientOp::Engine(req)) => {
-                    match handle.submit_with_key(Some(conn_id), req) {
-                        // Blocking recv: one request in flight per
-                        // connection, like the line protocol implies.
-                        Ok(ticket) => match ticket.recv() {
-                            Some(resp) => response_reply(&resp, &vocab),
-                            None => error_reply(&SubmitError::Closed.to_string()),
-                        },
+                    let deadline = request_timeout.map(|d| Instant::now() + d);
+                    match handle.submit_with(Some(conn_id), req, deadline) {
+                        // One request in flight per connection, like the
+                        // line protocol implies. With a deadline, the
+                        // wait is bounded: the core sheds the request
+                        // shortly after expiry, and the extra headroom
+                        // lets the terminal `timeout` reply arrive first.
+                        Ok(ticket) => {
+                            let got = match deadline {
+                                Some(d) => ticket.recv_timeout(
+                                    d.saturating_duration_since(Instant::now())
+                                        + Duration::from_millis(250),
+                                ),
+                                None => ticket.recv(),
+                            };
+                            match got {
+                                Some(resp) => response_reply(&resp, &vocab),
+                                None if deadline.is_some() => error_reply(ERR_TIMEOUT),
+                                None => error_reply(&SubmitError::Closed.to_string()),
+                            }
+                        }
                         Err(e) => error_reply(&e.to_string()), // "overloaded" / shutdown
                     }
                 }

@@ -9,18 +9,32 @@
 //!   joining, and generate completions count toward `served` even when
 //!   the client stopped listening;
 //! - correctness: scores and generated tokens match the backend's
-//!   deterministic formulas through the whole stage→batch→reply path.
+//!   deterministic formulas through the whole stage→batch→reply path;
+//! - supervision: injected backend panics/errors ([`ChaosBackend`])
+//!   resolve every in-flight request terminally (`replica_failed`, or a
+//!   transparent sibling retry for idempotent scores), the replica
+//!   rebuilds and serves again, and expired deadlines shed with
+//!   `timeout` — exactly-once accounting throughout.
 
+use nmsparse::coordinator::chaos::{ChaosBackend, ChaosHandle, FaultPlan};
 use nmsparse::coordinator::server::{
-    ReplicaBackend, Request, Response, ServerConfig, ServerCore, SubmitError, SyntheticBackend,
+    NativeBackend, ReplicaBackend, Request, Response, ServerConfig, ServerCore, SubmitError,
+    SyntheticBackend, ERR_REPLICA_FAILED, ERR_TIMEOUT,
 };
+use nmsparse::engine::{EngineConfig, NativeEngine, NativeSparsity};
 use nmsparse::launcher::loadgen::{make_request, Mode};
+use nmsparse::sparsity::Pattern;
 use std::sync::{mpsc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn synth_core(replicas: usize, queue_cap: usize, batch: usize) -> ServerCore {
     ServerCore::start(
-        ServerConfig { replicas, queue_cap, max_wait: Duration::from_millis(1) },
+        ServerConfig {
+            replicas,
+            queue_cap,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        },
         move |_r| Ok(SyntheticBackend::new(batch, Duration::ZERO)),
     )
     .expect("core starts")
@@ -108,7 +122,12 @@ fn admission_cap_rejects_deterministically() {
     let (gate_tx, gate_rx) = mpsc::channel::<()>();
     let slot = Mutex::new(Some(gate_rx));
     let core = ServerCore::start(
-        ServerConfig { replicas: 1, queue_cap: 2, max_wait: Duration::from_millis(1) },
+        ServerConfig {
+            replicas: 1,
+            queue_cap: 2,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        },
         move |_r| Ok(GatedBackend { gate: slot.lock().unwrap().take().expect("one replica") }),
     )
     .unwrap();
@@ -191,7 +210,12 @@ fn idle_replica_steals_from_deepest_queue() {
     drop(gate1_tx); // replica 1 never blocks (recv errors immediately)
     let slots = Mutex::new(vec![Some((enter_tx.clone(), gate0_rx)), Some((enter_tx, gate1_rx))]);
     let core = ServerCore::start(
-        ServerConfig { replicas: 2, queue_cap: 16, max_wait: Duration::from_millis(1) },
+        ServerConfig {
+            replicas: 2,
+            queue_cap: 16,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        },
         move |r| {
             let (entered, gate) = slots.lock().unwrap()[r].take().expect("one backend per replica");
             Ok(NotifyGatedBackend { entered, gate })
@@ -225,6 +249,278 @@ fn idle_replica_steals_from_deepest_queue() {
     assert_eq!(per_replica[1].stolen, 3, "replica 1 did the stealing");
     assert_eq!(per_replica[1].served, 3);
     assert_eq!(per_replica[0].served, 1);
+}
+
+/// A supervised synthetic core whose replicas share externally-created
+/// chaos handles — the handle survives rebuilds, so one-shot faults fire
+/// exactly once even though the factory runs again after each crash.
+fn chaos_core(
+    handles: Vec<Option<ChaosHandle>>,
+    queue_cap: usize,
+    backoff: Duration,
+    backoff_cap: Duration,
+) -> ServerCore {
+    let replicas = handles.len();
+    ServerCore::start(
+        ServerConfig {
+            replicas,
+            queue_cap,
+            max_wait: Duration::from_millis(1),
+            restart_backoff: backoff,
+            restart_backoff_cap: backoff_cap,
+        },
+        move |r| {
+            Ok(ChaosBackend::new(SyntheticBackend::new(4, Duration::ZERO), handles[r].clone()))
+        },
+    )
+    .expect("core starts")
+}
+
+#[test]
+fn expired_deadline_sheds_with_timeout_reply() {
+    let core = chaos_core(vec![None], 16, Duration::from_millis(1), Duration::from_millis(5));
+    let req = Request::Score { tokens: vec![4, 5, 6], span: (1, 3) };
+    // Deadline already expired at submit: admission accepts it (the cap
+    // is the only admission rule), but the flush path must shed it with
+    // a terminal `timeout` reply instead of spending a batch lane.
+    let t = core.submit_with(None, req, Some(Instant::now())).unwrap();
+    let resp = t.recv().expect("terminal reply");
+    assert_eq!(resp, Response::Error { message: ERR_TIMEOUT.into() });
+    let live = Request::Score { tokens: vec![4, 5, 6], span: (1, 3) };
+    let t2 = core.submit_with(None, live, Some(Instant::now() + Duration::from_secs(30))).unwrap();
+    assert!(matches!(t2.recv(), Some(Response::Score { .. })), "live deadline still serves");
+    let stats = core.shutdown();
+    assert_eq!(stats.served, 2);
+    assert_eq!(stats.timed_out, 1);
+    assert_eq!(stats.errors, 1);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.latency.count(), 2, "timed-out requests are still accounted terminally");
+}
+
+#[test]
+fn failed_score_retries_transparently_on_a_sibling() {
+    // Replica 0 panics on its very first engine op; replica 1 is healthy.
+    let h0 = ChaosHandle::new(FaultPlan::parse("panic@1").unwrap());
+    let core = chaos_core(
+        vec![Some(h0), None],
+        64,
+        Duration::from_millis(500),
+        Duration::from_millis(500),
+    );
+    let req = || Request::Score { tokens: vec![4, 5, 6], span: (1, 3) };
+    let want = Response::Score { score: SyntheticBackend::score_of(&[4, 5, 6], (1, 3)) };
+    // Keyed to replica 0: its first op panics, and the supervisor must
+    // requeue the in-flight score on replica 1 — the client sees the
+    // correct answer, never `replica_failed`.
+    let t = core.submit_with_key(Some(0), req()).unwrap();
+    assert_eq!(t.recv_timeout(Duration::from_secs(10)), Some(want.clone()));
+    // Backlog keyed to the now-dead replica 0 stays put: the idle
+    // replica 1 must NOT steal from a dead sibling (its staged work is
+    // served by the rebuilt engine, preserving session affinity).
+    let backlog: Vec<_> = (0..3).map(|_| core.submit_with_key(Some(0), req()).unwrap()).collect();
+    std::thread::sleep(Duration::from_millis(30));
+    for t in &backlog {
+        assert!(t.try_recv().is_none(), "no stealing from a dead replica");
+    }
+    // After the 500 ms backoff the factory rebuilds replica 0 (the
+    // panic fault is consumed — the shared handle survives the rebuild)
+    // and the staged backlog serves normally.
+    for t in &backlog {
+        assert_eq!(t.recv_timeout(Duration::from_secs(10)), Some(want.clone()));
+    }
+    let handle = core.handle();
+    let stats = core.shutdown();
+    let per = handle.replica_stats();
+    assert_eq!(stats.served, 4);
+    assert_eq!(stats.errors, 0, "the retried score is not an error");
+    assert_eq!(stats.retried, 1);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.stolen, 0);
+    assert_eq!(per[0].restarts, 1);
+    assert_eq!(per[0].served, 3, "rebuilt replica served its staged backlog");
+}
+
+#[test]
+fn generate_fails_fast_with_replica_failed() {
+    // Generates are stateful (the session's KV died with the engine), so
+    // they fail fast with a distinguishable error instead of retrying.
+    let h = ChaosHandle::new(FaultPlan::parse("panic@1").unwrap());
+    let core =
+        chaos_core(vec![Some(h)], 16, Duration::from_millis(1), Duration::from_millis(5));
+    let t = core.submit(Request::Generate { tokens: vec![7, 8, 9], max_new: 4 }).unwrap();
+    assert_eq!(
+        t.recv_timeout(Duration::from_secs(10)),
+        Some(Response::Error { message: ERR_REPLICA_FAILED.into() })
+    );
+    // The same replica serves again after its rebuild.
+    let t2 = core.submit(Request::Score { tokens: vec![3, 4], span: (1, 2) }).unwrap();
+    let want = Response::Score { score: SyntheticBackend::score_of(&[3, 4], (1, 2)) };
+    assert_eq!(t2.recv_timeout(Duration::from_secs(10)), Some(want));
+    let stats = core.shutdown();
+    assert_eq!(stats.served, 2);
+    assert_eq!(stats.failed, 1);
+    assert_eq!(stats.errors, 1);
+    assert_eq!(stats.restarts, 1);
+    assert_eq!(stats.completed(), stats.submitted);
+}
+
+#[test]
+fn chaos_soak_exactly_once_terminal_outcomes() {
+    // Seeded fault plans on both replicas (≥1 early panic each, plus
+    // errors and stalls), a mixed keyed workload, and a sprinkle of
+    // already-expired deadlines: every submitted request must reach
+    // exactly one terminal outcome and the books must balance.
+    let handles: Vec<Option<ChaosHandle>> =
+        (0..2).map(|r| Some(ChaosHandle::seeded(0xBEEF ^ r as u64, 40))).collect();
+    let core =
+        chaos_core(handles, 512, Duration::from_millis(1), Duration::from_millis(20));
+    let n = 140usize;
+    let mut tickets = Vec::with_capacity(n);
+    for idx in 0..n {
+        let req = make_request(777, idx, Mode::Mixed, 5);
+        let deadline = if idx % 10 == 0 {
+            Some(Instant::now()) // expired on arrival -> must shed as timeout
+        } else {
+            Some(Instant::now() + Duration::from_secs(30))
+        };
+        tickets.push(core.submit_with(Some(idx as u64 % 2), req, deadline).unwrap());
+    }
+    let mut error_replies = 0u64;
+    for t in &tickets {
+        let resp = t.recv_timeout(Duration::from_secs(60)).expect("exactly one terminal reply");
+        if let Response::Error { message } = &resp {
+            error_replies += 1;
+            assert!(
+                message == ERR_TIMEOUT || message == ERR_REPLICA_FAILED,
+                "unexpected terminal error '{message}'"
+            );
+        }
+        assert!(t.try_recv().is_none(), "no second reply for any ticket");
+    }
+    let handle = core.handle();
+    let stats = core.shutdown();
+    let per = handle.replica_stats();
+    assert_eq!(stats.submitted, n as u64);
+    assert_eq!(stats.rejected, 0);
+    assert_eq!(stats.served, n as u64, "every request reached a terminal outcome");
+    assert_eq!(stats.latency.count(), stats.served);
+    assert_eq!(stats.errors, error_replies);
+    assert_eq!(stats.errors, stats.timed_out + stats.failed);
+    assert_eq!(stats.timed_out, 14, "every expired deadline shed (n/10 of {n})");
+    for (r, p) in per.iter().enumerate() {
+        assert!(p.restarts >= 1, "replica {r} panicked and was rebuilt (restarts = 0)");
+    }
+    assert!(
+        stats.retried + stats.failed >= 2,
+        "each panic had in-flight work (retried {} failed {})",
+        stats.retried,
+        stats.failed
+    );
+}
+
+#[test]
+fn shutdown_while_dead_fails_staged_work_terminally() {
+    // A replica that dies with a huge backoff, then shutdown: drain must
+    // terminate anyway, answering staged work with `replica_failed`
+    // rather than waiting out the rebuild.
+    let h = ChaosHandle::new(FaultPlan::parse("panic@1").unwrap());
+    let core = chaos_core(vec![Some(h)], 16, Duration::from_secs(5), Duration::from_secs(5));
+    let req = || Request::Score { tokens: vec![4, 5, 6], span: (1, 3) };
+    let t1 = core.submit(req()).unwrap();
+    let failed = Response::Error { message: ERR_REPLICA_FAILED.into() };
+    // No sibling exists, so the in-flight score fails terminally.
+    assert_eq!(t1.recv_timeout(Duration::from_secs(10)), Some(failed.clone()));
+    // Stage more work while the replica is dead (5 s from rebuilding).
+    let t2 = core.submit(req()).unwrap();
+    let t3 = core.submit(Request::Generate { tokens: vec![7, 8], max_new: 3 }).unwrap();
+    let stats = core.shutdown(); // must not wait 5 s
+    assert_eq!(t2.try_recv(), Some(failed.clone()));
+    assert_eq!(t3.try_recv(), Some(failed));
+    assert_eq!(stats.served, 3);
+    assert_eq!(stats.failed, 3);
+    assert_eq!(stats.restarts, 0, "the backoff never elapsed");
+    assert_eq!(stats.completed(), stats.submitted);
+}
+
+#[test]
+fn restarted_native_replica_reprefills_generate_sessions_at_cap_1() {
+    // Restart-under-eviction regression: a KV-cached native replica at
+    // session cap 1 (every step evicts and re-prefills) panics mid-decode,
+    // rebuilds, and must then produce bitwise-identical generations.
+    let cfg = EngineConfig {
+        vocab: 48,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        ffn: 64,
+        max_seq: 32,
+    };
+    let pattern = Pattern::NM { n: 8, m: 16 };
+    let stop: Vec<u32> = vec![2];
+    let max_new = 12;
+    let prompts: [Vec<u32>; 3] = [vec![3, 7, 11], vec![40, 1, 2, 3, 4], vec![9]];
+    // Reference: the sequential sliding-window loop on an identical model.
+    let mut engine = NativeEngine::synthetic(&cfg, 5, NativeSparsity::act(pattern)).unwrap();
+    let mut pool = engine.new_kv_pool();
+    let mut kv = pool.new_cache();
+    let want: Vec<Vec<u32>> = prompts
+        .iter()
+        .map(|p| engine.generate_greedy_sliding(&mut kv, &mut pool, p, max_new, &stop).unwrap())
+        .collect();
+    let h = ChaosHandle::new(FaultPlan::parse("panic@1").unwrap());
+    let handle_for_factory = h.clone();
+    let stop_f = stop.clone();
+    let core = ServerCore::start(
+        ServerConfig {
+            replicas: 1,
+            queue_cap: 32,
+            max_wait: Duration::from_millis(1),
+            restart_backoff: Duration::from_millis(1),
+            restart_backoff_cap: Duration::from_millis(5),
+        },
+        move |_r| {
+            let backend =
+                NativeBackend::synthetic(&cfg, 5, NativeSparsity::act(pattern), stop_f.clone(), 4)?
+                    .with_session_cap(1);
+            Ok(ChaosBackend::new(backend, Some(handle_for_factory.clone())))
+        },
+    )
+    .unwrap();
+    // Wave 1: the first decode tick panics, so the sessions in that tick
+    // fail fast; anything still staged serves after the rebuild.
+    let wave1: Vec<_> = prompts
+        .iter()
+        .map(|p| core.submit(Request::Generate { tokens: p.clone(), max_new }).unwrap())
+        .collect();
+    let mut failed_replies = 0u64;
+    for (t, w) in wave1.iter().zip(&want) {
+        match t.recv_timeout(Duration::from_secs(30)).expect("terminal reply") {
+            Response::Generate { tokens } => assert_eq!(&tokens, w, "post-rebuild bitwise match"),
+            Response::Error { message } => {
+                assert_eq!(message, ERR_REPLICA_FAILED);
+                failed_replies += 1;
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    assert!(failed_replies >= 1, "the panicking tick had at least one session in flight");
+    // Wave 2 on the rebuilt replica: the fault is consumed, so all three
+    // concurrent cap-1 sessions must re-prefill to the reference bits.
+    let wave2: Vec<_> = prompts
+        .iter()
+        .map(|p| core.submit(Request::Generate { tokens: p.clone(), max_new }).unwrap())
+        .collect();
+    for (t, w) in wave2.iter().zip(&want) {
+        assert_eq!(
+            t.recv_timeout(Duration::from_secs(30)),
+            Some(Response::Generate { tokens: w.clone() })
+        );
+    }
+    assert_eq!(h.remaining(), 0, "the injected panic fired exactly once");
+    let stats = core.shutdown();
+    assert_eq!(stats.restarts, 1);
+    assert_eq!(stats.failed, failed_replies);
+    assert_eq!(stats.completed(), stats.submitted);
 }
 
 #[test]

@@ -135,7 +135,8 @@ def check_serving(doc, path):
         bad |= require(doc, key, str, path, "top level")
     for key in ("replicas", "queue_cap", "requests", "served", "rejected",
                 "errors", "wall_s", "throughput_rps", "batch_occupancy",
-                "rejection_rate"):
+                "rejection_rate", "restarts", "retried", "timed_out",
+                "failed", "timeout_rate", "failure_rate"):
         bad |= require(doc, key, (int, float), path, "top level")
     bad |= require(doc, "latency_ms", dict, path, "top level")
     if bad:
@@ -155,8 +156,17 @@ def check_serving(doc, path):
                          f"exceeds requests ({doc['requests']})")
     if not 0.0 <= doc["batch_occupancy"] <= 1.0 + 1e-9:
         bad |= err(path, f"batch_occupancy {doc['batch_occupancy']} outside [0, 1]")
-    if not 0.0 <= doc["rejection_rate"] <= 1.0 + 1e-9:
-        bad |= err(path, f"rejection_rate {doc['rejection_rate']} outside [0, 1]")
+    for key in ("rejection_rate", "timeout_rate", "failure_rate"):
+        if not 0.0 <= doc[key] <= 1.0 + 1e-9:
+            bad |= err(path, f"{key} {doc[key]} outside [0, 1]")
+    # The error taxonomy nests: every timed-out or failed request is also
+    # counted in `errors` (exactly-once accounting, DESIGN.md §2.12).
+    if doc["timed_out"] + doc["failed"] > doc["errors"]:
+        bad |= err(path, f"timed_out + failed ({doc['timed_out']} + {doc['failed']}) "
+                         f"exceeds errors ({doc['errors']})")
+    for key in ("restarts", "retried", "timed_out", "failed"):
+        if doc[key] < 0:
+            bad |= err(path, f"{key} {doc[key]} < 0")
     if doc["replicas"] < 1:
         bad |= err(path, f"replicas {doc['replicas']} < 1")
     return bad
@@ -179,7 +189,8 @@ def check_serving_sweep(doc, path):
         if not isinstance(p, dict):
             return err(path, f"{ctx} is not an object")
         for key in ("rate_rps", "served", "rejected", "throughput_rps",
-                    "rejection_rate", "batch_occupancy"):
+                    "rejection_rate", "batch_occupancy", "timed_out",
+                    "failed", "timeout_rate", "failure_rate"):
             bad |= require(p, key, (int, float), path, ctx)
         bad |= require(p, "latency_ms", dict, path, ctx)
         if bad:
@@ -195,8 +206,9 @@ def check_serving_sweep(doc, path):
             bad |= err(path, f"{ctx}: rates must be strictly increasing "
                              f"({p['rate_rps']} after {prev_rate})")
         prev_rate = p["rate_rps"]
-        if not 0.0 <= p["rejection_rate"] <= 1.0 + 1e-9:
-            bad |= err(path, f"{ctx}: rejection_rate {p['rejection_rate']} outside [0, 1]")
+        for key in ("rejection_rate", "timeout_rate", "failure_rate"):
+            if not 0.0 <= p[key] <= 1.0 + 1e-9:
+                bad |= err(path, f"{ctx}: {key} {p[key]} outside [0, 1]")
         if p["served"] + p["rejected"] > doc["requests_per_point"]:
             bad |= err(path, f"{ctx}: served + rejected exceeds requests_per_point")
     return bad
@@ -351,8 +363,23 @@ def _good_decode_doc():
     }
 
 
+def _good_serving_doc():
+    """A minimal BENCH_serving.json that every serving gate accepts."""
+    return {
+        "suite": "serving", "mode": "mixed", "backend": "synthetic",
+        "replicas": 2, "queue_cap": 64, "requests": 100,
+        "served": 98, "rejected": 2, "errors": 5, "wall_s": 0.5,
+        "throughput_rps": 196.0,
+        "latency_ms": {"mean": 1.0, "p50": 0.8, "p95": 2.0, "p99": 3.0,
+                       "max": 4.0},
+        "batch_occupancy": 0.7, "rejection_rate": 0.02, "stolen": 1,
+        "restarts": 2, "retried": 1, "timed_out": 2, "failed": 3,
+        "timeout_rate": 0.02, "failure_rate": 0.03,
+    }
+
+
 def self_test():
-    """Run check_decode against inline good/bad fixtures.
+    """Run check_decode and check_serving against inline good/bad fixtures.
 
     The gates only fire on files that exist, so a regression that silently
     stops rejecting a bad dump would otherwise go unnoticed until a bench
@@ -363,17 +390,24 @@ def self_test():
     import io
 
     failures = []
-    good = _good_decode_doc()
-    if check_decode(copy.deepcopy(good), "<self-test:good>") != 0:
-        failures.append("good decode fixture rejected")
 
-    def expect_bad(label, mutate):
-        doc = copy.deepcopy(good)
-        mutate(doc)
-        with contextlib.redirect_stderr(io.StringIO()):
-            rejected = check_decode(doc, f"<self-test:{label}>") != 0
-        if not rejected:
-            failures.append(f"bad fixture accepted: {label}")
+    def expect_good(checker, doc, label):
+        if checker(copy.deepcopy(doc), f"<self-test:{label}>") != 0:
+            failures.append(f"good fixture rejected: {label}")
+
+    def make_expect_bad(checker, good):
+        def expect_bad(label, mutate):
+            doc = copy.deepcopy(good)
+            mutate(doc)
+            with contextlib.redirect_stderr(io.StringIO()):
+                rejected = checker(doc, f"<self-test:{label}>") != 0
+            if not rejected:
+                failures.append(f"bad fixture accepted: {label}")
+        return expect_bad
+
+    good = _good_decode_doc()
+    expect_good(check_decode, good, "good decode")
+    expect_bad = make_expect_bad(check_decode, good)
 
     def slow_t4(doc):
         for g in doc["thread_grid"]:
@@ -399,6 +433,19 @@ def self_test():
                lambda d: d.update(cached_step_growth=5.0))
     expect_bad("packed bytes not below dense",
                lambda d: d.update(packed_bytes_per_step=2000.0))
+
+    serving = _good_serving_doc()
+    expect_good(check_serving, serving, "good serving")
+    expect_bad = make_expect_bad(check_serving, serving)
+    expect_bad("missing restarts", lambda d: d.pop("restarts"))
+    expect_bad("missing timeout_rate", lambda d: d.pop("timeout_rate"))
+    expect_bad("timeout_rate above 1", lambda d: d.update(timeout_rate=1.5))
+    expect_bad("negative failure_rate", lambda d: d.update(failure_rate=-0.1))
+    expect_bad("timed_out + failed exceed errors",
+               lambda d: d.update(timed_out=4, failed=4))
+    expect_bad("negative retried", lambda d: d.update(retried=-1))
+    expect_bad("served + rejected exceed requests",
+               lambda d: d.update(served=200))
 
     if failures:
         for f in failures:

@@ -78,6 +78,28 @@ cargo run --release -q -- loadgen \
 cargo run --release -q -- loadgen \
   --backend native --replicas 2 --queue-cap 32 --max-requests 40 \
   --sweep 200,400 --mode mixed --max-new 4 --out ''
+# Chaos smoke: a fixed-seed fault plan (>=1 panic per replica) against 2
+# synthetic replicas. Proves the supervisor end to end: the panicked
+# replicas restart, every request reaches a terminal outcome, and the
+# availability accounting balances. The dump uses a non-BENCH_* name so
+# the schema scan below doesn't treat this throwaway as a bench artifact.
+cargo run --release -q -- loadgen \
+  --replicas 2 --queue-cap 64 --max-requests 96 --concurrency 8 \
+  --forward-us 100 --chaos 7 --request-timeout-ms 2000 \
+  --out chaos_smoke_serving.json
+python3 - chaos_smoke_serving.json <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc["restarts"] > 0, f"chaos smoke: no replica restarted ({doc['restarts']})"
+total = doc["served"] + doc["rejected"]
+assert total == 96, f"chaos smoke: accounting unbalanced ({total} != 96)"
+for key in ("timeout_rate", "failure_rate", "rejection_rate"):
+    assert 0.0 <= doc[key] <= 1.0, f"chaos smoke: {key} = {doc[key]} outside [0, 1]"
+assert doc["timed_out"] + doc["failed"] <= doc["errors"], "chaos smoke: error taxonomy"
+print(f"ci: chaos smoke OK (restarts {doc['restarts']}, retried {doc['retried']}, "
+      f"timed_out {doc['timed_out']}, failed {doc['failed']})")
+EOF
+rm -f chaos_smoke_serving.json
 # Any bench dumps lying around must match the schemas the tables consume
 # (absent files are fine — benches are optional here; unknown BENCH_*.json
 # names or schema violations are not).
