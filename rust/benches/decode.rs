@@ -4,6 +4,11 @@
 //! *real* decode loop (seeded synthetic model, no PJRT, no artifacts):
 //!
 //! - prefill vs decode tokens/sec;
+//! - blocked prefill (`prefill_block_grid`): the same prompt ingested at
+//!   several block sizes, block 0 being the per-token oracle — every
+//!   blocked variant is asserted bitwise logits-identical to the oracle
+//!   before timing, so the grid measures wall time of a computation
+//!   pinned identical (DESIGN.md §2.13);
 //! - per-step latency at several context lengths, for the KV-cached step
 //!   AND the full-context baseline (one whole-row forward per token, the
 //!   PJRT path's semantics) — the cached step must not inherit the
@@ -63,6 +68,37 @@ fn main() {
         },
     );
     let prefill_tps = suite.rate_of(&format!("decode/prefill {prefill_len} tokens (tokens)"));
+
+    // ---- blocked prefill: tokens/sec vs block size ----
+    // Block 0 is the per-token oracle. Pin every blocked variant bitwise
+    // logits-identical to it on the same prompt before timing anything.
+    let prefill_blocks = [0usize, 4, 16, 64];
+    let mut prefill_rows = Vec::new();
+    {
+        kv.reset(&mut pool);
+        engine.prefill(&mut kv, &mut pool, &row[..prefill_len]).unwrap();
+        let want: Vec<u32> = engine.logits().iter().map(|v| v.to_bits()).collect();
+        for &block in &prefill_blocks[1..] {
+            kv.reset(&mut pool);
+            engine.prefill_blocked(&mut kv, &mut pool, &row[..prefill_len], block).unwrap();
+            let got: Vec<u32> = engine.logits().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(got, want, "block {block} changed prefill logit bits");
+        }
+    }
+    for &block in &prefill_blocks {
+        let name = format!("decode/prefill {prefill_len} tokens, block {block} (tokens)");
+        suite.bench_with_items(&name, Some(prefill_len as f64), || {
+            kv.reset(&mut pool);
+            if block == 0 {
+                engine.prefill(&mut kv, &mut pool, &row[..prefill_len]).unwrap();
+            } else {
+                engine.prefill_blocked(&mut kv, &mut pool, &row[..prefill_len], block).unwrap();
+            }
+        });
+        let tps = suite.rate_of(&name).unwrap_or(0.0);
+        println!("decode: prefill block {block}: {tps:.0} tok/s");
+        prefill_rows.push((block, tps));
+    }
 
     // ---- decode throughput (prefill 8, generate 32, KV-cached) ----
     suite.bench_with_items("decode/generate 32 tokens after 8 (tokens)", Some(32.0), || {
@@ -260,6 +296,15 @@ fn main() {
     m.insert("max_seq", (cfg.max_seq as f64).into());
     j.insert("model", m);
     j.insert("prefill_tokens_per_sec", prefill_tps.unwrap_or(0.0).into());
+    j.insert("prefill_prompt_tokens", (prefill_len as f64).into());
+    let mut pf_arr = Vec::new();
+    for &(block, tps) in &prefill_rows {
+        let mut e = Json::obj();
+        e.insert("block", (block as f64).into());
+        e.insert("tokens_per_sec", tps.into());
+        pf_arr.push(e);
+    }
+    j.insert("prefill_block_grid", Json::Arr(pf_arr));
     j.insert("decode_tokens_per_sec", decode_tps.unwrap_or(0.0).into());
     let mut ctx_arr = Vec::new();
     for (i, &ctx) in contexts.iter().enumerate() {
@@ -299,6 +344,7 @@ fn main() {
     let complete = cached_ms.iter().chain(&full_ms).all(|ms| *ms > 0.0)
         && prefill_tps.is_some()
         && decode_tps.is_some()
+        && prefill_rows.iter().all(|(_, t)| *t > 0.0)
         && batched_rows.iter().all(|(_, b, s)| *b > 0.0 && *s > 0.0)
         && grid_rows.iter().all(|(_, _, t)| *t > 0.0);
     if complete {

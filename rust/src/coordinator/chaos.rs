@@ -29,7 +29,7 @@
 //! `stop_tokens`, `end_session`) is never faulted, so capacity probing
 //! and cleanup stay reliable even mid-plan.
 
-use crate::coordinator::server::ReplicaBackend;
+use crate::coordinator::server::{ReplicaBackend, StepOutcome};
 use crate::util::prng::Rng;
 use anyhow::{bail, Result};
 use std::collections::BTreeSet;
@@ -265,7 +265,7 @@ impl<B: ReplicaBackend> ReplicaBackend for ChaosBackend<B> {
         self.inner.score_rows(rows)
     }
 
-    fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> Result<Vec<Option<u32>>> {
+    fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> Result<Vec<StepOutcome>> {
         self.tick()?;
         self.inner.decode_step_sessions(rows)
     }
@@ -343,9 +343,9 @@ mod tests {
             Ok(vec![0.0; rows.len()])
         }
 
-        fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> Result<Vec<Option<u32>>> {
+        fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> Result<Vec<StepOutcome>> {
             self.calls += 1;
-            Ok(vec![Some(3); rows.len()])
+            Ok(vec![StepOutcome::Token(3); rows.len()])
         }
 
         fn stop_tokens(&self) -> Vec<u32> {

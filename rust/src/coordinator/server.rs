@@ -170,6 +170,29 @@ impl Ticket {
 
 // ---------------------------------------------------------------- backends
 
+/// One lane's result from [`ReplicaBackend::decode_step_sessions`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// The lane advanced and emitted its next token.
+    Token(u32),
+    /// The lane made bounded progress (a resumable prefill block) but has
+    /// no token yet — the scheduler re-ticks it with the unchanged row on
+    /// the next dispatch (continuous batching).
+    Pending,
+    /// The backend ended the session (degenerate row, backend policy).
+    End,
+}
+
+impl StepOutcome {
+    /// The emitted token, if any (`Token(t)` → `Some(t)`).
+    pub fn token(self) -> Option<u32> {
+        match self {
+            StepOutcome::Token(t) => Some(t),
+            _ => None,
+        }
+    }
+}
+
 /// What one replica thread needs from its engine. Implementations own all
 /// non-`Send` state (they are *built inside* the replica thread by the
 /// factory passed to [`ServerCore::start`]). The surface is deliberately
@@ -183,16 +206,18 @@ pub trait ReplicaBackend {
     /// Score each `(tokens, span)` row: sum of continuation logprobs.
     fn score_rows(&mut self, rows: &[(Vec<u32>, (usize, usize))]) -> Result<Vec<f64>>;
 
-    /// THE decode op: advance every `(session id, full row)` lane one
-    /// token. The id is stable for the life of a generate session on
-    /// this replica — KV-cached backends key incremental state by it and
-    /// batch all lanes through one `StepBatch` per call; stateless
-    /// backends just read the rows. A backend may return `None` to end a
-    /// session early; the shipped backends emit until the scheduler ends
-    /// sessions via stop tokens or the `max_new` budget (the native
-    /// backend slides past the context edge, the coordinator backend
-    /// left-crops).
-    fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> Result<Vec<Option<u32>>>;
+    /// THE decode op: advance every `(session id, full row)` lane. The id
+    /// is stable for the life of a generate session on this replica —
+    /// KV-cached backends key incremental state by it and batch all lanes
+    /// through one `StepBatch` per call; stateless backends just read the
+    /// rows. A lane normally yields [`StepOutcome::Token`];
+    /// [`StepOutcome::Pending`] defers it to the next tick with its row
+    /// unchanged (bounded prefill of a long prompt), and
+    /// [`StepOutcome::End`] ends the session early. The shipped backends
+    /// emit until the scheduler ends sessions via stop tokens or the
+    /// `max_new` budget (the native backend slides past the context edge,
+    /// the coordinator backend left-crops).
+    fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> Result<Vec<StepOutcome>>;
 
     /// A generate session finished (stop/budget/context/error) — release
     /// any per-session state. Default: nothing to release.
@@ -239,12 +264,18 @@ impl ReplicaBackend for CoordinatorBackend {
     /// Stateless: one full-context forward per row (the artifact
     /// executables are fixed-shape); session ids are irrelevant. Rows at
     /// or past the context edge are left-cropped by `pack_rows`, so this
-    /// backend always emits (`Some`) — its sessions end at the scheduler
+    /// backend always emits a token — its sessions end at the scheduler
     /// level via stop tokens or the `max_new` budget.
-    fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> Result<Vec<Option<u32>>> {
+    fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> Result<Vec<StepOutcome>> {
         let prompts: Vec<&[u32]> = rows.iter().map(|(_, p)| *p).collect();
         let outs = self.coord.generate_refs(&self.cfg, &prompts, 1, &self.stop)?;
-        Ok(outs.into_iter().map(|o| o.into_iter().next()).collect())
+        Ok(outs
+            .into_iter()
+            .map(|o| match o.into_iter().next() {
+                Some(t) => StepOutcome::Token(t),
+                None => StepOutcome::End,
+            })
+            .collect())
     }
 
     fn stop_tokens(&self) -> Vec<u32> {
@@ -284,6 +315,9 @@ pub struct NativeBackend {
     batch: StepBatch,
     stop: Vec<u32>,
     batch_cap: usize,
+    /// Resumable-prefill block budget per session per tick (0 = feed a
+    /// lane's whole backlog in one tick, the pre-existing behavior).
+    prefill_block: usize,
     /// "artifacts" or "synthetic" — where the weights came from.
     pub origin: &'static str,
 }
@@ -353,8 +387,23 @@ impl NativeBackend {
             engine,
             stop,
             batch_cap,
+            prefill_block: 0,
             origin: "prebuilt",
         }
+    }
+
+    /// Bound prompt ingestion to at most one `block`-position blocked
+    /// prefill chunk per session per tick (the `--prefill-block` flag):
+    /// a lane more than one token behind its row catches up through the
+    /// no-logits blocked kernel and returns [`StepOutcome::Pending`]
+    /// until its final token is next, so a long prompt admits
+    /// incrementally instead of stalling the tick's decode lanes
+    /// (continuous batching). `0` (the default) keeps the pre-existing
+    /// feed-to-completion tick — the sequential oracle the bounded path
+    /// is pinned against.
+    pub fn with_prefill_block(mut self, block: usize) -> NativeBackend {
+        self.prefill_block = block;
+        self
     }
 
     /// Resize the engine's worker pool (the `--threads` flag on
@@ -427,20 +476,28 @@ impl ReplicaBackend for NativeBackend {
     /// One batched step across every lane. Each session feeds only the
     /// window tokens its cache has not seen (normally exactly one; a
     /// fresh, evicted or freshly-slid session catches up over several
-    /// ragged batched steps), and a lane's final token loads the logits
-    /// its next token is read from. Sessions never end on context here —
-    /// the sliding window keeps them alive until stop/budget.
-    fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> Result<Vec<Option<u32>>> {
-        let mut out = vec![None; rows.len()];
+    /// ragged batched steps — or, with a `prefill_block` budget, over
+    /// several Pending ticks of bounded blocked-prefill chunks), and a
+    /// lane's final token loads the logits its next token is read from.
+    /// Sessions never end on context here — the sliding window keeps
+    /// them alive until stop/budget.
+    fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> Result<Vec<StepOutcome>> {
+        let mut out = vec![StepOutcome::Pending; rows.len()];
         let cap = self.sessions.cap();
         let vocab = self.engine.config().vocab as u32;
+        // Bounded resumable prefill needs lane slots to survive between
+        // ticks; when the tick itself overflows the slot cap, chunks
+        // would evict each other's in-flight prefill (livelock), so fall
+        // back to feed-to-completion. In the serving loop this never
+        // triggers: the pool is sized to at least the tick width.
+        let bounded = self.prefill_block > 0 && rows.len() <= cap;
         for (chunk_idx, chunk) in rows.chunks(cap).enumerate() {
             let base = chunk_idx * cap;
             // A degenerate lane (empty row, out-of-vocab prompt token)
             // must not poison the shared batch: it ends its OWN session
-            // (stays `None`, slot released) while healthy concurrent
-            // lanes keep decoding — `Err` from here would abort every
-            // session in the tick.
+            // (`End`, slot released) while healthy concurrent lanes keep
+            // decoding — `Err` from here would abort every session in
+            // the tick.
             let mut dead = vec![false; chunk.len()];
             // Reconcile each lane's cache with its current window. The
             // window start is a pure function of the row length, so a
@@ -448,12 +505,13 @@ impl ReplicaBackend for NativeBackend {
             // a cache already fed through the whole row means the caller
             // re-ticked an unchanged row (its emitted token was never
             // appended) — rebuild and re-emit deterministically instead
-            // of returning a session-ending None. In the normal flow the
+            // of returning a session-ending End. In the normal flow the
             // row has grown past the fed prefix, so equality never
             // triggers a rebuild there.
             for (j, (id, row)) in chunk.iter().enumerate() {
                 if row.is_empty() {
                     dead[j] = true;
+                    out[base + j] = StepOutcome::End;
                     self.sessions.remove(&mut self.pages, *id);
                     continue;
                 }
@@ -462,6 +520,41 @@ impl ReplicaBackend for NativeBackend {
                 if slot.anchor != ws || ws + slot.kv.len() >= row.len() {
                     slot.kv.reset(&mut self.pages);
                     slot.anchor = ws;
+                }
+            }
+            // Bounded prefill (continuous batching): each lane more than
+            // one token behind its row catches up by at most one blocked
+            // chunk — the no-logits body kernel — per tick. Lanes whose
+            // final token becomes next join the shared step below and
+            // emit; the rest return Pending and resume next tick from
+            // their cursor (= anchor + kv.len(), persisted in the slot).
+            if bounded {
+                for (j, (id, row)) in chunk.iter().enumerate() {
+                    if dead[j] {
+                        continue;
+                    }
+                    let slot = self.sessions.get_mut(*id).expect("reconciled above");
+                    let fed = slot.anchor + slot.kv.len();
+                    let remaining = row.len() - fed;
+                    if remaining <= 1 {
+                        continue;
+                    }
+                    let budget = self.prefill_block.min(remaining - 1);
+                    let body = &row[fed..fed + budget];
+                    if body.iter().any(|t| *t >= vocab) {
+                        dead[j] = true;
+                        out[base + j] = StepOutcome::End;
+                        self.sessions.remove(&mut self.pages, *id);
+                        continue;
+                    }
+                    // Infallible here: tokens pre-checked, and the window
+                    // rule caps `kv.len() + budget` under max_seq.
+                    self.engine.prefill_body(
+                        &mut slot.kv,
+                        &mut self.pages,
+                        body,
+                        self.prefill_block,
+                    )?;
                 }
             }
             loop {
@@ -473,8 +566,14 @@ impl ReplicaBackend for NativeBackend {
                     let slot = self.sessions.get_mut(*id).expect("reconciled above");
                     let fed = slot.anchor + slot.kv.len();
                     if fed < row.len() {
+                        // Still mid-prefill under a bounded budget: hold
+                        // the lane at Pending for this tick.
+                        if bounded && row.len() - fed > 1 {
+                            continue;
+                        }
                         if row[fed] >= vocab {
                             dead[j] = true;
+                            out[base + j] = StepOutcome::End;
                             self.sessions.remove(&mut self.pages, *id);
                             continue;
                         }
@@ -491,7 +590,7 @@ impl ReplicaBackend for NativeBackend {
                     if lane < self.batch.len() && self.batch.lanes()[lane].session == *id {
                         let slot = self.sessions.get_mut(*id).expect("still resident");
                         if slot.anchor + slot.kv.len() == row.len() {
-                            out[base + j] = Some(self.batch.argmax(lane));
+                            out[base + j] = StepOutcome::Token(self.batch.argmax(lane));
                         }
                         lane += 1;
                     }
@@ -568,9 +667,9 @@ impl ReplicaBackend for SyntheticBackend {
         Ok(rows.iter().map(|(t, s)| Self::score_of(t, *s)).collect())
     }
 
-    fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> Result<Vec<Option<u32>>> {
+    fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> Result<Vec<StepOutcome>> {
         self.forward();
-        Ok(rows.iter().map(|(_, p)| Some(Self::next_token(p))).collect())
+        Ok(rows.iter().map(|(_, p)| StepOutcome::Token(Self::next_token(p))).collect())
     }
 
     fn stop_tokens(&self) -> Vec<u32> {
@@ -1536,8 +1635,13 @@ fn run_replica<B, F>(
                         for (id, out) in ids.iter().zip(outs) {
                             let sess = sched.session_mut(*id).expect("live session");
                             match out {
-                                Some(tok) => sess.push_token(tok, &stop),
-                                None => sess.done = true, // backend ended it
+                                StepOutcome::Token(tok) => sess.push_token(tok, &stop),
+                                // Mid-prefill: the row is unchanged, the
+                                // scheduler re-ticks the session next
+                                // dispatch and the backend resumes from
+                                // its persisted cursor.
+                                StepOutcome::Pending => {}
+                                StepOutcome::End => sess.done = true, // backend ended it
                             }
                         }
                         for sess in sched.reap_done() {

@@ -332,8 +332,9 @@ impl NativeEngine {
 
 /// The pipeline applied at `(layer, site)` for a batched step — `None`
 /// when the site is disabled or the engine is dense. Takes the fields
-/// (not the engine) so the packed streams stay independently borrowable.
-fn site_sp<'a>(
+/// (not the engine) so the packed streams stay independently borrowable
+/// (shared with the blocked-prefill kernel in `engine::prefill`).
+pub(crate) fn site_sp<'a>(
     sparsity: &'a crate::engine::decode::NativeSparsity,
     enabled: &[bool; 7],
     layer: usize,

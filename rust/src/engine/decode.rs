@@ -320,6 +320,9 @@ pub struct NativeEngine {
     fbuf: Vec<f32>,
     probs: Vec<f32>,
     logits: Vec<f32>,
+    /// Position-major scratch for blocked prefill (`engine::prefill`) —
+    /// retained across chunks like the step buffers above.
+    pub(crate) pblock: crate::engine::prefill::PrefillBlock,
     pub(crate) stats: DecodeStats,
     /// The engine's one worker set: spawned at construction (default one,
     /// i.e. fully inline), parked on a condvar between ticks, shared by
@@ -386,6 +389,7 @@ impl NativeEngine {
             fbuf: vec![0.0; cfg.ffn],
             probs: Vec::with_capacity(cfg.max_seq),
             logits: vec![0.0; cfg.vocab],
+            pblock: crate::engine::prefill::PrefillBlock::default(),
             scratch: Scratch::new(),
             stats: DecodeStats::default(),
             workers: WorkerPool::new(1),

@@ -69,13 +69,35 @@ impl NativeEngine {
         max_new: usize,
         stop: &[u32],
     ) -> Result<Vec<u32>> {
+        self.generate_greedy_with_block(kv, pool, prompt, max_new, stop, 0)
+    }
+
+    /// [`NativeEngine::generate_greedy`] with the prompt fed through
+    /// blocked prefill ([`NativeEngine::prefill_blocked`]) when
+    /// `block >= 1`; `block == 0` keeps the per-token oracle. Outputs are
+    /// bitwise-identical either way (the blocked kernel's structural
+    /// invariant) — `nmsparse decode --prefill-block` and the CI prefill
+    /// smoke pin it.
+    pub fn generate_greedy_with_block(
+        &mut self,
+        kv: &mut KvCache,
+        pool: &mut KvPagePool,
+        prompt: &[u32],
+        max_new: usize,
+        stop: &[u32],
+        block: usize,
+    ) -> Result<Vec<u32>> {
         let max_seq = self.config().max_seq;
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
         // Left-crop long prompts (keep the most recent context), like the
         // PJRT path's `pack_rows`.
         let prompt = &prompt[prompt.len().saturating_sub(max_seq)..];
         kv.reset(pool);
-        self.prefill(kv, pool, prompt)?;
+        if block == 0 {
+            self.prefill(kv, pool, prompt)?;
+        } else {
+            self.prefill_blocked(kv, pool, prompt, block)?;
+        }
         let mut out = Vec::new();
         for _ in 0..max_new {
             let tok = self.argmax_token();

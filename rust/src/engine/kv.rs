@@ -278,6 +278,54 @@ impl KvCache {
         self.len += 1;
     }
 
+    /// Positional form of [`KvCache::write_row`] for blocked prefill:
+    /// write the K/V rows of `layer` at uncommitted position `pos`
+    /// (`len <= pos < len + block`). Within one layer the block's
+    /// positions must be written in ascending order so pages check out
+    /// sequentially; [`KvCache::advance_n`] commits the whole block once
+    /// every layer of every position is written. Bit-identical storage to
+    /// a `write_row`/`advance` loop — only the commit granularity differs.
+    pub fn write_row_at(
+        &mut self,
+        pool: &mut KvPagePool,
+        layer: usize,
+        pos: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) {
+        assert!(pos < self.max_seq, "KV cache full");
+        assert!(pos >= self.len, "position {pos} already committed (len {})", self.len);
+        assert_eq!(k_row.len(), self.d_model);
+        assert_eq!(v_row.len(), self.d_model);
+        let (page, slot) = (pos / self.page_tokens, pos % self.page_tokens);
+        if page == self.pages.len() {
+            let fresh = pool.take_page();
+            debug_assert_eq!(
+                fresh.k.len(),
+                self.n_layers * self.page_tokens * self.d_model,
+                "cache used with a pool of different page geometry"
+            );
+            self.pages.push(fresh);
+        }
+        assert!(page < self.pages.len(), "block positions must be written in ascending order");
+        let base = (layer * self.page_tokens + slot) * self.d_model;
+        let p = &mut self.pages[page];
+        p.k[base..base + self.d_model].copy_from_slice(k_row);
+        p.v[base..base + self.d_model].copy_from_slice(v_row);
+    }
+
+    /// Commit `n` in-flight positions at once — the blocked-prefill twin
+    /// of [`KvCache::advance`], called after every layer × position
+    /// [`KvCache::write_row_at`] of the block.
+    pub fn advance_n(&mut self, n: usize) {
+        assert!(self.len + n <= self.max_seq, "KV cache full");
+        debug_assert!(
+            n == 0 || (self.len + n - 1) / self.page_tokens < self.pages.len(),
+            "advance_n past the written rows"
+        );
+        self.len += n;
+    }
+
     /// The valid key rows of `layer` as per-page contiguous slabs, in
     /// position order — attention at position `t` passes `rows = t + 1`
     /// (its own row was just written, `len` still `t`). Each slab is
@@ -485,6 +533,59 @@ mod tests {
         assert_eq!(kv.pages_held(), 0);
         assert_eq!(pool.outstanding_pages(), 0);
         assert_eq!(pool.peak_pages(), 3);
+    }
+
+    #[test]
+    fn write_row_at_blocks_match_sequential_writes() {
+        // The blocked write path (layer-major over a block, advance_n once)
+        // must leave the exact bytes of the per-token write_row/advance
+        // loop — the storage half of the blocked-prefill invariant.
+        let mut pool_a = pool_pt(2);
+        let mut pool_b = pool_pt(2);
+        let mut seq = pool_a.new_cache();
+        let mut blk = pool_b.new_cache();
+        let row = |pos: usize, layer: usize, val: bool| {
+            let x = (pos * 10 + layer) as f32 + if val { 0.5 } else { 0.0 };
+            [x; 4]
+        };
+        for pos in 0..5 {
+            for layer in 0..2 {
+                seq.write_row(&mut pool_a, layer, &row(pos, layer, false), &row(pos, layer, true));
+            }
+            seq.advance();
+        }
+        // Blocked twin: positions 0..3 as one block, 3..5 as another.
+        for (start, end) in [(0usize, 3usize), (3, 5)] {
+            for layer in 0..2 {
+                for pos in start..end {
+                    blk.write_row_at(
+                        &mut pool_b,
+                        layer,
+                        pos,
+                        &row(pos, layer, false),
+                        &row(pos, layer, true),
+                    );
+                }
+            }
+            blk.advance_n(end - start);
+            assert_eq!(blk.len(), end);
+        }
+        assert_eq!(blk.pages_held(), seq.pages_held());
+        for layer in 0..2 {
+            assert_eq!(flat_keys(&blk, layer, 5), flat_keys(&seq, layer, 5));
+            let va: Vec<f32> = seq.value_segments(layer, 5).flatten().copied().collect();
+            let vb: Vec<f32> = blk.value_segments(layer, 5).flatten().copied().collect();
+            assert_eq!(va, vb);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "KV cache full")]
+    fn advance_n_past_capacity_panics() {
+        let mut pool = pool_pt(3);
+        let mut kv = pool.new_cache();
+        kv.write_row_at(&mut pool, 0, 0, &[0.0; 4], &[0.0; 4]);
+        kv.advance_n(7);
     }
 
     #[test]

@@ -32,7 +32,11 @@
 //! - [`forward`]: prefill, the full-context reference loop (the
 //!   equivalence oracle: token-identical by construction), greedy
 //!   generation under both context-edge rules (PJRT budget rule and the
-//!   serving sliding-window rule), and span scoring.
+//!   serving sliding-window rule), and span scoring;
+//! - [`prefill`]: blocked prefill (§2.13) — prompt ingestion as
+//!   position-major multi-row site matmuls, bitwise logits-identical to
+//!   the per-token loop, with a body-only entry for the resumable
+//!   bounded-block serving prefill in `NativeBackend`.
 //!
 //! Consumers: `coordinator::server::NativeBackend` (`--backend native` in
 //! `nmsparse serve`/`loadgen` — one `StepBatch` per scheduler tick),
@@ -45,9 +49,11 @@ pub mod decode;
 pub mod forward;
 pub mod kv;
 pub mod model;
+pub mod prefill;
 
 pub use batch::{Lane, StepBatch};
 pub use decode::{DecodeStats, NativeEngine, NativeSparsity};
+pub use prefill::PrefillBlock;
 pub use kv::{window_start, KvCache, KvPagePool, SessionKvPool, SessionSlot};
 pub use model::{EngineConfig, NativeModel, SITES};
 // The engine's hot-loop pool (re-exported so engine consumers and tests

@@ -1,0 +1,224 @@
+//! Blocked prefill: prompt ingestion as batched multi-row matmuls
+//! (DESIGN.md §2.13).
+//!
+//! [`NativeEngine::prefill`](crate::engine::NativeEngine::prefill) feeds a
+//! prompt one `step` at a time, so every one of the seven sparsified sites
+//! runs once per position as an independent matvec — a 4k-token prompt is
+//! 4k sequential GEMVs per site. This module applies the `StepBatch`
+//! trick along the **sequence axis**: a block of B consecutive prompt
+//! positions becomes B rows of one
+//! [`apply_site_batch`](crate::engine::decode) call, so each site streams
+//! its weight rows once per block instead of once per position (and the
+//! packed path packs all B rows into one [`PackedNM`] stream via the
+//! pooled per-row selection kernels).
+//!
+//! **Bitwise identity is structural.** Attention is the only op that
+//! crosses positions, and it is causal: position `p` reads K/V rows
+//! `0..=p` only. Running a block layer-major is therefore valid — for
+//! layer `l` the block's K/V rows are written in ascending position order
+//! ([`KvCache::write_row_at`]) before each position's
+//! [`attention_paged`](crate::engine::decode) reads them, and every other
+//! op (rmsnorm, rope, the site matmuls, SwiGLU) is per-position with
+//! per-row kernels identical to the single-lane step. No lm head runs on
+//! non-final positions (part of the speedup); the final prompt token goes
+//! through the ordinary [`NativeEngine::step`](crate::engine::NativeEngine),
+//! which loads next-token logits exactly as sequential prefill's last
+//! step does. `rust/tests/prefill_blocked.rs` pins logits, KV bytes and
+//! stats counters equal to the per-token oracle across patterns, block
+//! sizes and page geometries.
+//!
+//! The body-only entry ([`NativeEngine::prefill_body`]) is what resumable
+//! serving prefill uses: `NativeBackend` feeds at most one bounded block
+//! per scheduler tick (continuous batching), so a long prompt admits
+//! incrementally instead of monopolizing a replica's decode lanes.
+
+use crate::engine::batch::site_sp;
+use crate::engine::decode::{
+    add_assign, apply_site_batch, attention_paged, pick, rmsnorm_into, rope_in_place, silu,
+    NativeEngine,
+};
+use crate::engine::kv::{KvCache, KvPagePool};
+use anyhow::Result;
+
+/// Reusable position-major scratch for one blocked-prefill chunk
+/// (`[block × width]` buffers, the sequence-axis twin of `StepBatch`'s
+/// lane-major scratch). Owned by the engine and retained across chunks
+/// and calls, so steady-state blocked prefill allocates nothing once the
+/// largest block size has been seen.
+#[derive(Debug, Default)]
+pub struct PrefillBlock {
+    // `[block × d_model]` working buffers…
+    x: Vec<f32>,
+    h: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    ctx: Vec<f32>,
+    out_d: Vec<f32>,
+    // …and `[block × ffn]`.
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    fbuf: Vec<f32>,
+    probs: Vec<f32>,
+}
+
+impl PrefillBlock {
+    fn resize(&mut self, n: usize, d_model: usize, ffn: usize) {
+        for buf in [
+            &mut self.x,
+            &mut self.h,
+            &mut self.q,
+            &mut self.k,
+            &mut self.v,
+            &mut self.ctx,
+            &mut self.out_d,
+        ] {
+            buf.resize(n * d_model, 0.0);
+        }
+        for buf in [&mut self.gate, &mut self.up, &mut self.fbuf] {
+            buf.resize(n * ffn, 0.0);
+        }
+    }
+}
+
+impl NativeEngine {
+    /// Blocked prefill: extend the cache over `tokens` in chunks of up to
+    /// `block` positions (each chunk one multi-row matmul per site, no lm
+    /// head), then run the final token through the ordinary
+    /// [`NativeEngine::step`] so next-token logits load exactly as
+    /// sequential prefill leaves them. Bitwise logits-identical to
+    /// [`NativeEngine::prefill`](crate::engine::NativeEngine::prefill) by
+    /// construction; `block == 0` is treated as 1. No-op on an empty
+    /// slice.
+    pub fn prefill_blocked(
+        &mut self,
+        kv: &mut KvCache,
+        pool: &mut KvPagePool,
+        tokens: &[u32],
+        block: usize,
+    ) -> Result<()> {
+        let Some((&last, body)) = tokens.split_last() else {
+            return Ok(());
+        };
+        self.prefill_body(kv, pool, body, block)?;
+        self.step(kv, pool, last)
+    }
+
+    /// The blocked body kernel: extend the cache over `tokens` without
+    /// computing any logits — what resumable serving prefill
+    /// (`NativeBackend`) calls once per bounded tick. Validates up front
+    /// (every token in vocabulary, the whole slice fits the cache), so
+    /// the chunk kernel itself is infallible and a failed call leaves the
+    /// cache untouched.
+    pub fn prefill_body(
+        &mut self,
+        kv: &mut KvCache,
+        pool: &mut KvPagePool,
+        tokens: &[u32],
+        block: usize,
+    ) -> Result<()> {
+        let vocab = self.config().vocab;
+        anyhow::ensure!(
+            kv.len() + tokens.len() <= kv.capacity(),
+            "prefill of {} tokens overflows the KV cache ({} cached, capacity {})",
+            tokens.len(),
+            kv.len(),
+            kv.capacity()
+        );
+        for t in tokens {
+            anyhow::ensure!((*t as usize) < vocab, "token {t} out of vocabulary ({vocab})");
+        }
+        for chunk in tokens.chunks(block.max(1)) {
+            self.prefill_chunk(kv, pool, chunk);
+        }
+        Ok(())
+    }
+
+    /// One block of B positions, layer-major: per layer, the q/k/v sites
+    /// run as one B-row matmul, then each position (ascending) applies
+    /// rope, writes its K/V rows and attends over `0..=pos` — its own
+    /// block's earlier rows are already written — then wo/gate/up/down
+    /// run as B-row matmuls. The block commits once (`advance_n`) and
+    /// counts B steps, so stats totals match the per-token path exactly.
+    fn prefill_chunk(&mut self, kv: &mut KvCache, pool: &mut KvPagePool, chunk: &[u32]) {
+        let NativeEngine {
+            model,
+            sparsity,
+            enabled,
+            packed_d,
+            packed_f,
+            rope_freqs,
+            act,
+            stats,
+            workers,
+            pblock,
+            ..
+        } = self;
+        let cfg = &model.cfg;
+        let (d, ffn, n) = (cfg.d_model, cfg.ffn, chunk.len());
+        let (hd, nh) = (cfg.head_dim(), cfg.n_heads);
+        let base = kv.len();
+        pblock.resize(n, d, ffn);
+        let PrefillBlock { x, h, q, k, v, ctx, out_d, gate, up, fbuf, probs } = pblock;
+        for (i, t) in chunk.iter().enumerate() {
+            x[i * d..(i + 1) * d].copy_from_slice(model.embed.row(*t as usize));
+        }
+        for (l, layer) in model.layers.iter().enumerate() {
+            // Attention block: batched q/k/v sites over the B positions,
+            // then per-position rope + positional cache write + causal
+            // attention (in-block rows written ascending before use).
+            for i in 0..n {
+                rmsnorm_into(&x[i * d..(i + 1) * d], &layer.norm1, &mut h[i * d..(i + 1) * d]);
+            }
+            let s0 = site_sp(sparsity, enabled, l, 0);
+            let p0 = pick(s0, packed_d.as_mut());
+            apply_site_batch(&layer.wq, h, n, s0, p0, act, q, stats, workers);
+            let s1 = site_sp(sparsity, enabled, l, 1);
+            let p1 = pick(s1, packed_d.as_mut());
+            apply_site_batch(&layer.wk, h, n, s1, p1, act, k, stats, workers);
+            let s2 = site_sp(sparsity, enabled, l, 2);
+            let p2 = pick(s2, packed_d.as_mut());
+            apply_site_batch(&layer.wv, h, n, s2, p2, act, v, stats, workers);
+            for i in 0..n {
+                let pos = base + i;
+                rope_in_place(&mut q[i * d..(i + 1) * d], nh, hd, pos, rope_freqs);
+                rope_in_place(&mut k[i * d..(i + 1) * d], nh, hd, pos, rope_freqs);
+                kv.write_row_at(pool, l, pos, &k[i * d..(i + 1) * d], &v[i * d..(i + 1) * d]);
+                attention_paged(
+                    &q[i * d..(i + 1) * d],
+                    kv,
+                    l,
+                    pos + 1,
+                    nh,
+                    hd,
+                    probs,
+                    &mut ctx[i * d..(i + 1) * d],
+                );
+            }
+            let s3 = site_sp(sparsity, enabled, l, 3);
+            let p3 = pick(s3, packed_d.as_mut());
+            apply_site_batch(&layer.wo, ctx, n, s3, p3, act, out_d, stats, workers);
+            add_assign(x, out_d);
+
+            // FFN block (SwiGLU): batched gate/up/down sites.
+            for i in 0..n {
+                rmsnorm_into(&x[i * d..(i + 1) * d], &layer.norm2, &mut h[i * d..(i + 1) * d]);
+            }
+            let s4 = site_sp(sparsity, enabled, l, 4);
+            let p4 = pick(s4, packed_d.as_mut());
+            apply_site_batch(&layer.wgate, h, n, s4, p4, act, gate, stats, workers);
+            let s5 = site_sp(sparsity, enabled, l, 5);
+            let p5 = pick(s5, packed_d.as_mut());
+            apply_site_batch(&layer.wup, h, n, s5, p5, act, up, stats, workers);
+            for ((f, g), u) in fbuf.iter_mut().zip(gate.iter()).zip(up.iter()) {
+                *f = silu(*g) * u;
+            }
+            let s6 = site_sp(sparsity, enabled, l, 6);
+            let p6 = pick(s6, packed_f.as_mut());
+            apply_site_batch(&layer.wdown, fbuf, n, s6, p6, act, out_d, stats, workers);
+            add_assign(x, out_d);
+        }
+        kv.advance_n(n);
+        stats.steps += n as u64;
+    }
+}

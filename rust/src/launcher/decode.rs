@@ -17,7 +17,7 @@
 //! CI batched-decode smoke pins the two hashes equal.
 
 use crate::coordinator::methods::MethodConfig;
-use crate::coordinator::server::{NativeBackend, ReplicaBackend};
+use crate::coordinator::server::{NativeBackend, ReplicaBackend, StepOutcome};
 use crate::engine::decode::load_native_parts;
 use crate::engine::NativeEngine;
 use crate::sparsity::Pattern;
@@ -40,6 +40,7 @@ pub fn cmd_decode(rest: Vec<String>) -> Result<()> {
         OptSpec { name: "threads", takes_value: true, default: Some("1"), help: "worker-pool width for site matmuls (0 = auto; never changes bits)" },
         OptSpec { name: "no-batch", takes_value: false, default: None, help: "step --lanes sessions sequentially (sliding reference)" },
         OptSpec { name: "page-tokens", takes_value: true, default: Some("0"), help: "KV page size in positions (0 = engine default)" },
+        OptSpec { name: "prefill-block", takes_value: true, default: Some("0"), help: "blocked-prefill block size in positions (0 = per-token oracle; never changes bits)" },
         OptSpec { name: "check", takes_value: false, default: None, help: "verify KV-cached == full-context reference" },
         OptSpec { name: "dense-path", takes_value: false, default: None, help: "disable the compressed-domain matvec" },
         OptSpec { name: "help", takes_value: false, default: None, help: "show help" },
@@ -56,6 +57,7 @@ pub fn cmd_decode(rest: Vec<String>) -> Result<()> {
     let lanes = a.get_usize("lanes")?.max(1);
     let threads = resolve_threads(a.get_usize("threads")?);
     let page_tokens = a.get_usize("page-tokens")?;
+    let prefill_block = a.get_usize("prefill-block")?;
     let artifacts = PathBuf::from(a.get("artifacts"));
 
     if lanes > 1 {
@@ -73,6 +75,7 @@ pub fn cmd_decode(rest: Vec<String>) -> Result<()> {
             lanes,
             threads,
             page_tokens,
+            prefill_block,
             a.flag("no-batch"),
             a.flag("dense-path"),
             a.flag("check"),
@@ -121,7 +124,8 @@ pub fn cmd_decode(rest: Vec<String>) -> Result<()> {
 
     let mut kv = pool.new_cache();
     let t0 = std::time::Instant::now();
-    let out = engine.generate_greedy(&mut kv, &mut pool, &prompt, max_new, &[])?;
+    let out = engine
+        .generate_greedy_with_block(&mut kv, &mut pool, &prompt, max_new, &[], prefill_block)?;
     let dt = t0.elapsed().as_secs_f64();
     if a.flag("check") {
         let full = engine.generate_greedy_full(&mut kv, &mut pool, &prompt, max_new, &[])?;
@@ -195,11 +199,15 @@ fn lanes_batched(
     prompts: &[Vec<u32>],
     max_new: usize,
     page_tokens: usize,
+    prefill_block: usize,
 ) -> Result<Vec<Vec<u32>>> {
     let lanes = prompts.len();
     let mut backend = NativeBackend::from_engine(engine, vec![], lanes);
     if page_tokens > 0 {
         backend = backend.with_page_tokens(page_tokens);
+    }
+    if prefill_block > 0 {
+        backend = backend.with_prefill_block(prefill_block);
     }
     let mut rows = prompts.to_vec();
     let mut outs: Vec<Vec<u32>> = vec![Vec::new(); lanes];
@@ -214,9 +222,9 @@ fn lanes_batched(
         }
         let ids: Vec<usize> = (0..lanes).filter(|i| !done[*i]).collect();
         let step = backend.decode_step_sessions(&live)?;
-        for (i, tok) in ids.into_iter().zip(step) {
-            match tok {
-                Some(tok) => {
+        for (i, out) in ids.into_iter().zip(step) {
+            match out {
+                StepOutcome::Token(tok) => {
                     outs[i].push(tok);
                     rows[i].push(tok);
                     if outs[i].len() >= max_new {
@@ -224,7 +232,10 @@ fn lanes_batched(
                         backend.end_session(i as u64 + 1);
                     }
                 }
-                None => {
+                // Mid-prefill: the scheduler (here, this loop) re-ticks
+                // the unchanged row next iteration.
+                StepOutcome::Pending => {}
+                StepOutcome::End => {
                     done[i] = true;
                     backend.end_session(i as u64 + 1);
                 }
@@ -251,6 +262,7 @@ fn decode_lanes(
     lanes: usize,
     threads: usize,
     page_tokens: usize,
+    prefill_block: usize,
     no_batch: bool,
     dense_path: bool,
     check: bool,
@@ -272,7 +284,7 @@ fn decode_lanes(
     let other: Option<Vec<Vec<u32>>> = if check {
         let twin = NativeEngine::new(model.clone(), sparsity.clone())?.with_threads(threads);
         Some(if no_batch {
-            lanes_batched(twin, &prompts, max_new, page_tokens)?
+            lanes_batched(twin, &prompts, max_new, page_tokens, prefill_block)?
         } else {
             lanes_sequential(twin, &prompts, max_new, page_tokens)?
         })
@@ -284,7 +296,7 @@ fn decode_lanes(
     let outs: Vec<Vec<u32>> = if no_batch {
         lanes_sequential(engine, &prompts, max_new, page_tokens)?
     } else {
-        lanes_batched(engine, &prompts, max_new, page_tokens)?
+        lanes_batched(engine, &prompts, max_new, page_tokens, prefill_block)?
     };
     if let Some(other) = other {
         if other != outs {

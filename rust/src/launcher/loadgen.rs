@@ -46,15 +46,21 @@ use crate::util::prng::Rng;
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-/// Traffic mix.
+/// Traffic mix. `LongMix` is the continuous-batching scenario: every 4th
+/// request is a long-prompt generate (prompt far beyond the tiny engine's
+/// `max_seq`, so sliding-window crop and resumable blocked prefill both
+/// engage) and the rest are short decodes — the per-class client-side
+/// latency split (`classes` in the JSON) shows whether long prefills
+/// stall short decodes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Mode {
     Score,
     Generate,
     Mixed,
+    LongMix,
 }
 
 impl Mode {
@@ -63,7 +69,8 @@ impl Mode {
             "score" => Ok(Mode::Score),
             "generate" => Ok(Mode::Generate),
             "mixed" => Ok(Mode::Mixed),
-            other => bail!("unknown --mode '{other}' (score, generate, mixed)"),
+            "longmix" => Ok(Mode::LongMix),
+            other => bail!("unknown --mode '{other}' (score, generate, mixed, longmix)"),
         }
     }
 
@@ -72,8 +79,14 @@ impl Mode {
             Mode::Score => "score",
             Mode::Generate => "generate",
             Mode::Mixed => "mixed",
+            Mode::LongMix => "longmix",
         }
     }
+}
+
+/// Is request `idx` of a longmix run the long-prompt class?
+pub fn longmix_is_long(idx: usize) -> bool {
+    idx % 4 == 0
 }
 
 /// Which engine the replicas run.
@@ -95,6 +108,9 @@ pub enum BackendChoice {
         seed: u64,
         batch: usize,
         threads: usize,
+        /// Resumable-prefill block size per scheduler tick (0 = legacy
+        /// feed-to-completion; never changes decoded bits).
+        prefill_block: usize,
     },
 }
 
@@ -141,6 +157,41 @@ impl Default for LoadgenConfig {
     }
 }
 
+/// Client-side per-class latency, recorded only in longmix runs:
+/// `long_prompt` holds the `longmix_is_long` long-prefill generates,
+/// `short_decode` everything else. Measured submit → terminal reply on
+/// the client, so it includes queueing — the tail of `short_decode` is
+/// what resumable prefill (`--prefill-block`) is meant to protect.
+#[derive(Clone, Debug, Default)]
+pub struct ClassLatency {
+    pub long_prompt: crate::util::stats::Histogram,
+    pub short_decode: crate::util::stats::Histogram,
+}
+
+impl ClassLatency {
+    fn record(&mut self, long: bool, d: Duration) {
+        if long {
+            self.long_prompt.record_duration(d);
+        } else {
+            self.short_decode.record_duration(d);
+        }
+    }
+
+    /// The `classes` JSON block: one `{count, latency_ms}` entry per class.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        for (name, hist) in
+            [("long_prompt", &self.long_prompt), ("short_decode", &self.short_decode)]
+        {
+            let mut c = Json::obj();
+            c.insert("count", (hist.count() as f64).into());
+            c.insert("latency_ms", latency_ms_json(hist));
+            j.insert(name, c);
+        }
+        j
+    }
+}
+
 /// Outcome of a run: final server stats plus wall-clock derived rates.
 #[derive(Clone, Debug)]
 pub struct LoadgenReport {
@@ -151,6 +202,8 @@ pub struct LoadgenReport {
     pub replicas: usize,
     pub queue_cap: usize,
     pub backend_name: &'static str,
+    /// Per-class client-side latency; `Some` only for longmix runs.
+    pub classes: Option<ClassLatency>,
 }
 
 impl LoadgenReport {
@@ -182,6 +235,9 @@ impl LoadgenReport {
         j.insert("failed", (self.stats.failed as f64).into());
         j.insert("timeout_rate", self.stats.timeout_rate().into());
         j.insert("failure_rate", self.stats.failure_rate().into());
+        if let Some(c) = &self.classes {
+            j.insert("classes", c.to_json());
+        }
         j
     }
 
@@ -228,7 +284,7 @@ pub fn make_request(seed: u64, idx: usize, mode: Mode, max_new: usize) -> Reques
     let mut rng = Rng::new(seed ^ (idx as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
     let score = match mode {
         Mode::Score => true,
-        Mode::Generate => false,
+        Mode::Generate | Mode::LongMix => false,
         Mode::Mixed => idx % 3 != 2, // 2:1 score:generate
     };
     if score {
@@ -237,6 +293,16 @@ pub fn make_request(seed: u64, idx: usize, mode: Mode, max_new: usize) -> Reques
         let start = rng.range(1, len);
         let end = rng.range(start + 1, len + 1);
         Request::Score { tokens, span: (start, end) }
+    } else if mode == Mode::LongMix {
+        // Long class: a prompt far beyond the tiny engine's max_seq (64),
+        // so the backend crops to the sliding window and still prefills a
+        // near-full context; short class: a quick decode that should not
+        // queue behind it when resumable prefill is on.
+        let long = longmix_is_long(idx);
+        let len = if long { rng.range(96, 161) } else { rng.range(3, 10) };
+        let tokens: Vec<u32> = (0..len).map(|_| rng.range(3, 120) as u32).collect();
+        let budget = if long { rng.range(1, 4) } else { rng.range(1, max_new.max(1) + 1) };
+        Request::Generate { tokens, max_new: budget }
     } else {
         let len = rng.range(3, 16);
         let tokens: Vec<u32> = (0..len).map(|_| rng.range(3, 120) as u32).collect();
@@ -280,15 +346,17 @@ fn start_core(cfg: &LoadgenConfig) -> Result<(ServerCore, &'static str)> {
             })?;
             Ok((core, "artifacts"))
         }
-        BackendChoice::Native { dir, pattern, method, seed, batch, threads } => {
+        BackendChoice::Native { dir, pattern, method, seed, batch, threads, prefill_block } => {
             let pattern = Pattern::parse(pattern)?;
             let vocab = Vocab::synthlang();
             let stop = vec![vocab.id(".")?, EOS];
             let (dir, method) = (dir.clone(), method.clone());
             let (seed, batch, threads) = (*seed, *batch, *threads);
+            let prefill_block = *prefill_block;
             let core = ServerCore::start(server_cfg, move |r| {
                 NativeBackend::open(&dir, pattern, &method, stop.clone(), batch, seed)
-                    .map(|b| ChaosBackend::new(b.with_threads(threads), chaos[r].clone()))
+                    .map(|b| b.with_threads(threads).with_prefill_block(prefill_block))
+                    .map(|b| ChaosBackend::new(b, chaos[r].clone()))
             })?;
             Ok((core, "native"))
         }
@@ -300,11 +368,14 @@ fn start_core(cfg: &LoadgenConfig) -> Result<(ServerCore, &'static str)> {
 pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     anyhow::ensure!(cfg.max_requests > 0, "--max-requests must be > 0 for a bounded run");
     let (core, backend_name) = start_core(cfg)?;
+    // Client-side per-class split, longmix only (keeps every other mode's
+    // JSON — and the sweep schema old consumers parse — unchanged).
+    let classes = (cfg.mode == Mode::LongMix).then(|| Mutex::new(ClassLatency::default()));
     let t0 = Instant::now();
     if cfg.rate_rps > 0.0 {
-        run_open_loop(&core, cfg);
+        run_open_loop(&core, cfg, classes.as_ref());
     } else {
-        run_closed_loop(&core, cfg);
+        run_closed_loop(&core, cfg, classes.as_ref());
     }
     let wall_s = t0.elapsed().as_secs_f64();
     let stats = core.shutdown();
@@ -316,10 +387,11 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         replicas: cfg.replicas,
         queue_cap: cfg.queue_cap,
         backend_name,
+        classes: classes.map(|m| m.into_inner().unwrap()),
     })
 }
 
-fn run_closed_loop(core: &ServerCore, cfg: &LoadgenConfig) {
+fn run_closed_loop(core: &ServerCore, cfg: &LoadgenConfig, classes: Option<&Mutex<ClassLatency>>) {
     let next = Arc::new(AtomicUsize::new(0));
     std::thread::scope(|scope| {
         for client in 0..cfg.concurrency.max(1) {
@@ -332,10 +404,14 @@ fn run_closed_loop(core: &ServerCore, cfg: &LoadgenConfig) {
                 }
                 let req = make_request(cfg.seed, idx, cfg.mode, cfg.max_new);
                 let deadline = cfg.request_timeout.map(|d| Instant::now() + d);
+                let t_req = Instant::now();
                 // Session affinity: one client = one session key.
                 match handle.submit_with(Some(client as u64), req, deadline) {
                     Ok(ticket) => {
                         let _ = ticket.recv(); // one in flight per client
+                        if let Some(c) = classes {
+                            c.lock().unwrap().record(longmix_is_long(idx), t_req.elapsed());
+                        }
                     }
                     Err(SubmitError::Overloaded { .. }) => {} // shed; counted server-side
                     Err(SubmitError::Closed) => break,
@@ -345,27 +421,45 @@ fn run_closed_loop(core: &ServerCore, cfg: &LoadgenConfig) {
     });
 }
 
-fn run_open_loop(core: &ServerCore, cfg: &LoadgenConfig) {
+fn run_open_loop(core: &ServerCore, cfg: &LoadgenConfig, classes: Option<&Mutex<ClassLatency>>) {
     let interval = Duration::from_secs_f64(1.0 / cfg.rate_rps);
     let start = Instant::now();
-    let mut tickets: Vec<Ticket> = Vec::with_capacity(cfg.max_requests);
-    for idx in 0..cfg.max_requests {
-        let due = start + interval.mul_f64(idx as f64);
-        let now = Instant::now();
-        if due > now {
-            std::thread::sleep(due - now);
+    std::thread::scope(|scope| {
+        let mut tickets: Vec<Ticket> = Vec::with_capacity(cfg.max_requests);
+        for idx in 0..cfg.max_requests {
+            let due = start + interval.mul_f64(idx as f64);
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+            let req = make_request(cfg.seed, idx, cfg.mode, cfg.max_new);
+            let deadline = cfg.request_timeout.map(|d| Instant::now() + d);
+            let t_req = Instant::now();
+            match core.submit_with(None, req, deadline) {
+                Ok(t) => {
+                    if let Some(c) = classes {
+                        // Per-ticket collector thread: recv the moment the
+                        // reply lands, so the class histogram records true
+                        // submit -> terminal latency (draining at the end
+                        // would overcount for early finishers). Bounded by
+                        // max_requests; longmix runs only.
+                        let long = longmix_is_long(idx);
+                        scope.spawn(move || {
+                            let _ = t.recv();
+                            c.lock().unwrap().record(long, t_req.elapsed());
+                        });
+                    } else {
+                        tickets.push(t);
+                    }
+                }
+                Err(SubmitError::Overloaded { .. }) => {} // shed; counted server-side
+                Err(SubmitError::Closed) => break,
+            }
         }
-        let req = make_request(cfg.seed, idx, cfg.mode, cfg.max_new);
-        let deadline = cfg.request_timeout.map(|d| Instant::now() + d);
-        match core.submit_with(None, req, deadline) {
-            Ok(t) => tickets.push(t),
-            Err(SubmitError::Overloaded { .. }) => {} // shed; counted server-side
-            Err(SubmitError::Closed) => break,
+        for t in &tickets {
+            let _ = t.recv();
         }
-    }
-    for t in &tickets {
-        let _ = t.recv();
-    }
+    });
 }
 
 /// Write `report.to_json()` to `path` (pretty, trailing newline).
@@ -434,6 +528,9 @@ pub fn sweep_json(cfg: &LoadgenConfig, points: &[SweepPoint]) -> Json {
         e.insert("failure_rate", p.report.stats.failure_rate().into());
         e.insert("restarts", (p.report.stats.restarts as f64).into());
         e.insert("retried", (p.report.stats.retried as f64).into());
+        if let Some(c) = &p.report.classes {
+            e.insert("classes", c.to_json());
+        }
         arr.push(e);
     }
     j.insert("points", Json::Arr(arr));
@@ -458,13 +555,14 @@ pub fn cmd_loadgen(rest: Vec<String>) -> Result<()> {
         OptSpec { name: "max-requests", takes_value: true, default: Some("256"), help: "total requests (bounded run)" },
         OptSpec { name: "concurrency", takes_value: true, default: Some("16"), help: "closed-loop clients" },
         OptSpec { name: "rate", takes_value: true, default: Some("0"), help: "open-loop req/s (0 = closed loop)" },
-        OptSpec { name: "mode", takes_value: true, default: Some("mixed"), help: "score | generate | mixed" },
+        OptSpec { name: "mode", takes_value: true, default: Some("mixed"), help: "score | generate | mixed | longmix (long-prompt/short-decode mix, per-class latency)" },
         OptSpec { name: "max-new", takes_value: true, default: Some("8"), help: "max generated tokens" },
         OptSpec { name: "max-wait-ms", takes_value: true, default: Some("5"), help: "batch deadline (ms)" },
         OptSpec { name: "seed", takes_value: true, default: Some("7"), help: "request-synthesis seed" },
         OptSpec { name: "backend", takes_value: true, default: Some("synthetic"), help: "synthetic | artifacts | native" },
         OptSpec { name: "batch", takes_value: true, default: Some("16"), help: "synthetic/native batch capacity" },
         OptSpec { name: "threads", takes_value: true, default: Some("1"), help: "native worker-pool width per replica (0 = auto; never changes bits)" },
+        OptSpec { name: "prefill-block", takes_value: true, default: Some("0"), help: "native resumable-prefill block size per tick (0 = feed-to-completion; never changes bits)" },
         OptSpec { name: "forward-us", takes_value: true, default: Some("150"), help: "synthetic per-forward cost (us)" },
         OptSpec { name: "artifacts", takes_value: true, default: Some("artifacts"), help: "artifacts dir (artifacts/native backends)" },
         OptSpec { name: "pattern", takes_value: true, default: Some("8:16"), help: "sparsity pattern (artifacts/native backends)" },
@@ -502,6 +600,7 @@ pub fn cmd_loadgen(rest: Vec<String>) -> Result<()> {
             seed: a.get_u64("seed")?,
             batch: a.get_usize("batch")?,
             threads: super::decode::resolve_threads(a.get_usize("threads")?),
+            prefill_block: a.get_usize("prefill-block")?,
         },
         other => bail!("unknown --backend '{other}' (synthetic, artifacts, native)"),
     };
@@ -647,6 +746,7 @@ mod tests {
                 seed: 3,
                 batch: 4,
                 threads: 2,
+                prefill_block: 0,
             },
             ..Default::default()
         };
@@ -654,6 +754,93 @@ mod tests {
         assert_eq!(report.backend_name, "native");
         assert_eq!(report.stats.served + report.stats.rejected, 24);
         assert_eq!(report.stats.errors, 0);
+        assert!(report.classes.is_none(), "classes is a longmix-only field");
+    }
+
+    #[test]
+    fn longmix_synthesis_mixes_long_and_short_generates() {
+        for idx in 0..32 {
+            match make_request(9, idx, Mode::LongMix, 8) {
+                Request::Generate { tokens, max_new } => {
+                    if longmix_is_long(idx) {
+                        assert!((96..=160).contains(&tokens.len()), "len {}", tokens.len());
+                        assert!((1..=3).contains(&max_new));
+                    } else {
+                        assert!((3..=9).contains(&tokens.len()), "len {}", tokens.len());
+                    }
+                }
+                other => panic!("longmix emitted a non-generate request: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn longmix_native_run_reports_per_class_latency() {
+        let cfg = LoadgenConfig {
+            replicas: 1,
+            queue_cap: 64,
+            max_requests: 16,
+            concurrency: 4,
+            max_new: 4,
+            mode: Mode::LongMix,
+            backend: BackendChoice::Native {
+                dir: PathBuf::from("/definitely/not/here"),
+                pattern: "8:16".into(),
+                method: "ACT".into(),
+                seed: 3,
+                batch: 4,
+                threads: 1,
+                prefill_block: 8,
+            },
+            ..Default::default()
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.stats.served + report.stats.rejected, 16);
+        assert_eq!(report.stats.errors, 0);
+        let classes = report.classes.as_ref().expect("longmix records classes");
+        // 16 requests, idx % 4 == 0 -> 4 long, 12 short (none shed: cap 64).
+        assert_eq!(classes.long_prompt.count(), 4);
+        assert_eq!(classes.short_decode.count(), 12);
+        let j = report.to_json();
+        let c = j.get("classes").expect("classes block in longmix JSON");
+        for class in ["long_prompt", "short_decode"] {
+            let e = c.get(class).unwrap();
+            assert!(e.get("count").and_then(|x| x.as_f64()).unwrap() > 0.0);
+            let lat = e.get("latency_ms").unwrap();
+            let p50 = lat.get("p50").and_then(|x| x.as_f64()).unwrap();
+            let p99 = lat.get("p99").and_then(|x| x.as_f64()).unwrap();
+            assert!(p50 <= p99, "{class}: p50 {p50} > p99 {p99}");
+        }
+    }
+
+    #[test]
+    fn longmix_open_loop_sweep_point_carries_classes() {
+        let cfg = LoadgenConfig {
+            replicas: 1,
+            queue_cap: 64,
+            max_requests: 12,
+            mode: Mode::LongMix,
+            backend: BackendChoice::Native {
+                dir: PathBuf::from("/definitely/not/here"),
+                pattern: "8:16".into(),
+                method: "ACT".into(),
+                seed: 5,
+                batch: 4,
+                threads: 1,
+                prefill_block: 8,
+            },
+            ..Default::default()
+        };
+        let points = run_sweep(&cfg, &[2000.0]).unwrap();
+        let j = sweep_json(&cfg, &points);
+        assert_eq!(j.get("mode").and_then(|m| m.as_str()), Some("longmix"));
+        let arr = j.get("points").and_then(|p| p.as_arr()).unwrap();
+        let c = arr[0].get("classes").expect("longmix sweep points carry classes");
+        let total: f64 = ["long_prompt", "short_decode"]
+            .iter()
+            .map(|k| c.get(k).and_then(|e| e.get("count")).and_then(|x| x.as_f64()).unwrap())
+            .sum();
+        assert_eq!(total as u64, 12, "every submitted request lands in one class");
     }
 
     #[test]

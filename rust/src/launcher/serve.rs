@@ -63,6 +63,7 @@ pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
         OptSpec { name: "backend", takes_value: true, default: Some("coordinator"), help: "coordinator (PJRT, full-context) | native (KV-cached)" },
         OptSpec { name: "seed", takes_value: true, default: Some("7"), help: "native synthetic-model seed (no artifacts)" },
         OptSpec { name: "threads", takes_value: true, default: Some("1"), help: "native worker-pool width per replica (0 = auto; never changes bits)" },
+        OptSpec { name: "prefill-block", takes_value: true, default: Some("0"), help: "native resumable-prefill block size in positions (0 = feed-to-completion; never changes bits)" },
         OptSpec { name: "replicas", takes_value: true, default: Some("1"), help: "engine replicas (each opens its own pool)" },
         OptSpec { name: "queue-cap", takes_value: true, default: Some("64"), help: "per-replica admission cap" },
         OptSpec { name: "max-wait-ms", takes_value: true, default: Some("5"), help: "batch deadline (ms)" },
@@ -123,9 +124,10 @@ pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
             let method = method_name.clone();
             let seed = a.get_u64("seed")?;
             let threads = super::decode::resolve_threads(a.get_usize("threads")?);
+            let prefill_block = a.get_usize("prefill-block")?;
             ServerCore::start(server_cfg, move |_r| {
                 NativeBackend::open(&artifacts, pattern, &method, stop.clone(), 8, seed)
-                    .map(|b| b.with_threads(threads))
+                    .map(|b| b.with_threads(threads).with_prefill_block(prefill_block))
             })?
         }
         other => anyhow::bail!("unknown --backend '{other}' (coordinator, native)"),

@@ -198,7 +198,7 @@ fn session_eviction_under_cap_one_is_token_identical() {
         let ids: Vec<usize> = (0..2).filter(|i| !done[*i]).collect();
         let outs = backend.decode_step_sessions(&live).unwrap();
         for (i, out) in ids.into_iter().zip(outs) {
-            match out {
+            match out.token() {
                 Some(tok) => {
                     got[i].push(tok);
                     rows[i].push(tok);
@@ -357,7 +357,7 @@ fn context_exhausted_sessions_slide_instead_of_ending() {
         let mut got = Vec::new();
         for _ in 0..max_new {
             let outs = backend.decode_step_sessions(&[(id, row.as_slice())]).unwrap();
-            let tok = outs[0].expect("sliding sessions never end on context");
+            let tok = outs[0].token().expect("sliding sessions never end on context");
             got.push(tok);
             row.push(tok);
         }

@@ -1,0 +1,285 @@
+//! Property suite for blocked prefill (DESIGN.md §2.13) and the
+//! resumable bounded-block serving prefill built on it:
+//!
+//! - `prefill_blocked` is **bitwise logits-identical** to the per-token
+//!   prefill loop across patterns (2:4 / 8:16 / 16:32 / dense), block
+//!   sizes (1, 3, a full page, larger than the prompt), and prompt
+//!   lengths that straddle page boundaries — and leaves identical KV
+//!   state (length, pages held) and identical `DecodeStats`;
+//! - `generate_greedy_with_block` emits the same tokens as
+//!   `generate_greedy` at every block size, including left-cropped long
+//!   prompts;
+//! - a `NativeBackend` with a prefill budget emits `Pending` while a
+//!   long prompt ingests block-by-block, then the same token stream as
+//!   the unbudgeted backend and the sequential sliding oracle — feeding
+//!   each prompt position exactly once (steps parity);
+//! - short-decode sessions advance in the same ticks a long prefill is
+//!   still `Pending` (continuous batching);
+//! - a tick wider than the session cap (slot eviction mid-tick would
+//!   reset in-flight prefills forever) falls back to feed-to-completion
+//!   and still matches the oracle.
+
+use nmsparse::coordinator::server::{NativeBackend, ReplicaBackend, StepOutcome};
+use nmsparse::engine::{EngineConfig, NativeEngine, NativeSparsity};
+use nmsparse::sparsity::Pattern;
+
+fn test_cfg(max_seq: usize) -> EngineConfig {
+    EngineConfig {
+        vocab: 48,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        ffn: 64,
+        max_seq,
+    }
+}
+
+fn prompt_of(len: usize) -> Vec<u32> {
+    (0..len).map(|i| ((i * 5 + 3) % 40) as u32).collect()
+}
+
+const PATTERNS: [Pattern; 4] = [
+    Pattern::Dense,
+    Pattern::NM { n: 2, m: 4 },
+    Pattern::NM { n: 8, m: 16 },
+    Pattern::NM { n: 16, m: 32 },
+];
+
+#[test]
+fn blocked_prefill_bitwise_identical_across_patterns_blocks_and_pages() {
+    for pattern in PATTERNS {
+        let ecfg = test_cfg(16);
+        let mut engine = NativeEngine::synthetic(&ecfg, 11, NativeSparsity::act(pattern)).unwrap();
+        for page_tokens in [3usize, 5] {
+            let mut pool = engine.new_kv_pool_with(page_tokens);
+            // Prompt lengths below, at, just past, and far past a page
+            // boundary, plus the full context.
+            for len in [1usize, 2, page_tokens, page_tokens + 1, 2 * page_tokens + 3, 16] {
+                let prompt = prompt_of(len);
+                engine.reset_stats();
+                let mut kv_ref = pool.new_cache();
+                engine.prefill(&mut kv_ref, &mut pool, &prompt).unwrap();
+                let want: Vec<u32> = engine.logits().iter().map(|v| v.to_bits()).collect();
+                let want_stats = engine.stats();
+                // Block 1 (degenerate), 3 (straddles pages), a full page,
+                // and larger than the whole prompt (single chunk).
+                for block in [1usize, 3, page_tokens, len + 7] {
+                    engine.reset_stats();
+                    let mut kv = pool.new_cache();
+                    engine.prefill_blocked(&mut kv, &mut pool, &prompt, block).unwrap();
+                    let got: Vec<u32> = engine.logits().iter().map(|v| v.to_bits()).collect();
+                    let label = format!("{pattern} pt={page_tokens} len={len} block={block}");
+                    assert_eq!(got, want, "{label}: logits diverged");
+                    assert_eq!(kv.len(), kv_ref.len(), "{label}: kv length");
+                    assert_eq!(kv.pages_held(), kv_ref.pages_held(), "{label}: pages held");
+                    assert_eq!(engine.stats(), want_stats, "{label}: stats diverged");
+                    kv.reset(&mut pool);
+                }
+                kv_ref.reset(&mut pool);
+            }
+        }
+    }
+}
+
+#[test]
+fn generate_with_block_matches_per_token_generation() {
+    let ecfg = test_cfg(24);
+    let pattern = Pattern::NM { n: 8, m: 16 };
+    let mut engine = NativeEngine::synthetic(&ecfg, 5, NativeSparsity::act(pattern)).unwrap();
+    let mut pool = engine.new_kv_pool_with(4);
+    let mut kv = pool.new_cache();
+    // Short, page-straddling, and beyond-max_seq (left-cropped) prompts.
+    for len in [2usize, 9, 24, 40] {
+        let prompt = prompt_of(len);
+        let want = engine.generate_greedy(&mut kv, &mut pool, &prompt, 8, &[]).unwrap();
+        for block in [1usize, 4, 16] {
+            let got = engine
+                .generate_greedy_with_block(&mut kv, &mut pool, &prompt, 8, &[], block)
+                .unwrap();
+            assert_eq!(got, want, "len={len} block={block}");
+        }
+    }
+}
+
+#[test]
+fn blocked_prefill_rejects_overflow_and_bad_tokens() {
+    let ecfg = test_cfg(8);
+    let mut engine =
+        NativeEngine::synthetic(&ecfg, 3, NativeSparsity::act(Pattern::NM { n: 2, m: 4 })).unwrap();
+    let mut pool = engine.new_kv_pool_with(4);
+    let mut kv = pool.new_cache();
+    // A prompt past the KV capacity fails up-front, before any chunk ran.
+    let err = engine.prefill_blocked(&mut kv, &mut pool, &prompt_of(10), 4).unwrap_err();
+    assert!(err.to_string().contains("overflows"), "{err}");
+    assert_eq!(kv.len(), 0, "failed prefill must not advance the cache");
+    // An out-of-vocabulary token fails up-front too.
+    let err = engine.prefill_blocked(&mut kv, &mut pool, &[1, 2, 48, 3], 2).unwrap_err();
+    assert!(err.to_string().contains("vocabulary"), "{err}");
+    assert_eq!(kv.len(), 0);
+}
+
+/// Drive one backend session to `max_new` tokens, collecting outcomes.
+/// Returns (tokens, pending_ticks).
+fn drive_session(
+    backend: &mut NativeBackend,
+    id: u64,
+    prompt: &[u32],
+    max_new: usize,
+) -> (Vec<u32>, usize) {
+    let mut row = prompt.to_vec();
+    let mut out = Vec::new();
+    let mut pending = 0usize;
+    // Generous tick bound: every prompt position plus every token.
+    for _ in 0..(prompt.len() + max_new + 4) {
+        if out.len() >= max_new {
+            break;
+        }
+        match backend.decode_step_sessions(&[(id, row.as_slice())]).unwrap()[0] {
+            StepOutcome::Token(tok) => {
+                out.push(tok);
+                row.push(tok);
+            }
+            StepOutcome::Pending => pending += 1,
+            StepOutcome::End => panic!("session ended unexpectedly"),
+        }
+    }
+    backend.end_session(id);
+    (out, pending)
+}
+
+#[test]
+fn bounded_prefill_emits_pending_then_matches_oracle_and_feeds_once() {
+    let ecfg = test_cfg(16);
+    let pattern = Pattern::NM { n: 8, m: 16 };
+    let max_new = 6;
+    // Prompts inside the window and beyond it (sliding-window crop).
+    for len in [11usize, 14, 21] {
+        let prompt = prompt_of(len);
+        let mut oracle_engine =
+            NativeEngine::synthetic(&ecfg, 7, NativeSparsity::act(pattern)).unwrap();
+        let mut pool = oracle_engine.new_kv_pool_with(4);
+        let mut kv = pool.new_cache();
+        let want = oracle_engine
+            .generate_greedy_sliding(&mut kv, &mut pool, &prompt, max_new, &[])
+            .unwrap();
+
+        let mut legacy = NativeBackend::synthetic(&ecfg, 7, NativeSparsity::act(pattern), vec![], 4)
+            .unwrap()
+            .with_page_tokens(4);
+        let (legacy_toks, legacy_pending) = drive_session(&mut legacy, 1, &prompt, max_new);
+        assert_eq!(legacy_toks, want, "len={len}: legacy backend vs sliding oracle");
+        assert_eq!(legacy_pending, 0, "len={len}: feed-to-completion never defers");
+
+        let mut bounded =
+            NativeBackend::synthetic(&ecfg, 7, NativeSparsity::act(pattern), vec![], 4)
+                .unwrap()
+                .with_page_tokens(4)
+                .with_prefill_block(2);
+        let (bounded_toks, bounded_pending) = drive_session(&mut bounded, 1, &prompt, max_new);
+        assert_eq!(bounded_toks, want, "len={len}: bounded backend vs sliding oracle");
+        // The windowed prompt has window_len - 1 body positions to feed in
+        // blocks of 2, minus nothing on the emitting tick: > 2 body
+        // positions guarantees at least one deferred tick.
+        assert!(bounded_pending >= 1, "len={len}: bounded prefill never deferred");
+        // Feeding each position exactly once: the budgeted path consumed
+        // the same number of engine steps as feed-to-completion.
+        assert_eq!(
+            bounded.engine().stats().steps,
+            legacy.engine().stats().steps,
+            "len={len}: bounded prefill re-fed positions"
+        );
+    }
+}
+
+#[test]
+fn short_decodes_advance_while_long_prefill_is_pending() {
+    let ecfg = test_cfg(16);
+    let pattern = Pattern::NM { n: 8, m: 16 };
+    let max_new = 5;
+    let long = prompt_of(14);
+    let short = prompt_of(3);
+    // Per-session references from the unbudgeted backend.
+    let mut reference =
+        NativeBackend::synthetic(&ecfg, 13, NativeSparsity::act(pattern), vec![], 4)
+            .unwrap()
+            .with_page_tokens(4);
+    let (want_long, _) = drive_session(&mut reference, 1, &long, max_new);
+    let (want_short, _) = drive_session(&mut reference, 2, &short, max_new);
+
+    let mut backend = NativeBackend::synthetic(&ecfg, 13, NativeSparsity::act(pattern), vec![], 4)
+        .unwrap()
+        .with_page_tokens(4)
+        .with_prefill_block(2);
+    let mut rows = [long.clone(), short.clone()];
+    let mut outs: [Vec<u32>; 2] = [Vec::new(), Vec::new()];
+    let mut overlapped = false;
+    for _ in 0..(long.len() + 2 * max_new + 4) {
+        if outs[0].len() >= max_new && outs[1].len() >= max_new {
+            break;
+        }
+        let live: Vec<(u64, &[u32])> = (0..2)
+            .filter(|&i| outs[i].len() < max_new)
+            .map(|i| (i as u64 + 1, rows[i].as_slice()))
+            .collect();
+        let ids: Vec<usize> = (0..2).filter(|&i| outs[i].len() < max_new).collect();
+        let step = backend.decode_step_sessions(&live).unwrap();
+        // The continuous-batching claim: the short session takes a token
+        // in a tick where the long prompt is still ingesting.
+        if ids.len() == 2
+            && step[0] == StepOutcome::Pending
+            && matches!(step[1], StepOutcome::Token(_))
+        {
+            overlapped = true;
+        }
+        for (i, out) in ids.into_iter().zip(step) {
+            if let StepOutcome::Token(tok) = out {
+                outs[i].push(tok);
+                rows[i].push(tok);
+            }
+        }
+    }
+    assert!(overlapped, "short decode never advanced during the long prefill");
+    assert_eq!(outs[0], want_long, "long session diverged from the unbudgeted backend");
+    assert_eq!(outs[1], want_short, "short session diverged from the unbudgeted backend");
+}
+
+#[test]
+fn tick_wider_than_session_cap_falls_back_to_feed_to_completion() {
+    // At cap 1 a 2-row tick chunk-evicts slots within the tick; a bounded
+    // block per tick would reset the other session's in-flight prefill
+    // forever. The backend detects this and feeds to completion instead:
+    // every lane emits a token on the first tick, and tokens match the
+    // unbudgeted cap-1 backend exactly.
+    let ecfg = test_cfg(16);
+    let pattern = Pattern::NM { n: 2, m: 4 };
+    let max_new = 4;
+    let prompts = [prompt_of(9), prompt_of(6)];
+
+    let mut reference =
+        NativeBackend::synthetic(&ecfg, 19, NativeSparsity::act(pattern), vec![], 4)
+            .unwrap()
+            .with_session_cap(1)
+            .with_page_tokens(4);
+    let mut bounded = NativeBackend::synthetic(&ecfg, 19, NativeSparsity::act(pattern), vec![], 4)
+        .unwrap()
+        .with_session_cap(1)
+        .with_page_tokens(4)
+        .with_prefill_block(2);
+
+    for backend in [&mut reference, &mut bounded] {
+        let live: Vec<(u64, &[u32])> =
+            prompts.iter().enumerate().map(|(i, p)| (i as u64 + 1, p.as_slice())).collect();
+        let first = backend.decode_step_sessions(&live).unwrap();
+        assert!(
+            first.iter().all(|o| o.token().is_some()),
+            "cap-1 wide tick must emit on the first tick (got {first:?})"
+        );
+    }
+
+    // And full streams agree between the two backends.
+    for (i, p) in prompts.iter().enumerate() {
+        let (want, _) = drive_session(&mut reference, 10 + i as u64, p, max_new);
+        let (got, _) = drive_session(&mut bounded, 10 + i as u64, p, max_new);
+        assert_eq!(got, want, "lane {i} diverged under the cap-1 fallback");
+    }
+}

@@ -18,8 +18,8 @@
 
 use nmsparse::coordinator::chaos::{ChaosBackend, ChaosHandle, FaultPlan};
 use nmsparse::coordinator::server::{
-    NativeBackend, ReplicaBackend, Request, Response, ServerConfig, ServerCore, SubmitError,
-    SyntheticBackend, ERR_REPLICA_FAILED, ERR_TIMEOUT,
+    NativeBackend, ReplicaBackend, Request, Response, ServerConfig, ServerCore, StepOutcome,
+    SubmitError, SyntheticBackend, ERR_REPLICA_FAILED, ERR_TIMEOUT,
 };
 use nmsparse::engine::{EngineConfig, NativeEngine, NativeSparsity};
 use nmsparse::launcher::loadgen::{make_request, Mode};
@@ -107,9 +107,9 @@ impl ReplicaBackend for GatedBackend {
         Ok(rows.iter().map(|_| 1.0).collect())
     }
 
-    fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> anyhow::Result<Vec<Option<u32>>> {
+    fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> anyhow::Result<Vec<StepOutcome>> {
         self.gate.recv().ok();
-        Ok(rows.iter().map(|_| Some(SyntheticBackend::STOP)).collect())
+        Ok(rows.iter().map(|_| StepOutcome::Token(SyntheticBackend::STOP)).collect())
     }
 
     fn stop_tokens(&self) -> Vec<u32> {
@@ -188,10 +188,10 @@ impl ReplicaBackend for NotifyGatedBackend {
         Ok(rows.iter().map(|_| 1.0).collect())
     }
 
-    fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> anyhow::Result<Vec<Option<u32>>> {
+    fn decode_step_sessions(&mut self, rows: &[(u64, &[u32])]) -> anyhow::Result<Vec<StepOutcome>> {
         self.entered.send(()).ok();
         self.gate.recv().ok();
-        Ok(rows.iter().map(|_| Some(SyntheticBackend::STOP)).collect())
+        Ok(rows.iter().map(|_| StepOutcome::Token(SyntheticBackend::STOP)).collect())
     }
 
     fn stop_tokens(&self) -> Vec<u32> {

@@ -17,7 +17,7 @@
 //!   parks/wakes across many scopes, joins cleanly on drop, and rejects
 //!   nested scopes.
 
-use nmsparse::coordinator::server::{NativeBackend, ReplicaBackend};
+use nmsparse::coordinator::server::{NativeBackend, ReplicaBackend, StepOutcome};
 use nmsparse::engine::{
     window_start, EngineConfig, NativeEngine, NativeSparsity, SessionKvPool, StepBatch, WorkerPool,
 };
@@ -265,7 +265,7 @@ fn peak_kv_bytes_track_live_context_not_session_count() {
     let live: Vec<(u64, &[u32])> =
         rows.iter().enumerate().map(|(i, r)| (i as u64 + 1, r.as_slice())).collect();
     let outs = backend.decode_step_sessions(&live).unwrap();
-    assert!(outs.iter().all(|o| o.is_some()));
+    assert!(outs.iter().all(|o| o.token().is_some()));
     let pages = backend.pages();
     // 4 fed positions per session => 1 page of 8 each; the pinned
     // design held ceil(64/8) = 8 pages per session.
@@ -336,7 +336,7 @@ fn prop_batched_backend_matches_sliding_reference_under_eviction() {
                     ids.iter().map(|i| (*i as u64 + 1, rows[*i].as_slice())).collect();
                 let outs = backend.decode_step_sessions(&live).unwrap();
                 for (i, out) in ids.into_iter().zip(outs) {
-                    let Some(tok) = out else { return false };
+                    let StepOutcome::Token(tok) = out else { return false };
                     got[i].push(tok);
                     rows[i].push(tok);
                     if got[i].len() >= *max_new {
@@ -366,13 +366,13 @@ fn re_ticking_an_unchanged_row_re_emits_instead_of_ending() {
         let first = backend.decode_step_sessions(&[(id, row.as_slice())]).unwrap()[0];
         let again = backend.decode_step_sessions(&[(id, row.as_slice())]).unwrap()[0];
         assert_eq!(first, again, "len={len}");
-        assert!(first.is_some(), "len={len}");
+        assert!(first.token().is_some(), "len={len}");
         // Normal continuation after the re-tick: one incremental step.
         let mut grown = row.clone();
-        grown.push(first.unwrap());
+        grown.push(first.token().unwrap());
         let steps_before = backend.engine().stats().steps;
         let next = backend.decode_step_sessions(&[(id, grown.as_slice())]).unwrap()[0];
-        assert!(next.is_some(), "len={len}");
+        assert!(next.token().is_some(), "len={len}");
         let fed = backend.engine().stats().steps - steps_before;
         if grown.len() <= ecfg.max_seq {
             assert_eq!(fed, 1, "len={len}: incremental path lost after re-tick");

@@ -169,6 +169,42 @@ def check_serving(doc, path):
             bad |= err(path, f"{key} {doc[key]} < 0")
     if doc["replicas"] < 1:
         bad |= err(path, f"replicas {doc['replicas']} < 1")
+    if doc["mode"] == "longmix":
+        bad |= check_classes(doc, path, "top level")
+    return bad
+
+
+def check_classes(entry, path, ctx):
+    """The longmix per-class block: `classes.{long_prompt,short_decode}`,
+    each a `{count, latency_ms}` with monotone tail percentiles. Emitted
+    (and therefore required) only for mode == "longmix" runs."""
+    bad = require(entry, "classes", dict, path, ctx)
+    if bad:
+        return bad
+    classes = entry["classes"]
+    for name in ("long_prompt", "short_decode"):
+        cctx = f"{ctx}.classes.{name}"
+        bad |= require(classes, name, dict, path, f"{ctx}.classes")
+        if bad:
+            return bad
+        c = classes[name]
+        bad |= require(c, "count", (int, float), path, cctx)
+        bad |= require(c, "latency_ms", dict, path, cctx)
+        if bad:
+            return bad
+        if c["count"] <= 0:
+            bad |= err(path, f"{cctx}: count {c['count']} <= 0 — a longmix run "
+                             f"always completes requests of both classes")
+        lat = c["latency_ms"]
+        for key in ("mean", "p50", "p95", "p99", "max"):
+            bad |= require(lat, key, (int, float), path, f"{cctx}.latency_ms")
+        if bad:
+            return bad
+        if not lat["p50"] <= lat["p95"] <= lat["p99"]:
+            bad |= err(path, f"{cctx}: latency percentiles not monotone: "
+                             f"p50={lat['p50']} p95={lat['p95']} p99={lat['p99']}")
+        if c["count"] > 0 and lat["p99"] <= 0:
+            bad |= err(path, f"{cctx}: count > 0 but p99 <= 0")
     return bad
 
 
@@ -211,6 +247,10 @@ def check_serving_sweep(doc, path):
                 bad |= err(path, f"{ctx}: {key} {p[key]} outside [0, 1]")
         if p["served"] + p["rejected"] > doc["requests_per_point"]:
             bad |= err(path, f"{ctx}: served + rejected exceeds requests_per_point")
+        # Longmix sweeps exist to expose the per-class tail; a point
+        # without the class split silently loses the measurement.
+        if doc["mode"] == "longmix":
+            bad |= check_classes(p, path, ctx)
     return bad
 
 
@@ -255,6 +295,55 @@ def check_decode(doc, path):
                          f"paying off")
     if doc["prefill_tokens_per_sec"] <= 0 or doc["decode_tokens_per_sec"] <= 0:
         bad |= err(path, "non-positive tokens/sec")
+    # Blocked prefill grid: prompt ingestion tok/s vs block size, block 0
+    # (or 1) being the per-token baseline. The bench pins every blocked
+    # variant bitwise logits-identical to the baseline before timing, so
+    # the gate here is pure performance: at a prefill prompt long enough
+    # to amortize (>= 64 positions), the best blocked variant must not
+    # ingest slower than per-token — otherwise blocked prefill is dead
+    # weight and the dump should fail loudly.
+    bad |= require(doc, "prefill_prompt_tokens", (int, float), path, "top level")
+    bad |= require(doc, "prefill_block_grid", list, path, "top level")
+    if bad:
+        return bad
+    if not doc["prefill_block_grid"]:
+        return err(path, "'prefill_block_grid' is empty — the bench always "
+                         "emits the prefill grid")
+    prev_block = -1
+    baseline_tps = None
+    blocked_tps = []
+    for i, r in enumerate(doc["prefill_block_grid"]):
+        ctx = f"prefill_block_grid[{i}]"
+        if not isinstance(r, dict):
+            return err(path, f"{ctx} is not an object")
+        for key in ("block", "tokens_per_sec"):
+            bad |= require(r, key, (int, float), path, ctx)
+        if bad:
+            return bad
+        if r["block"] <= prev_block:
+            bad |= err(path, f"{ctx}: block sizes must be strictly increasing")
+        prev_block = r["block"]
+        if r["tokens_per_sec"] <= 0:
+            bad |= err(path, f"{ctx}: non-positive tokens/sec")
+        if r["block"] <= 1:
+            baseline_tps = r["tokens_per_sec"]
+        else:
+            blocked_tps.append(r["tokens_per_sec"])
+    if baseline_tps is None:
+        bad |= err(path, "prefill_block_grid: no per-token baseline row "
+                         "(block <= 1) — the blocked/per-token comparison "
+                         "never ran")
+    if len(blocked_tps) < 2:
+        bad |= err(path, f"prefill_block_grid: only {len(blocked_tps)} blocked "
+                         f"row(s) (block > 1) — the grid is vacuous")
+    if baseline_tps is not None and blocked_tps and \
+            doc["prefill_prompt_tokens"] >= 64 and \
+            max(blocked_tps) < baseline_tps:
+        bad |= err(path, f"prefill_block_grid: best blocked prefill "
+                         f"({max(blocked_tps)} tok/s) slower than per-token "
+                         f"({baseline_tps} tok/s) at prompt "
+                         f"{doc['prefill_prompt_tokens']} — blocked prefill "
+                         f"not paying")
     # Batched session stepping: one StepBatch across K lanes vs K
     # sequential per-session steps. Batch sizes strictly increase, and
     # batching must actually pay at batch >= 4 (the amortization the
@@ -350,16 +439,50 @@ def _good_decode_doc():
     grid = [{"threads": t, "lanes": l,
              "tokens_per_sec": 800.0 * (t if l >= 4 else 1.0) * l}
             for l in (1, 4, 16) for t in (1, 2, 4)]
+    prefill_grid = [{"block": b, "tokens_per_sec": 4.0e4 * max(b, 1)}
+                    for b in (0, 4, 16, 64)]
     return {
         "suite": "decode", "backend": "synthetic",
         "pattern": "8:16", "method": "ACT",
         "model": {"vocab": 160, "d_model": 128, "n_layers": 2,
                   "ffn": 256, "max_seq": 128},
         "prefill_tokens_per_sec": 5.0e4, "decode_tokens_per_sec": 2.0e4,
+        "prefill_prompt_tokens": 64, "prefill_block_grid": prefill_grid,
         "contexts": contexts, "batched": batched, "thread_grid": grid,
         "cached_step_growth": 1.2, "full_step_growth": 3.0,
         "dense_bytes_per_step": 1000.0, "packed_bytes_per_step": 400.0,
         "bytes_reduction": 2.5,
+    }
+
+
+def _good_classes():
+    """A valid longmix `classes` block (both classes, monotone tails)."""
+    return {
+        name: {"count": n,
+               "latency_ms": {"mean": 2.0, "p50": 1.5, "p95": 4.0,
+                              "p99": 6.0, "max": 8.0}}
+        for name, n in (("long_prompt", 5), ("short_decode", 15))
+    }
+
+
+def _good_sweep_doc():
+    """A minimal longmix BENCH_serving_sweep.json every sweep gate accepts."""
+    points = []
+    for rate in (200.0, 400.0):
+        points.append({
+            "rate_rps": rate, "served": 20, "rejected": 0,
+            "throughput_rps": rate * 0.9,
+            "latency_ms": {"mean": 1.0, "p50": 0.8, "p95": 2.0, "p99": 3.0,
+                           "max": 4.0},
+            "rejection_rate": 0.0, "batch_occupancy": 0.5,
+            "timed_out": 0, "failed": 0, "timeout_rate": 0.0,
+            "failure_rate": 0.0, "restarts": 0, "retried": 0,
+            "classes": _good_classes(),
+        })
+    return {
+        "suite": "serving_sweep", "mode": "longmix", "backend": "native",
+        "replicas": 2, "queue_cap": 64, "requests_per_point": 20,
+        "points": points,
     }
 
 
@@ -434,6 +557,44 @@ def self_test():
     expect_bad("packed bytes not below dense",
                lambda d: d.update(packed_bytes_per_step=2000.0))
 
+    # ---- prefill_block_grid gates ----
+    def slow_blocked(doc):
+        for r in doc["prefill_block_grid"]:
+            if r["block"] > 1:
+                r["tokens_per_sec"] = 1.0  # every blocked row below baseline
+
+    def vacuous_prefill(doc):
+        doc["prefill_block_grid"] = doc["prefill_block_grid"][:2]
+
+    def no_baseline(doc):
+        doc["prefill_block_grid"] = \
+            [r for r in doc["prefill_block_grid"] if r["block"] > 1]
+
+    def short_prompt_slow_blocked(doc):
+        slow_blocked(doc)
+        doc["prefill_prompt_tokens"] = 16  # below the 64-position gate
+
+    expect_bad("missing prefill_block_grid",
+               lambda d: d.pop("prefill_block_grid"))
+    expect_bad("missing prefill_prompt_tokens",
+               lambda d: d.pop("prefill_prompt_tokens"))
+    expect_bad("empty prefill_block_grid",
+               lambda d: d.update(prefill_block_grid=[]))
+    expect_bad("prefill blocks not increasing",
+               lambda d: d["prefill_block_grid"].__setitem__(
+                   1, dict(d["prefill_block_grid"][3])))
+    expect_bad("non-positive prefill tok/s",
+               lambda d: d["prefill_block_grid"][0].update(tokens_per_sec=0.0))
+    expect_bad("blocked prefill slower than per-token at prompt 64",
+               slow_blocked)
+    expect_bad("vacuous prefill grid (one blocked row)", vacuous_prefill)
+    expect_bad("no per-token baseline row", no_baseline)
+    # The perf gate is scoped: below 64 prompt positions a slow blocked
+    # path is tolerated (nothing to amortize), the schema still holds.
+    short = copy.deepcopy(good)
+    short_prompt_slow_blocked(short)
+    expect_good(check_decode, short, "short-prompt slow blocked tolerated")
+
     serving = _good_serving_doc()
     expect_good(check_serving, serving, "good serving")
     expect_bad = make_expect_bad(check_serving, serving)
@@ -446,6 +607,41 @@ def self_test():
     expect_bad("negative retried", lambda d: d.update(retried=-1))
     expect_bad("served + rejected exceed requests",
                lambda d: d.update(served=200))
+    # A longmix serving report must carry the per-class split.
+    longmix_serving = copy.deepcopy(serving)
+    longmix_serving["mode"] = "longmix"
+    longmix_serving["classes"] = _good_classes()
+    expect_good(check_serving, longmix_serving, "good longmix serving")
+    expect_bad = make_expect_bad(check_serving, longmix_serving)
+    expect_bad("longmix serving without classes",
+               lambda d: d.pop("classes"))
+    expect_bad("longmix class with zero count",
+               lambda d: d["classes"]["long_prompt"].update(count=0))
+
+    sweep = _good_sweep_doc()
+    expect_good(check_serving_sweep, sweep, "good longmix sweep")
+    expect_bad = make_expect_bad(check_serving_sweep, sweep)
+
+    def class_tail_not_monotone(doc):
+        lat = doc["points"][0]["classes"]["short_decode"]["latency_ms"]
+        lat["p99"] = lat["p50"] / 2.0
+
+    expect_bad("longmix point without classes",
+               lambda d: d["points"][0].pop("classes"))
+    expect_bad("missing short_decode class",
+               lambda d: d["points"][1]["classes"].pop("short_decode"))
+    expect_bad("class tail percentiles not monotone", class_tail_not_monotone)
+    expect_bad("class missing p99",
+               lambda d: d["points"][0]["classes"]["long_prompt"]
+               ["latency_ms"].pop("p99"))
+    expect_bad("sweep rates not increasing",
+               lambda d: d["points"][1].update(rate_rps=100.0))
+    # Non-longmix sweeps keep the old schema: no classes required.
+    plain_sweep = copy.deepcopy(sweep)
+    plain_sweep["mode"] = "mixed"
+    for p in plain_sweep["points"]:
+        p.pop("classes")
+    expect_good(check_serving_sweep, plain_sweep, "plain sweep without classes")
 
     if failures:
         for f in failures:

@@ -15,6 +15,11 @@ elif [ ! -f Cargo.toml ]; then
   echo "ci: no Cargo.toml found at repo root or rust/ — cannot run the gate" >&2
   exit 1
 fi
+# Every smoke below writes its dump to an explicit path under OUTDIR so
+# the schema scan at the end provably sees every emitted file — relying
+# on each tool's default output path has already let a sweep dump land
+# outside the scanned set once.
+OUTDIR="$(pwd)"
 
 cargo build --release
 # Packed-stream smoke first, as a fast-fail: the compressed-domain
@@ -31,7 +36,7 @@ cargo bench --no-run
 # proves admission control, drain and the latency histogram end to end.
 cargo run --release -q -- loadgen \
   --replicas 2 --queue-cap 64 --max-requests 96 --concurrency 8 \
-  --forward-us 100 --out BENCH_serving.json
+  --forward-us 100 --out "$OUTDIR/BENCH_serving.json"
 # Native-decode smoke: seeded synthetic model, KV-cached vs full-context
 # equivalence checked in-process (--check), output hash printed. Two runs
 # must print the same hash — the determinism pin (no baked-in hash to go
@@ -68,6 +73,20 @@ if [ -z "$HT" ] || [ "$HT" != "$H1T" ] || [ "$HT" != "$HB" ]; then
   exit 1
 fi
 echo "ci: threaded decode smoke OK ($HT)"
+# Blocked-prefill smoke: a long prompt (96 tokens, cropped to the tiny
+# model's 64-position window) ingested per-token, in blocks of 1, and in
+# blocks of 16 must print identical hashes — blocked prefill changes
+# wall time, never bits (DESIGN.md §2.13); --check additionally pins the
+# KV-cached loop against the full-context reference in-process.
+PREFILL_ARGS="decode --seed 11 --prompt-len 96 --max-new 8 --check"
+HP0="$(cargo run --release -q -- $PREFILL_ARGS | grep '^hash ')"
+HP1="$(cargo run --release -q -- $PREFILL_ARGS --prefill-block 1 | grep '^hash ')"
+HP16="$(cargo run --release -q -- $PREFILL_ARGS --prefill-block 16 | grep '^hash ')"
+if [ -z "$HP0" ] || [ "$HP0" != "$HP1" ] || [ "$HP0" != "$HP16" ]; then
+  echo "ci: blocked prefill smoke failed (per-token '$HP0' vs block 1 '$HP1' vs block 16 '$HP16')" >&2
+  exit 1
+fi
+echo "ci: blocked prefill smoke OK ($HP0)"
 # ...and the same batched path end-to-end through a 2-replica ServerCore
 # (generate-heavy so every tick exercises step_batch).
 cargo run --release -q -- loadgen \
@@ -77,7 +96,34 @@ cargo run --release -q -- loadgen \
 # -> BENCH_serving_sweep.json, schema-gated below.
 cargo run --release -q -- loadgen \
   --backend native --replicas 2 --queue-cap 32 --max-requests 40 \
-  --sweep 200,400 --mode mixed --max-new 4 --out ''
+  --sweep 200,400 --mode mixed --max-new 4 --out '' \
+  --sweep-out "$OUTDIR/BENCH_serving_sweep.json"
+# Continuous-batching smoke: the long-prompt/short-decode mix through 2
+# native replicas with resumable prefill (8 positions per tick). Long
+# prompts overflow the tiny engine's 64-position window, so this drives
+# sliding-window crop + bounded prefill + decode interleaving end to end;
+# the per-class latency split must come back populated. Non-BENCH_* name:
+# this throwaway is asserted inline, not by the schema scan.
+cargo run --release -q -- loadgen \
+  --backend native --replicas 2 --queue-cap 64 --max-requests 32 \
+  --concurrency 4 --mode longmix --max-new 4 --prefill-block 8 \
+  --out longmix_smoke_serving.json
+python3 - longmix_smoke_serving.json <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+total = doc["served"] + doc["rejected"]
+assert total == 32, f"longmix smoke: accounting unbalanced ({total} != 32)"
+assert doc["served"] > 0, "longmix smoke: nothing served"
+assert doc["errors"] == 0, f"longmix smoke: {doc['errors']} errors"
+classes = doc["classes"]
+for name in ("long_prompt", "short_decode"):
+    c = classes[name]
+    assert c["count"] > 0, f"longmix smoke: class {name} empty"
+    assert c["latency_ms"]["p99"] > 0, f"longmix smoke: {name} p99 not positive"
+print(f"ci: longmix smoke OK (long {classes['long_prompt']['count']}, "
+      f"short {classes['short_decode']['count']}, served {doc['served']})")
+EOF
+rm -f longmix_smoke_serving.json
 # Chaos smoke: a fixed-seed fault plan (>=1 panic per replica) against 2
 # synthetic replicas. Proves the supervisor end to end: the panicked
 # replicas restart, every request reaches a terminal outcome, and the
@@ -107,7 +153,7 @@ if command -v python3 >/dev/null 2>&1; then
   # First prove the gates themselves still reject bad dumps (inline
   # good/bad fixtures), then scan whatever dumps exist.
   python3 "$ROOT/tools/check_bench_json.py" --self-test
-  python3 "$ROOT/tools/check_bench_json.py" "$ROOT" "$ROOT/rust" "$(pwd)"
+  python3 "$ROOT/tools/check_bench_json.py" "$ROOT" "$ROOT/rust" "$OUTDIR"
 else
   echo "ci: python3 not found — skipping BENCH_*.json schema check"
 fi
