@@ -35,6 +35,7 @@ use nmsparse::sparsity::Pattern;
 use nmsparse::util::bench::BenchSuite;
 use nmsparse::util::json::Json;
 use nmsparse::util::prng::Rng;
+use nmsparse::util::trace::{self, TraceLevel};
 
 fn main() {
     let mut suite = BenchSuite::new("decode");
@@ -260,6 +261,23 @@ fn main() {
     }
     engine.set_threads(1);
 
+    // ---- per-phase breakdown: one traced prefill+decode pass ----
+    // Metrics-level tracing on a separate pass (never inside the timed
+    // closures above, which must measure the untraced hot path): prefill
+    // 32 tokens, decode 64 more, snapshot the span aggregates.
+    trace::set_level(TraceLevel::Metrics);
+    trace::reset();
+    let phase_t0 = std::time::Instant::now();
+    kv.reset(&mut pool);
+    engine.prefill(&mut kv, &mut pool, &row[..32]).unwrap();
+    for i in 32..96 {
+        engine.step(&mut kv, &mut pool, row[i]).unwrap();
+    }
+    let phase_wall_s = phase_t0.elapsed().as_secs_f64();
+    trace::set_level(TraceLevel::Off);
+    let phases = trace::snapshot();
+    println!("decode: {}", phases.summary());
+
     // ---- measured bytes per step (packed vs dense-equivalent) ----
     engine.reset_stats();
     kv.reset(&mut pool);
@@ -334,6 +352,7 @@ fn main() {
         grid_arr.push(e);
     }
     j.insert("thread_grid", Json::Arr(grid_arr));
+    j.insert("phases", phases.to_json(phase_wall_s));
     j.insert("cached_step_growth", cached_growth.into());
     j.insert("full_step_growth", full_growth.into());
     j.insert("dense_bytes_per_step", dense_bytes_per_step.into());

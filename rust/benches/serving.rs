@@ -130,6 +130,14 @@ fn main() {
         });
         if let Some(report) = last {
             println!("server_core: {}", report.summary());
+            // loadgen::run records at metrics level, so the report must
+            // carry a non-empty per-phase breakdown even on the
+            // synthetic backend (queue_wait/tick_build/reply at least).
+            assert!(
+                report.phases.phases.iter().any(|p| p.count > 0),
+                "loadgen run produced an empty phases breakdown"
+            );
+            println!("server_core: {}", report.phases.summary());
             match loadgen::write_bench_json(&report, std::path::Path::new("BENCH_serving.json")) {
                 Ok(()) => println!("wrote BENCH_serving.json"),
                 Err(e) => eprintln!("could not write BENCH_serving.json: {e}"),

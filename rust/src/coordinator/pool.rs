@@ -13,6 +13,7 @@ use crate::coordinator::methods::MethodConfig;
 use crate::engine::{EngineConfig, NativeEngine, NativeModel, NativeSparsity};
 use crate::runtime::{Engine, Manifest, Runtime, Variant};
 use crate::util::tensor::TensorStore;
+use crate::util::trace::{self, Phase};
 use anyhow::{Context, Result};
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
@@ -66,11 +67,12 @@ impl EnginePool {
         if let Some(v) = self.variants.borrow().get(key) {
             return Ok(Arc::clone(v));
         }
-        let t0 = std::time::Instant::now();
-        let v = self.rt.load_variant(&self.manifest, key)?;
+        let (v, dt) =
+            trace::timed(Phase::EngineBuild, || self.rt.load_variant(&self.manifest, key));
+        let v = v?;
         self.load_log
             .borrow_mut()
-            .push((format!("compile:{key}"), t0.elapsed().as_secs_f64()));
+            .push((format!("compile:{key}"), dt.as_secs_f64()));
         self.variants
             .borrow_mut()
             .insert(key.to_string(), Arc::clone(&v));
@@ -84,13 +86,15 @@ impl EnginePool {
             return Ok(Rc::clone(e));
         }
         let variant = self.variant(&cfg.variant_key)?;
-        let t0 = std::time::Instant::now();
-        let weights = cfg.transformed_weights(&self.weights)?;
-        let resolver = cfg.resolver(&weights, &self.methodparams);
-        let engine = Rc::new(variant.bind(&self.rt, &resolver)?);
+        let (engine, dt) = trace::timed(Phase::EngineBuild, || -> Result<Rc<Engine>> {
+            let weights = cfg.transformed_weights(&self.weights)?;
+            let resolver = cfg.resolver(&weights, &self.methodparams);
+            Ok(Rc::new(variant.bind(&self.rt, &resolver)?))
+        });
+        let engine = engine?;
         self.load_log
             .borrow_mut()
-            .push((format!("bind:{}", cfg.id), t0.elapsed().as_secs_f64()));
+            .push((format!("bind:{}", cfg.id), dt.as_secs_f64()));
         self.engines.borrow_mut().insert(ekey, Rc::clone(&engine));
         Ok(engine)
     }
@@ -107,19 +111,21 @@ impl EnginePool {
         if let Some(e) = self.natives.borrow().get(&ekey) {
             return Ok(Rc::clone(e));
         }
-        let t0 = std::time::Instant::now();
-        let engine_cfg = EngineConfig::from_dims(&self.manifest.dims);
-        let sparsity =
-            NativeSparsity::from_method_with_params(cfg, &self.methodparams, &engine_cfg)?;
-        let weights = cfg.transformed_weights(&self.weights)?;
-        let model = NativeModel::from_store(&weights, &engine_cfg)
-            .context("building native model from the artifacts checkpoint")?;
-        let mut native = NativeEngine::new(model, sparsity)?;
-        native.set_threads(self.native_threads.get());
-        let engine = Rc::new(RefCell::new(native));
+        let (native, dt) = trace::timed(Phase::EngineBuild, || -> Result<NativeEngine> {
+            let engine_cfg = EngineConfig::from_dims(&self.manifest.dims);
+            let sparsity =
+                NativeSparsity::from_method_with_params(cfg, &self.methodparams, &engine_cfg)?;
+            let weights = cfg.transformed_weights(&self.weights)?;
+            let model = NativeModel::from_store(&weights, &engine_cfg)
+                .context("building native model from the artifacts checkpoint")?;
+            let mut native = NativeEngine::new(model, sparsity)?;
+            native.set_threads(self.native_threads.get());
+            Ok(native)
+        });
+        let engine = Rc::new(RefCell::new(native?));
         self.load_log
             .borrow_mut()
-            .push((format!("native:{}", cfg.id), t0.elapsed().as_secs_f64()));
+            .push((format!("native:{}", cfg.id), dt.as_secs_f64()));
         self.natives.borrow_mut().insert(ekey, Rc::clone(&engine));
         Ok(engine)
     }

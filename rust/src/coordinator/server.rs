@@ -71,6 +71,7 @@ use crate::engine::{
 };
 use crate::sparsity::Pattern;
 use crate::util::stats::Histogram;
+use crate::util::trace::{self, Phase};
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
 use std::fmt;
@@ -597,6 +598,7 @@ impl ReplicaBackend for NativeBackend {
                 }
             }
         }
+        trace::gauge("engine.kv_live_pages").set(self.pages.outstanding_pages() as u64);
         Ok(out)
     }
 
@@ -719,6 +721,9 @@ pub struct ReplicaStats {
     pub batch_slots: u64,
     /// Submit→reply latency of every served request.
     pub latency: Histogram,
+    /// Admission→dispatch staging wait of every request that left the
+    /// queue — dispatched to the engine, shed on deadline, or drained.
+    pub queue_wait: Histogram,
 }
 
 /// Aggregate view over all replicas.
@@ -738,6 +743,7 @@ pub struct ServerStats {
     pub batch_rows: u64,
     pub batch_slots: u64,
     pub latency: Histogram,
+    pub queue_wait: Histogram,
 }
 
 impl ServerStats {
@@ -822,6 +828,10 @@ struct Staged {
     deadline: Option<Instant>,
     /// Cross-replica retries consumed so far (scores only).
     retries: u32,
+    /// Request-scoped span id minted at admission and carried through
+    /// dispatch, retries and replica rebuilds, so one request's
+    /// queue-wait and reply spans correlate in a trace export.
+    trace_id: u64,
 }
 
 struct Shared {
@@ -907,7 +917,14 @@ impl ServerHandle {
             return Err(SubmitError::Overloaded { replica });
         }
         let (reply_tx, reply_rx) = mpsc::channel();
-        let staged = Staged { req, reply: reply_tx, t0: Instant::now(), deadline, retries: 0 };
+        let staged = Staged {
+            req,
+            reply: reply_tx,
+            t0: Instant::now(),
+            deadline,
+            retries: 0,
+            trace_id: trace::next_id(),
+        };
         {
             // Signal-then-push under the queue lock: the worker's ingest
             // also takes the lock, so a wake can never race past its own
@@ -993,6 +1010,7 @@ impl ServerHandle {
             agg.batch_rows += s.batch_rows;
             agg.batch_slots += s.batch_slots;
             agg.latency.merge(&s.latency);
+            agg.queue_wait.merge(&s.queue_wait);
         }
         agg
     }
@@ -1167,6 +1185,7 @@ struct PendingReply {
     t0: Instant,
     deadline: Option<Instant>,
     retries: u32,
+    trace_id: u64,
 }
 
 /// How a terminal reply left the replica — drives the error counters.
@@ -1194,7 +1213,9 @@ fn effective_depth(shared: &Shared, r: usize) -> usize {
 /// depth released, `served` bumped (so `completed()` balances), the error
 /// taxonomy counter matching `outcome` bumped, latency recorded.
 fn finish(shared: &Shared, r: usize, pending: PendingReply, resp: Response, outcome: Outcome) {
+    let sg = trace::span_id(Phase::Reply, pending.trace_id);
     pending.tx.send(resp).ok(); // client may be gone; still count
+    drop(sg);
     shared.depth[r].fetch_sub(1, Ordering::AcqRel);
     let mut st = lock(&shared.stats[r]);
     st.served += 1;
@@ -1213,10 +1234,18 @@ fn finish(shared: &Shared, r: usize, pending: PendingReply, resp: Response, outc
     st.latency.record(pending.t0.elapsed().as_secs_f64());
 }
 
-/// [`finish`] for a request that never reached the scheduler.
+/// [`finish`] for a request that never reached the scheduler. The time it
+/// sat staged still counts as queue wait — a shed request waited too, and
+/// leaving sheds out would flatter the tail of the distribution.
 fn fail_staged(shared: &Shared, r: usize, staged: Staged, message: &str, outcome: Outcome) {
-    let Staged { reply, t0, deadline, retries, .. } = staged;
-    let pending = PendingReply { tx: reply, t0, deadline, retries };
+    let Staged { reply, t0, deadline, retries, trace_id, .. } = staged;
+    let wait = t0.elapsed();
+    lock(&shared.stats[r]).queue_wait.record_duration(wait);
+    trace::record_duration(Phase::QueueWait, trace_id, wait);
+    if matches!(outcome, Outcome::TimedOut) {
+        trace::counter("serve.shed_timeout").inc();
+    }
+    let pending = PendingReply { tx: reply, t0, deadline, retries, trace_id };
     finish(shared, r, pending, Response::Error { message: message.into() }, outcome);
 }
 
@@ -1265,6 +1294,7 @@ fn try_steal(r: usize, shared: &Shared, admit: &mut Batcher<Staged>) -> bool {
     shared.depth[v].fetch_sub(1, Ordering::AcqRel);
     shared.depth[r].fetch_add(1, Ordering::AcqRel);
     lock(&shared.stats[r]).stolen += 1;
+    trace::counter("serve.stolen").inc();
     admit.push(staged);
     true
 }
@@ -1347,6 +1377,7 @@ fn fail_replica<B: ReplicaBackend>(
                     t0: p.t0,
                     deadline: p.deadline,
                     retries: p.retries + 1,
+                    trace_id: p.trace_id,
                 };
                 requeue_score(shared, peers, r, staged)
             }
@@ -1431,6 +1462,9 @@ fn run_replica<B, F>(
     let mut disconnected = false;
     let mut backoff = wcfg.backoff;
     let mut rebuild_at = Instant::now();
+    // Registered once per replica; set each pass so the metrics block of
+    // the stats op shows live staging depth without touching submitters.
+    let depth_gauge = trace::gauge(&format!("serve.replica{r}.queue_depth"));
 
     loop {
         // Drain pending wake signals FIRST, then ingest. A wake is sent
@@ -1458,6 +1492,7 @@ fn run_replica<B, F>(
             }
         }
         let draining = disconnected || shared.shutdown.load(Ordering::Acquire);
+        depth_gauge.set(shared.depth[r].load(Ordering::Relaxed) as u64);
 
         // Dead replica: rebuild (after the backoff) or wait. Staged work
         // stays queued for the rebuilt engine — except during drain,
@@ -1495,6 +1530,7 @@ fn run_replica<B, F>(
                         st.capacity = capacity;
                         st.restarts += 1;
                         drop(st);
+                        trace::counter("serve.restarts").inc();
                         backend = Some(b);
                         shared.dead[r].store(false, Ordering::Release);
                         continue;
@@ -1523,6 +1559,7 @@ fn run_replica<B, F>(
         // shedding anything whose per-request deadline has already passed
         // instead of spending a batch lane on it.
         if admit.ready(Instant::now()) || (draining && !admit.is_empty()) {
+            let sg = trace::span_id(Phase::TickBuild, r as u64);
             admit.drain_batch_into(&mut flush_buf);
             let now = Instant::now();
             for staged in flush_buf.drain(..) {
@@ -1530,18 +1567,22 @@ fn run_replica<B, F>(
                     fail_staged(&shared, r, staged, ERR_TIMEOUT, Outcome::TimedOut);
                     continue;
                 }
-                let Staged { req, reply, t0, deadline, retries } = staged;
+                let Staged { req, reply, t0, deadline, retries, trace_id } = staged;
+                // Admission → dispatch: the request leaves staging here.
+                let wait = t0.elapsed();
+                lock(&shared.stats[r]).queue_wait.record_duration(wait);
+                trace::record_duration(Phase::QueueWait, trace_id, wait);
+                let p = PendingReply { tx: reply, t0, deadline, retries, trace_id };
                 match req {
                     Request::Score { tokens, span } => {
-                        let id = sched.submit_score(tokens, span);
-                        score_replies.insert(id, PendingReply { tx: reply, t0, deadline, retries });
+                        score_replies.insert(sched.submit_score(tokens, span), p);
                     }
                     Request::Generate { tokens, max_new } => {
-                        let id = sched.submit_generate(tokens, max_new);
-                        gen_replies.insert(id, PendingReply { tx: reply, t0, deadline, retries });
+                        gen_replies.insert(sched.submit_generate(tokens, max_new), p);
                     }
                 }
             }
+            drop(sg);
         }
         match sched.next_work() {
             Work::Idle => {

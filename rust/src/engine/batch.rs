@@ -40,6 +40,7 @@ use crate::engine::decode::{
     rope_in_place, silu, NativeEngine,
 };
 use crate::engine::kv::{KvPagePool, SessionKvPool};
+use crate::util::trace::{self, Phase};
 use anyhow::{Context, Result};
 
 /// One lane of a batched step: which session advances, and by which
@@ -199,6 +200,7 @@ impl NativeEngine {
             }
             let s0 = site_sp(&self.sparsity, &self.enabled, l, 0);
             let p0 = pick(s0, self.packed_d.as_mut());
+            let sg = trace::span_id(Phase::SiteQ, self.stats.steps);
             apply_site_batch(
                 &layer.wq,
                 h,
@@ -210,8 +212,10 @@ impl NativeEngine {
                 &mut self.stats,
                 &self.workers,
             );
+            drop(sg);
             let s1 = site_sp(&self.sparsity, &self.enabled, l, 1);
             let p1 = pick(s1, self.packed_d.as_mut());
+            let sg = trace::span_id(Phase::SiteK, self.stats.steps);
             apply_site_batch(
                 &layer.wk,
                 h,
@@ -223,8 +227,10 @@ impl NativeEngine {
                 &mut self.stats,
                 &self.workers,
             );
+            drop(sg);
             let s2 = site_sp(&self.sparsity, &self.enabled, l, 2);
             let p2 = pick(s2, self.packed_d.as_mut());
+            let sg = trace::span_id(Phase::SiteV, self.stats.steps);
             apply_site_batch(
                 &layer.wv,
                 h,
@@ -236,6 +242,8 @@ impl NativeEngine {
                 &mut self.stats,
                 &self.workers,
             );
+            drop(sg);
+            let sg = trace::span_id(Phase::Attention, self.stats.steps);
             for (i, lane) in lanes.iter().enumerate() {
                 let slot = sessions.get_mut(lane.session).expect("validated resident");
                 let pos = slot.kv.len();
@@ -254,8 +262,10 @@ impl NativeEngine {
                     &mut ctx[i * d..(i + 1) * d],
                 );
             }
+            drop(sg);
             let s3 = site_sp(&self.sparsity, &self.enabled, l, 3);
             let p3 = pick(s3, self.packed_d.as_mut());
+            let sg = trace::span_id(Phase::SiteO, self.stats.steps);
             apply_site_batch(
                 &layer.wo,
                 ctx,
@@ -267,6 +277,7 @@ impl NativeEngine {
                 &mut self.stats,
                 &self.workers,
             );
+            drop(sg);
             add_assign(x, out_d);
 
             // FFN block (SwiGLU): batched gate/up/down sites.
@@ -275,6 +286,7 @@ impl NativeEngine {
             }
             let s4 = site_sp(&self.sparsity, &self.enabled, l, 4);
             let p4 = pick(s4, self.packed_d.as_mut());
+            let sg = trace::span_id(Phase::SiteGate, self.stats.steps);
             apply_site_batch(
                 &layer.wgate,
                 h,
@@ -286,8 +298,10 @@ impl NativeEngine {
                 &mut self.stats,
                 &self.workers,
             );
+            drop(sg);
             let s5 = site_sp(&self.sparsity, &self.enabled, l, 5);
             let p5 = pick(s5, self.packed_d.as_mut());
+            let sg = trace::span_id(Phase::SiteUp, self.stats.steps);
             apply_site_batch(
                 &layer.wup,
                 h,
@@ -299,11 +313,13 @@ impl NativeEngine {
                 &mut self.stats,
                 &self.workers,
             );
+            drop(sg);
             for ((f, g), u) in fbuf.iter_mut().zip(gate.iter()).zip(up.iter()) {
                 *f = silu(*g) * u;
             }
             let s6 = site_sp(&self.sparsity, &self.enabled, l, 6);
             let p6 = pick(s6, self.packed_f.as_mut());
+            let sg = trace::span_id(Phase::SiteDown, self.stats.steps);
             apply_site_batch(
                 &layer.wdown,
                 fbuf,
@@ -315,6 +331,7 @@ impl NativeEngine {
                 &mut self.stats,
                 &self.workers,
             );
+            drop(sg);
             add_assign(x, out_d);
         }
         for lane in lanes.iter() {
@@ -324,7 +341,9 @@ impl NativeEngine {
             let hx = &mut h[i * d..(i + 1) * d];
             rmsnorm_into(&x[i * d..(i + 1) * d], &self.model.final_norm, hx);
         }
+        let sg = trace::span_id(Phase::LmHead, self.stats.steps);
         dense_matmul_nt(&self.model.lm_head, h, n, logits, &self.workers);
+        drop(sg);
         self.stats.steps += n as u64;
         Ok(())
     }

@@ -36,6 +36,7 @@ use crate::runtime::Manifest;
 use crate::sparsity::{PackedNM, Pattern, Scratch, Sparsifier};
 use crate::util::tensor::{Tensor, TensorStore};
 use crate::util::threadpool::{DisjointSliceMut, WorkerPool};
+use crate::util::trace::{self, Phase};
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
@@ -534,34 +535,50 @@ impl NativeEngine {
             rmsnorm_into(x, &layer.norm1, h);
             let (s0, s1, s2) = (sp(0), sp(1), sp(2));
             let p0 = pick(s0, packed_d.as_mut());
+            let sg = trace::span_id(Phase::SiteQ, stats.steps);
             apply_site(&layer.wq, h, s0, p0, scratch, act, q, stats, workers);
+            drop(sg);
             let p1 = pick(s1, packed_d.as_mut());
+            let sg = trace::span_id(Phase::SiteK, stats.steps);
             apply_site(&layer.wk, h, s1, p1, scratch, act, k, stats, workers);
+            drop(sg);
             let p2 = pick(s2, packed_d.as_mut());
+            let sg = trace::span_id(Phase::SiteV, stats.steps);
             apply_site(&layer.wv, h, s2, p2, scratch, act, v, stats, workers);
+            drop(sg);
+            let sg = trace::span_id(Phase::Attention, stats.steps);
             rope_in_place(q, cfg.n_heads, cfg.head_dim(), pos, rope_freqs);
             rope_in_place(k, cfg.n_heads, cfg.head_dim(), pos, rope_freqs);
             kv.write_row(pool, l, k, v);
             attention_paged(q, kv, l, pos + 1, cfg.n_heads, cfg.head_dim(), probs, ctx);
+            drop(sg);
             let s3 = sp(3);
             let pd = pick(s3, packed_d.as_mut());
+            let sg = trace::span_id(Phase::SiteO, stats.steps);
             apply_site(&layer.wo, ctx, s3, pd, scratch, act, site_out_d, stats, workers);
+            drop(sg);
             add_assign(x, site_out_d);
 
             // FFN block (SwiGLU).
             rmsnorm_into(x, &layer.norm2, h);
             let s4 = sp(4);
             let pg = pick(s4, packed_d.as_mut());
+            let sg = trace::span_id(Phase::SiteGate, stats.steps);
             apply_site(&layer.wgate, h, s4, pg, scratch, act, gate, stats, workers);
+            drop(sg);
             let s5 = sp(5);
             let pu = pick(s5, packed_d.as_mut());
+            let sg = trace::span_id(Phase::SiteUp, stats.steps);
             apply_site(&layer.wup, h, s5, pu, scratch, act, up, stats, workers);
+            drop(sg);
             for ((f, g), u) in fbuf.iter_mut().zip(gate.iter()).zip(up.iter()) {
                 *f = silu(*g) * u;
             }
             let s6 = sp(6);
             let pf = pick(s6, packed_f.as_mut());
+            let sg = trace::span_id(Phase::SiteDown, stats.steps);
             apply_site(&layer.wdown, fbuf, s6, pf, scratch, act, site_out_d, stats, workers);
+            drop(sg);
             add_assign(x, site_out_d);
         }
         kv.advance();
@@ -569,7 +586,9 @@ impl NativeEngine {
         // The lm head is the single largest matmul of a step (vocab rows):
         // run it through the pool too. rows == 1 keeps it bitwise equal to
         // the dense_matvec it replaced.
+        let sg = trace::span_id(Phase::LmHead, stats.steps);
         dense_matmul_nt(&model.lm_head, h, 1, logits, workers);
+        drop(sg);
         stats.steps += 1;
         Ok(())
     }
@@ -637,7 +656,9 @@ pub(crate) fn apply_site(
         Some(sp) => match packed {
             Some(packed) => {
                 packed.clear();
+                let sg = trace::span(Phase::Pack);
                 sp.pack_row_into(input, packed, scratch);
+                drop(sg);
                 stats.moved_activation_bytes +=
                     (packed.values().len() * 4 + packed.meta_words().len() * 4) as u64;
                 packed.matmul_nt_into(w, out, wp);
@@ -645,7 +666,9 @@ pub(crate) fn apply_site(
             None => {
                 act.clear();
                 act.extend_from_slice(input);
+                let sg = trace::span(Phase::Sparsify);
                 sp.sparsify_row(act, scratch);
+                drop(sg);
                 stats.moved_activation_bytes += (din * 4) as u64;
                 dense_matmul_nt(w, act, 1, out, wp);
             }
@@ -688,7 +711,9 @@ pub(crate) fn apply_site_batch(
     match sp {
         Some(sp) => match packed {
             Some(packed) => {
+                let sg = trace::span(Phase::Pack);
                 sp.pack_rows_pool(inputs, din, packed, wp);
+                drop(sg);
                 stats.moved_activation_bytes +=
                     (packed.values().len() * 4 + packed.meta_words().len() * 4) as u64;
                 packed.matmul_nt_into(w, out, wp);
@@ -696,7 +721,9 @@ pub(crate) fn apply_site_batch(
             None => {
                 act.clear();
                 act.extend_from_slice(inputs);
+                let sg = trace::span(Phase::Sparsify);
                 sp.sparsify_rows_pool(act, din, wp);
+                drop(sg);
                 stats.moved_activation_bytes += (lanes * din * 4) as u64;
                 dense_matmul_nt(w, act, lanes, out, wp);
             }

@@ -38,6 +38,7 @@ use crate::engine::decode::{
     NativeEngine,
 };
 use crate::engine::kv::{KvCache, KvPagePool};
+use crate::util::trace::{self, Phase};
 use anyhow::Result;
 
 /// Reusable position-major scratch for one blocked-prefill chunk
@@ -129,7 +130,9 @@ impl NativeEngine {
             anyhow::ensure!((*t as usize) < vocab, "token {t} out of vocabulary ({vocab})");
         }
         for chunk in tokens.chunks(block.max(1)) {
+            let sg = trace::span_id(Phase::PrefillBlock, chunk.len() as u64);
             self.prefill_chunk(kv, pool, chunk);
+            drop(sg);
         }
         Ok(())
     }
@@ -172,13 +175,20 @@ impl NativeEngine {
             }
             let s0 = site_sp(sparsity, enabled, l, 0);
             let p0 = pick(s0, packed_d.as_mut());
+            let sg = trace::span_id(Phase::SiteQ, stats.steps);
             apply_site_batch(&layer.wq, h, n, s0, p0, act, q, stats, workers);
+            drop(sg);
             let s1 = site_sp(sparsity, enabled, l, 1);
             let p1 = pick(s1, packed_d.as_mut());
+            let sg = trace::span_id(Phase::SiteK, stats.steps);
             apply_site_batch(&layer.wk, h, n, s1, p1, act, k, stats, workers);
+            drop(sg);
             let s2 = site_sp(sparsity, enabled, l, 2);
             let p2 = pick(s2, packed_d.as_mut());
+            let sg = trace::span_id(Phase::SiteV, stats.steps);
             apply_site_batch(&layer.wv, h, n, s2, p2, act, v, stats, workers);
+            drop(sg);
+            let sg = trace::span_id(Phase::Attention, stats.steps);
             for i in 0..n {
                 let pos = base + i;
                 rope_in_place(&mut q[i * d..(i + 1) * d], nh, hd, pos, rope_freqs);
@@ -195,9 +205,12 @@ impl NativeEngine {
                     &mut ctx[i * d..(i + 1) * d],
                 );
             }
+            drop(sg);
             let s3 = site_sp(sparsity, enabled, l, 3);
             let p3 = pick(s3, packed_d.as_mut());
+            let sg = trace::span_id(Phase::SiteO, stats.steps);
             apply_site_batch(&layer.wo, ctx, n, s3, p3, act, out_d, stats, workers);
+            drop(sg);
             add_assign(x, out_d);
 
             // FFN block (SwiGLU): batched gate/up/down sites.
@@ -206,16 +219,22 @@ impl NativeEngine {
             }
             let s4 = site_sp(sparsity, enabled, l, 4);
             let p4 = pick(s4, packed_d.as_mut());
+            let sg = trace::span_id(Phase::SiteGate, stats.steps);
             apply_site_batch(&layer.wgate, h, n, s4, p4, act, gate, stats, workers);
+            drop(sg);
             let s5 = site_sp(sparsity, enabled, l, 5);
             let p5 = pick(s5, packed_d.as_mut());
+            let sg = trace::span_id(Phase::SiteUp, stats.steps);
             apply_site_batch(&layer.wup, h, n, s5, p5, act, up, stats, workers);
+            drop(sg);
             for ((f, g), u) in fbuf.iter_mut().zip(gate.iter()).zip(up.iter()) {
                 *f = silu(*g) * u;
             }
             let s6 = site_sp(sparsity, enabled, l, 6);
             let p6 = pick(s6, packed_f.as_mut());
+            let sg = trace::span_id(Phase::SiteDown, stats.steps);
             apply_site_batch(&layer.wdown, fbuf, n, s6, p6, act, out_d, stats, workers);
+            drop(sg);
             add_assign(x, out_d);
         }
         kv.advance_n(n);

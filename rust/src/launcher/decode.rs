@@ -23,6 +23,7 @@ use crate::engine::NativeEngine;
 use crate::sparsity::Pattern;
 use crate::util::cli::{usage, Args, OptSpec};
 use crate::util::prng::Rng;
+use crate::util::trace::{self, TraceLevel};
 use anyhow::{bail, Result};
 use std::path::{Path, PathBuf};
 
@@ -42,6 +43,7 @@ pub fn cmd_decode(rest: Vec<String>) -> Result<()> {
         OptSpec { name: "page-tokens", takes_value: true, default: Some("0"), help: "KV page size in positions (0 = engine default)" },
         OptSpec { name: "prefill-block", takes_value: true, default: Some("0"), help: "blocked-prefill block size in positions (0 = per-token oracle; never changes bits)" },
         OptSpec { name: "check", takes_value: false, default: None, help: "verify KV-cached == full-context reference" },
+        OptSpec { name: "trace", takes_value: true, default: Some(""), help: "write Chrome trace-event JSON (Perfetto-loadable) to this path" },
         OptSpec { name: "dense-path", takes_value: false, default: None, help: "disable the compressed-domain matvec" },
         OptSpec { name: "help", takes_value: false, default: None, help: "show help" },
     ];
@@ -59,13 +61,20 @@ pub fn cmd_decode(rest: Vec<String>) -> Result<()> {
     let page_tokens = a.get_usize("page-tokens")?;
     let prefill_block = a.get_usize("prefill-block")?;
     let artifacts = PathBuf::from(a.get("artifacts"));
+    let trace_path = a.get("trace");
+    if !trace_path.is_empty() {
+        // Spans only read the clock and write thread-local state, so the
+        // decoded tokens (and the printed hash) are bitwise identical
+        // with tracing on or off — `tools/ci.sh` pins exactly that.
+        trace::set_level(TraceLevel::Full);
+    }
 
     if lanes > 1 {
         anyhow::ensure!(
             a.get("prompt-tokens").is_empty(),
             "--prompt-tokens drives a single session; use --lanes 1 with it"
         );
-        return decode_lanes(
+        decode_lanes(
             &artifacts,
             pattern,
             &mcfg,
@@ -79,7 +88,8 @@ pub fn cmd_decode(rest: Vec<String>) -> Result<()> {
             a.flag("no-batch"),
             a.flag("dense-path"),
             a.flag("check"),
-        );
+        )?;
+        return finish_trace(&trace_path);
     }
 
     let (model, sparsity, origin) = load_native_parts(&artifacts, &mcfg, seed)?;
@@ -150,6 +160,19 @@ pub fn cmd_decode(rest: Vec<String>) -> Result<()> {
         stats.bytes_reduction(),
     );
     println!("hash {:016x}", fnv64_lanes(std::slice::from_ref(&out)));
+    finish_trace(&trace_path)
+}
+
+/// Write the Chrome trace-event export when `--trace` was given, with a
+/// one-line per-phase breakdown so the terminal shows where the run's
+/// time went without opening Perfetto.
+fn finish_trace(path: &str) -> Result<()> {
+    if path.is_empty() {
+        return Ok(());
+    }
+    println!("{}", trace::snapshot().summary());
+    let n = trace::write_chrome_trace(Path::new(path))?;
+    println!("trace: wrote {n} spans to {path}");
     Ok(())
 }
 

@@ -43,6 +43,7 @@ use crate::synthlang::vocab::{Vocab, EOS};
 use crate::util::cli::{usage, Args, OptSpec};
 use crate::util::json::Json;
 use crate::util::prng::Rng;
+use crate::util::trace::{self, TraceLevel};
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -204,6 +205,10 @@ pub struct LoadgenReport {
     pub backend_name: &'static str,
     /// Per-class client-side latency; `Some` only for longmix runs.
     pub classes: Option<ClassLatency>,
+    /// Per-phase span breakdown recorded over the run (the `phases`
+    /// block of `BENCH_serving.json`). Always populated — `run` turns
+    /// metrics-level tracing on for the run's duration.
+    pub phases: trace::PhaseSnapshot,
 }
 
 impl LoadgenReport {
@@ -226,6 +231,8 @@ impl LoadgenReport {
         j.insert("wall_s", self.wall_s.into());
         j.insert("throughput_rps", self.throughput_rps().into());
         j.insert("latency_ms", latency_ms_json(&self.stats.latency));
+        j.insert("queue_wait_ms", latency_ms_json(&self.stats.queue_wait));
+        j.insert("phases", self.phases.to_json(self.wall_s));
         j.insert("batch_occupancy", self.stats.batch_occupancy().into());
         j.insert("rejection_rate", self.stats.rejection_rate().into());
         j.insert("stolen", (self.stats.stolen as f64).into());
@@ -247,7 +254,8 @@ impl LoadgenReport {
     pub fn summary(&self) -> String {
         format!(
             "{} reqs in {:.2}s -> {:.1} req/s | served {} rejected {} errors {} \
-             (timeout {} failed {}) | restarts {} retried {} | latency {} | occupancy {:.2}",
+             (timeout {} failed {}) | restarts {} retried {} | latency {} | \
+             qwait p95 {:.2}ms | occupancy {:.2}",
             self.requests,
             self.wall_s,
             self.throughput_rps(),
@@ -259,6 +267,7 @@ impl LoadgenReport {
             self.stats.restarts,
             self.stats.retried,
             self.stats.latency.summary(),
+            self.stats.queue_wait.percentile(95.0) * 1e3,
             self.stats.batch_occupancy(),
         )
     }
@@ -367,6 +376,12 @@ fn start_core(cfg: &LoadgenConfig) -> Result<(ServerCore, &'static str)> {
 /// histogram provides the latency distribution (submit → terminal reply).
 pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     anyhow::ensure!(cfg.max_requests > 0, "--max-requests must be > 0 for a bounded run");
+    // Metrics-level tracing is on for every loadgen run so the report's
+    // `phases` block is always populated; reset isolates this run's
+    // aggregates (a sweep snapshots per point). `ensure` never lowers
+    // the level, so a `--trace` Full export survives.
+    trace::ensure(TraceLevel::Metrics);
+    trace::reset();
     let (core, backend_name) = start_core(cfg)?;
     // Client-side per-class split, longmix only (keeps every other mode's
     // JSON — and the sweep schema old consumers parse — unchanged).
@@ -378,6 +393,8 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         run_closed_loop(&core, cfg, classes.as_ref());
     }
     let wall_s = t0.elapsed().as_secs_f64();
+    // Shutdown joins the replica threads, whose TLS sinks flush on exit,
+    // so the snapshot below sees every worker's spans.
     let stats = core.shutdown();
     Ok(LoadgenReport {
         stats,
@@ -388,6 +405,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         queue_cap: cfg.queue_cap,
         backend_name,
         classes: classes.map(|m| m.into_inner().unwrap()),
+        phases: trace::snapshot(),
     })
 }
 
@@ -520,6 +538,7 @@ pub fn sweep_json(cfg: &LoadgenConfig, points: &[SweepPoint]) -> Json {
         e.insert("rejected", (p.report.stats.rejected as f64).into());
         e.insert("throughput_rps", p.report.throughput_rps().into());
         e.insert("latency_ms", latency_ms_json(&p.report.stats.latency));
+        e.insert("queue_wait_ms", latency_ms_json(&p.report.stats.queue_wait));
         e.insert("rejection_rate", p.report.stats.rejection_rate().into());
         e.insert("batch_occupancy", p.report.stats.batch_occupancy().into());
         e.insert("timed_out", (p.report.stats.timed_out as f64).into());
@@ -572,6 +591,7 @@ pub fn cmd_loadgen(rest: Vec<String>) -> Result<()> {
         OptSpec { name: "sweep", takes_value: true, default: Some(""), help: "open-loop rate grid 'r1,r2,...' (req/s)" },
         OptSpec { name: "sweep-out", takes_value: true, default: Some("BENCH_serving_sweep.json"), help: "sweep report path" },
         OptSpec { name: "out", takes_value: true, default: Some("BENCH_serving.json"), help: "report path ('' = skip)" },
+        OptSpec { name: "trace", takes_value: true, default: Some(""), help: "write Chrome trace-event JSON here ('' = off)" },
         OptSpec { name: "help", takes_value: false, default: None, help: "show help" },
     ];
     let a = Args::parse(rest, &specs)?;
@@ -627,6 +647,10 @@ pub fn cmd_loadgen(rest: Vec<String>) -> Result<()> {
     if let Some(c) = &cfg.chaos {
         println!("loadgen: chaos enabled ({})", c.describe());
     }
+    let trace_path = a.get("trace");
+    if !trace_path.is_empty() {
+        trace::set_level(TraceLevel::Full);
+    }
     // Sweep mode: one open-loop run per rate -> BENCH_serving_sweep.json.
     let sweep_rates = a.get("sweep");
     if !sweep_rates.is_empty() {
@@ -650,7 +674,10 @@ pub fn cmd_loadgen(rest: Vec<String>) -> Result<()> {
         let path = PathBuf::from(a.get("sweep-out"));
         write_sweep_json(&cfg, &points, &path)?;
         println!("wrote {}", path.display());
-        return Ok(());
+        // Each point resets the recorder, so a sweep's trace export
+        // covers only the final rate — still useful for eyeballing one
+        // steady-state point in Perfetto.
+        return finish_trace(&trace_path);
     }
     println!(
         "loadgen: {} requests, {} replicas (cap {}), {} loop, {} backend",
@@ -662,12 +689,24 @@ pub fn cmd_loadgen(rest: Vec<String>) -> Result<()> {
     );
     let report = run(&cfg)?;
     println!("loadgen: {}", report.summary());
+    println!("loadgen: {}", report.phases.summary());
     let out = a.get("out");
     if !out.is_empty() {
         let path = PathBuf::from(out);
         write_bench_json(&report, &path)?;
         println!("wrote {}", path.display());
     }
+    finish_trace(&trace_path)
+}
+
+/// Export the accumulated spans as Chrome trace-event JSON when
+/// `--trace` was given; a no-op otherwise.
+fn finish_trace(path: &str) -> Result<()> {
+    if path.is_empty() {
+        return Ok(());
+    }
+    let n = trace::write_chrome_trace(std::path::Path::new(path))?;
+    println!("trace: wrote {n} spans to {path}");
     Ok(())
 }
 

@@ -63,12 +63,16 @@ fn top_usage() -> String {
                  table4 table5 table6 table7 table8 table10 table11 table12\n\
                  table14 serving)\n\
        serve     TCP scoring/generation server (multi-replica; see\n\
-                 examples/serving_demo.rs; --backend coordinator|native)\n\
+                 examples/serving_demo.rs; --backend coordinator|native;\n\
+                 per-phase timing behind the stats op, --trace exports\n\
+                 Chrome trace-event JSON)\n\
        loadgen   closed/open-loop load generator against a ServerCore;\n\
-                 emits BENCH_serving.json (--sweep emits\n\
-                 BENCH_serving_sweep.json)\n\
+                 emits BENCH_serving.json with a phases block (--sweep\n\
+                 emits BENCH_serving_sweep.json; --trace exports Chrome\n\
+                 trace-event JSON)\n\
        decode    native KV-cached decode engine (synthetic or artifacts;\n\
-                 --check pins KV == full-context)\n"
+                 --check pins KV == full-context; --trace exports Chrome\n\
+                 trace-event JSON)\n"
         .to_string()
 }
 

@@ -45,6 +45,7 @@ use crate::sparsity::Pattern;
 use crate::synthlang::vocab::{Vocab, EOS};
 use crate::util::cli::{usage, Args, OptSpec};
 use crate::util::json::{self, Json};
+use crate::util::trace::{self, TraceLevel};
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -69,6 +70,7 @@ pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
         OptSpec { name: "max-wait-ms", takes_value: true, default: Some("5"), help: "batch deadline (ms)" },
         OptSpec { name: "max-requests", takes_value: true, default: Some("0"), help: "exit after N requests (0 = run forever)" },
         OptSpec { name: "request-timeout-ms", takes_value: true, default: Some("0"), help: "per-request deadline (ms, 0 = none)" },
+        OptSpec { name: "trace", takes_value: true, default: Some(""), help: "write Chrome trace-event JSON (Perfetto-loadable) on exit" },
         OptSpec { name: "help", takes_value: false, default: None, help: "show help" },
     ];
     let a = Args::parse(rest, &specs)?;
@@ -99,6 +101,14 @@ pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
         let ms = a.get_u64("request-timeout-ms")?;
         (ms > 0).then(|| Duration::from_millis(ms))
     };
+    let trace_path = a.get("trace");
+    // Metrics-level aggregation is always on for serve — the stats op's
+    // `phases` block costs per-thread counters, not span events. The
+    // full span ring only arms when a trace export was requested.
+    trace::ensure(TraceLevel::Metrics);
+    if !trace_path.is_empty() {
+        trace::set_level(TraceLevel::Full);
+    }
 
     let server_cfg = ServerConfig {
         replicas: a.get_usize("replicas")?,
@@ -149,6 +159,7 @@ pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
     // score/generate outcomes are counted inside the core.
     let extra = Arc::new(AtomicU64::new(0));
     let banner = Arc::new((cfg.variant_key.clone(), cfg.id.clone()));
+    let started = Instant::now();
     let mut conn_seq = 0u64;
     loop {
         // The accept path may poll; the engine replicas never do — they
@@ -164,6 +175,7 @@ pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
                     Arc::clone(&banner),
                     conn_seq,
                     request_timeout,
+                    started,
                 );
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -183,6 +195,12 @@ pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
         stats.errors,
     );
     println!("latency: {} | occupancy {:.2}", stats.latency.summary(), stats.batch_occupancy());
+    println!("queue wait: {}", stats.queue_wait.summary());
+    println!("{}", trace::snapshot().summary());
+    if !trace_path.is_empty() {
+        let n = trace::write_chrome_trace(std::path::Path::new(&trace_path))?;
+        println!("trace: wrote {n} spans to {trace_path}");
+    }
     Ok(())
 }
 
@@ -252,7 +270,7 @@ fn response_reply(resp: &Response, vocab: &Vocab) -> String {
     r.dump()
 }
 
-fn stats_reply(handle: &ServerHandle) -> String {
+fn stats_reply(handle: &ServerHandle, started: Instant) -> String {
     let s = handle.stats();
     let mut r = Json::obj();
     r.insert("ok", true.into());
@@ -267,6 +285,9 @@ fn stats_reply(handle: &ServerHandle) -> String {
     r.insert("timed_out", (s.timed_out as f64).into());
     r.insert("failed", (s.failed as f64).into());
     r.insert("latency_ms", super::loadgen::latency_ms_json(&s.latency));
+    r.insert("queue_wait_ms", super::loadgen::latency_ms_json(&s.queue_wait));
+    r.insert("phases", trace::snapshot().to_json(started.elapsed().as_secs_f64()));
+    r.insert("metrics", trace::metrics_json());
     r.insert("batch_occupancy", s.batch_occupancy().into());
     r.insert("rejection_rate", s.rejection_rate().into());
     r.insert("timeout_rate", s.timeout_rate().into());
@@ -278,12 +299,35 @@ fn stats_reply(handle: &ServerHandle) -> String {
     r.dump()
 }
 
+/// Grace past the core's shed deadline before the IO thread gives up on
+/// a ticket: a quarter of the request timeout, clamped to [50 ms, 1 s]
+/// (the old hard-coded 250 ms only fit mid-range timeouts — a 100 ms
+/// deadline wants a tighter bound, a 10 s one more slack).
+fn reply_grace(request_timeout: Option<Duration>) -> Duration {
+    match request_timeout {
+        Some(d) => (d / 4).clamp(Duration::from_millis(50), Duration::from_secs(1)),
+        None => Duration::from_millis(250),
+    }
+}
+
+/// Socket write timeout: twice the request timeout (min 1 s) so a slow
+/// client gets strictly more patience than the engine path, or the old
+/// 30 s ceiling when no request timeout bounds the connection.
+fn write_timeout(request_timeout: Option<Duration>) -> Duration {
+    match request_timeout {
+        Some(d) => (d * 2).max(Duration::from_secs(1)),
+        None => Duration::from_secs(30),
+    }
+}
+
 /// Per-connection IO thread: read a line, route it, write the reply. The
 /// connection id is the session-affinity key, so one client's decode
 /// sessions stay on one replica. With a request timeout the ticket wait
-/// is bounded (`recv_timeout` with headroom past the core's own shed
-/// deadline) and the socket write is bounded too, so neither a wedged
-/// replica nor a stalled client can pin this thread forever.
+/// is bounded (`recv_timeout` with [`reply_grace`] headroom past the
+/// core's own shed deadline) and the socket write is bounded by
+/// [`write_timeout`], so neither a wedged replica nor a stalled client
+/// can pin this thread forever — and both give-up paths count in the
+/// metrics registry instead of dropping silently.
 #[allow(clippy::too_many_arguments)]
 fn spawn_io_thread(
     stream: TcpStream,
@@ -293,10 +337,11 @@ fn spawn_io_thread(
     banner: Arc<(String, String)>,
     conn_id: u64,
     request_timeout: Option<Duration>,
+    started: Instant,
 ) {
     std::thread::spawn(move || {
         stream.set_nonblocking(false).ok();
-        stream.set_write_timeout(Some(Duration::from_secs(30))).ok();
+        stream.set_write_timeout(Some(write_timeout(request_timeout))).ok();
         let mut writer = match stream.try_clone() {
             Ok(w) => w,
             Err(_) => return,
@@ -319,7 +364,7 @@ fn spawn_io_thread(
                 }
                 Ok(ClientOp::Stats) => {
                     extra.fetch_add(1, Ordering::Relaxed);
-                    stats_reply(&handle)
+                    stats_reply(&handle, started)
                 }
                 Ok(ClientOp::Engine(req)) => {
                     let deadline = request_timeout.map(|d| Instant::now() + d);
@@ -333,13 +378,16 @@ fn spawn_io_thread(
                             let got = match deadline {
                                 Some(d) => ticket.recv_timeout(
                                     d.saturating_duration_since(Instant::now())
-                                        + Duration::from_millis(250),
+                                        + reply_grace(request_timeout),
                                 ),
                                 None => ticket.recv(),
                             };
                             match got {
                                 Some(resp) => response_reply(&resp, &vocab),
-                                None if deadline.is_some() => error_reply(ERR_TIMEOUT),
+                                None if deadline.is_some() => {
+                                    trace::counter("serve.io_reply_timeout").inc();
+                                    error_reply(ERR_TIMEOUT)
+                                }
                                 None => error_reply(&SubmitError::Closed.to_string()),
                             }
                         }
@@ -352,6 +400,7 @@ fn spawn_io_thread(
                 }
             };
             if writer.write_all(reply.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
+                trace::counter("serve.io_write_errors").inc();
                 break;
             }
         }

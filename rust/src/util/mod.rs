@@ -1,7 +1,7 @@
 //! Infrastructure substrates built from scratch for the offline environment:
 //! PRNG, JSON, tensors + checkpoint I/O, thread pool, CLI parsing, summary
-//! statistics, a property-testing mini-framework, a micro-bench harness and
-//! table rendering.
+//! statistics, a property-testing mini-framework, a micro-bench harness,
+//! table rendering, and the tracing/metrics substrate.
 
 pub mod bench;
 pub mod cli;
@@ -12,3 +12,4 @@ pub mod stats;
 pub mod table_fmt;
 pub mod tensor;
 pub mod threadpool;
+pub mod trace;

@@ -3,7 +3,7 @@
 //! Shared by the eval harness (accuracy aggregation), the hardware model
 //! (distribution summaries) and the bench harness (robust timing stats).
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Mean of a slice (0 for empty).
 pub fn mean(xs: &[f64]) -> f64 {
@@ -263,26 +263,11 @@ impl Histogram {
     }
 }
 
-/// Time a closure once.
-pub fn time_once<R, F: FnOnce() -> R>(f: F) -> (R, Duration) {
-    let t0 = Instant::now();
-    let r = f();
-    (r, t0.elapsed())
-}
-
-/// Run `f` repeatedly: `warmup` unmeasured runs then `iters` measured runs.
-pub fn time_many<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> TimingStats {
-    for _ in 0..warmup {
-        f();
-    }
-    let mut ds = Vec::with_capacity(iters);
-    for _ in 0..iters {
-        let t0 = Instant::now();
-        f();
-        ds.push(t0.elapsed());
-    }
-    TimingStats::from_durations(&ds)
-}
+// NOTE: one-off wall-clock helpers (`time_once`/`time_many`) used to live
+// here; phase timing now goes through `util::trace` (`trace::timed` /
+// span guards) so there is exactly one way to time a phase. `TimingStats`
+// stays: it is the *aggregation* type the bench harness (`util::bench`)
+// builds from its own measured durations.
 
 #[cfg(test)]
 mod tests {
@@ -312,13 +297,14 @@ mod tests {
     }
 
     #[test]
-    fn timing_runs() {
-        let stats = time_many(1, 5, || {
-            std::hint::black_box((0..1000).sum::<u64>());
-        });
+    fn timing_stats_from_durations() {
+        let ds: Vec<Duration> = (1..=5).map(Duration::from_millis).collect();
+        let stats = TimingStats::from_durations(&ds);
         assert_eq!(stats.n, 5);
-        assert!(stats.mean_s >= 0.0);
-        assert!(stats.min_s <= stats.max_s);
+        assert!((stats.mean_s - 3e-3).abs() < 1e-12);
+        assert!(stats.min_s <= stats.p50_s && stats.p50_s <= stats.p95_s);
+        assert!(stats.p95_s <= stats.max_s);
+        assert!(stats.summary().starts_with("n=5"));
     }
 
     #[test]

@@ -194,6 +194,11 @@ pub struct WorkerPool {
     /// interleave two jobs' part counters. Atomic (not `Cell`) so the pool
     /// stays `Sync` and part closures may capture `&pool` for inspection.
     in_scope: AtomicBool,
+    /// Occupancy metrics, cached at construction so the hot loop pays two
+    /// atomic adds, not a registry lookup: scopes dispatched and parts
+    /// claimed across them (`parts / (scopes × threads)` = occupancy).
+    m_scopes: crate::util::trace::Counter,
+    m_parts: crate::util::trace::Counter,
 }
 
 impl WorkerPool {
@@ -227,6 +232,8 @@ impl WorkerPool {
             shared,
             workers,
             in_scope: AtomicBool::new(false),
+            m_scopes: crate::util::trace::counter("pool.scopes"),
+            m_parts: crate::util::trace::counter("pool.parts"),
         }
     }
 
@@ -281,6 +288,8 @@ impl WorkerPool {
         if parts == 0 {
             return;
         }
+        self.m_scopes.inc();
+        self.m_parts.add(parts as u64);
         assert!(
             !self.in_scope.swap(true, Ordering::SeqCst),
             "nested WorkerPool scope: partition once at the top of the kernel"

@@ -1,0 +1,782 @@
+//! Zero-dependency observability: runtime-gated per-phase spans, a
+//! metrics registry (counters + gauges) and two exports — an aggregated
+//! per-phase breakdown (the `phases` block in `BENCH_*.json` and the
+//! serve `{"op":"stats"}` reply) and Chrome trace-event JSON for
+//! `--trace <path>` (loadable in Perfetto). See DESIGN.md §2.14.
+//!
+//! Three runtime levels ([`TraceLevel`], one process-wide atomic):
+//!
+//! - **Off** (default): [`span`] reads one relaxed atomic and returns a
+//!   disarmed guard — no clock read, no TLS touch, no allocation
+//!   (`rust/tests/trace.rs` pins the zero-allocation property).
+//! - **Metrics**: every finished span folds into per-thread per-phase
+//!   aggregates (count, total ns, log-bucketed [`Histogram`]) — bounded
+//!   memory, no event storage.
+//! - **Full**: aggregates plus the span event itself into a per-thread
+//!   bounded ring ([`RING_CAP`] events, drop-oldest) for Chrome export.
+//!
+//! The hot path takes no locks and (past one-time sink setup) performs
+//! no allocation: spans land in `thread_local!` sinks, which flush into
+//! the process-wide accumulator when their thread exits (TLS `Drop`) or
+//! explicitly via [`flush_thread`]/[`snapshot`]. Spans are *complete*
+//! records written at guard drop, i.e. in end order — so a parent span
+//! is always recorded (and ring-evicted) after its children, and an
+//! unwinding backend call still closes every span it opened: a restarted
+//! replica cannot orphan an open span by construction.
+//!
+//! Instrumentation never changes bits: guards only read the clock and
+//! write thread-local state, so `decode --check` hashes with tracing on
+//! vs. off are pinned identical (CI smoke + `rust/tests/trace.rs`).
+
+use crate::util::json::Json;
+use crate::util::stats::{fmt_duration_s, Histogram};
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+// ------------------------------------------------------------------ level
+
+/// How much the tracing substrate records (process-wide).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum TraceLevel {
+    /// Record nothing; spans are disarmed without reading the clock.
+    Off = 0,
+    /// Per-phase aggregates only (counts, totals, histograms).
+    Metrics = 1,
+    /// Aggregates plus ring-buffered span events for Chrome export.
+    Full = 2,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+
+pub fn set_level(l: TraceLevel) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Raise the level to at least `l`, never lowering it — `loadgen` turns
+/// Metrics on for its `phases` report without clobbering `--trace`.
+pub fn ensure(l: TraceLevel) {
+    LEVEL.fetch_max(l as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> TraceLevel {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => TraceLevel::Off,
+        1 => TraceLevel::Metrics,
+        _ => TraceLevel::Full,
+    }
+}
+
+#[inline]
+pub fn enabled() -> bool {
+    LEVEL.load(Ordering::Relaxed) != 0
+}
+
+// ------------------------------------------------------------------ clock
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process trace epoch (first clock use) — one
+/// monotonic timebase shared by every thread, so cross-thread spans in
+/// one export are comparable.
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+// ------------------------------------------------------------------ phases
+
+/// One timed pipeline phase (DESIGN.md §2.14 taxonomy).
+///
+/// `site_matmul_*`, `attention` and `lm_head` are the *leaf* engine
+/// phases: on any one thread their spans are disjoint in time, so their
+/// totals sum to at most wall × recording-threads
+/// (`tools/check_bench_json.py` gates exactly that). `sparsify`/`pack`
+/// nest inside their site span, `tick_build`/`prefill_block` are parent
+/// spans, and `queue_wait` overlaps across concurrently staged requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Phase {
+    /// Server-side admission → dispatch wait of one staged request.
+    QueueWait = 0,
+    /// One replica scheduler flush: drain admissions, build the tick.
+    TickBuild = 1,
+    /// One bounded blocked-prefill chunk (all sites, all positions).
+    PrefillBlock = 2,
+    SiteQ = 3,
+    SiteK = 4,
+    SiteV = 5,
+    SiteO = 6,
+    SiteGate = 7,
+    SiteUp = 8,
+    SiteDown = 9,
+    /// In-place sparsification feeding a dense site matmul.
+    Sparsify = 10,
+    /// Compressed-domain packing feeding a packed site matmul.
+    Pack = 11,
+    /// Rope + KV row write + causal attention for a layer's positions.
+    Attention = 12,
+    LmHead = 13,
+    /// Delivering one finished request's reply + stats accounting.
+    Reply = 14,
+    /// Engine/variant construction (`coordinator::pool` load log).
+    EngineBuild = 15,
+}
+
+pub const PHASE_COUNT: usize = 16;
+
+/// Every phase, in discriminant order (export + aggregation iterate this).
+pub const ALL_PHASES: [Phase; PHASE_COUNT] = [
+    Phase::QueueWait,
+    Phase::TickBuild,
+    Phase::PrefillBlock,
+    Phase::SiteQ,
+    Phase::SiteK,
+    Phase::SiteV,
+    Phase::SiteO,
+    Phase::SiteGate,
+    Phase::SiteUp,
+    Phase::SiteDown,
+    Phase::Sparsify,
+    Phase::Pack,
+    Phase::Attention,
+    Phase::LmHead,
+    Phase::Reply,
+    Phase::EngineBuild,
+];
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::QueueWait => "queue_wait",
+            Phase::TickBuild => "tick_build",
+            Phase::PrefillBlock => "prefill_block",
+            Phase::SiteQ => "site_matmul_q",
+            Phase::SiteK => "site_matmul_k",
+            Phase::SiteV => "site_matmul_v",
+            Phase::SiteO => "site_matmul_o",
+            Phase::SiteGate => "site_matmul_gate",
+            Phase::SiteUp => "site_matmul_up",
+            Phase::SiteDown => "site_matmul_down",
+            Phase::Sparsify => "sparsify",
+            Phase::Pack => "pack",
+            Phase::Attention => "attention",
+            Phase::LmHead => "lm_head",
+            Phase::Reply => "reply",
+            Phase::EngineBuild => "engine_build",
+        }
+    }
+
+    /// The span phase for site index `i` in `SITES` order
+    /// (q k v o gate up down).
+    pub fn site(i: usize) -> Phase {
+        match i {
+            0 => Phase::SiteQ,
+            1 => Phase::SiteK,
+            2 => Phase::SiteV,
+            3 => Phase::SiteO,
+            4 => Phase::SiteGate,
+            5 => Phase::SiteUp,
+            _ => Phase::SiteDown,
+        }
+    }
+}
+
+// ------------------------------------------------------------ thread sinks
+
+/// Per-thread span ring capacity (drop-oldest beyond this).
+pub const RING_CAP: usize = 4096;
+
+/// One finished span, as flushed to the global accumulator.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceSpan {
+    /// Trace-local recording-thread id (dense small integers, not OS tids).
+    pub tid: u64,
+    pub phase: Phase,
+    /// Request-scoped id ([`next_id`]) where known, else 0.
+    pub id: u64,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+struct ThreadSink {
+    tid: u64,
+    /// Drop-oldest event ring: grows to [`RING_CAP`] then wraps at `head`
+    /// (once full, `head` is both the next write slot and the oldest).
+    ring: Vec<TraceSpan>,
+    head: usize,
+    dropped: u64,
+    count: [u64; PHASE_COUNT],
+    total_ns: [u64; PHASE_COUNT],
+    hist: Vec<Histogram>,
+}
+
+impl ThreadSink {
+    fn new() -> ThreadSink {
+        static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+        ThreadSink {
+            tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+            ring: Vec::with_capacity(RING_CAP),
+            head: 0,
+            dropped: 0,
+            count: [0; PHASE_COUNT],
+            total_ns: [0; PHASE_COUNT],
+            hist: vec![Histogram::new(); PHASE_COUNT],
+        }
+    }
+
+    fn has_data(&self) -> bool {
+        !self.ring.is_empty() || self.count.iter().any(|c| *c > 0)
+    }
+
+    fn record(&mut self, full: bool, phase: Phase, id: u64, start_ns: u64, dur_ns: u64) {
+        let p = phase as usize;
+        self.count[p] += 1;
+        self.total_ns[p] += dur_ns;
+        self.hist[p].record(dur_ns as f64 * 1e-9);
+        if !full {
+            return;
+        }
+        let span = TraceSpan { tid: self.tid, phase, id, start_ns, dur_ns };
+        if self.ring.len() < RING_CAP {
+            self.ring.push(span);
+        } else {
+            self.ring[self.head] = span;
+            self.head = (self.head + 1) % RING_CAP;
+            self.dropped += 1;
+        }
+    }
+
+    /// Move everything into `g` and reset this sink (keeping its tid).
+    fn flush_into(&mut self, g: &mut Global) {
+        if !self.has_data() {
+            return;
+        }
+        g.recorders += 1;
+        for p in 0..PHASE_COUNT {
+            g.count[p] += self.count[p];
+            g.total_ns[p] += self.total_ns[p];
+            g.hist[p].merge(&self.hist[p]);
+            self.count[p] = 0;
+            self.total_ns[p] = 0;
+            self.hist[p] = Histogram::new();
+        }
+        g.dropped += self.dropped;
+        self.dropped = 0;
+        // Rotate a wrapped ring so the drain below is oldest-first.
+        if self.ring.len() >= RING_CAP && self.head != 0 {
+            self.ring.rotate_left(self.head);
+            self.head = 0;
+        }
+        g.spans.append(&mut self.ring);
+    }
+}
+
+/// Flushes a dying thread's sink into the global accumulator.
+struct SinkCell(ThreadSink);
+
+impl Drop for SinkCell {
+    fn drop(&mut self) {
+        if let Ok(mut g) = global().lock() {
+            self.0.flush_into(&mut g);
+        }
+    }
+}
+
+thread_local! {
+    static SINK: RefCell<Option<SinkCell>> = const { RefCell::new(None) };
+}
+
+fn record(phase: Phase, id: u64, start_ns: u64, dur_ns: u64) {
+    let lvl = LEVEL.load(Ordering::Relaxed);
+    if lvl == 0 {
+        return;
+    }
+    let full = lvl >= TraceLevel::Full as u8;
+    // A destroyed TLS slot (thread teardown) silently drops the span.
+    let _ = SINK.try_with(|cell| {
+        let mut cell = cell.borrow_mut();
+        let sink = &mut cell.get_or_insert_with(|| SinkCell(ThreadSink::new())).0;
+        sink.record(full, phase, id, start_ns, dur_ns);
+    });
+}
+
+// ------------------------------------------------------------------ spans
+
+/// RAII span: times from construction to drop. Disarmed — no clock read,
+/// no TLS touch — when tracing is off.
+pub struct SpanGuard {
+    phase: Phase,
+    id: u64,
+    start_ns: u64,
+    armed: bool,
+}
+
+#[inline]
+pub fn span(phase: Phase) -> SpanGuard {
+    span_id(phase, 0)
+}
+
+#[inline]
+pub fn span_id(phase: Phase, id: u64) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { phase, id, start_ns: 0, armed: false };
+    }
+    SpanGuard { phase, id, start_ns: now_ns(), armed: true }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            let end = now_ns();
+            record(self.phase, self.id, self.start_ns, end.saturating_sub(self.start_ns));
+        }
+    }
+}
+
+/// Record an already-measured duration as a span ending now — the
+/// queue-wait path measures from a staged `Instant`, not a live guard.
+pub fn record_duration(phase: Phase, id: u64, d: Duration) {
+    if !enabled() {
+        return;
+    }
+    let dur = d.as_nanos() as u64;
+    record(phase, id, now_ns().saturating_sub(dur), dur);
+}
+
+/// Time `f` through the span API *and* hand the wall time back — the one
+/// sanctioned "time a phase" helper (it replaced `stats::time_once` and
+/// the ad-hoc `Instant::now()` pairs in `coordinator::pool`).
+pub fn timed<R>(phase: Phase, f: impl FnOnce() -> R) -> (R, Duration) {
+    let t0 = Instant::now();
+    let r = f();
+    let d = t0.elapsed();
+    record_duration(phase, 0, d);
+    (r, d)
+}
+
+/// Process-unique request-scoped span id, threaded from admission through
+/// the replica worker (and across replica rebuilds: a retried request
+/// keeps its id) into queue-wait and reply spans.
+pub fn next_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+// --------------------------------------------------------------- global
+
+struct Global {
+    count: [u64; PHASE_COUNT],
+    total_ns: [u64; PHASE_COUNT],
+    hist: Vec<Histogram>,
+    spans: Vec<TraceSpan>,
+    dropped: u64,
+    /// Sink flushes that carried data — an upper bound on the number of
+    /// concurrently recording threads (the `phases` sum gate uses it).
+    recorders: u64,
+}
+
+impl Global {
+    fn new() -> Global {
+        Global {
+            count: [0; PHASE_COUNT],
+            total_ns: [0; PHASE_COUNT],
+            hist: vec![Histogram::new(); PHASE_COUNT],
+            spans: Vec::new(),
+            dropped: 0,
+            recorders: 0,
+        }
+    }
+}
+
+fn global() -> &'static Mutex<Global> {
+    static GLOBAL: OnceLock<Mutex<Global>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Mutex::new(Global::new()))
+}
+
+fn lock_global() -> MutexGuard<'static, Global> {
+    global().lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Flush the calling thread's sink into the global accumulator (exiting
+/// threads flush automatically via TLS drop).
+pub fn flush_thread() {
+    let _ = SINK.try_with(|cell| {
+        if let Some(sc) = cell.borrow_mut().as_mut() {
+            sc.0.flush_into(&mut lock_global());
+        }
+    });
+}
+
+/// Clear the global accumulator and the calling thread's sink. Sinks on
+/// other *live* threads keep their unflushed data — callers reset between
+/// runs whose recording threads (replicas, engines) have already joined.
+pub fn reset() {
+    let _ = SINK.try_with(|cell| {
+        if let Some(sc) = cell.borrow_mut().as_mut() {
+            let mut scratch = Global::new();
+            sc.0.flush_into(&mut scratch);
+        }
+    });
+    *lock_global() = Global::new();
+}
+
+// ------------------------------------------------------------- snapshot
+
+/// Aggregate of one phase across all flushed sinks.
+#[derive(Clone, Debug)]
+pub struct PhaseAgg {
+    pub phase: Phase,
+    pub count: u64,
+    pub total_ns: u64,
+    pub hist: Histogram,
+}
+
+/// The per-phase breakdown at one point in time ([`snapshot`]).
+#[derive(Clone, Debug, Default)]
+pub struct PhaseSnapshot {
+    /// Phases with at least one span, in [`ALL_PHASES`] order.
+    pub phases: Vec<PhaseAgg>,
+    pub dropped_spans: u64,
+    pub recorders: u64,
+}
+
+/// Flush the calling thread, then copy the global per-phase aggregates.
+pub fn snapshot() -> PhaseSnapshot {
+    flush_thread();
+    let g = lock_global();
+    let mut phases = Vec::new();
+    for (p, phase) in ALL_PHASES.iter().enumerate() {
+        if g.count[p] > 0 {
+            phases.push(PhaseAgg {
+                phase: *phase,
+                count: g.count[p],
+                total_ns: g.total_ns[p],
+                hist: g.hist[p].clone(),
+            });
+        }
+    }
+    PhaseSnapshot { phases, dropped_spans: g.dropped, recorders: g.recorders }
+}
+
+impl PhaseSnapshot {
+    pub fn is_empty(&self) -> bool {
+        self.phases.is_empty()
+    }
+
+    /// The `phases` block consumed by `BENCH_decode.json` /
+    /// `BENCH_serving.json` / the `stats` op and validated by
+    /// `tools/check_bench_json.py`: wall clock, recorder bound, drop
+    /// accounting, and per-phase `{count, total_ms, p50_ms, p95_ms}`.
+    pub fn to_json(&self, wall_s: f64) -> Json {
+        let mut breakdown = Json::obj();
+        for a in &self.phases {
+            let mut e = Json::obj();
+            e.insert("count", (a.count as f64).into());
+            e.insert("total_ms", (a.total_ns as f64 / 1e6).into());
+            e.insert("p50_ms", (a.hist.percentile(50.0) * 1e3).into());
+            e.insert("p95_ms", (a.hist.percentile(95.0) * 1e3).into());
+            breakdown.insert(a.phase.name(), e);
+        }
+        let mut j = Json::obj();
+        j.insert("wall_ms", (wall_s * 1e3).into());
+        j.insert("recorders", (self.recorders as f64).into());
+        j.insert("dropped_spans", (self.dropped_spans as f64).into());
+        j.insert("breakdown", breakdown);
+        j
+    }
+
+    /// One-line top-phases summary for loadgen/decode CLI output.
+    pub fn summary(&self) -> String {
+        if self.phases.is_empty() {
+            return "phases: none recorded".to_string();
+        }
+        let mut by_total: Vec<&PhaseAgg> = self.phases.iter().collect();
+        by_total.sort_by(|a, b| b.total_ns.cmp(&a.total_ns));
+        let parts: Vec<String> = by_total
+            .iter()
+            .take(5)
+            .map(|a| {
+                format!(
+                    "{} {} (n={} p95={})",
+                    a.phase.name(),
+                    fmt_duration_s(a.total_ns as f64 / 1e9),
+                    a.count,
+                    fmt_duration_s(a.hist.percentile(95.0)),
+                )
+            })
+            .collect();
+        format!("phases: {}", parts.join(", "))
+    }
+}
+
+// --------------------------------------------------------- chrome export
+
+/// Flush the calling thread and drain every flushed span event.
+pub fn take_spans() -> Vec<TraceSpan> {
+    flush_thread();
+    std::mem::take(&mut lock_global().spans)
+}
+
+/// Export-track offset for queue-wait spans: their synthesized start
+/// (`now - wait`, [`record_duration`]) reaches back before the dispatch
+/// tick that records them, and concurrently staged requests overlap
+/// freely — so they render on a separate per-thread track instead of
+/// breaking the recording thread's nesting.
+pub const WAIT_TRACK_OFFSET: u64 = 10_000;
+
+/// Chrome trace-event JSON (Perfetto-loadable): complete (`"ph":"X"`)
+/// events with fractional-microsecond timestamps, sorted by `(tid, ts)`
+/// so per-track timestamps are monotone (`tools/check_trace_json.py`
+/// validates pairing/nesting on exactly this format). Queue-wait spans
+/// land on `tid + WAIT_TRACK_OFFSET` (see above). Ties on `(tid, ts)`
+/// order longest-duration first: spans are recorded at guard *drop*
+/// (child before parent), so on a coarse clock a parent sharing its
+/// first child's start timestamp would otherwise sort after the child
+/// and read as a straddle to any laminarity check.
+pub fn chrome_trace_json(spans: &[TraceSpan]) -> Json {
+    let tid_of = |s: &TraceSpan| match s.phase {
+        Phase::QueueWait => s.tid + WAIT_TRACK_OFFSET,
+        _ => s.tid,
+    };
+    let mut sorted: Vec<&TraceSpan> = spans.iter().collect();
+    sorted.sort_by(|a, b| {
+        (tid_of(a), a.start_ns, std::cmp::Reverse(a.dur_ns))
+            .cmp(&(tid_of(b), b.start_ns, std::cmp::Reverse(b.dur_ns)))
+    });
+    let mut events = Json::Arr(Vec::new());
+    for s in sorted {
+        let mut e = Json::obj();
+        e.insert("name", s.phase.name().into());
+        e.insert("cat", "nmsparse".into());
+        e.insert("ph", "X".into());
+        e.insert("ts", (s.start_ns as f64 / 1e3).into());
+        e.insert("dur", (s.dur_ns as f64 / 1e3).into());
+        e.insert("pid", 1.0.into());
+        e.insert("tid", (tid_of(s) as f64).into());
+        let mut args = Json::obj();
+        args.insert("id", (s.id as f64).into());
+        e.insert("args", args);
+        events.push(e);
+    }
+    let mut j = Json::obj();
+    j.insert("traceEvents", events);
+    j.insert("displayTimeUnit", "ms".into());
+    j
+}
+
+/// Drain all span events and write them as Chrome trace JSON to `path`.
+/// Returns the number of events written.
+pub fn write_chrome_trace(path: &std::path::Path) -> Result<usize> {
+    let spans = take_spans();
+    let doc = chrome_trace_json(&spans);
+    std::fs::write(path, doc.pretty())
+        .with_context(|| format!("writing Chrome trace to {}", path.display()))?;
+    Ok(spans.len())
+}
+
+// ------------------------------------------------------ metrics registry
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum MetricKind {
+    Counter,
+    Gauge,
+}
+
+/// Monotonic counter handle (always-on, one relaxed `fetch_add` per
+/// event; callers cache the handle off the hot path).
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge handle (relaxed store; `set_max` for peaks).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn set_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+fn metrics() -> &'static Mutex<BTreeMap<String, (MetricKind, Arc<AtomicU64>)>> {
+    static METRICS: OnceLock<Mutex<BTreeMap<String, (MetricKind, Arc<AtomicU64>)>>> =
+        OnceLock::new();
+    METRICS.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+fn metric(name: &str, kind: MetricKind) -> Arc<AtomicU64> {
+    let mut m = metrics().lock().unwrap_or_else(|e| e.into_inner());
+    let entry = m
+        .entry(name.to_string())
+        .or_insert_with(|| (kind, Arc::new(AtomicU64::new(0))));
+    Arc::clone(&entry.1)
+}
+
+/// Look up (registering on first use) the named monotonic counter.
+pub fn counter(name: &str) -> Counter {
+    Counter(metric(name, MetricKind::Counter))
+}
+
+/// Look up (registering on first use) the named gauge.
+pub fn gauge(name: &str) -> Gauge {
+    Gauge(metric(name, MetricKind::Gauge))
+}
+
+/// Every registered metric as a flat `{name: value}` object (BTreeMap
+/// order, so serialization is deterministic) — the `metrics` block of the
+/// serve `{"op":"stats"}` reply.
+pub fn metrics_json() -> Json {
+    let m = metrics().lock().unwrap_or_else(|e| e.into_inner());
+    let mut j = Json::obj();
+    for (name, (_, v)) in m.iter() {
+        j.insert(name, (v.load(Ordering::Relaxed) as f64).into());
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Global-state behavior (rings, flush ordering, identity) is pinned in
+    // `rust/tests/trace.rs`, a separate process — unit tests here stick to
+    // the pure pieces so they cannot race the loadgen tests that enable
+    // Metrics in this same test binary.
+
+    #[test]
+    fn phase_names_and_site_mapping() {
+        assert_eq!(Phase::QueueWait.name(), "queue_wait");
+        assert_eq!(Phase::site(0), Phase::SiteQ);
+        assert_eq!(Phase::site(6), Phase::SiteDown);
+        assert_eq!(Phase::site(99), Phase::SiteDown);
+        assert_eq!(ALL_PHASES.len(), PHASE_COUNT);
+        for (i, p) in ALL_PHASES.iter().enumerate() {
+            assert_eq!(*p as usize, i, "discriminants must be dense");
+        }
+        let mut names: Vec<&str> = ALL_PHASES.iter().map(|p| p.name()).collect();
+        names.dedup();
+        assert_eq!(names.len(), PHASE_COUNT, "phase names must be unique");
+    }
+
+    #[test]
+    fn snapshot_json_shape() {
+        let mut hist = Histogram::new();
+        for ms in [1.0, 2.0, 8.0] {
+            hist.record(ms * 1e-3);
+        }
+        let snap = PhaseSnapshot {
+            phases: vec![PhaseAgg {
+                phase: Phase::Attention,
+                count: 3,
+                total_ns: 11_000_000,
+                hist,
+            }],
+            dropped_spans: 2,
+            recorders: 1,
+        };
+        let j = snap.to_json(0.5);
+        assert_eq!(j.req("wall_ms").unwrap().as_f64().unwrap(), 500.0);
+        assert_eq!(j.req("recorders").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(j.req("dropped_spans").unwrap().as_f64().unwrap(), 2.0);
+        let att = j.req("breakdown").unwrap().req("attention").unwrap();
+        assert_eq!(att.req("count").unwrap().as_f64().unwrap(), 3.0);
+        assert!((att.req("total_ms").unwrap().as_f64().unwrap() - 11.0).abs() < 1e-9);
+        let p50 = att.req("p50_ms").unwrap().as_f64().unwrap();
+        let p95 = att.req("p95_ms").unwrap().as_f64().unwrap();
+        assert!(p50 <= p95, "p50 {p50} must be <= p95 {p95}");
+        assert!(snap.summary().contains("attention"));
+        assert!(!snap.is_empty());
+        assert!(PhaseSnapshot::default().summary().contains("none"));
+    }
+
+    #[test]
+    fn chrome_export_sorted_per_tid() {
+        let mk = |tid, start_ns, dur_ns| TraceSpan {
+            tid,
+            phase: Phase::Pack,
+            id: 7,
+            start_ns,
+            dur_ns,
+        };
+        // Deliberately unsorted input across two tids.
+        let spans = [mk(2, 50, 5), mk(1, 30, 10), mk(2, 10, 20), mk(1, 90, 1)];
+        let j = chrome_trace_json(&spans);
+        let events = j.req("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 4);
+        let mut last: Option<(f64, f64)> = None;
+        for e in events {
+            let tid = e.req("tid").unwrap().as_f64().unwrap();
+            let ts = e.req("ts").unwrap().as_f64().unwrap();
+            assert_eq!(e.req("ph").unwrap().as_str().unwrap(), "X");
+            assert_eq!(e.req("name").unwrap().as_str().unwrap(), "pack");
+            assert_eq!(e.req("args").unwrap().req("id").unwrap().as_f64().unwrap(), 7.0);
+            if let Some((lt, lts)) = last {
+                assert!(tid > lt || (tid == lt && ts >= lts), "(tid, ts) must ascend");
+            }
+            last = Some((tid, ts));
+        }
+    }
+
+    #[test]
+    fn metrics_registry_counters_and_gauges() {
+        let c = counter("test.trace_unit.counter");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // Second lookup shares the same cell.
+        assert_eq!(counter("test.trace_unit.counter").get(), 5);
+        let g = gauge("test.trace_unit.gauge");
+        g.set(9);
+        g.set_max(3);
+        assert_eq!(g.get(), 9);
+        g.set_max(12);
+        assert_eq!(g.get(), 12);
+        let j = metrics_json();
+        assert_eq!(j.req("test.trace_unit.counter").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(j.req("test.trace_unit.gauge").unwrap().as_f64().unwrap(), 12.0);
+    }
+
+    #[test]
+    fn disarmed_guard_is_inert() {
+        // Whatever the current level, a disarmed guard records nothing on
+        // drop — constructed directly so this cannot race other tests.
+        let g = SpanGuard { phase: Phase::LmHead, id: 0, start_ns: 0, armed: false };
+        drop(g);
+        // timed() always returns the measured wall time.
+        let (v, d) = timed(Phase::EngineBuild, || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0 || d.is_zero());
+    }
+}

@@ -1,0 +1,238 @@
+//! Global-state pinning for the tracing substrate (`util::trace`) —
+//! separate process from the lib tests so enabling Metrics/Full here
+//! cannot race `loadgen::run`'s own `ensure`/`reset` calls. Within this
+//! binary a local mutex serializes the tests, since they all mutate one
+//! process-wide recorder.
+//!
+//! Pins the ISSUE's four trace properties: ring wrap with drop-oldest
+//! accounting, nested begin/end pairing under thread fan-out, the
+//! zero-allocation disabled mode, and bitwise decode identity with
+//! tracing on vs. off.
+
+use nmsparse::engine::{EngineConfig, NativeEngine, NativeSparsity};
+use nmsparse::launcher::loadgen::{self, BackendChoice, LoadgenConfig, Mode};
+use nmsparse::sparsity::Pattern;
+use nmsparse::util::trace::{self, Phase, TraceLevel, RING_CAP};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Serialize tests touching the process-wide recorder; recover from a
+/// poisoned lock so one failure doesn't cascade into the rest.
+fn serial() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Start a test from a clean recorder at `level`.
+fn begin(level: TraceLevel) {
+    trace::set_level(TraceLevel::Off);
+    trace::reset();
+    let _ = trace::take_spans();
+    trace::set_level(level);
+}
+
+/// Return the recorder to the quiet default.
+fn end() {
+    trace::set_level(TraceLevel::Off);
+    trace::reset();
+    let _ = trace::take_spans();
+}
+
+#[test]
+fn ring_wraps_drop_oldest_and_accounts_drops() {
+    let _g = serial();
+    begin(TraceLevel::Full);
+    let extra = 500u64;
+    let n = RING_CAP as u64 + extra;
+    for i in 0..n {
+        trace::record_duration(Phase::Pack, i + 1, Duration::from_nanos(10));
+    }
+    // Aggregates see every span; the ring only keeps the newest RING_CAP.
+    let snap = trace::snapshot();
+    let pack = snap
+        .phases
+        .iter()
+        .find(|a| a.phase == Phase::Pack)
+        .expect("pack phase aggregated");
+    assert_eq!(pack.count, n, "aggregate counts all spans, even evicted ones");
+    assert_eq!(snap.dropped_spans, extra, "one drop per wrap past capacity");
+    let spans = trace::take_spans();
+    assert_eq!(spans.len(), RING_CAP, "ring retains exactly RING_CAP events");
+    for (j, s) in spans.iter().enumerate() {
+        assert_eq!(
+            s.id,
+            extra + 1 + j as u64,
+            "drain must be the newest RING_CAP spans, oldest-first"
+        );
+    }
+    end();
+}
+
+#[test]
+fn nested_spans_pair_under_thread_fanout() {
+    let _g = serial();
+    begin(TraceLevel::Full);
+    const THREADS: usize = 4;
+    const TICKS: u64 = 50;
+    const CHILDREN: u64 = 3;
+    std::thread::scope(|s| {
+        for _ in 0..THREADS {
+            s.spawn(|| {
+                for t in 0..TICKS {
+                    let tick = trace::span_id(Phase::TickBuild, t + 1);
+                    for c in 0..CHILDREN {
+                        let child = trace::span_id(Phase::Attention, c + 1);
+                        std::hint::black_box(c);
+                        drop(child);
+                    }
+                    drop(tick);
+                }
+            });
+        }
+    });
+    // Scope join killed the workers, whose TLS drop flushed their sinks.
+    let spans = trace::take_spans();
+    assert_eq!(spans.len(), THREADS * (TICKS * (1 + CHILDREN)) as usize);
+    let mut tids: Vec<u64> = spans.iter().map(|s| s.tid).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    assert_eq!(tids.len(), THREADS, "each worker records under its own tid");
+    for &tid in &tids {
+        let ticks: Vec<_> = spans
+            .iter()
+            .filter(|s| s.tid == tid && s.phase == Phase::TickBuild)
+            .collect();
+        let children: Vec<_> = spans
+            .iter()
+            .filter(|s| s.tid == tid && s.phase == Phase::Attention)
+            .collect();
+        assert_eq!(ticks.len(), TICKS as usize);
+        assert_eq!(children.len(), (TICKS * CHILDREN) as usize);
+        // Every child interval sits inside a parent interval: begin/end
+        // pairing survived the fan-out (complete spans are written at
+        // guard drop, so a parent always outlives and encloses its
+        // children on the shared monotonic timebase). ">= 1" rather
+        // than "== 1": on a coarse clock two adjacent zero-duration
+        // ticks can share a boundary timestamp with a degenerate child.
+        for c in &children {
+            let enclosing = ticks
+                .iter()
+                .filter(|t| {
+                    t.start_ns <= c.start_ns && c.start_ns + c.dur_ns <= t.start_ns + t.dur_ns
+                })
+                .count();
+            assert!(enclosing >= 1, "child span must nest inside a tick span");
+        }
+    }
+    end();
+}
+
+// ---------------------------------------------------------- zero-alloc
+
+/// System allocator wrapper counting this thread's allocation calls —
+/// the counter is a const-init TLS cell so the accounting itself never
+/// allocates, and parallel test threads don't perturb each other.
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn disabled_mode_allocates_nothing() {
+    let _g = serial();
+    begin(TraceLevel::Off);
+    let before = ALLOCS.with(|c| c.get());
+    for i in 0..10_000u64 {
+        let g = trace::span_id(Phase::SiteGate, i);
+        std::hint::black_box(&g);
+        drop(g);
+        trace::record_duration(Phase::LmHead, i, Duration::from_nanos(5));
+    }
+    let after = ALLOCS.with(|c| c.get());
+    assert_eq!(after, before, "disabled spans must not allocate");
+    end();
+}
+
+// ------------------------------------------------------ bitwise identity
+
+#[test]
+fn tracing_never_changes_decode_bits() {
+    let _g = serial();
+    let cfg = EngineConfig {
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        ffn: 64,
+        max_seq: 64,
+    };
+    let pattern = Pattern::NM { n: 8, m: 16 };
+    let prompt: Vec<u32> = (0..12).map(|i| (i * 5 + 3) % 64).collect();
+    let run = |level: TraceLevel| {
+        begin(level);
+        let mut engine =
+            NativeEngine::synthetic(&cfg, 7, NativeSparsity::act(pattern)).expect("engine");
+        let mut pool = engine.new_kv_pool();
+        let mut kv = pool.new_cache();
+        let tokens = engine.generate_greedy(&mut kv, &mut pool, &prompt, 24, &[]).unwrap();
+        let bits: Vec<u32> = engine.logits().iter().map(|v| v.to_bits()).collect();
+        end();
+        (tokens, bits)
+    };
+    let (tok_off, bits_off) = run(TraceLevel::Off);
+    let (tok_full, bits_full) = run(TraceLevel::Full);
+    assert_eq!(tok_off, tok_full, "tracing changed generated tokens");
+    assert_eq!(bits_off, bits_full, "tracing changed logit bits");
+}
+
+// ------------------------------------------------------- loadgen report
+
+#[test]
+fn loadgen_report_carries_phases_and_queue_wait() {
+    let _g = serial();
+    begin(TraceLevel::Off); // run() itself must raise to Metrics
+    let cfg = LoadgenConfig {
+        replicas: 2,
+        queue_cap: 32,
+        max_requests: 48,
+        concurrency: 8,
+        rate_rps: 0.0,
+        mode: Mode::Mixed,
+        max_new: 4,
+        max_wait: Duration::from_millis(1),
+        seed: 7,
+        backend: BackendChoice::Synthetic {
+            batch: 8,
+            forward_cost: Duration::from_micros(20),
+        },
+        ..Default::default()
+    };
+    let report = loadgen::run(&cfg).expect("loadgen run");
+    assert!(!report.phases.is_empty(), "loadgen must record a phases breakdown");
+    let has = |p: Phase| report.phases.phases.iter().any(|a| a.phase == p && a.count > 0);
+    assert!(has(Phase::QueueWait), "queue_wait spans missing");
+    assert!(has(Phase::TickBuild), "tick_build spans missing");
+    assert!(has(Phase::Reply), "reply spans missing");
+    assert!(
+        report.stats.queue_wait.count() as usize >= cfg.max_requests,
+        "every dispatched or shed request must record a queue wait"
+    );
+    end();
+}

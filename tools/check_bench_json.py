@@ -129,6 +129,96 @@ def check_packed(doc, path):
     return bad
 
 
+def check_latency_block(obj, key, path, ctx):
+    """A `{mean, p50, p95, p99, max}` millisecond block with monotone
+    tail percentiles (`latency_ms`, `queue_wait_ms`)."""
+    bad = require(obj, key, dict, path, ctx)
+    if bad:
+        return bad
+    lat = obj[key]
+    for k in ("mean", "p50", "p95", "p99", "max"):
+        bad |= require(lat, k, (int, float), path, f"{ctx}.{key}")
+    if bad:
+        return bad
+    if not lat["p50"] <= lat["p95"] <= lat["p99"]:
+        bad |= err(path, f"{ctx}.{key}: percentiles not monotone: "
+                         f"p50={lat['p50']} p95={lat['p95']} p99={lat['p99']}")
+    return bad
+
+
+KNOWN_PHASES = frozenset((
+    "queue_wait", "tick_build", "prefill_block",
+    "site_matmul_q", "site_matmul_k", "site_matmul_v", "site_matmul_o",
+    "site_matmul_gate", "site_matmul_up", "site_matmul_down",
+    "sparsify", "pack", "attention", "lm_head", "reply", "engine_build",
+))
+
+# On any one thread the leaf engine phases are disjoint in time, so their
+# totals sum to at most wall x recording-threads (plus slack for clock
+# jitter). Parent phases (tick_build, prefill_block) and the
+# cross-request queue_wait overlap freely and stay out of the sum.
+LEAF_PHASES = frozenset((
+    "site_matmul_q", "site_matmul_k", "site_matmul_v", "site_matmul_o",
+    "site_matmul_gate", "site_matmul_up", "site_matmul_down",
+    "attention", "lm_head",
+))
+
+
+def check_phases(doc, path):
+    """The util::trace `phases` block shared by BENCH_serving.json and
+    BENCH_decode.json: wall clock, recorder bound, drop accounting and a
+    per-phase `{count, total_ms, p50_ms, p95_ms}` breakdown."""
+    bad = require(doc, "phases", dict, path, "top level")
+    if bad:
+        return bad
+    ph = doc["phases"]
+    for key in ("wall_ms", "recorders", "dropped_spans"):
+        bad |= require(ph, key, (int, float), path, "phases")
+    bad |= require(ph, "breakdown", dict, path, "phases")
+    if bad:
+        return bad
+    if ph["wall_ms"] <= 0:
+        bad |= err(path, f"phases: wall_ms {ph['wall_ms']} <= 0")
+    if ph["recorders"] < 1:
+        bad |= err(path, f"phases: recorders {ph['recorders']} < 1 — a traced "
+                         f"run has at least one recording thread")
+    if ph["dropped_spans"] < 0:
+        bad |= err(path, f"phases: negative dropped_spans {ph['dropped_spans']}")
+    if not ph["breakdown"]:
+        return bad | err(path, "phases: empty breakdown — a traced run records "
+                               "at least one phase")
+    leaf_ms = 0.0
+    for name, e in ph["breakdown"].items():
+        ctx = f"phases.breakdown.{name}"
+        if name not in KNOWN_PHASES:
+            bad |= err(path, f"{ctx}: unknown phase name (span taxonomy: "
+                             f"DESIGN.md §2.14)")
+            continue
+        if not isinstance(e, dict):
+            bad |= err(path, f"{ctx} is not an object")
+            continue
+        for key in ("count", "total_ms", "p50_ms", "p95_ms"):
+            bad |= require(e, key, (int, float), path, ctx)
+        if bad:
+            return bad
+        if e["count"] < 1:
+            bad |= err(path, f"{ctx}: count {e['count']} < 1 — empty phases "
+                             f"are omitted, not zeroed")
+        if e["total_ms"] < 0:
+            bad |= err(path, f"{ctx}: negative total_ms {e['total_ms']}")
+        if e["p50_ms"] > e["p95_ms"]:
+            bad |= err(path, f"{ctx}: p50 {e['p50_ms']} > p95 {e['p95_ms']}")
+        if name in LEAF_PHASES:
+            leaf_ms += e["total_ms"]
+    limit = ph["wall_ms"] * max(ph["recorders"], 1) * 1.05
+    if ph["wall_ms"] > 0 and leaf_ms > limit:
+        bad |= err(path, f"phases: leaf phase totals ({leaf_ms:.1f} ms) exceed "
+                         f"wall x recorders ({limit:.1f} ms) — per-thread leaf "
+                         f"spans are disjoint, so this breakdown is "
+                         f"inconsistent")
+    return bad
+
+
 def check_serving(doc, path):
     bad = 0
     for key in ("mode", "backend"):
@@ -169,6 +259,10 @@ def check_serving(doc, path):
             bad |= err(path, f"{key} {doc[key]} < 0")
     if doc["replicas"] < 1:
         bad |= err(path, f"replicas {doc['replicas']} < 1")
+    # Server-side admission -> dispatch wait and the per-phase breakdown:
+    # loadgen always records at metrics level, so both blocks are required.
+    bad |= check_latency_block(doc, "queue_wait_ms", path, "top level")
+    bad |= check_phases(doc, path)
     if doc["mode"] == "longmix":
         bad |= check_classes(doc, path, "top level")
     return bad
@@ -238,6 +332,7 @@ def check_serving_sweep(doc, path):
         lat = p["latency_ms"]
         if not lat["p50"] <= lat["p95"] <= lat["p99"]:
             bad |= err(path, f"{ctx}: latency percentiles not monotone")
+        bad |= check_latency_block(p, "queue_wait_ms", path, ctx)
         if p["rate_rps"] <= prev_rate:
             bad |= err(path, f"{ctx}: rates must be strictly increasing "
                              f"({p['rate_rps']} after {prev_rate})")
@@ -414,6 +509,9 @@ def check_decode(doc, path):
     if gated == 0:
         bad |= err(path, "thread_grid: no (threads=4, lanes>=4) cell with a "
                          "threads=1 twin — the monotone gate never ran")
+    # The traced pass always runs (separate from the timed closures), so
+    # the per-phase breakdown is required in every complete dump.
+    bad |= check_phases(doc, path)
     return bad
 
 
@@ -451,8 +549,32 @@ def _good_decode_doc():
         "contexts": contexts, "batched": batched, "thread_grid": grid,
         "cached_step_growth": 1.2, "full_step_growth": 3.0,
         "dense_bytes_per_step": 1000.0, "packed_bytes_per_step": 400.0,
-        "bytes_reduction": 2.5,
+        "bytes_reduction": 2.5, "phases": _good_phases(),
     }
+
+
+def _good_phases():
+    """A valid util::trace `phases` block (leaf sum within the bound)."""
+    def entry(count, total_ms):
+        per = total_ms / count
+        return {"count": count, "total_ms": total_ms,
+                "p50_ms": per, "p95_ms": 2.0 * per}
+    return {
+        "wall_ms": 500.0, "recorders": 3, "dropped_spans": 0,
+        "breakdown": {
+            "queue_wait": entry(100, 50.0),
+            "tick_build": entry(40, 20.0),
+            "site_matmul_q": entry(64, 80.0),
+            "attention": entry(64, 120.0),
+            "lm_head": entry(64, 60.0),
+            "reply": entry(98, 5.0),
+        },
+    }
+
+
+def _good_queue_wait():
+    """A valid `queue_wait_ms` block (monotone tail)."""
+    return {"mean": 0.5, "p50": 0.4, "p95": 1.0, "p99": 1.5, "max": 2.0}
 
 
 def _good_classes():
@@ -477,6 +599,7 @@ def _good_sweep_doc():
             "rejection_rate": 0.0, "batch_occupancy": 0.5,
             "timed_out": 0, "failed": 0, "timeout_rate": 0.0,
             "failure_rate": 0.0, "restarts": 0, "retried": 0,
+            "queue_wait_ms": _good_queue_wait(),
             "classes": _good_classes(),
         })
     return {
@@ -498,6 +621,7 @@ def _good_serving_doc():
         "batch_occupancy": 0.7, "rejection_rate": 0.02, "stolen": 1,
         "restarts": 2, "retried": 1, "timed_out": 2, "failed": 3,
         "timeout_rate": 0.02, "failure_rate": 0.03,
+        "queue_wait_ms": _good_queue_wait(), "phases": _good_phases(),
     }
 
 
@@ -556,6 +680,7 @@ def self_test():
                lambda d: d.update(cached_step_growth=5.0))
     expect_bad("packed bytes not below dense",
                lambda d: d.update(packed_bytes_per_step=2000.0))
+    expect_bad("decode missing phases", lambda d: d.pop("phases"))
 
     # ---- prefill_block_grid gates ----
     def slow_blocked(doc):
@@ -607,6 +732,43 @@ def self_test():
     expect_bad("negative retried", lambda d: d.update(retried=-1))
     expect_bad("served + rejected exceed requests",
                lambda d: d.update(served=200))
+
+    # ---- queue_wait_ms + phases gates ----
+    def leaf_sum_overflow(doc):
+        # wall 500ms x 3 recorders x 1.05 = 1575ms; push one leaf past it.
+        doc["phases"]["breakdown"]["attention"]["total_ms"] = 5000.0
+
+    def p50_above_p95(doc):
+        e = doc["phases"]["breakdown"]["queue_wait"]
+        e["p50_ms"] = 2.0 * e["p95_ms"]
+
+    expect_bad("missing queue_wait_ms", lambda d: d.pop("queue_wait_ms"))
+    expect_bad("queue_wait percentiles not monotone",
+               lambda d: d["queue_wait_ms"].update(p95=5.0, p99=1.0))
+    expect_bad("serving missing phases", lambda d: d.pop("phases"))
+    expect_bad("phases missing wall_ms",
+               lambda d: d["phases"].pop("wall_ms"))
+    expect_bad("phases empty breakdown",
+               lambda d: d["phases"].update(breakdown={}))
+    expect_bad("phases zero recorders",
+               lambda d: d["phases"].update(recorders=0))
+    expect_bad("phases negative dropped_spans",
+               lambda d: d["phases"].update(dropped_spans=-1))
+    expect_bad("unknown phase name",
+               lambda d: d["phases"]["breakdown"].update(
+                   warp_drive={"count": 1, "total_ms": 1.0,
+                               "p50_ms": 1.0, "p95_ms": 1.0}))
+    expect_bad("phase entry with zero count",
+               lambda d: d["phases"]["breakdown"]["reply"].update(count=0))
+    expect_bad("phase entry missing p95_ms",
+               lambda d: d["phases"]["breakdown"]["reply"].pop("p95_ms"))
+    expect_bad("phase p50 above p95", p50_above_p95)
+    expect_bad("leaf phase totals exceed wall x recorders", leaf_sum_overflow)
+    # Parent/overlapping phases stay out of the leaf sum: a huge
+    # queue_wait total (many requests waiting concurrently) is fine.
+    overlap = copy.deepcopy(serving)
+    overlap["phases"]["breakdown"]["queue_wait"]["total_ms"] = 50_000.0
+    expect_good(check_serving, overlap, "overlapping queue_wait beyond wall")
     # A longmix serving report must carry the per-class split.
     longmix_serving = copy.deepcopy(serving)
     longmix_serving["mode"] = "longmix"
@@ -636,6 +798,8 @@ def self_test():
                ["latency_ms"].pop("p99"))
     expect_bad("sweep rates not increasing",
                lambda d: d["points"][1].update(rate_rps=100.0))
+    expect_bad("sweep point missing queue_wait_ms",
+               lambda d: d["points"][0].pop("queue_wait_ms"))
     # Non-longmix sweeps keep the old schema: no classes required.
     plain_sweep = copy.deepcopy(sweep)
     plain_sweep["mode"] = "mixed"

@@ -1,0 +1,252 @@
+#!/usr/bin/env python3
+"""Validator for the Chrome trace-event JSON written by `--trace <path>`
+(rust/src/util/trace.rs, `write_chrome_trace`).
+
+The exporter emits complete ("ph": "X") events with fractional-
+microsecond timestamps from one process-wide monotonic epoch, sorted by
+(tid, ts). This script fails CI loudly when an export violates that
+contract:
+
+- every event carries the required keys with the right types, a phase
+  name from the DESIGN.md §2.14 taxonomy, and non-negative ts/dur;
+- timestamps are monotone per tid (the exporter sorts by (tid, ts));
+- events on one tid are properly paired: intervals either nest or are
+  disjoint — a child span closing after its parent means a begin/end
+  pairing bug (spans are recorded at guard drop, so a parent always
+  encloses its children; ring eviction only removes whole events and
+  cannot break laminarity). queue_wait spans are exempt: their start is
+  synthesized (admission time, usually on another thread), so they
+  overlap freely — the exporter parks them on a separate track
+  (tid + WAIT_TRACK_OFFSET) and this script only checks them for
+  monotone timestamps.
+
+Usage: tools/check_trace_json.py <trace.json> [...]
+       tools/check_trace_json.py --self-test
+"""
+
+import json
+import sys
+from pathlib import Path
+
+KNOWN_PHASES = frozenset((
+    "queue_wait", "tick_build", "prefill_block",
+    "site_matmul_q", "site_matmul_k", "site_matmul_v", "site_matmul_o",
+    "site_matmul_gate", "site_matmul_up", "site_matmul_down",
+    "sparsify", "pack", "attention", "lm_head", "reply", "engine_build",
+))
+
+# One exported nanosecond of slack for float round-off (timestamps are
+# u64 nanoseconds divided by 1e3 on export).
+EPS_US = 1e-3
+
+
+def err(path, msg):
+    print(f"check_trace_json: {path}: {msg}", file=sys.stderr)
+    return 1
+
+
+def check_event(e, path, ctx):
+    bad = 0
+    if not isinstance(e, dict):
+        return err(path, f"{ctx} is not an object")
+    for key, types in (("name", str), ("cat", str), ("ph", str),
+                       ("ts", (int, float)), ("dur", (int, float)),
+                       ("pid", (int, float)), ("tid", (int, float))):
+        if key not in e:
+            return err(path, f"{ctx}: missing required key '{key}'")
+        if not isinstance(e[key], types):
+            return err(path, f"{ctx}: key '{key}' has type "
+                             f"{type(e[key]).__name__}")
+    if e["ph"] != "X":
+        bad |= err(path, f"{ctx}: ph '{e['ph']}' != 'X' — the exporter only "
+                         f"writes complete events")
+    if e["name"] not in KNOWN_PHASES:
+        bad |= err(path, f"{ctx}: unknown phase name '{e['name']}' "
+                         f"(span taxonomy: DESIGN.md §2.14)")
+    if e["ts"] < 0 or e["dur"] < 0:
+        bad |= err(path, f"{ctx}: negative ts/dur ({e['ts']}, {e['dur']})")
+    args = e.get("args")
+    if not isinstance(args, dict) or not isinstance(args.get("id"),
+                                                    (int, float)):
+        bad |= err(path, f"{ctx}: missing numeric args.id (request-scoped "
+                         f"span id, 0 when unknown)")
+    return bad
+
+
+def check_track(tid, events, path):
+    """Monotone timestamps and proper nesting for one tid's events.
+
+    Events arrive in file order; the monotone-ts gate runs on exactly
+    that order. The nesting sweep re-orders ties on (ts, -dur) first: a
+    parent sharing its first child's start timestamp (coarse clock) must
+    be swept before the child or laminar nesting reads as a straddle.
+    With outermost-first ties, a stack of open interval ends detects
+    partial overlap: when a new event starts inside an open interval it
+    must also end inside it.
+    """
+    bad = 0
+    prev_ts = -1.0
+    for i, e in enumerate(events):
+        if e["ts"] < prev_ts:
+            bad |= err(path, f"tid {tid} event[{i}] ({e['name']}): ts "
+                             f"{e['ts']} before previous {prev_ts} — "
+                             f"per-tid timestamps must be monotone")
+        prev_ts = e["ts"]
+    stack = []  # open interval end timestamps, innermost last
+    for i, e in enumerate(sorted(events, key=lambda e: (e["ts"], -e["dur"]))):
+        ctx = f"tid {tid} span ({e['name']} @ {e['ts']})"
+        if e["name"] == "queue_wait":
+            continue  # synthesized start; overlaps freely (see docstring)
+        end = e["ts"] + e["dur"]
+        while stack and stack[-1] <= e["ts"] + EPS_US:
+            stack.pop()
+        if stack and end > stack[-1] + EPS_US:
+            bad |= err(path, f"{ctx}: span [{e['ts']}, {end}] straddles the "
+                             f"enclosing span's end {stack[-1]} — begin/end "
+                             f"pairing broken")
+        stack.append(end)
+    return bad
+
+
+def check_doc(doc, path):
+    bad = 0
+    if not isinstance(doc, dict):
+        return err(path, "top level is not an object")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return err(path, "missing 'traceEvents' array")
+    if not events:
+        return err(path, "'traceEvents' is empty — a traced run records at "
+                         "least one span")
+    tracks = {}
+    for i, e in enumerate(events):
+        bad |= check_event(e, path, f"traceEvents[{i}]")
+        if bad:
+            return bad
+        tracks.setdefault(e["tid"], []).append(e)
+    for tid in sorted(tracks):
+        bad |= check_track(tid, tracks[tid], path)
+    return bad
+
+
+# ---------------------------------------------------------------- self-test
+
+
+def _event(name, ts, dur, tid=1, **over):
+    e = {"name": name, "cat": "nmsparse", "ph": "X", "ts": ts, "dur": dur,
+         "pid": 1, "tid": tid, "args": {"id": 7}}
+    e.update(over)
+    return e
+
+
+def _good_doc():
+    """Two tids; tid 1 has a tick_build enclosing two attention spans."""
+    return {
+        "displayTimeUnit": "ms",
+        "traceEvents": [
+            _event("tick_build", 10.0, 50.0),
+            _event("attention", 12.0, 10.0),
+            _event("attention", 30.0, 20.0),
+            _event("reply", 70.0, 5.0),
+            _event("queue_wait", 5.0, 100.0, tid=2),
+            _event("lm_head", 200.0, 3.0, tid=2),
+        ],
+    }
+
+
+def self_test():
+    import contextlib
+    import copy
+    import io
+
+    failures = []
+
+    def expect_good(doc, label):
+        if check_doc(copy.deepcopy(doc), f"<self-test:{label}>") != 0:
+            failures.append(f"good fixture rejected: {label}")
+
+    def expect_bad(label, mutate):
+        doc = copy.deepcopy(_good_doc())
+        mutate(doc)
+        with contextlib.redirect_stderr(io.StringIO()):
+            rejected = check_doc(doc, f"<self-test:{label}>") != 0
+        if not rejected:
+            failures.append(f"bad fixture accepted: {label}")
+
+    expect_good(_good_doc(), "good trace")
+
+    def straddle(doc):
+        # Starts inside the tick_build [10, 60] but ends beyond it.
+        doc["traceEvents"].insert(3, _event("attention", 55.0, 30.0))
+
+    def non_monotone(doc):
+        doc["traceEvents"][3]["ts"] = 1.0  # reply before the tick it follows
+
+    expect_bad("empty traceEvents", lambda d: d.update(traceEvents=[]))
+    expect_bad("missing traceEvents", lambda d: d.pop("traceEvents"))
+    expect_bad("missing dur", lambda d: d["traceEvents"][0].pop("dur"))
+    expect_bad("negative dur",
+               lambda d: d["traceEvents"][0].update(dur=-1.0))
+    expect_bad("non-complete ph",
+               lambda d: d["traceEvents"][0].update(ph="B"))
+    expect_bad("unknown phase name",
+               lambda d: d["traceEvents"][0].update(name="warp_drive"))
+    expect_bad("missing args.id",
+               lambda d: d["traceEvents"][0].update(args={}))
+    expect_bad("per-tid timestamps not monotone", non_monotone)
+    expect_bad("child straddles parent end", straddle)
+    # Disjoint same-tid spans (no nesting at all) are fine.
+    flat = {"displayTimeUnit": "ms",
+            "traceEvents": [_event("pack", 10.0 * i, 5.0) for i in range(4)]}
+    expect_good(flat, "flat disjoint spans")
+    # Exact shared boundaries (child ends where parent ends) are fine.
+    snug = {"displayTimeUnit": "ms",
+            "traceEvents": [_event("tick_build", 0.0, 10.0),
+                            _event("attention", 4.0, 6.0)]}
+    expect_good(snug, "child sharing the parent's end")
+    # Coarse clock: parent and first child share a start timestamp, and
+    # the child (recorded first at guard drop) even precedes the parent
+    # in file order — the sweep's (ts, -dur) tie order must sort it out.
+    tied = {"displayTimeUnit": "ms",
+            "traceEvents": [_event("site_matmul_q", 0.0, 4.0),
+                            _event("tick_build", 0.0, 10.0)]}
+    expect_good(tied, "parent sharing its first child's start")
+    # queue_wait spans overlap freely (synthesized starts): two waits
+    # ending at almost the same dispatch straddle each other — fine.
+    waits = {"displayTimeUnit": "ms",
+             "traceEvents": [_event("queue_wait", 0.0, 50.0, tid=10_001),
+                             _event("queue_wait", 20.0, 30.5, tid=10_001)]}
+    expect_good(waits, "overlapping queue_wait spans")
+
+    if failures:
+        for f in failures:
+            print(f"check_trace_json --self-test: FAIL: {f}", file=sys.stderr)
+        return 1
+    print("check_trace_json --self-test: all fixtures behaved")
+    return 0
+
+
+def main(argv):
+    if argv[1:] == ["--self-test"]:
+        return self_test()
+    if not argv[1:]:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    bad = 0
+    for arg in argv[1:]:
+        path = Path(arg)
+        try:
+            doc = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            bad |= err(path, f"unreadable: {e}")
+            continue
+        n = len(doc.get("traceEvents", [])) if isinstance(doc, dict) else 0
+        if check_doc(doc, path):
+            bad = 1
+        else:
+            print(f"check_trace_json: {path}: {n} event(s) OK")
+    return bad
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -36,7 +36,8 @@ cargo bench --no-run
 # proves admission control, drain and the latency histogram end to end.
 cargo run --release -q -- loadgen \
   --replicas 2 --queue-cap 64 --max-requests 96 --concurrency 8 \
-  --forward-us 100 --out "$OUTDIR/BENCH_serving.json"
+  --forward-us 100 --out "$OUTDIR/BENCH_serving.json" \
+  --trace "$OUTDIR/trace_serving.json"
 # Native-decode smoke: seeded synthetic model, KV-cached vs full-context
 # equivalence checked in-process (--check), output hash printed. Two runs
 # must print the same hash — the determinism pin (no baked-in hash to go
@@ -49,6 +50,16 @@ if [ -z "$H1" ] || [ "$H1" != "$H2" ]; then
   exit 1
 fi
 echo "ci: native decode smoke OK ($H1)"
+# Tracing-bits pin: the same decode with span recording and Chrome
+# export enabled must print the same hash — instrumentation never
+# changes bits (DESIGN.md §2.14). The exported trace (and the loadgen
+# one above) is validated for pairing/monotonicity by the schema block.
+HTR="$(cargo run --release -q -- $DECODE_ARGS --trace "$OUTDIR/trace_decode.json" | grep '^hash ')"
+if [ -z "$HTR" ] || [ "$HTR" != "$H1" ]; then
+  echo "ci: traced decode smoke failed (traced '$HTR' vs untraced '$H1')" >&2
+  exit 1
+fi
+echo "ci: traced decode smoke OK ($HTR)"
 # Batched-decode smoke: 4 concurrent sliding-window sessions through the
 # real NativeBackend (one StepBatch per tick) must hash-identical to the
 # same 4 sessions run through the sequential sliding reference loops
@@ -154,7 +165,13 @@ if command -v python3 >/dev/null 2>&1; then
   # good/bad fixtures), then scan whatever dumps exist.
   python3 "$ROOT/tools/check_bench_json.py" --self-test
   python3 "$ROOT/tools/check_bench_json.py" "$ROOT" "$ROOT/rust" "$OUTDIR"
+  # Same for the Chrome trace exports the smokes above wrote: prove the
+  # validator still rejects broken traces, then validate the real ones.
+  python3 "$ROOT/tools/check_trace_json.py" --self-test
+  python3 "$ROOT/tools/check_trace_json.py" \
+    "$OUTDIR/trace_decode.json" "$OUTDIR/trace_serving.json"
 else
   echo "ci: python3 not found — skipping BENCH_*.json schema check"
 fi
+rm -f "$OUTDIR/trace_decode.json" "$OUTDIR/trace_serving.json"
 echo "ci: tier-1 gate green"
