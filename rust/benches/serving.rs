@@ -10,6 +10,7 @@ use nmsparse::coordinator::scheduler::{SchedPolicy, Scheduler, Work};
 use nmsparse::launcher::loadgen::{self, BackendChoice, LoadgenConfig, Mode};
 use nmsparse::util::bench::BenchSuite;
 use nmsparse::util::prng::Rng;
+use nmsparse::wire::{CodecKind, WireRequest};
 use std::time::Duration;
 
 fn main() {
@@ -101,6 +102,39 @@ fn main() {
         );
     }
 
+    // ---- wire codecs ----
+    //
+    // Encode -> decode of the token-level request twins through both
+    // codecs: the framing layer must stay negligible next to a forward.
+    {
+        let reqs: Vec<WireRequest> = (0..256)
+            .map(|i| {
+                let len = rng.range(4, 48);
+                let tokens: Vec<u32> = (0..len).map(|_| rng.below(150) as u32).collect();
+                if i % 2 == 0 {
+                    let span = (1, (len - 1) as u32);
+                    WireRequest::ScoreTokens { tokens, span, tenant: (i % 4) as u32 }
+                } else {
+                    let (tenant, stream) = ((i % 4) as u32, i % 3 == 0);
+                    WireRequest::GenerateTokens { tokens, max_new: 8, tenant, stream }
+                }
+            })
+            .collect();
+        for kind in [CodecKind::Json, CodecKind::Binary] {
+            let c = kind.codec();
+            let name = format!("wire/{} codec roundtrip 256 requests (reqs)", kind.as_str());
+            suite.bench_with_items(&name, Some(256.0), || {
+                let mut buf = Vec::new();
+                for r in &reqs {
+                    buf.clear();
+                    c.encode_request(r, &mut buf);
+                    let decoded = c.decode_request(&buf).expect("frame").expect("complete").0;
+                    std::hint::black_box(decoded);
+                }
+            });
+        }
+    }
+
     // ---- end-to-end ServerCore under load (BENCH_serving.json) ----
     //
     // Reuses the loadgen harness: 2 synthetic replicas with a simulated
@@ -121,6 +155,10 @@ fn main() {
                 batch: 16,
                 forward_cost: Duration::from_micros(150),
             },
+            // Two tenant classes on a 3:1 traffic mix with equal dispatch
+            // weights, so the emitted BENCH_serving.json carries a real
+            // per-tenant breakdown for the checker's fairness gate.
+            tenants: loadgen::parse_tenant_plan("2:3,1").expect("tenant plan"),
             ..Default::default()
         };
         let name = "server_core/closed-loop 512 mixed x2 replicas (reqs)";
@@ -136,6 +174,11 @@ fn main() {
             assert!(
                 report.phases.phases.iter().any(|p| p.count > 0),
                 "loadgen run produced an empty phases breakdown"
+            );
+            assert_eq!(report.stats.tenants.len(), 2, "per-tenant breakdown missing");
+            assert!(
+                report.stats.tenants.iter().all(|t| t.submitted > 0),
+                "a tenant class saw no traffic"
             );
             println!("server_core: {}", report.phases.summary());
             match loadgen::write_bench_json(&report, std::path::Path::new("BENCH_serving.json")) {

@@ -34,11 +34,21 @@
 //!   returned *synchronously* and the protocol layer replies
 //!   `{"ok":false,"error":"overloaded"}` instead of queueing without
 //!   bound.
-//! - **Deadline-driven waits.** Requests stage in a
-//!   [`Batcher`]; an idle replica blocks on its wake channel until
-//!   [`Batcher::next_deadline`] (or a new request) instead of the seed's
-//!   fixed 2 ms sleep — full batches dispatch immediately, partial
-//!   batches after `max_wait`.
+//! - **Deadline-driven waits.** Requests stage in per-tenant queues
+//!   (`TenantStage`); an idle replica blocks on its wake channel until
+//!   the oldest staged request must flush (or a new request arrives)
+//!   instead of the seed's fixed 2 ms sleep — full batches dispatch
+//!   immediately, partial batches after `max_wait`.
+//! - **Multi-tenant fairness.** Admission is two-gated (per-tenant
+//!   quota, then the global `queue_cap`) and each flush round drains
+//!   tenants deficit-round-robin by weight, so a 10:1 traffic skew
+//!   cannot starve the light tenant ([`SubmitOpts::tenant`],
+//!   [`TenantStats`], DESIGN.md §2.15).
+//! - **Streamed generates.** A submit may carry a bounded
+//!   `wire::stream` lane; the decode loop offers each accepted token
+//!   non-blocking (a slow client lags its own lane, never the tick),
+//!   and dropping the lane on terminal reply is the end-of-stream
+//!   signal.
 //! - **Graceful drain.** [`ServerCore::shutdown`] stops admission, wakes
 //!   every replica, and joins them only after all admitted work has been
 //!   answered — no ticket is left dangling.
@@ -61,7 +71,7 @@
 //!   uses the `packing_efficiency` formula over dispatched rows vs
 //!   slots. `{"op":"stats"}` and `BENCH_serving.json` read these.
 
-use crate::coordinator::batcher::{occupancy, BatchPolicy, Batcher};
+use crate::coordinator::batcher::occupancy;
 use crate::coordinator::methods::MethodConfig;
 use crate::coordinator::scheduler::{SchedPolicy, Scheduler, Work};
 use crate::coordinator::Coordinator;
@@ -72,6 +82,7 @@ use crate::engine::{
 use crate::sparsity::Pattern;
 use crate::util::stats::Histogram;
 use crate::util::trace::{self, Phase};
+use crate::wire::stream::StreamSender;
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
 use std::fmt;
@@ -681,6 +692,38 @@ impl ReplicaBackend for SyntheticBackend {
 
 // ---------------------------------------------------------------- stats
 
+/// Per-tenant serving counters (DESIGN.md §2.15). One entry per tenant
+/// class in [`ReplicaStats::tenants`] / [`ServerStats::tenants`]; the
+/// single-tenant default keeps exactly one, so legacy accounting is the
+/// `tenants == [total]` degenerate case.
+#[derive(Clone, Debug, Default)]
+pub struct TenantStats {
+    /// Requests admitted for this tenant.
+    pub submitted: u64,
+    /// Terminal responses delivered (ok or error).
+    pub served: u64,
+    /// Requests refused at admission — by the tenant quota or by the
+    /// global queue cap while carrying this tenant id.
+    pub shed: u64,
+    /// Subset of `served` answered with `Response::Error`.
+    pub errors: u64,
+    /// Admission→dispatch staging wait (the fairness gate reads p95).
+    pub queue_wait: Histogram,
+    /// Submit→reply latency.
+    pub latency: Histogram,
+}
+
+impl TenantStats {
+    pub fn merge(&mut self, other: &TenantStats) {
+        self.submitted += other.submitted;
+        self.served += other.served;
+        self.shed += other.shed;
+        self.errors += other.errors;
+        self.queue_wait.merge(&other.queue_wait);
+        self.latency.merge(&other.latency);
+    }
+}
+
 /// Per-replica serving counters + latency distribution. Snapshots are
 /// cheap clones; the aggregate merge is exact (see [`Histogram::merge`]).
 #[derive(Clone, Debug, Default)]
@@ -724,6 +767,8 @@ pub struct ReplicaStats {
     /// Admission→dispatch staging wait of every request that left the
     /// queue — dispatched to the engine, shed on deadline, or drained.
     pub queue_wait: Histogram,
+    /// Per-tenant breakdown (len == configured tenant classes, ≥1).
+    pub tenants: Vec<TenantStats>,
 }
 
 /// Aggregate view over all replicas.
@@ -744,6 +789,8 @@ pub struct ServerStats {
     pub batch_slots: u64,
     pub latency: Histogram,
     pub queue_wait: Histogram,
+    /// Per-tenant breakdown merged across replicas.
+    pub tenants: Vec<TenantStats>,
 }
 
 impl ServerStats {
@@ -790,7 +837,7 @@ impl ServerStats {
 // ---------------------------------------------------------------- core
 
 /// Tuning for [`ServerCore::start`].
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Engine replicas (worker threads), each with its own backend.
     pub replicas: usize,
@@ -805,6 +852,17 @@ pub struct ServerConfig {
     pub restart_backoff: Duration,
     /// Ceiling for the exponential rebuild backoff.
     pub restart_backoff_cap: Duration,
+    /// Tenant classes for weighted-fair dispatch (DESIGN.md §2.15).
+    /// 1 keeps the original single-queue behavior.
+    pub tenants: usize,
+    /// Deficit-round-robin weight per tenant class: a tenant earns
+    /// `weight` dispatch slots per round while backlogged. Empty means
+    /// equal weights; entries are clamped to ≥1.
+    pub tenant_weights: Vec<u32>,
+    /// Per-tenant in-flight quota per replica (0 = share `queue_cap`).
+    /// Admission sheds a tenant past its quota even when the global cap
+    /// still has room, so one tenant cannot monopolize the queue.
+    pub tenant_quota: usize,
 }
 
 impl Default for ServerConfig {
@@ -815,8 +873,28 @@ impl Default for ServerConfig {
             max_wait: Duration::from_millis(5),
             restart_backoff: Duration::from_millis(10),
             restart_backoff_cap: Duration::from_secs(1),
+            tenants: 1,
+            tenant_weights: Vec::new(),
+            tenant_quota: 0,
         }
     }
+}
+
+/// Normalized tenant policy derived from a [`ServerConfig`].
+fn tenant_policy(cfg: &ServerConfig) -> (usize, Vec<u32>, usize) {
+    let tenants = cfg.tenants.max(1);
+    let mut weights = cfg.tenant_weights.clone();
+    weights.resize(tenants, 1);
+    weights.truncate(tenants);
+    for w in &mut weights {
+        *w = (*w).max(1);
+    }
+    let quota = if cfg.tenant_quota == 0 {
+        cfg.queue_cap.max(1)
+    } else {
+        cfg.tenant_quota.min(cfg.queue_cap.max(1))
+    };
+    (tenants, weights, quota)
 }
 
 /// One admitted request staged for (or stolen into) a replica.
@@ -832,10 +910,20 @@ struct Staged {
     /// dispatch, retries and replica rebuilds, so one request's
     /// queue-wait and reply spans correlate in a trace export.
     trace_id: u64,
+    /// Tenant class for fair dispatch + per-tenant accounting.
+    tenant: u32,
+    /// Streamed-generate lane: each decoded token is offered here
+    /// (non-blocking) before the terminal reply settles the ticket.
+    stream: Option<StreamSender>,
 }
 
 struct Shared {
     depth: Vec<AtomicUsize>,
+    /// Per-replica × per-tenant in-flight depth, bounded by the tenant
+    /// quota at admission and transferred on steal/retry like `depth`.
+    tenant_depth: Vec<Vec<AtomicUsize>>,
+    /// Per-tenant in-flight quota per replica (≥1).
+    tenant_quota: usize,
     stats: Vec<Mutex<ReplicaStats>>,
     /// Per-replica staging queues. Work an idle replica may steal lives
     /// here; once a worker ingests an entry into its batcher/scheduler it
@@ -851,6 +939,25 @@ struct Shared {
     /// to a queue no worker will ever drain again.
     exited: Vec<AtomicBool>,
     shutdown: AtomicBool,
+}
+
+/// Everything optional about a submit: session affinity, deadline,
+/// tenant class, and a streamed-token lane. `Default` reproduces the
+/// plain `submit` behavior (least-loaded, no deadline, tenant 0,
+/// buffered reply only).
+#[derive(Default)]
+pub struct SubmitOpts {
+    /// Session-affinity key (`key % replicas` picks the replica).
+    pub key: Option<u64>,
+    /// Absolute deadline; expired-while-staged requests shed with
+    /// [`ERR_TIMEOUT`].
+    pub deadline: Option<Instant>,
+    /// Tenant class for quota + weighted-fair dispatch; clamped to the
+    /// configured tenant count.
+    pub tenant: u32,
+    /// Incremental token lane for a streamed generate (ignored for
+    /// scores). The terminal response still arrives on the ticket.
+    pub stream: Option<StreamSender>,
 }
 
 /// Cloneable submitter — IO threads and load generators each hold one.
@@ -892,14 +999,42 @@ impl ServerHandle {
         req: Request,
         deadline: Option<Instant>,
     ) -> Result<Ticket, SubmitError> {
+        self.submit_opts(req, SubmitOpts { key, deadline, ..Default::default() })
+    }
+
+    /// Full-control submit: affinity, deadline, tenant class, and an
+    /// optional streamed-token lane. Admission is two-gated — the
+    /// tenant's quota first, then the global `queue_cap` — and both
+    /// rejections count as a shed against the tenant.
+    pub fn submit_opts(&self, req: Request, opts: SubmitOpts) -> Result<Ticket, SubmitError> {
         if self.shared.shutdown.load(Ordering::Acquire) {
             return Err(SubmitError::Closed);
         }
         let n = self.txs.len();
-        let replica = match key {
+        let replica = match opts.key {
             Some(k) => (k % n as u64) as usize,
             None => self.least_loaded(),
         };
+        let tenants = self.shared.tenant_depth[replica].len();
+        let tenant = (opts.tenant as usize).min(tenants - 1);
+        let shed = |replica: usize| {
+            let mut st = lock(&self.shared.stats[replica]);
+            st.rejected += 1;
+            st.tenants[tenant].shed += 1;
+            drop(st);
+            if tenants > 1 {
+                trace::counter(&format!("serve.tenant{tenant}.shed")).inc();
+            }
+        };
+        // Tenant quota gate first (cheap to undo), then the global gate.
+        let quota = self.shared.tenant_quota;
+        let tenant_ok = self.shared.tenant_depth[replica][tenant]
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |d| (d < quota).then_some(d + 1))
+            .is_ok();
+        if !tenant_ok {
+            shed(replica);
+            return Err(SubmitError::Overloaded { replica });
+        }
         // Exact bounded admission: depth counts everything in flight on
         // the replica (staged + scheduled), decremented on terminal reply
         // (transferred to the thief when stolen).
@@ -913,7 +1048,8 @@ impl ServerHandle {
             })
             .is_ok();
         if !admitted {
-            lock(&self.shared.stats[replica]).rejected += 1;
+            self.shared.tenant_depth[replica][tenant].fetch_sub(1, Ordering::AcqRel);
+            shed(replica);
             return Err(SubmitError::Overloaded { replica });
         }
         let (reply_tx, reply_rx) = mpsc::channel();
@@ -921,9 +1057,11 @@ impl ServerHandle {
             req,
             reply: reply_tx,
             t0: Instant::now(),
-            deadline,
+            deadline: opts.deadline,
             retries: 0,
             trace_id: trace::next_id(),
+            tenant: tenant as u32,
+            stream: opts.stream,
         };
         {
             // Signal-then-push under the queue lock: the worker's ingest
@@ -937,11 +1075,16 @@ impl ServerHandle {
             {
                 drop(q);
                 self.shared.depth[replica].fetch_sub(1, Ordering::AcqRel);
+                self.shared.tenant_depth[replica][tenant].fetch_sub(1, Ordering::AcqRel);
                 return Err(SubmitError::Closed);
             }
             q.push_back(staged);
         }
-        lock(&self.shared.stats[replica]).submitted += 1;
+        {
+            let mut st = lock(&self.shared.stats[replica]);
+            st.submitted += 1;
+            st.tenants[tenant].submitted += 1;
+        }
         // Steal hint: the target has a backlog — wake the least-loaded
         // other replica so an idle engine can pull from this queue.
         if n > 1 && self.shared.depth[replica].load(Ordering::Relaxed) >= 2 {
@@ -1011,6 +1154,12 @@ impl ServerHandle {
             agg.batch_slots += s.batch_slots;
             agg.latency.merge(&s.latency);
             agg.queue_wait.merge(&s.queue_wait);
+            if agg.tenants.len() < s.tenants.len() {
+                agg.tenants.resize_with(s.tenants.len(), TenantStats::default);
+            }
+            for (t, ts) in s.tenants.iter().enumerate() {
+                agg.tenants[t].merge(ts);
+            }
         }
         agg
     }
@@ -1040,9 +1189,20 @@ impl ServerCore {
     {
         let n = cfg.replicas.max(1);
         let queue_cap = cfg.queue_cap.max(1);
+        let (tenants, tenant_weights, tenant_quota) = tenant_policy(&cfg);
+        let fresh_stats = || {
+            Mutex::new(ReplicaStats {
+                tenants: vec![TenantStats::default(); tenants],
+                ..Default::default()
+            })
+        };
         let shared = Arc::new(Shared {
             depth: (0..n).map(|_| AtomicUsize::new(0)).collect(),
-            stats: (0..n).map(|_| Mutex::new(ReplicaStats::default())).collect(),
+            tenant_depth: (0..n)
+                .map(|_| (0..tenants).map(|_| AtomicUsize::new(0)).collect())
+                .collect(),
+            tenant_quota,
+            stats: (0..n).map(|_| fresh_stats()).collect(),
             inject: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
             dead: (0..n).map(|_| AtomicBool::new(false)).collect(),
             exited: (0..n).map(|_| AtomicBool::new(false)).collect(),
@@ -1064,6 +1224,7 @@ impl ServerCore {
             max_wait: cfg.max_wait,
             backoff: cfg.restart_backoff.max(Duration::from_micros(100)),
             backoff_cap: cfg.restart_backoff_cap.max(cfg.restart_backoff),
+            tenant_weights,
         };
         let mut workers = Vec::with_capacity(n);
         let mut ready_rxs = Vec::with_capacity(n);
@@ -1072,6 +1233,7 @@ impl ServerCore {
             let shared_r = Arc::clone(&shared);
             let factory_r = Arc::clone(&factory);
             let peers = txs.clone();
+            let wcfg = wcfg.clone();
             let worker = std::thread::Builder::new()
                 .name(format!("nmsparse-replica-{r}"))
                 .spawn(move || {
@@ -1136,6 +1298,10 @@ impl ServerCore {
         self.handle.submit_with(key, req, deadline)
     }
 
+    pub fn submit_opts(&self, req: Request, opts: SubmitOpts) -> Result<Ticket, SubmitError> {
+        self.handle.submit_opts(req, opts)
+    }
+
     pub fn stats(&self) -> ServerStats {
         self.handle.stats()
     }
@@ -1186,6 +1352,11 @@ struct PendingReply {
     deadline: Option<Instant>,
     retries: u32,
     trace_id: u64,
+    tenant: u32,
+    /// Streamed-token lane; dropped by [`finish`], which is how the
+    /// receiving IO thread learns the stream ended (hangup, not an
+    /// in-band sentinel — see `wire::stream`).
+    stream: Option<StreamSender>,
 }
 
 /// How a terminal reply left the replica — drives the error counters.
@@ -1213,12 +1384,22 @@ fn effective_depth(shared: &Shared, r: usize) -> usize {
 /// depth released, `served` bumped (so `completed()` balances), the error
 /// taxonomy counter matching `outcome` bumped, latency recorded.
 fn finish(shared: &Shared, r: usize, pending: PendingReply, resp: Response, outcome: Outcome) {
+    // Close the stream lane *before* the terminal reply settles, so an IO
+    // thread that sees the ticket answered never blocks on a still-open
+    // lane (the reverse order could deliver the response while the lane
+    // looks live).
+    drop(pending.stream);
     let sg = trace::span_id(Phase::Reply, pending.trace_id);
     pending.tx.send(resp).ok(); // client may be gone; still count
     drop(sg);
     shared.depth[r].fetch_sub(1, Ordering::AcqRel);
+    let tenant = (pending.tenant as usize).min(shared.tenant_depth[r].len() - 1);
+    shared.tenant_depth[r][tenant].fetch_sub(1, Ordering::AcqRel);
+    let latency = pending.t0.elapsed().as_secs_f64();
     let mut st = lock(&shared.stats[r]);
     st.served += 1;
+    st.tenants[tenant].served += 1;
+    let errored = !matches!(outcome, Outcome::Ok);
     match outcome {
         Outcome::Ok => {}
         Outcome::Error => st.errors += 1,
@@ -1231,22 +1412,35 @@ fn finish(shared: &Shared, r: usize, pending: PendingReply, resp: Response, outc
             st.failed += 1;
         }
     }
-    st.latency.record(pending.t0.elapsed().as_secs_f64());
+    if errored {
+        st.tenants[tenant].errors += 1;
+    }
+    st.latency.record(latency);
+    st.tenants[tenant].latency.record(latency);
 }
 
 /// [`finish`] for a request that never reached the scheduler. The time it
 /// sat staged still counts as queue wait — a shed request waited too, and
 /// leaving sheds out would flatter the tail of the distribution.
 fn fail_staged(shared: &Shared, r: usize, staged: Staged, message: &str, outcome: Outcome) {
-    let Staged { reply, t0, deadline, retries, trace_id, .. } = staged;
+    let Staged { reply, t0, deadline, retries, trace_id, tenant, stream, .. } = staged;
     let wait = t0.elapsed();
-    lock(&shared.stats[r]).queue_wait.record_duration(wait);
+    record_queue_wait(shared, r, tenant, wait);
     trace::record_duration(Phase::QueueWait, trace_id, wait);
     if matches!(outcome, Outcome::TimedOut) {
         trace::counter("serve.shed_timeout").inc();
     }
-    let pending = PendingReply { tx: reply, t0, deadline, retries, trace_id };
+    let pending = PendingReply { tx: reply, t0, deadline, retries, trace_id, tenant, stream };
     finish(shared, r, pending, Response::Error { message: message.into() }, outcome);
+}
+
+/// Record one request's staging wait into the replica histogram and its
+/// tenant's breakdown.
+fn record_queue_wait(shared: &Shared, r: usize, tenant: u32, wait: Duration) {
+    let mut st = lock(&shared.stats[r]);
+    st.queue_wait.record_duration(wait);
+    let t = (tenant as usize).min(st.tenants.len().saturating_sub(1));
+    st.tenants[t].queue_wait.record_duration(wait);
 }
 
 fn record_batch(shared: &Shared, r: usize, capacity: usize, rows: usize) {
@@ -1254,6 +1448,109 @@ fn record_batch(shared: &Shared, r: usize, capacity: usize, rows: usize) {
     st.batches += 1;
     st.batch_rows += rows as u64;
     st.batch_slots += capacity as u64;
+}
+
+/// Per-tenant staging with deficit-round-robin dispatch (DESIGN.md
+/// §2.15). Replaces the single admission `Batcher` of earlier
+/// revisions: each tenant class stages in its own FIFO, and a flush
+/// round drains up to one batch of requests by cycling tenants — a
+/// backlogged tenant earns `weight` slots per visit, an empty queue
+/// forfeits its accumulated deficit (standard DRR, so idle tenants
+/// cannot bank credit). With one tenant this degenerates to the old
+/// FIFO batcher exactly. Flush timing keeps the batcher's contract:
+/// ready when a full batch is staged or the oldest entry has waited
+/// `max_wait` (ages are measured from admission `t0`).
+struct TenantStage {
+    queues: Vec<VecDeque<Staged>>,
+    weights: Vec<u32>,
+    deficit: Vec<u64>,
+    cursor: usize,
+    len: usize,
+    capacity: usize,
+    max_wait: Duration,
+}
+
+impl TenantStage {
+    fn new(weights: &[u32], capacity: usize, max_wait: Duration) -> TenantStage {
+        let tenants = weights.len().max(1);
+        TenantStage {
+            queues: (0..tenants).map(|_| VecDeque::new()).collect(),
+            weights: if weights.is_empty() { vec![1] } else { weights.to_vec() },
+            deficit: vec![0; tenants],
+            cursor: 0,
+            len: 0,
+            capacity: capacity.max(1),
+            max_wait,
+        }
+    }
+
+    fn push(&mut self, staged: Staged) {
+        let t = (staged.tenant as usize).min(self.queues.len() - 1);
+        self.queues[t].push_back(staged);
+        self.len += 1;
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Oldest staged admission instant across all tenant queues (each
+    /// queue is FIFO in admission order, so fronts suffice).
+    fn oldest(&self) -> Option<Instant> {
+        self.queues.iter().filter_map(|q| q.front().map(|s| s.t0)).min()
+    }
+
+    fn ready(&self, now: Instant) -> bool {
+        self.len >= self.capacity
+            || self.oldest().is_some_and(|t0| now.saturating_duration_since(t0) >= self.max_wait)
+    }
+
+    fn next_deadline(&self) -> Option<Instant> {
+        self.oldest().map(|t0| t0 + self.max_wait)
+    }
+
+    /// One DRR round: move up to `capacity` staged requests into `out`,
+    /// weighted round-robin across backlogged tenants.
+    fn drain_round_into(&mut self, out: &mut Vec<Staged>) {
+        let want = self.capacity.min(self.len);
+        let n = self.queues.len();
+        let mut taken = 0;
+        while taken < want {
+            let t = self.cursor;
+            self.cursor = (self.cursor + 1) % n;
+            if self.queues[t].is_empty() {
+                self.deficit[t] = 0; // no banking while idle
+                continue;
+            }
+            self.deficit[t] += u64::from(self.weights[t].max(1));
+            while self.deficit[t] > 0 && taken < want {
+                match self.queues[t].pop_front() {
+                    Some(s) => {
+                        out.push(s);
+                        self.len -= 1;
+                        taken += 1;
+                        self.deficit[t] -= 1;
+                    }
+                    None => {
+                        self.deficit[t] = 0;
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Drain everything (terminal paths: drain/fail).
+    fn drain_all_into(&mut self, out: &mut Vec<Staged>) {
+        for q in &mut self.queues {
+            out.extend(q.drain(..));
+        }
+        self.len = 0;
+    }
 }
 
 /// Steal the oldest staged request from the deepest other injection
@@ -1267,7 +1564,7 @@ fn record_batch(shared: &Shared, r: usize, capacity: usize, rows: usize) {
 /// be robbed of it), and never from a dead or exited victim (a dead
 /// replica's queue is its post-restart backlog; an exited one is
 /// mid-teardown and its queue is settled by its own drain path).
-fn try_steal(r: usize, shared: &Shared, admit: &mut Batcher<Staged>) -> bool {
+fn try_steal(r: usize, shared: &Shared, admit: &mut TenantStage) -> bool {
     let n = shared.inject.len();
     if n <= 1 {
         return false;
@@ -1291,12 +1588,21 @@ fn try_steal(r: usize, shared: &Shared, admit: &mut Batcher<Staged>) -> bool {
     let Some(staged) = lock(&shared.inject[v]).pop_front() else {
         return false;
     };
-    shared.depth[v].fetch_sub(1, Ordering::AcqRel);
-    shared.depth[r].fetch_add(1, Ordering::AcqRel);
+    transfer_depth(shared, v, r, staged.tenant);
     lock(&shared.stats[r]).stolen += 1;
     trace::counter("serve.stolen").inc();
     admit.push(staged);
     true
+}
+
+/// Move one request's in-flight accounting (global + tenant depth) from
+/// replica `from` to replica `to`.
+fn transfer_depth(shared: &Shared, from: usize, to: usize, tenant: u32) {
+    shared.depth[from].fetch_sub(1, Ordering::AcqRel);
+    shared.depth[to].fetch_add(1, Ordering::AcqRel);
+    let t = (tenant as usize).min(shared.tenant_depth[from].len() - 1);
+    shared.tenant_depth[from][t].fetch_sub(1, Ordering::AcqRel);
+    shared.tenant_depth[to][t].fetch_add(1, Ordering::AcqRel);
 }
 
 /// Hand a failed replica's in-flight score to the least-loaded live
@@ -1324,17 +1630,21 @@ fn requeue_score(shared: &Shared, peers: &[mpsc::Sender<()>], r: usize, staged: 
         }
     }
     let Some(v) = victim else { return false };
+    let t = (staged.tenant as usize).min(shared.tenant_depth[v].len() - 1);
     shared.depth[v].fetch_add(1, Ordering::AcqRel);
+    shared.tenant_depth[v][t].fetch_add(1, Ordering::AcqRel);
     {
         let mut q = lock(&shared.inject[v]);
         if shared.exited[v].load(Ordering::Acquire) || peers[v].send(()).is_err() {
             drop(q);
             shared.depth[v].fetch_sub(1, Ordering::AcqRel);
+            shared.tenant_depth[v][t].fetch_sub(1, Ordering::AcqRel);
             return false;
         }
         q.push_back(staged);
     }
     shared.depth[r].fetch_sub(1, Ordering::AcqRel);
+    shared.tenant_depth[r][t].fetch_sub(1, Ordering::AcqRel);
     lock(&shared.stats[r]).retried += 1;
     true
 }
@@ -1378,6 +1688,8 @@ fn fail_replica<B: ReplicaBackend>(
                     deadline: p.deadline,
                     retries: p.retries + 1,
                     trace_id: p.trace_id,
+                    tenant: p.tenant,
+                    stream: None,
                 };
                 requeue_score(shared, peers, r, staged)
             }
@@ -1399,15 +1711,13 @@ fn fail_replica<B: ReplicaBackend>(
 /// in order. Used on the dead-replica wait path so a long restart
 /// backoff never sits on already-expired requests (the live path sheds
 /// at flush time instead).
-fn shed_expired(shared: &Shared, r: usize, admit: &mut Batcher<Staged>) {
+fn shed_expired(shared: &Shared, r: usize, admit: &mut TenantStage) {
     if admit.is_empty() {
         return;
     }
     let now = Instant::now();
     let mut all: Vec<Staged> = Vec::with_capacity(admit.len());
-    while !admit.is_empty() {
-        all.extend(admit.drain_batch());
-    }
+    admit.drain_all_into(&mut all);
     for staged in all {
         if staged.deadline.is_some_and(|d| d <= now) {
             fail_staged(shared, r, staged, ERR_TIMEOUT, Outcome::TimedOut);
@@ -1418,11 +1728,12 @@ fn shed_expired(shared: &Shared, r: usize, admit: &mut Batcher<Staged>) {
 }
 
 /// Per-worker tuning handed down from [`ServerConfig`].
-#[derive(Clone, Copy)]
+#[derive(Clone)]
 struct WorkerConfig {
     max_wait: Duration,
     backoff: Duration,
     backoff_cap: Duration,
+    tenant_weights: Vec<u32>,
 }
 
 /// One replica's supervised engine loop: ingest → stage →
@@ -1450,12 +1761,11 @@ fn run_replica<B, F>(
     let mut stop = backend.as_ref().map_or_else(Vec::new, |b| b.stop_tokens());
     lock(&shared.stats[r]).capacity = capacity;
     let mut sched = Scheduler::new(capacity, SchedPolicy::default());
-    // The admission batcher keeps its staged entries across a backend
+    // The admission stage keeps its staged entries across a backend
     // rebuild (they never touched the dead engine), so its capacity is
     // pinned at construction; the scheduler re-reads capacity from each
     // rebuilt backend.
-    let mut admit: Batcher<Staged> =
-        Batcher::new(BatchPolicy { capacity, max_wait: wcfg.max_wait });
+    let mut admit = TenantStage::new(&wcfg.tenant_weights, capacity, wcfg.max_wait);
     let mut flush_buf: Vec<Staged> = Vec::new();
     let mut score_replies: HashMap<u64, PendingReply> = HashMap::new();
     let mut gen_replies: HashMap<u64, PendingReply> = HashMap::new();
@@ -1501,11 +1811,9 @@ fn run_replica<B, F>(
         // have drained and exited).
         if backend.is_none() {
             if draining {
-                while !admit.is_empty() {
-                    admit.drain_batch_into(&mut flush_buf);
-                    for staged in flush_buf.drain(..) {
-                        fail_staged(&shared, r, staged, ERR_REPLICA_FAILED, Outcome::Failed);
-                    }
+                admit.drain_all_into(&mut flush_buf);
+                for staged in flush_buf.drain(..) {
+                    fail_staged(&shared, r, staged, ERR_REPLICA_FAILED, Outcome::Failed);
                 }
                 let q = lock(&shared.inject[r]);
                 if q.is_empty() {
@@ -1560,19 +1868,20 @@ fn run_replica<B, F>(
         // instead of spending a batch lane on it.
         if admit.ready(Instant::now()) || (draining && !admit.is_empty()) {
             let sg = trace::span_id(Phase::TickBuild, r as u64);
-            admit.drain_batch_into(&mut flush_buf);
+            admit.drain_round_into(&mut flush_buf);
             let now = Instant::now();
             for staged in flush_buf.drain(..) {
                 if staged.deadline.is_some_and(|d| d <= now) {
                     fail_staged(&shared, r, staged, ERR_TIMEOUT, Outcome::TimedOut);
                     continue;
                 }
-                let Staged { req, reply, t0, deadline, retries, trace_id } = staged;
+                let Staged { req, reply, t0, deadline, retries, trace_id, tenant, stream } =
+                    staged;
                 // Admission → dispatch: the request leaves staging here.
                 let wait = t0.elapsed();
-                lock(&shared.stats[r]).queue_wait.record_duration(wait);
+                record_queue_wait(&shared, r, tenant, wait);
                 trace::record_duration(Phase::QueueWait, trace_id, wait);
-                let p = PendingReply { tx: reply, t0, deadline, retries, trace_id };
+                let p = PendingReply { tx: reply, t0, deadline, retries, trace_id, tenant, stream };
                 match req {
                     Request::Score { tokens, span } => {
                         score_replies.insert(sched.submit_score(tokens, span), p);
@@ -1676,7 +1985,21 @@ fn run_replica<B, F>(
                         for (id, out) in ids.iter().zip(outs) {
                             let sess = sched.session_mut(*id).expect("live session");
                             match out {
-                                StepOutcome::Token(tok) => sess.push_token(tok, &stop),
+                                StepOutcome::Token(tok) => {
+                                    let before = sess.generated.len();
+                                    sess.push_token(tok, &stop);
+                                    // Offer only tokens that actually
+                                    // joined the transcript, so every
+                                    // incremental frame is a prefix-
+                                    // ordered subset of the terminal one.
+                                    if sess.generated.len() > before {
+                                        if let Some(p) = gen_replies.get(id) {
+                                            if let Some(s) = &p.stream {
+                                                s.offer(*sess.generated.last().unwrap());
+                                            }
+                                        }
+                                    }
+                                }
                                 // Mid-prefill: the row is unchanged, the
                                 // scheduler re-ticks the session next
                                 // dispatch and the backend resumes from

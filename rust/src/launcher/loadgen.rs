@@ -35,8 +35,8 @@
 use crate::coordinator::chaos::{ChaosArg, ChaosBackend, ChaosHandle};
 use crate::coordinator::methods::MethodConfig;
 use crate::coordinator::server::{
-    CoordinatorBackend, NativeBackend, Request, ServerConfig, ServerCore, ServerStats,
-    SubmitError, SyntheticBackend, Ticket,
+    CoordinatorBackend, NativeBackend, Request, Response, ServerConfig, ServerCore, ServerHandle,
+    ServerStats, SubmitError, SubmitOpts, SyntheticBackend, TenantStats, Ticket, ERR_TIMEOUT,
 };
 use crate::sparsity::Pattern;
 use crate::synthlang::vocab::{Vocab, EOS};
@@ -44,9 +44,13 @@ use crate::util::cli::{usage, Args, OptSpec};
 use crate::util::json::Json;
 use crate::util::prng::Rng;
 use crate::util::trace::{self, TraceLevel};
+use crate::wire::{
+    stream_channel, Codec, CodecKind, StreamOutcome, StreamPoll, StreamReceiver, WireReply,
+    WireRequest, LANE_CAP,
+};
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -88,6 +92,73 @@ impl Mode {
 /// Is request `idx` of a longmix run the long-prompt class?
 pub fn longmix_is_long(idx: usize) -> bool {
     idx % 4 == 0
+}
+
+/// Tenant traffic plan: how offered load splits across tenant classes.
+/// `mix` holds *traffic* weights — request `idx` is assigned a tenant by
+/// a seeded weighted draw — not the server's dispatch weights. The
+/// fairness smoke deliberately runs a skewed mix (e.g. `2:10,1`) against
+/// equal dispatch weights and gates on per-tenant queue-wait p95.
+#[derive(Clone, Debug)]
+pub struct TenantPlan {
+    pub count: usize,
+    pub mix: Vec<u32>,
+}
+
+impl Default for TenantPlan {
+    fn default() -> Self {
+        TenantPlan { count: 1, mix: vec![1] }
+    }
+}
+
+/// Parse `--tenants k[:w1,...,wk]`; omitted weights mean an even mix.
+pub fn parse_tenant_plan(s: &str) -> Result<TenantPlan> {
+    let (count_s, mix_s) = match s.split_once(':') {
+        Some((c, m)) => (c, Some(m)),
+        None => (s, None),
+    };
+    let count: usize = count_s
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad --tenants count '{count_s}'"))?;
+    anyhow::ensure!(count >= 1, "--tenants needs at least one tenant class");
+    let mix = match mix_s {
+        None => vec![1; count],
+        Some(m) => super::serve::parse_weights(m)?,
+    };
+    anyhow::ensure!(
+        mix.len() == count && mix.iter().all(|&w| w > 0),
+        "--tenants wants exactly {count} positive mix weights"
+    );
+    Ok(TenantPlan { count, mix })
+}
+
+/// Two-state MMPP (Markov-modulated Poisson process) plan for bursty
+/// open-loop arrivals: exponential inter-arrivals at `rate * rate_mult`
+/// during ON phases and at the base rate during OFF phases, with
+/// exponentially distributed phase durations (means `on` / `off`).
+#[derive(Clone, Copy, Debug)]
+pub struct BurstPlan {
+    pub on: Duration,
+    pub off: Duration,
+    pub rate_mult: f64,
+}
+
+/// Parse `--burst on_ms,off_ms,rate_mult`.
+pub fn parse_burst(s: &str) -> Result<BurstPlan> {
+    let parts: Vec<&str> = s.split(',').map(str::trim).collect();
+    let bad = || anyhow::anyhow!("bad --burst '{s}' (want 'on_ms,off_ms,rate_mult')");
+    anyhow::ensure!(parts.len() == 3, bad());
+    let on_ms: u64 = parts[0].parse().map_err(|_| bad())?;
+    let off_ms: u64 = parts[1].parse().map_err(|_| bad())?;
+    let rate_mult: f64 = parts[2].parse().map_err(|_| bad())?;
+    anyhow::ensure!(on_ms > 0 && off_ms > 0, "--burst phase durations must be > 0 ms");
+    anyhow::ensure!(rate_mult > 0.0, "--burst rate_mult must be > 0");
+    Ok(BurstPlan {
+        on: Duration::from_millis(on_ms),
+        off: Duration::from_millis(off_ms),
+        rate_mult,
+    })
 }
 
 /// Which engine the replicas run.
@@ -134,6 +205,23 @@ pub struct LoadgenConfig {
     /// Deterministic fault injection (seed or explicit `FaultPlan` spec).
     pub chaos: Option<ChaosArg>,
     pub backend: BackendChoice,
+    /// Tenant classes + traffic mix (`--tenants k[:weights]`).
+    pub tenants: TenantPlan,
+    /// Server-side DRR dispatch weights (empty = equal).
+    pub tenant_weights: Vec<u32>,
+    /// Per-tenant in-flight quota per replica (0 = share the queue cap).
+    pub tenant_quota: usize,
+    /// MMPP bursty arrivals for the open loop (`None` = fixed interval,
+    /// bitwise-identical schedule to earlier revisions).
+    pub burst: Option<BurstPlan>,
+    /// Bounded-Pareto shape for prompt lengths (0 = uniform, legacy).
+    pub pareto_alpha: f64,
+    /// Roundtrip every request and reply through this wire codec
+    /// in-process (`None` = plain structs, no codec on the path).
+    pub codec: Option<CodecKind>,
+    /// Attach a streamed-token lane to every generate and count the
+    /// per-token chunk frames client-side.
+    pub stream: bool,
 }
 
 impl Default for LoadgenConfig {
@@ -154,6 +242,13 @@ impl Default for LoadgenConfig {
                 batch: 16,
                 forward_cost: Duration::from_micros(150),
             },
+            tenants: TenantPlan::default(),
+            tenant_weights: Vec::new(),
+            tenant_quota: 0,
+            burst: None,
+            pareto_alpha: 0.0,
+            codec: None,
+            stream: false,
         }
     }
 }
@@ -209,6 +304,19 @@ pub struct LoadgenReport {
     /// block of `BENCH_serving.json`). Always populated — `run` turns
     /// metrics-level tracing on for the run's duration.
     pub phases: trace::PhaseSnapshot,
+    /// Traffic plan the run offered (tenant count + mix weights).
+    pub tenant_plan: TenantPlan,
+    /// Server-side DRR dispatch weights, one `>= 1` entry per tenant.
+    pub dispatch_weights: Vec<u32>,
+    /// Wire codec the run roundtripped through ("direct" = none).
+    pub codec_name: &'static str,
+    /// Streamed chunk frames observed client-side over the whole run.
+    pub stream_chunks: u64,
+    /// XOR of per-request reply digests ([`digest_reply`]) — order
+    /// independent, so equal hashes mean equal reply payloads regardless
+    /// of completion order. The codec-equivalence smoke pins the json,
+    /// binary, and direct paths to the same value.
+    pub transcript_hash: u64,
 }
 
 impl LoadgenReport {
@@ -242,6 +350,10 @@ impl LoadgenReport {
         j.insert("failed", (self.stats.failed as f64).into());
         j.insert("timeout_rate", self.stats.timeout_rate().into());
         j.insert("failure_rate", self.stats.failure_rate().into());
+        j.insert("codec", self.codec_name.into());
+        j.insert("stream_chunks", (self.stream_chunks as f64).into());
+        j.insert("transcript_hash", format!("{:016x}", self.transcript_hash).into());
+        j.insert("tenants", tenants_json(&self.stats.tenants, &self.dispatch_weights));
         if let Some(c) = &self.classes {
             j.insert("classes", c.to_json());
         }
@@ -287,9 +399,88 @@ pub fn latency_ms_json(lat: &crate::util::stats::Histogram) -> Json {
     l
 }
 
+/// The `tenants` JSON block: dispatch weights plus per-tenant counters
+/// and queue-wait/latency percentiles. Shared by `BENCH_serving.json`
+/// and the serve `{"op":"stats"}` reply (which passes no weights — they
+/// default to 1). The fairness gate in `tools/check_bench_json.py`
+/// reads `weights` and each tenant's `queue_wait_ms.p95`.
+pub fn tenants_json(ts: &[TenantStats], weights: &[u32]) -> Json {
+    let mut j = Json::obj();
+    j.insert("count", (ts.len() as f64).into());
+    let w: Vec<Json> = (0..ts.len())
+        .map(|t| Json::Num(*weights.get(t).unwrap_or(&1) as f64))
+        .collect();
+    j.insert("weights", Json::Arr(w));
+    let mut arr = Vec::with_capacity(ts.len());
+    for (t, s) in ts.iter().enumerate() {
+        let mut e = Json::obj();
+        e.insert("tenant", (t as f64).into());
+        e.insert("submitted", (s.submitted as f64).into());
+        e.insert("served", (s.served as f64).into());
+        e.insert("shed", (s.shed as f64).into());
+        e.insert("errors", (s.errors as f64).into());
+        e.insert("queue_wait_ms", latency_ms_json(&s.queue_wait));
+        e.insert("latency_ms", latency_ms_json(&s.latency));
+        arr.push(e);
+    }
+    j.insert("per_tenant", Json::Arr(arr));
+    j
+}
+
+/// Dispatch weights padded/clamped to one `>= 1` entry per tenant.
+fn normalized_weights(weights: &[u32], count: usize) -> Vec<u32> {
+    (0..count).map(|t| weights.get(t).copied().unwrap_or(1).max(1)).collect()
+}
+
+/// Deterministic weighted tenant assignment for request `idx`: the mix
+/// weights partition a seeded draw, so a 10:1 mix sends ~10/11 of the
+/// traffic to tenant 0 with the exact split fixed by the seed.
+pub fn tenant_of(seed: u64, idx: usize, plan: &TenantPlan) -> u32 {
+    if plan.count <= 1 {
+        return 0;
+    }
+    let total: u64 = plan.mix.iter().map(|&w| w as u64).sum();
+    let mut rng = Rng::new(seed ^ 0x7e6a_a171 ^ (idx as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    let mut r = rng.below(total.max(1) as usize) as u64;
+    for (t, &w) in plan.mix.iter().enumerate() {
+        if r < w as u64 {
+            return t as u32;
+        }
+        r -= w as u64;
+    }
+    (plan.count - 1) as u32
+}
+
+/// Prompt length draw over `[lo, hi)`: uniform with `alpha == 0` (the
+/// historical distribution, bit-for-bit), bounded-Pareto inverse CDF
+/// otherwise — heavy-tailed toward `lo`, with occasional near-`hi`
+/// prompts, the shape real serving traces show.
+fn prompt_len(rng: &mut Rng, lo: usize, hi: usize, alpha: f64) -> usize {
+    if alpha <= 0.0 {
+        return rng.range(lo, hi);
+    }
+    let (l, h) = (lo as f64, (hi - 1).max(lo) as f64);
+    let u = rng.f64();
+    let ratio = (l / h).powf(alpha);
+    let x = l * (1.0 - u * (1.0 - ratio)).powf(-1.0 / alpha);
+    (x as usize).clamp(lo, hi - 1)
+}
+
 /// Deterministic request synthesis: request `idx` of a run is the same
 /// tokens/span/budget for a given seed, independent of thread timing.
 pub fn make_request(seed: u64, idx: usize, mode: Mode, max_new: usize) -> Request {
+    make_request_opts(seed, idx, mode, max_new, 0.0)
+}
+
+/// [`make_request`] with a bounded-Pareto prompt-length shape; `alpha ==
+/// 0` reproduces the uniform lengths earlier revisions drew.
+pub fn make_request_opts(
+    seed: u64,
+    idx: usize,
+    mode: Mode,
+    max_new: usize,
+    pareto_alpha: f64,
+) -> Request {
     let mut rng = Rng::new(seed ^ (idx as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
     let score = match mode {
         Mode::Score => true,
@@ -297,7 +488,7 @@ pub fn make_request(seed: u64, idx: usize, mode: Mode, max_new: usize) -> Reques
         Mode::Mixed => idx % 3 != 2, // 2:1 score:generate
     };
     if score {
-        let len = rng.range(4, 24);
+        let len = prompt_len(&mut rng, 4, 24, pareto_alpha);
         let tokens: Vec<u32> = (0..len).map(|_| rng.range(3, 120) as u32).collect();
         let start = rng.range(1, len);
         let end = rng.range(start + 1, len + 1);
@@ -308,12 +499,16 @@ pub fn make_request(seed: u64, idx: usize, mode: Mode, max_new: usize) -> Reques
         // near-full context; short class: a quick decode that should not
         // queue behind it when resumable prefill is on.
         let long = longmix_is_long(idx);
-        let len = if long { rng.range(96, 161) } else { rng.range(3, 10) };
+        let len = if long {
+            prompt_len(&mut rng, 96, 161, pareto_alpha)
+        } else {
+            prompt_len(&mut rng, 3, 10, pareto_alpha)
+        };
         let tokens: Vec<u32> = (0..len).map(|_| rng.range(3, 120) as u32).collect();
         let budget = if long { rng.range(1, 4) } else { rng.range(1, max_new.max(1) + 1) };
         Request::Generate { tokens, max_new: budget }
     } else {
-        let len = rng.range(3, 16);
+        let len = prompt_len(&mut rng, 3, 16, pareto_alpha);
         let tokens: Vec<u32> = (0..len).map(|_| rng.range(3, 120) as u32).collect();
         Request::Generate { tokens, max_new: rng.range(1, max_new.max(1) + 1) }
     }
@@ -324,6 +519,9 @@ fn start_core(cfg: &LoadgenConfig) -> Result<(ServerCore, &'static str)> {
         replicas: cfg.replicas,
         queue_cap: cfg.queue_cap,
         max_wait: cfg.max_wait,
+        tenants: cfg.tenants.count,
+        tenant_weights: cfg.tenant_weights.clone(),
+        tenant_quota: cfg.tenant_quota,
         ..Default::default()
     };
     // Chaos handles are created OUTSIDE the factories so that a rebuilt
@@ -372,6 +570,229 @@ fn start_core(cfg: &LoadgenConfig) -> Result<(ServerCore, &'static str)> {
     }
 }
 
+// -------------------------------------------------------------- wire path
+
+/// Shared wire-path accumulators for one run.
+struct WireAcc {
+    transcript: AtomicU64,
+    chunks: AtomicU64,
+}
+
+fn fnv(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+/// Digest of one terminal reply, XOR-folded into the run's transcript
+/// hash. Buffered `Generate` and streamed `End` replies digest their
+/// token list identically, so a streamed run pins to its buffered twin.
+pub fn digest_reply(idx: usize, rep: &WireReply) -> u64 {
+    let mut h = fnv(0xcbf2_9ce4_8422_2325, &(idx as u64).to_le_bytes());
+    match rep {
+        WireReply::Score { score } => {
+            h = fnv(h, &[1]);
+            h = fnv(h, &score.to_bits().to_le_bytes());
+        }
+        WireReply::Generate { tokens, .. } | WireReply::End { tokens, .. } => {
+            h = fnv(h, &[2]);
+            for t in tokens {
+                h = fnv(h, &t.to_le_bytes());
+            }
+        }
+        WireReply::Error { message } => {
+            h = fnv(h, &[3]);
+            h = fnv(h, message.as_bytes());
+        }
+        WireReply::Blob(_) | WireReply::Chunk { .. } => {}
+    }
+    h
+}
+
+/// The token-level wire twin of an engine request (what a remote client
+/// speaking the codec would send for this synthesized request).
+fn to_wire_request(req: &Request, tenant: u32, stream: bool) -> WireRequest {
+    match req {
+        Request::Score { tokens, span } => WireRequest::ScoreTokens {
+            tokens: tokens.clone(),
+            span: (span.0 as u32, span.1 as u32),
+            tenant,
+        },
+        Request::Generate { tokens, max_new } => WireRequest::GenerateTokens {
+            tokens: tokens.clone(),
+            max_new: *max_new as u32,
+            tenant,
+            stream,
+        },
+    }
+}
+
+fn wire_request_to_parts(w: WireRequest) -> (Request, u32, bool) {
+    match w {
+        WireRequest::ScoreTokens { tokens, span, tenant } => {
+            let span = (span.0 as usize, span.1 as usize);
+            (Request::Score { tokens, span }, tenant, false)
+        }
+        WireRequest::GenerateTokens { tokens, max_new, tenant, stream } => {
+            (Request::Generate { tokens, max_new: max_new as usize }, tenant, stream)
+        }
+        other => panic!("loadgen synthesizes token-level requests only, got {other:?}"),
+    }
+}
+
+/// The wire reply the server would frame for this terminal response —
+/// streamed generates terminate with an `End` frame carrying the PR 7
+/// outcome taxonomy, buffered ones with a plain reply.
+fn response_to_wire(resp: &Response, streamed: bool) -> WireReply {
+    match resp {
+        Response::Score { score } => WireReply::Score { score: *score },
+        Response::Generate { tokens } if streamed => WireReply::End {
+            outcome: StreamOutcome::End,
+            tokens: tokens.clone(),
+            text: String::new(),
+        },
+        Response::Generate { tokens } => {
+            WireReply::Generate { tokens: tokens.clone(), text: String::new() }
+        }
+        Response::Error { message } if streamed => WireReply::End {
+            outcome: if message == ERR_TIMEOUT {
+                StreamOutcome::Timeout
+            } else {
+                StreamOutcome::ReplicaFailed
+            },
+            tokens: Vec::new(),
+            text: String::new(),
+        },
+        Response::Error { message } => WireReply::Error { message: message.clone() },
+    }
+}
+
+/// Encode → decode through the codec, panicking on any mismatch: the
+/// loadgen wire path is a correctness harness, so a lossy roundtrip is a
+/// codec bug worth a loud failure, not a skipped sample.
+fn roundtrip_request(c: &dyn Codec, req: &WireRequest) -> WireRequest {
+    let mut buf = Vec::new();
+    c.encode_request(req, &mut buf);
+    match c.decode_request(&buf) {
+        Ok(Some((decoded, used))) if used == buf.len() => decoded,
+        other => panic!("codec {} failed to roundtrip a request: {other:?}", c.name()),
+    }
+}
+
+fn roundtrip_reply(c: &dyn Codec, rep: &WireReply) -> WireReply {
+    let mut buf = Vec::new();
+    c.encode_reply(rep, &mut buf);
+    match c.decode_reply(&buf) {
+        Ok(Some((decoded, used))) if used == buf.len() => decoded,
+        other => panic!("codec {} failed to roundtrip a reply: {other:?}", c.name()),
+    }
+}
+
+/// One submitted request awaiting its terminal reply (and, for streamed
+/// generates, draining its per-token lane).
+struct InFlight {
+    idx: usize,
+    t0: Instant,
+    ticket: Ticket,
+    rx: Option<StreamReceiver>,
+}
+
+/// Synthesize request `idx`, optionally roundtrip it through the wire
+/// codec, and submit it with its tenant class + optional stream lane.
+fn launch(
+    handle: &ServerHandle,
+    cfg: &LoadgenConfig,
+    idx: usize,
+    key: Option<u64>,
+) -> Result<InFlight, SubmitError> {
+    let req = make_request_opts(cfg.seed, idx, cfg.mode, cfg.max_new, cfg.pareto_alpha);
+    let tenant = tenant_of(cfg.seed, idx, &cfg.tenants);
+    let stream = cfg.stream && matches!(req, Request::Generate { .. });
+    let (req, tenant, stream) = match cfg.codec {
+        None => (req, tenant, stream),
+        Some(kind) => {
+            let c = kind.codec();
+            wire_request_to_parts(roundtrip_request(c, &to_wire_request(&req, tenant, stream)))
+        }
+    };
+    let (tx, rx) = if stream {
+        let (tx, rx) = stream_channel(LANE_CAP);
+        (Some(tx), Some(rx))
+    } else {
+        (None, None)
+    };
+    let deadline = cfg.request_timeout.map(|d| Instant::now() + d);
+    let t0 = Instant::now();
+    let ticket = handle.submit_opts(req, SubmitOpts { key, deadline, tenant, stream: tx })?;
+    Ok(InFlight { idx, t0, ticket, rx })
+}
+
+/// Wait out one in-flight request: drain its stream lane (chunk frames
+/// roundtrip through the codec too), fold the terminal reply into the
+/// transcript hash, and record its class latency. The lane closes by
+/// sender drop just before the terminal reply, so this always returns.
+fn collect(f: InFlight, cfg: &LoadgenConfig, classes: Option<&Mutex<ClassLatency>>, w: &WireAcc) {
+    let codec = cfg.codec.map(|k| k.codec());
+    if let Some(rx) = &f.rx {
+        let mut chunks = 0u64;
+        loop {
+            match rx.poll(Duration::from_millis(10)) {
+                StreamPoll::Token(tok) => {
+                    if let Some(c) = codec {
+                        roundtrip_reply(c, &WireReply::Chunk { index: chunks as u32, token: tok });
+                    }
+                    chunks += 1;
+                }
+                StreamPoll::Idle => {}
+                StreamPoll::Closed => break,
+            }
+        }
+        w.chunks.fetch_add(chunks, Ordering::Relaxed);
+    }
+    let Some(resp) = f.ticket.recv() else {
+        return; // core torn down ungracefully; no terminal reply to pin
+    };
+    let rep = response_to_wire(&resp, f.rx.is_some());
+    let rep = match codec {
+        Some(c) => roundtrip_reply(c, &rep),
+        None => rep,
+    };
+    w.transcript.fetch_xor(digest_reply(f.idx, &rep), Ordering::Relaxed);
+    if let Some(c) = classes {
+        c.lock().unwrap().record(longmix_is_long(f.idx), f.t0.elapsed());
+    }
+}
+
+/// Arrival-time offsets for an open-loop run. Without `--burst` this is
+/// the exact fixed-interval schedule earlier revisions used; with it,
+/// arrivals follow the seeded two-state MMPP of [`BurstPlan`].
+pub fn arrival_offsets(cfg: &LoadgenConfig, n: usize) -> Vec<Duration> {
+    let interval = Duration::from_secs_f64(1.0 / cfg.rate_rps);
+    let Some(b) = cfg.burst else {
+        return (0..n).map(|i| interval.mul_f64(i as f64)).collect();
+    };
+    fn exp_s(rng: &mut Rng, mean_s: f64) -> f64 {
+        -mean_s.max(1e-6) * (1.0 - rng.f64()).ln()
+    }
+    let mut rng = Rng::new(cfg.seed ^ 0xb417_57a1);
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    let mut on = true;
+    let mut phase_end = exp_s(&mut rng, b.on.as_secs_f64());
+    while out.len() < n {
+        let rate = if on { cfg.rate_rps * b.rate_mult } else { cfg.rate_rps };
+        t += exp_s(&mut rng, 1.0 / rate.max(1e-9));
+        while t > phase_end {
+            on = !on;
+            let mean = if on { b.on } else { b.off };
+            phase_end += exp_s(&mut rng, mean.as_secs_f64());
+        }
+        out.push(Duration::from_secs_f64(t));
+    }
+    out
+}
+
 /// Run the generator to completion and return the report. The server-side
 /// histogram provides the latency distribution (submit → terminal reply).
 pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
@@ -386,11 +807,12 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     // Client-side per-class split, longmix only (keeps every other mode's
     // JSON — and the sweep schema old consumers parse — unchanged).
     let classes = (cfg.mode == Mode::LongMix).then(|| Mutex::new(ClassLatency::default()));
+    let wire = WireAcc { transcript: AtomicU64::new(0), chunks: AtomicU64::new(0) };
     let t0 = Instant::now();
     if cfg.rate_rps > 0.0 {
-        run_open_loop(&core, cfg, classes.as_ref());
+        run_open_loop(&core, cfg, classes.as_ref(), &wire);
     } else {
-        run_closed_loop(&core, cfg, classes.as_ref());
+        run_closed_loop(&core, cfg, classes.as_ref(), &wire);
     }
     let wall_s = t0.elapsed().as_secs_f64();
     // Shutdown joins the replica threads, whose TLS sinks flush on exit,
@@ -406,10 +828,20 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         backend_name,
         classes: classes.map(|m| m.into_inner().unwrap()),
         phases: trace::snapshot(),
+        tenant_plan: cfg.tenants.clone(),
+        dispatch_weights: normalized_weights(&cfg.tenant_weights, cfg.tenants.count),
+        codec_name: cfg.codec.map(|k| k.as_str()).unwrap_or("direct"),
+        stream_chunks: wire.chunks.load(Ordering::Relaxed),
+        transcript_hash: wire.transcript.load(Ordering::Relaxed),
     })
 }
 
-fn run_closed_loop(core: &ServerCore, cfg: &LoadgenConfig, classes: Option<&Mutex<ClassLatency>>) {
+fn run_closed_loop(
+    core: &ServerCore,
+    cfg: &LoadgenConfig,
+    classes: Option<&Mutex<ClassLatency>>,
+    wire: &WireAcc,
+) {
     let next = Arc::new(AtomicUsize::new(0));
     std::thread::scope(|scope| {
         for client in 0..cfg.concurrency.max(1) {
@@ -420,17 +852,9 @@ fn run_closed_loop(core: &ServerCore, cfg: &LoadgenConfig, classes: Option<&Mute
                 if idx >= cfg.max_requests {
                     break;
                 }
-                let req = make_request(cfg.seed, idx, cfg.mode, cfg.max_new);
-                let deadline = cfg.request_timeout.map(|d| Instant::now() + d);
-                let t_req = Instant::now();
                 // Session affinity: one client = one session key.
-                match handle.submit_with(Some(client as u64), req, deadline) {
-                    Ok(ticket) => {
-                        let _ = ticket.recv(); // one in flight per client
-                        if let Some(c) = classes {
-                            c.lock().unwrap().record(longmix_is_long(idx), t_req.elapsed());
-                        }
-                    }
+                match launch(&handle, cfg, idx, Some(client as u64)) {
+                    Ok(f) => collect(f, cfg, classes, wire), // one in flight per client
                     Err(SubmitError::Overloaded { .. }) => {} // shed; counted server-side
                     Err(SubmitError::Closed) => break,
                 }
@@ -439,43 +863,44 @@ fn run_closed_loop(core: &ServerCore, cfg: &LoadgenConfig, classes: Option<&Mute
     });
 }
 
-fn run_open_loop(core: &ServerCore, cfg: &LoadgenConfig, classes: Option<&Mutex<ClassLatency>>) {
-    let interval = Duration::from_secs_f64(1.0 / cfg.rate_rps);
+fn run_open_loop(
+    core: &ServerCore,
+    cfg: &LoadgenConfig,
+    classes: Option<&Mutex<ClassLatency>>,
+    wire: &WireAcc,
+) {
+    let offsets = arrival_offsets(cfg, cfg.max_requests);
+    let handle = core.handle();
     let start = Instant::now();
     std::thread::scope(|scope| {
-        let mut tickets: Vec<Ticket> = Vec::with_capacity(cfg.max_requests);
+        let mut pending: Vec<InFlight> = Vec::with_capacity(cfg.max_requests);
         for idx in 0..cfg.max_requests {
-            let due = start + interval.mul_f64(idx as f64);
+            let due = start + offsets[idx];
             let now = Instant::now();
             if due > now {
                 std::thread::sleep(due - now);
             }
-            let req = make_request(cfg.seed, idx, cfg.mode, cfg.max_new);
-            let deadline = cfg.request_timeout.map(|d| Instant::now() + d);
-            let t_req = Instant::now();
-            match core.submit_with(None, req, deadline) {
-                Ok(t) => {
-                    if let Some(c) = classes {
+            match launch(&handle, cfg, idx, None) {
+                Ok(f) => {
+                    if classes.is_some() {
                         // Per-ticket collector thread: recv the moment the
                         // reply lands, so the class histogram records true
                         // submit -> terminal latency (draining at the end
                         // would overcount for early finishers). Bounded by
                         // max_requests; longmix runs only.
-                        let long = longmix_is_long(idx);
-                        scope.spawn(move || {
-                            let _ = t.recv();
-                            c.lock().unwrap().record(long, t_req.elapsed());
-                        });
+                        scope.spawn(move || collect(f, cfg, classes, wire));
                     } else {
-                        tickets.push(t);
+                        pending.push(f);
                     }
                 }
                 Err(SubmitError::Overloaded { .. }) => {} // shed; counted server-side
                 Err(SubmitError::Closed) => break,
             }
         }
-        for t in &tickets {
-            let _ = t.recv();
+        // Streamed lanes hold up to LANE_CAP tokens, so draining after
+        // the arrival loop loses no chunks for max_new <= LANE_CAP.
+        for f in pending {
+            collect(f, cfg, classes, wire);
         }
     });
 }
@@ -547,6 +972,9 @@ pub fn sweep_json(cfg: &LoadgenConfig, points: &[SweepPoint]) -> Json {
         e.insert("failure_rate", p.report.stats.failure_rate().into());
         e.insert("restarts", (p.report.stats.restarts as f64).into());
         e.insert("retried", (p.report.stats.retried as f64).into());
+        e.insert("stream_chunks", (p.report.stream_chunks as f64).into());
+        e.insert("transcript_hash", format!("{:016x}", p.report.transcript_hash).into());
+        e.insert("tenants", tenants_json(&p.report.stats.tenants, &p.report.dispatch_weights));
         if let Some(c) = &p.report.classes {
             e.insert("classes", c.to_json());
         }
@@ -588,6 +1016,13 @@ pub fn cmd_loadgen(rest: Vec<String>) -> Result<()> {
         OptSpec { name: "method", takes_value: true, default: Some("S-PTS"), help: "method (artifacts/native backends)" },
         OptSpec { name: "request-timeout-ms", takes_value: true, default: Some("0"), help: "per-request deadline (ms, 0 = none)" },
         OptSpec { name: "chaos", takes_value: true, default: Some(""), help: "fault injection: integer seed or 'panic@N;err@N;stall@N:D' spec ('' = off)" },
+        OptSpec { name: "tenants", takes_value: true, default: Some("1"), help: "tenant classes 'k[:w1,..,wk]' (weights = traffic mix, default equal)" },
+        OptSpec { name: "tenant-weights", takes_value: true, default: Some(""), help: "server DRR dispatch weights 'w1,..,wk' ('' = equal)" },
+        OptSpec { name: "tenant-quota", takes_value: true, default: Some("0"), help: "per-tenant in-flight quota per replica (0 = share queue cap)" },
+        OptSpec { name: "burst", takes_value: true, default: Some(""), help: "MMPP open-loop arrivals 'on_ms,off_ms,rate_mult' ('' = fixed interval)" },
+        OptSpec { name: "pareto", takes_value: true, default: Some("0"), help: "bounded-Pareto prompt-length shape alpha (0 = uniform)" },
+        OptSpec { name: "codec", takes_value: true, default: Some(""), help: "roundtrip the wire codec in-process: json | binary ('' = off)" },
+        OptSpec { name: "stream", takes_value: false, default: None, help: "streamed generates: per-token lanes, chunk frames counted client-side" },
         OptSpec { name: "sweep", takes_value: true, default: Some(""), help: "open-loop rate grid 'r1,r2,...' (req/s)" },
         OptSpec { name: "sweep-out", takes_value: true, default: Some("BENCH_serving_sweep.json"), help: "sweep report path" },
         OptSpec { name: "out", takes_value: true, default: Some("BENCH_serving.json"), help: "report path ('' = skip)" },
@@ -643,9 +1078,35 @@ pub fn cmd_loadgen(rest: Vec<String>) -> Result<()> {
             if s.is_empty() { None } else { Some(ChaosArg::parse(&s)?) }
         },
         backend,
+        tenants: parse_tenant_plan(&a.get("tenants"))?,
+        tenant_weights: super::serve::parse_weights(&a.get("tenant-weights"))?,
+        tenant_quota: a.get_usize("tenant-quota")?,
+        burst: {
+            let s = a.get("burst");
+            if s.is_empty() { None } else { Some(parse_burst(&s)?) }
+        },
+        pareto_alpha: a.get_f64("pareto")?,
+        codec: {
+            let s = a.get("codec");
+            if s.is_empty() {
+                None
+            } else {
+                Some(CodecKind::parse(&s).ok_or_else(|| {
+                    anyhow::anyhow!("unknown --codec '{s}' (json, binary)")
+                })?)
+            }
+        },
+        stream: a.flag("stream"),
     };
     if let Some(c) = &cfg.chaos {
         println!("loadgen: chaos enabled ({})", c.describe());
+    }
+    if cfg.tenants.count > 1 {
+        println!("loadgen: {} tenants, traffic mix {:?}", cfg.tenants.count, cfg.tenants.mix);
+    }
+    if let Some(k) = cfg.codec {
+        let streamed = if cfg.stream { " (streamed generates)" } else { "" };
+        println!("loadgen: wire codec {}{streamed}", k.as_str());
     }
     let trace_path = a.get("trace");
     if !trace_path.is_empty() {
@@ -940,6 +1401,165 @@ mod tests {
             let v = j.get(key).and_then(|x| x.as_f64()).unwrap();
             assert!((0.0..=1.0).contains(&v), "{key} = {v}");
         }
+    }
+
+    #[test]
+    fn tenant_plan_and_burst_parse() {
+        let p = parse_tenant_plan("2:10,1").unwrap();
+        assert_eq!((p.count, p.mix), (2, vec![10, 1]));
+        let p = parse_tenant_plan("3").unwrap();
+        assert_eq!((p.count, p.mix), (3, vec![1, 1, 1]));
+        assert!(parse_tenant_plan("0").is_err());
+        assert!(parse_tenant_plan("2:1").is_err(), "mix length must match count");
+        assert!(parse_tenant_plan("2:1,0").is_err(), "mix weights must be positive");
+        let b = parse_burst("5,20,8.0").unwrap();
+        assert_eq!(b.on, Duration::from_millis(5));
+        assert_eq!(b.off, Duration::from_millis(20));
+        assert!((b.rate_mult - 8.0).abs() < 1e-12);
+        assert!(parse_burst("5,20").is_err());
+        assert!(parse_burst("0,20,2").is_err());
+        assert!(parse_burst("5,20,0").is_err());
+    }
+
+    #[test]
+    fn tenant_assignment_is_deterministic_and_follows_mix() {
+        let plan = parse_tenant_plan("2:10,1").unwrap();
+        let mut counts = [0usize; 2];
+        for idx in 0..2200 {
+            let t = tenant_of(11, idx, &plan);
+            assert_eq!(t, tenant_of(11, idx, &plan));
+            counts[t as usize] += 1;
+        }
+        // 10:1 mix: tenant 0 gets ~10/11 of the traffic.
+        let ratio = counts[0] as f64 / counts[1].max(1) as f64;
+        assert!((5.0..=20.0).contains(&ratio), "mix ratio {ratio} (counts {counts:?})");
+        // Single tenant always maps to 0.
+        assert_eq!(tenant_of(11, 123, &TenantPlan::default()), 0);
+    }
+
+    #[test]
+    fn pareto_lengths_stay_bounded_and_skew_short() {
+        let mut uni_sum = 0usize;
+        let mut par_sum = 0usize;
+        for idx in 0..400 {
+            let (a, b) = (
+                make_request_opts(5, idx, Mode::Score, 8, 1.2),
+                make_request_opts(5, idx, Mode::Score, 8, 1.2),
+            );
+            assert_eq!(a, b, "pareto synthesis is deterministic");
+            let Request::Score { tokens, span: (s, e) } = a else { unreachable!() };
+            assert!((4..24).contains(&tokens.len()), "len {}", tokens.len());
+            assert!(s >= 1 && s < e && e <= tokens.len());
+            par_sum += tokens.len();
+            let Request::Score { tokens, .. } = make_request_opts(5, idx, Mode::Score, 8, 0.0)
+            else {
+                unreachable!()
+            };
+            uni_sum += tokens.len();
+        }
+        // Heavy tail toward the minimum: the Pareto mean sits well below
+        // the uniform mean over the same support.
+        assert!(par_sum < uni_sum, "pareto {par_sum} >= uniform {uni_sum}");
+    }
+
+    #[test]
+    fn burst_offsets_are_monotone_and_seeded() {
+        let cfg = LoadgenConfig {
+            rate_rps: 1000.0,
+            burst: Some(parse_burst("5,10,6").unwrap()),
+            ..Default::default()
+        };
+        let a = arrival_offsets(&cfg, 64);
+        let b = arrival_offsets(&cfg, 64);
+        assert_eq!(a, b, "burst schedule is seeded-deterministic");
+        assert_eq!(a.len(), 64);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "offsets are non-decreasing");
+        // Without burst the schedule is the exact fixed-interval grid.
+        let fixed = arrival_offsets(&LoadgenConfig { rate_rps: 1000.0, ..Default::default() }, 4);
+        assert_eq!(fixed[2], Duration::from_millis(2));
+    }
+
+    #[test]
+    fn codec_roundtrip_runs_match_direct_transcript() {
+        let base = LoadgenConfig {
+            replicas: 1,
+            queue_cap: 64,
+            max_requests: 32,
+            concurrency: 4,
+            max_new: 4,
+            backend: BackendChoice::Synthetic { batch: 4, forward_cost: Duration::ZERO },
+            ..Default::default()
+        };
+        let direct = run(&base).unwrap();
+        assert_eq!(direct.stats.errors, 0);
+        assert_eq!(direct.codec_name, "direct");
+        assert_ne!(direct.transcript_hash, 0, "a served run hashes its replies");
+        for kind in [CodecKind::Json, CodecKind::Binary] {
+            let cfg = LoadgenConfig { codec: Some(kind), ..base.clone() };
+            let report = run(&cfg).unwrap();
+            assert_eq!(report.stats.served, direct.stats.served);
+            assert_eq!(report.stats.errors, 0);
+            assert_eq!(
+                report.transcript_hash, direct.transcript_hash,
+                "codec {} changed the reply transcript",
+                kind.as_str()
+            );
+        }
+    }
+
+    #[test]
+    fn streamed_run_counts_chunks_and_matches_buffered_transcript() {
+        let base = LoadgenConfig {
+            replicas: 1,
+            queue_cap: 64,
+            max_requests: 24,
+            concurrency: 4,
+            max_new: 4,
+            mode: Mode::Generate,
+            codec: Some(CodecKind::Binary),
+            backend: BackendChoice::Synthetic { batch: 4, forward_cost: Duration::ZERO },
+            ..Default::default()
+        };
+        let buffered = run(&base).unwrap();
+        assert_eq!(buffered.stream_chunks, 0);
+        let streamed = run(&LoadgenConfig { stream: true, ..base.clone() }).unwrap();
+        assert_eq!(streamed.stats.errors, 0);
+        assert!(streamed.stream_chunks > 0, "streamed run observed no chunk frames");
+        // Buffered Generate and streamed End digest the same token list,
+        // so the two runs pin to one transcript hash.
+        assert_eq!(streamed.transcript_hash, buffered.transcript_hash);
+    }
+
+    #[test]
+    fn multi_tenant_run_reports_per_tenant_block() {
+        let cfg = LoadgenConfig {
+            replicas: 1,
+            queue_cap: 64,
+            max_requests: 60,
+            concurrency: 6,
+            max_new: 4,
+            tenants: parse_tenant_plan("2:3,1").unwrap(),
+            backend: BackendChoice::Synthetic { batch: 4, forward_cost: Duration::ZERO },
+            ..Default::default()
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.stats.served + report.stats.rejected, 60);
+        assert_eq!(report.stats.tenants.len(), 2);
+        let submitted: u64 = report.stats.tenants.iter().map(|t| t.submitted).sum();
+        let shed: u64 = report.stats.tenants.iter().map(|t| t.shed).sum();
+        assert_eq!(submitted, report.stats.submitted);
+        assert_eq!(shed, report.stats.rejected);
+        assert!(report.stats.tenants.iter().all(|t| t.submitted > 0), "both tenants saw traffic");
+        let j = report.to_json();
+        let ten = j.get("tenants").expect("tenants block");
+        assert_eq!(ten.get("count").and_then(|x| x.as_f64()), Some(2.0));
+        let per = ten.get("per_tenant").and_then(|p| p.as_arr()).unwrap();
+        assert_eq!(per.len(), 2);
+        for e in per {
+            assert!(e.get("queue_wait_ms").and_then(|l| l.get("p95")).is_some());
+            assert!(e.get("submitted").and_then(|x| x.as_f64()).unwrap() > 0.0);
+        }
+        assert_eq!(ten.get("weights").and_then(|w| w.as_arr()).map(|w| w.len()), Some(2));
     }
 
     #[test]

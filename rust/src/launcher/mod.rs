@@ -64,12 +64,15 @@ fn top_usage() -> String {
                  table14 serving)\n\
        serve     TCP scoring/generation server (multi-replica; see\n\
                  examples/serving_demo.rs; --backend coordinator|native;\n\
-                 per-phase timing behind the stats op, --trace exports\n\
-                 Chrome trace-event JSON)\n\
+                 --codec json|binary wire protocol with streamed-token\n\
+                 replies and per-tenant weighted-fair dispatch; per-phase\n\
+                 timing behind the stats op, --trace exports Chrome\n\
+                 trace-event JSON)\n\
        loadgen   closed/open-loop load generator against a ServerCore;\n\
                  emits BENCH_serving.json with a phases block (--sweep\n\
-                 emits BENCH_serving_sweep.json; --trace exports Chrome\n\
-                 trace-event JSON)\n\
+                 emits BENCH_serving_sweep.json; --codec/--stream wire\n\
+                 roundtrips, --tenants/--burst/--pareto traffic shaping;\n\
+                 --trace exports Chrome trace-event JSON)\n\
        decode    native KV-cached decode engine (synthetic or artifacts;\n\
                  --check pins KV == full-context; --trace exports Chrome\n\
                  trace-event JSON)\n"

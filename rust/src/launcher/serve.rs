@@ -1,8 +1,9 @@
 //! `nmsparse serve` — the TCP front-end over the multi-replica
 //! [`ServerCore`].
 //!
-//! Line-delimited JSON over TCP (no HTTP stack in the offline image — the
-//! protocol is deliberately minimal):
+//! The wire format is pluggable (`--codec`, DESIGN.md §2.15). The default
+//! is the original line-delimited JSON protocol (no HTTP stack in the
+//! offline image — the protocol is deliberately minimal):
 //!
 //! ```text
 //! -> {"op":"ping"}
@@ -15,9 +16,19 @@
 //! <- {"ok":true,"served":412,"rejected":3,"latency_ms":{"p50":...},...}
 //! ```
 //!
+//! `--codec binary` speaks the length-prefixed compact framing instead
+//! (`wire::binary`): the client opens with a 6-byte versioned hello, and
+//! a `generate` with the stream flag receives incremental per-token
+//! `chunk` frames before the terminal `end` frame. Both codecs implement
+//! `wire::Codec`; this file never branches on the encoding beyond the
+//! connect handshake. A malformed frame is answered with an error frame
+//! and skipped — the connection survives.
+//!
 //! When a replica's admission queue is full the request is shed
 //! immediately with `{"ok":false,"error":"overloaded"}` — clients retry
-//! with backoff instead of stacking unbounded work.
+//! with backoff instead of stacking unbounded work. `--tenants K` splits
+//! admission and dispatch into weighted-fair tenant classes (requests
+//! carry a `tenant` field; see `coordinator/server.rs`).
 //!
 //! `--request-timeout-ms` attaches a deadline to every engine request:
 //! the core sheds expired work with `{"ok":false,"error":"timeout"}`,
@@ -27,7 +38,7 @@
 //! terminally with `replica_failed` and rebuilds the replica (see
 //! DESIGN.md §2.12).
 //!
-//! Architecture: this file owns only sockets and JSON. Each accepted
+//! Architecture: this file owns only sockets and codecs. Each accepted
 //! connection gets an IO thread holding a [`ServerHandle`]; requests
 //! route session-affine (connection id as the key) into the engine
 //! replicas, which batch by deadline and record per-request latency (see
@@ -39,15 +50,17 @@
 use crate::coordinator::methods::MethodConfig;
 use crate::coordinator::server::{
     CoordinatorBackend, NativeBackend, Request, Response, ServerConfig, ServerCore, ServerHandle,
-    SubmitError, ERR_TIMEOUT,
+    SubmitError, SubmitOpts, ERR_TIMEOUT,
 };
 use crate::sparsity::Pattern;
 use crate::synthlang::vocab::{Vocab, EOS};
 use crate::util::cli::{usage, Args, OptSpec};
-use crate::util::json::{self, Json};
+use crate::util::json::Json;
 use crate::util::trace::{self, TraceLevel};
+use crate::wire::{binary, stream_channel, Codec, CodecKind, StreamOutcome, StreamPoll};
+use crate::wire::{WireReply, WireRequest, LANE_CAP};
 use anyhow::{Context, Result};
-use std::io::{BufRead, BufReader, Write};
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -70,6 +83,10 @@ pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
         OptSpec { name: "max-wait-ms", takes_value: true, default: Some("5"), help: "batch deadline (ms)" },
         OptSpec { name: "max-requests", takes_value: true, default: Some("0"), help: "exit after N requests (0 = run forever)" },
         OptSpec { name: "request-timeout-ms", takes_value: true, default: Some("0"), help: "per-request deadline (ms, 0 = none)" },
+        OptSpec { name: "codec", takes_value: true, default: Some("json"), help: "wire codec: json (line-delimited, historical) | binary (length-prefixed frames)" },
+        OptSpec { name: "tenants", takes_value: true, default: Some("1"), help: "tenant classes for weighted-fair dispatch" },
+        OptSpec { name: "tenant-weights", takes_value: true, default: Some(""), help: "comma-separated DRR weights (empty = equal)" },
+        OptSpec { name: "tenant-quota", takes_value: true, default: Some("0"), help: "per-tenant in-flight quota per replica (0 = share queue-cap)" },
         OptSpec { name: "trace", takes_value: true, default: Some(""), help: "write Chrome trace-event JSON (Perfetto-loadable) on exit" },
         OptSpec { name: "help", takes_value: false, default: None, help: "show help" },
     ];
@@ -101,6 +118,8 @@ pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
         let ms = a.get_u64("request-timeout-ms")?;
         (ms > 0).then(|| Duration::from_millis(ms))
     };
+    let codec_kind = CodecKind::parse(&a.get("codec"))
+        .with_context(|| format!("unknown --codec '{}' (json, binary)", a.get("codec")))?;
     let trace_path = a.get("trace");
     // Metrics-level aggregation is always on for serve — the stats op's
     // `phases` block costs per-thread counters, not span events. The
@@ -114,8 +133,13 @@ pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
         replicas: a.get_usize("replicas")?,
         queue_cap: a.get_usize("queue-cap")?,
         max_wait: Duration::from_millis(a.get_u64("max-wait-ms")?),
+        tenants: a.get_usize("tenants")?,
+        tenant_weights: parse_weights(&a.get("tenant-weights"))?,
+        tenant_quota: a.get_usize("tenant-quota")?,
         ..Default::default()
     };
+    let queue_cap = server_cfg.queue_cap.max(1);
+    let tenants = server_cfg.tenants.max(1);
     // Each replica thread builds its own backend (PJRT handles are not
     // Send; native engines simply stay per-thread); start() blocks until
     // every engine is ready.
@@ -146,20 +170,29 @@ pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
     let listener = TcpListener::bind(a.get("addr")).context("binding server address")?;
     listener.set_nonblocking(true)?;
     println!(
-        "serving {} / {} on {} ({} replica(s), queue cap {}, {} backend)",
+        "serving {} / {} on {} ({} replica(s), queue cap {}, {} backend, {} codec)",
         cfg.variant_key,
         cfg.id,
         a.get("addr"),
         core.replicas(),
-        server_cfg.queue_cap.max(1),
+        queue_cap,
         backend_kind,
+        codec_kind.as_str(),
     );
 
     // Requests answered at this protocol layer (ping/stats/parse errors);
     // score/generate outcomes are counted inside the core.
     let extra = Arc::new(AtomicU64::new(0));
-    let banner = Arc::new((cfg.variant_key.clone(), cfg.id.clone()));
-    let started = Instant::now();
+    let ctx = Arc::new(ConnCtx {
+        handle: core.handle(),
+        vocab: Arc::clone(&vocab),
+        extra: Arc::clone(&extra),
+        banner: (cfg.variant_key.clone(), cfg.id.clone()),
+        request_timeout,
+        started: Instant::now(),
+        codec: codec_kind,
+        tenants,
+    });
     let mut conn_seq = 0u64;
     loop {
         // The accept path may poll; the engine replicas never do — they
@@ -167,16 +200,7 @@ pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
         match listener.accept() {
             Ok((stream, _)) => {
                 conn_seq += 1;
-                spawn_io_thread(
-                    stream,
-                    core.handle(),
-                    Arc::clone(&vocab),
-                    Arc::clone(&extra),
-                    Arc::clone(&banner),
-                    conn_seq,
-                    request_timeout,
-                    started,
-                );
+                spawn_io_thread(stream, Arc::clone(&ctx), conn_seq);
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(5));
@@ -204,73 +228,65 @@ pub fn cmd_serve(rest: Vec<String>) -> Result<()> {
     Ok(())
 }
 
-/// One parsed protocol line.
-enum ClientOp {
-    Ping,
-    Stats,
-    Engine(Request),
-}
-
-fn parse_request(line: &str, vocab: &Vocab) -> Result<ClientOp> {
-    let j = json::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
-    let op = j.req("op")?.as_str().context("op")?;
-    match op {
-        "ping" => Ok(ClientOp::Ping),
-        "stats" => Ok(ClientOp::Stats),
-        "score" => {
-            let ctx = vocab.encode(j.req("text")?.as_str().context("text")?)?;
-            let choice = vocab.encode(j.req("choice")?.as_str().context("choice")?)?;
-            anyhow::ensure!(!ctx.is_empty() && !choice.is_empty(), "empty text/choice");
-            let mut tokens = ctx.clone();
-            let start = tokens.len();
-            tokens.extend(&choice);
-            Ok(ClientOp::Engine(Request::Score { span: (start, tokens.len()), tokens }))
-        }
-        "generate" => {
-            let tokens = vocab.encode(j.req("text")?.as_str().context("text")?)?;
-            anyhow::ensure!(!tokens.is_empty(), "empty prompt");
-            let max_new = j
-                .get("max_new")
-                .and_then(|x| x.as_usize())
-                .unwrap_or(12)
-                .clamp(1, 48);
-            Ok(ClientOp::Engine(Request::Generate { tokens, max_new }))
-        }
-        other => anyhow::bail!("unknown op '{other}'"),
+/// Parse a comma-separated DRR weight list ("10,1"); empty means equal
+/// weights. Shared with `nmsparse loadgen`.
+pub fn parse_weights(s: &str) -> Result<Vec<u32>> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Ok(Vec::new());
     }
+    s.split(',')
+        .map(|w| {
+            let w = w.trim();
+            w.parse::<u32>().map_err(|_| anyhow::anyhow!("bad tenant weight '{w}'"))
+        })
+        .collect()
 }
 
-fn error_reply(message: &str) -> String {
-    let mut r = Json::obj();
-    r.insert("ok", false.into());
-    r.insert("error", message.into());
-    r.dump()
-}
-
-fn response_reply(resp: &Response, vocab: &Vocab) -> String {
-    let mut r = Json::obj();
-    match resp {
-        Response::Score { score } => {
-            r.insert("ok", true.into());
-            r.insert("score", (*score).into());
-        }
-        Response::Generate { tokens } => {
-            r.insert("ok", true.into());
-            r.insert(
-                "tokens",
-                Json::Arr(tokens.iter().map(|t| Json::Num(*t as f64)).collect()),
-            );
-            r.insert("text", vocab.decode(tokens).into());
-        }
-        Response::Error { message } => {
-            r.insert("ok", false.into());
-            r.insert("error", message.as_str().into());
-        }
+/// Map a request's optional tenant field onto a configured class: numeric
+/// ids map directly, names hash (FNV-1a), both reduced mod the class
+/// count. Absent or single-tenant → class 0.
+fn tenant_index(name: Option<&str>, tenants: usize) -> u32 {
+    let Some(name) = name else { return 0 };
+    if tenants <= 1 {
+        return 0;
     }
-    r.dump()
+    let id = match name.parse::<u64>() {
+        Ok(n) => n,
+        Err(_) => {
+            let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+            for b in name.bytes() {
+                h = (h ^ b as u64).wrapping_mul(0x0100_0000_01b3);
+            }
+            h
+        }
+    };
+    (id % tenants as u64) as u32
 }
 
-fn stats_reply(handle: &ServerHandle, started: Instant) -> String {
+/// Everything a connection's IO thread needs, shared across connections.
+struct ConnCtx {
+    handle: ServerHandle,
+    vocab: Arc<Vocab>,
+    extra: Arc<AtomicU64>,
+    /// (variant_key, method id) for the ping banner.
+    banner: (String, String),
+    request_timeout: Option<Duration>,
+    started: Instant,
+    codec: CodecKind,
+    tenants: usize,
+}
+
+fn ping_reply(ctx: &ConnCtx) -> Json {
+    let mut r = Json::obj();
+    r.insert("ok", true.into());
+    r.insert("variant", ctx.banner.0.as_str().into());
+    r.insert("method", ctx.banner.1.as_str().into());
+    r.insert("replicas", (ctx.handle.replicas() as f64).into());
+    r
+}
+
+fn stats_reply(handle: &ServerHandle, started: Instant, tenants: usize) -> Json {
     let s = handle.stats();
     let mut r = Json::obj();
     r.insert("ok", true.into());
@@ -296,7 +312,12 @@ fn stats_reply(handle: &ServerHandle, started: Instant) -> String {
         "depth",
         Json::Arr((0..s.replicas).map(|i| Json::Num(handle.depth(i) as f64)).collect()),
     );
-    r.dump()
+    // Single-tenant servers keep the historical stats shape byte-for-byte;
+    // the tenants block only appears when fairness is actually configured.
+    if tenants > 1 {
+        r.insert("tenants", super::loadgen::tenants_json(&s.tenants, &[]));
+    }
+    r
 }
 
 /// Grace past the core's shed deadline before the IO thread gives up on
@@ -320,89 +341,270 @@ fn write_timeout(request_timeout: Option<Duration>) -> Duration {
     }
 }
 
-/// Per-connection IO thread: read a line, route it, write the reply. The
-/// connection id is the session-affinity key, so one client's decode
-/// sessions stay on one replica. With a request timeout the ticket wait
-/// is bounded (`recv_timeout` with [`reply_grace`] headroom past the
-/// core's own shed deadline) and the socket write is bounded by
-/// [`write_timeout`], so neither a wedged replica nor a stalled client
-/// can pin this thread forever — and both give-up paths count in the
-/// metrics registry instead of dropping silently.
-#[allow(clippy::too_many_arguments)]
-fn spawn_io_thread(
-    stream: TcpStream,
-    handle: ServerHandle,
-    vocab: Arc<Vocab>,
-    extra: Arc<AtomicU64>,
-    banner: Arc<(String, String)>,
-    conn_id: u64,
-    request_timeout: Option<Duration>,
-    started: Instant,
-) {
+/// Per-connection IO thread: decode a request, route it, write the reply
+/// frame(s). The connection id is the session-affinity key, so one
+/// client's decode sessions stay on one replica. With a request timeout
+/// the ticket wait is bounded (`recv_timeout` with [`reply_grace`]
+/// headroom past the core's own shed deadline) and the socket write is
+/// bounded by [`write_timeout`], so neither a wedged replica nor a
+/// stalled client can pin this thread forever — and both give-up paths
+/// count in the metrics registry instead of dropping silently.
+fn spawn_io_thread(stream: TcpStream, ctx: Arc<ConnCtx>, conn_id: u64) {
     std::thread::spawn(move || {
-        stream.set_nonblocking(false).ok();
-        stream.set_write_timeout(Some(write_timeout(request_timeout))).ok();
-        let mut writer = match stream.try_clone() {
-            Ok(w) => w,
-            Err(_) => return,
-        };
-        let reader = BufReader::new(stream);
-        for line in reader.lines() {
-            let Ok(line) = line else { break };
-            if line.trim().is_empty() {
-                continue;
+        let _ = serve_conn(stream, &ctx, conn_id);
+    });
+}
+
+fn serve_conn(stream: TcpStream, ctx: &ConnCtx, conn_id: u64) -> std::io::Result<()> {
+    stream.set_nonblocking(false).ok();
+    stream.set_write_timeout(Some(write_timeout(ctx.request_timeout))).ok();
+    let mut writer = stream.try_clone()?;
+    let mut reader = stream;
+    let codec = ctx.codec.codec();
+    // Binary connections open with a fixed versioned hello; a mismatch is
+    // answered with an error frame and the connection dropped — there is
+    // nothing to resynchronize on before the versions agree.
+    if ctx.codec == CodecKind::Binary {
+        let mut hello = [0u8; binary::HELLO_LEN];
+        reader.read_exact(&mut hello)?;
+        if let Err(message) = binary::check_hello(&hello) {
+            ctx.extra.fetch_add(1, Ordering::Relaxed);
+            trace::counter("wire.bad_hello").inc();
+            write_reply(codec, &WireReply::Error { message }, &mut writer)?;
+            return Ok(());
+        }
+    }
+    let mut buf: Vec<u8> = Vec::with_capacity(4096);
+    let mut chunk = [0u8; 4096];
+    loop {
+        // Serve every whole frame the buffer holds before reading more.
+        let mut pos = 0usize;
+        loop {
+            match codec.decode_request(&buf[pos..]) {
+                Ok(None) => break,
+                Ok(Some((req, used))) => {
+                    pos += used;
+                    handle_request(req, ctx, conn_id, codec, &mut writer)?;
+                }
+                Err(e) => {
+                    // Malformed frame: answer, skip it, keep serving.
+                    pos += e.consumed.min(buf.len() - pos).max(1);
+                    ctx.extra.fetch_add(1, Ordering::Relaxed);
+                    trace::counter("wire.bad_frames").inc();
+                    write_reply(codec, &WireReply::Error { message: e.message }, &mut writer)?;
+                }
             }
-            let reply = match parse_request(&line, &vocab) {
-                Ok(ClientOp::Ping) => {
-                    extra.fetch_add(1, Ordering::Relaxed);
-                    let mut r = Json::obj();
-                    r.insert("ok", true.into());
-                    r.insert("variant", banner.0.as_str().into());
-                    r.insert("method", banner.1.as_str().into());
-                    r.insert("replicas", (handle.replicas() as f64).into());
-                    r.dump()
+        }
+        buf.drain(..pos);
+        let n = reader.read(&mut chunk)?;
+        if n == 0 {
+            return Ok(()); // clean disconnect
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+}
+
+fn write_reply(codec: &dyn Codec, rep: &WireReply, writer: &mut TcpStream) -> std::io::Result<()> {
+    let mut out = Vec::new();
+    codec.encode_reply(rep, &mut out);
+    let res = writer.write_all(&out);
+    if res.is_err() {
+        trace::counter("serve.io_write_errors").inc();
+    }
+    res
+}
+
+fn handle_request(
+    req: WireRequest,
+    ctx: &ConnCtx,
+    conn_id: u64,
+    codec: &dyn Codec,
+    writer: &mut TcpStream,
+) -> std::io::Result<()> {
+    match req {
+        WireRequest::Ping => {
+            ctx.extra.fetch_add(1, Ordering::Relaxed);
+            write_reply(codec, &WireReply::Blob(ping_reply(ctx)), writer)
+        }
+        WireRequest::Stats => {
+            ctx.extra.fetch_add(1, Ordering::Relaxed);
+            let blob = stats_reply(&ctx.handle, ctx.started, ctx.tenants);
+            write_reply(codec, &WireReply::Blob(blob), writer)
+        }
+        WireRequest::Score { text, choice, tenant } => {
+            let tenant = tenant_index(tenant.as_deref(), ctx.tenants);
+            match encode_score(&ctx.vocab, &text, &choice) {
+                Ok(req) => run_buffered(ctx, conn_id, tenant, req, codec, writer),
+                Err(e) => {
+                    ctx.extra.fetch_add(1, Ordering::Relaxed);
+                    write_reply(codec, &WireReply::Error { message: format!("{e:#}") }, writer)
                 }
-                Ok(ClientOp::Stats) => {
-                    extra.fetch_add(1, Ordering::Relaxed);
-                    stats_reply(&handle, started)
-                }
-                Ok(ClientOp::Engine(req)) => {
-                    let deadline = request_timeout.map(|d| Instant::now() + d);
-                    match handle.submit_with(Some(conn_id), req, deadline) {
-                        // One request in flight per connection, like the
-                        // line protocol implies. With a deadline, the
-                        // wait is bounded: the core sheds the request
-                        // shortly after expiry, and the extra headroom
-                        // lets the terminal `timeout` reply arrive first.
-                        Ok(ticket) => {
-                            let got = match deadline {
-                                Some(d) => ticket.recv_timeout(
-                                    d.saturating_duration_since(Instant::now())
-                                        + reply_grace(request_timeout),
-                                ),
-                                None => ticket.recv(),
-                            };
-                            match got {
-                                Some(resp) => response_reply(&resp, &vocab),
-                                None if deadline.is_some() => {
-                                    trace::counter("serve.io_reply_timeout").inc();
-                                    error_reply(ERR_TIMEOUT)
-                                }
-                                None => error_reply(&SubmitError::Closed.to_string()),
-                            }
-                        }
-                        Err(e) => error_reply(&e.to_string()), // "overloaded" / shutdown
+            }
+        }
+        WireRequest::Generate { text, max_new, tenant, stream } => {
+            let tenant = tenant_index(tenant.as_deref(), ctx.tenants);
+            match encode_generate(&ctx.vocab, &text, max_new) {
+                Ok(req) => {
+                    if stream {
+                        run_stream(ctx, conn_id, tenant, req, codec, writer)
+                    } else {
+                        run_buffered(ctx, conn_id, tenant, req, codec, writer)
                     }
                 }
                 Err(e) => {
-                    extra.fetch_add(1, Ordering::Relaxed);
-                    error_reply(&format!("{e:#}"))
+                    ctx.extra.fetch_add(1, Ordering::Relaxed);
+                    write_reply(codec, &WireReply::Error { message: format!("{e:#}") }, writer)
                 }
-            };
-            if writer.write_all(reply.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
-                trace::counter("serve.io_write_errors").inc();
-                break;
             }
         }
-    });
+        WireRequest::ScoreTokens { tokens, span, tenant } => {
+            let tenant = tenant % ctx.tenants.max(1) as u32;
+            let span = (span.0 as usize, span.1 as usize);
+            run_buffered(ctx, conn_id, tenant, Request::Score { tokens, span }, codec, writer)
+        }
+        WireRequest::GenerateTokens { tokens, max_new, tenant, stream } => {
+            let tenant = tenant % ctx.tenants.max(1) as u32;
+            let req = Request::Generate { tokens, max_new: (max_new as usize).clamp(1, 48) };
+            if stream {
+                run_stream(ctx, conn_id, tenant, req, codec, writer)
+            } else {
+                run_buffered(ctx, conn_id, tenant, req, codec, writer)
+            }
+        }
+    }
+}
+
+/// Text-level score → token-level engine request (vocab errors reply as
+/// protocol errors, identical to the historical parse path).
+fn encode_score(vocab: &Vocab, text: &str, choice: &str) -> Result<Request> {
+    let ctx = vocab.encode(text)?;
+    let choice = vocab.encode(choice)?;
+    anyhow::ensure!(!ctx.is_empty() && !choice.is_empty(), "empty text/choice");
+    let mut tokens = ctx.clone();
+    let start = tokens.len();
+    tokens.extend(&choice);
+    Ok(Request::Score { span: (start, tokens.len()), tokens })
+}
+
+fn encode_generate(vocab: &Vocab, text: &str, max_new: Option<usize>) -> Result<Request> {
+    let tokens = vocab.encode(text)?;
+    anyhow::ensure!(!tokens.is_empty(), "empty prompt");
+    let max_new = max_new.unwrap_or(12).clamp(1, 48);
+    Ok(Request::Generate { tokens, max_new })
+}
+
+/// Response -> terminal reply frame for the buffered (non-streamed) path.
+fn buffered_reply(resp: &Response, vocab: &Vocab) -> WireReply {
+    match resp {
+        Response::Score { score } => WireReply::Score { score: *score },
+        Response::Generate { tokens } => {
+            WireReply::Generate { tokens: tokens.clone(), text: vocab.decode(tokens) }
+        }
+        Response::Error { message } => WireReply::Error { message: message.clone() },
+    }
+}
+
+/// Submit one engine request and wait for its single terminal reply.
+/// One request in flight per connection, like the line protocol implies.
+/// With a deadline, the wait is bounded: the core sheds the request
+/// shortly after expiry, and the extra headroom lets the terminal
+/// `timeout` reply arrive first.
+fn run_buffered(
+    ctx: &ConnCtx,
+    conn_id: u64,
+    tenant: u32,
+    req: Request,
+    codec: &dyn Codec,
+    writer: &mut TcpStream,
+) -> std::io::Result<()> {
+    let deadline = ctx.request_timeout.map(|d| Instant::now() + d);
+    let opts = SubmitOpts { key: Some(conn_id), deadline, tenant, stream: None };
+    let rep = match ctx.handle.submit_opts(req, opts) {
+        Ok(ticket) => {
+            let got = match deadline {
+                Some(d) => ticket.recv_timeout(
+                    d.saturating_duration_since(Instant::now()) + reply_grace(ctx.request_timeout),
+                ),
+                None => ticket.recv(),
+            };
+            match got {
+                Some(resp) => buffered_reply(&resp, &ctx.vocab),
+                None if deadline.is_some() => {
+                    trace::counter("serve.io_reply_timeout").inc();
+                    WireReply::Error { message: ERR_TIMEOUT.into() }
+                }
+                None => WireReply::Error { message: SubmitError::Closed.to_string() },
+            }
+        }
+        Err(e) => WireReply::Error { message: e.to_string() }, // "overloaded" / shutdown
+    };
+    write_reply(codec, &rep, writer)
+}
+
+/// Streamed generate: incremental `chunk` frames as the replica decodes,
+/// then the terminal `end` frame carrying the authoritative transcript
+/// and the PR 7 outcome taxonomy. The lane is bounded — a client that
+/// stops reading stalls only this thread; the replica's offers drop once
+/// the lane fills and decode never blocks.
+fn run_stream(
+    ctx: &ConnCtx,
+    conn_id: u64,
+    tenant: u32,
+    req: Request,
+    codec: &dyn Codec,
+    writer: &mut TcpStream,
+) -> std::io::Result<()> {
+    let deadline = ctx.request_timeout.map(|d| Instant::now() + d);
+    let (tx, rx) = stream_channel(LANE_CAP);
+    let opts = SubmitOpts { key: Some(conn_id), deadline, tenant, stream: Some(tx) };
+    let ticket = match ctx.handle.submit_opts(req, opts) {
+        Ok(t) => t,
+        Err(e) => return write_reply(codec, &WireReply::Error { message: e.to_string() }, writer),
+    };
+    let give_up = deadline.map(|d| d + reply_grace(ctx.request_timeout));
+    let mut index = 0u32;
+    loop {
+        match rx.poll(Duration::from_millis(20)) {
+            StreamPoll::Token(token) => {
+                write_reply(codec, &WireReply::Chunk { index, token }, writer)?;
+                index += 1;
+            }
+            StreamPoll::Idle => {
+                if give_up.is_some_and(|d| Instant::now() >= d) {
+                    // The core should have shed this by now; answer
+                    // terminally rather than wait on a wedged replica.
+                    trace::counter("serve.io_reply_timeout").inc();
+                    let end = WireReply::End {
+                        outcome: StreamOutcome::Timeout,
+                        tokens: Vec::new(),
+                        text: String::new(),
+                    };
+                    return write_reply(codec, &end, writer);
+                }
+            }
+            StreamPoll::Closed => break,
+        }
+    }
+    // Lane closed — the core settled the ticket (the stream drops before
+    // the terminal send, so grant the reply a short grace window).
+    let end = match ticket.recv_timeout(reply_grace(ctx.request_timeout)) {
+        Some(Response::Generate { tokens }) => {
+            let text = ctx.vocab.decode(&tokens);
+            WireReply::End { outcome: StreamOutcome::End, tokens, text }
+        }
+        Some(Response::Error { message }) => WireReply::End {
+            outcome: match message.as_str() {
+                ERR_TIMEOUT => StreamOutcome::Timeout,
+                _ => StreamOutcome::ReplicaFailed,
+            },
+            tokens: Vec::new(),
+            text: String::new(),
+        },
+        Some(Response::Score { .. }) | None => WireReply::End {
+            outcome: StreamOutcome::ReplicaFailed,
+            tokens: Vec::new(),
+            text: String::new(),
+        },
+    };
+    write_reply(codec, &end, writer)
 }

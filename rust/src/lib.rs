@@ -31,6 +31,7 @@ pub mod sparsity;
 pub mod synthlang;
 pub mod tables;
 pub mod util;
+pub mod wire;
 
 pub use util::prng::Rng;
 pub use util::tensor::{Tensor, TensorStore};

@@ -362,12 +362,18 @@ impl<'a> Parser<'a> {
                                 if self.peek() != Some(b'u') {
                                     return Err(self.err("lone high surrogate"));
                                 }
+                                if self.pos + 4 >= self.bytes.len() {
+                                    return Err(self.err("bad \\u escape"));
+                                }
                                 let hex2 = std::str::from_utf8(
                                     &self.bytes[self.pos + 1..self.pos + 5],
                                 )
                                 .map_err(|_| self.err("bad \\u escape"))?;
                                 let lo = u32::from_str_radix(hex2, 16)
                                     .map_err(|_| self.err("bad \\u escape"))?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err(self.err("bad low surrogate"));
+                                }
                                 let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
                                 s.push(
                                     char::from_u32(c).ok_or_else(|| self.err("bad codepoint"))?,
@@ -498,6 +504,44 @@ mod tests {
     fn unicode_escape_and_surrogates() {
         let v = parse(r#""A😀""#).unwrap();
         assert_eq!(v.as_str(), Some("A😀"));
+        let v = parse(r#""😀""#).unwrap();
+        assert_eq!(v.as_str(), Some("😀"));
+    }
+
+    #[test]
+    fn all_control_chars_roundtrip_escaped() {
+        // Every char below 0x20 must be emitted in \uXXXX (or short-escape)
+        // form and parse back identically — tenant ids and synthlang text
+        // can carry arbitrary bytes.
+        let raw: String = (1u8..0x20).map(|b| b as char).collect();
+        let v = Json::Str(raw.clone());
+        let dumped = v.dump();
+        assert!(
+            dumped.bytes().all(|b| (0x20..0x7f).contains(&b)),
+            "control chars leaked into dump: {dumped:?}"
+        );
+        assert_eq!(parse(&dumped).unwrap().as_str(), Some(raw.as_str()));
+    }
+
+    #[test]
+    fn rejects_truncated_escapes() {
+        // Truncated or malformed \u escapes must error, never panic
+        // (the low-surrogate path used to slice out of bounds).
+        for src in [
+            r#""\u"#,
+            r#""\u00"#,
+            r#""\u00""#,
+            r#""\ud83d"#,
+            r#""\ud83d""#,
+            r#""\ud83d\"#,
+            r#""\ud83d\u"#,
+            r#""\ud83d\ud8"#,
+            r#""\ud83dA""#,
+            r#""\udc00""#,
+            r#""\uzzzz""#,
+        ] {
+            assert!(parse(src).is_err(), "accepted truncated escape {src:?}");
+        }
     }
 
     #[test]

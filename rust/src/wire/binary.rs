@@ -1,0 +1,397 @@
+//! Length-prefixed compact binary framing (DESIGN.md §2.15).
+//!
+//! Frame grammar (all integers little-endian):
+//!
+//! ```text
+//! frame    := u32 len | u8 tag | body          -- len covers tag + body
+//! str      := u32 n | n UTF-8 bytes
+//! opt_str  := u8 present | str?                -- present in {0, 1}
+//! toks     := u32 n | n x u32
+//! ```
+//!
+//! Request tags: `0x01` ping, `0x02` stats, `0x03` score, `0x04` generate,
+//! `0x05` score_tokens, `0x06` generate_tokens. Reply tags: `0x81` blob
+//! (JSON payload verbatim — stats/ping are cold-path), `0x82` score,
+//! `0x83` generate, `0x84` chunk, `0x85` end, `0x86` error.
+//!
+//! A connection opens with a 6-byte hello (`NMSW` magic + u16 version) so
+//! a JSON client talking to a binary port fails loudly instead of
+//! garbling. Malformed frames are rejected frame-local: the decoder
+//! reports how many bytes to skip (the whole delimited frame) and the
+//! connection keeps serving — only a frame too corrupt to delimit (bad
+//! length prefix) forfeits resynchronization.
+
+use super::codec::{Codec, DecodeResult, FrameError, StreamOutcome, WireReply, WireRequest};
+use crate::util::json::{self, Json};
+
+pub const MAGIC: [u8; 4] = *b"NMSW";
+pub const VERSION: u16 = 1;
+pub const HELLO_LEN: usize = 6;
+
+/// Frames larger than this are rejected before allocation — nothing the
+/// protocol carries legitimately approaches it.
+pub const MAX_FRAME: usize = 1 << 24;
+
+const TAG_PING: u8 = 0x01;
+const TAG_STATS: u8 = 0x02;
+const TAG_SCORE: u8 = 0x03;
+const TAG_GENERATE: u8 = 0x04;
+const TAG_SCORE_TOKENS: u8 = 0x05;
+const TAG_GENERATE_TOKENS: u8 = 0x06;
+const TAG_BLOB: u8 = 0x81;
+const TAG_R_SCORE: u8 = 0x82;
+const TAG_R_GENERATE: u8 = 0x83;
+const TAG_CHUNK: u8 = 0x84;
+const TAG_END: u8 = 0x85;
+const TAG_ERROR: u8 = 0x86;
+
+const FLAG_STREAM: u8 = 0x01;
+const FLAG_MAX_NEW: u8 = 0x02;
+
+/// The 6-byte connect preamble a binary client must send first.
+pub fn hello() -> [u8; HELLO_LEN] {
+    let mut h = [0u8; HELLO_LEN];
+    h[..4].copy_from_slice(&MAGIC);
+    h[4..].copy_from_slice(&VERSION.to_le_bytes());
+    h
+}
+
+/// Validate a peer's hello. The error string is sent back as the final
+/// frame before the server closes the connection.
+pub fn check_hello(buf: &[u8]) -> Result<(), String> {
+    if buf.len() < HELLO_LEN {
+        return Err(format!("short hello ({} of {HELLO_LEN} bytes)", buf.len()));
+    }
+    if buf[..4] != MAGIC {
+        return Err("bad magic (expected NMSW)".to_string());
+    }
+    let peer = u16::from_le_bytes([buf[4], buf[5]]);
+    if peer != VERSION {
+        return Err(format!("codec version mismatch: peer {peer}, host {VERSION}"));
+    }
+    Ok(())
+}
+
+// ---- encoding ------------------------------------------------------------
+
+struct FrameWriter {
+    buf: Vec<u8>,
+}
+
+impl FrameWriter {
+    fn new(tag: u8) -> FrameWriter {
+        // Length placeholder patched in finish().
+        let mut buf = vec![0u8; 4];
+        buf.push(tag);
+        FrameWriter { buf }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn opt_str(&mut self, s: &Option<String>) {
+        match s {
+            None => self.u8(0),
+            Some(s) => {
+                self.u8(1);
+                self.str(s);
+            }
+        }
+    }
+
+    fn toks(&mut self, ts: &[u32]) {
+        self.u32(ts.len() as u32);
+        for t in ts {
+            self.u32(*t);
+        }
+    }
+
+    fn finish(mut self, out: &mut Vec<u8>) {
+        let len = (self.buf.len() - 4) as u32;
+        self.buf[..4].copy_from_slice(&len.to_le_bytes());
+        out.extend_from_slice(&self.buf);
+    }
+}
+
+// ---- decoding ------------------------------------------------------------
+
+struct FrameReader<'a> {
+    body: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> FrameReader<'a> {
+    fn u8(&mut self) -> Result<u8, String> {
+        let v = *self.body.get(self.pos).ok_or("truncated frame body")?;
+        self.pos += 1;
+        Ok(v)
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        let end = self.pos + 4;
+        let b = self.body.get(self.pos..end).ok_or("truncated frame body")?;
+        self.pos = end;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        let end = self.pos + 8;
+        let b = self.body.get(self.pos..end).ok_or("truncated frame body")?;
+        self.pos = end;
+        let mut raw = [0u8; 8];
+        raw.copy_from_slice(b);
+        Ok(f64::from_bits(u64::from_le_bytes(raw)))
+    }
+
+    fn str(&mut self) -> Result<String, String> {
+        let n = self.u32()? as usize;
+        let end = self.pos + n;
+        let b = self.body.get(self.pos..end).ok_or("truncated string")?;
+        self.pos = end;
+        String::from_utf8(b.to_vec()).map_err(|_| "invalid utf8 in string".to_string())
+    }
+
+    fn opt_str(&mut self) -> Result<Option<String>, String> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.str()?)),
+            t => Err(format!("bad option tag {t}")),
+        }
+    }
+
+    fn toks(&mut self) -> Result<Vec<u32>, String> {
+        let n = self.u32()? as usize;
+        if n > self.body.len().saturating_sub(self.pos) / 4 {
+            return Err("token count exceeds frame".to_string());
+        }
+        (0..n).map(|_| self.u32()).collect()
+    }
+
+    fn done(&self) -> Result<(), String> {
+        if self.pos == self.body.len() {
+            Ok(())
+        } else {
+            Err(format!("{} trailing bytes in frame", self.body.len() - self.pos))
+        }
+    }
+}
+
+/// Delimit one frame: `Ok(None)` = need more bytes; `Ok(Some((tag, body,
+/// consumed)))` = one whole frame; `Err` = unrecoverable length prefix.
+fn delimit(buf: &[u8]) -> Result<Option<(u8, &[u8], usize)>, FrameError> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    if len == 0 || len > MAX_FRAME {
+        // Nothing to resynchronize on — skip the prefix and let the caller
+        // decide whether the connection is worth keeping.
+        return Err(FrameError {
+            consumed: 4,
+            message: format!("bad frame length {len}"),
+        });
+    }
+    if buf.len() < 4 + len {
+        return Ok(None);
+    }
+    Ok(Some((buf[4], &buf[5..4 + len], 4 + len)))
+}
+
+fn decode_with<T>(
+    buf: &[u8],
+    parse: impl FnOnce(u8, &mut FrameReader<'_>) -> Result<T, String>,
+) -> DecodeResult<T> {
+    let Some((tag, body, consumed)) = delimit(buf)? else {
+        return Ok(None);
+    };
+    let mut r = FrameReader { body, pos: 0 };
+    match parse(tag, &mut r).and_then(|v| r.done().map(|()| v)) {
+        Ok(v) => Ok(Some((v, consumed))),
+        Err(message) => Err(FrameError { consumed, message }),
+    }
+}
+
+pub struct BinaryCodec;
+
+impl Codec for BinaryCodec {
+    fn name(&self) -> &'static str {
+        "binary"
+    }
+
+    fn encode_request(&self, req: &WireRequest, out: &mut Vec<u8>) {
+        match req {
+            WireRequest::Ping => FrameWriter::new(TAG_PING).finish(out),
+            WireRequest::Stats => FrameWriter::new(TAG_STATS).finish(out),
+            WireRequest::Score { text, choice, tenant } => {
+                let mut w = FrameWriter::new(TAG_SCORE);
+                w.opt_str(tenant);
+                w.str(text);
+                w.str(choice);
+                w.finish(out);
+            }
+            WireRequest::Generate { text, max_new, tenant, stream } => {
+                let mut w = FrameWriter::new(TAG_GENERATE);
+                let mut flags = 0u8;
+                if *stream {
+                    flags |= FLAG_STREAM;
+                }
+                if max_new.is_some() {
+                    flags |= FLAG_MAX_NEW;
+                }
+                w.u8(flags);
+                w.u32(max_new.unwrap_or(0) as u32);
+                w.opt_str(tenant);
+                w.str(text);
+                w.finish(out);
+            }
+            WireRequest::ScoreTokens { tokens, span, tenant } => {
+                let mut w = FrameWriter::new(TAG_SCORE_TOKENS);
+                w.u32(*tenant);
+                w.u32(span.0);
+                w.u32(span.1);
+                w.toks(tokens);
+                w.finish(out);
+            }
+            WireRequest::GenerateTokens { tokens, max_new, tenant, stream } => {
+                let mut w = FrameWriter::new(TAG_GENERATE_TOKENS);
+                w.u32(*tenant);
+                w.u8(if *stream { FLAG_STREAM } else { 0 });
+                w.u32(*max_new);
+                w.toks(tokens);
+                w.finish(out);
+            }
+        }
+    }
+
+    fn encode_reply(&self, rep: &WireReply, out: &mut Vec<u8>) {
+        match rep {
+            WireReply::Blob(j) => {
+                let mut w = FrameWriter::new(TAG_BLOB);
+                w.str(&j.dump());
+                w.finish(out);
+            }
+            WireReply::Score { score } => {
+                let mut w = FrameWriter::new(TAG_R_SCORE);
+                w.f64(*score);
+                w.finish(out);
+            }
+            WireReply::Generate { tokens, text } => {
+                let mut w = FrameWriter::new(TAG_R_GENERATE);
+                w.toks(tokens);
+                w.str(text);
+                w.finish(out);
+            }
+            WireReply::Chunk { index, token } => {
+                let mut w = FrameWriter::new(TAG_CHUNK);
+                w.u32(*index);
+                w.u32(*token);
+                w.finish(out);
+            }
+            WireReply::End { outcome, tokens, text } => {
+                let mut w = FrameWriter::new(TAG_END);
+                w.u8(match outcome {
+                    StreamOutcome::End => 0,
+                    StreamOutcome::Timeout => 1,
+                    StreamOutcome::ReplicaFailed => 2,
+                });
+                w.toks(tokens);
+                w.str(text);
+                w.finish(out);
+            }
+            WireReply::Error { message } => {
+                let mut w = FrameWriter::new(TAG_ERROR);
+                w.str(message);
+                w.finish(out);
+            }
+        }
+    }
+
+    fn decode_request(&self, buf: &[u8]) -> DecodeResult<WireRequest> {
+        decode_with(buf, |tag, r| match tag {
+            TAG_PING => Ok(WireRequest::Ping),
+            TAG_STATS => Ok(WireRequest::Stats),
+            TAG_SCORE => {
+                let tenant = r.opt_str()?;
+                let text = r.str()?;
+                let choice = r.str()?;
+                Ok(WireRequest::Score { text, choice, tenant })
+            }
+            TAG_GENERATE => {
+                let flags = r.u8()?;
+                let raw_max = r.u32()?;
+                let tenant = r.opt_str()?;
+                let text = r.str()?;
+                let max_new = (flags & FLAG_MAX_NEW != 0).then_some(raw_max as usize);
+                Ok(WireRequest::Generate {
+                    text,
+                    max_new,
+                    tenant,
+                    stream: flags & FLAG_STREAM != 0,
+                })
+            }
+            TAG_SCORE_TOKENS => {
+                let tenant = r.u32()?;
+                let span = (r.u32()?, r.u32()?);
+                let tokens = r.toks()?;
+                Ok(WireRequest::ScoreTokens { tokens, span, tenant })
+            }
+            TAG_GENERATE_TOKENS => {
+                let tenant = r.u32()?;
+                let flags = r.u8()?;
+                let max_new = r.u32()?;
+                let tokens = r.toks()?;
+                Ok(WireRequest::GenerateTokens {
+                    tokens,
+                    max_new,
+                    tenant,
+                    stream: flags & FLAG_STREAM != 0,
+                })
+            }
+            t => Err(format!("unknown request tag 0x{t:02x}")),
+        })
+    }
+
+    fn decode_reply(&self, buf: &[u8]) -> DecodeResult<WireReply> {
+        decode_with(buf, |tag, r| match tag {
+            TAG_BLOB => {
+                let raw = r.str()?;
+                let j = json::parse(&raw).map_err(|e| format!("bad blob payload: {e}"))?;
+                Ok(WireReply::Blob(j))
+            }
+            TAG_R_SCORE => Ok(WireReply::Score { score: r.f64()? }),
+            TAG_R_GENERATE => {
+                let tokens = r.toks()?;
+                let text = r.str()?;
+                Ok(WireReply::Generate { tokens, text })
+            }
+            TAG_CHUNK => Ok(WireReply::Chunk { index: r.u32()?, token: r.u32()? }),
+            TAG_END => {
+                let outcome = match r.u8()? {
+                    0 => StreamOutcome::End,
+                    1 => StreamOutcome::Timeout,
+                    2 => StreamOutcome::ReplicaFailed,
+                    t => return Err(format!("bad outcome tag {t}")),
+                };
+                let tokens = r.toks()?;
+                let text = r.str()?;
+                Ok(WireReply::End { outcome, tokens, text })
+            }
+            TAG_ERROR => Ok(WireReply::Error { message: r.str()? }),
+            t => Err(format!("unknown reply tag 0x{t:02x}")),
+        })
+    }
+}

@@ -1,0 +1,165 @@
+//! Codec-neutral message model for the serving wire protocol.
+//!
+//! A [`Codec`] turns [`WireRequest`] / [`WireReply`] values into transport
+//! bytes and back, incrementally: `decode_*` consumes from a growing byte
+//! buffer and either yields one message plus the byte count it consumed,
+//! reports that more bytes are needed, or rejects a malformed frame while
+//! telling the caller how many bytes to skip so the connection survives.
+//!
+//! Two implementations exist (DESIGN.md §2.15): [`super::json::JsonCodec`]
+//! — the newline-delimited JSON protocol serve has always spoken, kept as
+//! the default and as the compatibility oracle — and
+//! [`super::binary::BinaryCodec`], a length-prefixed compact framing for
+//! token streaming at serving scale.
+
+use crate::util::json::Json;
+
+/// One client -> server message.
+///
+/// `Score`/`Generate` mirror the original text-level JSON ops byte-for-byte;
+/// the `*Tokens` twins carry raw token ids for clients that already hold the
+/// vocab (loadgen, tests) and for the codec-equivalence harness.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireRequest {
+    Ping,
+    Stats,
+    Score {
+        text: String,
+        choice: String,
+        tenant: Option<String>,
+    },
+    Generate {
+        text: String,
+        max_new: Option<usize>,
+        tenant: Option<String>,
+        stream: bool,
+    },
+    ScoreTokens {
+        tokens: Vec<u32>,
+        span: (u32, u32),
+        tenant: u32,
+    },
+    GenerateTokens {
+        tokens: Vec<u32>,
+        max_new: u32,
+        tenant: u32,
+        stream: bool,
+    },
+}
+
+/// Terminal-frame taxonomy for a streamed generate — the PR 7 outcome set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamOutcome {
+    End,
+    Timeout,
+    ReplicaFailed,
+}
+
+impl StreamOutcome {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            StreamOutcome::End => "end",
+            StreamOutcome::Timeout => "timeout",
+            StreamOutcome::ReplicaFailed => "replica_failed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<StreamOutcome> {
+        match s {
+            "end" => Some(StreamOutcome::End),
+            "timeout" => Some(StreamOutcome::Timeout),
+            "replica_failed" => Some(StreamOutcome::ReplicaFailed),
+            _ => None,
+        }
+    }
+}
+
+/// One server -> client frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireReply {
+    /// Prebuilt JSON object passed through verbatim (ping banner, stats op).
+    /// The JSON codec dumps it unchanged — this is what keeps the default
+    /// codec byte-identical to the historical protocol.
+    Blob(Json),
+    Score {
+        score: f64,
+    },
+    Generate {
+        tokens: Vec<u32>,
+        text: String,
+    },
+    /// Incremental streamed token. Best-effort under backpressure; the
+    /// terminal `End` frame is the authoritative transcript.
+    Chunk {
+        index: u32,
+        token: u32,
+    },
+    /// Terminal frame of a streamed generate.
+    End {
+        outcome: StreamOutcome,
+        tokens: Vec<u32>,
+        text: String,
+    },
+    Error {
+        message: String,
+    },
+}
+
+/// A frame the decoder rejected. `consumed` is how many buffer bytes the
+/// caller must drop to resynchronize — the connection itself stays usable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FrameError {
+    pub consumed: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// `Ok(Some((msg, consumed)))` — one message decoded; `Ok(None)` — need
+/// more bytes; `Err(e)` — malformed frame, skip `e.consumed` bytes.
+pub type DecodeResult<T> = Result<Option<(T, usize)>, FrameError>;
+
+pub trait Codec: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn encode_request(&self, req: &WireRequest, out: &mut Vec<u8>);
+    fn encode_reply(&self, rep: &WireReply, out: &mut Vec<u8>);
+    fn decode_request(&self, buf: &[u8]) -> DecodeResult<WireRequest>;
+    fn decode_reply(&self, buf: &[u8]) -> DecodeResult<WireReply>;
+}
+
+/// Which codec a connection speaks. Parsed from `--codec`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodecKind {
+    Json,
+    Binary,
+}
+
+impl CodecKind {
+    pub fn parse(s: &str) -> Option<CodecKind> {
+        match s {
+            "json" => Some(CodecKind::Json),
+            "binary" => Some(CodecKind::Binary),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CodecKind::Json => "json",
+            CodecKind::Binary => "binary",
+        }
+    }
+
+    pub fn codec(self) -> &'static dyn Codec {
+        match self {
+            CodecKind::Json => &super::json::JsonCodec,
+            CodecKind::Binary => &super::binary::BinaryCodec,
+        }
+    }
+}

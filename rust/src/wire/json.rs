@@ -1,0 +1,271 @@
+//! The newline-delimited JSON codec — the protocol `nmsparse serve` has
+//! always spoken, now behind the [`Codec`] trait.
+//!
+//! This impl is the compatibility oracle (DESIGN.md §2.15): for the ops
+//! that existed before the wire subsystem (`ping`/`stats`/`score`/
+//! `generate`, buffered replies) it produces byte-identical lines to the
+//! historical hand-rolled path, because it reuses the same `util::json`
+//! writer with the same BTreeMap key ordering. Anything the binary codec
+//! claims about a message's meaning must agree with what this codec says.
+
+use super::codec::{Codec, DecodeResult, FrameError, StreamOutcome, WireReply, WireRequest};
+use crate::util::json::{self, Json};
+
+pub struct JsonCodec;
+
+/// Scan to the next newline, skipping blank lines the way the old
+/// `BufReader::lines()` loop did. Returns (line, consumed) where
+/// `consumed` covers the skipped blanks and the terminator.
+fn next_line(buf: &[u8]) -> Option<(&[u8], usize)> {
+    let mut start = 0;
+    loop {
+        let nl = buf[start..].iter().position(|&b| b == b'\n')? + start;
+        let mut line = &buf[start..nl];
+        if let [rest @ .., b'\r'] = line {
+            line = rest;
+        }
+        if line.iter().all(|b| b.is_ascii_whitespace()) {
+            start = nl + 1;
+            continue;
+        }
+        return Some((line, nl + 1));
+    }
+}
+
+fn bad(consumed: usize, message: String) -> FrameError {
+    FrameError { consumed, message }
+}
+
+fn parse_line(line: &[u8], consumed: usize) -> Result<Json, FrameError> {
+    let text = std::str::from_utf8(line).map_err(|_| bad(consumed, "invalid utf8".into()))?;
+    json::parse(text).map_err(|e| bad(consumed, format!("{e}")))
+}
+
+fn str_field(j: &Json, key: &str, consumed: usize) -> Result<String, FrameError> {
+    match j.get(key) {
+        None => Err(bad(consumed, format!("missing json key '{key}'"))),
+        Some(v) => v
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| bad(consumed, key.to_string())),
+    }
+}
+
+fn tokens_field(j: &Json, key: &str, consumed: usize) -> Result<Vec<u32>, FrameError> {
+    let arr = j
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bad(consumed, format!("missing json key '{key}'")))?;
+    arr.iter()
+        .map(|t| t.as_usize().map(|v| v as u32))
+        .collect::<Option<Vec<u32>>>()
+        .ok_or_else(|| bad(consumed, format!("non-integer token in '{key}'")))
+}
+
+fn tokens_json(tokens: &[u32]) -> Json {
+    Json::Arr(tokens.iter().map(|t| Json::Num(*t as f64)).collect())
+}
+
+fn decode_request_json(j: &Json, consumed: usize) -> Result<WireRequest, FrameError> {
+    let op = match j.get("op") {
+        None => return Err(bad(consumed, "missing json key 'op'".into())),
+        Some(v) => v.as_str().ok_or_else(|| bad(consumed, "op".to_string()))?,
+    };
+    let tenant_name = j.get("tenant").and_then(Json::as_str).map(str::to_string);
+    let tenant_id = j.get("tenant").and_then(Json::as_usize).unwrap_or(0) as u32;
+    let stream = j.get("stream").and_then(Json::as_bool).unwrap_or(false);
+    match op {
+        "ping" => Ok(WireRequest::Ping),
+        "stats" => Ok(WireRequest::Stats),
+        "score" => Ok(WireRequest::Score {
+            text: str_field(j, "text", consumed)?,
+            choice: str_field(j, "choice", consumed)?,
+            tenant: tenant_name,
+        }),
+        "generate" => Ok(WireRequest::Generate {
+            text: str_field(j, "text", consumed)?,
+            max_new: j.get("max_new").and_then(Json::as_usize),
+            tenant: tenant_name,
+            stream,
+        }),
+        "score_tokens" => {
+            let span = j
+                .get("span")
+                .and_then(Json::as_arr)
+                .filter(|a| a.len() == 2)
+                .and_then(|a| Some((a[0].as_usize()? as u32, a[1].as_usize()? as u32)))
+                .ok_or_else(|| bad(consumed, "missing json key 'span'".into()))?;
+            Ok(WireRequest::ScoreTokens {
+                tokens: tokens_field(j, "tokens", consumed)?,
+                span,
+                tenant: tenant_id,
+            })
+        }
+        "generate_tokens" => Ok(WireRequest::GenerateTokens {
+            tokens: tokens_field(j, "tokens", consumed)?,
+            max_new: j
+                .get("max_new")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| bad(consumed, "missing json key 'max_new'".into()))?
+                as u32,
+            tenant: tenant_id,
+            stream,
+        }),
+        other => Err(bad(consumed, format!("unknown op '{other}'"))),
+    }
+}
+
+fn decode_reply_json(j: &Json, consumed: usize) -> Result<WireReply, FrameError> {
+    if j.get("chunk").and_then(Json::as_bool) == Some(true) {
+        let index = j
+            .get("index")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| bad(consumed, "missing json key 'index'".into()))? as u32;
+        let token = j
+            .get("token")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| bad(consumed, "missing json key 'token'".into()))? as u32;
+        return Ok(WireReply::Chunk { index, token });
+    }
+    if j.get("done").and_then(Json::as_bool) == Some(true) {
+        let outcome = j
+            .get("outcome")
+            .and_then(Json::as_str)
+            .and_then(StreamOutcome::parse)
+            .ok_or_else(|| bad(consumed, "bad stream outcome".into()))?;
+        return Ok(WireReply::End {
+            outcome,
+            tokens: tokens_field(j, "tokens", consumed)?,
+            text: str_field(j, "text", consumed)?,
+        });
+    }
+    match j.get("ok").and_then(Json::as_bool) {
+        Some(true) if j.get("score").is_some() => Ok(WireReply::Score {
+            score: j
+                .get("score")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| bad(consumed, "score".into()))?,
+        }),
+        Some(true) if j.get("tokens").is_some() && j.get("text").is_some() => {
+            Ok(WireReply::Generate {
+                tokens: tokens_field(j, "tokens", consumed)?,
+                text: str_field(j, "text", consumed)?,
+            })
+        }
+        Some(false) if j.get("error").is_some() => Ok(WireReply::Error {
+            message: str_field(j, "error", consumed)?,
+        }),
+        _ => Ok(WireReply::Blob(j.clone())),
+    }
+}
+
+impl Codec for JsonCodec {
+    fn name(&self) -> &'static str {
+        "json"
+    }
+
+    fn encode_request(&self, req: &WireRequest, out: &mut Vec<u8>) {
+        let mut r = Json::obj();
+        match req {
+            WireRequest::Ping => r.insert("op", "ping".into()),
+            WireRequest::Stats => r.insert("op", "stats".into()),
+            WireRequest::Score { text, choice, tenant } => {
+                r.insert("op", "score".into());
+                r.insert("text", text.as_str().into());
+                r.insert("choice", choice.as_str().into());
+                if let Some(t) = tenant {
+                    r.insert("tenant", t.as_str().into());
+                }
+            }
+            WireRequest::Generate { text, max_new, tenant, stream } => {
+                r.insert("op", "generate".into());
+                r.insert("text", text.as_str().into());
+                if let Some(m) = max_new {
+                    r.insert("max_new", (*m).into());
+                }
+                if let Some(t) = tenant {
+                    r.insert("tenant", t.as_str().into());
+                }
+                if *stream {
+                    r.insert("stream", true.into());
+                }
+            }
+            WireRequest::ScoreTokens { tokens, span, tenant } => {
+                r.insert("op", "score_tokens".into());
+                r.insert("tokens", tokens_json(tokens));
+                let span = vec![(span.0 as usize).into(), (span.1 as usize).into()];
+                r.insert("span", Json::Arr(span));
+                r.insert("tenant", (*tenant as usize).into());
+            }
+            WireRequest::GenerateTokens { tokens, max_new, tenant, stream } => {
+                r.insert("op", "generate_tokens".into());
+                r.insert("tokens", tokens_json(tokens));
+                r.insert("max_new", (*max_new as usize).into());
+                r.insert("tenant", (*tenant as usize).into());
+                if *stream {
+                    r.insert("stream", true.into());
+                }
+            }
+        }
+        out.extend_from_slice(r.dump().as_bytes());
+        out.push(b'\n');
+    }
+
+    fn encode_reply(&self, rep: &WireReply, out: &mut Vec<u8>) {
+        let dumped = match rep {
+            WireReply::Blob(j) => j.dump(),
+            WireReply::Score { score } => {
+                let mut r = Json::obj();
+                r.insert("ok", true.into());
+                r.insert("score", (*score).into());
+                r.dump()
+            }
+            WireReply::Generate { tokens, text } => {
+                let mut r = Json::obj();
+                r.insert("ok", true.into());
+                r.insert("tokens", tokens_json(tokens));
+                r.insert("text", text.as_str().into());
+                r.dump()
+            }
+            WireReply::Chunk { index, token } => {
+                let mut r = Json::obj();
+                r.insert("chunk", true.into());
+                r.insert("index", (*index as usize).into());
+                r.insert("token", (*token as usize).into());
+                r.dump()
+            }
+            WireReply::End { outcome, tokens, text } => {
+                let mut r = Json::obj();
+                r.insert("done", true.into());
+                r.insert("outcome", outcome.as_str().into());
+                r.insert("tokens", tokens_json(tokens));
+                r.insert("text", text.as_str().into());
+                r.dump()
+            }
+            WireReply::Error { message } => {
+                let mut r = Json::obj();
+                r.insert("ok", false.into());
+                r.insert("error", message.as_str().into());
+                r.dump()
+            }
+        };
+        out.extend_from_slice(dumped.as_bytes());
+        out.push(b'\n');
+    }
+
+    fn decode_request(&self, buf: &[u8]) -> DecodeResult<WireRequest> {
+        let Some((line, consumed)) = next_line(buf) else {
+            return Ok(None);
+        };
+        let j = parse_line(line, consumed)?;
+        decode_request_json(&j, consumed).map(|req| Some((req, consumed)))
+    }
+
+    fn decode_reply(&self, buf: &[u8]) -> DecodeResult<WireReply> {
+        let Some((line, consumed)) = next_line(buf) else {
+            return Ok(None);
+        };
+        let j = parse_line(line, consumed)?;
+        decode_reply_json(&j, consumed).map(|rep| Some((rep, consumed)))
+    }
+}

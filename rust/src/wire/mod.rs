@@ -1,0 +1,19 @@
+//! Wire subsystem: codecs, framing, and streamed-token lanes for the
+//! serving front (DESIGN.md §2.15).
+//!
+//! The [`codec::Codec`] trait abstracts the transport encoding behind
+//! serve/loadgen. Two implementations ship: [`json::JsonCodec`] — the
+//! historical newline-delimited JSON protocol, kept as the default and
+//! as the compatibility oracle — and [`binary::BinaryCodec`], a
+//! length-prefixed compact framing with a versioned connect handshake.
+//! [`stream`] provides the bounded per-session lanes that carry
+//! incremental tokens from the replica tick loop to a streaming client
+//! without ever letting a slow socket stall decode.
+
+pub mod binary;
+pub mod codec;
+pub mod json;
+pub mod stream;
+
+pub use codec::{Codec, CodecKind, DecodeResult, FrameError, StreamOutcome, WireReply, WireRequest};
+pub use stream::{stream_channel, StreamPoll, StreamReceiver, StreamSender, LANE_CAP};

@@ -1,0 +1,90 @@
+//! Bounded per-session token lanes for streamed generates.
+//!
+//! Backpressure contract (DESIGN.md §2.15): the replica tick loop calls
+//! [`StreamSender::offer`], which never blocks — the lane is a bounded
+//! `sync_channel` fed with `try_send`. A slow client stops draining its
+//! own lane; once the lane is full, that session's *incremental* frames
+//! are dropped (counted in `wire.stream_lagged`) while decode, the other
+//! sessions, and the terminal reply all proceed untouched. The terminal
+//! frame carries the full token sequence, so the transcript a client
+//! observes is identical to the buffered path regardless of how many
+//! incremental frames backpressure suppressed.
+//!
+//! End-of-stream is signalled by hangup, not by an in-band event: the
+//! core drops the [`StreamSender`] when the session reaches a terminal
+//! outcome, the receiver observes disconnect, and the IO thread then
+//! reads the authoritative terminal response from the ordinary reply
+//! ticket (which is unbounded and therefore cannot be wedged by a full
+//! lane).
+
+use crate::util::trace;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::time::Duration;
+
+/// Default lane capacity: deeper than any one tick's emissions, shallow
+/// enough that a stalled client stops costing memory almost immediately.
+pub const LANE_CAP: usize = 32;
+
+/// Producer half, held by the replica worker inside its pending-reply
+/// table. Dropping it closes the lane.
+pub struct StreamSender {
+    tx: SyncSender<u32>,
+}
+
+impl StreamSender {
+    /// Non-blocking offer of one decoded token. Returns false when the
+    /// lane is full (client lagging) or the client hung up; the caller
+    /// never retries — the terminal frame is authoritative.
+    pub fn offer(&self, token: u32) -> bool {
+        match self.tx.try_send(token) {
+            Ok(()) => true,
+            Err(TrySendError::Full(_)) => {
+                trace::counter("wire.stream_lagged").inc();
+                false
+            }
+            Err(TrySendError::Disconnected(_)) => false,
+        }
+    }
+}
+
+/// What one bounded wait on the lane produced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamPoll {
+    /// One incremental token.
+    Token(u32),
+    /// Nothing yet — keep waiting (bounded by the caller's deadline).
+    Idle,
+    /// Sender dropped: the session reached a terminal outcome and the
+    /// reply ticket now holds the authoritative response.
+    Closed,
+}
+
+/// Consumer half, held by the client/IO side.
+pub struct StreamReceiver {
+    rx: Receiver<u32>,
+}
+
+impl StreamReceiver {
+    pub fn poll(&self, wait: Duration) -> StreamPoll {
+        match self.rx.recv_timeout(wait) {
+            Ok(tok) => StreamPoll::Token(tok),
+            Err(RecvTimeoutError::Timeout) => StreamPoll::Idle,
+            Err(RecvTimeoutError::Disconnected) => StreamPoll::Closed,
+        }
+    }
+
+    /// Drain whatever is already buffered without waiting.
+    pub fn drain(&self) -> Vec<u32> {
+        let mut out = Vec::new();
+        while let Ok(tok) = self.rx.try_recv() {
+            out.push(tok);
+        }
+        out
+    }
+}
+
+/// One lane. `cap` is clamped to at least 1.
+pub fn stream_channel(cap: usize) -> (StreamSender, StreamReceiver) {
+    let (tx, rx) = sync_channel(cap.max(1));
+    (StreamSender { tx }, StreamReceiver { rx })
+}

@@ -1,0 +1,300 @@
+//! Wire-subsystem integration suite (DESIGN.md §2.15): codec roundtrip
+//! properties (binary ≡ JSON on every message shape), malformed-frame
+//! rejection with per-frame resynchronization, the versioned connect
+//! handshake, the streamed-vs-buffered transcript-identity pin, and
+//! weighted-fair admission under a 10:1 tenant skew.
+
+use nmsparse::coordinator::server::{
+    Request, Response, ServerConfig, ServerCore, SubmitOpts, SyntheticBackend,
+};
+use nmsparse::util::json::Json;
+use nmsparse::util::prng::Rng;
+use nmsparse::wire::binary;
+use nmsparse::wire::{
+    stream_channel, Codec, CodecKind, StreamOutcome, StreamPoll, WireReply, WireRequest, LANE_CAP,
+};
+use std::time::Duration;
+
+/// Text corpus that exercises the escaping paths: quotes, backslashes,
+/// newlines (which must never split a JSON frame), and control bytes.
+fn arb_text(rng: &mut Rng) -> String {
+    let atoms = ["plain", "with \"quotes\"", "back\\slash", "new\nline", "tab\there", "ctrl\u{1}"];
+    let mut s = String::new();
+    for _ in 0..rng.range(1, 4) {
+        s.push_str(atoms[rng.below(atoms.len())]);
+        s.push(' ');
+    }
+    s
+}
+
+fn arb_toks(rng: &mut Rng) -> Vec<u32> {
+    let len = rng.below(10);
+    (0..len).map(|_| rng.below(200) as u32).collect()
+}
+
+fn arb_request(rng: &mut Rng, i: usize) -> WireRequest {
+    match i % 6 {
+        0 => WireRequest::Ping,
+        1 => WireRequest::Stats,
+        2 => WireRequest::Score {
+            text: arb_text(rng),
+            choice: arb_text(rng),
+            tenant: (i % 4 == 2).then(|| rng.below(9).to_string()),
+        },
+        3 => WireRequest::Generate {
+            text: arb_text(rng),
+            max_new: (i % 2 == 1).then(|| rng.range(1, 48)),
+            tenant: (i % 4 == 3).then(|| "acme".to_string()),
+            stream: i % 5 == 0,
+        },
+        4 => WireRequest::ScoreTokens {
+            tokens: arb_toks(rng),
+            span: (rng.below(8) as u32, rng.below(8) as u32),
+            tenant: rng.below(7) as u32,
+        },
+        _ => WireRequest::GenerateTokens {
+            tokens: arb_toks(rng),
+            max_new: rng.range(1, 48) as u32,
+            tenant: rng.below(7) as u32,
+            stream: i % 2 == 0,
+        },
+    }
+}
+
+fn arb_reply(rng: &mut Rng, i: usize) -> WireReply {
+    let outcomes = [StreamOutcome::End, StreamOutcome::Timeout, StreamOutcome::ReplicaFailed];
+    match i % 6 {
+        0 => {
+            // A shape that is not a score/generate/error/chunk/end reply,
+            // so the JSON codec keeps it a Blob on decode.
+            let mut j = Json::obj();
+            j.insert("pong", true.into());
+            j.insert("uptime_s", rng.f64().into());
+            WireReply::Blob(j)
+        }
+        1 => WireReply::Score { score: -10.0 * rng.f64() - 0.015625 },
+        2 => WireReply::Generate { tokens: arb_toks(rng), text: arb_text(rng) },
+        3 => WireReply::Chunk { index: rng.below(64) as u32, token: rng.below(200) as u32 },
+        4 => WireReply::End {
+            outcome: outcomes[i % 3],
+            tokens: arb_toks(rng),
+            text: arb_text(rng),
+        },
+        _ => WireReply::Error { message: arb_text(rng) },
+    }
+}
+
+/// Both codecs roundtrip every message shape losslessly and consume
+/// exactly the bytes they produced — the binary codec must agree with
+/// the JSON oracle on what each message means.
+#[test]
+fn codecs_roundtrip_all_message_shapes() {
+    let mut rng = Rng::new(0x11ce);
+    for kind in [CodecKind::Json, CodecKind::Binary] {
+        let c = kind.codec();
+        for i in 0..240 {
+            let req = arb_request(&mut rng, i);
+            let mut buf = Vec::new();
+            c.encode_request(&req, &mut buf);
+            let (back, used) = c.decode_request(&buf).unwrap().expect("whole frame");
+            assert_eq!(back, req, "{} request roundtrip", c.name());
+            assert_eq!(used, buf.len(), "{} consumed exactly one frame", c.name());
+
+            let rep = arb_reply(&mut rng, i);
+            let mut buf = Vec::new();
+            c.encode_reply(&rep, &mut buf);
+            let (back, used) = c.decode_reply(&buf).unwrap().expect("whole frame");
+            assert_eq!(back, rep, "{} reply roundtrip", c.name());
+            assert_eq!(used, buf.len());
+        }
+    }
+}
+
+/// Back-to-back frames decode independently; a split frame reports
+/// "need more bytes" rather than an error.
+#[test]
+fn codecs_delimit_pipelined_and_partial_frames() {
+    let mut rng = Rng::new(0xfeed);
+    for kind in [CodecKind::Json, CodecKind::Binary] {
+        let c = kind.codec();
+        let reqs: Vec<WireRequest> = (0..8).map(|i| arb_request(&mut rng, i)).collect();
+        let mut buf = Vec::new();
+        for r in &reqs {
+            c.encode_request(r, &mut buf);
+        }
+        let mut pos = 0;
+        for r in &reqs {
+            let (back, used) = c.decode_request(&buf[pos..]).unwrap().expect("frame");
+            assert_eq!(&back, r);
+            pos += used;
+        }
+        assert_eq!(pos, buf.len());
+        // Every strict prefix of a single frame is "need more bytes".
+        let mut one = Vec::new();
+        c.encode_request(&reqs[0], &mut one);
+        for cut in 0..one.len() {
+            assert!(
+                matches!(c.decode_request(&one[..cut]), Ok(None)),
+                "{} prefix of {cut}/{} bytes must be incomplete",
+                c.name(),
+                one.len()
+            );
+        }
+    }
+}
+
+/// A malformed frame is rejected frame-local: the error reports how many
+/// bytes to skip and the next frame decodes cleanly — one bad client
+/// message must not kill the connection.
+#[test]
+fn malformed_frames_reject_without_losing_resync() {
+    let c = CodecKind::Binary.codec();
+    let mut buf = Vec::new();
+    // Unknown tag, length-prefix intact.
+    buf.extend_from_slice(&1u32.to_le_bytes());
+    buf.push(0x7f);
+    c.encode_request(&WireRequest::Ping, &mut buf);
+    let err = c.decode_request(&buf).unwrap_err();
+    assert_eq!(err.consumed, 5, "skip exactly the delimited bad frame");
+    assert!(err.message.contains("unknown request tag"), "{}", err.message);
+    let (back, _) = c.decode_request(&buf[err.consumed..]).unwrap().expect("resynced");
+    assert_eq!(back, WireRequest::Ping);
+
+    // Truncated body inside an intact envelope: tag says score_tokens but
+    // the body ends early.
+    let mut bad = Vec::new();
+    bad.extend_from_slice(&3u32.to_le_bytes());
+    bad.extend_from_slice(&[0x05, 0x01, 0x02]);
+    let err = c.decode_request(&bad).unwrap_err();
+    assert_eq!(err.consumed, 7);
+    assert!(err.message.contains("truncated"), "{}", err.message);
+
+    // Token count beyond the frame is rejected before allocation.
+    let mut flood = Vec::new();
+    flood.extend_from_slice(&17u32.to_le_bytes());
+    flood.push(0x05); // score_tokens
+    flood.extend_from_slice(&0u32.to_le_bytes()); // tenant
+    flood.extend_from_slice(&0u32.to_le_bytes()); // span.0
+    flood.extend_from_slice(&1u32.to_le_bytes()); // span.1
+    flood.extend_from_slice(&u32::MAX.to_le_bytes()); // token count
+    let err = c.decode_request(&flood).unwrap_err();
+    assert!(err.message.contains("token count"), "{}", err.message);
+
+    // A zero length prefix cannot delimit a frame.
+    let err = c.decode_request(&0u32.to_le_bytes()).unwrap_err();
+    assert_eq!(err.consumed, 4);
+
+    // JSON oracle behaves the same way: a garbage line is skipped whole
+    // and the following line still parses.
+    let j = CodecKind::Json.codec();
+    let mut buf = b"{not json\n".to_vec();
+    j.encode_request(&WireRequest::Stats, &mut buf);
+    let err = j.decode_request(&buf).unwrap_err();
+    assert_eq!(err.consumed, 10);
+    let (back, _) = j.decode_request(&buf[err.consumed..]).unwrap().expect("resynced");
+    assert_eq!(back, WireRequest::Stats);
+}
+
+#[test]
+fn handshake_rejects_magic_and_version_mismatches() {
+    let good = binary::hello();
+    assert_eq!(binary::check_hello(&good), Ok(()));
+    assert_eq!(good.len(), binary::HELLO_LEN);
+
+    let mut bad_magic = good;
+    bad_magic[0] = b'{'; // a JSON client talking to a binary port
+    let err = binary::check_hello(&bad_magic).unwrap_err();
+    assert!(err.contains("bad magic"), "{err}");
+
+    let mut bad_version = good;
+    bad_version[4..].copy_from_slice(&(binary::VERSION + 1).to_le_bytes());
+    let err = binary::check_hello(&bad_version).unwrap_err();
+    assert!(err.contains("version mismatch"), "{err}");
+
+    let err = binary::check_hello(&good[..3]).unwrap_err();
+    assert!(err.contains("short hello"), "{err}");
+}
+
+/// Streaming changes delivery, never content: for the same request the
+/// chunk-frame token sequence equals the terminal reply's token list,
+/// which equals the buffered run's — and chunks actually flow.
+#[test]
+fn streamed_generate_matches_buffered_transcript() {
+    let core = ServerCore::start(
+        ServerConfig { replicas: 1, queue_cap: 64, ..Default::default() },
+        |_r| Ok(SyntheticBackend::new(4, Duration::ZERO)),
+    )
+    .unwrap();
+    let handle = core.handle();
+    let mut total_chunks = 0usize;
+    for i in 0..12u32 {
+        let req = Request::Generate { tokens: vec![3 + i, 7, 9 + i % 5], max_new: 6 };
+        let ticket = handle.submit_opts(req.clone(), SubmitOpts::default()).unwrap();
+        let Some(Response::Generate { tokens: buffered }) = ticket.recv() else {
+            panic!("buffered generate failed");
+        };
+
+        let (tx, rx) = stream_channel(LANE_CAP);
+        let opts = SubmitOpts { stream: Some(tx), ..Default::default() };
+        let ticket = handle.submit_opts(req, opts).unwrap();
+        let mut chunks = Vec::new();
+        loop {
+            match rx.poll(Duration::from_millis(10)) {
+                StreamPoll::Token(t) => chunks.push(t),
+                StreamPoll::Idle => {}
+                StreamPoll::Closed => break,
+            }
+        }
+        let Some(Response::Generate { tokens: streamed }) = ticket.recv() else {
+            panic!("streamed generate failed");
+        };
+        assert_eq!(streamed, buffered, "streaming changed the decoded tokens");
+        assert_eq!(chunks, streamed, "chunk frames are the terminal token list");
+        total_chunks += chunks.len();
+    }
+    core.shutdown();
+    assert!(total_chunks > 0, "no incremental frames were delivered");
+}
+
+/// Deficit-round-robin admission under a 10:1 skew: a light tenant
+/// submitted *behind* a heavy tenant's backlog still dispatches early,
+/// so its queue-wait p95 sits well below the heavy tenant's (plain FIFO
+/// would put it at the very tail).
+#[test]
+fn weighted_fair_dispatch_shields_light_tenant() {
+    let core = ServerCore::start(
+        ServerConfig {
+            replicas: 1,
+            queue_cap: 128,
+            max_wait: Duration::from_millis(1),
+            tenants: 2,
+            ..Default::default()
+        },
+        |_r| Ok(SyntheticBackend::new(4, Duration::from_millis(1))),
+    )
+    .unwrap();
+    let handle = core.handle();
+    let score = |i: u32| Request::Score { tokens: vec![3 + i % 50, 9, 11, 13], span: (1, 3) };
+    let mut tickets = Vec::new();
+    for i in 0..60 {
+        let opts = SubmitOpts { tenant: 0, ..Default::default() };
+        tickets.push(handle.submit_opts(score(i), opts).unwrap());
+    }
+    for i in 0..6 {
+        let opts = SubmitOpts { tenant: 1, ..Default::default() };
+        tickets.push(handle.submit_opts(score(100 + i), opts).unwrap());
+    }
+    for t in &tickets {
+        assert!(matches!(t.recv(), Some(Response::Score { .. })));
+    }
+    let stats = core.shutdown();
+    assert_eq!(stats.tenants.len(), 2);
+    assert_eq!(stats.tenants[0].served, 60);
+    assert_eq!(stats.tenants[1].served, 6);
+    let heavy_p95 = stats.tenants[0].queue_wait.percentile(95.0);
+    let light_p95 = stats.tenants[1].queue_wait.percentile(95.0);
+    assert!(
+        light_p95 < heavy_p95 * 0.8,
+        "light tenant p95 {light_p95:.4}s not shielded from heavy p95 {heavy_p95:.4}s"
+    );
+}

@@ -219,6 +219,125 @@ def check_phases(doc, path):
     return bad
 
 
+# Weighted-fair admission gate (DESIGN.md §2.15). Applies only when the
+# run actually exercised fairness: >= 2 tenants, equal DRR dispatch
+# weights, and a skewed traffic mix (heaviest tenant offered at least
+# FAIRNESS_SKEW x the lightest). The light tenant's queue-wait p95 must
+# then stay within FAIRNESS_RATIO x the heavy tenant's — a floor absorbs
+# near-zero waits on unloaded runs, where the ratio is pure noise.
+FAIRNESS_RATIO = 4.0
+FAIRNESS_FLOOR_MS = 2.0
+FAIRNESS_SKEW = 4.0
+
+
+def check_fairness(ten, path, ctx):
+    rows = ten["per_tenant"]
+    if len(rows) < 2 or len(set(ten["weights"])) != 1:
+        return 0  # unequal DRR weights skew dispatch on purpose
+    subs = [t["submitted"] for t in rows]
+    if min(subs) == 0:
+        return 0  # a tenant with no traffic has no wait to compare
+    heavy = max(rows, key=lambda t: t["submitted"])
+    light = min(rows, key=lambda t: t["submitted"])
+    if heavy["submitted"] < FAIRNESS_SKEW * light["submitted"]:
+        return 0  # balanced traffic: nothing to shield
+    light_p95 = light["queue_wait_ms"]["p95"]
+    heavy_p95 = heavy["queue_wait_ms"]["p95"]
+    limit = FAIRNESS_RATIO * max(heavy_p95, FAIRNESS_FLOOR_MS)
+    if light_p95 > limit:
+        return err(path, f"{ctx}: weighted-fair gate: light tenant "
+                         f"{light['tenant']} queue-wait p95 {light_p95} ms "
+                         f"exceeds {FAIRNESS_RATIO} x max(heavy p95 "
+                         f"{heavy_p95} ms, {FAIRNESS_FLOOR_MS} ms floor) "
+                         f"under equal DRR weights — DRR not shielding the "
+                         f"light tenant")
+    return 0
+
+
+def check_tenants(entry, totals, path, ctx):
+    """The `tenants` block (BENCH_serving.json, sweep points, and the
+    serve stats op): DRR dispatch weights plus per-tenant counters and
+    queue-wait/latency tails. `totals` maps per-tenant sum keys to the
+    document totals they must reconcile with (None = total not emitted
+    at this level, skip)."""
+    bad = require(entry, "tenants", dict, path, ctx)
+    if bad:
+        return bad
+    ten = entry["tenants"]
+    tctx = f"{ctx}.tenants"
+    bad |= require(ten, "count", (int, float), path, tctx)
+    bad |= require(ten, "weights", list, path, tctx)
+    bad |= require(ten, "per_tenant", list, path, tctx)
+    if bad:
+        return bad
+    count = ten["count"]
+    if count < 1:
+        return err(path, f"{tctx}: count {count} < 1")
+    if len(ten["per_tenant"]) != count:
+        return err(path, f"{tctx}: count {count} != "
+                         f"{len(ten['per_tenant'])} per_tenant entries")
+    if len(ten["weights"]) != count or not all(
+            isinstance(w, (int, float)) and w >= 1 for w in ten["weights"]):
+        return err(path, f"{tctx}: 'weights' must hold {count} numeric "
+                         f"entries >= 1 (DRR weights are clamped)")
+    sums = {"submitted": 0, "served": 0, "shed": 0, "errors": 0}
+    for i, t in enumerate(ten["per_tenant"]):
+        ectx = f"{tctx}.per_tenant[{i}]"
+        if not isinstance(t, dict):
+            return err(path, f"{ectx} is not an object")
+        for key in ("tenant", "submitted", "served", "shed", "errors"):
+            bad |= require(t, key, (int, float), path, ectx)
+        bad |= check_latency_block(t, "queue_wait_ms", path, ectx)
+        bad |= check_latency_block(t, "latency_ms", path, ectx)
+        if bad:
+            return bad
+        if t["tenant"] != i:
+            bad |= err(path, f"{ectx}: tenant id {t['tenant']} != index {i}")
+        for key in sums:
+            if t[key] < 0:
+                bad |= err(path, f"{ectx}: negative {key} {t[key]}")
+            sums[key] += t[key]
+        if t["served"] > t["submitted"]:
+            bad |= err(path, f"{ectx}: served {t['served']} > "
+                             f"submitted {t['submitted']}")
+        if t["errors"] > t["served"]:
+            bad |= err(path, f"{ectx}: errors {t['errors']} > "
+                             f"served {t['served']}")
+    # Per-tenant counters and document totals come from the same
+    # ServerStats merge, so they must reconcile exactly.
+    for key, total in totals.items():
+        if total is not None and sums[key] != total:
+            bad |= err(path, f"{tctx}: per-tenant {key} sums to {sums[key]} "
+                             f"but the document total is {total}")
+    bad |= check_fairness(ten, path, tctx)
+    return bad
+
+
+def check_wire_fields(entry, path, ctx, want_codec):
+    """The wire-subsystem run fields: which codec the run roundtripped
+    through, how many incremental chunk frames the clients observed, and
+    the order-independent reply-transcript hash the codec-equivalence
+    smoke compares across codecs."""
+    bad = 0
+    if want_codec:
+        bad |= require(entry, "codec", str, path, ctx)
+        if not bad and entry["codec"] not in ("direct", "json", "binary"):
+            bad |= err(path, f"{ctx}: unknown codec '{entry['codec']}' "
+                             f"(direct, json, binary)")
+    bad |= require(entry, "stream_chunks", (int, float), path, ctx)
+    if not bad and entry["stream_chunks"] < 0:
+        bad |= err(path, f"{ctx}: negative stream_chunks "
+                         f"{entry['stream_chunks']}")
+    bad |= require(entry, "transcript_hash", str, path, ctx)
+    if bad:
+        return bad
+    h = entry["transcript_hash"]
+    if len(h) != 16 or any(c not in "0123456789abcdef" for c in h):
+        bad |= err(path, f"{ctx}: transcript_hash '{h}' is not 16 lowercase "
+                         f"hex digits")
+    return bad
+
+
 def check_serving(doc, path):
     bad = 0
     for key in ("mode", "backend"):
@@ -263,6 +382,13 @@ def check_serving(doc, path):
     # loadgen always records at metrics level, so both blocks are required.
     bad |= check_latency_block(doc, "queue_wait_ms", path, "top level")
     bad |= check_phases(doc, path)
+    bad |= check_wire_fields(doc, path, "top level", want_codec=True)
+    bad |= check_tenants(
+        doc,
+        {"served": doc["served"], "shed": doc["rejected"],
+         "errors": doc["errors"], "submitted": None},
+        path, "top level",
+    )
     if doc["mode"] == "longmix":
         bad |= check_classes(doc, path, "top level")
     return bad
@@ -342,6 +468,16 @@ def check_serving_sweep(doc, path):
                 bad |= err(path, f"{ctx}: {key} {p[key]} outside [0, 1]")
         if p["served"] + p["rejected"] > doc["requests_per_point"]:
             bad |= err(path, f"{ctx}: served + rejected exceeds requests_per_point")
+        # Each point is a full loadgen run, so it carries the wire-run
+        # fields and the per-tenant block (codec is run-wide, not
+        # per-point, and a point emits no `errors` total to reconcile).
+        bad |= check_wire_fields(p, path, ctx, want_codec=False)
+        bad |= check_tenants(
+            p,
+            {"served": p["served"], "shed": p["rejected"],
+             "errors": None, "submitted": None},
+            path, ctx,
+        )
         # Longmix sweeps exist to expose the per-class tail; a point
         # without the class split silently loses the measurement.
         if doc["mode"] == "longmix":
@@ -587,6 +723,30 @@ def _good_classes():
     }
 
 
+def _good_tenants(served, shed, errors):
+    """A valid 2-tenant `tenants` block on a 10:1 traffic skew at equal
+    DRR weights, with the document totals split so the reconciliation
+    sums hold. The light tenant's queue-wait p95 sits below the heavy
+    tenant's, as DRR dispatch produces."""
+    def tail(p95):
+        return {"mean": p95 / 2.0, "p50": p95 / 2.0, "p95": p95,
+                "p99": p95 * 1.5, "max": p95 * 2.0}
+    light_served = max(served // 11, 1)
+    heavy_served = served - light_served
+    return {
+        "count": 2,
+        "weights": [1, 1],
+        "per_tenant": [
+            {"tenant": 0, "submitted": heavy_served + shed,
+             "served": heavy_served, "shed": shed, "errors": errors,
+             "queue_wait_ms": tail(8.0), "latency_ms": tail(12.0)},
+            {"tenant": 1, "submitted": light_served,
+             "served": light_served, "shed": 0, "errors": 0,
+             "queue_wait_ms": tail(1.0), "latency_ms": tail(3.0)},
+        ],
+    }
+
+
 def _good_sweep_doc():
     """A minimal longmix BENCH_serving_sweep.json every sweep gate accepts."""
     points = []
@@ -600,6 +760,8 @@ def _good_sweep_doc():
             "timed_out": 0, "failed": 0, "timeout_rate": 0.0,
             "failure_rate": 0.0, "restarts": 0, "retried": 0,
             "queue_wait_ms": _good_queue_wait(),
+            "stream_chunks": 0, "transcript_hash": "00ff00ff00ff00ff",
+            "tenants": _good_tenants(served=20, shed=0, errors=0),
             "classes": _good_classes(),
         })
     return {
@@ -622,6 +784,9 @@ def _good_serving_doc():
         "restarts": 2, "retried": 1, "timed_out": 2, "failed": 3,
         "timeout_rate": 0.02, "failure_rate": 0.03,
         "queue_wait_ms": _good_queue_wait(), "phases": _good_phases(),
+        "codec": "direct", "stream_chunks": 0,
+        "transcript_hash": "0123456789abcdef",
+        "tenants": _good_tenants(served=98, shed=2, errors=5),
     }
 
 
@@ -764,6 +929,66 @@ def self_test():
                lambda d: d["phases"]["breakdown"]["reply"].pop("p95_ms"))
     expect_bad("phase p50 above p95", p50_above_p95)
     expect_bad("leaf phase totals exceed wall x recorders", leaf_sum_overflow)
+
+    # ---- wire fields + tenants + fairness gates ----
+    def starved_light_tenant(doc):
+        # Equal weights, 10:1 skew, light tenant's queue-wait p95 far
+        # beyond the heavy tenant's — the DRR fairness gate must fire.
+        doc["tenants"]["per_tenant"][1]["queue_wait_ms"] = \
+            {"mean": 50.0, "p50": 40.0, "p95": 100.0, "p99": 150.0,
+             "max": 200.0}
+
+    def starved_but_weighted(doc):
+        # The same starvation is accepted when the dispatch weights are
+        # unequal — the operator asked for the skew, the gate is scoped
+        # to equal-weight runs.
+        starved_light_tenant(doc)
+        doc["tenants"]["weights"] = [10, 1]
+
+    expect_bad("missing codec", lambda d: d.pop("codec"))
+    expect_bad("unknown codec name", lambda d: d.update(codec="carrier-pigeon"))
+    expect_bad("negative stream_chunks", lambda d: d.update(stream_chunks=-1))
+    expect_bad("missing transcript_hash", lambda d: d.pop("transcript_hash"))
+    expect_bad("malformed transcript_hash",
+               lambda d: d.update(transcript_hash="0xBEEF"))
+    expect_bad("missing tenants block", lambda d: d.pop("tenants"))
+    expect_bad("tenants count != per_tenant entries",
+               lambda d: d["tenants"].update(count=3))
+    expect_bad("tenants weights length mismatch",
+               lambda d: d["tenants"].update(weights=[1]))
+    expect_bad("tenants weight below 1",
+               lambda d: d["tenants"].update(weights=[1, 0]))
+    expect_bad("tenant id out of order",
+               lambda d: d["tenants"]["per_tenant"][1].update(tenant=5))
+    expect_bad("tenant served above submitted",
+               lambda d: d["tenants"]["per_tenant"][1].update(served=10**6))
+    expect_bad("tenant errors above served",
+               lambda d: d["tenants"]["per_tenant"][1].update(errors=10**6))
+    expect_bad("tenant missing queue_wait_ms",
+               lambda d: d["tenants"]["per_tenant"][0].pop("queue_wait_ms"))
+    expect_bad("per-tenant served does not sum to document served",
+               lambda d: d["tenants"]["per_tenant"][0].update(served=1))
+    expect_bad("per-tenant shed does not sum to rejected",
+               lambda d: d["tenants"]["per_tenant"][0].update(shed=7))
+    expect_bad("fairness gate: light tenant starved at equal weights",
+               starved_light_tenant)
+    weighted = copy.deepcopy(serving)
+    starved_but_weighted(weighted)
+    expect_good(check_serving, weighted,
+                "starved light tenant tolerated under unequal weights")
+    # A single-tenant run has no fairness to gate; the block still
+    # reconciles.
+    single = copy.deepcopy(serving)
+    single["tenants"] = {
+        "count": 1, "weights": [1],
+        "per_tenant": [{
+            "tenant": 0, "submitted": 100, "served": 98, "shed": 2,
+            "errors": 5, "queue_wait_ms": _good_queue_wait(),
+            "latency_ms": {"mean": 1.0, "p50": 0.8, "p95": 2.0,
+                           "p99": 3.0, "max": 4.0},
+        }],
+    }
+    expect_good(check_serving, single, "single-tenant serving block")
     # Parent/overlapping phases stay out of the leaf sum: a huge
     # queue_wait total (many requests waiting concurrently) is fine.
     overlap = copy.deepcopy(serving)
@@ -800,6 +1025,18 @@ def self_test():
                lambda d: d["points"][1].update(rate_rps=100.0))
     expect_bad("sweep point missing queue_wait_ms",
                lambda d: d["points"][0].pop("queue_wait_ms"))
+    expect_bad("sweep point missing tenants",
+               lambda d: d["points"][0].pop("tenants"))
+    expect_bad("sweep point missing transcript_hash",
+               lambda d: d["points"][1].pop("transcript_hash"))
+    expect_bad("sweep point tenant served not reconciling",
+               lambda d: d["points"][0]["tenants"]["per_tenant"][0]
+               .update(served=1, submitted=1))
+    expect_bad("sweep point fairness violated",
+               lambda d: d["points"][1]["tenants"]["per_tenant"][1]
+               .update(queue_wait_ms={"mean": 50.0, "p50": 40.0,
+                                      "p95": 100.0, "p99": 150.0,
+                                      "max": 200.0}))
     # Non-longmix sweeps keep the old schema: no classes required.
     plain_sweep = copy.deepcopy(sweep)
     plain_sweep["mode"] = "mixed"

@@ -157,6 +157,65 @@ print(f"ci: chaos smoke OK (restarts {doc['restarts']}, retried {doc['retried']}
       f"timed_out {doc['timed_out']}, failed {doc['failed']})")
 EOF
 rm -f chaos_smoke_serving.json
+# Wire-codec equivalence smoke (DESIGN.md §2.15): the same seeded longmix
+# run roundtripped in-process through the JSON codec (buffered) and the
+# binary codec with streamed generates must agree on every reply payload
+# — served counts, zero errors, and the order-independent transcript
+# hash — and the streamed run must observe incremental chunk frames
+# before the terminal replies. Non-BENCH_* names: asserted inline, not
+# by the schema scan.
+WIRE_ARGS="loadgen --replicas 2 --queue-cap 64 --max-requests 48 \
+  --concurrency 6 --mode longmix --max-new 4 --forward-us 100 --seed 7"
+cargo run --release -q -- $WIRE_ARGS --codec json \
+  --out codec_json_serving.json
+cargo run --release -q -- $WIRE_ARGS --codec binary --stream \
+  --out codec_binary_serving.json
+python3 - codec_json_serving.json codec_binary_serving.json <<'EOF'
+import json, sys
+a = json.load(open(sys.argv[1]))
+b = json.load(open(sys.argv[2]))
+assert a["codec"] == "json" and b["codec"] == "binary", (a["codec"], b["codec"])
+for doc, name in ((a, "json"), (b, "binary")):
+    assert doc["rejected"] == 0, f"codec smoke: {name} shed {doc['rejected']}"
+    assert doc["errors"] == 0, f"codec smoke: {name} run saw {doc['errors']} errors"
+assert a["served"] == b["served"], \
+    f"codec smoke: served diverged ({a['served']} vs {b['served']})"
+assert a["transcript_hash"] == b["transcript_hash"], \
+    f"codec smoke: reply transcripts diverged ({a['transcript_hash']} vs " \
+    f"{b['transcript_hash']})"
+assert a["stream_chunks"] == 0, "codec smoke: buffered run saw chunk frames"
+assert b["stream_chunks"] > 0, "codec smoke: streamed run saw no chunk frames"
+print(f"ci: wire codec smoke OK (served {a['served']}, transcript "
+      f"{a['transcript_hash']}, {b['stream_chunks']} streamed chunks)")
+EOF
+rm -f codec_json_serving.json codec_binary_serving.json
+# Weighted-fair smoke: a ~10:1 tenant traffic skew (seed-pinned to 76:12
+# over 88 requests) at equal DRR dispatch weights through one synthetic
+# replica with a real per-forward cost. The dump lands under the
+# BENCH_serving.json name in its own directory so the schema scan's
+# fairness gate judges the light tenant's queue-wait p95; the inline
+# assertions pin that the gate had a real skew to judge.
+mkdir -p fairness_smoke
+cargo run --release -q -- loadgen \
+  --replicas 1 --queue-cap 128 --max-requests 88 --concurrency 8 \
+  --forward-us 500 --tenants 2:10,1 --seed 11 \
+  --out fairness_smoke/BENCH_serving.json
+python3 - fairness_smoke/BENCH_serving.json <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+ten = doc["tenants"]
+assert ten["count"] == 2, f"fairness smoke: {ten['count']} tenants"
+assert ten["weights"] == [1, 1], f"fairness smoke: weights {ten['weights']}"
+heavy, light = ten["per_tenant"]
+assert light["submitted"] > 0, "fairness smoke: light tenant saw no traffic"
+assert heavy["submitted"] >= 4 * light["submitted"], \
+    f"fairness smoke: skew too shallow ({heavy['submitted']} vs {light['submitted']})"
+print(f"ci: fairness smoke OK (heavy {heavy['submitted']}, light "
+      f"{light['submitted']}, qwait p95 heavy {heavy['queue_wait_ms']['p95']:.2f}ms "
+      f"light {light['queue_wait_ms']['p95']:.2f}ms)")
+EOF
+python3 "$ROOT/tools/check_bench_json.py" fairness_smoke
+rm -rf fairness_smoke
 # Any bench dumps lying around must match the schemas the tables consume
 # (absent files are fine — benches are optional here; unknown BENCH_*.json
 # names or schema violations are not).
